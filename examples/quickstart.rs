@@ -1,0 +1,43 @@
+//! Quickstart: load the AOT artifacts, take a few physics-informed training
+//! steps with ZCS, and print the loss -- the smallest end-to-end tour of the
+//! three-layer stack (Pallas kernels -> JAX model -> Rust coordinator).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::rc::Rc;
+use zcs::config::RunConfig;
+use zcs::coordinator::Trainer;
+use zcs::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let runtime = Rc::new(Runtime::open("artifacts")?);
+    println!("PJRT platform: {}", runtime.platform());
+    println!("artifacts available: {}", runtime.artifact_names().len());
+
+    let config = RunConfig {
+        problem: "reaction_diffusion".into(),
+        strategy: "zcs".into(),
+        steps: 50,
+        log_every: 10,
+        bank_size: 128,
+        ..RunConfig::default()
+    };
+    println!(
+        "\ntraining a physics-informed DeepONet: {} under {}",
+        config.problem, config.strategy
+    );
+    let mut trainer = Trainer::new(runtime, config)?;
+    let report = trainer.run()?;
+    for pt in &report.curve {
+        println!("  step {:>4}: loss {:.6e}", pt.step, pt.loss);
+    }
+    println!(
+        "\n{} steps in {:.2?} ({:.2} s / 1000 batches); python was never invoked.",
+        report.steps,
+        report.step_time,
+        report.sec_per_1000()
+    );
+    Ok(())
+}

@@ -1,0 +1,323 @@
+"""AOT driver: lower every (problem x strategy) step to HLO text artifacts.
+
+Run once at build time (``make artifacts``); Python never appears on the
+request path afterwards.  Outputs:
+
+* ``artifacts/<name>.hlo.txt`` -- one XLA HLO-text module per artifact;
+* ``artifacts/meta.json`` -- the machine-readable manifest the Rust runtime
+  uses to bind inputs/outputs positionally (parameter layout, batch schema,
+  problem constants, scales).
+
+Artifact sets:
+
+* ``core``   -- the four Table-1 problems x four strategies x {train, loss}
+  at CPU-sized ``bench`` scale, plus per-problem ``forward`` artifacts for
+  stage timing / validation / Fig.-3 fields.
+* ``fig2``   -- the eq.-(15) scaling sweeps over M, N and P.
+* ``paper``  -- paper-scale ZCS artifacts (the baselines are intentionally
+  not emitted at paper scale: FuncLoop tracing is O(M) and DataVect O(M*N);
+  Table 1 itself shows them failing there).
+
+Builds are incremental: an artifact is skipped when its file already exists
+(``--force`` rebuilds).  ``meta.json`` is always rewritten to cover exactly
+the artifacts present on disk.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from . import lowering, model, pdes, train
+from .pdes import Scale, get_problem
+
+F32 = "f32"
+
+# fig2 sweep grids (CPU-sized defaults; --full widens them)
+FIG2_M_SWEEP = (2, 4, 8, 16, 32)
+FIG2_N_SWEEP = (128, 256, 512, 1024, 2048)
+FIG2_P_SWEEP = (1, 2, 3, 4, 5)
+FIG2_M0, FIG2_N0, FIG2_P0 = 8, 512, 3
+FIG2_FULL_M = (2, 4, 8, 16, 32, 64, 128)
+FIG2_FULL_N = (128, 256, 512, 1024, 2048, 4096, 8192)
+FIG2_FULL_P = (1, 2, 3, 4, 5, 6)
+
+STRATEGIES = ("zcs", "zcs_fwd", "funcloop", "datavect")
+PROBLEM_NAMES = ("reaction_diffusion", "burgers", "kirchhoff", "stokes")
+FORWARD_GRID = 4096  # fig-3 / validation grid points (64 x 64)
+
+
+def _io_entry(name, shape, dtype=F32):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def _param_ios(spec, prefix):
+    return [
+        _io_entry(f"{prefix}{name}", shape) for name, shape in model.param_layout(spec)
+    ]
+
+
+def _train_artifact(problem, strategy, sc, name):
+    """Describe + build the train-step artifact."""
+    spec = problem.spec(sc)
+    step_fn = train.make_train_step(problem, strategy, sc)
+    params, m, v, step, batch = train.example_args(problem, sc)
+
+    def flat(*args):
+        np_ = len(params)
+        ps, ms, vs = args[:np_], args[np_ : 2 * np_], args[2 * np_ : 3 * np_]
+        st = args[3 * np_]
+        ba = args[3 * np_ + 1 :]
+        return step_fn(ps, ms, vs, st, *ba)
+
+    args = (*params, *m, *v, step, *batch)
+    inputs = (
+        _param_ios(spec, "")
+        + _param_ios(spec, "adam_m.")
+        + _param_ios(spec, "adam_v.")
+        + [_io_entry("step", (), "s32")]
+        + [_io_entry(n, s) for n, s in problem.batch_schema(sc)]
+    )
+    outputs = (
+        _param_ios(spec, "")
+        + _param_ios(spec, "adam_m.")
+        + _param_ios(spec, "adam_v.")
+        + [
+            _io_entry("step", (), "s32"),
+            _io_entry("loss", ()),
+            _io_entry("loss_pde", ()),
+            _io_entry("loss_bc", ()),
+        ]
+    )
+    return flat, args, inputs, outputs
+
+
+def _loss_artifact(problem, strategy, sc, name):
+    spec = problem.spec(sc)
+    loss_fn = train.make_loss_only(problem, strategy, sc)
+    params, _, _, _, batch = train.example_args(problem, sc)
+
+    def flat(*args):
+        np_ = len(params)
+        return loss_fn(args[:np_], *args[np_:])
+
+    args = (*params, *batch)
+    inputs = _param_ios(spec, "") + [
+        _io_entry(n, s) for n, s in problem.batch_schema(sc)
+    ]
+    outputs = [_io_entry("loss", ()), _io_entry("loss_pde", ()), _io_entry("loss_bc", ())]
+    return flat, args, inputs, outputs
+
+
+def _forward_artifact(problem, sc, n_pts):
+    spec = problem.spec(sc)
+    fwd = train.make_forward(problem, sc, n_pts)
+    params, _, _, _, _ = train.example_args(problem, sc)
+    p = jax.ShapeDtypeStruct((sc.m, problem.q), jnp.float32)
+    pts = jax.ShapeDtypeStruct((n_pts, problem.d), jnp.float32)
+
+    def flat(*args):
+        np_ = len(params)
+        return (fwd(args[:np_], args[np_], args[np_ + 1]),)
+
+    args = (*params, p, pts)
+    inputs = _param_ios(spec, "") + [
+        _io_entry("p", (sc.m, problem.q)),
+        _io_entry("pts", (n_pts, problem.d)),
+    ]
+    outputs = [_io_entry("u", (problem.o, sc.m, n_pts))]
+    return flat, args, inputs, outputs
+
+
+class Builder:
+    def __init__(self, out_dir: str, force: bool = False, verbose: bool = True):
+        self.out_dir = out_dir
+        self.force = force
+        self.verbose = verbose
+        self.manifest = {}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def build(self, name, kind, problem, strategy, sc, maker):
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        entry = {
+            "file": f"{name}.hlo.txt",
+            "kind": kind,
+            "problem": problem.name,
+            "strategy": strategy,
+            "scale": sc.name,
+            "m": sc.m,
+            "n": sc.n,
+            "p_order": problem.p_order,
+            "n_params": len(model.param_layout(problem.spec(sc))),
+            "param_layout": [[n, list(s)] for n, s in model.param_layout(problem.spec(sc))],
+            "batch_schema": [[n, list(s)] for n, s in problem.batch_schema(sc)],
+        }
+        if os.path.exists(path) and not self.force:
+            flat, args, inputs, outputs = maker()
+            entry["inputs"], entry["outputs"] = inputs, outputs
+            self.manifest[name] = entry
+            if self.verbose:
+                print(f"  [skip] {name}")
+            return
+        t0 = time.time()
+        flat, args, inputs, outputs = maker()
+        hlo = lowering.lower_flat(flat, *args)
+        with open(path, "w") as f:
+            f.write(hlo)
+        entry["inputs"], entry["outputs"] = inputs, outputs
+        self.manifest[name] = entry
+        if self.verbose:
+            print(
+                f"  [lower] {name}: {len(hlo) / 1e6:.2f} MB HLO in {time.time() - t0:.1f}s"
+            )
+
+    def write_manifest(self, problems):
+        meta = {
+            "format": 1,
+            "artifacts": self.manifest,
+            "problems": {
+                pn: {
+                    "q": get_problem(pn).q,
+                    "d": get_problem(pn).d,
+                    "o": get_problem(pn).o,
+                    "p_order": get_problem(pn).p_order,
+                    "scales": {
+                        sn: vars(sc) for sn, sc in get_problem(pn).scales.items()
+                    },
+                }
+                for pn in problems
+            },
+        }
+        with open(os.path.join(self.out_dir, "meta.json"), "w") as f:
+            json.dump(meta, f, indent=1, sort_keys=True)
+
+
+def build_core(b: Builder, strategies=STRATEGIES, problems=PROBLEM_NAMES):
+    for pn in problems:
+        problem = get_problem(pn)
+        sc = problem.scales["bench"]
+        for strat in strategies:
+            b.build(
+                f"{pn}__{strat}__{sc.name}.train",
+                "train",
+                problem,
+                strat,
+                sc,
+                lambda p=problem, s=strat, c=sc: _train_artifact(p, s, c, ""),
+            )
+            b.build(
+                f"{pn}__{strat}__{sc.name}.loss",
+                "loss",
+                problem,
+                strat,
+                sc,
+                lambda p=problem, s=strat, c=sc: _loss_artifact(p, s, c, ""),
+            )
+        b.build(
+            f"{pn}__forward_G{FORWARD_GRID}",
+            "forward",
+            problem,
+            "none",
+            sc,
+            lambda p=problem, c=sc: _forward_artifact(p, c, FORWARD_GRID),
+        )
+        b.build(
+            f"{pn}__forward_N{sc.n}",
+            "forward",
+            problem,
+            "none",
+            sc,
+            lambda p=problem, c=sc: _forward_artifact(p, c, sc.n),
+        )
+
+
+def fig2_points(full: bool = False):
+    """Deduped (m, n, p) grid for the three Fig.-2 sweeps."""
+    ms = FIG2_FULL_M if full else FIG2_M_SWEEP
+    ns = FIG2_FULL_N if full else FIG2_N_SWEEP
+    ps = FIG2_FULL_P if full else FIG2_P_SWEEP
+    pts = {(m, FIG2_N0, FIG2_P0) for m in ms}
+    pts |= {(FIG2_M0, n, FIG2_P0) for n in ns}
+    pts |= {(FIG2_M0, FIG2_N0, p) for p in ps}
+    return sorted(pts)
+
+
+def build_fig2(b: Builder, strategies=STRATEGIES, full: bool = False):
+    for m, n, p in fig2_points(full):
+        problem = get_problem(f"highorder_p{p}")
+        sc = Scale("bench", m=m, n=n, width=128, latent=128)
+        problem.scales = {"bench": sc}
+        for strat in strategies:
+            # FuncLoop tracing is O(M * P); cap the unrolled baselines where
+            # tracing alone would dominate the build (documented in DESIGN.md)
+            if strat in ("funcloop", "datavect") and not full and m > 64:
+                continue
+            b.build(
+                f"highorder_p{p}__{strat}__M{m}_N{n}.train",
+                "train",
+                problem,
+                strat,
+                sc,
+                lambda pr=problem, s=strat, c=sc: _train_artifact(pr, s, c, ""),
+            )
+
+
+def build_paper(b: Builder):
+    for pn in PROBLEM_NAMES:
+        problem = get_problem(pn)
+        sc = problem.scales["paper"]
+        for strat in ("zcs",):
+            b.build(
+                f"{pn}__{strat}__{sc.name}.train",
+                "train",
+                problem,
+                strat,
+                sc,
+                lambda p=problem, s=strat, c=sc: _train_artifact(p, s, c, ""),
+            )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--sets",
+        default="core",
+        help="comma-separated artifact sets: core,fig2,paper",
+    )
+    ap.add_argument("--force", action="store_true", help="rebuild existing files")
+    ap.add_argument("--full", action="store_true", help="paper-sized fig2 sweeps")
+    ap.add_argument(
+        "--strategies", default=",".join(STRATEGIES), help="subset of strategies"
+    )
+    ap.add_argument(
+        "--problems", default=",".join(PROBLEM_NAMES), help="subset of problems"
+    )
+    args = ap.parse_args(argv)
+
+    b = Builder(args.out, force=args.force)
+    sets = args.sets.split(",")
+    strategies = tuple(args.strategies.split(","))
+    problems = tuple(args.problems.split(","))
+    t0 = time.time()
+    if "core" in sets:
+        print("== core artifacts ==")
+        build_core(b, strategies, problems)
+    if "fig2" in sets:
+        print("== fig2 artifacts ==")
+        build_fig2(b, strategies, full=args.full)
+    if "paper" in sets:
+        print("== paper-scale artifacts ==")
+        build_paper(b)
+    b.write_manifest(problems)
+    print(f"done: {len(b.manifest)} artifacts in {time.time() - t0:.1f}s -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Layer-1 Pallas kernels for the ZCS DeepONet stack.
+
+Every kernel follows the same contract:
+
+* the **primal** computation is a Pallas kernel (``interpret=True`` on this
+  image -- CPU PJRT cannot execute Mosaic custom-calls; on a real TPU the same
+  ``pallas_call`` lowers to an MXU kernel with the BlockSpecs chosen by
+  :mod:`blockspec`);
+* the kernel is wrapped in :func:`jax.custom_jvp` whose tangent rule is
+  written in plain, transposable ``jnp`` ops.  ``pallas_call`` has no
+  transpose rule, so this is what makes the kernels usable inside the
+  arbitrarily-deep ``jax.grad`` nests that ZCS (and the baselines) build:
+  reverse-mode works at any order because JAX partial-evaluates the jvp and
+  transposes its linear tangent part.
+
+Correctness of both the primal and the derivative rules is pinned against the
+pure-``jnp`` oracles in :mod:`ref` by ``python/tests/test_kernels.py``
+(hypothesis sweeps over shapes, plus nested-grad checks to 4th order).
+"""
+
+from .matmul import matmul
+from .dense import dense
+from .combine import combine
+from . import blockspec
+from . import ref
+
+__all__ = ["matmul", "dense", "combine", "blockspec", "ref"]

@@ -1,0 +1,118 @@
+"""BlockSpec selection and static TPU-cost estimation for the L1 kernels.
+
+The paper's experiments ran on an A100; our hardware adaptation (DESIGN.md
+section "Hardware-Adaptation") retargets the DeepONet hot-spots at the TPU
+MXU.  This module is the single place where the HBM<->VMEM schedule is
+decided: every kernel asks :func:`choose_tiles` for its grid/block shapes, and
+the perf pass (EXPERIMENTS.md §Perf) uses :func:`vmem_bytes` /
+:func:`mxu_utilization` to iterate on those choices without TPU hardware
+(interpret-mode wallclock is CPU-numpy time and is *not* a TPU proxy).
+
+TPU model used for the estimates:
+
+* VMEM budget per core: 16 MiB (v4/v5 class), of which we budget at most
+  half for one kernel invocation (double-buffering of HBM streams takes the
+  rest).
+* MXU: 128x128 systolic array; a matmul tile achieves full utilisation when
+  both the M and N tile dims are multiples of 128 and K >= 128 (for f32 the
+  lane granularity is (8, 128); utilisation is penalised pro-rata for ragged
+  edges).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+# -- TPU constants ----------------------------------------------------------
+
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024  # half of the 16 MiB core VMEM
+MXU_DIM = 128
+SUBLANE = 8  # f32 sublane granularity
+
+
+@dataclasses.dataclass(frozen=True)
+class TileChoice:
+    """A concrete HBM<->VMEM schedule for a (rows x K) @ (K x cols) matmul."""
+
+    tile_rows: int
+    tile_cols: int
+    k: int  # contraction dim, held whole in VMEM
+    grid: tuple  # pallas grid
+
+    def block_bytes(self, itemsize: int = 4) -> int:
+        """VMEM bytes resident for one grid cell (x-block + w-block + out)."""
+        return itemsize * (
+            self.tile_rows * self.k  # lhs block
+            + self.k * self.tile_cols  # rhs block
+            + self.tile_rows * self.tile_cols  # out block
+        )
+
+
+def _round_up(x: int, to: int) -> int:
+    return ((x + to - 1) // to) * to
+
+
+def choose_tiles(rows: int, k: int, cols: int, itemsize: int = 4) -> TileChoice:
+    """Pick MXU-shaped tiles for a ``(rows, k) @ (k, cols)`` product.
+
+    Strategy: keep the full contraction dim ``k`` in VMEM (all DeepONet layer
+    widths are <= a few hundred, so a K-slab always fits), tile rows/cols at
+    the MXU edge (128) and grow the row tile while the VMEM budget allows --
+    larger row tiles amortise the weight-block HBM fetch across more rows.
+    """
+    tile_cols = min(_round_up(cols, MXU_DIM), _round_up(cols, SUBLANE))
+    tile_cols = min(tile_cols, _round_up(cols, SUBLANE))
+    # rows tile: start at 128, grow x2 while within budget and while it
+    # reduces the grid (never exceed the row count itself).
+    tile_rows = min(MXU_DIM, _round_up(rows, SUBLANE))
+    while True:
+        cand = tile_rows * 2
+        choice = TileChoice(cand, tile_cols, k, grid=())
+        if cand <= _round_up(rows, SUBLANE) and vmem_bytes(choice, itemsize) <= VMEM_BUDGET_BYTES:
+            tile_rows = cand
+        else:
+            break
+    grid_rows = math.ceil(rows / tile_rows)
+    grid_cols = math.ceil(cols / tile_cols)
+    grid = (grid_rows,) if grid_cols == 1 else (grid_rows, grid_cols)
+    return TileChoice(tile_rows, tile_cols, k, grid)
+
+
+def vmem_bytes(choice: TileChoice, itemsize: int = 4) -> int:
+    """Resident VMEM for one invocation (double-buffered: x2 on the inputs)."""
+    single = choice.block_bytes(itemsize)
+    inputs = itemsize * (choice.tile_rows * choice.k + choice.k * choice.tile_cols)
+    return single + inputs  # second copy of the streamed inputs
+
+
+def mxu_utilization(rows: int, k: int, cols: int, choice: TileChoice) -> float:
+    """Fraction of MXU issue slots doing useful work for this schedule.
+
+    Ragged tile edges and a contraction dim shorter than the systolic depth
+    both waste slots; this mirrors the usual `ceil`-padding accounting.
+    """
+    eff_rows = rows / (math.ceil(rows / choice.tile_rows) * choice.tile_rows)
+    eff_cols = cols / (math.ceil(cols / choice.tile_cols) * choice.tile_cols)
+    pad_cols = _round_up(choice.tile_cols, MXU_DIM)
+    eff_lane = choice.tile_cols / pad_cols
+    eff_k = min(k, MXU_DIM) / MXU_DIM if k < MXU_DIM else 1.0
+    return eff_rows * eff_cols * eff_lane * eff_k
+
+
+def matmul_flops(rows: int, k: int, cols: int) -> int:
+    """FLOPs of the dense product (madd = 2 flops)."""
+    return 2 * rows * k * cols
+
+
+def report(rows: int, k: int, cols: int) -> dict:
+    """One-stop static profile used by EXPERIMENTS.md §Perf."""
+    choice = choose_tiles(rows, k, cols)
+    return {
+        "tile": (choice.tile_rows, choice.tile_cols, choice.k),
+        "grid": choice.grid,
+        "vmem_bytes": vmem_bytes(choice),
+        "vmem_ok": vmem_bytes(choice) <= VMEM_BUDGET_BYTES,
+        "mxu_utilization": mxu_utilization(rows, k, cols, choice),
+        "flops": matmul_flops(rows, k, cols),
+    }

@@ -1,0 +1,67 @@
+"""Tiled Pallas matmul -- the base linear primitive of the DeepONet stack.
+
+Primal: a row-tiled ``pallas_call`` whose BlockSpecs come from
+:mod:`blockspec` (MXU-shaped tiles, full-K slabs in VMEM).  Tangent rule:
+plain ``jnp.dot`` -- matmul is linear, so its jvp is exact, transposable, and
+differentiable to any order, which is exactly what the nested ``jax.grad``
+chains of ZCS require (``pallas_call`` itself has no transpose rule).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import blockspec
+
+# CPU PJRT can only execute interpret-mode pallas; real-TPU lowering emits a
+# Mosaic custom-call the CPU plugin cannot run (see DESIGN.md).
+INTERPRET = True
+
+
+def _mm_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _mm_call(x: jax.Array, w: jax.Array) -> jax.Array:
+    rows, k = x.shape
+    k2, cols = w.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {w.shape}"
+    tiles = blockspec.choose_tiles(rows, k, cols)
+    tr = min(tiles.tile_rows, rows)
+    grid = (pl.cdiv(rows, tr),)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tr, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, cols), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tr, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), x.dtype),
+        interpret=INTERPRET,
+    )(x, w)
+
+
+@jax.custom_jvp
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """``x @ w`` with the primal executed as a tiled Pallas kernel.
+
+    ``x``: ``(rows, k)``, ``w``: ``(k, cols)`` -> ``(rows, cols)``.
+    """
+    return _mm_call(x, w)
+
+
+@matmul.defjvp
+def _matmul_jvp(primals, tangents):
+    x, w = primals
+    dx, dw = tangents
+    out = matmul(x, w)
+    # Linear op: jvp in transposable jnp ops (see module docstring).
+    dout = jnp.dot(dx, w) + jnp.dot(x, dw)
+    return out, dout

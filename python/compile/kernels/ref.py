@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every L1 kernel -- the correctness ground truth.
+
+``python/tests/test_kernels.py`` asserts ``allclose`` between each Pallas
+kernel (and all of its derivative orders) and these reference
+implementations.  Keep these boring: no pallas, no custom rules, nothing but
+``jnp`` -- if an oracle is wrong the whole correctness story collapses.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_ACTS = {
+    "tanh": jnp.tanh,
+    "gelu": jax.nn.gelu,
+    "softplus": jax.nn.softplus,
+    "identity": lambda x: x,
+}
+
+
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Reference for :func:`kernels.matmul`."""
+    return jnp.dot(x, w)
+
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array, act: str = "tanh") -> jax.Array:
+    """Reference for :func:`kernels.dense`."""
+    return _ACTS[act](jnp.dot(x, w) + b)
+
+
+def combine(b: jax.Array, t: jax.Array) -> jax.Array:
+    """Reference for :func:`kernels.combine`: ``(M,O,K),(N,O,K)->(O,M,N)``."""
+    return jnp.einsum("mok,nok->omn", b, t)

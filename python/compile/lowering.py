@@ -1,0 +1,35 @@
+"""HLO-text emission: the python -> rust interchange layer.
+
+**The interchange format is HLO text, not a serialized ``HloModuleProto``**:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Lowering here is *tracing only* (StableHLO emission); XLA compilation happens
+once, in the Rust runtime, when an artifact is first loaded.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax._src.lib import xla_client as xc
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a ``jax.jit(fn).lower(...)`` result to XLA HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_flat(fn, *example_args, donate_argnums=()) -> str:
+    """jit + lower ``fn`` at the given ShapeDtypeStructs; return HLO text.
+
+    ``donate_argnums`` marks buffers (params, Adam moments) the runtime may
+    overwrite in place -- the L2 memory optimisation that keeps the training
+    loop allocation-free.
+    """
+    lowered = jax.jit(fn, donate_argnums=donate_argnums).lower(*example_args)
+    return to_hlo_text(lowered)

@@ -1,0 +1,147 @@
+"""Layer-2 model: DeepONet forward pass built on the L1 Pallas kernels.
+
+The operator network is the paper's eq. (3): ``u_ij = f_theta(p_i, x_j)``
+with ``M`` functions (physical parameters ``p``), ``N`` collocation points
+``x``, and optionally ``O > 1`` output channels (Stokes: u, v, p).
+
+Architecture (matching the paper's Section 4.1 benchmark nets):
+
+* **branch**: MLP over ``p in R^{M x Q}``; hidden layers activated, last
+  layer linear, output reshaped to ``(M, O, K)``;
+* **trunk**: MLP over coordinates ``x in R^{N x D}``; every layer activated,
+  output reshaped to ``(N, O, K)``;
+* **combine**: ``u_omn = sum_k b_mok t_nok + bias_o`` (the Pallas ``combine``
+  kernel).
+
+Two apply flavours exist because the paper's two baselines need different
+data layouts:
+
+* :func:`apply` -- the cartesian-product ("aligned") forward used by
+  FuncLoop and ZCS;
+* :func:`apply_pointwise` -- the row-aligned ("unaligned") forward used by
+  DataVect, where ``p`` and ``x`` have already been tiled to ``M*N`` rows
+  (eq. (5)).
+
+Parameters are kept as a flat ``tuple`` of arrays throughout so that the
+Rust runtime can feed them positionally; :func:`param_layout` publishes the
+order/shapes into ``artifacts/meta.json`` and the Rust side initialises them
+itself (Glorot uniform, seeded PCG64 -- see ``rust/src/coordinator``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+
+
+@dataclasses.dataclass(frozen=True)
+class DeepONetSpec:
+    """Static architecture description (hashable: usable as a jit constant)."""
+
+    n_features: int  # Q: branch input features per function
+    n_dims: int  # D: spatial(+temporal) dimensionality
+    n_out: int = 1  # O: output channels
+    latent: int = 128  # K: branch-trunk latent dimension
+    branch_hidden: tuple = (128, 128)
+    trunk_hidden: tuple = (128, 128)
+    act: str = "tanh"
+
+    @property
+    def branch_sizes(self) -> tuple:
+        return (self.n_features, *self.branch_hidden, self.n_out * self.latent)
+
+    @property
+    def trunk_sizes(self) -> tuple:
+        return (self.n_dims, *self.trunk_hidden, self.n_out * self.latent)
+
+
+def param_layout(spec: DeepONetSpec) -> list:
+    """Ordered ``(name, shape)`` list defining the flat parameter tuple."""
+    layout = []
+    bs = spec.branch_sizes
+    for i in range(len(bs) - 1):
+        layout.append((f"branch.{i}.w", (bs[i], bs[i + 1])))
+        layout.append((f"branch.{i}.b", (bs[i + 1],)))
+    ts = spec.trunk_sizes
+    for i in range(len(ts) - 1):
+        layout.append((f"trunk.{i}.w", (ts[i], ts[i + 1])))
+        layout.append((f"trunk.{i}.b", (ts[i + 1],)))
+    layout.append(("bias", (spec.n_out,)))
+    return layout
+
+
+def n_params(spec: DeepONetSpec) -> int:
+    """Total scalar parameter count."""
+    return sum(math.prod(shape) for _, shape in param_layout(spec))
+
+
+def init_params(spec: DeepONetSpec, key: jax.Array) -> tuple:
+    """Glorot-uniform initialisation (same scheme the Rust side replicates)."""
+    params = []
+    for name, shape in param_layout(spec):
+        key, sub = jax.random.split(key)
+        if len(shape) == 2:
+            limit = math.sqrt(6.0 / (shape[0] + shape[1]))
+            params.append(jax.random.uniform(sub, shape, jnp.float32, -limit, limit))
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return tuple(params)
+
+
+def _split(spec: DeepONetSpec, params: Sequence[jax.Array]):
+    """Flat tuple -> (branch layers, trunk layers, bias)."""
+    params = list(params)
+    nb = len(spec.branch_sizes) - 1
+    nt = len(spec.trunk_sizes) - 1
+    branch = [(params[2 * i], params[2 * i + 1]) for i in range(nb)]
+    off = 2 * nb
+    trunk = [(params[off + 2 * i], params[off + 2 * i + 1]) for i in range(nt)]
+    bias = params[off + 2 * nt]
+    return branch, trunk, bias
+
+
+def branch_net(spec: DeepONetSpec, params: Sequence[jax.Array], p: jax.Array) -> jax.Array:
+    """Branch MLP: ``(M, Q) -> (M, O, K)``; last layer linear."""
+    branch, _, _ = _split(spec, params)
+    h = p
+    for li, (w, b) in enumerate(branch):
+        act = spec.act if li < len(branch) - 1 else "identity"
+        h = kernels.dense(h, w, b, act)
+    return h.reshape(h.shape[0], spec.n_out, spec.latent)
+
+
+def trunk_net(spec: DeepONetSpec, params: Sequence[jax.Array], x: jax.Array) -> jax.Array:
+    """Trunk MLP: ``(N, D) -> (N, O, K)``; every layer activated."""
+    _, trunk, _ = _split(spec, params)
+    h = x
+    for w, b in trunk:
+        h = kernels.dense(h, w, b, spec.act)
+    return h.reshape(h.shape[0], spec.n_out, spec.latent)
+
+
+def apply(spec: DeepONetSpec, params: Sequence[jax.Array], p: jax.Array, x: jax.Array) -> jax.Array:
+    """Cartesian-product forward: ``(M,Q), (N,D) -> (O,M,N)`` (eq. 3)."""
+    b = branch_net(spec, params, p)
+    t = trunk_net(spec, params, x)
+    _, _, bias = _split(spec, params)
+    return kernels.combine(b, t) + bias[:, None, None]
+
+
+def apply_pointwise(
+    spec: DeepONetSpec, params: Sequence[jax.Array], p_rows: jax.Array, x_rows: jax.Array
+) -> jax.Array:
+    """Row-aligned forward for DataVect: ``(R,Q), (R,D) -> (O,R)`` (eq. 5).
+
+    ``R = M*N`` after the eq.-(5) tiling; the contraction is elementwise over
+    rows instead of a cartesian product.
+    """
+    b = branch_net(spec, params, p_rows)  # (R, O, K)
+    t = trunk_net(spec, params, x_rows)  # (R, O, K)
+    _, _, bias = _split(spec, params)
+    return jnp.einsum("rok,rok->or", b, t) + bias[:, None]

@@ -1,0 +1,338 @@
+"""Problem definitions: the paper's four PDE operators plus the Fig.-2 operator.
+
+Each :class:`Problem` bundles
+
+* the DeepONet sizing (branch input features Q, coordinate dims D, output
+  channels O, net widths),
+* the batch schema -- the ordered, statically-shaped arrays the Rust
+  coordinator feeds to every training step (collocation points are resampled
+  on the Rust side each batch; GP-sampled auxiliary fields such as the
+  source term come pre-evaluated at those points),
+* the physics loss, expressed through the strategy-agnostic derivative
+  stack (:class:`strategies.StrategyOps`), so the *same* physics runs under
+  ZCS and both baselines, and
+* CPU-sized ``bench`` and paper-sized ``paper`` scale presets.
+
+Training is purely physics-based (PDE residual + boundary/initial terms);
+true solutions are used only for validation on the Rust side
+(``rust/src/solvers``), exactly as in the paper's Section 4.2.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import model, strategies
+from .model import DeepONetSpec
+
+# ---------------------------------------------------------------------------
+# scales
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Scale:
+    """Problem size preset: function batch M, interior points N, bc counts."""
+
+    name: str
+    m: int  # functions per batch (paper's M)
+    n: int  # interior collocation points (paper's N)
+    n_ic: int = 0  # initial-condition points
+    n_bc: int = 0  # boundary points (meaning is per-problem)
+    width: int = 128  # MLP hidden width
+    latent: int = 128  # branch-trunk latent K
+    depth: int = 3  # hidden layers per sub-net
+
+
+# ---------------------------------------------------------------------------
+# problems
+# ---------------------------------------------------------------------------
+
+
+class Problem:
+    """Base class; concrete problems override the class attrs + loss."""
+
+    name: str = ""
+    q: int = 0  # branch features
+    d: int = 0  # coordinate dims
+    o: int = 1  # output channels
+    p_order: int = 2  # max differential order (paper's P), for reporting
+
+    #: scale presets keyed by name
+    scales: Dict[str, Scale] = {}
+
+    def spec(self, sc: Scale) -> DeepONetSpec:
+        return DeepONetSpec(
+            n_features=self.q,
+            n_dims=self.d,
+            n_out=self.o,
+            latent=sc.latent,
+            branch_hidden=(sc.width,) * sc.depth,
+            trunk_hidden=(sc.width,) * sc.depth,
+            act="tanh",
+        )
+
+    def batch_schema(self, sc: Scale) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Ordered (name, shape) list of the per-step batch arrays."""
+        raise NotImplementedError
+
+    def loss(self, ops: strategies.StrategyOps, params, batch: Dict[str, jax.Array]):
+        """Return ``(total, pde_term, bc_term)`` scalars."""
+        raise NotImplementedError
+
+    # -- helpers -------------------------------------------------------------
+
+    def _bc_forward(self, spec, params, p, pts) -> jax.Array:
+        """Plain forward at boundary points: (O, M, n_pts)."""
+        return model.apply(spec, params, p, pts)
+
+
+def _msq(x: jax.Array) -> jax.Array:
+    return jnp.mean(jnp.square(x))
+
+
+class ReactionDiffusion(Problem):
+    """Eq. (16): ``u_t - D u_xx + k u^2 - f(x) = 0`` on (0,1)^2, D=k=0.01.
+
+    Operator: source ``f(x)`` (GP-sampled, Q sensor values) -> ``u(x, t)``.
+    dims = (x, t);  batch aux ``f_at_x`` is f evaluated at the interior
+    collocation points (the Rust GP sampler interpolates its fine-grid
+    sample).
+    """
+
+    name = "reaction_diffusion"
+    q = 50
+    d = 2
+    o = 1
+    p_order = 2
+    diff_coef = 0.01
+    react_coef = 0.01
+
+    scales = {
+        "bench": Scale("bench", m=8, n=256, n_ic=64, n_bc=64, width=64, latent=64),
+        "paper": Scale("paper", m=50, n=1000, n_ic=128, n_bc=128),
+    }
+
+    def batch_schema(self, sc):
+        return [
+            ("p", (sc.m, self.q)),  # f at sensors
+            ("x_in", (sc.n, 2)),  # interior (x, t)
+            ("f_at_x", (sc.m, sc.n)),  # f at interior points
+            ("x_ic", (sc.n_ic, 2)),  # t = 0 points
+            ("x_bc", (sc.n_bc, 2)),  # x = 0 / x = 1 points
+        ]
+
+    def loss(self, ops, params, batch):
+        st = ops.stack([(0, 0), (0, 1), (2, 0)])
+        u = st[(0, 0)][0]
+        u_t = st[(0, 1)][0]
+        u_xx = st[(2, 0)][0]
+        res = u_t - self.diff_coef * u_xx + self.react_coef * u * u - batch["f_at_x"]
+        pde = _msq(res)
+        spec = ops.spec
+        ic = _msq(self._bc_forward(spec, params, batch["p"], batch["x_ic"]))
+        bc = _msq(self._bc_forward(spec, params, batch["p"], batch["x_bc"]))
+        total = pde + ic + bc
+        return total, pde, ic + bc
+
+
+class Burgers(Problem):
+    """Eq. (17): ``u_t + u u_x - nu u_xx = 0``, nu = 0.01, periodic in x.
+
+    Operator: initial condition ``u0(x)`` -> ``u(x, t)``.  dims = (x, t).
+    The nonlinear term exercises the paper's eq.-(12) product machinery.
+    """
+
+    name = "burgers"
+    q = 64
+    d = 2
+    o = 1
+    p_order = 2
+    viscosity = 0.01
+
+    scales = {
+        "bench": Scale("bench", m=8, n=512, n_ic=64, n_bc=64, width=64, latent=64),
+        "paper": Scale("paper", m=50, n=12800, n_ic=256, n_bc=256),
+    }
+
+    def batch_schema(self, sc):
+        return [
+            ("p", (sc.m, self.q)),  # u0 at sensors
+            ("x_in", (sc.n, 2)),
+            ("x_ic", (sc.n_ic, 2)),  # t = 0
+            ("u0_ic", (sc.m, sc.n_ic)),  # u0 at the IC points
+            ("x_left", (sc.n_bc, 2)),  # (0, t_b)
+            ("x_right", (sc.n_bc, 2)),  # (1, t_b) -- same t_b rows
+        ]
+
+    def loss(self, ops, params, batch):
+        st = ops.stack([(0, 0), (1, 0), (0, 1), (2, 0)])
+        u = st[(0, 0)][0]
+        u_x = st[(1, 0)][0]
+        u_t = st[(0, 1)][0]
+        u_xx = st[(2, 0)][0]
+        res = u_t + u * u_x - self.viscosity * u_xx
+        pde = _msq(res)
+        spec = ops.spec
+        ic = _msq(
+            self._bc_forward(spec, params, batch["p"], batch["x_ic"])[0]
+            - batch["u0_ic"]
+        )
+        per = _msq(
+            self._bc_forward(spec, params, batch["p"], batch["x_left"])
+            - self._bc_forward(spec, params, batch["p"], batch["x_right"])
+        )
+        total = pde + ic + per
+        return total, pde, ic + per
+
+
+class Kirchhoff(Problem):
+    """Eq. (18): biharmonic plate ``u_xxxx + 2 u_xxyy + u_yyyy = q / D_f``.
+
+    Operator: bi-trigonometric source coefficients ``c_rs`` (R = S = 10, so
+    Q = 100) -> deflection ``u(x, y)``.  The source is reconstructed
+    analytically in-graph from the coefficients (eq. 19); the analytic
+    series solution doubles as the validation truth on the Rust side.
+    The 4th order makes this the paper's deepest AD nest (P = 4).
+    """
+
+    name = "kirchhoff"
+    q = 100  # R*S coefficients
+    d = 2
+    o = 1
+    p_order = 4
+    r_modes = 10
+    s_modes = 10
+    rigidity = 0.01
+
+    scales = {
+        "bench": Scale("bench", m=4, n=256, n_bc=128, width=64, latent=64),
+        "paper": Scale("paper", m=36, n=10000, n_bc=400),
+    }
+
+    def batch_schema(self, sc):
+        return [
+            ("p", (sc.m, self.q)),  # c_rs coefficients
+            ("x_in", (sc.n, 2)),
+            ("x_bc", (sc.n_bc, 2)),  # all four edges, u = 0
+        ]
+
+    def source(self, c: jax.Array, pts: jax.Array) -> jax.Array:
+        """Eq. (19): q(x,y) = sum_rs c_rs sin(r pi x) sin(s pi y); -> (M, n)."""
+        r = jnp.arange(1, self.r_modes + 1, dtype=pts.dtype)
+        s = jnp.arange(1, self.s_modes + 1, dtype=pts.dtype)
+        sx = jnp.sin(jnp.pi * pts[:, 0:1] * r[None, :])  # (n, R)
+        sy = jnp.sin(jnp.pi * pts[:, 1:2] * s[None, :])  # (n, S)
+        basis = sx[:, :, None] * sy[:, None, :]  # (n, R, S)
+        return jnp.einsum("mq,nq->mn", c, basis.reshape(pts.shape[0], -1))
+
+    def loss(self, ops, params, batch):
+        biharm = ops.linear_comb({(4, 0): 1.0, (2, 2): 2.0, (0, 4): 1.0})[0]
+        rhs = self.source(batch["p"], batch["x_in"]) / self.rigidity
+        pde = _msq(biharm - rhs)
+        bc = _msq(self._bc_forward(ops.spec, params, batch["p"], batch["x_bc"]))
+        total = pde + bc
+        return total, pde, bc
+
+
+class Stokes(Problem):
+    """Eq. (20): lid-driven Stokes flow; vector output (u, v, p), mu = 0.01.
+
+    Operator: lid velocity ``u1(x)`` -> fields ``{u, v, p}(x, y)``.  The
+    vector-valued output exercises the multi-channel dummy tensor ``a_omn``.
+    """
+
+    name = "stokes"
+    q = 50
+    d = 2
+    o = 3  # u, v, p
+    p_order = 2
+    viscosity = 0.01
+
+    scales = {
+        "bench": Scale("bench", m=6, n=300, n_bc=48, width=64, latent=64),
+        "paper": Scale("paper", m=50, n=5000, n_bc=128),
+    }
+
+    def batch_schema(self, sc):
+        return [
+            ("p", (sc.m, self.q)),  # u1 at lid sensors
+            ("x_in", (sc.n, 2)),
+            ("x_lid", (sc.n_bc, 2)),  # y = 1
+            ("u1_lid", (sc.m, sc.n_bc)),  # u1 at those points
+            ("x_bot", (sc.n_bc, 2)),  # y = 0: u = v = p = 0
+            ("x_lr", (sc.n_bc, 2)),  # x = 0 / x = 1: u = v = 0
+        ]
+
+    def loss(self, ops, params, batch):
+        st = ops.stack([(1, 0), (0, 1), (2, 0), (0, 2)])
+        mu = self.viscosity
+        u_x, v_y = st[(1, 0)][0], st[(0, 1)][1]
+        p_x, p_y = st[(1, 0)][2], st[(0, 1)][2]
+        lap_u = st[(2, 0)][0] + st[(0, 2)][0]
+        lap_v = st[(2, 0)][1] + st[(0, 2)][1]
+        mom_x = mu * lap_u - p_x
+        mom_y = mu * lap_v - p_y
+        cont = u_x + v_y
+        pde = _msq(mom_x) + _msq(mom_y) + _msq(cont)
+        spec = ops.spec
+        lid = self._bc_forward(spec, params, batch["p"], batch["x_lid"])
+        bc_lid = _msq(lid[0] - batch["u1_lid"]) + _msq(lid[1])
+        bot = self._bc_forward(spec, params, batch["p"], batch["x_bot"])
+        bc_bot = _msq(bot[0]) + _msq(bot[1]) + _msq(bot[2])
+        lr = self._bc_forward(spec, params, batch["p"], batch["x_lr"])
+        bc_lr = _msq(lr[0]) + _msq(lr[1])
+        bc = bc_lid + bc_bot + bc_lr
+        total = pde + bc
+        return total, pde, bc
+
+
+class HighOrder(Problem):
+    """Eq. (15): ``sum_{k=0..P} (d/dx + d/dy)^k u = 0`` -- the Fig.-2 operator.
+
+    Pure scaling benchmark (no BCs, no meaningful solution); the max
+    differential order P is a constructor argument.  ZCS evaluates it with a
+    *single shared* z (``d/dz = dx + dy``), the baselines with the recursive
+    summed-root reverse passes -- matching what each method can best do.
+    """
+
+    q = 50
+    d = 2
+    o = 1
+
+    def __init__(self, p_order: int):
+        self.p_order = p_order
+        self.name = f"highorder_p{p_order}"
+        self.scales = {
+            "bench": Scale("bench", m=8, n=512, width=128, latent=128),
+        }
+
+    def batch_schema(self, sc):
+        return [("p", (sc.m, self.q)), ("x_in", (sc.n, 2))]
+
+    def loss(self, ops, params, batch):
+        res = ops.powers_sum(self.p_order)
+        pde = _msq(res)
+        return pde, pde, jnp.zeros(())
+
+
+PROBLEMS = {
+    "reaction_diffusion": ReactionDiffusion(),
+    "burgers": Burgers(),
+    "kirchhoff": Kirchhoff(),
+    "stokes": Stokes(),
+}
+
+
+def get_problem(name: str) -> Problem:
+    """Look up a problem; ``highorder_p{P}`` is synthesised on demand."""
+    if name in PROBLEMS:
+        return PROBLEMS[name]
+    if name.startswith("highorder_p"):
+        return HighOrder(int(name.removeprefix("highorder_p")))
+    raise KeyError(f"unknown problem {name!r}; have {sorted(PROBLEMS)} + highorder_pP")

@@ -1,0 +1,398 @@
+"""The four coordinate-AD strategies compared in the paper.
+
+Given the operator forward pass ``u_oij = f_theta(p_i, x_j)`` (O output
+channels, M functions, N points), every strategy exposes the same interface
+-- :class:`StrategyOps` -- producing coordinate-derivative fields
+``D^alpha u`` of shape ``(O, M, N)`` for multi-indices ``alpha`` over the
+``D`` coordinate dimensions:
+
+``zcs``
+    The paper's contribution (Section 3.3).  One scalar leaf ``z_d`` per
+    dimension is *added to every coordinate* (eq. 6); a dummy tensor
+    ``a_omn`` turns the field into the scalar root ``omega = sum a*v``
+    (eq. 9).  The wanted ``many-roots-many-leaves`` derivative factorises
+    into a chain of scalar-to-scalar derivatives w.r.t. ``z`` followed by a
+    single ``one-root-many-leaves`` reverse-mode pass w.r.t. ``a``
+    (eq. 10/11).  The computational graph never grows with ``M``.
+
+``zcs_fwd``
+    Eq. (7) consumed by *forward-mode* AD (the "future potential" variant of
+    Section 2.3/3.3): nested ``jax.jvp`` in the coordinate directions.  No
+    dummy ``a`` is needed because forward mode pushes the one-leaf tangent
+    through to all roots directly.
+
+``funcloop``
+    Baseline 1 (eq. 4, DeepXDE's "aligned" ``PDEOperatorCartesianProd``):
+    an explicit loop over the M functions, each iteration running reverse-
+    mode AD with the summed-root trick (eq. 2).  The loop is *unrolled at
+    trace time*, duplicating the backprop graph M times at the root end --
+    faithfully reproducing the paper's memory/time scaling.
+
+``datavect``
+    Baseline 2 (eq. 5, DeepXDE's "unaligned" ``PDEOperator``): ``p`` and
+    ``x`` are tiled to ``M*N`` pointwise rows so one summed-root reverse
+    pass covers everything; the graph is enlarged M-fold at the leaf end by
+    the duplicated coordinates.
+
+All four must agree to floating-point tolerance -- that equivalence is the
+central correctness property and is pinned by
+``python/tests/test_strategies.py`` (including against analytic derivatives
+of closed-form networks).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import model
+from .model import DeepONetSpec
+
+Order = Tuple[int, ...]  # multi-index over the D coordinate dims
+
+STRATEGIES = ("zcs", "zcs_fwd", "funcloop", "datavect")
+
+
+def make_ops(
+    strategy: str,
+    spec: DeepONetSpec,
+    params: Sequence[jax.Array],
+    p: jax.Array,
+    x: jax.Array,
+) -> "StrategyOps":
+    """Factory: bind a strategy to one (params, p, x) evaluation context."""
+    cls = {
+        "zcs": ZCSOps,
+        "zcs_fwd": ZCSFwdOps,
+        "funcloop": FuncLoopOps,
+        "datavect": DataVectOps,
+    }[strategy]
+    return cls(spec, params, p, x)
+
+
+class StrategyOps:
+    """Derivative-stack interface shared by all four strategies."""
+
+    def __init__(self, spec, params, p, x):
+        self.spec = spec
+        self.params = params
+        self.p = p
+        self.x = x
+        self.M = p.shape[0]
+        self.N = x.shape[0]
+        self.D = spec.n_dims
+        self.O = spec.n_out
+
+    # -- required API ------------------------------------------------------
+
+    def stack(self, orders: Sequence[Order]) -> Dict[Order, jax.Array]:
+        """``{alpha: D^alpha u}`` with each entry of shape ``(O, M, N)``."""
+        raise NotImplementedError
+
+    def powers_sum(self, p_max: int) -> jax.Array:
+        """``sum_{k=0..P} (sum_d d/dx_d)^k u`` -- the Fig. 2 operator (eq. 15)."""
+        raise NotImplementedError
+
+    # -- shared helpers ----------------------------------------------------
+
+    def linear_comb(self, coeffs: Dict[Order, float]) -> jax.Array:
+        """``sum_alpha c_alpha D^alpha u``.
+
+        Generic implementation sums the stack; ZCS overrides it with a
+        single ``d/da`` pass (the eq. 13-vs-14 optimisation).
+        """
+        st = self.stack(tuple(coeffs))
+        out = None
+        for alpha, c in coeffs.items():
+            term = c * st[alpha]
+            out = term if out is None else out + term
+        return out
+
+    def value(self) -> jax.Array:
+        """The undifferentiated field ``u`` itself, shape ``(O, M, N)``."""
+        return self.stack([(0,) * self.D])[(0,) * self.D]
+
+
+# ---------------------------------------------------------------------------
+# ZCS (reverse mode, the paper's algorithm)
+# ---------------------------------------------------------------------------
+
+
+class ZCSOps(StrategyOps):
+    """Eq. (10)/(11): nested scalar grads w.r.t. ``z`` + one grad w.r.t ``a``."""
+
+    def _omega(self, z: jax.Array, a: jax.Array) -> jax.Array:
+        """The scalar root (eq. 9); ``z``: (D,), ``a``: (O, M, N)."""
+        v = model.apply(self.spec, self.params, self.p, self.x + z)
+        return jnp.sum(a * v)
+
+    def _omega_shared(self, zs: jax.Array, a: jax.Array) -> jax.Array:
+        """Scalar-z variant: the same shift added to *every* dimension.
+
+        Because ``d/dzs = sum_d d/dx_d``, the eq.-(15) operator
+        ``(dx+dy)^k`` collapses to a depth-k chain of scalar-to-scalar
+        derivatives -- the maximal exploitation of the ZCS idea.
+        """
+        v = model.apply(self.spec, self.params, self.p, self.x + zs)
+        return jnp.sum(a * v)
+
+    def _omega_deriv_fn(self, alpha: Order) -> Callable:
+        """Build ``(z, a) -> D_z^alpha omega`` by nesting reverse-mode grads.
+
+        Every level is a *scalar-to-scalar* derivative (the paper's
+        "partial-1-1"), so reverse mode is loop- and duplication-free.
+        """
+        fn = self._omega
+        for d, reps in enumerate(alpha):
+            for _ in range(reps):
+                fn = _component_grad(fn, d)
+        return fn
+
+    def stack(self, orders):
+        z0 = jnp.zeros((self.D,), jnp.float32)
+        a = jnp.ones((self.O, self.M, self.N), jnp.float32)
+        out = {}
+        for alpha in orders:
+            omega_a = self._omega_deriv_fn(tuple(alpha))
+            # the single partial-inf-1 pass (eq. 10)
+            out[tuple(alpha)] = jax.grad(lambda aa, f=omega_a: f(z0, aa))(a)
+        return out
+
+    def linear_comb(self, coeffs):
+        # eq. (14) linear part: collect all z-derivatives first, then do ONE
+        # reverse pass w.r.t. the dummy a.
+        z0 = jnp.zeros((self.D,), jnp.float32)
+        a = jnp.ones((self.O, self.M, self.N), jnp.float32)
+
+        def sigma(aa):
+            tot = 0.0
+            for alpha, c in coeffs.items():
+                tot = tot + c * self._omega_deriv_fn(tuple(alpha))(z0, aa)
+            return tot
+
+        return jax.grad(sigma)(a)
+
+    def powers_sum(self, p_max: int):
+        a = jnp.ones((self.O, self.M, self.N), jnp.float32)
+
+        def sigma(aa):
+            fn = lambda zs, v: self._omega_shared(zs, v)  # noqa: E731
+            tot = fn(0.0, aa)
+            for _ in range(p_max):
+                fn = _scalar_grad(fn)
+                tot = tot + fn(0.0, aa)
+            return tot
+
+        return jax.grad(sigma)(a)
+
+    def product(self, m_alpha: Order, n_alpha: Order) -> jax.Array:
+        """``D^m u * D^n u`` via eq. (12): half the diagonal of the
+        ``a``-Hessian of ``omega_m * omega_n``.
+
+        ``omega`` is linear in ``a``, so the diagonal collapses to the
+        product of the two first-order ``a``-grads -- this method exists to
+        mirror the paper's identity; its equivalence with simply multiplying
+        two stack entries is property-tested.
+        """
+        z0 = jnp.zeros((self.D,), jnp.float32)
+        a = jnp.ones((self.O, self.M, self.N), jnp.float32)
+        om = self._omega_deriv_fn(tuple(m_alpha))
+        on = self._omega_deriv_fn(tuple(n_alpha))
+        gm = jax.grad(lambda aa: om(z0, aa))(a)
+        gn = jax.grad(lambda aa: on(z0, aa))(a)
+        return gm * gn
+
+
+def _component_grad(fn: Callable, d: int) -> Callable:
+    """``(z, a) -> d fn / d z_d`` (reverse mode over the (D,) vector z)."""
+
+    def out(z, a):
+        return jax.grad(fn, argnums=0)(z, a)[d]
+
+    return out
+
+
+def _scalar_grad(fn: Callable) -> Callable:
+    """``(zs, a) -> d fn / d zs`` for a scalar leaf ``zs``."""
+
+    def out(zs, a):
+        return jax.grad(fn, argnums=0)(zs, a)
+
+    return out
+
+
+# ---------------------------------------------------------------------------
+# ZCS consumed by forward mode (eq. 7 + nested jvp)
+# ---------------------------------------------------------------------------
+
+
+class ZCSFwdOps(StrategyOps):
+    """Nested ``jax.jvp`` in coordinate directions -- one leaf, many roots."""
+
+    def _field(self, z: jax.Array) -> jax.Array:
+        return model.apply(self.spec, self.params, self.p, self.x + z)
+
+    def stack(self, orders):
+        z0 = jnp.zeros((self.D,), jnp.float32)
+        out = {}
+        for alpha in orders:
+            fn = self._field
+            for d, reps in enumerate(alpha):
+                e_d = jnp.zeros((self.D,), jnp.float32).at[d].set(1.0)
+                for _ in range(reps):
+                    fn = _jvp_in(fn, e_d)
+            out[tuple(alpha)] = fn(z0)
+        return out
+
+    def powers_sum(self, p_max: int):
+        ones = jnp.ones((self.D,), jnp.float32)
+        z0 = jnp.zeros((self.D,), jnp.float32)
+        fn = self._field
+        tot = fn(z0)
+        for _ in range(p_max):
+            fn = _jvp_in(fn, ones)
+            tot = tot + fn(z0)
+        return tot
+
+
+def _jvp_in(fn: Callable, direction: jax.Array) -> Callable:
+    def out(z):
+        return jax.jvp(fn, (z,), (direction,))[1]
+
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Baseline 1: FuncLoop (eq. 4)
+# ---------------------------------------------------------------------------
+
+
+class FuncLoopOps(StrategyOps):
+    """Explicit per-function loop, unrolled at trace time (DeepXDE 'aligned').
+
+    For each function ``i`` (and each output channel), derivatives come from
+    the PINN summed-root trick of eq. (2): ``d sum_j u_ij / d x`` is the
+    per-point derivative because the trunk is pointwise in ``j``.  The M
+    unrolled reverse passes duplicate the graph M times -- the exact defect
+    the paper measures.
+    """
+
+    def _per_function_fields(self, i: int):
+        """Scalar-field closures ``x -> (N,)`` for function i, channel o."""
+        pi = jax.lax.dynamic_slice_in_dim(self.p, i, 1, axis=0)
+
+        def field(o):
+            def f(xx):
+                return model.apply(self.spec, self.params, pi, xx)[o, 0, :]
+
+            return f
+
+        return [field(o) for o in range(self.O)]
+
+    def stack(self, orders):
+        orders = [tuple(a) for a in orders]
+        per_alpha = {alpha: [] for alpha in orders}
+        for i in range(self.M):
+            fields = self._per_function_fields(i)
+            rows = {alpha: [] for alpha in orders}
+            for f in fields:
+                for alpha in orders:
+                    g = f
+                    for d, reps in enumerate(alpha):
+                        for _ in range(reps):
+                            g = _pointwise_grad(g, d)
+                    rows[alpha].append(g(self.x))
+            for alpha in orders:
+                per_alpha[alpha].append(jnp.stack(rows[alpha]))  # (O, N)
+        return {a: jnp.stack(v, axis=1) for a, v in per_alpha.items()}  # (O,M,N)
+
+    def powers_sum(self, p_max: int):
+        outs = []
+        for i in range(self.M):
+            fields = self._per_function_fields(i)
+            rows = []
+            for f in fields:
+                tot = f(self.x)
+                g = f
+                for _ in range(p_max):
+                    g = _sum_dims_grad(g)
+                    tot = tot + g(self.x)
+                rows.append(tot)
+            outs.append(jnp.stack(rows))
+        return jnp.stack(outs, axis=1)
+
+
+def _pointwise_grad(field: Callable, d: int) -> Callable:
+    """``x -> d field / d x_d`` via the summed-root trick (eq. 2).
+
+    Valid because the field is pointwise in the rows of ``x``.
+    """
+
+    def out(xx):
+        return jax.grad(lambda q: jnp.sum(field(q)))(xx)[:, d]
+
+    return out
+
+
+def _sum_dims_grad(field: Callable) -> Callable:
+    """``x -> sum_d d field / d x_d`` -- one reverse pass for the eq.-(15) op."""
+
+    def out(xx):
+        return jnp.sum(jax.grad(lambda q: jnp.sum(field(q)))(xx), axis=1)
+
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Baseline 2: DataVect (eq. 5)
+# ---------------------------------------------------------------------------
+
+
+class DataVectOps(StrategyOps):
+    """Tile ``(p_i, x_j)`` to M*N pointwise rows (DeepXDE 'unaligned').
+
+    A single summed-root reverse pass then covers all functions at once, at
+    the price of duplicating every coordinate (and every branch input) M (and
+    N) times -- the leaf-end graph blow-up the paper measures.
+    """
+
+    def _tiled(self):
+        ph = jnp.repeat(self.p, self.N, axis=0)  # (M*N, Q)
+        xh = jnp.tile(self.x, (self.M, 1))  # (M*N, D)
+        return ph, xh
+
+    def _row_field(self, ph, o):
+        def f(xh):
+            return model.apply_pointwise(self.spec, self.params, ph, xh)[o, :]
+
+        return f
+
+    def stack(self, orders):
+        ph, xh = self._tiled()
+        out = {}
+        for alpha in [tuple(a) for a in orders]:
+            rows = []
+            for o in range(self.O):
+                g = self._row_field(ph, o)
+                for d, reps in enumerate(alpha):
+                    for _ in range(reps):
+                        g = _pointwise_grad(g, d)
+                rows.append(g(xh).reshape(self.M, self.N))
+            out[alpha] = jnp.stack(rows)
+        return out
+
+    def powers_sum(self, p_max: int):
+        ph, xh = self._tiled()
+        rows = []
+        for o in range(self.O):
+            f = self._row_field(ph, o)
+            tot = f(xh)
+            g = f
+            for _ in range(p_max):
+                g = _sum_dims_grad(g)
+                tot = tot + g(xh)
+            rows.append(tot.reshape(self.M, self.N))
+        return jnp.stack(rows)

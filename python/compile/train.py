@@ -1,0 +1,119 @@
+"""Training-step construction: physics loss -> grads -> Adam, per strategy.
+
+Everything here is shaped for AOT consumption by the Rust coordinator:
+
+* parameters and Adam moments travel as **flat tuples of arrays** in the
+  order published by :func:`model.param_layout`;
+* a training step is a pure function
+  ``(params, m, v, step, *batch) -> (params', m', v', loss, pde, bc)``;
+* the batch arrays follow :meth:`pdes.Problem.batch_schema` order.
+
+The optimizer is hand-rolled Adam (the usual beta = (0.9, 0.999),
+eps = 1e-8) so that the whole update lowers into the same HLO module and the
+Rust side never needs an optimizer implementation.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import model, pdes, strategies
+from .model import DeepONetSpec
+from .pdes import Problem, Scale
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+DEFAULT_LR = 1e-3
+
+
+def make_loss_fn(problem: Problem, strategy: str, sc: Scale):
+    """``(params, batch_dict) -> (total, pde, bc)`` under the given strategy."""
+    spec = problem.spec(sc)
+
+    def loss_fn(params, batch: Dict[str, jax.Array]):
+        ops = strategies.make_ops(strategy, spec, params, batch["p"], batch["x_in"])
+        return problem.loss(ops, params, batch)
+
+    return loss_fn
+
+
+def make_train_step(problem: Problem, strategy: str, sc: Scale, lr: float = DEFAULT_LR):
+    """Build the flat-signature Adam training step (see module docstring)."""
+    schema = problem.batch_schema(sc)
+    loss_fn = make_loss_fn(problem, strategy, sc)
+
+    def train_step(params, m, v, step, *batch_arrays):
+        batch = {name: arr for (name, _), arr in zip(schema, batch_arrays)}
+
+        def total_loss(ps):
+            t, p_, b_ = loss_fn(ps, batch)
+            return t, (p_, b_)
+
+        (total, (pde, bc)), grads = jax.value_and_grad(total_loss, has_aux=True)(params)
+        step = step + 1
+        new_params, new_m, new_v = [], [], []
+        # bias-corrected step size computed once, shared by all tensors
+        sf = lr * jnp.sqrt(1.0 - ADAM_B2**step) / (1.0 - ADAM_B1**step)
+        for w, g, mi, vi in zip(params, grads, m, v):
+            mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+            vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * jnp.square(g)
+            w = w - sf * mi / (jnp.sqrt(vi) + ADAM_EPS)
+            new_params.append(w)
+            new_m.append(mi)
+            new_v.append(vi)
+        return (
+            tuple(new_params),
+            tuple(new_m),
+            tuple(new_v),
+            step,
+            total,
+            pde,
+            bc,
+        )
+
+    return train_step
+
+
+def make_loss_only(problem: Problem, strategy: str, sc: Scale):
+    """Forward + physics loss without backprop -- the Table-1 'Loss (PDE)' stage."""
+    schema = problem.batch_schema(sc)
+    loss_fn = make_loss_fn(problem, strategy, sc)
+
+    def loss_only(params, *batch_arrays):
+        batch = {name: arr for (name, _), arr in zip(schema, batch_arrays)}
+        total, pde, bc = loss_fn(params, batch)
+        return total, pde, bc
+
+    return loss_only
+
+
+def make_forward(problem: Problem, sc: Scale, n_points: int):
+    """Plain forward on caller-supplied points: the eval / Fig.-3 artifact.
+
+    ``(params, p (M,Q), pts (G,D)) -> u (O, M, G)``.  Strategy-independent.
+    """
+    spec = problem.spec(sc)
+
+    def forward(params, p, pts):
+        return model.apply(spec, params, p, pts)
+
+    return forward
+
+
+def example_args(problem: Problem, sc: Scale):
+    """ShapeDtypeStructs for lowering: (params, m, v, step, *batch)."""
+    spec = problem.spec(sc)
+    f32 = jnp.float32
+    params = tuple(
+        jax.ShapeDtypeStruct(shape, f32) for _, shape in model.param_layout(spec)
+    )
+    batch = tuple(
+        jax.ShapeDtypeStruct(shape, f32) for _, shape in problem.batch_schema(sc)
+    )
+    step = jax.ShapeDtypeStruct((), jnp.int32)
+    return params, params, params, step, batch

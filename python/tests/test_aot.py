@@ -1,0 +1,122 @@
+"""AOT pipeline tests: lowering, manifest integrity, HLO round-trip."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, lowering, model, train
+from compile.pdes import Scale, get_problem
+
+TINY = Scale("tiny", m=2, n=16, n_ic=8, n_bc=8, width=8, latent=4, depth=1)
+
+
+class TestLowering:
+    def test_hlo_text_is_parseable_hlo(self):
+        fn = lambda x, y: (jnp.dot(x, y) + 1.0,)  # noqa: E731
+        s = jax.ShapeDtypeStruct((3, 3), jnp.float32)
+        txt = lowering.lower_flat(fn, s, s)
+        assert txt.startswith("HloModule")
+        assert "parameter(0)" in txt
+        assert "ROOT" in txt
+
+    def test_lowered_train_step_has_all_parameters(self):
+        problem = get_problem("reaction_diffusion")
+        problem_scales_backup = problem.scales
+        flat, args, inputs, outputs = aot._train_artifact(problem, "zcs", TINY, "")
+        txt = lowering.lower_flat(flat, *args)
+        n_inputs = len(inputs)
+        assert f"parameter({n_inputs - 1})" in txt
+        assert f"parameter({n_inputs})" not in txt
+
+    def test_loss_artifact_outputs(self):
+        problem = get_problem("reaction_diffusion")
+        flat, args, inputs, outputs = aot._loss_artifact(problem, "zcs", TINY, "")
+        assert [o["name"] for o in outputs] == ["loss", "loss_pde", "loss_bc"]
+
+    def test_forward_artifact_io(self):
+        problem = get_problem("stokes")
+        flat, args, inputs, outputs = aot._forward_artifact(problem, TINY, 64)
+        assert inputs[-1]["shape"] == [64, 2]
+        assert outputs[0]["shape"] == [3, TINY.m, 64]
+
+
+class TestBuilder:
+    def test_build_and_manifest(self, tmp_path):
+        b = aot.Builder(str(tmp_path), verbose=False)
+        problem = get_problem("reaction_diffusion")
+        problem.scales = dict(problem.scales, tiny=TINY)
+        b.build(
+            "rd__zcs__tiny.train",
+            "train",
+            problem,
+            "zcs",
+            TINY,
+            lambda: aot._train_artifact(problem, "zcs", TINY, ""),
+        )
+        b.write_manifest(["reaction_diffusion"])
+        assert (tmp_path / "rd__zcs__tiny.train.hlo.txt").exists()
+        meta = json.loads((tmp_path / "meta.json").read_text())
+        entry = meta["artifacts"]["rd__zcs__tiny.train"]
+        assert entry["kind"] == "train"
+        assert entry["m"] == 2 and entry["n"] == 16
+        n_params = len(model.param_layout(problem.spec(TINY)))
+        # params + adam m + adam v + step + batch
+        assert len(entry["inputs"]) == 3 * n_params + 1 + len(
+            problem.batch_schema(TINY)
+        )
+
+    def test_incremental_skip(self, tmp_path):
+        b = aot.Builder(str(tmp_path), verbose=False)
+        problem = get_problem("reaction_diffusion")
+        maker = lambda: aot._train_artifact(problem, "zcs", TINY, "")  # noqa: E731
+        b.build("x.train", "train", problem, "zcs", TINY, maker)
+        mtime = (tmp_path / "x.train.hlo.txt").stat().st_mtime
+        b2 = aot.Builder(str(tmp_path), verbose=False)
+        b2.build("x.train", "train", problem, "zcs", TINY, maker)
+        assert (tmp_path / "x.train.hlo.txt").stat().st_mtime == mtime
+        assert "x.train" in b2.manifest  # manifest still covers skipped files
+
+    def test_fig2_points_dedupe(self):
+        pts = aot.fig2_points()
+        assert len(pts) == len(set(pts))
+        # the anchor point appears exactly once
+        assert (aot.FIG2_M0, aot.FIG2_N0, aot.FIG2_P0) in pts
+
+
+class TestNumericalRoundTrip:
+    """Lower a train step, re-execute the HLO via jax, compare numerics.
+
+    This is the python half of the interchange contract; the rust half
+    (PJRT load + execute) lives in rust/tests/.
+    """
+
+    def test_train_step_numerics_survive_lowering(self):
+        problem = get_problem("reaction_diffusion")
+        step_fn = train.make_train_step(problem, "zcs", TINY)
+        spec = problem.spec(TINY)
+        params = model.init_params(spec, jax.random.PRNGKey(0))
+        m = tuple(jnp.zeros_like(w) for w in params)
+        v = tuple(jnp.zeros_like(w) for w in params)
+        ks = iter(jax.random.split(jax.random.PRNGKey(1), 16))
+        batch = tuple(
+            jax.random.uniform(next(ks), shape, jnp.float32)
+            for _, shape in problem.batch_schema(TINY)
+        )
+        direct = step_fn(params, m, v, jnp.int32(0), *batch)
+        jitted = jax.jit(
+            lambda *a: step_fn(
+                a[: len(params)],
+                a[len(params) : 2 * len(params)],
+                a[2 * len(params) : 3 * len(params)],
+                a[3 * len(params)],
+                *a[3 * len(params) + 1 :],
+            )
+        )
+        via_jit = jitted(*params, *m, *v, jnp.int32(0), *batch)
+        np.testing.assert_allclose(direct[4], via_jit[4], rtol=1e-5)
+        for a, b in zip(direct[0], via_jit[0]):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-7)

@@ -1,0 +1,197 @@
+"""L1 correctness: every Pallas kernel against the pure-jnp oracle.
+
+Hypothesis sweeps shapes; nested-grad tests pin the custom_jvp rules to 4th
+order (the Kirchhoff-Love requirement).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+settings.register_profile("kernel", max_examples=10, deadline=None)
+settings.load_profile("kernel")
+
+
+def _rand(key, shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+dims = st.integers(min_value=1, max_value=40)
+rowdims = st.integers(min_value=1, max_value=300)
+
+
+class TestMatmul:
+    @given(rows=rowdims, k=dims, cols=dims, seed=st.integers(0, 2**30))
+    def test_matches_ref(self, rows, k, cols, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+        x, w = _rand(ks[0], (rows, k)), _rand(ks[1], (k, cols))
+        np.testing.assert_allclose(
+            kernels.matmul(x, w), ref.matmul(x, w), rtol=1e-4, atol=1e-5
+        )
+
+    def test_big_rows_tiled(self):
+        """Row count far above the tile size exercises the grid path."""
+        ks = jax.random.split(jax.random.PRNGKey(0), 2)
+        x, w = _rand(ks[0], (1000, 16)), _rand(ks[1], (16, 8))
+        np.testing.assert_allclose(
+            kernels.matmul(x, w), ref.matmul(x, w), rtol=1e-4, atol=1e-5
+        )
+
+    def test_grad_both_args(self):
+        ks = jax.random.split(jax.random.PRNGKey(1), 2)
+        x, w = _rand(ks[0], (7, 5)), _rand(ks[1], (5, 3))
+        for argnum in (0, 1):
+            g1 = jax.grad(lambda *a: kernels.matmul(*a).sum(), argnum)(x, w)
+            g2 = jax.grad(lambda *a: ref.matmul(*a).sum(), argnum)(x, w)
+            np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-5)
+
+    def test_jvp_linearity(self):
+        ks = jax.random.split(jax.random.PRNGKey(2), 4)
+        x, w = _rand(ks[0], (6, 4)), _rand(ks[1], (4, 3))
+        dx, dw = _rand(ks[2], (6, 4)), _rand(ks[3], (4, 3))
+        _, dout = jax.jvp(kernels.matmul, (x, w), (dx, dw))
+        np.testing.assert_allclose(
+            dout, dx @ w + x @ dw, rtol=1e-4, atol=1e-5
+        )
+
+
+class TestDense:
+    @pytest.mark.parametrize("act", ["tanh", "gelu", "softplus", "identity"])
+    @given(rows=rowdims, k=dims, cols=dims, seed=st.integers(0, 2**30))
+    def test_matches_ref(self, act, rows, k, cols, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x, w, b = _rand(ks[0], (rows, k)), _rand(ks[1], (k, cols)), _rand(ks[2], (cols,))
+        np.testing.assert_allclose(
+            kernels.dense(x, w, b, act), ref.dense(x, w, b, act), rtol=1e-4, atol=1e-5
+        )
+
+    @pytest.mark.parametrize("act", ["tanh", "gelu", "softplus"])
+    def test_first_grad_all_args(self, act):
+        ks = jax.random.split(jax.random.PRNGKey(3), 3)
+        x, w, b = _rand(ks[0], (9, 5)), _rand(ks[1], (5, 4)), _rand(ks[2], (4,))
+        for argnum in (0, 1, 2):
+            g1 = jax.grad(lambda *a: kernels.dense(*a, act).sum(), argnum)(x, w, b)
+            g2 = jax.grad(lambda *a: ref.dense(*a, act).sum(), argnum)(x, w, b)
+            np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-5)
+
+    @pytest.mark.parametrize("order", [1, 2, 3, 4])
+    def test_high_order_z_derivative(self, order):
+        """The ZCS pattern: d^n/dz^n of a dense layer at a scalar shift.
+
+        4th order is what Kirchhoff-Love needs; the tolerance loosens with
+        order as f32 roundoff compounds through the nest.
+        """
+        ks = jax.random.split(jax.random.PRNGKey(4), 3)
+        x, w, b = _rand(ks[0], (11, 3)), _rand(ks[1], (3, 6)), _rand(ks[2], (6,))
+
+        def f(z):
+            return kernels.dense(x + z, w, b, "tanh").sum()
+
+        def fr(z):
+            return ref.dense(x + z, w, b, "tanh").sum()
+
+        g, gr = f, fr
+        for _ in range(order):
+            g, gr = jax.grad(g), jax.grad(gr)
+        np.testing.assert_allclose(g(0.0), gr(0.0), rtol=1e-3 * 10 ** (order - 1))
+
+    def test_param_grad_through_second_order(self):
+        """grad wrt W of a loss built on d2/dz2 -- the train-step pattern."""
+        ks = jax.random.split(jax.random.PRNGKey(5), 3)
+        x, w, b = _rand(ks[0], (8, 3)), _rand(ks[1], (3, 5)), _rand(ks[2], (5,))
+
+        def loss(w, kern):
+            def f(z):
+                return kern(x + z, w, b, "tanh").sum()
+
+            return jax.grad(jax.grad(f))(0.0) ** 2
+
+        g1 = jax.grad(loss)(w, kernels.dense)
+        g2 = jax.grad(loss)(w, ref.dense)
+        np.testing.assert_allclose(g1, g2, rtol=1e-3, atol=1e-6)
+
+    def test_unknown_activation_raises(self):
+        x = jnp.ones((2, 2))
+        with pytest.raises(KeyError):
+            kernels.dense(x, x, jnp.ones((2,)), "relu6")
+
+
+class TestCombine:
+    @given(
+        m=st.integers(1, 20),
+        n=rowdims,
+        o=st.integers(1, 4),
+        k=dims,
+        seed=st.integers(0, 2**30),
+    )
+    def test_matches_ref(self, m, n, o, k, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+        b = _rand(ks[0], (m, o, k))
+        t = _rand(ks[1], (n, o, k))
+        np.testing.assert_allclose(
+            kernels.combine(b, t), ref.combine(b, t), rtol=1e-4, atol=1e-5
+        )
+
+    def test_grid_tiling_above_128(self):
+        """M, N above the 128 MXU tile exercise multi-cell grids."""
+        ks = jax.random.split(jax.random.PRNGKey(6), 2)
+        b = _rand(ks[0], (130, 2, 9))
+        t = _rand(ks[1], (257, 2, 9))
+        np.testing.assert_allclose(
+            kernels.combine(b, t), ref.combine(b, t), rtol=1e-4, atol=1e-5
+        )
+
+    def test_bilinear_jvp(self):
+        ks = jax.random.split(jax.random.PRNGKey(7), 4)
+        b, t = _rand(ks[0], (3, 1, 5)), _rand(ks[1], (7, 1, 5))
+        db, dt = _rand(ks[2], (3, 1, 5)), _rand(ks[3], (7, 1, 5))
+        _, dout = jax.jvp(kernels.combine, (b, t), (db, dt))
+        want = ref.combine(db, t) + ref.combine(b, dt)
+        np.testing.assert_allclose(dout, want, rtol=1e-4, atol=1e-5)
+
+    def test_grad_flows_to_both(self):
+        ks = jax.random.split(jax.random.PRNGKey(8), 2)
+        b, t = _rand(ks[0], (4, 2, 6)), _rand(ks[1], (9, 2, 6))
+        for argnum in (0, 1):
+            g1 = jax.grad(lambda *a: kernels.combine(*a).sum(), argnum)(b, t)
+            g2 = jax.grad(lambda *a: ref.combine(*a).sum(), argnum)(b, t)
+            np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-5)
+
+    def test_shape_mismatch_raises(self):
+        with pytest.raises(AssertionError):
+            kernels.combine(jnp.ones((2, 1, 3)), jnp.ones((4, 2, 3)))
+
+
+class TestBlockspec:
+    def test_vmem_within_budget(self):
+        """Every schedule the kernels can pick must fit the VMEM budget."""
+        from compile.kernels import blockspec
+
+        for rows in (1, 7, 128, 1000, 12800):
+            for k in (2, 50, 128, 384):
+                for cols in (1, 64, 128, 384):
+                    rep = blockspec.report(rows, k, cols)
+                    assert rep["vmem_ok"], (rows, k, cols, rep)
+
+    def test_mxu_utilization_bounds(self):
+        from compile.kernels import blockspec
+
+        rep = blockspec.report(4096, 128, 128)
+        assert 0.9 <= rep["mxu_utilization"] <= 1.0
+        rep_ragged = blockspec.report(129, 3, 5)
+        assert 0.0 < rep_ragged["mxu_utilization"] <= 1.0
+
+    def test_tiles_cover_rows(self):
+        from compile.kernels import blockspec
+        import math
+
+        for rows in (1, 100, 128, 129, 5000):
+            ch = blockspec.choose_tiles(rows, 64, 64)
+            assert ch.grid[0] * ch.tile_rows >= rows or ch.grid[0] == math.ceil(
+                rows / ch.tile_rows
+            )

@@ -1,0 +1,95 @@
+"""Model-level tests: shapes, parameter layout, apply-flavour consistency."""
+
+import jax
+import jax.numpy as jnp
+import math
+import numpy as np
+import pytest
+
+from compile import model
+from compile.model import DeepONetSpec
+
+SPEC = DeepONetSpec(
+    n_features=5, n_dims=2, n_out=2, latent=7, branch_hidden=(9, 11), trunk_hidden=(13,)
+)
+
+
+def _params(spec, seed=0):
+    return model.init_params(spec, jax.random.PRNGKey(seed))
+
+
+class TestLayout:
+    def test_layout_shapes_match_params(self):
+        params = _params(SPEC)
+        layout = model.param_layout(SPEC)
+        assert len(params) == len(layout)
+        for arr, (name, shape) in zip(params, layout):
+            assert arr.shape == tuple(shape), name
+
+    def test_n_params_counts(self):
+        assert model.n_params(SPEC) == sum(
+            math.prod(s) for _, s in model.param_layout(SPEC)
+        )
+
+    def test_layout_names_unique(self):
+        names = [n for n, _ in model.param_layout(SPEC)]
+        assert len(names) == len(set(names))
+
+    def test_branch_last_layer_size_is_o_times_k(self):
+        _, shape = model.param_layout(SPEC)[2 * (len(SPEC.branch_sizes) - 1) - 2]
+        assert shape[-1] == SPEC.n_out * SPEC.latent
+
+
+class TestApply:
+    def test_output_shape(self):
+        params = _params(SPEC)
+        p = jnp.ones((3, 5))
+        x = jnp.ones((11, 2)) * 0.3
+        u = model.apply(SPEC, params, p, x)
+        assert u.shape == (2, 3, 11)
+
+    def test_pointwise_agrees_with_cartesian(self):
+        """eq.-(5) tiling + pointwise apply == cartesian apply."""
+        params = _params(SPEC)
+        ks = jax.random.split(jax.random.PRNGKey(1), 2)
+        p = jax.random.normal(ks[0], (3, 5))
+        x = jax.random.uniform(ks[1], (6, 2))
+        u = model.apply(SPEC, params, p, x)  # (O, M, N)
+        ph = jnp.repeat(p, 6, axis=0)
+        xh = jnp.tile(x, (3, 1))
+        u_pw = model.apply_pointwise(SPEC, params, ph, xh).reshape(2, 3, 6)
+        np.testing.assert_allclose(u, u_pw, rtol=1e-5, atol=1e-6)
+
+    def test_deterministic_in_params(self):
+        params = _params(SPEC, seed=7)
+        p = jnp.ones((2, 5))
+        x = jnp.ones((4, 2)) * 0.1
+        u1 = model.apply(SPEC, params, p, x)
+        u2 = model.apply(SPEC, params, p, x)
+        np.testing.assert_array_equal(u1, u2)
+
+    def test_function_batch_independence(self):
+        """Row i of the output depends only on p_i (cartesian semantics)."""
+        params = _params(SPEC)
+        ks = jax.random.split(jax.random.PRNGKey(2), 2)
+        p = jax.random.normal(ks[0], (4, 5))
+        x = jax.random.uniform(ks[1], (5, 2))
+        u_full = model.apply(SPEC, params, p, x)
+        u_single = model.apply(SPEC, params, p[1:2], x)
+        np.testing.assert_allclose(u_full[:, 1:2], u_single, rtol=1e-5, atol=1e-6)
+
+
+class TestInit:
+    def test_glorot_bounds(self):
+        params = _params(SPEC)
+        for arr, (name, shape) in zip(params, model.param_layout(SPEC)):
+            if len(shape) == 2:
+                limit = math.sqrt(6.0 / (shape[0] + shape[1]))
+                assert float(jnp.abs(arr).max()) <= limit + 1e-6, name
+            else:
+                np.testing.assert_array_equal(arr, jnp.zeros(shape))
+
+    def test_seeds_differ(self):
+        a = _params(SPEC, seed=0)[0]
+        b = _params(SPEC, seed=1)[0]
+        assert not np.allclose(a, b)

@@ -1,0 +1,170 @@
+"""Problem-level tests: residual assembly, sources, schemas, loss parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, pdes, strategies, train
+from compile.pdes import Scale, get_problem
+
+TINY = Scale("tiny", m=2, n=16, n_ic=8, n_bc=8, width=8, latent=4, depth=1)
+
+
+def _batch(problem, sc, seed=0):
+    """Random but well-formed batch arrays following the schema."""
+    ks = iter(jax.random.split(jax.random.PRNGKey(seed), 32))
+    batch = {}
+    for name, shape in problem.batch_schema(sc):
+        if name.startswith("x_"):
+            arr = jax.random.uniform(next(ks), shape, jnp.float32)
+            # put boundary points actually on their boundary
+            if name == "x_ic":
+                arr = arr.at[:, 1].set(0.0)
+            if name == "x_left":
+                arr = arr.at[:, 0].set(0.0)
+            if name == "x_right":
+                arr = arr.at[:, 0].set(1.0)
+            if name == "x_lid":
+                arr = arr.at[:, 1].set(1.0)
+            if name == "x_bot":
+                arr = arr.at[:, 1].set(0.0)
+            batch[name] = arr
+        else:
+            batch[name] = jax.random.normal(next(ks), shape, jnp.float32) * 0.1
+    return batch
+
+
+ALL_PROBLEMS = ["reaction_diffusion", "burgers", "kirchhoff", "stokes"]
+
+
+class TestSchemas:
+    @pytest.mark.parametrize("name", ALL_PROBLEMS)
+    def test_schema_shapes_are_static_ints(self, name):
+        problem = get_problem(name)
+        for sc in problem.scales.values():
+            for n, shape in problem.batch_schema(sc):
+                assert all(isinstance(d, int) and d > 0 for d in shape), (n, shape)
+
+    @pytest.mark.parametrize("name", ALL_PROBLEMS)
+    def test_first_two_entries_are_p_and_x(self, name):
+        problem = get_problem(name)
+        sc = list(problem.scales.values())[0]
+        schema = problem.batch_schema(sc)
+        assert schema[0][0] == "p" and schema[1][0] == "x_in"
+        assert schema[0][1] == (sc.m, problem.q)
+        assert schema[1][1] == (sc.n, problem.d)
+
+    def test_highorder_synthesised(self):
+        problem = get_problem("highorder_p4")
+        assert problem.p_order == 4
+        with pytest.raises(KeyError):
+            get_problem("nonexistent")
+
+
+class TestLossParity:
+    """The same physics under every strategy must give the same loss."""
+
+    @pytest.mark.parametrize("name", ALL_PROBLEMS)
+    def test_zcs_vs_zcs_fwd(self, name):
+        problem = get_problem(name)
+        params = model.init_params(problem.spec(TINY), jax.random.PRNGKey(3))
+        batch = _batch(problem, TINY)
+        la = train.make_loss_fn(problem, "zcs", TINY)(params, batch)
+        lb = train.make_loss_fn(problem, "zcs_fwd", TINY)(params, batch)
+        for a, b in zip(la, lb):
+            np.testing.assert_allclose(a, b, rtol=2e-3, atol=1e-6)
+
+    @pytest.mark.parametrize("other", ["funcloop", "datavect"])
+    def test_zcs_vs_baselines_rd(self, other):
+        problem = get_problem("reaction_diffusion")
+        params = model.init_params(problem.spec(TINY), jax.random.PRNGKey(4))
+        batch = _batch(problem, TINY)
+        la = train.make_loss_fn(problem, "zcs", TINY)(params, batch)
+        lb = train.make_loss_fn(problem, other, TINY)(params, batch)
+        for a, b in zip(la, lb):
+            np.testing.assert_allclose(a, b, rtol=2e-3, atol=1e-6)
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("name", ["burgers", "kirchhoff", "stokes"])
+    @pytest.mark.parametrize("other", ["funcloop", "datavect"])
+    def test_zcs_vs_baselines_all(self, name, other):
+        problem = get_problem(name)
+        params = model.init_params(problem.spec(TINY), jax.random.PRNGKey(5))
+        batch = _batch(problem, TINY)
+        la = train.make_loss_fn(problem, "zcs", TINY)(params, batch)
+        lb = train.make_loss_fn(problem, other, TINY)(params, batch)
+        for a, b in zip(la, lb):
+            np.testing.assert_allclose(a, b, rtol=5e-3, atol=1e-6)
+
+
+class TestKirchhoffSource:
+    def test_source_matches_direct_sum(self):
+        problem = get_problem("kirchhoff")
+        c = jax.random.normal(jax.random.PRNGKey(6), (2, 100), jnp.float32)
+        pts = jax.random.uniform(jax.random.PRNGKey(7), (5, 2), dtype=jnp.float32)
+        got = problem.source(c, pts)
+        want = np.zeros((2, 5))
+        cc = np.asarray(c).reshape(2, 10, 10)
+        for m in range(2):
+            for j in range(5):
+                xx, yy = float(pts[j, 0]), float(pts[j, 1])
+                for r in range(1, 11):
+                    for s in range(1, 11):
+                        want[m, j] += (
+                            cc[m, r - 1, s - 1]
+                            * np.sin(r * np.pi * xx)
+                            * np.sin(s * np.pi * yy)
+                        )
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_source_vanishes_on_boundary(self):
+        problem = get_problem("kirchhoff")
+        c = jnp.ones((1, 100), jnp.float32)
+        pts = jnp.array([[0.0, 0.5], [1.0, 0.5], [0.3, 0.0], [0.3, 1.0]], jnp.float32)
+        np.testing.assert_allclose(
+            problem.source(c, pts), jnp.zeros((1, 4)), atol=1e-4
+        )
+
+
+class TestResidualValues:
+    def test_rd_residual_uses_aux_field(self):
+        """Doubling f_at_x shifts the residual by exactly -f."""
+        problem = get_problem("reaction_diffusion")
+        spec = problem.spec(TINY)
+        params = model.init_params(spec, jax.random.PRNGKey(8))
+        batch = _batch(problem, TINY)
+        ops = strategies.make_ops("zcs", spec, params, batch["p"], batch["x_in"])
+        st = ops.stack([(0, 0), (0, 1), (2, 0)])
+        res = (
+            st[(0, 1)][0]
+            - problem.diff_coef * st[(2, 0)][0]
+            + problem.react_coef * st[(0, 0)][0] ** 2
+            - batch["f_at_x"]
+        )
+        total, pde, bc = problem.loss(ops, params, batch)
+        np.testing.assert_allclose(pde, jnp.mean(res**2), rtol=1e-5)
+
+    def test_stokes_loss_components_positive(self):
+        problem = get_problem("stokes")
+        spec = problem.spec(TINY)
+        params = model.init_params(spec, jax.random.PRNGKey(9))
+        batch = _batch(problem, TINY)
+        ops = strategies.make_ops("zcs", spec, params, batch["p"], batch["x_in"])
+        total, pde, bc = problem.loss(ops, params, batch)
+        assert float(total) > 0 and float(pde) >= 0 and float(bc) >= 0
+        np.testing.assert_allclose(total, pde + bc, rtol=1e-5)
+
+    def test_highorder_loss_is_pure_pde(self):
+        problem = get_problem("highorder_p2")
+        sc = Scale("t", m=2, n=8, width=8, latent=4, depth=1)
+        spec = problem.spec(sc)
+        params = model.init_params(spec, jax.random.PRNGKey(10))
+        batch = {
+            "p": jnp.ones((2, problem.q)),
+            "x_in": jnp.linspace(0, 1, 16).reshape(8, 2),
+        }
+        ops = strategies.make_ops("zcs", spec, params, batch["p"], batch["x_in"])
+        total, pde, bc = problem.loss(ops, params, batch)
+        assert float(bc) == 0.0
+        np.testing.assert_allclose(total, pde)

@@ -1,0 +1,192 @@
+"""Strategy equivalence -- the central correctness property of the paper.
+
+All four AD strategies (zcs, zcs_fwd, funcloop, datavect) must produce the
+same derivative fields; ZCS additionally satisfies the identities of
+eqs. (7), (11) and (12).  A closed-form (identity-activation) network pins
+everything against hand-computed analytic derivatives.
+"""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model, strategies
+from compile.model import DeepONetSpec
+
+settings.register_profile("strat", max_examples=10, deadline=None)
+settings.load_profile("strat")
+
+SMALL = DeepONetSpec(
+    n_features=4, n_dims=2, n_out=1, latent=6, branch_hidden=(8,), trunk_hidden=(8,)
+)
+VECTOR = DeepONetSpec(
+    n_features=3, n_dims=2, n_out=3, latent=5, branch_hidden=(7,), trunk_hidden=(7,)
+)
+
+
+def _ctx(spec, m=3, n=9, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    params = model.init_params(spec, ks[0])
+    p = jax.random.normal(ks[1], (m, spec.n_features), jnp.float32)
+    x = jax.random.uniform(ks[2], (n, spec.n_dims), dtype=jnp.float32)
+    return params, p, x
+
+
+ORDERS_2 = [(0, 0), (1, 0), (0, 1), (2, 0), (1, 1), (0, 2)]
+
+
+class TestEquivalence:
+    @pytest.mark.parametrize("other", ["zcs_fwd", "funcloop", "datavect"])
+    @pytest.mark.parametrize("spec", [SMALL, VECTOR], ids=["scalar", "vector"])
+    def test_stack_matches_zcs(self, other, spec):
+        params, p, x = _ctx(spec)
+        ours = strategies.make_ops("zcs", spec, params, p, x).stack(ORDERS_2)
+        theirs = strategies.make_ops(other, spec, params, p, x).stack(ORDERS_2)
+        for alpha in ORDERS_2:
+            np.testing.assert_allclose(
+                ours[alpha], theirs[alpha], rtol=2e-3, atol=1e-5, err_msg=str(alpha)
+            )
+
+    @given(seed=st.integers(0, 2**30))
+    def test_stack_matches_zcs_random_ctx(self, seed):
+        params, p, x = _ctx(SMALL, seed=seed)
+        ours = strategies.make_ops("zcs", SMALL, params, p, x).stack([(2, 0), (1, 1)])
+        fwd = strategies.make_ops("zcs_fwd", SMALL, params, p, x).stack([(2, 0), (1, 1)])
+        for alpha in [(2, 0), (1, 1)]:
+            np.testing.assert_allclose(ours[alpha], fwd[alpha], rtol=2e-3, atol=1e-5)
+
+    @pytest.mark.parametrize("other", ["zcs_fwd", "funcloop", "datavect"])
+    @pytest.mark.parametrize("p_max", [0, 1, 3])
+    def test_powers_sum(self, other, p_max):
+        params, p, x = _ctx(SMALL)
+        ours = strategies.make_ops("zcs", SMALL, params, p, x).powers_sum(p_max)
+        theirs = strategies.make_ops(other, SMALL, params, p, x).powers_sum(p_max)
+        np.testing.assert_allclose(ours, theirs, rtol=2e-3, atol=1e-5)
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("other", ["zcs_fwd", "funcloop"])
+    def test_fourth_order(self, other):
+        """The Kirchhoff stack: 4th-order mixed partials."""
+        orders = [(4, 0), (2, 2), (0, 4)]
+        params, p, x = _ctx(SMALL, m=2, n=5)
+        ours = strategies.make_ops("zcs", SMALL, params, p, x).stack(orders)
+        theirs = strategies.make_ops(other, SMALL, params, p, x).stack(orders)
+        for alpha in orders:
+            np.testing.assert_allclose(
+                ours[alpha], theirs[alpha], rtol=1e-2, atol=1e-4, err_msg=str(alpha)
+            )
+
+
+class TestZCSIdentities:
+    def test_eq7_zero_shift_is_identity(self):
+        """v_ij(z=0) == u_ij: the zero shift does not perturb the forward."""
+        params, p, x = _ctx(SMALL)
+        u = model.apply(SMALL, params, p, x)
+        ops = strategies.make_ops("zcs", SMALL, params, p, x)
+        np.testing.assert_allclose(ops.value(), u, rtol=1e-5, atol=1e-6)
+
+    def test_eq11_matches_direct_jacobian(self):
+        """ZCS n-th derivative == brute-force per-point jacobian (tiny case)."""
+        params, p, x = _ctx(SMALL, m=2, n=4)
+        ops = strategies.make_ops("zcs", SMALL, params, p, x)
+        got = ops.stack([(1, 0)])[(1, 0)]
+
+        # brute force: per (i, j), d u / d x_j0 via jacfwd on a single point
+        def u_single(xj, pi):
+            return model.apply(SMALL, params, pi[None], xj[None])[0, 0, 0]
+
+        want = np.zeros_like(np.asarray(got))
+        for i in range(2):
+            for j in range(4):
+                want[0, i, j] = jax.jacfwd(u_single)(x[j], p[i])[0]
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=1e-6)
+
+    def test_eq12_product_identity(self):
+        """D^m u * D^n u == ZCSOps.product (the eq.-12 path)."""
+        params, p, x = _ctx(SMALL)
+        ops = strategies.make_ops("zcs", SMALL, params, p, x)
+        st_ = ops.stack([(1, 0), (0, 1)])
+        direct = st_[(1, 0)] * st_[(0, 1)]
+        via_eq12 = ops.product((1, 0), (0, 1))
+        np.testing.assert_allclose(direct, via_eq12, rtol=2e-3, atol=1e-6)
+
+    def test_eq12_hessian_diagonal_sampled(self):
+        """Check 1/2 d^2/da^2 (omega_m omega_n) == D^m u D^n u elementwise.
+
+        The full a-Hessian is (MN)^2; we verify the identity on a handful of
+        sampled diagonal entries via double-jvp in basis directions.
+        """
+        params, p, x = _ctx(SMALL, m=2, n=3)
+        ops = strategies.make_ops("zcs", SMALL, params, p, x)
+        z0 = jnp.zeros((2,), jnp.float32)
+        a0 = jnp.ones((1, 2, 3), jnp.float32)
+        om = ops._omega_deriv_fn((1, 0))
+        on = ops._omega_deriv_fn((0, 1))
+
+        def h(a):
+            return om(z0, a) * on(z0, a)
+
+        st_ = ops.stack([(1, 0), (0, 1)])
+        want = st_[(1, 0)] * st_[(0, 1)]
+        for idx in [(0, 0, 0), (0, 1, 2), (0, 0, 1)]:
+            e = jnp.zeros_like(a0).at[idx].set(1.0)
+            # second directional derivative along a basis vector == H[idx,idx]
+            d2 = jax.jvp(lambda a: jax.jvp(h, (a,), (e,))[1], (a0,), (e,))[1]
+            np.testing.assert_allclose(
+                0.5 * d2, want[idx], rtol=2e-3, atol=1e-6, err_msg=str(idx)
+            )
+
+    def test_linear_comb_single_pass_equals_stack_sum(self):
+        """Eq. (14)'s one-pass linear combination == per-term sum (eq. 13)."""
+        params, p, x = _ctx(VECTOR)
+        ops = strategies.make_ops("zcs", VECTOR, spec_params := params, p, x)
+        coeffs = {(2, 0): 1.0, (0, 2): 1.0, (1, 0): -0.25}
+        one_pass = ops.linear_comb(coeffs)
+        st_ = ops.stack(list(coeffs))
+        want = sum(c * st_[a] for a, c in coeffs.items())
+        np.testing.assert_allclose(one_pass, want, rtol=2e-3, atol=1e-6)
+
+
+class TestAnalytic:
+    """Identity-activation nets have closed-form derivatives."""
+
+    LIN = DeepONetSpec(
+        n_features=2,
+        n_dims=2,
+        n_out=1,
+        latent=4,
+        branch_hidden=(),
+        trunk_hidden=(),
+        act="identity",
+    )
+
+    def test_first_derivative_closed_form(self):
+        """u = (p Wb + bb) . (x Wt + bt): du/dx_d = sum_k b_k Wt[d, k]."""
+        params, p, x = _ctx(self.LIN, m=3, n=5)
+        wb, bb, wt, bt, bias = params
+        b = p @ wb + bb  # (M, K)
+        ops = strategies.make_ops("zcs", self.LIN, params, p, x)
+        st_ = ops.stack([(1, 0), (0, 1), (2, 0)])
+        for d, alpha in [(0, (1, 0)), (1, (0, 1))]:
+            want = jnp.einsum("mk,k->m", b, wt[d, :])[None, :, None] * jnp.ones(
+                (1, 3, 5)
+            )
+            np.testing.assert_allclose(st_[alpha], want, rtol=1e-4, atol=1e-5)
+        # linear net: every second derivative vanishes
+        np.testing.assert_allclose(st_[(2, 0)], jnp.zeros((1, 3, 5)), atol=1e-4)
+
+    @pytest.mark.parametrize("strategy", strategies.STRATEGIES)
+    def test_all_strategies_on_closed_form(self, strategy):
+        params, p, x = _ctx(self.LIN, m=2, n=4)
+        wb, bb, wt, bt, bias = params
+        b = p @ wb + bb
+        ops = strategies.make_ops(strategy, self.LIN, params, p, x)
+        got = ops.stack([(1, 0)])[(1, 0)]
+        want = jnp.broadcast_to(
+            jnp.einsum("mk,k->m", b, wt[0, :])[None, :, None], (1, 2, 4)
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,119 @@
+"""Train-step tests: Adam math, loss descent, flat-signature discipline."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, pdes, train
+from compile.pdes import Scale, get_problem
+
+TINY = Scale("tiny", m=2, n=16, n_ic=8, n_bc=8, width=8, latent=4, depth=1)
+
+
+def _setup(name="reaction_diffusion", strategy="zcs", seed=0):
+    problem = get_problem(name)
+    spec = problem.spec(TINY)
+    params = model.init_params(spec, jax.random.PRNGKey(seed))
+    m = tuple(jnp.zeros_like(w) for w in params)
+    v = tuple(jnp.zeros_like(w) for w in params)
+    step_fn = train.make_train_step(problem, strategy, TINY)
+    return problem, params, m, v, step_fn
+
+
+def _rand_batch(problem, sc, seed=0):
+    ks = iter(jax.random.split(jax.random.PRNGKey(seed), 32))
+    out = []
+    for name, shape in problem.batch_schema(sc):
+        if name.startswith("x_"):
+            out.append(jax.random.uniform(next(ks), shape, jnp.float32))
+        else:
+            out.append(jax.random.normal(next(ks), shape, jnp.float32) * 0.1)
+    return tuple(out)
+
+
+class TestTrainStep:
+    def test_signature_round_trip(self):
+        problem, params, m, v, step_fn = _setup()
+        batch = _rand_batch(problem, TINY)
+        out = step_fn(params, m, v, jnp.int32(0), *batch)
+        new_params, new_m, new_v, step, loss, pde, bc = out
+        assert len(new_params) == len(params)
+        assert int(step) == 1
+        assert all(a.shape == b.shape for a, b in zip(new_params, params))
+        assert float(loss) > 0
+
+    def test_loss_decreases_under_training(self):
+        # NOTE: the batch is random noise (aux fields not consistent with any
+        # PDE solution), so the loss has a positive floor -- we only require
+        # a solid reduction toward it, not convergence.
+        problem, params, m, v, step_fn = _setup()
+        batch = _rand_batch(problem, TINY)
+        jitted = jax.jit(step_fn)
+        first = None
+        step = jnp.int32(0)
+        for it in range(100):
+            params, m, v, step, loss, pde, bc = jitted(params, m, v, step, *batch)
+            if first is None:
+                first = float(loss)
+        assert float(loss) < 0.75 * first, (first, float(loss))
+
+    def test_adam_matches_manual_first_step(self):
+        """One step from zero moments == SGD with the bias-corrected lr."""
+        problem, params, m, v, step_fn = _setup()
+        batch = _rand_batch(problem, TINY)
+        loss_fn = train.make_loss_fn(problem, "zcs", TINY)
+        bdict = {n: a for (n, _), a in zip(problem.batch_schema(TINY), batch)}
+        grads = jax.grad(lambda ps: loss_fn(ps, bdict)[0])(params)
+        new_params, *_ = step_fn(params, m, v, jnp.int32(0), *batch)
+        for w, g, w2 in zip(params, grads, new_params):
+            # after one step: m=(1-b1)g, v=(1-b2)g^2; update = lr*g/(|g|+~eps)
+            denom = jnp.sqrt((1 - train.ADAM_B2) * g * g) + train.ADAM_EPS
+            sf = (
+                train.DEFAULT_LR
+                * jnp.sqrt(1 - train.ADAM_B2)
+                / (1 - train.ADAM_B1)
+            )
+            want = w - sf * (1 - train.ADAM_B1) * g / denom
+            np.testing.assert_allclose(w2, want, rtol=1e-4, atol=1e-6)
+
+    @pytest.mark.parametrize("strategy", ["zcs", "zcs_fwd"])
+    def test_strategies_agree_on_first_update(self, strategy):
+        problem, params, m, v, _ = _setup()
+        batch = _rand_batch(problem, TINY)
+        base = train.make_train_step(problem, "zcs", TINY)(
+            params, m, v, jnp.int32(0), *batch
+        )
+        other = train.make_train_step(problem, strategy, TINY)(
+            params, m, v, jnp.int32(0), *batch
+        )
+        np.testing.assert_allclose(base[4], other[4], rtol=2e-3)
+        for a, b in zip(base[0], other[0]):
+            np.testing.assert_allclose(a, b, rtol=5e-2, atol=1e-5)
+
+    def test_loss_only_matches_train_loss(self):
+        problem, params, m, v, step_fn = _setup()
+        batch = _rand_batch(problem, TINY)
+        loss_only = train.make_loss_only(problem, "zcs", TINY)
+        l1 = loss_only(params, *batch)[0]
+        l2 = step_fn(params, m, v, jnp.int32(0), *batch)[4]
+        np.testing.assert_allclose(l1, l2, rtol=1e-5)
+
+
+class TestForward:
+    def test_forward_shape(self):
+        problem = get_problem("stokes")
+        spec = problem.spec(TINY)
+        params = model.init_params(spec, jax.random.PRNGKey(1))
+        fwd = train.make_forward(problem, TINY, 33)
+        p = jnp.ones((TINY.m, problem.q))
+        pts = jnp.ones((33, 2)) * 0.5
+        u = fwd(params, p, pts)
+        assert u.shape == (3, TINY.m, 33)
+
+    def test_example_args_match_layout(self):
+        problem = get_problem("burgers")
+        params, m, v, step, batch = train.example_args(problem, TINY)
+        assert len(params) == len(model.param_layout(problem.spec(TINY)))
+        assert len(batch) == len(problem.batch_schema(TINY))
+        assert step.dtype == jnp.int32

@@ -1,0 +1,148 @@
+//! Figure-2 reproduction: memory + wall-time scaling of the AD strategies
+//! on the high-order PDE of eq. (15), sweeping M, N and P independently.
+//!
+//! For every `highorder_p*` train artifact in the manifest this bench
+//! reports (a) the static graph size from `hlostats` -- the stand-in for
+//! the paper's "GPU memory" axis -- and (b) the measured wall time per
+//! training batch on the CPU PJRT client -- the paper's "time per 1000
+//! batches" axis.  Run via `cargo bench --bench fig2 [-- --sweep m|n|p]`.
+//!
+//! Expected shape (the paper's Fig. 2): ZCS rows stay flat in M while
+//! FuncLoop/DataVect grow linearly; everyone grows with N; P dominates all.
+
+use std::rc::Rc;
+use zcs::rng::Pcg64;
+use zcs::runtime::{ArtifactMeta, HostTensor, RunArg, Runtime};
+use zcs::util::benchkit::{Bench, Table};
+use zcs::util::cli::Opts;
+
+const STRATEGIES: [&str; 4] = ["zcs", "zcs_fwd", "funcloop", "datavect"];
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let opts = Opts::new("fig2", "eq. (15) scaling sweeps (paper Figure 2)")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("sweep", "all", "m | n | p | all")
+        .opt("budget", "1", "seconds of measurement per point")
+        .opt("max-hlo-mb", "1.2", "skip XLA-compiling artifacts above this HLO size; graph stats are still reported. XLA compile time explodes with unrolled-graph size (FuncLoop M=8 takes ~155 s) -- raise for the full paper sweep")
+        .switch("help", "show usage");
+    let p = opts.parse(&args)?;
+    if p.switch("help") {
+        print!("{}", opts.usage());
+        return Ok(());
+    }
+    let runtime = Rc::new(Runtime::open(p.get("artifacts"))?);
+    let budget = p.get_f64("budget")?;
+    let max_hlo = (p.get_f64("max-hlo-mb")? * 1e6) as usize;
+    let sweeps: Vec<&str> = match p.get("sweep") {
+        "all" => vec!["m", "n", "p"],
+        s => vec![s],
+    };
+
+    // anchor point of the sweeps (mirrors python/compile/aot.py)
+    let (m0, n0, p0) = (8usize, 512usize, 3usize);
+    for sweep in sweeps {
+        println!("\n== Figure 2, sweep over {} ==", sweep.to_uppercase());
+        let mut table = Table::new(&[
+            "strategy", "M", "N", "P", "HLO instr", "graph MiB", "compile s", "ms/batch",
+            "s/1000",
+        ]);
+        let names = runtime.artifact_names();
+        for strat in STRATEGIES {
+            let mut points: Vec<(usize, usize, usize, String)> = names
+                .iter()
+                .filter_map(|name| {
+                    let meta = &runtime.manifest.artifacts[name];
+                    if meta.kind != "train" || meta.strategy != strat {
+                        return None;
+                    }
+                    let p_ord: usize =
+                        meta.problem.strip_prefix("highorder_p")?.parse().ok()?;
+                    let keep = match sweep {
+                        "m" => meta.n == n0 && p_ord == p0,
+                        "n" => meta.m == m0 && p_ord == p0,
+                        "p" => meta.m == m0 && meta.n == n0,
+                        _ => false,
+                    };
+                    keep.then(|| (meta.m, meta.n, p_ord, name.clone()))
+                })
+                .collect();
+            points.sort();
+            for (m, n, p_ord, name) in points {
+                let text = runtime.artifact_text(&name)?;
+                if text.len() > max_hlo {
+                    // static stats still tell the memory story
+                    let stats = zcs::hlostats::analyze(&text)?;
+                    table.row(&[
+                        strat.to_string(),
+                        m.to_string(),
+                        n.to_string(),
+                        p_ord.to_string(),
+                        stats.total_instructions.to_string(),
+                        format!("{:.2}", stats.peak_live_mib()),
+                        "(skip)".into(),
+                        "-".into(),
+                        "-".into(),
+                    ]);
+                    continue;
+                }
+                eprintln!(
+                    "  [fig2] {name} ({:.1} MB HLO): compiling...",
+                    text.len() as f64 / 1e6
+                );
+                let stats = zcs::hlostats::analyze(&text)?;
+                let exe = runtime.load(&name)?;
+                eprintln!(
+                    "  [fig2] {name}: compiled in {:.1}s, measuring",
+                    exe.compile_time.as_secs_f64()
+                );
+                let args = train_args(&exe.meta);
+                let bench = Bench {
+                    budget: std::time::Duration::from_secs_f64(budget),
+                    ..Bench::heavy()
+                };
+                let timing = bench.run(|| exe.run(&args).expect("step"));
+                table.row(&[
+                    strat.to_string(),
+                    m.to_string(),
+                    n.to_string(),
+                    p_ord.to_string(),
+                    stats.total_instructions.to_string(),
+                    format!("{:.2}", stats.peak_live_mib()),
+                    format!("{:.2}", exe.compile_time.as_secs_f64()),
+                    format!("{:.2}", timing.mean_ms()),
+                    format!("{:.1}", timing.per_1000()),
+                ]);
+            }
+        }
+        table.print();
+    }
+    Ok(())
+}
+
+/// Fixed dummy train-step inputs for a highorder artifact.
+fn train_args(meta: &ArtifactMeta) -> Vec<RunArg> {
+    let mut rng = Pcg64::seeded(7);
+    let mut args: Vec<RunArg> = Vec::new();
+    for (_, shape) in &meta.param_layout {
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = rng.normals(n).iter().map(|&v| (v * 0.05) as f32).collect();
+        args.push(RunArg::F32(HostTensor::new(shape.clone(), data)));
+    }
+    for _ in 0..2 {
+        for (_, shape) in &meta.param_layout {
+            args.push(RunArg::F32(HostTensor::zeros(shape))); // adam moments
+        }
+    }
+    args.push(RunArg::I32(0));
+    for (name, shape) in &meta.batch_schema {
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = if name.starts_with("x_") {
+            rng.uniforms_in(n, 0.0, 1.0).iter().map(|&v| v as f32).collect()
+        } else {
+            rng.normals(n).iter().map(|&v| v as f32).collect()
+        };
+        args.push(RunArg::F32(HostTensor::new(shape.clone(), data)));
+    }
+    args
+}

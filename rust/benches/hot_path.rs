@@ -1,0 +1,108 @@
+//! Hot-path micro-benchmarks for the L3 coordinator (the §Perf instrument).
+//!
+//! Measures the pieces that surround every PJRT step -- batch assembly, GP
+//! bank generation, host<->literal conversion via a tiny forward artifact,
+//! HLO parsing -- so the perf pass can verify the coordinator is not the
+//! bottleneck (DESIGN.md §6).  Run: `cargo bench --bench hot_path`.
+
+use std::rc::Rc;
+use zcs::config::RunConfig;
+use zcs::coordinator::{batch::Batcher, params::init_params};
+use zcs::pde::ProblemKind;
+use zcs::rng::Pcg64;
+use zcs::runtime::{RunArg, Runtime};
+use zcs::sampler::{FunctionBank, GpSampler1d, Kernel};
+use zcs::util::benchkit::{Bench, Table};
+
+fn main() -> anyhow::Result<()> {
+    let bench = Bench::default();
+    let mut table = Table::new(&["component", "mean", "p50", "iters"]);
+    let fmt = |s: &zcs::util::benchkit::Stats| {
+        (format!("{:.3} ms", s.mean_ms()), format!("{:.3} ms", s.p50.as_secs_f64() * 1e3))
+    };
+
+    // GP bank generation (one-time cost, amortised)
+    let stats = Bench::heavy().run(|| {
+        let sampler = GpSampler1d::new(Kernel::Rbf { length_scale: 0.2, variance: 1.0 }, 256);
+        let mut rng = Pcg64::seeded(1);
+        FunctionBank::generate(&sampler, 100, &mut rng).unwrap()
+    });
+    let (mean, p50) = fmt(&stats);
+    table.row(&["gp bank (256 grid, 100 fns)".into(), mean, p50, stats.iters.to_string()]);
+
+    // batch assembly per problem (requires artifacts for the schema)
+    if let Ok(runtime) = Runtime::open("artifacts") {
+        let runtime = Rc::new(runtime);
+        for problem in ["reaction_diffusion", "burgers", "kirchhoff", "stokes"] {
+            let name = format!("{problem}__zcs__bench.train");
+            let Ok(exe) = runtime.load(&name) else { continue };
+            let kind = ProblemKind::from_name(problem).unwrap();
+            let config = RunConfig { bank_size: 256, ..RunConfig::default() };
+            let mut rng = Pcg64::seeded(2);
+            let mut batcher = Batcher::new(kind, &exe.meta, &config, &mut rng)?;
+            let stats = bench.run(|| batcher.next_batch().unwrap());
+            let (mean, p50) = fmt(&stats);
+            table.row(&[format!("batch assembly: {problem}"), mean, p50, stats.iters.to_string()]);
+        }
+
+        // end-to-end forward (literal conversion + PJRT execute + download)
+        if let Ok(exe) = runtime.load("reaction_diffusion__forward_N256") {
+            let mut rng = Pcg64::seeded(3);
+            let params = init_params(&exe.meta.param_layout, &mut rng);
+            let m = exe.meta.inputs[exe.meta.inputs.len() - 2].shape.clone();
+            let pts = exe.meta.inputs.last().unwrap().shape.clone();
+            let mut args: Vec<RunArg> = params.into_iter().map(RunArg::F32).collect();
+            args.push(RunArg::F32(zcs::runtime::HostTensor::new(
+                m.clone(),
+                rng.normals(m.iter().product()).iter().map(|&v| v as f32).collect(),
+            )));
+            args.push(RunArg::F32(zcs::runtime::HostTensor::new(
+                pts.clone(),
+                rng.uniforms_in(pts.iter().product(), 0.0, 1.0)
+                    .iter()
+                    .map(|&v| v as f32)
+                    .collect(),
+            )));
+            let stats = bench.run(|| exe.run(&args).unwrap());
+            let (mean, p50) = fmt(&stats);
+            table.row(&["pjrt forward (incl. literals)".into(), mean, p50, stats.iters.to_string()]);
+        }
+
+        // HLO parse + liveness analysis throughput
+        if let Ok(text) = runtime.artifact_text("reaction_diffusion__zcs__bench.train") {
+            let stats = bench.run(|| zcs::hlostats::analyze(&text).unwrap());
+            let (mean, p50) = fmt(&stats);
+            table.row(&[
+                format!("hlostats analyze ({} KB)", text.len() / 1024),
+                mean,
+                p50,
+                stats.iters.to_string(),
+            ]);
+        }
+    } else {
+        eprintln!("(artifacts missing: only substrate benches run)");
+    }
+
+    // reference solvers
+    let stats = Bench::heavy().run(|| {
+        let s = zcs::solvers::ReactionDiffusionSolver::default();
+        let f: Vec<f64> = (0..s.nx).map(|i| (i as f64).sin()).collect();
+        s.solve_grid(&f)
+    });
+    let (mean, p50) = fmt(&stats);
+    table.row(&["rd solver (128x512 grid)".into(), mean, p50, stats.iters.to_string()]);
+
+    let stats = Bench::heavy().run(|| {
+        let s = zcs::solvers::StokesSolver { n: 48, max_iters: 4000, ..Default::default() };
+        let lid: Vec<f64> = (0..48).map(|i| {
+            let x = i as f64 / 47.0;
+            x * (1.0 - x)
+        }).collect();
+        s.solve(&lid)
+    });
+    let (mean, p50) = fmt(&stats);
+    table.row(&["stokes solver (48^2, 4k iters)".into(), mean, p50, stats.iters.to_string()]);
+
+    table.print();
+    Ok(())
+}

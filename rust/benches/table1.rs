@@ -1,0 +1,168 @@
+//! Table-1 reproduction: per-problem memory + staged wall time for the AD
+//! strategies, on the paper's four PDE operators.
+//!
+//! Columns mirror the paper: "Graph" memory (static live-buffer analysis of
+//! the HLO), parameter bytes, and the per-stage times -- Inputs (Rust batch
+//! assembly), Forward (the `forward_N` artifact), Loss (the `loss`
+//! artifact: forward + PDE residual), Backprop (train minus loss), Total
+//! (the full `train` artifact) -- all scaled to "per 1000 batches" like the
+//! paper.  Run: `cargo bench --bench table1 [-- --problem burgers]`.
+
+use std::rc::Rc;
+use std::time::Duration;
+use zcs::config::RunConfig;
+use zcs::coordinator::{batch::Batcher, params::init_params};
+use zcs::pde::ProblemKind;
+use zcs::rng::Pcg64;
+use zcs::runtime::{RunArg, Runtime};
+use zcs::util::benchkit::{Bench, Table};
+use zcs::util::cli::Opts;
+
+const PROBLEMS: [&str; 4] = ["reaction_diffusion", "burgers", "kirchhoff", "stokes"];
+const STRATEGIES: [&str; 4] = ["zcs", "zcs_fwd", "funcloop", "datavect"];
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let opts = Opts::new("table1", "per-problem strategy comparison (paper Table 1)")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("problem", "all", "reaction_diffusion | burgers | kirchhoff | stokes | all")
+        .opt("scale", "bench", "scale preset")
+        .opt("budget", "1", "seconds of measurement per cell")
+        .opt(
+            "max-hlo-mb",
+            "1.6",
+            "report '-' (like the paper's OOM dashes) for artifacts whose \
+             HLO exceeds this size instead of paying their multi-minute XLA \
+             compile; graph memory is still shown",
+        )
+        .switch("help", "show usage");
+    let p = opts.parse(&args)?;
+    if p.switch("help") {
+        print!("{}", opts.usage());
+        return Ok(());
+    }
+    let runtime = Rc::new(Runtime::open(p.get("artifacts"))?);
+    let scale = p.get("scale");
+    let budget = Duration::from_secs_f64(p.get_f64("budget")?);
+    let problems: Vec<&str> = match p.get("problem") {
+        "all" => PROBLEMS.to_vec(),
+        one => vec![one],
+    };
+
+    for problem in problems {
+        let kind = ProblemKind::from_name(problem)
+            .ok_or_else(|| anyhow::anyhow!("unknown problem {problem}"))?;
+        println!(
+            "\n== Table 1: {problem} (P = {}, scale = {scale}) ==",
+            kind.p_order()
+        );
+        let mut table = Table::new(&[
+            "method", "graph MiB", "peak est MiB", "inputs", "forward", "loss(PDE)",
+            "backprop", "total", "unit",
+        ]);
+        let max_hlo = (p.get_f64("max-hlo-mb")? * 1e6) as usize;
+        for strat in STRATEGIES {
+            let train_name = format!("{problem}__{strat}__{scale}.train");
+            let loss_name = format!("{problem}__{strat}__{scale}.loss");
+            if !runtime.manifest.artifacts.contains_key(&train_name) {
+                // mirror the paper's "-" rows (DataVect OOM on the big cases)
+                table.row(&[
+                    strat.into(), "-".into(), "-".into(), "-".into(), "-".into(),
+                    "-".into(), "-".into(), "-".into(), "".into(),
+                ]);
+                continue;
+            }
+            let text = runtime.artifact_text(&train_name)?;
+            let stats = zcs::hlostats::analyze(&text)?;
+            if text.len() > max_hlo {
+                // compile-time blow-up: report graph stats, dash the timings
+                // (the in-testbed analogue of the paper's OOM dashes)
+                table.row(&[
+                    strat.to_string(),
+                    format!("{:.2}", stats.peak_live_mib()),
+                    format!(
+                        "{:.2}",
+                        (stats.peak_live_bytes + stats.parameter_bytes) as f64 / 1048576.0
+                    ),
+                    "-".into(), "-".into(), "-".into(), "-".into(), "-".into(),
+                    format!("(skip: {:.1} MB HLO)", text.len() as f64 / 1e6),
+                ]);
+                continue;
+            }
+            eprintln!("  [table1] {train_name}: compiling + measuring");
+            let train = runtime.load(&train_name)?;
+            let loss = runtime.load(&loss_name)?;
+            let meta = train.meta.clone();
+            let np = meta.n_params;
+
+            // shared state + batch
+            let config = RunConfig {
+                problem: problem.into(),
+                strategy: strat.into(),
+                bank_size: 64,
+                ..RunConfig::default()
+            };
+            let mut rng = Pcg64::seeded(config.seed);
+            let mut batcher = Batcher::new(kind, &meta, &config, &mut rng)?;
+            let params = init_params(&meta.param_layout, &mut rng);
+            let zeros: Vec<_> =
+                params.iter().map(|t| zcs::runtime::HostTensor::zeros(&t.dims)).collect();
+            let batch = batcher.next_batch()?;
+
+            let bench = Bench { budget, ..Bench::heavy() };
+            // Inputs: batch generation only
+            let t_inputs = bench.run(|| batcher.next_batch().expect("batch"));
+
+            // Forward: the plain forward at the interior points
+            let fwd_name = format!("{problem}__forward_N{}", meta.n);
+            let t_forward = if runtime.manifest.artifacts.contains_key(&fwd_name) {
+                let fwd = runtime.load(&fwd_name)?;
+                let mut fargs: Vec<RunArg> =
+                    params.iter().cloned().map(RunArg::F32).collect();
+                fargs.push(batch[0].clone()); // p
+                fargs.push(batch[1].clone()); // x_in
+                Some(bench.run(move || fwd.run(&fargs).expect("fwd")))
+            } else {
+                None
+            };
+
+            // Loss: forward + physics residual
+            let mut largs: Vec<RunArg> = params.iter().cloned().map(RunArg::F32).collect();
+            largs.extend(batch.iter().cloned());
+            let t_loss = bench.run(|| loss.run(&largs).expect("loss"));
+
+            // Total: the full train step
+            let mut targs: Vec<RunArg> = Vec::new();
+            targs.extend(params.iter().cloned().map(RunArg::F32));
+            targs.extend(zeros.iter().cloned().map(RunArg::F32));
+            targs.extend(zeros.iter().cloned().map(RunArg::F32));
+            targs.push(RunArg::I32(0));
+            targs.extend(batch.iter().cloned());
+            let t_total = bench.run(|| train.run(&targs).expect("train"));
+            let _ = np;
+
+            let backprop = (t_total.mean.as_secs_f64() - t_loss.mean.as_secs_f64()).max(0.0);
+            table.row(&[
+                strat.to_string(),
+                format!("{:.2}", stats.peak_live_mib()),
+                format!(
+                    "{:.2}",
+                    (stats.peak_live_bytes + stats.parameter_bytes) as f64 / 1048576.0
+                ),
+                format!("{:.1}", t_inputs.per_1000()),
+                t_forward
+                    .map(|t| format!("{:.1}", t.per_1000()))
+                    .unwrap_or_else(|| "-".into()),
+                format!("{:.1}", t_loss.per_1000()),
+                format!("{:.1}", backprop * 1000.0),
+                format!("{:.1}", t_total.per_1000()),
+                "s/1000 batches".into(),
+            ]);
+        }
+        table.print();
+    }
+    println!(
+        "\n(relative validation errors come from `zcs train --validate`; see EXPERIMENTS.md)"
+    );
+    Ok(())
+}

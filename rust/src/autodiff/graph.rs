@@ -1,0 +1,459 @@
+//! Expression-graph reverse-mode AD with nested differentiation.
+//!
+//! Nodes are immutable; [`Graph::grad`] appends the adjoint computation to
+//! the same graph and returns the gradient node ids, so gradients are
+//! first-class expressions that can be differentiated again (how the
+//! higher-order z-chains of ZCS are built).  Node count == graph size.
+
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+
+pub type NodeId = usize;
+
+/// Primitive operations (just enough for DeepONet-style networks).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Op {
+    /// leaf supplied at eval time
+    Input,
+    /// embedded constant
+    Const(Tensor),
+    /// elementwise a + b (same shape)
+    Add,
+    /// elementwise a - b
+    Sub,
+    /// elementwise a * b (same shape)
+    Mul,
+    /// scalar-node times tensor-node: (scalar, tensor)
+    ScaleBy,
+    /// constant scale
+    Scale(f64),
+    /// tanh
+    Tanh,
+    /// broadcast a scalar (shape []) to `shape`
+    Broadcast(Vec<usize>),
+    /// reduce-sum everything to a scalar
+    SumAll,
+    /// (m,k) x (n,k) -> (m,n): A B^T -- the DeepONet combine
+    MatMulNT,
+    /// (m,k) matmul (k,n) -> (m,n)
+    MatMul,
+    /// matrix transpose
+    Transpose,
+}
+
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub op: Op,
+    pub inputs: Vec<NodeId>,
+    pub shape: Vec<usize>,
+}
+
+/// The expression graph (a growing tape).
+#[derive(Default)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+}
+
+impl Graph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn shape(&self, id: NodeId) -> &[usize] {
+        &self.nodes[id].shape
+    }
+
+    fn push(&mut self, op: Op, inputs: Vec<NodeId>, shape: Vec<usize>) -> NodeId {
+        self.nodes.push(Node { op, inputs, shape });
+        self.nodes.len() - 1
+    }
+
+    // -- constructors --------------------------------------------------------
+
+    pub fn input(&mut self, shape: &[usize]) -> NodeId {
+        self.push(Op::Input, vec![], shape.to_vec())
+    }
+
+    pub fn constant(&mut self, t: Tensor) -> NodeId {
+        let shape = t.shape().to_vec();
+        self.push(Op::Const(t), vec![], shape)
+    }
+
+    pub fn add(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        assert_eq!(self.shape(a), self.shape(b), "add shapes");
+        let shape = self.shape(a).to_vec();
+        self.push(Op::Add, vec![a, b], shape)
+    }
+
+    pub fn sub(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        assert_eq!(self.shape(a), self.shape(b), "sub shapes");
+        let shape = self.shape(a).to_vec();
+        self.push(Op::Sub, vec![a, b], shape)
+    }
+
+    pub fn mul(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        assert_eq!(self.shape(a), self.shape(b), "mul shapes");
+        let shape = self.shape(a).to_vec();
+        self.push(Op::Mul, vec![a, b], shape)
+    }
+
+    pub fn scale_by(&mut self, scalar: NodeId, tensor: NodeId) -> NodeId {
+        assert!(self.shape(scalar).is_empty(), "ScaleBy wants a scalar first arg");
+        let shape = self.shape(tensor).to_vec();
+        self.push(Op::ScaleBy, vec![scalar, tensor], shape)
+    }
+
+    pub fn scale(&mut self, a: NodeId, c: f64) -> NodeId {
+        let shape = self.shape(a).to_vec();
+        self.push(Op::Scale(c), vec![a], shape)
+    }
+
+    pub fn tanh(&mut self, a: NodeId) -> NodeId {
+        let shape = self.shape(a).to_vec();
+        self.push(Op::Tanh, vec![a], shape)
+    }
+
+    pub fn broadcast(&mut self, scalar: NodeId, shape: &[usize]) -> NodeId {
+        assert!(self.shape(scalar).is_empty(), "broadcast wants a scalar");
+        self.push(Op::Broadcast(shape.to_vec()), vec![scalar], shape.to_vec())
+    }
+
+    pub fn sum_all(&mut self, a: NodeId) -> NodeId {
+        self.push(Op::SumAll, vec![a], vec![])
+    }
+
+    pub fn matmul_nt(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        let (sa, sb) = (self.shape(a).to_vec(), self.shape(b).to_vec());
+        assert_eq!(sa.len(), 2);
+        assert_eq!(sb.len(), 2);
+        assert_eq!(sa[1], sb[1], "matmul_nt contraction");
+        self.push(Op::MatMulNT, vec![a, b], vec![sa[0], sb[0]])
+    }
+
+    pub fn matmul(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        let (sa, sb) = (self.shape(a).to_vec(), self.shape(b).to_vec());
+        assert_eq!(sa[1], sb[0], "matmul contraction");
+        self.push(Op::MatMul, vec![a, b], vec![sa[0], sb[1]])
+    }
+
+    // -- evaluation ------------------------------------------------------------
+
+    /// Evaluate `target` with leaf values; memoised over the whole graph.
+    pub fn eval(&self, target: NodeId, inputs: &HashMap<NodeId, Tensor>) -> Tensor {
+        let mut memo: HashMap<NodeId, Tensor> = HashMap::new();
+        self.eval_memo(target, inputs, &mut memo)
+    }
+
+    fn eval_memo(
+        &self,
+        id: NodeId,
+        inputs: &HashMap<NodeId, Tensor>,
+        memo: &mut HashMap<NodeId, Tensor>,
+    ) -> Tensor {
+        if let Some(t) = memo.get(&id) {
+            return t.clone();
+        }
+        let node = &self.nodes[id];
+        let get = |g: &Self, i: usize, inputs: &HashMap<NodeId, Tensor>, memo: &mut HashMap<NodeId, Tensor>| {
+            g.eval_memo(node.inputs[i], inputs, memo)
+        };
+        let out = match &node.op {
+            Op::Input => inputs
+                .get(&id)
+                .unwrap_or_else(|| panic!("missing input for node {id}"))
+                .clone(),
+            Op::Const(t) => t.clone(),
+            Op::Add => &get(self, 0, inputs, memo) + &get(self, 1, inputs, memo),
+            Op::Sub => &get(self, 0, inputs, memo) - &get(self, 1, inputs, memo),
+            Op::Mul => &get(self, 0, inputs, memo) * &get(self, 1, inputs, memo),
+            Op::ScaleBy => {
+                let s = get(self, 0, inputs, memo).data()[0];
+                get(self, 1, inputs, memo).scale(s)
+            }
+            Op::Scale(c) => get(self, 0, inputs, memo).scale(*c),
+            Op::Tanh => get(self, 0, inputs, memo).map(f64::tanh),
+            Op::Broadcast(shape) => {
+                let v = get(self, 0, inputs, memo).data()[0];
+                Tensor::full(shape, v)
+            }
+            Op::SumAll => {
+                let t = get(self, 0, inputs, memo);
+                Tensor::new(&[], vec![t.data().iter().sum()])
+            }
+            Op::MatMulNT => {
+                let a = get(self, 0, inputs, memo);
+                let b = get(self, 1, inputs, memo);
+                a.matmul(&b.transpose())
+            }
+            Op::MatMul => {
+                let a = get(self, 0, inputs, memo);
+                let b = get(self, 1, inputs, memo);
+                a.matmul(&b)
+            }
+            Op::Transpose => get(self, 0, inputs, memo).transpose(),
+        };
+        memo.insert(id, out.clone());
+        out
+    }
+
+    // -- differentiation --------------------------------------------------------
+
+    /// Reverse-mode gradient of scalar `root` w.r.t. each node in `wrt`.
+    ///
+    /// Appends adjoint nodes to the graph (so the result is differentiable
+    /// again) and returns the gradient node ids, aligned with `wrt`.
+    pub fn grad(&mut self, root: NodeId, wrt: &[NodeId]) -> Vec<NodeId> {
+        assert!(self.shape(root).is_empty(), "grad root must be scalar");
+        // adjoint accumulation: node -> adjoint node id
+        let mut adjoint: HashMap<NodeId, NodeId> = HashMap::new();
+        let one = self.constant(Tensor::new(&[], vec![1.0]));
+        adjoint.insert(root, one);
+
+        // reverse sweep over ids <= root (the graph is topologically ordered
+        // by construction; nodes appended by this sweep have larger ids and
+        // are never revisited)
+        for id in (0..=root).rev() {
+            let Some(&g) = adjoint.get(&id) else { continue };
+            let node = self.nodes[id].clone();
+            match node.op {
+                Op::Input | Op::Const(_) => {}
+                Op::Add => {
+                    self.accumulate(&mut adjoint, node.inputs[0], g);
+                    self.accumulate(&mut adjoint, node.inputs[1], g);
+                }
+                Op::Sub => {
+                    self.accumulate(&mut adjoint, node.inputs[0], g);
+                    let neg = self.scale(g, -1.0);
+                    self.accumulate(&mut adjoint, node.inputs[1], neg);
+                }
+                Op::Mul => {
+                    let (a, b) = (node.inputs[0], node.inputs[1]);
+                    let ga = self.mul(g, b);
+                    let gb = self.mul(g, a);
+                    self.accumulate(&mut adjoint, a, ga);
+                    self.accumulate(&mut adjoint, b, gb);
+                }
+                Op::ScaleBy => {
+                    let (s, t) = (node.inputs[0], node.inputs[1]);
+                    // d/ds = sum(g * t); d/dt = s * g
+                    let gt_prod = self.mul(g, t);
+                    let gs = self.sum_all(gt_prod);
+                    let gt = self.scale_by(s, g);
+                    self.accumulate(&mut adjoint, s, gs);
+                    self.accumulate(&mut adjoint, t, gt);
+                }
+                Op::Scale(c) => {
+                    let ga = self.scale(g, c);
+                    self.accumulate(&mut adjoint, node.inputs[0], ga);
+                }
+                Op::Tanh => {
+                    // d tanh = 1 - tanh^2; rebuild tanh(x) as a node so the
+                    // derivative remains differentiable
+                    let x = node.inputs[0];
+                    let y = self.tanh(x);
+                    let y2 = self.mul(y, y);
+                    let ones = self.constant(Tensor::full(&node.shape, 1.0));
+                    let sech2 = self.sub(ones, y2);
+                    let ga = self.mul(g, sech2);
+                    self.accumulate(&mut adjoint, x, ga);
+                }
+                Op::Broadcast(_) => {
+                    let gs = self.sum_all(g);
+                    self.accumulate(&mut adjoint, node.inputs[0], gs);
+                }
+                Op::SumAll => {
+                    let shape = self.shape(node.inputs[0]).to_vec();
+                    let gb = self.broadcast(g, &shape);
+                    self.accumulate(&mut adjoint, node.inputs[0], gb);
+                }
+                Op::MatMulNT => {
+                    // C = A B^T: dA = G B; dB = G^T A
+                    let (a, b) = (node.inputs[0], node.inputs[1]);
+                    let ga = self.matmul(g, b);
+                    let gt = self.transpose_of(g);
+                    let gb = self.matmul(gt, a);
+                    self.accumulate(&mut adjoint, a, ga);
+                    self.accumulate(&mut adjoint, b, gb);
+                }
+                Op::MatMul => {
+                    // C = A B: dA = G B^T (= matmul_nt(G, B)); dB = A^T G
+                    let (a, b) = (node.inputs[0], node.inputs[1]);
+                    let ga = self.matmul_nt(g, b);
+                    let at = self.transpose_of(a);
+                    let gb = self.matmul(at, g);
+                    self.accumulate(&mut adjoint, a, ga);
+                    self.accumulate(&mut adjoint, b, gb);
+                }
+                Op::Transpose => {
+                    let gt = self.transpose_of(g);
+                    self.accumulate(&mut adjoint, node.inputs[0], gt);
+                }
+            }
+        }
+        wrt.iter()
+            .map(|&w| {
+                adjoint.get(&w).copied().unwrap_or_else(|| {
+                    let shape = self.shape(w).to_vec();
+                    self.constant(Tensor::zeros(&shape))
+                })
+            })
+            .collect()
+    }
+
+    fn accumulate(&mut self, adjoint: &mut HashMap<NodeId, NodeId>, node: NodeId, g: NodeId) {
+        match adjoint.get(&node) {
+            Some(&existing) => {
+                let summed = self.add(existing, g);
+                adjoint.insert(node, summed);
+            }
+            None => {
+                adjoint.insert(node, g);
+            }
+        }
+    }
+
+    /// Matrix transpose node (used by the MatMul vjp, public for callers too).
+    pub fn transpose_of(&mut self, a: NodeId) -> NodeId {
+        let s = self.shape(a).to_vec();
+        assert_eq!(s.len(), 2);
+        self.push(Op::Transpose, vec![a], vec![s[1], s[0]])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scalar(v: f64) -> Tensor {
+        Tensor::new(&[], vec![v])
+    }
+
+    #[test]
+    fn eval_basic_expression() {
+        let mut g = Graph::new();
+        let x = g.input(&[2]);
+        let y = g.input(&[2]);
+        let s = g.add(x, y);
+        let p = g.mul(s, s);
+        let out = g.sum_all(p);
+        let mut inputs = HashMap::new();
+        inputs.insert(x, Tensor::vec1(vec![1.0, 2.0]));
+        inputs.insert(y, Tensor::vec1(vec![3.0, 4.0]));
+        let v = g.eval(out, &inputs);
+        assert_eq!(v.data(), &[16.0 + 36.0]);
+    }
+
+    #[test]
+    fn grad_of_square() {
+        // d/dx sum((x)^2) = 2x
+        let mut g = Graph::new();
+        let x = g.input(&[3]);
+        let p = g.mul(x, x);
+        let out = g.sum_all(p);
+        let gx = g.grad(out, &[x])[0];
+        let mut inputs = HashMap::new();
+        inputs.insert(x, Tensor::vec1(vec![1.0, -2.0, 0.5]));
+        let v = g.eval(gx, &inputs);
+        assert_eq!(v.data(), &[2.0, -4.0, 1.0]);
+    }
+
+    #[test]
+    fn second_order_via_regrad() {
+        // f = sum(tanh(x)); f'' = -2 tanh (1 - tanh^2)
+        let mut g = Graph::new();
+        let x = g.input(&[1]);
+        let t = g.tanh(x);
+        let f = g.sum_all(t);
+        let g1 = g.grad(f, &[x])[0];
+        let g1s = g.sum_all(g1);
+        let g2 = g.grad(g1s, &[x])[0];
+        let mut inputs = HashMap::new();
+        inputs.insert(x, Tensor::vec1(vec![0.7]));
+        let v = g.eval(g2, &inputs).data()[0];
+        let th: f64 = 0.7f64.tanh();
+        let want = -2.0 * th * (1.0 - th * th);
+        assert!((v - want).abs() < 1e-12, "{v} vs {want}");
+    }
+
+    #[test]
+    fn matmul_nt_grad_matches_fd() {
+        let mut g = Graph::new();
+        let a = g.input(&[2, 3]);
+        let b = g.input(&[4, 3]);
+        let c = g.matmul_nt(a, b);
+        let cc = g.mul(c, c);
+        let out = g.sum_all(cc);
+        let grads = g.grad(out, &[a, b]);
+        let mut rng = crate::rng::Pcg64::seeded(8);
+        let av = Tensor::new(&[2, 3], rng.normals(6));
+        let bv = Tensor::new(&[4, 3], rng.normals(12));
+        let mut inputs = HashMap::new();
+        inputs.insert(a, av.clone());
+        inputs.insert(b, bv.clone());
+        let ga = g.eval(grads[0], &inputs);
+        // finite difference on a[0,1]
+        let h = 1e-6;
+        let f = |aa: &Tensor| -> f64 {
+            let mut inp = inputs.clone();
+            inp.insert(a, aa.clone());
+            g.eval(out, &inp).data()[0]
+        };
+        let mut ap = av.clone();
+        ap.data_mut()[1] += h;
+        let mut am = av.clone();
+        am.data_mut()[1] -= h;
+        let fd = (f(&ap) - f(&am)) / (2.0 * h);
+        assert!((ga.data()[1] - fd).abs() < 1e-5, "{} vs {fd}", ga.data()[1]);
+    }
+
+    #[test]
+    fn broadcast_scalar_leaf_grad_sums() {
+        // f = sum((x + z)^2) with z scalar broadcast: df/dz = sum 2(x+z)
+        let mut g = Graph::new();
+        let x = g.input(&[4]);
+        let z = g.input(&[]);
+        let zb = g.broadcast(z, &[4]);
+        let s = g.add(x, zb);
+        let p = g.mul(s, s);
+        let f = g.sum_all(p);
+        let gz = g.grad(f, &[z])[0];
+        let mut inputs = HashMap::new();
+        inputs.insert(x, Tensor::vec1(vec![1.0, 2.0, 3.0, 4.0]));
+        inputs.insert(z, scalar(0.5));
+        let v = g.eval(gz, &inputs).data()[0];
+        let want: f64 = [1.5, 2.5, 3.5, 4.5].iter().map(|v| 2.0 * v).sum();
+        assert!((v - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grad_of_unused_leaf_is_zero() {
+        let mut g = Graph::new();
+        let x = g.input(&[2]);
+        let y = g.input(&[2]);
+        let f = g.sum_all(x);
+        let gy = g.grad(f, &[y])[0];
+        let mut inputs = HashMap::new();
+        inputs.insert(x, Tensor::vec1(vec![1.0, 1.0]));
+        inputs.insert(y, Tensor::vec1(vec![5.0, 5.0]));
+        assert_eq!(g.eval(gy, &inputs).data(), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn node_count_grows_with_grad() {
+        let mut g = Graph::new();
+        let x = g.input(&[2]);
+        let t = g.tanh(x);
+        let f = g.sum_all(t);
+        let before = g.len();
+        g.grad(f, &[x]);
+        assert!(g.len() > before);
+    }
+}

@@ -1,0 +1,20 @@
+//! Native tape autodiff: the paper's graph-size argument, demonstrable
+//! without XLA in the loop.
+//!
+//! A tiny expression-graph reverse-mode AD engine over [`crate::tensor::Tensor`]s.
+//! Differentiation *adds adjoint nodes to the same graph* (tape-of-tape), so
+//! it nests to arbitrary order and -- crucially for this reproduction -- the
+//! node count is an exact, inspectable measure of computational-graph size,
+//! the quantity the paper's Figure 2 / Table 1 "Graph" memory tracks.
+//!
+//! [`zcs_demo`] builds DeepONet-style forwards under the three AD
+//! strategies of the paper and exposes their graph sizes; `propkit`
+//! property tests pin the equivalences of eqs. (7), (10) and (11) and the
+//! "ZCS graph is M-invariant" claim natively (see `rust/benches/zcs_native.rs`
+//! for the quantitative sweep).
+
+pub mod graph;
+pub mod zcs_demo;
+
+pub use graph::{Graph, NodeId, Op};
+pub use zcs_demo::{DemoNet, Strategy};

@@ -1,0 +1,297 @@
+//! The paper's three AD strategies on the native tape engine.
+//!
+//! A miniature DeepONet (`u_ij = branch(p_i) . trunk(x_j)`, tanh MLPs)
+//! is differentiated w.r.t. coordinates under:
+//!
+//! * **FuncLoop** (eq. 4) -- M separate reverse passes, graph grows O(M);
+//! * **DataVect** (eq. 5) -- coordinates tiled M-fold, graph grows O(M)
+//!   at the leaf end;
+//! * **ZCS** (eq. 10) -- one scalar leaf z + dummy a; graph stays O(1) in M.
+//!
+//! Because the tape engine counts nodes exactly, this module turns the
+//! paper's central memory claim into a unit-testable statement --
+//! `rust/benches/zcs_native.rs` prints the quantitative sweep and
+//! `rust/tests/zcs_native_props.rs` property-tests the equivalences.
+
+use super::graph::{Graph, NodeId};
+use crate::rng::Pcg64;
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+
+/// AD strategy selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    FuncLoop,
+    DataVect,
+    Zcs,
+}
+
+/// A miniature DeepONet with fixed weights (1-D coordinates).
+pub struct DemoNet {
+    /// branch: q -> k (one tanh layer then linear combine weights)
+    pub wb: Tensor, // (q, h)
+    pub wb2: Tensor, // (h, k)
+    /// trunk: 1 -> k
+    pub wt: Tensor, // (1, h)
+    pub wt2: Tensor, // (h, k)
+}
+
+impl DemoNet {
+    pub fn random(q: usize, h: usize, k: usize, rng: &mut Pcg64) -> Self {
+        let mk = |r: usize, c: usize, rng: &mut Pcg64| {
+            Tensor::new(&[r, c], rng.normals(r * c)).scale(1.0 / (r as f64).sqrt())
+        };
+        Self {
+            wb: mk(q, h, rng),
+            wb2: mk(h, k, rng),
+            wt: mk(1, h, rng),
+            wt2: mk(h, k, rng),
+        }
+    }
+
+    /// Branch features: tanh(p Wb) Wb2 -> (m, k).
+    fn branch(&self, g: &mut Graph, p: NodeId) -> NodeId {
+        let wb = g.constant(self.wb.clone());
+        let wb2 = g.constant(self.wb2.clone());
+        let h = g.matmul(p, wb);
+        let a = g.tanh(h);
+        g.matmul(a, wb2)
+    }
+
+    /// Trunk features: tanh(x Wt) Wt2 -> (n, k); `x` is (n, 1).
+    fn trunk(&self, g: &mut Graph, x: NodeId) -> NodeId {
+        let wt = g.constant(self.wt.clone());
+        let wt2 = g.constant(self.wt2.clone());
+        let h = g.matmul(x, wt);
+        let a = g.tanh(h);
+        g.matmul(a, wt2)
+    }
+}
+
+/// Result of building one derivative computation.
+pub struct BuiltDerivative {
+    pub graph: Graph,
+    /// node holding du/dx of shape (m, n) -- or per-function rows for FuncLoop
+    pub outputs: Vec<NodeId>,
+    /// leaf ids to feed: (p, x, extras...)
+    pub p: NodeId,
+    pub x: NodeId,
+    /// extra leaf values the caller must supply (z and a for ZCS)
+    pub extra_inputs: Vec<(NodeId, Tensor)>,
+}
+
+/// Build `du_ij/dx_j` (first order) under the chosen strategy.
+///
+/// Leaves: `p` of shape (m, q); `x` of shape (n, 1).
+pub fn build_first_derivative(
+    net: &DemoNet,
+    strategy: Strategy,
+    m: usize,
+    n: usize,
+    q: usize,
+) -> BuiltDerivative {
+    let mut g = Graph::new();
+    match strategy {
+        Strategy::Zcs => {
+            let p = g.input(&[m, q]);
+            let x = g.input(&[n, 1]);
+            // eq. (6): shift every coordinate by the scalar leaf z
+            let z = g.input(&[]);
+            let zb = g.broadcast(z, &[n, 1]);
+            let xz = g.add(x, zb);
+            let b = net.branch(&mut g, p);
+            let t = net.trunk(&mut g, xz);
+            let u = g.matmul_nt(b, t); // (m, n)
+            // eq. (9): omega = sum a * u
+            let a = g.input(&[m, n]);
+            let au = g.mul(a, u);
+            let omega = g.sum_all(au);
+            // eq. (10): du/dx = d/da (d omega / dz)
+            let dz = g.grad(omega, &[z])[0];
+            let da = g.grad(dz, &[a])[0]; // (m, n)
+            BuiltDerivative {
+                p,
+                x,
+                extra_inputs: vec![
+                    (z, Tensor::new(&[], vec![0.0])),
+                    (a, Tensor::full(&[m, n], 1.0)),
+                ],
+                outputs: vec![da],
+                graph: g,
+            }
+        }
+        Strategy::FuncLoop => {
+            let p = g.input(&[m, q]);
+            let x = g.input(&[n, 1]);
+            let t = net.trunk(&mut g, x); // shared forward
+            let b = net.branch(&mut g, p);
+            let u = g.matmul_nt(b, t); // (m, n)
+            // eq. (4): one reverse pass per function i
+            let mut outputs = Vec::with_capacity(m);
+            for i in 0..m {
+                // select row i via a constant one-hot: e_i^T U -> (1, n)
+                let mut e = Tensor::zeros(&[1, m]);
+                e.data_mut()[i] = 1.0;
+                let ei = g.constant(e);
+                let row = g.matmul(ei, u); // (1, n)
+                let root = g.sum_all(row);
+                let dx = g.grad(root, &[x])[0]; // (n, 1) -- pointwise du_i/dx
+                outputs.push(dx);
+            }
+            BuiltDerivative { p, x, extra_inputs: vec![], outputs, graph: g }
+        }
+        Strategy::DataVect => {
+            // eq. (5): tile p and x to m*n pointwise rows
+            let p = g.input(&[m, q]);
+            let x = g.input(&[n, 1]);
+            // tiling matrices as constants: P_hat = R_p P (mn, q), X_hat = R_x X
+            let mut rp = Tensor::zeros(&[m * n, m]);
+            let mut rx = Tensor::zeros(&[m * n, n]);
+            for i in 0..m {
+                for j in 0..n {
+                    rp.data_mut()[(i * n + j) * m + i] = 1.0;
+                    rx.data_mut()[(i * n + j) * n + j] = 1.0;
+                }
+            }
+            let rp = g.constant(rp);
+            let rx = g.constant(rx);
+            let ph = g.matmul(rp, p); // (mn, q) -- the leaf-end duplication
+            let xh = g.matmul(rx, x); // (mn, 1)
+            let b = net.branch(&mut g, ph); // (mn, k)
+            let t = net.trunk(&mut g, xh); // (mn, k)
+            let bt = g.mul(b, t);
+            // row-sum via matmul with ones: (mn, k)(k,1) -> (mn,1)
+            let k = net.wb2.shape()[1];
+            let ones = g.constant(Tensor::full(&[k, 1], 1.0));
+            let u_rows = g.matmul(bt, ones); // (mn, 1)
+            let root = g.sum_all(u_rows);
+            let dxh = g.grad(root, &[xh])[0]; // (mn, 1) pointwise derivative
+            BuiltDerivative { p, x, extra_inputs: vec![], outputs: vec![dxh], graph: g }
+        }
+    }
+}
+
+/// Evaluate a built derivative into a flat (m*n) row-major vector.
+pub fn eval_derivative(
+    built: &BuiltDerivative,
+    p: &Tensor,
+    x: &Tensor,
+    m: usize,
+    n: usize,
+) -> Vec<f64> {
+    let mut inputs: HashMap<NodeId, Tensor> = HashMap::new();
+    inputs.insert(built.p, p.clone());
+    inputs.insert(built.x, x.clone());
+    for (id, t) in &built.extra_inputs {
+        inputs.insert(*id, t.clone());
+    }
+    match built.outputs.len() {
+        1 => {
+            let out = built.graph.eval(built.outputs[0], &inputs);
+            // (m, n) for zcs; (mn, 1) for datavect -- both flatten row-major
+            assert_eq!(out.len(), m * n);
+            out.into_data()
+        }
+        _ => {
+            // funcloop: one (n, 1) row per function
+            let mut flat = Vec::with_capacity(m * n);
+            for &o in &built.outputs {
+                flat.extend(built.graph.eval(o, &inputs).into_data());
+            }
+            flat
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup(m: usize, n: usize) -> (DemoNet, Tensor, Tensor) {
+        let mut rng = Pcg64::seeded(42);
+        let net = DemoNet::random(3, 8, 4, &mut rng);
+        let p = Tensor::new(&[m, 3], rng.normals(m * 3));
+        let x = Tensor::new(&[n, 1], rng.uniforms_in(n, 0.0, 1.0));
+        (net, p, x)
+    }
+
+    #[test]
+    fn all_strategies_agree() {
+        let (m, n) = (3, 5);
+        let (net, p, x) = setup(m, n);
+        let base = {
+            let b = build_first_derivative(&net, Strategy::Zcs, m, n, 3);
+            eval_derivative(&b, &p, &x, m, n)
+        };
+        for strat in [Strategy::FuncLoop, Strategy::DataVect] {
+            let b = build_first_derivative(&net, strat, m, n, 3);
+            let got = eval_derivative(&b, &p, &x, m, n);
+            for (a, c) in base.iter().zip(&got) {
+                assert!((a - c).abs() < 1e-9, "{strat:?}: {a} vs {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn zcs_matches_finite_difference() {
+        let (m, n) = (2, 4);
+        let (net, p, x) = setup(m, n);
+        let b = build_first_derivative(&net, Strategy::Zcs, m, n, 3);
+        let got = eval_derivative(&b, &p, &x, m, n);
+        // FD on x_j for u_0j: rebuild plain forward
+        let h = 1e-6;
+        let fwd = |xv: &Tensor| -> Tensor {
+            let mut g = Graph::new();
+            let pi = g.input(&[m, 3]);
+            let xi = g.input(&[n, 1]);
+            let bb = net.branch(&mut g, pi);
+            let tt = net.trunk(&mut g, xi);
+            let u = g.matmul_nt(bb, tt);
+            let mut inputs = HashMap::new();
+            inputs.insert(pi, p.clone());
+            inputs.insert(xi, xv.clone());
+            g.eval(u, &inputs)
+        };
+        for j in 0..n {
+            let mut xp = x.clone();
+            xp.data_mut()[j] += h;
+            let mut xm = x.clone();
+            xm.data_mut()[j] -= h;
+            let up = fwd(&xp);
+            let um = fwd(&xm);
+            for i in 0..m {
+                let fd = (up.at2(i, j) - um.at2(i, j)) / (2.0 * h);
+                let a = got[i * n + j];
+                assert!((a - fd).abs() < 1e-5, "({i},{j}): {a} vs {fd}");
+            }
+        }
+    }
+
+    #[test]
+    fn zcs_graph_size_is_m_invariant() {
+        let sizes: Vec<usize> = [1, 4, 16]
+            .iter()
+            .map(|&m| {
+                let mut rng = Pcg64::seeded(1);
+                let net = DemoNet::random(3, 8, 4, &mut rng);
+                build_first_derivative(&net, Strategy::Zcs, m, 6, 3).graph.len()
+            })
+            .collect();
+        assert_eq!(sizes[0], sizes[1]);
+        assert_eq!(sizes[1], sizes[2]);
+    }
+
+    #[test]
+    fn funcloop_graph_size_grows_linearly_with_m() {
+        let count = |m: usize| {
+            let mut rng = Pcg64::seeded(1);
+            let net = DemoNet::random(3, 8, 4, &mut rng);
+            build_first_derivative(&net, Strategy::FuncLoop, m, 6, 3).graph.len()
+        };
+        let (c1, c2, c4) = (count(2), count(4), count(8));
+        // linear growth: doubling M roughly doubles the added nodes
+        let d1 = c2 - c1;
+        let d2 = c4 - c2;
+        assert!(d2 >= 2 * d1 - 4 && d2 <= 2 * d1 + 4, "{c1} {c2} {c4}");
+    }
+}

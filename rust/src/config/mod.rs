@@ -1,0 +1,149 @@
+//! Configuration: a minimal-TOML parser + the typed run configuration.
+//!
+//! Training runs are driven either from CLI flags or from a config file in
+//! a TOML subset (tables, `key = value` with strings / numbers / booleans /
+//! flat arrays, `#` comments) -- enough for `configs/*.toml` without an
+//! external dependency.
+
+mod toml;
+
+pub use toml::{parse_toml, TomlError, TomlValue};
+
+use anyhow::{bail, Result};
+
+/// One training run, fully specified.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunConfig {
+    pub problem: String,
+    pub strategy: String,
+    pub scale: String,
+    pub steps: usize,
+    pub seed: u64,
+    pub log_every: usize,
+    /// functions in the pre-generated bank
+    pub bank_size: usize,
+    /// fine-grid resolution of the GP bank
+    pub bank_grid: usize,
+    /// validate against the reference solver after training
+    pub validate: bool,
+    /// how many bank functions to validate on
+    pub validate_functions: usize,
+    pub artifact_dir: String,
+    pub checkpoint: Option<String>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            problem: "reaction_diffusion".into(),
+            strategy: "zcs".into(),
+            scale: "bench".into(),
+            steps: 200,
+            seed: 20230923,
+            log_every: 20,
+            bank_size: 1000,
+            bank_grid: 256,
+            validate: false,
+            validate_functions: 8,
+            artifact_dir: "artifacts".into(),
+            checkpoint: None,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a TOML file: top-level keys plus an optional `[train]` table.
+    pub fn from_toml_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let root = parse_toml(&text)?;
+        let mut cfg = Self::default();
+        let mut apply = |tv: &std::collections::BTreeMap<String, TomlValue>| -> Result<()> {
+            for (k, v) in tv {
+                match (k.as_str(), v) {
+                    ("problem", TomlValue::Str(s)) => cfg.problem = s.clone(),
+                    ("strategy", TomlValue::Str(s)) => cfg.strategy = s.clone(),
+                    ("scale", TomlValue::Str(s)) => cfg.scale = s.clone(),
+                    ("steps", TomlValue::Int(i)) => cfg.steps = *i as usize,
+                    ("seed", TomlValue::Int(i)) => cfg.seed = *i as u64,
+                    ("log_every", TomlValue::Int(i)) => cfg.log_every = *i as usize,
+                    ("bank_size", TomlValue::Int(i)) => cfg.bank_size = *i as usize,
+                    ("bank_grid", TomlValue::Int(i)) => cfg.bank_grid = *i as usize,
+                    ("validate", TomlValue::Bool(b)) => cfg.validate = *b,
+                    ("validate_functions", TomlValue::Int(i)) => {
+                        cfg.validate_functions = *i as usize
+                    }
+                    ("artifact_dir", TomlValue::Str(s)) => cfg.artifact_dir = s.clone(),
+                    ("checkpoint", TomlValue::Str(s)) => cfg.checkpoint = Some(s.clone()),
+                    (key, val) => bail!("unknown/ill-typed config key {key} = {val:?}"),
+                }
+            }
+            Ok(())
+        };
+        match &root {
+            TomlValue::Table(t) => {
+                // allow either flat keys or a [train] table
+                let mut flat = std::collections::BTreeMap::new();
+                for (k, v) in t {
+                    if let TomlValue::Table(sub) = v {
+                        if k == "train" {
+                            apply(sub)?;
+                        }
+                    } else {
+                        flat.insert(k.clone(), v.clone());
+                    }
+                }
+                apply(&flat)?;
+            }
+            _ => bail!("config root must be a table"),
+        }
+        Ok(cfg)
+    }
+
+    /// The manifest artifact names this run uses.
+    pub fn train_artifact(&self) -> String {
+        format!("{}__{}__{}.train", self.problem, self.strategy, self.scale)
+    }
+
+    pub fn loss_artifact(&self) -> String {
+        format!("{}__{}__{}.loss", self.problem, self.strategy, self.scale)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_round_trip_names() {
+        let c = RunConfig::default();
+        assert_eq!(c.train_artifact(), "reaction_diffusion__zcs__bench.train");
+        assert_eq!(c.loss_artifact(), "reaction_diffusion__zcs__bench.loss");
+    }
+
+    #[test]
+    fn from_toml_file_applies_keys() {
+        let dir = std::env::temp_dir().join("zcs_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.toml");
+        std::fs::write(
+            &path,
+            "# a run\nproblem = \"stokes\"\nsteps = 42\nvalidate = true\n\n[train]\nseed = 7\n",
+        )
+        .unwrap();
+        let c = RunConfig::from_toml_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(c.problem, "stokes");
+        assert_eq!(c.steps, 42);
+        assert!(c.validate);
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.strategy, "zcs"); // default preserved
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let dir = std::env::temp_dir().join("zcs_cfg_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.toml");
+        std::fs::write(&path, "bogus = 3\n").unwrap();
+        assert!(RunConfig::from_toml_file(path.to_str().unwrap()).is_err());
+    }
+}

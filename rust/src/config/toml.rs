@@ -1,0 +1,178 @@
+//! Minimal-TOML parser: tables, key = value (string / int / float / bool /
+//! flat array), `#` comments.  Covers `configs/*.toml`; nothing more.
+
+use std::collections::BTreeMap;
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum TomlError {
+    #[error("line {0}: {1}")]
+    Line(usize, String),
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+    Table(BTreeMap<String, TomlValue>),
+}
+
+/// Parse a TOML document into a root table.
+pub fn parse_toml(text: &str) -> Result<TomlValue, TomlError> {
+    let mut root: BTreeMap<String, TomlValue> = BTreeMap::new();
+    let mut current_path: Vec<String> = Vec::new();
+
+    for (ln0, raw) in text.lines().enumerate() {
+        let ln = ln0 + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(header) = line.strip_prefix('[') {
+            let header = header
+                .strip_suffix(']')
+                .ok_or_else(|| TomlError::Line(ln, "missing ']'".into()))?;
+            current_path = header.split('.').map(|p| p.trim().to_string()).collect();
+            if current_path.iter().any(|p| p.is_empty()) {
+                return Err(TomlError::Line(ln, "empty table name".into()));
+            }
+            // ensure the table exists
+            table_at(&mut root, &current_path, ln)?;
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| TomlError::Line(ln, "expected key = value".into()))?;
+        let key = line[..eq].trim().trim_matches('"').to_string();
+        if key.is_empty() {
+            return Err(TomlError::Line(ln, "empty key".into()));
+        }
+        let value = parse_value(line[eq + 1..].trim(), ln)?;
+        let table = table_at(&mut root, &current_path, ln)?;
+        table.insert(key, value);
+    }
+    Ok(TomlValue::Table(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect # inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn table_at<'a>(
+    root: &'a mut BTreeMap<String, TomlValue>,
+    path: &[String],
+    ln: usize,
+) -> Result<&'a mut BTreeMap<String, TomlValue>, TomlError> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| TomlValue::Table(BTreeMap::new()));
+        match entry {
+            TomlValue::Table(t) => cur = t,
+            _ => return Err(TomlError::Line(ln, format!("{part} is not a table"))),
+        }
+    }
+    Ok(cur)
+}
+
+fn parse_value(s: &str, ln: usize) -> Result<TomlValue, TomlError> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let end = inner
+            .find('"')
+            .ok_or_else(|| TomlError::Line(ln, "unterminated string".into()))?;
+        return Ok(TomlValue::Str(inner[..end].to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| TomlError::Line(ln, "unterminated array".into()))?;
+        let mut items = Vec::new();
+        for tok in inner.split(',') {
+            let tok = tok.trim();
+            if !tok.is_empty() {
+                items.push(parse_value(tok, ln)?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(TomlError::Line(ln, format!("cannot parse value {s:?}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn get<'a>(v: &'a TomlValue, key: &str) -> &'a TomlValue {
+        match v {
+            TomlValue::Table(t) => &t[key],
+            _ => panic!("not a table"),
+        }
+    }
+
+    #[test]
+    fn scalars_and_comments() {
+        let v = parse_toml("a = 1  # comment\nb = \"x # not comment\"\nc = 2.5\nd = true\n")
+            .unwrap();
+        assert_eq!(get(&v, "a"), &TomlValue::Int(1));
+        assert_eq!(get(&v, "b"), &TomlValue::Str("x # not comment".into()));
+        assert_eq!(get(&v, "c"), &TomlValue::Float(2.5));
+        assert_eq!(get(&v, "d"), &TomlValue::Bool(true));
+    }
+
+    #[test]
+    fn tables_and_nesting() {
+        let v = parse_toml("[a]\nx = 1\n[a.b]\ny = 2\n[c]\nz = 3\n").unwrap();
+        assert_eq!(get(&get(&v, "a"), "x"), &TomlValue::Int(1));
+        assert_eq!(get(&get(&get(&v, "a"), "b"), "y"), &TomlValue::Int(2));
+        assert_eq!(get(&get(&v, "c"), "z"), &TomlValue::Int(3));
+    }
+
+    #[test]
+    fn arrays() {
+        let v = parse_toml("xs = [1, 2, 3]\nys = [\"a\", \"b\"]\n").unwrap();
+        assert_eq!(
+            get(&v, "xs"),
+            &TomlValue::Array(vec![TomlValue::Int(1), TomlValue::Int(2), TomlValue::Int(3)])
+        );
+        assert_eq!(
+            get(&v, "ys"),
+            &TomlValue::Array(vec![
+                TomlValue::Str("a".into()),
+                TomlValue::Str("b".into())
+            ])
+        );
+    }
+
+    #[test]
+    fn errors_are_line_numbered() {
+        let err = parse_toml("good = 1\nbad line\n").unwrap_err();
+        assert!(matches!(err, TomlError::Line(2, _)));
+        assert!(parse_toml("x = @@\n").is_err());
+        assert!(parse_toml("[unclosed\n").is_err());
+    }
+}

@@ -1,0 +1,418 @@
+//! Per-problem batch assembly (the paper's "Inputs" stage).
+//!
+//! Every step the coordinator resamples collocation points uniformly over
+//! the domain, picks a fresh subset of input functions from the GP bank, and
+//! interpolates whatever auxiliary fields the physics loss needs at exactly
+//! those points.  Array order and shapes follow the manifest `batch_schema`
+//! byte for byte -- the Rust/Python contract is positional.
+
+use crate::config::RunConfig;
+use crate::pde::ProblemKind;
+use crate::rng::Pcg64;
+use crate::runtime::{ArtifactMeta, HostTensor, RunArg};
+use crate::sampler::{boundary_points_2d, interior_points_2d, Edge, FunctionBank, GpSampler1d};
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// Stateful batch generator bound to one (problem, artifact) pair.
+pub struct Batcher {
+    kind: ProblemKind,
+    m: usize,
+    q: usize,
+    schema: Vec<(String, Vec<usize>)>,
+    /// GP input-function bank (None for Kirchhoff / coefficient problems)
+    bank: Option<FunctionBank>,
+    rng: Pcg64,
+    /// function indices used by the most recent batch
+    last_functions: Vec<usize>,
+    /// most recent Kirchhoff coefficient draw (row-major M x Q)
+    last_coeffs: Vec<f64>,
+}
+
+impl Batcher {
+    pub fn new(
+        kind: ProblemKind,
+        meta: &ArtifactMeta,
+        config: &RunConfig,
+        rng: &mut Pcg64,
+    ) -> Result<Self> {
+        let (p_name, p_shape) = &meta.batch_schema[0];
+        if p_name != "p" {
+            bail!("batch schema must start with 'p', got {p_name}");
+        }
+        let (m, q) = (p_shape[0], p_shape[1]);
+        let bank = match kind.function_prior() {
+            Some(kernel) => {
+                let sampler = GpSampler1d::new(kernel, config.bank_grid);
+                let mut bank = FunctionBank::generate(&sampler, config.bank_size, rng)?;
+                if kind.lid_mask() {
+                    bank = bank.masked(|x| x * (1.0 - x));
+                }
+                Some(bank)
+            }
+            None => None,
+        };
+        Ok(Self {
+            kind,
+            m,
+            q,
+            schema: meta.batch_schema.clone(),
+            bank,
+            rng: rng.clone(),
+            last_functions: Vec::new(),
+            last_coeffs: Vec::new(),
+        })
+    }
+
+    pub fn bank(&self) -> Option<&FunctionBank> {
+        self.bank.as_ref()
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn q(&self) -> usize {
+        self.q
+    }
+
+    pub fn last_functions(&self) -> &[usize] {
+        &self.last_functions
+    }
+
+    pub fn last_coeffs(&self) -> &[f64] {
+        &self.last_coeffs
+    }
+
+    /// Build the sensor matrix `p` for an explicit set of bank functions.
+    pub fn sensors_for(&self, functions: &[usize]) -> HostTensor {
+        let bank = self.bank.as_ref().expect("problem has a function bank");
+        let mut data = Vec::with_capacity(functions.len() * self.q);
+        for &fi in functions {
+            data.extend(bank.sensors(fi, self.q).iter().map(|&v| v as f32));
+        }
+        HostTensor::new(vec![functions.len(), self.q], data)
+    }
+
+    /// Next training batch, in manifest order.
+    pub fn next_batch(&mut self) -> Result<Vec<RunArg>> {
+        // 1. pick the function subset for this batch
+        match self.kind {
+            ProblemKind::Kirchhoff => {
+                self.last_coeffs = self.rng.normals(self.m * self.q);
+            }
+            _ => {
+                let bank_len = self.bank.as_ref().map(|b| b.len()).unwrap_or(0);
+                self.last_functions = self.rng.choose(bank_len, self.m.min(bank_len));
+            }
+        }
+        // 2. interior points first (several aux fields need them)
+        let x_in_shape = self
+            .schema
+            .iter()
+            .find(|(n, _)| n == "x_in")
+            .map(|(_, s)| s.clone())
+            .expect("schema has x_in");
+        let x_in = interior_points_2d(&mut self.rng, x_in_shape[0], (0.0, 1.0), (0.0, 1.0));
+
+        let mut out = Vec::with_capacity(self.schema.len());
+        // shared temp: paired t-values for periodic BCs
+        let mut periodic_ts: Vec<f64> = Vec::new();
+        let mut lid_xs: Vec<f64> = Vec::new();
+        for (name, shape) in self.schema.clone() {
+            let arg: HostTensor = match name.as_str() {
+                "p" => match self.kind {
+                    ProblemKind::Kirchhoff => HostTensor::from_f64(
+                        vec![self.m, self.q],
+                        &self.last_coeffs,
+                    ),
+                    _ => self.sensors_for(&self.last_functions.clone()),
+                },
+                "x_in" => HostTensor::from_f64(x_in.shape().to_vec(), x_in.data()),
+                // rd: source f evaluated at the interior x-coordinates
+                "f_at_x" => self.aux_at_dim0(&x_in, shape[1]),
+                // t = 0 line
+                "x_ic" => {
+                    let (pts, _free) = boundary_points_2d(&mut self.rng, shape[0], Edge::D1Lo);
+                    HostTensor::from_f64(pts.shape().to_vec(), pts.data())
+                }
+                // burgers: u0 at the IC points (must match x_ic's abscissae):
+                // regenerate deterministically from the previous entry
+                "u0_ic" => {
+                    // x_ic was pushed immediately before u0_ic by schema order
+                    let prev = out.last().expect("x_ic precedes u0_ic");
+                    let RunArg::F32(x_ic) = prev else { unreachable!() };
+                    let xs: Vec<f64> =
+                        (0..x_ic.dims[0]).map(|r| x_ic.data[2 * r] as f64).collect();
+                    self.aux_at_xs(&xs, shape[1])
+                }
+                "x_bc" => self.dirichlet_edges(shape[0]),
+                "x_left" => {
+                    periodic_ts = self.rng.uniforms_in(shape[0], 0.0, 1.0);
+                    let mut data = Vec::with_capacity(2 * shape[0]);
+                    for &t in &periodic_ts {
+                        data.push(0.0f32);
+                        data.push(t as f32);
+                    }
+                    HostTensor::new(shape.clone(), data)
+                }
+                "x_right" => {
+                    let mut data = Vec::with_capacity(2 * shape[0]);
+                    for &t in &periodic_ts {
+                        data.push(1.0f32);
+                        data.push(t as f32);
+                    }
+                    HostTensor::new(shape.clone(), data)
+                }
+                "x_lid" => {
+                    let (pts, free) = boundary_points_2d(&mut self.rng, shape[0], Edge::D1Hi);
+                    lid_xs = free;
+                    HostTensor::from_f64(pts.shape().to_vec(), pts.data())
+                }
+                "u1_lid" => self.aux_at_xs(&lid_xs, shape[1]),
+                "x_bot" => {
+                    let (pts, _) = boundary_points_2d(&mut self.rng, shape[0], Edge::D1Lo);
+                    HostTensor::from_f64(pts.shape().to_vec(), pts.data())
+                }
+                "x_lr" => self.lr_edges(shape[0]),
+                other => bail!("unknown batch array {other:?} in schema"),
+            };
+            if arg.dims != shape {
+                bail!("batch array {name}: built {:?}, schema wants {:?}", arg.dims, shape);
+            }
+            out.push(RunArg::F32(arg));
+        }
+        Ok(out)
+    }
+
+    /// Aux field: bank functions evaluated at the dim-0 coordinate of `pts`.
+    fn aux_at_dim0(&self, pts: &Tensor, n: usize) -> HostTensor {
+        let xs: Vec<f64> = (0..n).map(|r| pts.at2(r, 0)).collect();
+        self.aux_at_xs(&xs, n)
+    }
+
+    /// Aux field: bank functions evaluated at explicit abscissae, (M, n).
+    fn aux_at_xs(&self, xs: &[f64], n: usize) -> HostTensor {
+        assert_eq!(xs.len(), n);
+        let bank = self.bank.as_ref().expect("problem has a function bank");
+        let mut data = Vec::with_capacity(self.m * n);
+        for &fi in &self.last_functions {
+            data.extend(bank.eval_many(fi, xs).iter().map(|&v| v as f32));
+        }
+        HostTensor::new(vec![self.m, n], data)
+    }
+
+    /// Dirichlet boundary points: rd -> x = 0/1 edges; kirchhoff -> all four.
+    fn dirichlet_edges(&mut self, n: usize) -> HostTensor {
+        let edges: &[Edge] = match self.kind {
+            ProblemKind::ReactionDiffusion => &[Edge::D0Lo, Edge::D0Hi],
+            _ => &[Edge::D0Lo, Edge::D0Hi, Edge::D1Lo, Edge::D1Hi],
+        };
+        let mut data = Vec::with_capacity(2 * n);
+        for i in 0..n {
+            let edge = edges[i % edges.len()];
+            let (pts, _) = boundary_points_2d(&mut self.rng, 1, edge);
+            data.push(pts.data()[0] as f32);
+            data.push(pts.data()[1] as f32);
+        }
+        HostTensor::new(vec![n, 2], data)
+    }
+
+    /// Left/right wall points for Stokes.
+    fn lr_edges(&mut self, n: usize) -> HostTensor {
+        let mut data = Vec::with_capacity(2 * n);
+        for i in 0..n {
+            let edge = if i % 2 == 0 { Edge::D0Lo } else { Edge::D0Hi };
+            let (pts, _) = boundary_points_2d(&mut self.rng, 1, edge);
+            data.push(pts.data()[0] as f32);
+            data.push(pts.data()[1] as f32);
+        }
+        HostTensor::new(vec![n, 2], data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::IoSpec;
+
+    fn meta_for(kind: ProblemKind, schema: Vec<(&str, Vec<usize>)>) -> ArtifactMeta {
+        ArtifactMeta {
+            file: "f".into(),
+            kind: "train".into(),
+            problem: kind.name(),
+            strategy: "zcs".into(),
+            scale: "bench".into(),
+            m: schema[0].1[0],
+            n: schema[1].1[0],
+            p_order: 2,
+            n_params: 0,
+            inputs: vec![IoSpec { name: "p".into(), shape: schema[0].1.clone(), dtype: "f32".into() }],
+            outputs: vec![],
+            param_layout: vec![],
+            batch_schema: schema.into_iter().map(|(n, s)| (n.to_string(), s)).collect(),
+        }
+    }
+
+    fn small_config() -> RunConfig {
+        RunConfig { bank_size: 16, bank_grid: 32, ..Default::default() }
+    }
+
+    fn get_f32(arg: &RunArg) -> &HostTensor {
+        match arg {
+            RunArg::F32(t) => t,
+            _ => panic!("expected f32 arg"),
+        }
+    }
+
+    #[test]
+    fn rd_batch_matches_schema_and_aux_is_consistent() {
+        let kind = ProblemKind::ReactionDiffusion;
+        let meta = meta_for(
+            kind,
+            vec![
+                ("p", vec![4, 10]),
+                ("x_in", vec![32, 2]),
+                ("f_at_x", vec![4, 32]),
+                ("x_ic", vec![8, 2]),
+                ("x_bc", vec![8, 2]),
+            ],
+        );
+        let mut rng = Pcg64::seeded(1);
+        let mut b = Batcher::new(kind, &meta, &small_config(), &mut rng).unwrap();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 5);
+        let x_in = get_f32(&batch[1]);
+        let f_at_x = get_f32(&batch[2]);
+        // aux field row 0 must equal bank eval of the chosen function at x
+        let bank = b.bank().unwrap();
+        let fi = b.last_functions()[0];
+        for j in [0usize, 7, 31] {
+            let x = x_in.data[2 * j] as f64;
+            let want = bank.eval(fi, x) as f32;
+            assert!((f_at_x.data[j] - want).abs() < 1e-6);
+        }
+        // IC points on t = 0, BC points on x in {0, 1}
+        let x_ic = get_f32(&batch[3]);
+        for r in 0..8 {
+            assert_eq!(x_ic.data[2 * r + 1], 0.0);
+        }
+        let x_bc = get_f32(&batch[4]);
+        for r in 0..8 {
+            let x = x_bc.data[2 * r];
+            assert!(x == 0.0 || x == 1.0);
+        }
+    }
+
+    #[test]
+    fn burgers_periodic_points_share_t() {
+        let kind = ProblemKind::Burgers;
+        let meta = meta_for(
+            kind,
+            vec![
+                ("p", vec![3, 8]),
+                ("x_in", vec![16, 2]),
+                ("x_ic", vec![8, 2]),
+                ("u0_ic", vec![3, 8]),
+                ("x_left", vec![6, 2]),
+                ("x_right", vec![6, 2]),
+            ],
+        );
+        let mut rng = Pcg64::seeded(2);
+        let mut b = Batcher::new(kind, &meta, &small_config(), &mut rng).unwrap();
+        let batch = b.next_batch().unwrap();
+        let left = get_f32(&batch[4]);
+        let right = get_f32(&batch[5]);
+        for r in 0..6 {
+            assert_eq!(left.data[2 * r], 0.0);
+            assert_eq!(right.data[2 * r], 1.0);
+            assert_eq!(left.data[2 * r + 1], right.data[2 * r + 1]); // same t
+        }
+        // u0_ic row equals bank eval at x_ic abscissae
+        let x_ic = get_f32(&batch[2]);
+        let u0 = get_f32(&batch[3]);
+        let bank = b.bank().unwrap();
+        let fi = b.last_functions()[0];
+        for j in 0..8 {
+            let want = bank.eval(fi, x_ic.data[2 * j] as f64) as f32;
+            assert!((u0.data[j] - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn kirchhoff_coeffs_are_fresh_each_batch() {
+        let kind = ProblemKind::Kirchhoff;
+        let meta = meta_for(
+            kind,
+            vec![("p", vec![2, 9]), ("x_in", vec![8, 2]), ("x_bc", vec![8, 2])],
+        );
+        let mut rng = Pcg64::seeded(3);
+        let mut b = Batcher::new(kind, &meta, &small_config(), &mut rng).unwrap();
+        let b1 = b.next_batch().unwrap();
+        let c1 = get_f32(&b1[0]).data.clone();
+        let b2 = b.next_batch().unwrap();
+        let c2 = get_f32(&b2[0]).data.clone();
+        assert_ne!(c1, c2);
+        // all four edges present in x_bc
+        let bc = get_f32(&b1[2]);
+        let on_edge = |r: usize| {
+            let (x, y) = (bc.data[2 * r], bc.data[2 * r + 1]);
+            x == 0.0 || x == 1.0 || y == 0.0 || y == 1.0
+        };
+        assert!((0..8).all(on_edge));
+    }
+
+    #[test]
+    fn stokes_lid_mask_pins_lid_corners() {
+        let kind = ProblemKind::Stokes;
+        let meta = meta_for(
+            kind,
+            vec![
+                ("p", vec![2, 8]),
+                ("x_in", vec![8, 2]),
+                ("x_lid", vec![4, 2]),
+                ("u1_lid", vec![2, 4]),
+                ("x_bot", vec![4, 2]),
+                ("x_lr", vec![4, 2]),
+            ],
+        );
+        let mut rng = Pcg64::seeded(4);
+        let mut b = Batcher::new(kind, &meta, &small_config(), &mut rng).unwrap();
+        let batch = b.next_batch().unwrap();
+        let lid = get_f32(&batch[2]);
+        for r in 0..4 {
+            assert_eq!(lid.data[2 * r + 1], 1.0); // y = 1
+        }
+        // sensor rows vanish at the endpoints thanks to the mask
+        let p = get_f32(&batch[0]);
+        assert!(p.data[0].abs() < 1e-6); // sensor at x = 0
+        assert!(p.data[7].abs() < 1e-6); // sensor at x = 1
+        let lr = get_f32(&batch[5]);
+        for r in 0..4 {
+            let x = lr.data[2 * r];
+            assert!(x == 0.0 || x == 1.0);
+        }
+    }
+
+    #[test]
+    fn function_subset_changes_between_batches() {
+        let kind = ProblemKind::ReactionDiffusion;
+        let meta = meta_for(
+            kind,
+            vec![
+                ("p", vec![4, 10]),
+                ("x_in", vec![8, 2]),
+                ("f_at_x", vec![4, 8]),
+                ("x_ic", vec![4, 2]),
+                ("x_bc", vec![4, 2]),
+            ],
+        );
+        let mut rng = Pcg64::seeded(5);
+        let mut b = Batcher::new(kind, &meta, &small_config(), &mut rng).unwrap();
+        b.next_batch().unwrap();
+        let f1 = b.last_functions().to_vec();
+        b.next_batch().unwrap();
+        let f2 = b.last_functions().to_vec();
+        assert_ne!(f1, f2);
+    }
+}

@@ -1,0 +1,119 @@
+//! Flat-parameter checkpointing: a tiny self-describing binary format.
+//!
+//! Layout: magic `ZCSCKPT1`, tensor count (u32 LE), then per tensor:
+//! rank (u32), dims (u32 each), f32 data (LE).  No external deps, stable
+//! across platforms we care about.
+
+use crate::runtime::HostTensor;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"ZCSCKPT1";
+
+/// Save the flat parameter tuple.
+pub fn save(path: impl AsRef<Path>, params: &[HostTensor]) -> Result<()> {
+    let mut f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {:?}", path.as_ref()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(params.len() as u32).to_le_bytes())?;
+    for t in params {
+        f.write_all(&(t.dims.len() as u32).to_le_bytes())?;
+        for &d in &t.dims {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        for &v in &t.data {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Load a checkpoint.
+pub fn load(path: impl AsRef<Path>) -> Result<Vec<HostTensor>> {
+    let mut f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {:?}", path.as_ref()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a zcs checkpoint: bad magic {magic:?}");
+    }
+    let count = read_u32(&mut f)? as usize;
+    if count > 1_000_000 {
+        bail!("implausible tensor count {count}");
+    }
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let rank = read_u32(&mut f)? as usize;
+        if rank > 16 {
+            bail!("implausible rank {rank}");
+        }
+        let mut dims = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            dims.push(read_u32(&mut f)? as usize);
+        }
+        let n: usize = dims.iter().product();
+        let mut buf = vec![0u8; 4 * n];
+        f.read_exact(&mut buf)?;
+        let data: Vec<f32> = buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        out.push(HostTensor::new(dims, data));
+    }
+    Ok(out)
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("zcs_ckpt_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn round_trip() {
+        let params = vec![
+            HostTensor::new(vec![2, 3], vec![1.0, -2.0, 3.5, 0.0, 1e-7, -1e7]),
+            HostTensor::new(vec![4], vec![9.0, 8.0, 7.0, 6.0]),
+            HostTensor::scalar(42.0),
+        ];
+        let p = tmp("rt.ckpt");
+        save(&p, &params).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(back, params);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let p = tmp("bad.ckpt");
+        std::fs::write(&p, b"NOTACKPTxxxx").unwrap();
+        assert!(load(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_file() {
+        let params = vec![HostTensor::new(vec![8], vec![1.0; 8])];
+        let p = tmp("trunc.ckpt");
+        save(&p, &params).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 5]).unwrap();
+        assert!(load(&p).is_err());
+    }
+
+    #[test]
+    fn empty_param_list_ok() {
+        let p = tmp("empty.ckpt");
+        save(&p, &[]).unwrap();
+        assert_eq!(load(&p).unwrap().len(), 0);
+    }
+}

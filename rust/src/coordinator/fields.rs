@@ -1,0 +1,81 @@
+//! Figure-3 reproduction: true vs predicted Stokes fields for the parabolic
+//! lid `u1(x) = x (1 - x)`.
+//!
+//! Trains a ZCS DeepONet briefly, evaluates it on a 64 x 64 grid with the
+//! parabolic lid in function slot 0, computes the reference solution with
+//! the vorticity-streamfunction solver, and writes `pred.csv` / `true.csv`
+//! (columns: x, y, u, v, p) plus a `summary.txt` with per-channel errors.
+
+use crate::config::RunConfig;
+use crate::coordinator::{validate::GRID_SIDE, Trainer};
+use crate::runtime::{HostTensor, RunArg, Runtime};
+use crate::sampler::tensor_grid_2d;
+use crate::solvers::StokesSolver;
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+use std::io::Write;
+use std::rc::Rc;
+
+/// Train + dump. Returns per-channel relative L2 errors on the lid case.
+pub fn dump_stokes_fields(config: RunConfig, out_dir: &str) -> Result<Vec<f64>> {
+    if config.problem != "stokes" {
+        bail!("fields dump is a Stokes (Fig. 3) feature");
+    }
+    std::fs::create_dir_all(out_dir)?;
+    let runtime = Rc::new(Runtime::open(&config.artifact_dir)?);
+    let mut trainer = Trainer::new(runtime.clone(), config.clone())?;
+    let report = trainer.run()?;
+
+    // forward artifact at the 64 x 64 grid
+    let g = GRID_SIDE * GRID_SIDE;
+    let exe = runtime.load(&format!("stokes__forward_G{g}"))?;
+    let m = exe.meta.inputs[exe.meta.inputs.len() - 2].shape[0];
+    let q = exe.meta.inputs[exe.meta.inputs.len() - 2].shape[1];
+
+    // function slot 0: the paper's parabolic lid; other slots: bank samples
+    let mut p = trainer.batcher().sensors_for(&(0..m).collect::<Vec<_>>());
+    for k in 0..q {
+        let x = k as f64 / (q - 1) as f64;
+        p.data[k] = (x * (1.0 - x)) as f32;
+    }
+    let grid = tensor_grid_2d(GRID_SIDE, GRID_SIDE);
+    let mut args: Vec<RunArg> =
+        trainer.state.params.iter().cloned().map(RunArg::F32).collect();
+    args.push(RunArg::F32(p));
+    args.push(RunArg::F32(HostTensor::from_f64(vec![g, 2], grid.data())));
+    let u = &exe.run(&args)?[0]; // (3, m, g)
+
+    // reference solution
+    let solver = StokesSolver::default();
+    let xs = Tensor::linspace(0.0, 1.0, solver.n).into_data();
+    let lid: Vec<f64> = xs.iter().map(|&x| x * (1.0 - x)).collect();
+    let fields = solver.solve(&lid);
+
+    let mut pred = std::fs::File::create(format!("{out_dir}/pred.csv"))?;
+    let mut tru = std::fs::File::create(format!("{out_dir}/true.csv"))?;
+    writeln!(pred, "x,y,u,v,p")?;
+    writeln!(tru, "x,y,u,v,p")?;
+    let mut num = [0.0f64; 3];
+    let mut den = [0.0f64; 3];
+    for r in 0..g {
+        let (x, y) = (grid.at2(r, 0), grid.at2(r, 1));
+        let pu = u.data[r] as f64; // channel 0, function 0
+        let pv = u.data[g * m + r] as f64;
+        let pp = u.data[2 * g * m + r] as f64;
+        let (tu, tv, tp) = fields.at(x, y);
+        writeln!(pred, "{x},{y},{pu},{pv},{pp}")?;
+        writeln!(tru, "{x},{y},{tu},{tv},{tp}")?;
+        for (c, (a, b)) in [(pu, tu), (pv, tv), (pp, tp)].into_iter().enumerate() {
+            num[c] += (a - b) * (a - b);
+            den[c] += b * b;
+        }
+    }
+    let errors: Vec<f64> =
+        (0..3).map(|c| (num[c] / den[c].max(1e-300)).sqrt()).collect();
+    let mut summary = std::fs::File::create(format!("{out_dir}/summary.txt"))?;
+    writeln!(summary, "final training loss: {:.6e}", report.final_loss)?;
+    for (label, e) in ["u", "v", "p"].iter().zip(&errors) {
+        writeln!(summary, "rel L2 error [{label}]: {:.2}%", e * 100.0)?;
+    }
+    Ok(errors)
+}

@@ -1,0 +1,198 @@
+//! L3 coordinator: the training orchestrator driving the PJRT artifacts.
+//!
+//! Responsibilities (Python is long gone by the time this runs):
+//!
+//! * [`params`]     -- parameter initialisation per the manifest layout;
+//! * [`batch`]      -- per-problem batch assembly: GP function selection,
+//!   collocation resampling, auxiliary-field interpolation (the paper's
+//!   "Inputs" stage);
+//! * [`Trainer`]    -- the train loop: feed `train_step` executables, track
+//!   losses and stage timings, checkpoint;
+//! * [`validate`]   -- relative-L2 error of the trained operator against the
+//!   independent Rust solvers through the `forward` artifact (the paper's
+//!   "Relative error" column);
+//! * [`checkpoint`] -- binary save/load of the flat parameter tuple.
+
+pub mod batch;
+pub mod checkpoint;
+pub mod fields;
+pub mod params;
+pub mod validate;
+
+use crate::config::RunConfig;
+use crate::pde::ProblemKind;
+use crate::runtime::{Executable, HostTensor, RunArg, Runtime};
+use anyhow::{anyhow, Context, Result};
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+/// One logged point of the loss curve.
+#[derive(Clone, Debug)]
+pub struct LogPoint {
+    pub step: usize,
+    pub loss: f32,
+    pub loss_pde: f32,
+    pub loss_bc: f32,
+}
+
+/// Outcome of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub config: RunConfig,
+    pub curve: Vec<LogPoint>,
+    pub final_loss: f32,
+    pub steps: usize,
+    /// wall time spent generating batches (the paper's "Inputs" stage)
+    pub input_time: Duration,
+    /// wall time inside PJRT train-step execution
+    pub step_time: Duration,
+    pub compile_time: Duration,
+    /// per-channel relative L2 validation error, if requested
+    pub validation: Option<Vec<f64>>,
+}
+
+impl TrainReport {
+    /// Paper-style "time per 1000 batches" in seconds.
+    pub fn sec_per_1000(&self) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        self.step_time.as_secs_f64() / self.steps as f64 * 1000.0
+    }
+}
+
+/// Training state: flat parameter/Adam tuples + the step counter.
+pub struct TrainState {
+    pub params: Vec<HostTensor>,
+    pub adam_m: Vec<HostTensor>,
+    pub adam_v: Vec<HostTensor>,
+    pub step: i32,
+}
+
+impl TrainState {
+    pub fn init(layout: &[(String, Vec<usize>)], rng: &mut crate::rng::Pcg64) -> Self {
+        let params = params::init_params(layout, rng);
+        let adam_m = params.iter().map(|p| HostTensor::zeros(&p.dims)).collect();
+        let adam_v = params.iter().map(|p| HostTensor::zeros(&p.dims)).collect();
+        Self { params, adam_m, adam_v, step: 0 }
+    }
+}
+
+/// The training orchestrator.
+pub struct Trainer {
+    pub runtime: Rc<Runtime>,
+    pub config: RunConfig,
+    pub kind: ProblemKind,
+    exe: Rc<Executable>,
+    batcher: batch::Batcher,
+    pub state: TrainState,
+}
+
+impl Trainer {
+    pub fn new(runtime: Rc<Runtime>, config: RunConfig) -> Result<Self> {
+        let kind = ProblemKind::from_name(&config.problem)
+            .ok_or_else(|| anyhow!("unknown problem {}", config.problem))?;
+        let exe = runtime
+            .load(&config.train_artifact())
+            .with_context(|| format!("loading {}", config.train_artifact()))?;
+        let mut rng = crate::rng::Pcg64::new(config.seed, 1);
+        let batcher = batch::Batcher::new(kind, &exe.meta, &config, &mut rng)?;
+        let mut init_rng = crate::rng::Pcg64::new(config.seed, 2);
+        let state = TrainState::init(&exe.meta.param_layout, &mut init_rng);
+        Ok(Self { runtime, config, kind, exe, batcher, state })
+    }
+
+    /// Run the configured number of steps.
+    pub fn run(&mut self) -> Result<TrainReport> {
+        let mut curve = Vec::new();
+        let mut input_time = Duration::ZERO;
+        let mut step_time = Duration::ZERO;
+        let np = self.exe.meta.n_params;
+        let mut last = LogPoint { step: 0, loss: f32::NAN, loss_pde: 0.0, loss_bc: 0.0 };
+        for it in 0..self.config.steps {
+            let t0 = Instant::now();
+            let batch = self.batcher.next_batch()?;
+            input_time += t0.elapsed();
+
+            let t1 = Instant::now();
+            let mut args: Vec<RunArg> = Vec::with_capacity(3 * np + 1 + batch.len());
+            args.extend(self.state.params.iter().cloned().map(RunArg::F32));
+            args.extend(self.state.adam_m.iter().cloned().map(RunArg::F32));
+            args.extend(self.state.adam_v.iter().cloned().map(RunArg::F32));
+            args.push(RunArg::I32(self.state.step));
+            args.extend(batch);
+            let out = self.exe.run(&args)?;
+            step_time += t1.elapsed();
+
+            self.state.params = out[..np].to_vec();
+            self.state.adam_m = out[np..2 * np].to_vec();
+            self.state.adam_v = out[2 * np..3 * np].to_vec();
+            self.state.step = out[3 * np].data[0] as i32;
+            last = LogPoint {
+                step: it + 1,
+                loss: out[3 * np + 1].data[0],
+                loss_pde: out[3 * np + 2].data[0],
+                loss_bc: out[3 * np + 3].data[0],
+            };
+            if (it + 1) % self.config.log_every == 0 || it + 1 == self.config.steps {
+                curve.push(last.clone());
+            }
+            if !last.loss.is_finite() {
+                anyhow::bail!("loss diverged at step {}: {}", it + 1, last.loss);
+            }
+        }
+        let validation = if self.config.validate {
+            Some(self.validate()?)
+        } else {
+            None
+        };
+        if let Some(path) = &self.config.checkpoint {
+            checkpoint::save(path, &self.state.params)?;
+        }
+        Ok(TrainReport {
+            config: self.config.clone(),
+            final_loss: last.loss,
+            steps: self.config.steps,
+            curve,
+            input_time,
+            step_time,
+            compile_time: self.exe.compile_time,
+            validation,
+        })
+    }
+
+    /// Relative-L2 validation error per output channel.
+    pub fn validate(&mut self) -> Result<Vec<f64>> {
+        validate::validate(
+            &self.runtime,
+            self.kind,
+            &self.config,
+            &self.state.params,
+            &mut self.batcher,
+        )
+    }
+
+    pub fn batcher(&mut self) -> &mut batch::Batcher {
+        &mut self.batcher
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_sec_per_1000_scaling() {
+        let r = TrainReport {
+            config: RunConfig::default(),
+            curve: vec![],
+            final_loss: 0.0,
+            steps: 10,
+            input_time: Duration::ZERO,
+            step_time: Duration::from_millis(50),
+            compile_time: Duration::ZERO,
+            validation: None,
+        };
+        assert!((r.sec_per_1000() - 5.0).abs() < 1e-9);
+    }
+}

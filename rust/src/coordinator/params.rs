@@ -1,0 +1,78 @@
+//! Parameter initialisation per the manifest layout.
+//!
+//! Same scheme as `python/compile/model.init_params` (Glorot-uniform
+//! matrices, zero biases); the exact stream differs, which is fine -- the
+//! paper itself averages over weight initialisations.
+
+use crate::rng::Pcg64;
+use crate::runtime::HostTensor;
+
+/// Initialise the flat parameter tuple described by `layout`.
+pub fn init_params(layout: &[(String, Vec<usize>)], rng: &mut Pcg64) -> Vec<HostTensor> {
+    layout
+        .iter()
+        .map(|(name, shape)| {
+            let count: usize = shape.iter().product();
+            if shape.len() == 2 {
+                let limit = (6.0 / (shape[0] + shape[1]) as f64).sqrt();
+                let data: Vec<f32> =
+                    (0..count).map(|_| rng.uniform_in(-limit, limit) as f32).collect();
+                HostTensor::new(shape.clone(), data)
+            } else {
+                // biases (and the output bias) start at zero
+                let _ = name;
+                HostTensor::zeros(shape)
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> Vec<(String, Vec<usize>)> {
+        vec![
+            ("w0".into(), vec![50, 64]),
+            ("b0".into(), vec![64]),
+            ("w1".into(), vec![64, 64]),
+            ("b1".into(), vec![64]),
+            ("bias".into(), vec![1]),
+        ]
+    }
+
+    #[test]
+    fn shapes_match_layout() {
+        let mut rng = Pcg64::seeded(0);
+        let ps = init_params(&layout(), &mut rng);
+        assert_eq!(ps.len(), 5);
+        assert_eq!(ps[0].dims, vec![50, 64]);
+        assert_eq!(ps[4].dims, vec![1]);
+    }
+
+    #[test]
+    fn glorot_bounds_hold() {
+        let mut rng = Pcg64::seeded(1);
+        let ps = init_params(&layout(), &mut rng);
+        let limit = (6.0f64 / (50 + 64) as f64).sqrt() as f32;
+        assert!(ps[0].data.iter().all(|v| v.abs() <= limit));
+        assert!(ps[0].data.iter().any(|v| v.abs() > 0.5 * limit));
+    }
+
+    #[test]
+    fn biases_are_zero() {
+        let mut rng = Pcg64::seeded(2);
+        let ps = init_params(&layout(), &mut rng);
+        assert!(ps[1].data.iter().all(|&v| v == 0.0));
+        assert!(ps[4].data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = init_params(&layout(), &mut Pcg64::seeded(3));
+        let b = init_params(&layout(), &mut Pcg64::seeded(3));
+        assert_eq!(a[0].data, b[0].data);
+        let c = init_params(&layout(), &mut Pcg64::seeded(4));
+        assert_ne!(a[0].data, c[0].data);
+    }
+}

@@ -1,0 +1,143 @@
+//! Validation: relative-L2 error of the trained operator against the
+//! independent Rust reference solvers (the paper's "Relative error" column).
+//!
+//! The trained parameters are pushed through the strategy-independent
+//! `forward` artifact on a 64 x 64 evaluation grid; the same input functions
+//! are handed to the matching solver in `crate::solvers`; errors are
+//! aggregated per output channel over all validation functions.
+
+use crate::config::RunConfig;
+use crate::coordinator::batch::Batcher;
+use crate::pde::ProblemKind;
+use crate::rng::Pcg64;
+use crate::runtime::{HostTensor, RunArg, Runtime};
+use crate::sampler::tensor_grid_2d;
+use crate::solvers::{BurgersSolver, KirchhoffSolver, ReactionDiffusionSolver, StokesSolver};
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Result};
+
+/// Grid points used by the `forward_G4096` artifacts (64 x 64).
+pub const GRID_SIDE: usize = 64;
+
+/// Run validation; returns one relative-L2 error per output channel.
+pub fn validate(
+    runtime: &Runtime,
+    kind: ProblemKind,
+    config: &RunConfig,
+    params: &[HostTensor],
+    batcher: &mut Batcher,
+) -> Result<Vec<f64>> {
+    if matches!(kind, ProblemKind::HighOrder(_)) {
+        return Ok(Vec::new()); // pure scaling benchmark, no solution to test
+    }
+    let g = GRID_SIDE * GRID_SIDE;
+    let fwd_name = format!("{}__forward_G{}", kind.name(), g);
+    let exe = runtime
+        .load(&fwd_name)
+        .map_err(|e| anyhow!("{fwd_name}: {e} (build the core artifact set)"))?;
+    let m = exe.meta.inputs[exe.meta.inputs.len() - 2].shape[0];
+
+    // evaluation grid, shared with the solvers
+    let grid = tensor_grid_2d(GRID_SIDE, GRID_SIDE);
+    let pts: Vec<(f64, f64)> = (0..g).map(|r| (grid.at2(r, 0), grid.at2(r, 1))).collect();
+
+    // deterministic validation inputs (separate stream from training)
+    let mut vrng = Pcg64::new(config.seed, 99);
+
+    // build p and the per-channel truth
+    let n_out = kind.n_out();
+    let (p, truth) = match kind {
+        ProblemKind::ReactionDiffusion => {
+            let functions: Vec<usize> = (0..m).collect();
+            let p = batcher.sensors_for(&functions);
+            let bank = batcher.bank().unwrap();
+            let solver = ReactionDiffusionSolver::default();
+            let xs = Tensor::linspace(0.0, 1.0, solver.nx).into_data();
+            let mut truth = vec![Vec::with_capacity(m * g)];
+            for &fi in &functions {
+                let f = bank.eval_many(fi, &xs);
+                truth[0].extend(solver.solve_at(&f, &pts));
+            }
+            (p, truth)
+        }
+        ProblemKind::Burgers => {
+            let functions: Vec<usize> = (0..m).collect();
+            let p = batcher.sensors_for(&functions);
+            let bank = batcher.bank().unwrap();
+            let solver = BurgersSolver::default();
+            let xs: Vec<f64> = (0..solver.nx).map(|i| i as f64 / solver.nx as f64).collect();
+            let mut truth = vec![Vec::with_capacity(m * g)];
+            for &fi in &functions {
+                let u0 = bank.eval_many(fi, &xs);
+                truth[0].extend(solver.solve_at(&u0, &pts));
+            }
+            (p, truth)
+        }
+        ProblemKind::Kirchhoff => {
+            let q = batcher.q();
+            let coeffs = vrng.normals(m * q);
+            let p = HostTensor::from_f64(vec![m, q], &coeffs);
+            let solver = KirchhoffSolver::default();
+            let mut truth = vec![Vec::with_capacity(m * g)];
+            for i in 0..m {
+                truth[0].extend(solver.solve_at(&coeffs[i * q..(i + 1) * q], &pts));
+            }
+            (p, truth)
+        }
+        ProblemKind::Stokes => {
+            let functions: Vec<usize> = (0..m).collect();
+            let p = batcher.sensors_for(&functions);
+            let bank = batcher.bank().unwrap();
+            let solver = StokesSolver::default();
+            let xs = Tensor::linspace(0.0, 1.0, solver.n).into_data();
+            let mut truth = vec![Vec::with_capacity(m * g); 3];
+            for &fi in &functions {
+                let lid = bank.eval_many(fi, &xs);
+                let fields = solver.solve(&lid);
+                for &(x, y) in &pts {
+                    let (u, v, pr) = fields.at(x, y);
+                    truth[0].push(u);
+                    truth[1].push(v);
+                    truth[2].push(pr);
+                }
+            }
+            (p, truth)
+        }
+        ProblemKind::HighOrder(_) => unreachable!(),
+    };
+
+    // forward pass through the trained operator
+    let mut args: Vec<RunArg> = params.iter().cloned().map(RunArg::F32).collect();
+    args.push(RunArg::F32(p));
+    args.push(RunArg::F32(HostTensor::from_f64(vec![g, 2], grid.data())));
+    let out = exe.run(&args)?;
+    let u = &out[0];
+    if u.dims != vec![n_out, m, g] {
+        bail!("forward output {:?}, expected {:?}", u.dims, vec![n_out, m, g]);
+    }
+
+    // per-channel relative L2 over all functions and grid points
+    let mut errors = Vec::with_capacity(n_out);
+    for o in 0..n_out {
+        let pred = &u.data[o * m * g..(o + 1) * m * g];
+        let tru = &truth[o];
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (a, b) in pred.iter().zip(tru) {
+            num += (*a as f64 - b) * (*a as f64 - b);
+            den += b * b;
+        }
+        errors.push((num / den.max(1e-300)).sqrt());
+    }
+    Ok(errors)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_side_matches_forward_artifact_convention() {
+        assert_eq!(GRID_SIDE * GRID_SIDE, 4096);
+    }
+}

@@ -1,0 +1,226 @@
+//! HLO-text analysis: the "graph memory" instrument of the reproduction.
+//!
+//! The paper measures GPU memory "occupied by the computational graph of
+//! backpropagation" (Table 1 "Graph", Fig. 2 top row).  Our artifacts *are*
+//! the computational graphs -- lowered HLO modules -- so the equivalent
+//! static quantity is computable exactly: parse the HLO text, walk the entry
+//! computation in program order (HLO text is emitted in a valid topological
+//! schedule), track buffer liveness (def to last use), and report the peak
+//! number of simultaneously-live intermediate bytes.  Called computations
+//! (while bodies, map/call targets) contribute their own peak at the call
+//! site, mirroring how an executor would run them.
+//!
+//! The same parse also yields instruction counts and per-opcode histograms,
+//! used by the Fig.-2 benches to show ZCS's graph staying M-invariant while
+//! FuncLoop's grows linearly.
+
+mod parser;
+
+pub use parser::{parse_module, Computation, HloModule, Instruction, ParseError, Shape};
+
+use std::collections::{BTreeMap, HashMap};
+
+/// Aggregate statistics of one HLO module.
+#[derive(Clone, Debug)]
+pub struct ModuleStats {
+    /// instructions across all computations
+    pub total_instructions: usize,
+    /// instructions in the entry computation only
+    pub entry_instructions: usize,
+    /// bytes of the entry parameters (inputs: params + optimizer state + batch)
+    pub parameter_bytes: u64,
+    /// peak simultaneously-live intermediate bytes (the "graph memory")
+    pub peak_live_bytes: u64,
+    /// sum of all intermediate output bytes (an upper bound / churn measure)
+    pub total_intermediate_bytes: u64,
+    /// per-opcode instruction counts
+    pub opcode_histogram: BTreeMap<String, usize>,
+}
+
+impl ModuleStats {
+    pub fn peak_live_mib(&self) -> f64 {
+        self.peak_live_bytes as f64 / (1024.0 * 1024.0)
+    }
+}
+
+/// Parse + analyse an HLO text module.
+pub fn analyze(text: &str) -> Result<ModuleStats, ParseError> {
+    let module = parse_module(text)?;
+    Ok(analyze_module(&module))
+}
+
+/// Analyse a parsed module.
+pub fn analyze_module(module: &HloModule) -> ModuleStats {
+    let mut histogram = BTreeMap::new();
+    let mut total_instructions = 0;
+    for comp in module.computations.values() {
+        total_instructions += comp.instructions.len();
+        for inst in &comp.instructions {
+            *histogram.entry(inst.opcode.clone()).or_insert(0) += 1;
+        }
+    }
+    let entry = module.entry();
+    let mut memo = HashMap::new();
+    let (peak, _out_bytes) = computation_peak(module, entry, &mut memo);
+    let parameter_bytes = entry
+        .instructions
+        .iter()
+        .filter(|i| i.opcode == "parameter")
+        .map(|i| i.shape.byte_size())
+        .sum();
+    let total_intermediate_bytes = entry
+        .instructions
+        .iter()
+        .filter(|i| i.opcode != "parameter")
+        .map(|i| i.shape.byte_size())
+        .sum();
+    ModuleStats {
+        total_instructions,
+        entry_instructions: entry.instructions.len(),
+        parameter_bytes,
+        peak_live_bytes: peak,
+        total_intermediate_bytes,
+        opcode_histogram: histogram,
+    }
+}
+
+/// Peak live bytes of one computation (recursing into called computations);
+/// returns `(peak, root_output_bytes)`.
+fn computation_peak<'m>(
+    module: &'m HloModule,
+    comp: &'m Computation,
+    memo: &mut HashMap<&'m str, (u64, u64)>,
+) -> (u64, u64) {
+    if let Some(&cached) = memo.get(comp.name.as_str()) {
+        return cached;
+    }
+    // last use index per value name
+    let mut last_use: HashMap<&str, usize> = HashMap::new();
+    for (idx, inst) in comp.instructions.iter().enumerate() {
+        for op in &inst.operands {
+            last_use.insert(op.as_str(), idx);
+        }
+    }
+    // root stays live through the end
+    if let Some(root) = comp.instructions.iter().find(|i| i.is_root) {
+        last_use.insert(root.name.as_str(), comp.instructions.len());
+    }
+
+    let mut live: u64 = 0; // parameters excluded: counted by the caller
+    let mut peak: u64 = 0;
+    let mut dying_at: HashMap<usize, Vec<u64>> = HashMap::new();
+    for (idx, inst) in comp.instructions.iter().enumerate() {
+        // free buffers whose last use has passed
+        if let Some(sizes) = dying_at.remove(&idx) {
+            for s in sizes {
+                live = live.saturating_sub(s);
+            }
+        }
+        if inst.opcode == "parameter" {
+            continue;
+        }
+        let sz = inst.shape.byte_size();
+        live += sz;
+        // transient: callee peak is live only during the call
+        let callee_peak: u64 = inst
+            .called
+            .iter()
+            .filter_map(|name| module.computations.get(name.as_str()))
+            .map(|callee| computation_peak(module, callee, memo).0)
+            .sum();
+        peak = peak.max(live + callee_peak);
+        match last_use.get(inst.name.as_str()) {
+            Some(&end) if end > idx => {
+                // a buffer is live *through* its last use: free at end + 1
+                dying_at.entry(end + 1).or_default().push(sz);
+            }
+            _ => {
+                // dead immediately (unused value): free right away
+                live = live.saturating_sub(sz);
+            }
+        }
+    }
+    let root_bytes = comp
+        .instructions
+        .iter()
+        .find(|i| i.is_root)
+        .map(|i| i.shape.byte_size())
+        .unwrap_or(0);
+    memo.insert(comp.name.as_str(), (peak, root_bytes));
+    (peak, root_bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TINY: &str = r#"HloModule test, entry_computation_layout={(f32[4,4]{1,0})->f32[4,4]{1,0}}
+
+ENTRY main.5 {
+  p0 = f32[4,4]{1,0} parameter(0)
+  a = f32[4,4]{1,0} add(p0, p0)
+  b = f32[4,4]{1,0} multiply(a, a)
+  ROOT c = f32[4,4]{1,0} add(b, p0)
+}
+"#;
+
+    #[test]
+    fn analyze_tiny_module() {
+        let s = analyze(TINY).unwrap();
+        assert_eq!(s.entry_instructions, 4);
+        assert_eq!(s.parameter_bytes, 64);
+        // a (64) live while b computed -> a+b = 128 peak; c replaces them
+        assert_eq!(s.peak_live_bytes, 128);
+        assert_eq!(s.opcode_histogram["add"], 2);
+        assert_eq!(s.opcode_histogram["multiply"], 1);
+    }
+
+    #[test]
+    fn liveness_frees_dead_values() {
+        let src = r#"HloModule t
+
+ENTRY e {
+  p = f32[1024]{0} parameter(0)
+  a = f32[1024]{0} add(p, p)
+  b = f32[1024]{0} add(a, a)
+  c = f32[1024]{0} add(b, b)
+  ROOT d = f32[1024]{0} add(c, c)
+}
+"#;
+        // chain: only one intermediate live at a time (plus the new one)
+        let s = analyze(src).unwrap();
+        assert_eq!(s.peak_live_bytes, 2 * 4096);
+        assert_eq!(s.total_intermediate_bytes, 4 * 4096);
+    }
+
+    #[test]
+    fn called_computation_counts_transiently() {
+        let src = r#"HloModule t
+
+helper {
+  hp = f32[256]{0} parameter(0)
+  h1 = f32[256]{0} add(hp, hp)
+  ROOT h2 = f32[256]{0} multiply(h1, h1)
+}
+
+ENTRY e {
+  p = f32[256]{0} parameter(0)
+  x = f32[256]{0} call(p), to_apply=helper
+  ROOT y = f32[256]{0} add(x, x)
+}
+"#;
+        let s = analyze(src).unwrap();
+        // during the call: x's output (1024) + helper peak (h1+h2 = 2048)
+        assert_eq!(s.peak_live_bytes, 1024 + 2048);
+    }
+
+    #[test]
+    fn real_artifacts_analyze_when_present() {
+        let path = "artifacts/reaction_diffusion__zcs__bench.loss.hlo.txt";
+        if let Ok(text) = std::fs::read_to_string(path) {
+            let s = analyze(&text).unwrap();
+            assert!(s.entry_instructions > 50);
+            assert!(s.peak_live_bytes > 0);
+        }
+    }
+}

@@ -1,0 +1,397 @@
+//! Hand-rolled parser for XLA HLO text (the subset jax-lowered modules use).
+//!
+//! Grammar handled:
+//!
+//! ```text
+//! HloModule <name>, <attrs...>
+//!
+//! <comp-name> {                      // computation
+//!   <name> = <shape> <opcode>(<operands>), <attr>=<val>, ...
+//!   ROOT <name> = <shape> <opcode>(...)
+//! }
+//!
+//! ENTRY <comp-name> { ... }
+//! ```
+//!
+//! Shapes: `f32[8,50]{1,0}`, scalars `f32[]`, tuples `(f32[2]{0}, s32[])`.
+//! Operand lists may contain inline annotations (`/*index=5*/`) and nested
+//! parens in attributes; the parser tracks depth rather than splitting
+//! naively.
+
+use std::collections::BTreeMap;
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum ParseError {
+    #[error("line {0}: {1}")]
+    Line(usize, String),
+    #[error("module has no ENTRY computation")]
+    NoEntry,
+}
+
+/// Element type + dimensions; tuples hold their elements.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Shape {
+    Array { dtype: String, dims: Vec<usize> },
+    Tuple(Vec<Shape>),
+    /// opaque/token and anything unrecognised: contributes zero bytes
+    Other(String),
+}
+
+impl Shape {
+    pub fn byte_size(&self) -> u64 {
+        match self {
+            Shape::Array { dtype, dims } => {
+                let n: u64 = dims.iter().map(|&d| d as u64).product();
+                n * dtype_bytes(dtype)
+            }
+            Shape::Tuple(parts) => parts.iter().map(Shape::byte_size).sum(),
+            Shape::Other(_) => 0,
+        }
+    }
+
+    pub fn element_count(&self) -> u64 {
+        match self {
+            Shape::Array { dims, .. } => dims.iter().map(|&d| d as u64).product(),
+            Shape::Tuple(parts) => parts.iter().map(Shape::element_count).sum(),
+            Shape::Other(_) => 0,
+        }
+    }
+}
+
+fn dtype_bytes(dtype: &str) -> u64 {
+    match dtype {
+        "pred" | "s8" | "u8" => 1,
+        "f16" | "bf16" | "s16" | "u16" => 2,
+        "f32" | "s32" | "u32" => 4,
+        "f64" | "s64" | "u64" | "c64" => 8,
+        "c128" => 16,
+        _ => 4, // conservative default
+    }
+}
+
+/// One HLO instruction.
+#[derive(Clone, Debug)]
+pub struct Instruction {
+    pub name: String,
+    pub shape: Shape,
+    pub opcode: String,
+    pub operands: Vec<String>,
+    /// computations referenced via to_apply= / body= / condition= ...
+    pub called: Vec<String>,
+    pub is_root: bool,
+}
+
+/// One computation (a named block of instructions).
+#[derive(Clone, Debug)]
+pub struct Computation {
+    pub name: String,
+    pub instructions: Vec<Instruction>,
+    pub is_entry: bool,
+}
+
+/// A parsed module.
+#[derive(Clone, Debug)]
+pub struct HloModule {
+    pub name: String,
+    pub computations: BTreeMap<String, Computation>,
+    pub entry_name: String,
+}
+
+impl HloModule {
+    pub fn entry(&self) -> &Computation {
+        &self.computations[&self.entry_name]
+    }
+}
+
+/// Parse a full HLO text module.
+pub fn parse_module(text: &str) -> Result<HloModule, ParseError> {
+    let mut module_name = String::new();
+    let mut computations = BTreeMap::new();
+    let mut entry_name = None;
+    let mut current: Option<Computation> = None;
+
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with("//") {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("HloModule ") {
+            module_name = rest.split([',', ' ']).next().unwrap_or("").to_string();
+            continue;
+        }
+        if line == "}" {
+            if let Some(comp) = current.take() {
+                if comp.is_entry {
+                    entry_name = Some(comp.name.clone());
+                }
+                computations.insert(comp.name.clone(), comp);
+            }
+            continue;
+        }
+        if line.ends_with('{') && current.is_none() {
+            let header = line.trim_end_matches('{').trim();
+            let (is_entry, name) = match header.strip_prefix("ENTRY ") {
+                Some(n) => (true, n.trim()),
+                None => (false, header),
+            };
+            // strip any trailing annotations after the name
+            let name = name.split_whitespace().next().unwrap_or(name);
+            current = Some(Computation {
+                name: name.to_string(),
+                instructions: Vec::new(),
+                is_entry,
+            });
+            continue;
+        }
+        if let Some(comp) = current.as_mut() {
+            let inst = parse_instruction(line)
+                .map_err(|e| ParseError::Line(ln + 1, format!("{e}: {line}")))?;
+            comp.instructions.push(inst);
+        }
+        // anything outside a computation body (module attrs) is skipped
+    }
+    let entry_name = entry_name.ok_or(ParseError::NoEntry)?;
+    Ok(HloModule { name: module_name, computations, entry_name })
+}
+
+fn parse_instruction(line: &str) -> Result<Instruction, String> {
+    let (is_root, line) = match line.strip_prefix("ROOT ") {
+        Some(rest) => (true, rest),
+        None => (false, line),
+    };
+    let eq = line.find(" = ").ok_or("missing ' = '")?;
+    let name = line[..eq].trim().to_string();
+    let rest = &line[eq + 3..];
+
+    // shape: up to the opcode token; shapes may be tuples with spaces
+    let (shape, after_shape) = parse_shape_prefix(rest)?;
+    let after_shape = after_shape.trim_start();
+
+    // opcode token ends at '('
+    let paren = after_shape.find('(').ok_or("missing '(' after opcode")?;
+    let opcode = after_shape[..paren].trim().to_string();
+
+    // operand list: balanced parens scan
+    let body = &after_shape[paren..];
+    let (operand_str, tail) = balanced_parens(body)?;
+    let operands = split_operands(operand_str)
+        .into_iter()
+        .map(|tok| {
+            // operand entries look like `name` or `f32[2]{0} name`; keep the
+            // last identifier-ish token
+            tok.split_whitespace().last().unwrap_or("").to_string()
+        })
+        .filter(|s| !s.is_empty())
+        .collect();
+
+    // called computations in attributes
+    let mut called = Vec::new();
+    for key in ["to_apply=", "body=", "condition=", "branch_computations={"] {
+        let mut rest = tail;
+        while let Some(p) = rest.find(key) {
+            let after = &rest[p + key.len()..];
+            let end = after
+                .find([',', ' ', '}', ')'])
+                .unwrap_or(after.len());
+            let name = after[..end].trim();
+            if !name.is_empty() {
+                called.push(name.to_string());
+            }
+            rest = &after[end..];
+        }
+    }
+
+    Ok(Instruction { name, shape, opcode, operands, called, is_root })
+}
+
+/// Parse a shape at the start of `s`; return (shape, remainder).
+fn parse_shape_prefix(s: &str) -> Result<(Shape, &str), String> {
+    let s = s.trim_start();
+    if let Some(rest) = s.strip_prefix('(') {
+        // tuple shape
+        let mut parts = Vec::new();
+        let mut rem = rest;
+        loop {
+            rem = rem.trim_start();
+            // skip inline /*index=N*/ comments
+            while let Some(r) = rem.strip_prefix("/*") {
+                let end = r.find("*/").ok_or("unterminated comment")?;
+                rem = r[end + 2..].trim_start();
+            }
+            if let Some(r) = rem.strip_prefix(')') {
+                return Ok((Shape::Tuple(parts), r));
+            }
+            let (sh, r) = parse_shape_prefix(rem)?;
+            parts.push(sh);
+            rem = r.trim_start();
+            if let Some(r) = rem.strip_prefix(',') {
+                rem = r;
+            }
+        }
+    }
+    // array shape: dtype[dims]{layout}?
+    let bracket = s.find('[').ok_or("expected '[' in shape")?;
+    let dtype = s[..bracket].trim().to_string();
+    if dtype.is_empty() || dtype.contains(' ') {
+        return Err(format!("bad dtype in shape: {s:?}"));
+    }
+    let close = s[bracket..].find(']').ok_or("missing ']' in shape")? + bracket;
+    let dims_str = &s[bracket + 1..close];
+    let dims: Vec<usize> = if dims_str.trim().is_empty() {
+        Vec::new()
+    } else {
+        dims_str
+            .split(',')
+            .map(|d| d.trim().parse().map_err(|_| format!("bad dim {d:?}")))
+            .collect::<Result<_, _>>()?
+    };
+    let mut rest = &s[close + 1..];
+    if let Some(r) = rest.strip_prefix('{') {
+        let end = r.find('}').ok_or("missing '}' in layout")?;
+        rest = &r[end + 1..];
+    }
+    Ok((Shape::Array { dtype, dims }, rest))
+}
+
+/// Given a string starting with '(', return (inner contents, after-closing).
+fn balanced_parens(s: &str) -> Result<(&str, &str), String> {
+    debug_assert!(s.starts_with('('));
+    let mut depth = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '(' | '{' | '[' => depth += 1,
+            ')' | '}' | ']' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Ok((&s[1..i], &s[i + 1..]));
+                }
+            }
+            _ => {}
+        }
+    }
+    Err("unbalanced parentheses".into())
+}
+
+/// Split an operand list on top-level commas.
+fn split_operands(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '(' | '{' | '[' => depth += 1,
+            ')' | '}' | ']' => depth = depth.saturating_sub(1),
+            ',' if depth == 0 => {
+                let tok = s[start..i].trim();
+                if !tok.is_empty() {
+                    out.push(tok);
+                }
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    let tok = s[start..].trim();
+    if !tok.is_empty() {
+        out.push(tok);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_scalar_and_array() {
+        let (s, rest) = parse_shape_prefix("f32[] rest").unwrap();
+        assert_eq!(s, Shape::Array { dtype: "f32".into(), dims: vec![] });
+        assert_eq!(s.byte_size(), 4);
+        assert_eq!(rest.trim(), "rest");
+
+        let (s, _) = parse_shape_prefix("f32[8,50]{1,0} x").unwrap();
+        assert_eq!(s.byte_size(), 8 * 50 * 4);
+    }
+
+    #[test]
+    fn shape_tuple_with_comments() {
+        let (s, _) =
+            parse_shape_prefix("(s32[], f32[2,2]{1,0}, /*index=2*/pred[]) y").unwrap();
+        assert_eq!(s.byte_size(), 4 + 16 + 1);
+    }
+
+    #[test]
+    fn instruction_basic() {
+        let i = parse_instruction("a.1 = f32[4]{0} add(b.2, c.3)").unwrap();
+        assert_eq!(i.name, "a.1");
+        assert_eq!(i.opcode, "add");
+        assert_eq!(i.operands, vec!["b.2", "c.3"]);
+        assert!(!i.is_root);
+    }
+
+    #[test]
+    fn instruction_root_with_attrs() {
+        let i = parse_instruction(
+            "ROOT t = (f32[], f32[]) tuple(x, y), metadata={op_name=\"foo\"}",
+        )
+        .unwrap();
+        assert!(i.is_root);
+        assert_eq!(i.opcode, "tuple");
+        assert_eq!(i.shape.byte_size(), 8);
+    }
+
+    #[test]
+    fn instruction_with_called_computation() {
+        let i = parse_instruction(
+            "w = s32[] while(init), condition=cond.1, body=body.2",
+        )
+        .unwrap();
+        let mut called = i.called.clone();
+        called.sort();
+        assert_eq!(called, vec!["body.2", "cond.1"]);
+    }
+
+    #[test]
+    fn instruction_dynamic_slice_attr() {
+        let i = parse_instruction(
+            "d = f32[8,50]{1,0} dynamic-slice(g, s, c), dynamic_slice_sizes={8,50}",
+        )
+        .unwrap();
+        assert_eq!(i.opcode, "dynamic-slice");
+        assert_eq!(i.operands.len(), 3);
+    }
+
+    #[test]
+    fn module_round_trip_on_real_artifact() {
+        let path = "artifacts/reaction_diffusion__zcs__bench.loss.hlo.txt";
+        if let Ok(text) = std::fs::read_to_string(path) {
+            let m = parse_module(&text).unwrap();
+            assert!(m.computations.len() > 1);
+            let entry = m.entry();
+            assert!(entry.instructions.iter().any(|i| i.is_root));
+            // 22 inputs per the manifest
+            let n_params =
+                entry.instructions.iter().filter(|i| i.opcode == "parameter").count();
+            assert_eq!(n_params, 22);
+        }
+    }
+
+    #[test]
+    fn rejects_module_without_entry() {
+        assert!(matches!(
+            parse_module("HloModule x\n\ncomp {\n  ROOT a = f32[] parameter(0)\n}\n"),
+            Err(ParseError::NoEntry)
+        ));
+    }
+
+    #[test]
+    fn operand_annotations_stripped() {
+        let i = parse_instruction(
+            "c = f32[2]{0} call(f32[2]{0} operand.1, x.2), to_apply=fn.3",
+        )
+        .unwrap();
+        assert_eq!(i.operands, vec!["operand.1", "x.2"]);
+        assert_eq!(i.called, vec!["fn.3"]);
+    }
+}

@@ -1,0 +1,34 @@
+//! # zcs — Zero Coordinate Shift for physics-informed operator learning
+//!
+//! A three-layer (Rust coordinator / JAX model / Pallas kernels, AOT via
+//! PJRT) reproduction of *"Zero Coordinate Shift: Whetted Automatic
+//! Differentiation for Physics-informed Operator Learning"* (Leng, Shankar,
+//! Thiyagalingam, 2023).
+//!
+//! The Python layers (`python/compile/`) run **once** at build time
+//! (`make artifacts`) and lower physics-informed DeepONet training steps —
+//! one per (problem × AD-strategy) — to HLO text. This crate owns everything
+//! on the request path: loading and executing those artifacts through the
+//! PJRT CPU client ([`runtime`]), orchestrating training ([`coordinator`]),
+//! generating workloads ([`sampler`]), validating against independent
+//! numerical solvers ([`solvers`]), and regenerating every table and figure
+//! of the paper's evaluation ([`hlostats`] + the `rust/benches/` harnesses).
+//!
+//! A native tape-based autodiff engine ([`autodiff`]) additionally
+//! demonstrates the ZCS graph-size claim without any XLA involvement and
+//! hosts the property tests of the paper's eqs. (7), (11) and (12).
+
+pub mod autodiff;
+pub mod config;
+pub mod coordinator;
+pub mod hlostats;
+pub mod pde;
+pub mod rng;
+pub mod runtime;
+pub mod sampler;
+pub mod solvers;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

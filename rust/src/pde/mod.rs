@@ -1,0 +1,136 @@
+//! Problem descriptors: the Rust-side mirror of `python/compile/pdes.py`.
+//!
+//! The Python layer owns the *physics* (residuals are baked into the HLO
+//! artifacts); this module owns everything the coordinator must know to
+//! *feed* those artifacts: which input-function prior to sample, how each
+//! batch array is filled, and which reference solver validates the result.
+//! The two sides meet through `artifacts/meta.json` -- batch array names
+//! here must match the python `batch_schema` names exactly (checked by the
+//! coordinator at batch-build time and by integration tests).
+
+use crate::sampler::Kernel;
+
+/// The four Table-1 operators plus the Fig.-2 scaling operator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProblemKind {
+    ReactionDiffusion,
+    Burgers,
+    Kirchhoff,
+    Stokes,
+    /// eq. (15) with the given max differential order P
+    HighOrder(usize),
+}
+
+impl ProblemKind {
+    /// Parse the manifest's problem name.
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "reaction_diffusion" => Some(Self::ReactionDiffusion),
+            "burgers" => Some(Self::Burgers),
+            "kirchhoff" => Some(Self::Kirchhoff),
+            "stokes" => Some(Self::Stokes),
+            _ => name
+                .strip_prefix("highorder_p")
+                .and_then(|p| p.parse().ok())
+                .map(Self::HighOrder),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Self::ReactionDiffusion => "reaction_diffusion".into(),
+            Self::Burgers => "burgers".into(),
+            Self::Kirchhoff => "kirchhoff".into(),
+            Self::Stokes => "stokes".into(),
+            Self::HighOrder(p) => format!("highorder_p{p}"),
+        }
+    }
+
+    /// Output channels (u / {u,v,p}).
+    pub fn n_out(&self) -> usize {
+        match self {
+            Self::Stokes => 3,
+            _ => 1,
+        }
+    }
+
+    /// Max differential order appearing in the PDE (the paper's P).
+    pub fn p_order(&self) -> usize {
+        match self {
+            Self::Kirchhoff => 4,
+            Self::HighOrder(p) => *p,
+            _ => 2,
+        }
+    }
+
+    /// The GP prior for the input functions, if the problem uses one
+    /// (Kirchhoff samples i.i.d. normal coefficients instead).
+    pub fn function_prior(&self) -> Option<Kernel> {
+        match self {
+            Self::ReactionDiffusion | Self::HighOrder(_) => {
+                Some(Kernel::Rbf { length_scale: 0.2, variance: 1.0 })
+            }
+            // Burgers initial conditions must be periodic (eq. 17 BC)
+            Self::Burgers => Some(Kernel::PeriodicRbf { length_scale: 1.0, variance: 1.0 }),
+            // lid velocity; masked by x(1-x) for corner compatibility
+            Self::Stokes => Some(Kernel::Rbf { length_scale: 0.2, variance: 1.0 }),
+            Self::Kirchhoff => None,
+        }
+    }
+
+    /// Whether the Stokes corner-compatibility mask applies.
+    pub fn lid_mask(&self) -> bool {
+        matches!(self, Self::Stokes)
+    }
+
+    /// PDE constants, as named in the paper.
+    pub fn constants(&self) -> Vec<(&'static str, f64)> {
+        match self {
+            Self::ReactionDiffusion => vec![("D", 0.01), ("k", 0.01)],
+            Self::Burgers => vec![("nu", 0.01)],
+            Self::Kirchhoff => vec![("D_flex", 0.01)],
+            Self::Stokes => vec![("mu", 0.01)],
+            Self::HighOrder(_) => vec![],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn name_round_trip() {
+        for k in [
+            ProblemKind::ReactionDiffusion,
+            ProblemKind::Burgers,
+            ProblemKind::Kirchhoff,
+            ProblemKind::Stokes,
+            ProblemKind::HighOrder(3),
+        ] {
+            assert_eq!(ProblemKind::from_name(&k.name()), Some(k));
+        }
+        assert_eq!(ProblemKind::from_name("nope"), None);
+        assert_eq!(ProblemKind::from_name("highorder_px"), None);
+    }
+
+    #[test]
+    fn stokes_is_vector_valued() {
+        assert_eq!(ProblemKind::Stokes.n_out(), 3);
+        assert_eq!(ProblemKind::Burgers.n_out(), 1);
+    }
+
+    #[test]
+    fn kirchhoff_is_fourth_order_with_no_gp() {
+        assert_eq!(ProblemKind::Kirchhoff.p_order(), 4);
+        assert!(ProblemKind::Kirchhoff.function_prior().is_none());
+    }
+
+    #[test]
+    fn burgers_prior_is_periodic() {
+        assert!(matches!(
+            ProblemKind::Burgers.function_prior(),
+            Some(Kernel::PeriodicRbf { .. })
+        ));
+    }
+}

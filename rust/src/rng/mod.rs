@@ -1,0 +1,190 @@
+//! Deterministic, seedable random numbers: PCG64 + Box-Muller normals.
+//!
+//! Every stochastic component of the coordinator (collocation resampling,
+//! GP function sampling, parameter initialisation) draws from this module so
+//! that whole training runs are reproducible from a single `u64` seed --
+//! a hard requirement for the paper-reproduction harness, where the same
+//! batch stream must be replayed under all four AD strategies.
+
+/// PCG-XSL-RR 128/64 (the "pcg64" reference variant, O'Neill 2014).
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+    /// cached second Box-Muller draw
+    cached: Option<f64>,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Seed the generator; `stream` selects an independent sequence.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let inc = ((stream as u128) << 1) | 1;
+        let mut rng = Self { state: 0, inc, cached: None };
+        rng.step();
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.step();
+        rng
+    }
+
+    /// Convenience: stream 0.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    fn step(&mut self) {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+    }
+
+    /// Next raw 64-bit output (XSL-RR output function).
+    pub fn next_u64(&mut self) -> u64 {
+        self.step();
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        let rot = (self.state >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in `[0, 1)` with 53-bit resolution.
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in `[0, n)`.
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.uniform() * n as f64) as usize % n.max(1)
+    }
+
+    /// Standard normal via Box-Muller (both values used).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.cached.take() {
+            return z;
+        }
+        // u1 in (0, 1] keeps the log finite
+        let u1 = 1.0 - self.uniform();
+        let u2 = self.uniform();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+        self.cached = Some(r * s);
+        r * c
+    }
+
+    /// Fill a buffer with standard normals.
+    pub fn normals(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.normal()).collect()
+    }
+
+    /// Fill a buffer with uniforms in `[lo, hi)`.
+    pub fn uniforms_in(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| self.uniform_in(lo, hi)).collect()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `0..n` (partial Fisher-Yates).
+    pub fn choose(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "choose({k}) from {n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut a = Pcg64::seeded(42);
+        let mut b = Pcg64::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_are_independent() {
+        let mut a = Pcg64::new(42, 0);
+        let mut b = Pcg64::new(42, 1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Pcg64::seeded(7);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_and_var() {
+        let mut r = Pcg64::seeded(1);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.uniform()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 5e-3, "mean={mean}");
+        assert!((var - 1.0 / 12.0).abs() < 5e-3, "var={var}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::seeded(2);
+        let n = 100_000;
+        let xs = r.normals(n);
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 2e-2, "mean={mean}");
+        assert!((var - 1.0).abs() < 3e-2, "var={var}");
+    }
+
+    #[test]
+    fn choose_is_distinct_and_in_range() {
+        let mut r = Pcg64::seeded(3);
+        let picked = r.choose(100, 20);
+        assert_eq!(picked.len(), 20);
+        let mut sorted = picked.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 20);
+        assert!(picked.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn shuffle_preserves_elements() {
+        let mut r = Pcg64::seeded(4);
+        let mut xs: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Pcg64::seeded(5);
+        for _ in 0..1000 {
+            assert!(r.below(7) < 7);
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! Typed view of `artifacts/meta.json` (written by `python/compile/aot.py`).
+
+use crate::util::json::{Json, JsonError};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+/// One positional input/output of an artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// Manifest entry for one artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub kind: String, // train | loss | forward
+    pub problem: String,
+    pub strategy: String,
+    pub scale: String,
+    pub m: usize,
+    pub n: usize,
+    pub p_order: usize,
+    pub n_params: usize,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    /// ordered (name, shape) of the flat parameter tuple
+    pub param_layout: Vec<(String, Vec<usize>)>,
+    /// ordered (name, shape) of the per-step batch arrays
+    pub batch_schema: Vec<(String, Vec<usize>)>,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+fn io_list(v: &Json) -> Result<Vec<IoSpec>, JsonError> {
+    v.as_arr()?
+        .iter()
+        .map(|e| {
+            Ok(IoSpec {
+                name: e.get("name")?.as_str()?.to_string(),
+                shape: e
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<_, _>>()?,
+                dtype: e.get("dtype")?.as_str()?.to_string(),
+            })
+        })
+        .collect()
+}
+
+fn named_shape_list(v: &Json) -> Result<Vec<(String, Vec<usize>)>, JsonError> {
+    v.as_arr()?
+        .iter()
+        .map(|pair| {
+            let pair = pair.as_arr()?;
+            let name = pair[0].as_str()?.to_string();
+            let shape = pair[1]
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_, _>>()?;
+            Ok((name, shape))
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn parse(root: &Json) -> Result<Self> {
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in root.get("artifacts")?.as_obj()? {
+            let meta = ArtifactMeta {
+                file: entry.get("file")?.as_str()?.to_string(),
+                kind: entry.get("kind")?.as_str()?.to_string(),
+                problem: entry.get("problem")?.as_str()?.to_string(),
+                strategy: entry.get("strategy")?.as_str()?.to_string(),
+                scale: entry.get("scale")?.as_str()?.to_string(),
+                m: entry.get("m")?.as_usize()?,
+                n: entry.get("n")?.as_usize()?,
+                p_order: entry.get("p_order")?.as_usize()?,
+                n_params: entry.get("n_params")?.as_usize()?,
+                inputs: io_list(entry.get("inputs")?)
+                    .with_context(|| format!("artifact {name}: inputs"))?,
+                outputs: io_list(entry.get("outputs")?)
+                    .with_context(|| format!("artifact {name}: outputs"))?,
+                param_layout: named_shape_list(entry.get("param_layout")?)?,
+                batch_schema: named_shape_list(entry.get("batch_schema")?)?,
+            };
+            artifacts.insert(name.clone(), meta);
+        }
+        Ok(Self { artifacts })
+    }
+
+    /// All artifacts of a given kind for a problem, keyed by strategy.
+    pub fn by_problem_kind(&self, problem: &str, kind: &str) -> BTreeMap<String, String> {
+        self.artifacts
+            .iter()
+            .filter(|(_, a)| a.problem == problem && a.kind == kind)
+            .map(|(name, a)| (a.strategy.clone(), name.clone()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Json {
+        Json::parse(
+            r#"{
+              "artifacts": {
+                "rd__zcs__bench.train": {
+                  "file": "rd__zcs__bench.train.hlo.txt",
+                  "kind": "train", "problem": "reaction_diffusion",
+                  "strategy": "zcs", "scale": "bench",
+                  "m": 8, "n": 256, "p_order": 2, "n_params": 17,
+                  "inputs": [{"name": "p", "shape": [8, 50], "dtype": "f32"}],
+                  "outputs": [{"name": "loss", "shape": [], "dtype": "f32"}],
+                  "param_layout": [["branch.0.w", [50, 64]]],
+                  "batch_schema": [["p", [8, 50]]]
+                }
+              }
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_entry() {
+        let m = Manifest::parse(&sample()).unwrap();
+        let a = &m.artifacts["rd__zcs__bench.train"];
+        assert_eq!(a.kind, "train");
+        assert_eq!(a.m, 8);
+        assert_eq!(a.inputs[0].shape, vec![8, 50]);
+        assert_eq!(a.param_layout[0].0, "branch.0.w");
+    }
+
+    #[test]
+    fn by_problem_kind_filters() {
+        let m = Manifest::parse(&sample()).unwrap();
+        let got = m.by_problem_kind("reaction_diffusion", "train");
+        assert_eq!(got.get("zcs").unwrap(), "rd__zcs__bench.train");
+        assert!(m.by_problem_kind("stokes", "train").is_empty());
+    }
+
+    #[test]
+    fn parses_real_manifest_when_present() {
+        if let Ok(text) = std::fs::read_to_string("artifacts/meta.json") {
+            let m = Manifest::parse(&Json::parse(&text).unwrap()).unwrap();
+            assert!(!m.artifacts.is_empty());
+            for (name, a) in &m.artifacts {
+                assert!(!a.inputs.is_empty(), "{name} has inputs");
+                assert!(!a.outputs.is_empty(), "{name} has outputs");
+                if a.kind == "train" {
+                    // params + m + v + step + batch
+                    assert_eq!(
+                        a.inputs.len(),
+                        3 * a.n_params + 1 + a.batch_schema.len(),
+                        "{name}"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,238 @@
+//! PJRT runtime: load AOT HLO artifacts and execute them on the request path.
+//!
+//! Python lowers every (problem x strategy) training step to HLO **text**
+//! once (`make artifacts`); this module owns everything after that:
+//!
+//! * [`Manifest`] -- the parsed `artifacts/meta.json` describing each
+//!   artifact's positional inputs/outputs, parameter layout and batch schema;
+//! * [`Runtime`] -- a PJRT CPU client plus a lazy compile cache: an artifact
+//!   is parsed (`HloModuleProto::from_text_file`, text format -- see
+//!   DESIGN.md for why not serialized protos) and compiled at most once per
+//!   process, then executed any number of times;
+//! * [`HostTensor`] -- the host-side f32 value crossing the boundary.
+//!
+//! Python never appears here: the binary is self-contained given the
+//! `artifacts/` directory.
+
+mod manifest;
+
+pub use manifest::{ArtifactMeta, IoSpec, Manifest};
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+/// Host-side tensor of f32 (the artifact ABI type).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Self { dims, data }
+    }
+
+    pub fn zeros(dims: &[usize]) -> Self {
+        Self { dims: dims.to_vec(), data: vec![0.0; dims.iter().product()] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { dims: vec![], data: vec![v] }
+    }
+
+    pub fn from_f64(dims: Vec<usize>, data: &[f64]) -> Self {
+        Self::new(dims, data.iter().map(|&x| x as f32).collect())
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        // single-copy path: bytes straight into a shaped literal (the
+        // vec1+reshape route copies twice -- measured in EXPERIMENTS.md §Perf)
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(self.data.as_ptr() as *const u8, 4 * self.data.len())
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &self.dims,
+            bytes,
+        )?)
+    }
+}
+
+/// One compiled artifact, ready to execute.
+pub struct Executable {
+    pub name: String,
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+    /// wall time spent in XLA compilation for this artifact
+    pub compile_time: Duration,
+}
+
+impl Executable {
+    /// Execute with positional f32 inputs (+ one i32 scalar allowed where the
+    /// manifest says dtype "s32" -- the Adam step counter).
+    pub fn run(&self, inputs: &[RunArg]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (arg, spec) in inputs.iter().zip(&self.meta.inputs) {
+            literals.push(arg.to_literal(spec).with_context(|| {
+                format!("{}: building input {}", self.name, spec.name)
+            })?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.into_iter().zip(&self.meta.outputs) {
+            out.push(literal_to_host(lit, spec)?);
+        }
+        Ok(out)
+    }
+}
+
+/// A positional input: f32 tensor or i32 scalar.
+#[derive(Clone, Debug)]
+pub enum RunArg {
+    F32(HostTensor),
+    I32(i32),
+}
+
+impl RunArg {
+    fn to_literal(&self, spec: &IoSpec) -> Result<xla::Literal> {
+        match self {
+            RunArg::F32(t) => {
+                if t.dims != spec.shape {
+                    bail!("shape mismatch for {}: {:?} vs {:?}", spec.name, t.dims, spec.shape);
+                }
+                t.to_literal()
+            }
+            RunArg::I32(v) => Ok(xla::Literal::from(*v)),
+        }
+    }
+}
+
+impl From<HostTensor> for RunArg {
+    fn from(t: HostTensor) -> Self {
+        RunArg::F32(t)
+    }
+}
+
+fn literal_to_host(lit: xla::Literal, spec: &IoSpec) -> Result<HostTensor> {
+    if spec.dtype == "s32" {
+        let v = lit.to_vec::<i32>()?;
+        return Ok(HostTensor::new(spec.shape.clone(), v.iter().map(|&x| x as f32).collect()));
+    }
+    let v = lit.to_vec::<f32>()?;
+    Ok(HostTensor::new(spec.shape.clone(), v))
+}
+
+/// PJRT CPU client + artifact registry with a compile cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    artifact_dir: PathBuf,
+    cache: RefCell<HashMap<String, std::rc::Rc<Executable>>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (expects `meta.json` inside).
+    pub fn open(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {meta_path:?}; run `make artifacts` first"))?;
+        let manifest = Manifest::parse(&Json::parse(&text)?)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, manifest, artifact_dir: dir, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact by manifest name (cached).
+    pub fn load(&self, name: &str) -> Result<std::rc::Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?
+            .clone();
+        let path = self.artifact_dir.join(&meta.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let compiled = std::rc::Rc::new(Executable {
+            name: name.to_string(),
+            meta,
+            exe,
+            compile_time: t0.elapsed(),
+        });
+        self.cache.borrow_mut().insert(name.to_string(), compiled.clone());
+        Ok(compiled)
+    }
+
+    /// Raw HLO text of an artifact (for `hlostats`).
+    pub fn artifact_text(&self, name: &str) -> Result<String> {
+        let meta = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?;
+        Ok(std::fs::read_to_string(self.artifact_dir.join(&meta.file))?)
+    }
+
+    /// Names of all artifacts, sorted.
+    pub fn artifact_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.manifest.artifacts.keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shape_checked() {
+        let t = HostTensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.dims, vec![2, 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn host_tensor_bad_shape_panics() {
+        HostTensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn scalar_tensor() {
+        let t = HostTensor::scalar(4.5);
+        assert!(t.dims.is_empty());
+        assert_eq!(t.data, vec![4.5]);
+    }
+
+    #[test]
+    fn from_f64_converts() {
+        let t = HostTensor::from_f64(vec![2], &[1.5, 2.5]);
+        assert_eq!(t.data, vec![1.5f32, 2.5f32]);
+    }
+}

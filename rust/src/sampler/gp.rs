@@ -1,0 +1,242 @@
+//! 1-D Gaussian-process sampling on a fine grid + a reusable function bank.
+
+use crate::rng::Pcg64;
+use crate::tensor::{cholesky, CholeskyError, Tensor};
+
+/// Covariance kernels for the GP input-function prior.
+#[derive(Clone, Copy, Debug)]
+pub enum Kernel {
+    /// Squared-exponential `v * exp(-(x-y)^2 / (2 l^2))` -- what DeepXDE's
+    /// demo and the paper's data use.
+    Rbf { length_scale: f64, variance: f64 },
+    /// Periodic RBF on the unit circle (Burgers initial conditions must be
+    /// periodic): `v * exp(-2 sin^2(pi |x-y|) / l^2)`.
+    PeriodicRbf { length_scale: f64, variance: f64 },
+}
+
+impl Kernel {
+    fn eval(&self, x: f64, y: f64) -> f64 {
+        match *self {
+            Kernel::Rbf { length_scale, variance } => {
+                let d = x - y;
+                variance * (-d * d / (2.0 * length_scale * length_scale)).exp()
+            }
+            Kernel::PeriodicRbf { length_scale, variance } => {
+                let s = (std::f64::consts::PI * (x - y)).sin();
+                variance * (-2.0 * s * s / (length_scale * length_scale)).exp()
+            }
+        }
+    }
+}
+
+/// Samples GP realisations on `grid_n` equally spaced points of `[0, 1]`.
+pub struct GpSampler1d {
+    kernel: Kernel,
+    grid: Vec<f64>,
+    /// lower Cholesky factor of the (jittered) covariance matrix
+    factor: Tensor,
+}
+
+impl GpSampler1d {
+    pub fn new(kernel: Kernel, grid_n: usize) -> Self {
+        let grid: Vec<f64> = Tensor::linspace(0.0, 1.0, grid_n).into_data();
+        let mut cov = Tensor::zeros(&[grid_n, grid_n]);
+        for i in 0..grid_n {
+            for j in 0..grid_n {
+                cov.set2(i, j, kernel.eval(grid[i], grid[j]));
+            }
+        }
+        // nugget for numerical PD-ness
+        for i in 0..grid_n {
+            let v = cov.at2(i, i) + 1e-8;
+            cov.set2(i, i, v);
+        }
+        let factor = cholesky(&cov).expect("jittered GP covariance must be SPD");
+        Self { kernel, grid, factor }
+    }
+
+    pub fn grid(&self) -> &[f64] {
+        &self.grid
+    }
+
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
+    }
+
+    /// One realisation: `f = L z`, `z ~ N(0, I)`.
+    pub fn sample(&self, rng: &mut Pcg64) -> Vec<f64> {
+        let n = self.grid.len();
+        let z = rng.normals(n);
+        let mut f = vec![0.0; n];
+        // factor is lower-triangular: row i uses z[0..=i]
+        for i in 0..n {
+            let mut acc = 0.0;
+            for k in 0..=i {
+                acc += self.factor.at2(i, k) * z[k];
+            }
+            f[i] = acc;
+        }
+        f
+    }
+}
+
+/// A pre-generated bank of GP realisations with linear interpolation --
+/// the in-repo stand-in for the paper's "1000 sampled functions" datasets.
+pub struct FunctionBank {
+    grid: Vec<f64>,
+    /// `n_functions x grid_n`, row-major
+    values: Tensor,
+}
+
+impl FunctionBank {
+    /// Draw `n_functions` realisations from the sampler.
+    pub fn generate(
+        sampler: &GpSampler1d,
+        n_functions: usize,
+        rng: &mut Pcg64,
+    ) -> Result<Self, CholeskyError> {
+        let gn = sampler.grid().len();
+        let mut data = Vec::with_capacity(n_functions * gn);
+        for _ in 0..n_functions {
+            data.extend(sampler.sample(rng));
+        }
+        Ok(Self { grid: sampler.grid().to_vec(), values: Tensor::new(&[n_functions, gn], data) })
+    }
+
+    /// Build from explicit values (used by tests and by masked variants).
+    pub fn from_values(grid: Vec<f64>, values: Tensor) -> Self {
+        assert_eq!(values.shape()[1], grid.len());
+        Self { grid, values }
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.shape()[0]
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn grid(&self) -> &[f64] {
+        &self.grid
+    }
+
+    pub fn values(&self, fi: usize) -> &[f64] {
+        let gn = self.grid.len();
+        &self.values.data()[fi * gn..(fi + 1) * gn]
+    }
+
+    /// Multiply every function by a pointwise mask (e.g. `x (1-x)` to pin
+    /// Stokes lid velocities to zero at the corners).
+    pub fn masked(mut self, mask: impl Fn(f64) -> f64) -> Self {
+        let gn = self.grid.len();
+        let grid = self.grid.clone();
+        for fi in 0..self.values.shape()[0] {
+            for gi in 0..gn {
+                self.values.data_mut()[fi * gn + gi] *= mask(grid[gi]);
+            }
+        }
+        self
+    }
+
+    /// Linear interpolation of function `fi` at `x` (clamped to [0, 1]).
+    pub fn eval(&self, fi: usize, x: f64) -> f64 {
+        let vals = self.values(fi);
+        let n = self.grid.len();
+        let x = x.clamp(self.grid[0], self.grid[n - 1]);
+        // uniform grid: direct cell lookup
+        let h = self.grid[1] - self.grid[0];
+        let cell = (((x - self.grid[0]) / h) as usize).min(n - 2);
+        let t = (x - self.grid[cell]) / h;
+        vals[cell] * (1.0 - t) + vals[cell + 1] * t
+    }
+
+    /// Evaluate function `fi` at many points.
+    pub fn eval_many(&self, fi: usize, xs: &[f64]) -> Vec<f64> {
+        xs.iter().map(|&x| self.eval(fi, x)).collect()
+    }
+
+    /// Sensor readings: function `fi` at `q` equally spaced points (the
+    /// branch-net input vector).
+    pub fn sensors(&self, fi: usize, q: usize) -> Vec<f64> {
+        let xs = Tensor::linspace(0.0, 1.0, q).into_data();
+        self.eval_many(fi, &xs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rbf_kernel_properties() {
+        let k = Kernel::Rbf { length_scale: 0.3, variance: 2.0 };
+        assert!((k.eval(0.5, 0.5) - 2.0).abs() < 1e-12); // variance on diagonal
+        assert!(k.eval(0.0, 1.0) < k.eval(0.0, 0.1)); // decays with distance
+        assert!((k.eval(0.2, 0.7) - k.eval(0.7, 0.2)).abs() < 1e-12); // symmetric
+    }
+
+    #[test]
+    fn periodic_kernel_wraps() {
+        let k = Kernel::PeriodicRbf { length_scale: 0.5, variance: 1.0 };
+        // x=0 and x=1 are the same point on the circle
+        assert!((k.eval(0.0, 1.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gp_samples_have_prior_scale() {
+        let mut rng = Pcg64::seeded(3);
+        let s = GpSampler1d::new(Kernel::Rbf { length_scale: 0.2, variance: 1.0 }, 48);
+        let mut sq = 0.0;
+        let reps = 200;
+        for _ in 0..reps {
+            let f = s.sample(&mut rng);
+            sq += f.iter().map(|x| x * x).sum::<f64>() / f.len() as f64;
+        }
+        let var = sq / reps as f64;
+        assert!((var - 1.0).abs() < 0.25, "marginal variance {var}");
+    }
+
+    #[test]
+    fn periodic_samples_close_the_loop() {
+        let mut rng = Pcg64::seeded(4);
+        let s = GpSampler1d::new(Kernel::PeriodicRbf { length_scale: 0.8, variance: 1.0 }, 64);
+        for _ in 0..10 {
+            let f = s.sample(&mut rng);
+            assert!((f[0] - f[63]).abs() < 1e-3, "f(0)={} f(1)={}", f[0], f[63]);
+        }
+    }
+
+    #[test]
+    fn bank_eval_interpolates_linearly() {
+        let grid = Tensor::linspace(0.0, 1.0, 3).into_data(); // 0, .5, 1
+        let vals = Tensor::new(&[1, 3], vec![0.0, 1.0, 0.0]);
+        let bank = FunctionBank::from_values(grid, vals);
+        assert!((bank.eval(0, 0.25) - 0.5).abs() < 1e-12);
+        assert!((bank.eval(0, 0.75) - 0.5).abs() < 1e-12);
+        // clamped outside
+        assert!((bank.eval(0, -1.0) - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn masked_bank_pins_endpoints() {
+        let mut rng = Pcg64::seeded(5);
+        let s = GpSampler1d::new(Kernel::Rbf { length_scale: 0.2, variance: 1.0 }, 32);
+        let bank = FunctionBank::generate(&s, 3, &mut rng).unwrap().masked(|x| x * (1.0 - x));
+        for fi in 0..3 {
+            // the last linspace node may be 1 - 1 ulp, so the mask leaves a
+            // ~1e-18 residue rather than an exact zero
+            assert!(bank.eval(fi, 0.0).abs() < 1e-12);
+            assert!(bank.eval(fi, 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn sensors_are_deterministic(){
+        let mut rng = Pcg64::seeded(6);
+        let s = GpSampler1d::new(Kernel::Rbf { length_scale: 0.2, variance: 1.0 }, 32);
+        let bank = FunctionBank::generate(&s, 1, &mut rng).unwrap();
+        assert_eq!(bank.sensors(0, 10), bank.sensors(0, 10));
+        assert_eq!(bank.sensors(0, 10).len(), 10);
+    }
+}

@@ -1,0 +1,48 @@
+//! Workload generation: Gaussian-process input functions + collocation points.
+//!
+//! The paper's operators are trained on input functions sampled from a
+//! Gaussian process (reaction-diffusion sources, Burgers initial conditions,
+//! Stokes lid velocities) or from i.i.d. normal coefficients (Kirchhoff's
+//! bi-trigonometric load, eq. 19).  This module is the Rust substrate that
+//! replaces the authors' offline datasets: it pre-generates a function bank
+//! on a fine grid (one Cholesky factorisation, amortised over the whole run)
+//! and linearly interpolates bank functions onto the per-batch collocation
+//! points the coordinator resamples every step.
+
+mod gp;
+mod points;
+
+pub use gp::{FunctionBank, GpSampler1d, Kernel};
+pub use points::{boundary_points_2d, interior_points_2d, tensor_grid_2d, Edge};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn bank_interpolation_hits_grid_values() {
+        let mut rng = Pcg64::seeded(11);
+        let sampler = GpSampler1d::new(Kernel::Rbf { length_scale: 0.2, variance: 1.0 }, 64);
+        let bank = FunctionBank::generate(&sampler, 5, &mut rng).unwrap();
+        // interpolating exactly at grid nodes reproduces stored values
+        let grid = bank.grid();
+        for fi in 0..5 {
+            for (gi, &gx) in grid.iter().enumerate().step_by(7) {
+                let v = bank.eval(fi, gx);
+                assert!((v - bank.values(fi)[gi]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn interior_points_inside_domain() {
+        let mut rng = Pcg64::seeded(1);
+        let pts = interior_points_2d(&mut rng, 100, (0.0, 1.0), (0.0, 1.0));
+        assert_eq!(pts.shape(), &[100, 2]);
+        for row in 0..100 {
+            assert!((0.0..1.0).contains(&pts.at2(row, 0)));
+            assert!((0.0..1.0).contains(&pts.at2(row, 1)));
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! Collocation-point sampling on the unit square (interior + boundaries).
+//!
+//! The coordinator resamples these every training batch -- the paper's
+//! setting of random (unstructured) collocation, which is exactly the regime
+//! where AD (and hence ZCS) is required and grid-based finite differences
+//! are not applicable (paper Section 2.1 / 5).
+
+use crate::rng::Pcg64;
+use crate::tensor::Tensor;
+
+/// Which edge of the unit square a boundary point lies on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Edge {
+    /// `d0 = lo` (x = 0 for spatial dims, t = 0 for initial conditions)
+    D0Lo,
+    /// `d0 = hi`
+    D0Hi,
+    /// `d1 = lo`
+    D1Lo,
+    /// `d1 = hi`
+    D1Hi,
+}
+
+/// `n` uniform points strictly inside `[x0, x1] x [y0, y1]`, shape `(n, 2)`.
+pub fn interior_points_2d(
+    rng: &mut Pcg64,
+    n: usize,
+    d0: (f64, f64),
+    d1: (f64, f64),
+) -> Tensor {
+    let mut data = Vec::with_capacity(2 * n);
+    for _ in 0..n {
+        data.push(rng.uniform_in(d0.0, d0.1));
+        data.push(rng.uniform_in(d1.0, d1.1));
+    }
+    Tensor::new(&[n, 2], data)
+}
+
+/// `n` points on one edge of the unit square, shape `(n, 2)`.
+///
+/// The free coordinate is uniform in `(0, 1)`; the pinned coordinate is the
+/// edge value.  Returns the free coordinates too so callers can evaluate
+/// auxiliary fields (e.g. lid velocity) at the same abscissae.
+pub fn boundary_points_2d(rng: &mut Pcg64, n: usize, edge: Edge) -> (Tensor, Vec<f64>) {
+    let mut data = Vec::with_capacity(2 * n);
+    let mut free = Vec::with_capacity(n);
+    for _ in 0..n {
+        let s = rng.uniform();
+        free.push(s);
+        match edge {
+            Edge::D0Lo => {
+                data.push(0.0);
+                data.push(s);
+            }
+            Edge::D0Hi => {
+                data.push(1.0);
+                data.push(s);
+            }
+            Edge::D1Lo => {
+                data.push(s);
+                data.push(0.0);
+            }
+            Edge::D1Hi => {
+                data.push(s);
+                data.push(1.0);
+            }
+        }
+    }
+    (Tensor::new(&[n, 2], data), free)
+}
+
+/// Regular `gx x gy` tensor grid over the unit square, shape `(gx*gy, 2)`,
+/// row-major in the second coordinate -- the evaluation grid for validation
+/// and the Fig.-3 field plots.
+pub fn tensor_grid_2d(gx: usize, gy: usize) -> Tensor {
+    let xs = Tensor::linspace(0.0, 1.0, gx).into_data();
+    let ys = Tensor::linspace(0.0, 1.0, gy).into_data();
+    let mut data = Vec::with_capacity(2 * gx * gy);
+    for &x in &xs {
+        for &y in &ys {
+            data.push(x);
+            data.push(y);
+        }
+    }
+    Tensor::new(&[gx * gy, 2], data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn boundary_points_on_their_edge() {
+        let mut rng = Pcg64::seeded(9);
+        for (edge, dim, val) in [
+            (Edge::D0Lo, 0, 0.0),
+            (Edge::D0Hi, 0, 1.0),
+            (Edge::D1Lo, 1, 0.0),
+            (Edge::D1Hi, 1, 1.0),
+        ] {
+            let (pts, free) = boundary_points_2d(&mut rng, 20, edge);
+            assert_eq!(pts.shape(), &[20, 2]);
+            assert_eq!(free.len(), 20);
+            for i in 0..20 {
+                assert_eq!(pts.at2(i, dim), val);
+                assert_eq!(pts.at2(i, 1 - dim), free[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn grid_covers_corners() {
+        let g = tensor_grid_2d(3, 3);
+        assert_eq!(g.shape(), &[9, 2]);
+        assert_eq!((g.at2(0, 0), g.at2(0, 1)), (0.0, 0.0));
+        assert_eq!((g.at2(8, 0), g.at2(8, 1)), (1.0, 1.0));
+        // row-major in y
+        assert_eq!((g.at2(1, 0), g.at2(1, 1)), (0.0, 0.5));
+    }
+
+    #[test]
+    fn interior_respects_custom_bounds() {
+        let mut rng = Pcg64::seeded(10);
+        let pts = interior_points_2d(&mut rng, 50, (0.25, 0.5), (0.75, 1.0));
+        for i in 0..50 {
+            assert!((0.25..0.5).contains(&pts.at2(i, 0)));
+            assert!((0.75..1.0).contains(&pts.at2(i, 1)));
+        }
+    }
+}

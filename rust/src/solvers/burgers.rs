@@ -1,0 +1,177 @@
+//! Reference solver for the periodic Burgers operator (paper eq. 17):
+//!
+//! ```text
+//! u_t + u u_x - nu u_xx = 0,   x in (0,1), t in (0,1),  nu = 0.01
+//! u(x, 0) = u0(x);  u(0, t) = u(1, t)   (periodic)
+//! ```
+//!
+//! Scheme: method of lines on a periodic grid; conservative flux form
+//! `u u_x = (u^2/2)_x` with central differences for both terms and RK2
+//! (Heun) time stepping under a CFL-limited dt.  nu = 0.01 keeps shocks
+//! smooth enough for central differencing at the resolutions we use.
+
+use super::bilinear;
+
+pub struct BurgersSolver {
+    pub viscosity: f64,
+    pub nx: usize,
+    pub nt_store: usize,
+}
+
+impl Default for BurgersSolver {
+    fn default() -> Self {
+        Self { viscosity: 0.01, nx: 256, nt_store: 128 }
+    }
+}
+
+impl BurgersSolver {
+    fn rhs(&self, u: &[f64], h: f64) -> Vec<f64> {
+        let n = u.len();
+        let nu = self.viscosity;
+        let mut d = vec![0.0; n];
+        for i in 0..n {
+            let im = (i + n - 1) % n;
+            let ip = (i + 1) % n;
+            let flux = (u[ip] * u[ip] - u[im] * u[im]) / (4.0 * h); // (u^2/2)_x central
+            let diff = nu * (u[ip] - 2.0 * u[i] + u[im]) / (h * h);
+            d[i] = -flux + diff;
+        }
+        d
+    }
+
+    /// Solve for one initial condition given on the periodic grid
+    /// (`nx` points, x_i = i/nx -- note x = 1 wraps to x = 0).
+    /// Returns `nx x nt_store` (x-major) snapshots at equally spaced times.
+    pub fn solve_grid(&self, u0: &[f64]) -> Vec<f64> {
+        let (nx, nts) = (self.nx, self.nt_store);
+        assert_eq!(u0.len(), nx);
+        let h = 1.0 / nx as f64;
+        let umax = u0.iter().fold(0.1f64, |m, &v| m.max(v.abs()));
+        // CFL: advective + diffusive
+        let dt_adv = 0.4 * h / umax;
+        let dt_diff = 0.4 * h * h / (2.0 * self.viscosity);
+        let dt = dt_adv.min(dt_diff);
+        let steps_total = (1.0 / dt).ceil() as usize;
+        let dt = 1.0 / steps_total as f64;
+
+        let mut u = u0.to_vec();
+        let mut out = vec![0.0; nx * nts];
+        for i in 0..nx {
+            out[i * nts] = u[i];
+        }
+        let mut next_snap = 1usize;
+        for s in 1..=steps_total {
+            // Heun RK2
+            let k1 = self.rhs(&u, h);
+            let u1: Vec<f64> = u.iter().zip(&k1).map(|(a, b)| a + dt * b).collect();
+            let k2 = self.rhs(&u1, h);
+            for i in 0..nx {
+                u[i] += 0.5 * dt * (k1[i] + k2[i]);
+            }
+            let t = s as f64 * dt;
+            while next_snap < nts && t + 1e-12 >= next_snap as f64 / (nts - 1) as f64 {
+                for i in 0..nx {
+                    out[i * nts + next_snap] = u[i];
+                }
+                next_snap += 1;
+            }
+        }
+        out
+    }
+
+    /// Evaluate at arbitrary `(x, t)` points (periodic in x, bilinear in the
+    /// stored snapshots).
+    pub fn solve_at(&self, u0: &[f64], pts: &[(f64, f64)]) -> Vec<f64> {
+        let grid = self.solve_grid(u0);
+        // extend the periodic grid with the wrap column for interpolation
+        let (nx, nts) = (self.nx, self.nt_store);
+        let mut ext = vec![0.0; (nx + 1) * nts];
+        ext[..nx * nts].copy_from_slice(&grid);
+        for j in 0..nts {
+            ext[nx * nts + j] = grid[j]; // u(1, t) = u(0, t)
+        }
+        pts.iter()
+            .map(|&(x, t)| bilinear(&ext, nx + 1, nts, x.rem_euclid(1.0), t))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_state_is_invariant() {
+        let s = BurgersSolver { nx: 64, ..Default::default() };
+        let grid = s.solve_grid(&vec![0.7; 64]);
+        for v in grid {
+            assert!((v - 0.7).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn viscosity_decays_sine_mode() {
+        // For small amplitude, Burgers ~ heat equation: the fundamental mode
+        // decays like exp(-nu (2 pi)^2 t).
+        let nx = 128;
+        let eps = 1e-3;
+        let pi2 = 2.0 * std::f64::consts::PI;
+        let u0: Vec<f64> = (0..nx).map(|i| eps * (pi2 * i as f64 / nx as f64).sin()).collect();
+        let s = BurgersSolver { nx, nt_store: 64, viscosity: 0.01 };
+        let grid = s.solve_grid(&u0);
+        let amp_end: f64 = (0..nx)
+            .map(|i| grid[i * 64 + 63].abs())
+            .fold(0.0, f64::max);
+        let want = eps * (-0.01 * pi2 * pi2).exp();
+        assert!((amp_end - want).abs() < 0.05 * want, "{amp_end} vs {want}");
+    }
+
+    #[test]
+    fn mass_is_conserved() {
+        // periodic Burgers conserves the mean of u
+        let nx = 128;
+        let u0: Vec<f64> = (0..nx)
+            .map(|i| {
+                let x = i as f64 / nx as f64;
+                0.5 + 0.3 * (2.0 * std::f64::consts::PI * x).sin()
+                    + 0.1 * (4.0 * std::f64::consts::PI * x).cos()
+            })
+            .collect();
+        let s = BurgersSolver { nx, nt_store: 16, ..Default::default() };
+        let grid = s.solve_grid(&u0);
+        let mean0: f64 = (0..nx).map(|i| grid[i * 16]).sum::<f64>() / nx as f64;
+        let mean1: f64 = (0..nx).map(|i| grid[i * 16 + 15]).sum::<f64>() / nx as f64;
+        assert!((mean0 - mean1).abs() < 1e-6, "{mean0} vs {mean1}");
+    }
+
+    #[test]
+    fn periodic_wrap_in_solve_at() {
+        let nx = 64;
+        let u0: Vec<f64> = (0..nx)
+            .map(|i| (2.0 * std::f64::consts::PI * i as f64 / nx as f64).cos())
+            .collect();
+        let s = BurgersSolver { nx, ..Default::default() };
+        let v = s.solve_at(&u0, &[(0.0, 0.5), (1.0, 0.5)]);
+        assert!((v[0] - v[1]).abs() < 1e-9, "{} vs {}", v[0], v[1]);
+    }
+
+    #[test]
+    fn refinement_converges() {
+        let f = |nx: usize| -> Vec<f64> {
+            (0..nx)
+                .map(|i| {
+                    let x = i as f64 / nx as f64;
+                    0.4 * (2.0 * std::f64::consts::PI * x).sin()
+                })
+                .collect()
+        };
+        let coarse = BurgersSolver { nx: 96, nt_store: 64, ..Default::default() };
+        let fine = BurgersSolver { nx: 384, nt_store: 64, ..Default::default() };
+        let pts = vec![(0.25, 0.4), (0.7, 0.8)];
+        let a = coarse.solve_at(&f(96), &pts);
+        let b = fine.solve_at(&f(384), &pts);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 5e-3, "{x} vs {y}");
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! Analytic reference for the Kirchhoff-Love plate (paper eq. 18/19).
+//!
+//! For the bi-trigonometric load
+//! `q(x,y) = sum_rs c_rs sin(r pi x) sin(s pi y)` on the unit square with
+//! simply-supported edges, the Germain-Lagrange equation
+//! `u_xxxx + 2 u_xxyy + u_yyyy = q / D` has the exact series solution
+//!
+//! ```text
+//! u(x,y) = sum_rs  c_rs / (D pi^4 (r^2 + s^2)^2)  sin(r pi x) sin(s pi y)
+//! ```
+//!
+//! (each sine mode is an eigenfunction of the biharmonic operator with
+//! eigenvalue `pi^4 (r^2+s^2)^2`).  This is the same closed form the paper
+//! uses for validation.
+
+pub struct KirchhoffSolver {
+    pub rigidity: f64,
+    pub r_modes: usize,
+    pub s_modes: usize,
+}
+
+impl Default for KirchhoffSolver {
+    fn default() -> Self {
+        Self { rigidity: 0.01, r_modes: 10, s_modes: 10 }
+    }
+}
+
+impl KirchhoffSolver {
+    /// Deflection at arbitrary points for coefficient matrix `c`
+    /// (row-major `r_modes x s_modes`).
+    pub fn solve_at(&self, c: &[f64], pts: &[(f64, f64)]) -> Vec<f64> {
+        assert_eq!(c.len(), self.r_modes * self.s_modes);
+        let pi = std::f64::consts::PI;
+        let pi4 = pi.powi(4);
+        pts.iter()
+            .map(|&(x, y)| {
+                let mut u = 0.0;
+                for r in 1..=self.r_modes {
+                    let sx = (r as f64 * pi * x).sin();
+                    for s in 1..=self.s_modes {
+                        let k = (r * r + s * s) as f64;
+                        u += c[(r - 1) * self.s_modes + (s - 1)]
+                            / (self.rigidity * pi4 * k * k)
+                            * sx
+                            * (s as f64 * pi * y).sin();
+                    }
+                }
+                u
+            })
+            .collect()
+    }
+
+    /// The load itself at arbitrary points (for residual checks).
+    pub fn source_at(&self, c: &[f64], pts: &[(f64, f64)]) -> Vec<f64> {
+        let pi = std::f64::consts::PI;
+        pts.iter()
+            .map(|&(x, y)| {
+                let mut q = 0.0;
+                for r in 1..=self.r_modes {
+                    let sx = (r as f64 * pi * x).sin();
+                    for s in 1..=self.s_modes {
+                        q += c[(r - 1) * self.s_modes + (s - 1)] * sx * (s as f64 * pi * y).sin();
+                    }
+                }
+                q
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_mode_closed_form() {
+        // c_11 only: u = c / (D pi^4 * 4) sin(pi x) sin(pi y)
+        let s = KirchhoffSolver::default();
+        let mut c = vec![0.0; 100];
+        c[0] = 2.0;
+        let pi = std::f64::consts::PI;
+        let u = s.solve_at(&c, &[(0.5, 0.5)]);
+        let want = 2.0 / (0.01 * pi.powi(4) * 4.0);
+        assert!((u[0] - want).abs() < 1e-12, "{} vs {want}", u[0]);
+    }
+
+    #[test]
+    fn vanishes_on_boundary() {
+        let s = KirchhoffSolver::default();
+        let mut rng = crate::rng::Pcg64::seeded(13);
+        let c = rng.normals(100);
+        let pts = vec![(0.0, 0.3), (1.0, 0.9), (0.4, 0.0), (0.7, 1.0)];
+        for u in s.solve_at(&c, &pts) {
+            assert!(u.abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn satisfies_biharmonic_equation_fd_check() {
+        // verify u_xxxx + 2 u_xxyy + u_yyyy == q / D by 5-point 4th-order FD
+        let s = KirchhoffSolver::default();
+        let mut rng = crate::rng::Pcg64::seeded(14);
+        // restrict to modes r, s <= 3: the 2nd-order FD stencil's relative
+        // truncation error is O((r pi h)^2), ~10% at mode 10 but ~1% here
+        let mut c = rng.normals(100);
+        for r in 0..10 {
+            for sdx in 0..10 {
+                if r >= 3 || sdx >= 3 {
+                    c[r * 10 + sdx] = 0.0;
+                }
+            }
+        }
+        let h = 1e-2;
+        let (x0, y0) = (0.43, 0.61);
+        let u = |x: f64, y: f64| s.solve_at(&c, &[(x, y)])[0];
+        // 4th derivative stencils
+        let d4x = (u(x0 - 2.0 * h, y0) - 4.0 * u(x0 - h, y0) + 6.0 * u(x0, y0)
+            - 4.0 * u(x0 + h, y0)
+            + u(x0 + 2.0 * h, y0))
+            / h.powi(4);
+        let d4y = (u(x0, y0 - 2.0 * h) - 4.0 * u(x0, y0 - h) + 6.0 * u(x0, y0)
+            - 4.0 * u(x0, y0 + h)
+            + u(x0, y0 + 2.0 * h))
+            / h.powi(4);
+        let mut d2x2y = 0.0;
+        for (dx, wx) in [(-1.0, 1.0), (0.0, -2.0), (1.0, 1.0)] {
+            for (dy, wy) in [(-1.0, 1.0), (0.0, -2.0), (1.0, 1.0)] {
+                d2x2y += wx * wy * u(x0 + dx * h, y0 + dy * h);
+            }
+        }
+        d2x2y /= h.powi(4);
+        let lhs = d4x + 2.0 * d2x2y + d4y;
+        let rhs = s.source_at(&c, &[(x0, y0)])[0] / s.rigidity;
+        assert!(
+            (lhs - rhs).abs() < 2e-2 * rhs.abs().max(1.0),
+            "biharmonic residual: {lhs} vs {rhs}"
+        );
+    }
+
+    #[test]
+    fn linearity_in_coefficients() {
+        let s = KirchhoffSolver::default();
+        let mut rng = crate::rng::Pcg64::seeded(15);
+        let c1 = rng.normals(100);
+        let c2 = rng.normals(100);
+        let csum: Vec<f64> = c1.iter().zip(&c2).map(|(a, b)| a + b).collect();
+        let pts = vec![(0.21, 0.77), (0.5, 0.5)];
+        let u1 = s.solve_at(&c1, &pts);
+        let u2 = s.solve_at(&c2, &pts);
+        let us = s.solve_at(&csum, &pts);
+        for i in 0..pts.len() {
+            assert!((us[i] - u1[i] - u2[i]).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,65 @@
+//! Independent numerical truth for validating the trained operators.
+//!
+//! The paper validates its physics-only-trained DeepONets against reference
+//! solutions (analytic series for Kirchhoff-Love, FreeFEM++ for Stokes,
+//! standard solvers for reaction-diffusion and Burgers).  These modules are
+//! the in-repo substrates standing in for those external tools -- see
+//! DESIGN.md "Hardware adaptation & substitutions".
+//!
+//! Every solver takes the *same* input-function representation the sampler
+//! produces and returns fields on caller-chosen evaluation points, so the
+//! coordinator can compute the paper's relative-L2 validation error
+//! directly against the PJRT `forward` artifact output.
+
+mod burgers;
+mod kirchhoff;
+mod reaction_diffusion;
+mod stokes;
+mod tridiag;
+
+pub use burgers::BurgersSolver;
+pub use kirchhoff::KirchhoffSolver;
+pub use reaction_diffusion::ReactionDiffusionSolver;
+pub use stokes::{StokesFields, StokesSolver};
+pub use tridiag::thomas_solve;
+
+/// Bilinear interpolation helper on a regular `nx x ny` grid over `[0,1]^2`
+/// (row-major in the second coordinate).
+pub(crate) fn bilinear(grid: &[f64], nx: usize, ny: usize, x: f64, y: f64) -> f64 {
+    let hx = 1.0 / (nx - 1) as f64;
+    let hy = 1.0 / (ny - 1) as f64;
+    let x = x.clamp(0.0, 1.0);
+    let y = y.clamp(0.0, 1.0);
+    let i = ((x / hx) as usize).min(nx - 2);
+    let j = ((y / hy) as usize).min(ny - 2);
+    let tx = (x - i as f64 * hx) / hx;
+    let ty = (y - j as f64 * hy) / hy;
+    let v00 = grid[i * ny + j];
+    let v10 = grid[(i + 1) * ny + j];
+    let v01 = grid[i * ny + j + 1];
+    let v11 = grid[(i + 1) * ny + j + 1];
+    v00 * (1.0 - tx) * (1.0 - ty) + v10 * tx * (1.0 - ty) + v01 * (1.0 - tx) * ty + v11 * tx * ty
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bilinear_exact_on_linear_field() {
+        // f(x, y) = 2x + 3y is reproduced exactly by bilinear interpolation
+        let (nx, ny) = (5, 4);
+        let mut grid = vec![0.0; nx * ny];
+        for i in 0..nx {
+            for j in 0..ny {
+                let x = i as f64 / (nx - 1) as f64;
+                let y = j as f64 / (ny - 1) as f64;
+                grid[i * ny + j] = 2.0 * x + 3.0 * y;
+            }
+        }
+        for &(x, y) in &[(0.13, 0.77), (0.5, 0.5), (0.99, 0.01), (0.0, 1.0)] {
+            let v = bilinear(&grid, nx, ny, x, y);
+            assert!((v - (2.0 * x + 3.0 * y)).abs() < 1e-12, "({x},{y})");
+        }
+    }
+}

@@ -1,0 +1,156 @@
+//! Reference solver for the reaction-diffusion operator (paper eq. 16):
+//!
+//! ```text
+//! u_t - D u_xx + k u^2 - f(x) = 0,   x in (0,1), t in (0,1)
+//! u(x, 0) = 0;  u(0, t) = u(1, t) = 0
+//! ```
+//!
+//! Semi-implicit (IMEX) scheme: diffusion Crank-Nicolson (unconditionally
+//! stable, tridiagonal Thomas solve per step), reaction + source explicit.
+//! Second-order in space, first-order in time -- ample for the validation
+//! tolerance (the trained operators sit at ~8% relative error; paper
+//! Table 1).
+
+use super::{bilinear, tridiag::thomas_solve};
+
+pub struct ReactionDiffusionSolver {
+    pub diff_coef: f64,
+    pub react_coef: f64,
+    pub nx: usize,
+    pub nt: usize,
+}
+
+impl Default for ReactionDiffusionSolver {
+    fn default() -> Self {
+        Self { diff_coef: 0.01, react_coef: 0.01, nx: 128, nt: 512 }
+    }
+}
+
+impl ReactionDiffusionSolver {
+    /// Solve for one source function `f` given as values on `nx` equally
+    /// spaced points of `[0, 1]`.  Returns the space-time field as a
+    /// row-major `nx x nt` grid (x-major, then t), covering `[0,1]^2`.
+    pub fn solve_grid(&self, f: &[f64]) -> Vec<f64> {
+        let (nx, nt) = (self.nx, self.nt);
+        assert_eq!(f.len(), nx, "source must be sampled on the solver grid");
+        let h = 1.0 / (nx - 1) as f64;
+        let dt = 1.0 / (nt - 1) as f64;
+        let r = self.diff_coef * dt / (h * h);
+
+        // Crank-Nicolson matrices on interior nodes (Dirichlet ends)
+        let ni = nx - 2;
+        let sub = vec![-0.5 * r; ni - 1];
+        let diag = vec![1.0 + r; ni];
+        let sup = vec![-0.5 * r; ni - 1];
+
+        let mut u = vec![0.0; nx]; // u(x, 0) = 0
+        let mut out = vec![0.0; nx * nt];
+        for j in 1..nt {
+            let mut rhs = vec![0.0; ni];
+            for i in 0..ni {
+                let xi = i + 1;
+                let lap = u[xi - 1] - 2.0 * u[xi] + u[xi + 1];
+                let react = -self.react_coef * u[xi] * u[xi] + f[xi];
+                rhs[i] = u[xi] + 0.5 * r * lap + dt * react;
+            }
+            let ui = thomas_solve(&sub, &diag, &sup, &rhs);
+            for i in 0..ni {
+                u[i + 1] = ui[i];
+            }
+            u[0] = 0.0;
+            u[nx - 1] = 0.0;
+            for i in 0..nx {
+                out[i * nt + j] = u[i];
+            }
+        }
+        out
+    }
+
+    /// Evaluate the solution at arbitrary `(x, t)` points (bilinear).
+    pub fn solve_at(&self, f: &[f64], pts: &[(f64, f64)]) -> Vec<f64> {
+        let grid = self.solve_grid(f);
+        pts.iter()
+            .map(|&(x, t)| bilinear(&grid, self.nx, self.nt, x, t))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_source_gives_zero_solution() {
+        let s = ReactionDiffusionSolver::default();
+        let grid = s.solve_grid(&vec![0.0; s.nx]);
+        assert!(grid.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn boundary_and_initial_conditions_hold() {
+        let s = ReactionDiffusionSolver { nx: 64, nt: 128, ..Default::default() };
+        let f: Vec<f64> = (0..64)
+            .map(|i| (std::f64::consts::PI * i as f64 / 63.0).sin())
+            .collect();
+        let grid = s.solve_grid(&f);
+        for j in 0..s.nt {
+            assert_eq!(grid[j], 0.0); // x = 0
+            assert_eq!(grid[(s.nx - 1) * s.nt + j], 0.0); // x = 1
+        }
+        for i in 0..s.nx {
+            assert_eq!(grid[i * s.nt], 0.0); // t = 0
+        }
+    }
+
+    #[test]
+    fn converges_to_linear_steady_state() {
+        // Without reaction (k = 0), steady state solves D u'' = -f.
+        // For f = sin(pi x): u_inf = sin(pi x) / (D pi^2).
+        let s = ReactionDiffusionSolver {
+            react_coef: 0.0,
+            diff_coef: 0.5, // fast diffusion reaches steady state within t<=1
+            nx: 96,
+            nt: 768,
+        };
+        let pi = std::f64::consts::PI;
+        let f: Vec<f64> = (0..96).map(|i| (pi * i as f64 / 95.0).sin()).collect();
+        let grid = s.solve_grid(&f);
+        for i in [20, 48, 70] {
+            let x = i as f64 / 95.0;
+            let want = (pi * x).sin() / (0.5 * pi * pi);
+            let got = grid[i * s.nt + s.nt - 1];
+            assert!((got - want).abs() < 2e-3 * want.abs().max(1.0), "x={x}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn grid_refinement_converges() {
+        let f = |nx: usize| -> Vec<f64> {
+            (0..nx).map(|i| {
+                let x = i as f64 / (nx - 1) as f64;
+                (2.0 * std::f64::consts::PI * x).sin() + 1.0 - (x - 0.5).powi(2)
+            }).collect()
+        };
+        let coarse = ReactionDiffusionSolver { nx: 48, nt: 128, ..Default::default() };
+        let fine = ReactionDiffusionSolver { nx: 192, nt: 512, ..Default::default() };
+        let pts: Vec<(f64, f64)> = vec![(0.3, 0.5), (0.6, 0.9), (0.5, 1.0)];
+        let a = coarse.solve_at(&f(48), &pts);
+        let b = fine.solve_at(&f(192), &pts);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 5e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn reaction_term_damps_solution() {
+        let pi = std::f64::consts::PI;
+        let f: Vec<f64> = (0..64).map(|i| 5.0 * (pi * i as f64 / 63.0).sin()).collect();
+        let without = ReactionDiffusionSolver { nx: 64, nt: 256, react_coef: 0.0, ..Default::default() };
+        let with = ReactionDiffusionSolver { nx: 64, nt: 256, react_coef: 5.0, ..Default::default() };
+        let a = without.solve_grid(&f);
+        let b = with.solve_grid(&f);
+        let max_a = a.iter().fold(0.0f64, |m, &v| m.max(v));
+        let max_b = b.iter().fold(0.0f64, |m, &v| m.max(v));
+        assert!(max_b < max_a, "{max_b} !< {max_a}");
+    }
+}

@@ -1,0 +1,257 @@
+//! Reference solver for lid-driven Stokes flow (paper eq. 20) -- the in-repo
+//! substitute for the paper's FreeFEM++ truth.
+//!
+//! Vorticity-streamfunction formulation on the unit square:
+//!
+//! ```text
+//! laplacian(omega) = 0          (Stokes: vorticity is harmonic)
+//! laplacian(psi)   = -omega
+//! u = psi_y,  v = -psi_x
+//! ```
+//!
+//! Wall vorticity comes from Thom's formula; the coupled system is relaxed
+//! with Gauss-Seidel/SOR until the wall-vorticity update stalls.  Pressure is
+//! recovered from the momentum equations (`p_x = -mu omega_y`,
+//! `p_y = mu omega_x`) by path integration from the bottom-left corner, then
+//! shifted so that the *bottom edge* has zero mean -- matching the paper's
+//! gauge `p(x, 0) = 0` as closely as a true cavity solution allows (the
+//! paper's bottom-pressure pin only fixes the constant; see EXPERIMENTS.md).
+
+pub struct StokesSolver {
+    pub viscosity: f64,
+    pub n: usize,
+    pub max_iters: usize,
+    pub tol: f64,
+}
+
+impl Default for StokesSolver {
+    fn default() -> Self {
+        Self { viscosity: 0.01, n: 96, max_iters: 40_000, tol: 1e-10 }
+    }
+}
+
+/// Velocity + pressure fields on the solver's `n x n` grid (x-major).
+pub struct StokesFields {
+    pub n: usize,
+    pub u: Vec<f64>,
+    pub v: Vec<f64>,
+    pub p: Vec<f64>,
+}
+
+impl StokesSolver {
+    /// Solve for a lid velocity `u1` sampled on `n` equally spaced x-points.
+    pub fn solve(&self, lid: &[f64]) -> StokesFields {
+        let n = self.n;
+        assert_eq!(lid.len(), n);
+        let h = 1.0 / (n - 1) as f64;
+        let idx = |i: usize, j: usize| i * n + j; // j is the y index
+
+        let mut psi = vec![0.0; n * n];
+        let mut om = vec![0.0; n * n];
+        // Plain Gauss-Seidel on the interiors; the outer omega<->psi<->wall-BC
+        // coupling is stabilised by under-relaxing Thom's formula (beta).
+        let beta = 0.5;
+        let inner_sweeps = 4;
+
+        let mut last_psi_norm = f64::INFINITY;
+        for it in 0..self.max_iters {
+            // 1. wall vorticity by Thom's formula (psi = 0 on all walls),
+            //    under-relaxed for stability of the coupled iteration
+            for i in 0..n {
+                let thom_bot = -2.0 * psi[idx(i, 1)] / (h * h);
+                let thom_top = -2.0 * psi[idx(i, n - 2)] / (h * h) - 2.0 * lid[i] / h;
+                let thom_left = -2.0 * psi[idx(1, i)] / (h * h);
+                let thom_right = -2.0 * psi[idx(n - 2, i)] / (h * h);
+                om[idx(i, 0)] += beta * (thom_bot - om[idx(i, 0)]);
+                om[idx(i, n - 1)] += beta * (thom_top - om[idx(i, n - 1)]);
+                om[idx(0, i)] += beta * (thom_left - om[idx(0, i)]);
+                om[idx(n - 1, i)] += beta * (thom_right - om[idx(n - 1, i)]);
+            }
+            // 2. Gauss-Seidel sweeps on laplacian(omega) = 0
+            for _ in 0..inner_sweeps {
+                for i in 1..n - 1 {
+                    for j in 1..n - 1 {
+                        let nb = om[idx(i - 1, j)] + om[idx(i + 1, j)] + om[idx(i, j - 1)]
+                            + om[idx(i, j + 1)];
+                        om[idx(i, j)] = 0.25 * nb;
+                    }
+                }
+            }
+            // 3. Gauss-Seidel sweeps on laplacian(psi) = -omega
+            for _ in 0..inner_sweeps {
+                for i in 1..n - 1 {
+                    for j in 1..n - 1 {
+                        let nb = psi[idx(i - 1, j)] + psi[idx(i + 1, j)] + psi[idx(i, j - 1)]
+                            + psi[idx(i, j + 1)];
+                        psi[idx(i, j)] = 0.25 * (nb + h * h * om[idx(i, j)]);
+                    }
+                }
+            }
+            // convergence: psi norm stalls
+            if it % 50 == 49 {
+                let psi_norm: f64 = psi.iter().map(|v| v * v).sum();
+                if (psi_norm - last_psi_norm).abs() <= self.tol * psi_norm.max(1e-30) {
+                    break;
+                }
+                last_psi_norm = psi_norm;
+            }
+        }
+
+        // velocities from psi (central differences; one-sided at walls gives
+        // the BC values directly, so just impose them)
+        let mut u = vec![0.0; n * n];
+        let mut v = vec![0.0; n * n];
+        for i in 1..n - 1 {
+            for j in 1..n - 1 {
+                u[idx(i, j)] = (psi[idx(i, j + 1)] - psi[idx(i, j - 1)]) / (2.0 * h);
+                v[idx(i, j)] = -(psi[idx(i + 1, j)] - psi[idx(i - 1, j)]) / (2.0 * h);
+            }
+        }
+        for i in 0..n {
+            u[idx(i, n - 1)] = lid[i]; // moving lid
+        }
+
+        // pressure by path integration of grad p = mu (-omega_y, omega_x):
+        // along the bottom edge first, then up each column
+        let mu = self.viscosity;
+        let mut p = vec![0.0; n * n];
+        for i in 1..n {
+            // p_x = -mu omega_y at (i-1/2, 0); one-sided omega_y at the wall
+            let wy_a = (om[idx(i - 1, 1)] - om[idx(i - 1, 0)]) / h;
+            let wy_b = (om[idx(i, 1)] - om[idx(i, 0)]) / h;
+            p[idx(i, 0)] = p[idx(i - 1, 0)] - mu * 0.5 * (wy_a + wy_b) * h;
+        }
+        for i in 0..n {
+            for j in 1..n {
+                // p_y = mu omega_x at (i, j-1/2); central omega_x where possible
+                let wx = |ii: usize, jj: usize| -> f64 {
+                    if ii == 0 {
+                        (om[idx(1, jj)] - om[idx(0, jj)]) / h
+                    } else if ii == n - 1 {
+                        (om[idx(n - 1, jj)] - om[idx(n - 2, jj)]) / h
+                    } else {
+                        (om[idx(ii + 1, jj)] - om[idx(ii - 1, jj)]) / (2.0 * h)
+                    }
+                };
+                p[idx(i, j)] = p[idx(i, j - 1)] + mu * 0.5 * (wx(i, j - 1) + wx(i, j)) * h;
+            }
+        }
+        // gauge: zero mean on the bottom edge (paper pins p(x,0) = 0)
+        let bottom_mean: f64 = (0..n).map(|i| p[idx(i, 0)]).sum::<f64>() / n as f64;
+        for q in p.iter_mut() {
+            *q -= bottom_mean;
+        }
+
+        StokesFields { n, u, v, p }
+    }
+}
+
+impl StokesFields {
+    /// Bilinear evaluation of (u, v, p) at an arbitrary point.
+    pub fn at(&self, x: f64, y: f64) -> (f64, f64, f64) {
+        let f = |g: &[f64]| super::bilinear(g, self.n, self.n, x, y);
+        (f(&self.u), f(&self.v), f(&self.p))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parabolic_lid(n: usize) -> Vec<f64> {
+        (0..n)
+            .map(|i| {
+                let x = i as f64 / (n - 1) as f64;
+                x * (1.0 - x)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn zero_lid_gives_rest() {
+        let s = StokesSolver { n: 32, max_iters: 2000, ..Default::default() };
+        let f = s.solve(&vec![0.0; 32]);
+        assert!(f.u.iter().all(|&v| v.abs() < 1e-12));
+        assert!(f.v.iter().all(|&v| v.abs() < 1e-12));
+    }
+
+    #[test]
+    fn lid_velocity_imposed() {
+        let s = StokesSolver { n: 48, max_iters: 8000, ..Default::default() };
+        let lid = parabolic_lid(48);
+        let f = s.solve(&lid);
+        for i in 0..48 {
+            assert_eq!(f.u[i * 48 + 47], lid[i]);
+        }
+    }
+
+    #[test]
+    fn walls_are_no_slip() {
+        let s = StokesSolver { n: 48, max_iters: 8000, ..Default::default() };
+        let f = s.solve(&parabolic_lid(48));
+        for i in 0..48 {
+            assert_eq!(f.u[i * 48], 0.0); // bottom
+            assert_eq!(f.v[i * 48], 0.0);
+            assert_eq!(f.u[i], 0.0); // left column (i = 0 fixed, j = i)
+            assert_eq!(f.v[47 * 48 + i], 0.0); // right
+        }
+    }
+
+    #[test]
+    fn interior_flow_develops_and_circulates() {
+        let s = StokesSolver { n: 64, max_iters: 20_000, ..Default::default() };
+        let f = s.solve(&parabolic_lid(64));
+        // u just under the lid should follow the lid; deeper it reverses
+        let mid = 32usize;
+        let near_top = f.u[mid * 64 + 58];
+        let lower = f.u[mid * 64 + 16];
+        assert!(near_top > 0.01, "near-lid u = {near_top}");
+        assert!(lower < 0.0, "return-flow u = {lower}");
+    }
+
+    #[test]
+    fn mass_conservation_in_interior() {
+        // div(u) ~ 0 at a few interior points via central differences
+        let s = StokesSolver { n: 64, max_iters: 20_000, ..Default::default() };
+        let f = s.solve(&parabolic_lid(64));
+        let n = 64;
+        let h = 1.0 / 63.0;
+        let umax = f.u.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+        for &(i, j) in &[(20usize, 20usize), (32, 40), (45, 25)] {
+            let dudx = (f.u[(i + 1) * n + j] - f.u[(i - 1) * n + j]) / (2.0 * h);
+            let dvdy = (f.v[i * n + j + 1] - f.v[i * n + j - 1]) / (2.0 * h);
+            assert!(
+                (dudx + dvdy).abs() < 0.05 * umax / h * h, // O(h) of the velocity scale
+                "div at ({i},{j}) = {}",
+                dudx + dvdy
+            );
+        }
+    }
+
+    #[test]
+    fn pressure_gauge_zero_mean_bottom() {
+        let s = StokesSolver { n: 48, max_iters: 8000, ..Default::default() };
+        let f = s.solve(&parabolic_lid(48));
+        let mean: f64 = (0..48).map(|i| f.p[i * 48]).sum::<f64>() / 48.0;
+        assert!(mean.abs() < 1e-12);
+    }
+
+    #[test]
+    fn symmetric_lid_gives_symmetric_fields() {
+        // u1(x) = x(1-x) is symmetric about x = 1/2: u must be symmetric,
+        // v antisymmetric.
+        let s = StokesSolver { n: 49, max_iters: 20_000, ..Default::default() };
+        let f = s.solve(&parabolic_lid(49));
+        let n = 49;
+        for j in (4..n - 4).step_by(11) {
+            for i in 1..n / 2 {
+                let ui = f.u[i * n + j];
+                let um = f.u[(n - 1 - i) * n + j];
+                assert!((ui - um).abs() < 5e-3, "u sym ({i},{j}): {ui} vs {um}");
+                let vi = f.v[i * n + j];
+                let vm = f.v[(n - 1 - i) * n + j];
+                assert!((vi + vm).abs() < 5e-3, "v antisym ({i},{j}): {vi} vs {vm}");
+            }
+        }
+    }
+}

@@ -1,0 +1,74 @@
+//! Thomas algorithm for tridiagonal systems (the Crank-Nicolson work-horse).
+
+/// Solve the tridiagonal system with sub-diagonal `a` (len n-1), diagonal
+/// `b` (len n), super-diagonal `c` (len n-1) and right-hand side `d`.
+pub fn thomas_solve(a: &[f64], b: &[f64], c: &[f64], d: &[f64]) -> Vec<f64> {
+    let n = b.len();
+    assert_eq!(a.len(), n - 1);
+    assert_eq!(c.len(), n - 1);
+    assert_eq!(d.len(), n);
+    let mut cp = vec![0.0; n - 1];
+    let mut dp = vec![0.0; n];
+    cp[0] = c[0] / b[0];
+    dp[0] = d[0] / b[0];
+    for i in 1..n {
+        let m = b[i] - a[i - 1] * if i - 1 < n - 1 { cp[i - 1] } else { 0.0 };
+        if i < n - 1 {
+            cp[i] = c[i] / m;
+        }
+        dp[i] = (d[i] - a[i - 1] * dp[i - 1]) / m;
+    }
+    let mut x = vec![0.0; n];
+    x[n - 1] = dp[n - 1];
+    for i in (0..n - 1).rev() {
+        x[i] = dp[i] - cp[i] * x[i + 1];
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solves_identity() {
+        let x = thomas_solve(&[0.0, 0.0], &[1.0, 1.0, 1.0], &[0.0, 0.0], &[3.0, 4.0, 5.0]);
+        assert_eq!(x, vec![3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn solves_laplacian_like_system() {
+        // [2 -1 0; -1 2 -1; 0 -1 2] x = [1, 0, 1] -> x = [1, 1, 1]
+        let x = thomas_solve(&[-1.0, -1.0], &[2.0, 2.0, 2.0], &[-1.0, -1.0], &[1.0, 0.0, 1.0]);
+        for v in x {
+            assert!((v - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn matches_dense_solution() {
+        // random diagonally dominant system, compare against naive Gauss
+        let n = 12;
+        let mut rng = crate::rng::Pcg64::seeded(77);
+        let a: Vec<f64> = rng.normals(n - 1);
+        let c: Vec<f64> = rng.normals(n - 1);
+        let b: Vec<f64> = (0..n).map(|i| {
+            4.0 + rng.uniform()
+                + if i > 0 { a[i - 1].abs() } else { 0.0 }
+                + if i < n - 1 { c[i].abs() } else { 0.0 }
+        }).collect();
+        let d: Vec<f64> = rng.normals(n);
+        let x = thomas_solve(&a, &b, &c, &d);
+        // residual check
+        for i in 0..n {
+            let mut r = b[i] * x[i] - d[i];
+            if i > 0 {
+                r += a[i - 1] * x[i - 1];
+            }
+            if i < n - 1 {
+                r += c[i] * x[i + 1];
+            }
+            assert!(r.abs() < 1e-10, "row {i}: {r}");
+        }
+    }
+}

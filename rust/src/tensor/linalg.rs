@@ -1,0 +1,138 @@
+//! Dense linear algebra needed by the GP sampler: Cholesky + triangular solves.
+
+use super::Tensor;
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum CholeskyError {
+    #[error("matrix not positive definite at pivot {0} (value {1})")]
+    NotPositiveDefinite(usize, f64),
+    #[error("matrix not square: {0:?}")]
+    NotSquare(Vec<usize>),
+}
+
+/// Lower Cholesky factor `L` with `L L^T = A` (A symmetric positive definite).
+pub fn cholesky(a: &Tensor) -> Result<Tensor, CholeskyError> {
+    let shape = a.shape();
+    if shape.len() != 2 || shape[0] != shape[1] {
+        return Err(CholeskyError::NotSquare(shape.to_vec()));
+    }
+    let n = shape[0];
+    let mut l = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.at2(i, j);
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return Err(CholeskyError::NotPositiveDefinite(i, sum));
+                }
+                l[i * n + i] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    Ok(Tensor::new(&[n, n], l))
+}
+
+/// Solve `L y = b` for lower-triangular `L`.
+pub fn solve_lower(l: &Tensor, b: &[f64]) -> Vec<f64> {
+    let n = l.shape()[0];
+    assert_eq!(b.len(), n);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= l.at2(i, k) * y[k];
+        }
+        y[i] = sum / l.at2(i, i);
+    }
+    y
+}
+
+/// Solve `U x = b` for upper-triangular `U`.
+pub fn solve_upper(u: &Tensor, b: &[f64]) -> Vec<f64> {
+    let n = u.shape()[0];
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut sum = b[i];
+        for k in i + 1..n {
+            sum -= u.at2(i, k) * x[k];
+        }
+        x[i] = sum / u.at2(i, i);
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spd(n: usize, seed: u64) -> Tensor {
+        // A = B B^T + n I is SPD
+        let mut rng = crate::rng::Pcg64::seeded(seed);
+        let b = Tensor::new(&[n, n], rng.normals(n * n));
+        let mut a = b.matmul(&b.transpose());
+        for i in 0..n {
+            let v = a.at2(i, i) + n as f64;
+            a.set2(i, i, v);
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = spd(8, 1);
+        let l = cholesky(&a).unwrap();
+        let rec = l.matmul(&l.transpose());
+        for i in 0..8 {
+            for j in 0..8 {
+                assert!((rec.at2(i, j) - a.at2(i, j)).abs() < 1e-9, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_lower_triangular() {
+        let l = cholesky(&spd(6, 2)).unwrap();
+        for i in 0..6 {
+            for j in i + 1..6 {
+                assert_eq!(l.at2(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Tensor::new(&[2, 2], vec![1.0, 2.0, 2.0, 1.0]); // eigvals 3, -1
+        assert!(matches!(
+            cholesky(&a),
+            Err(CholeskyError::NotPositiveDefinite(..))
+        ));
+    }
+
+    #[test]
+    fn cholesky_rejects_non_square() {
+        let a = Tensor::zeros(&[2, 3]);
+        assert!(matches!(cholesky(&a), Err(CholeskyError::NotSquare(_))));
+    }
+
+    #[test]
+    fn triangular_solves_invert() {
+        let a = spd(7, 3);
+        let l = cholesky(&a).unwrap();
+        let b: Vec<f64> = (0..7).map(|i| i as f64 - 2.5).collect();
+        // solve A x = b via L L^T
+        let y = solve_lower(&l, &b);
+        let x = solve_upper(&l.transpose(), &y);
+        // check A x == b
+        let ax = a.matmul(&Tensor::new(&[7, 1], x));
+        for i in 0..7 {
+            assert!((ax.data()[i] - b[i]).abs() < 1e-9);
+        }
+    }
+}

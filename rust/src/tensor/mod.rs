@@ -1,0 +1,304 @@
+//! Minimal dense tensor substrate used by every numeric module on the Rust
+//! side (GP sampling, PDE solvers, validation metrics, the native autodiff
+//! demonstrator).
+//!
+//! Deliberately small: row-major `f64` storage, shape arithmetic, matmul,
+//! Cholesky, norms.  Anything fancier belongs in the XLA artifacts -- the
+//! request-path math runs there; this substrate exists for workload
+//! generation and truth computation.
+
+mod linalg;
+
+pub use linalg::{cholesky, solve_lower, solve_upper, CholeskyError};
+
+use std::fmt;
+use std::ops::{Add, Mul, Sub};
+
+/// Row-major dense tensor of `f64`.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f64>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)?;
+        if self.data.len() <= 8 {
+            write!(f, " {:?}", self.data)?;
+        }
+        Ok(())
+    }
+}
+
+impl Tensor {
+    /// Build from shape + data (length must match).
+    pub fn new(shape: &[usize], data: Vec<f64>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} vs data len {}",
+            data.len()
+        );
+        Self { shape: shape.to_vec(), data }
+    }
+
+    /// All zeros.
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    /// All equal to `v`.
+    pub fn full(shape: &[usize], v: f64) -> Self {
+        Self { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    /// 1-D tensor from a vec.
+    pub fn vec1(data: Vec<f64>) -> Self {
+        Self { shape: vec![data.len()], data }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut t = Self::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    /// `n` equally spaced points on `[lo, hi]` inclusive.
+    pub fn linspace(lo: f64, hi: f64, n: usize) -> Self {
+        assert!(n >= 2);
+        let step = (hi - lo) / (n - 1) as f64;
+        Self::vec1((0..n).map(|i| lo + step * i as f64).collect())
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// f32 copy (what the PJRT artifacts consume).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    /// Reshape (same element count).
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// 2-D index.
+    pub fn at2(&self, i: usize, j: usize) -> f64 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    pub fn set2(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j] = v;
+    }
+
+    /// Matrix product `(m,k) @ (k,n)`, ikj loop order for locality.
+    pub fn matmul(&self, rhs: &Tensor) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        assert_eq!(rhs.shape.len(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (rhs.shape[0], rhs.shape[1]);
+        assert_eq!(k, k2, "matmul {:?} @ {:?}", self.shape, rhs.shape);
+        let mut out = vec![0.0; m * n];
+        for i in 0..m {
+            let orow = &mut out[i * n..(i + 1) * n];
+            for kk in 0..k {
+                let a = self.data[i * k + kk];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &rhs.data[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        Tensor::new(&[m, n], out)
+    }
+
+    /// Matrix transpose (2-D only).
+    pub fn transpose(&self) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor::new(&[n, m], out)
+    }
+
+    /// Elementwise map.
+    pub fn map(&self, f: impl Fn(f64) -> f64) -> Tensor {
+        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    /// Scale in place.
+    pub fn scale(mut self, s: f64) -> Tensor {
+        for x in &mut self.data {
+            *x *= s;
+        }
+        self
+    }
+
+    /// Frobenius / L2 norm.
+    pub fn norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Relative L2 error vs a reference (the paper's validation metric).
+    pub fn rel_l2_error(&self, truth: &Tensor) -> f64 {
+        assert_eq!(self.shape, truth.shape);
+        let diff: f64 = self
+            .data
+            .iter()
+            .zip(&truth.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        let den: f64 = truth.data.iter().map(|x| x * x).sum();
+        (diff / den.max(1e-300)).sqrt()
+    }
+
+    /// Max |.| entry.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0, |a, &x| a.max(x.abs()))
+    }
+
+    /// Mean of entries.
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f64>() / self.data.len() as f64
+    }
+}
+
+macro_rules! ew_op {
+    ($trait:ident, $fn:ident, $op:tt) => {
+        impl $trait for &Tensor {
+            type Output = Tensor;
+            fn $fn(self, rhs: &Tensor) -> Tensor {
+                assert_eq!(self.shape, rhs.shape, "elementwise shape mismatch");
+                Tensor {
+                    shape: self.shape.clone(),
+                    data: self
+                        .data
+                        .iter()
+                        .zip(&rhs.data)
+                        .map(|(a, b)| a $op b)
+                        .collect(),
+                }
+            }
+        }
+    };
+}
+
+ew_op!(Add, add, +);
+ew_op!(Sub, sub, -);
+ew_op!(Mul, mul, *);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_shape() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.at2(1, 2), 6.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::new(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Tensor::new(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::new(&[2, 2], vec![5., 6., 7., 8.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let c = a.matmul(&Tensor::eye(3));
+        assert_eq!(c.data(), a.data());
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let a = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(a.transpose().transpose(), a);
+        assert_eq!(a.transpose().at2(2, 1), 6.0);
+    }
+
+    #[test]
+    fn linspace_endpoints() {
+        let t = Tensor::linspace(0.0, 1.0, 11);
+        assert!((t.data()[0] - 0.0).abs() < 1e-15);
+        assert!((t.data()[10] - 1.0).abs() < 1e-15);
+        assert!((t.data()[5] - 0.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn rel_l2_error_zero_for_equal() {
+        let a = Tensor::vec1(vec![1., 2., 3.]);
+        assert_eq!(a.rel_l2_error(&a), 0.0);
+    }
+
+    #[test]
+    fn rel_l2_error_known() {
+        let a = Tensor::vec1(vec![2., 0.]);
+        let b = Tensor::vec1(vec![1., 0.]);
+        assert!((a.rel_l2_error(&b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn elementwise_ops() {
+        let a = Tensor::vec1(vec![1., 2.]);
+        let b = Tensor::vec1(vec![3., 4.]);
+        assert_eq!((&a + &b).data(), &[4., 6.]);
+        assert_eq!((&b - &a).data(), &[2., 2.]);
+        assert_eq!((&a * &b).data(), &[3., 8.]);
+    }
+
+    #[test]
+    fn to_f32_round_trip() {
+        let a = Tensor::vec1(vec![1.5, -2.25]);
+        assert_eq!(a.to_f32(), vec![1.5f32, -2.25f32]);
+    }
+}

@@ -1,0 +1,195 @@
+//! Micro-benchmark harness (the offline stand-in for `criterion`).
+//!
+//! Warmup, a fixed measurement budget, outlier-robust statistics, and a
+//! table printer shaped like the paper's Figure-2 / Table-1 rows.  The
+//! bench binaries under `rust/benches/` are `harness = false` and drive
+//! this directly, so `cargo bench` works end to end without criterion.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics of one benchmark.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub p50: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<Duration>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort();
+        let n = samples.len();
+        let sum: Duration = samples.iter().sum();
+        let mean = sum / n as u32;
+        let mean_s = mean.as_secs_f64();
+        let var = samples
+            .iter()
+            .map(|d| (d.as_secs_f64() - mean_s).powi(2))
+            .sum::<f64>()
+            / n as f64;
+        Stats {
+            iters: n,
+            mean,
+            stddev: Duration::from_secs_f64(var.sqrt()),
+            p50: samples[n / 2],
+            min: samples[0],
+            max: samples[n - 1],
+        }
+    }
+
+    /// Milliseconds, convenient for table rows.
+    pub fn mean_ms(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e3
+    }
+
+    /// The paper reports "time per 1000 batches" -- scale a per-batch mean.
+    pub fn per_1000(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e3 // seconds per 1000 iterations
+    }
+}
+
+/// Benchmark runner with a time budget.
+pub struct Bench {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            min_iters: 5,
+            max_iters: 10_000,
+        }
+    }
+}
+
+impl Bench {
+    /// Quick preset for expensive end-to-end steps.
+    pub fn heavy() -> Self {
+        Self {
+            warmup: Duration::from_millis(100),
+            budget: Duration::from_secs(3),
+            min_iters: 3,
+            max_iters: 200,
+        }
+    }
+
+    /// Measure `f` repeatedly; each call is one sample.
+    pub fn run<R>(&self, mut f: impl FnMut() -> R) -> Stats {
+        // warmup
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // measurement
+        let mut samples = Vec::new();
+        let b0 = Instant::now();
+        while (b0.elapsed() < self.budget || samples.len() < self.min_iters)
+            && samples.len() < self.max_iters
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        Stats::from_samples(samples)
+    }
+}
+
+/// Fixed-width table printer for paper-style rows.
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            widths: headers.iter().map(|s| s.len()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        for (w, c) in self.widths.iter_mut().zip(cells) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let line = |cells: &[String], widths: &[usize]| {
+            let mut s = String::new();
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!("{c:>w$}  ", w = w));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers, &self.widths);
+        println!("{}", "-".repeat(self.widths.iter().sum::<usize>() + 2 * self.widths.len()));
+        for r in &self.rows {
+            line(r, &self.widths);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_from_known_samples() {
+        let s = Stats::from_samples(vec![
+            Duration::from_millis(1),
+            Duration::from_millis(2),
+            Duration::from_millis(3),
+        ]);
+        assert_eq!(s.iters, 3);
+        assert_eq!(s.mean, Duration::from_millis(2));
+        assert_eq!(s.p50, Duration::from_millis(2));
+        assert_eq!(s.min, Duration::from_millis(1));
+        assert_eq!(s.max, Duration::from_millis(3));
+    }
+
+    #[test]
+    fn run_respects_min_iters() {
+        let b = Bench {
+            warmup: Duration::from_millis(1),
+            budget: Duration::ZERO,
+            min_iters: 7,
+            max_iters: 100,
+        };
+        let s = b.run(|| 1 + 1);
+        assert!(s.iters >= 7);
+    }
+
+    #[test]
+    fn run_measures_sleepy_fn() {
+        let b = Bench {
+            warmup: Duration::ZERO,
+            budget: Duration::from_millis(30),
+            min_iters: 3,
+            max_iters: 100,
+        };
+        let s = b.run(|| std::thread::sleep(Duration::from_millis(2)));
+        assert!(s.mean >= Duration::from_millis(2));
+        assert!(s.mean < Duration::from_millis(20));
+    }
+
+    #[test]
+    fn table_row_count_enforced() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        assert_eq!(t.rows.len(), 1);
+    }
+}

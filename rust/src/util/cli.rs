@@ -1,0 +1,241 @@
+//! Declarative command-line parsing (the offline stand-in for `clap`).
+//!
+//! Supports subcommands, `--flag value` / `--flag=value` options, boolean
+//! switches, defaults, and auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    UnknownOption(String),
+    #[error("option --{0} needs a value")]
+    MissingValue(String),
+    #[error("missing required option --{0}")]
+    MissingRequired(String),
+    #[error("invalid value {1:?} for --{0}: {2}")]
+    BadValue(String, String, String),
+    #[error("unexpected positional argument {0:?}")]
+    UnexpectedPositional(String),
+}
+
+/// One option specification.
+#[derive(Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_switch: bool,
+    pub required: bool,
+}
+
+/// A declarative option table + parser.
+pub struct Opts {
+    program: String,
+    about: &'static str,
+    specs: Vec<OptSpec>,
+}
+
+/// Parsed option values.
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    switches: BTreeMap<String, bool>,
+    pub positionals: Vec<String>,
+}
+
+impl Opts {
+    pub fn new(program: &str, about: &'static str) -> Self {
+        Self { program: program.to_string(), about, specs: Vec::new() }
+    }
+
+    /// Option taking a value, with a default.
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec { name, help, default: Some(default), is_switch: false, required: false });
+        self
+    }
+
+    /// Required option taking a value.
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec { name, help, default: None, is_switch: false, required: true });
+        self
+    }
+
+    /// Boolean switch (present = true).
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec { name, help, default: None, is_switch: true, required: false });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} -- {}\n\noptions:\n", self.program, self.about);
+        for spec in &self.specs {
+            let kind = if spec.is_switch {
+                String::new()
+            } else if let Some(d) = spec.default {
+                format!(" <value, default {d}>")
+            } else {
+                " <value, required>".to_string()
+            };
+            s.push_str(&format!("  --{}{}\n      {}\n", spec.name, kind, spec.help));
+        }
+        s
+    }
+
+    /// Parse a raw argument list (without the program name).
+    pub fn parse(&self, args: &[String]) -> Result<Parsed, CliError> {
+        let mut values = BTreeMap::new();
+        let mut switches = BTreeMap::new();
+        let mut positionals = Vec::new();
+        for spec in &self.specs {
+            if let Some(d) = spec.default {
+                values.insert(spec.name.to_string(), d.to_string());
+            }
+            if spec.is_switch {
+                switches.insert(spec.name.to_string(), false);
+            }
+        }
+        let mut it = args.iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let Some(spec) = self.specs.iter().find(|s| s.name == name) else {
+                    return Err(CliError::UnknownOption(name));
+                };
+                if spec.is_switch {
+                    switches.insert(name, true);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| CliError::MissingValue(name.clone()))?,
+                    };
+                    values.insert(name, v);
+                }
+            } else {
+                positionals.push(arg.clone());
+            }
+        }
+        for spec in &self.specs {
+            if spec.required && !values.contains_key(spec.name) {
+                return Err(CliError::MissingRequired(spec.name.to_string()));
+            }
+        }
+        Ok(Parsed { values, switches, positionals })
+    }
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} was not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, CliError> {
+        let v = self.get(name);
+        v.parse()
+            .map_err(|e: std::num::ParseIntError| CliError::BadValue(name.into(), v.into(), e.to_string()))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, CliError> {
+        let v = self.get(name);
+        v.parse()
+            .map_err(|e: std::num::ParseFloatError| CliError::BadValue(name.into(), v.into(), e.to_string()))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, CliError> {
+        let v = self.get(name);
+        v.parse()
+            .map_err(|e: std::num::ParseIntError| CliError::BadValue(name.into(), v.into(), e.to_string()))
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        *self
+            .switches
+            .get(name)
+            .unwrap_or_else(|| panic!("switch --{name} was not declared"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn opts() -> Opts {
+        Opts::new("prog", "test")
+            .opt("steps", "100", "number of steps")
+            .req("problem", "problem name")
+            .switch("verbose", "chatty")
+    }
+
+    #[test]
+    fn defaults_and_values() {
+        let p = opts().parse(&args(&["--problem", "rd"])).unwrap();
+        assert_eq!(p.get("steps"), "100");
+        assert_eq!(p.get_usize("steps").unwrap(), 100);
+        assert_eq!(p.get("problem"), "rd");
+        assert!(!p.switch("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_switch() {
+        let p = opts()
+            .parse(&args(&["--problem=burgers", "--steps=5", "--verbose"]))
+            .unwrap();
+        assert_eq!(p.get("problem"), "burgers");
+        assert_eq!(p.get_usize("steps").unwrap(), 5);
+        assert!(p.switch("verbose"));
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let p = opts().parse(&args(&["train", "--problem", "rd"])).unwrap();
+        assert_eq!(p.positionals, vec!["train"]);
+    }
+
+    #[test]
+    fn missing_required_rejected() {
+        assert!(matches!(
+            opts().parse(&args(&[])),
+            Err(CliError::MissingRequired(_))
+        ));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(matches!(
+            opts().parse(&args(&["--problem", "rd", "--bogus"])),
+            Err(CliError::UnknownOption(_))
+        ));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(
+            opts().parse(&args(&["--problem"])),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn bad_numeric_value() {
+        let p = opts().parse(&args(&["--problem", "rd", "--steps", "xx"])).unwrap();
+        assert!(matches!(p.get_usize("steps"), Err(CliError::BadValue(..))));
+    }
+
+    #[test]
+    fn usage_mentions_all_options() {
+        let u = opts().usage();
+        assert!(u.contains("--steps") && u.contains("--problem") && u.contains("--verbose"));
+    }
+}

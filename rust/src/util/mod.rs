@@ -1,0 +1,17 @@
+//! Hand-rolled infrastructure substrates.
+//!
+//! This build is fully offline; the usual ecosystem crates (serde, clap,
+//! criterion, proptest, tokio) are not available, so the pieces of them this
+//! project needs are implemented here, each small and fully tested:
+//!
+//! * [`json`]   -- JSON parser/writer (reads `artifacts/meta.json`, writes
+//!   metric logs),
+//! * [`cli`]    -- declarative flag/positional argument parser,
+//! * [`benchkit`] -- criterion-style micro-benchmark harness (warmup,
+//!   timed iterations, mean/stddev/percentiles, throughput),
+//! * [`propkit`]  -- seeded property-testing harness with shrinking.
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod propkit;

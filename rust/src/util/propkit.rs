@@ -1,0 +1,187 @@
+//! Seeded property-testing harness with shrinking (the offline stand-in for
+//! `proptest`).
+//!
+//! A property is a closure over a generated input; the harness runs many
+//! random cases and, on failure, greedily shrinks the input before
+//! panicking with the minimal counter-example.  Generators are plain
+//! functions of [`Pcg64`] plus a shrink function, which keeps the machinery
+//! tiny while covering what the invariant tests need (sized vectors,
+//! ranges, tuples via composition).
+
+use crate::rng::Pcg64;
+
+/// A reusable generator: produce a value from randomness + shrink candidates.
+pub struct Gen<T> {
+    pub make: Box<dyn Fn(&mut Pcg64) -> T>,
+    pub shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: Clone + 'static> Gen<T> {
+    pub fn new(
+        make: impl Fn(&mut Pcg64) -> T + 'static,
+        shrink: impl Fn(&T) -> Vec<T> + 'static,
+    ) -> Self {
+        Self { make: Box::new(make), shrink: Box::new(shrink) }
+    }
+}
+
+/// usize in `[lo, hi]`, shrinking toward `lo`.
+pub fn usize_in(lo: usize, hi: usize) -> Gen<usize> {
+    Gen::new(
+        move |rng| lo + rng.below(hi - lo + 1),
+        move |&v| {
+            let mut c = Vec::new();
+            if v > lo {
+                c.push(lo);
+                c.push(lo + (v - lo) / 2);
+                c.push(v - 1);
+            }
+            c.dedup();
+            c
+        },
+    )
+}
+
+/// f64 in `[lo, hi)`, shrinking toward the midpoint-free simple values.
+pub fn f64_in(lo: f64, hi: f64) -> Gen<f64> {
+    Gen::new(
+        move |rng| rng.uniform_in(lo, hi),
+        move |&v| {
+            let mut c = Vec::new();
+            for cand in [0.0, lo, (lo + hi) / 2.0] {
+                if (lo..hi).contains(&cand) && cand != v {
+                    c.push(cand);
+                }
+            }
+            c
+        },
+    )
+}
+
+/// Vector of standard normals with length from `len_gen`.
+pub fn normal_vec(len_gen: Gen<usize>) -> Gen<Vec<f64>> {
+    Gen::new(
+        move |rng| {
+            let n = (len_gen.make)(rng);
+            rng.normals(n)
+        },
+        |v| {
+            let mut c = Vec::new();
+            if v.len() > 1 {
+                c.push(v[..v.len() / 2].to_vec()); // halve
+                c.push(v[..v.len() - 1].to_vec()); // drop one
+            }
+            if v.iter().any(|&x| x != 0.0) {
+                c.push(vec![0.0; v.len()]); // all zeros
+                c.push(v.iter().map(|x| x / 2.0).collect()); // damp
+            }
+            c
+        },
+    )
+}
+
+/// Outcome-bearing property check.
+pub struct Runner {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrinks: usize,
+}
+
+impl Default for Runner {
+    fn default() -> Self {
+        Self { cases: 64, seed: 0x5eed, max_shrinks: 200 }
+    }
+}
+
+impl Runner {
+    /// Run `prop` on `cases` random inputs; panic with a shrunk
+    /// counter-example (debug-formatted) on failure.
+    pub fn check<T: Clone + std::fmt::Debug + 'static>(
+        &self,
+        gen: Gen<T>,
+        prop: impl Fn(&T) -> Result<(), String>,
+    ) {
+        let mut rng = Pcg64::seeded(self.seed);
+        for case in 0..self.cases {
+            let input = (gen.make)(&mut rng);
+            if let Err(first_msg) = prop(&input) {
+                // shrink greedily
+                let mut best = input;
+                let mut best_msg = first_msg;
+                let mut budget = self.max_shrinks;
+                'outer: while budget > 0 {
+                    for cand in (gen.shrink)(&best) {
+                        budget -= 1;
+                        if let Err(msg) = prop(&cand) {
+                            best = cand;
+                            best_msg = msg;
+                            continue 'outer;
+                        }
+                        if budget == 0 {
+                            break;
+                        }
+                    }
+                    break;
+                }
+                panic!(
+                    "property failed (case {case}, seed {:#x}):\n  input: {best:?}\n  error: {best_msg}",
+                    self.seed
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        Runner::default().check(usize_in(0, 100), |&v| {
+            if v <= 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimum() {
+        let caught = std::panic::catch_unwind(|| {
+            Runner { cases: 200, ..Default::default() }.check(usize_in(0, 1000), |&v| {
+                if v < 500 {
+                    Ok(())
+                } else {
+                    Err(format!("{v} too big"))
+                }
+            });
+        });
+        let msg = *caught.unwrap_err().downcast::<String>().unwrap();
+        // greedy shrink must land on exactly the boundary 500
+        assert!(msg.contains("input: 500"), "{msg}");
+    }
+
+    #[test]
+    fn normal_vec_shrinks_toward_small_and_zero() {
+        let g = normal_vec(usize_in(1, 8));
+        let mut rng = Pcg64::seeded(1);
+        let v = (g.make)(&mut rng);
+        let shrunk = (g.shrink)(&v);
+        assert!(!shrunk.is_empty());
+        if v.len() > 1 {
+            assert!(shrunk.iter().any(|s| s.len() < v.len()));
+        }
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let collect = || {
+            let mut rng = Pcg64::seeded(99);
+            let g = usize_in(0, 1_000_000);
+            (0..10).map(|_| (g.make)(&mut rng)).collect::<Vec<_>>()
+        };
+        assert_eq!(collect(), collect());
+    }
+}

@@ -1,0 +1,109 @@
+//! Coordinator integration: full Trainer runs over real artifacts, and the
+//! coordinator invariants (batch coverage, determinism, checkpoint).
+
+use std::rc::Rc;
+use zcs::config::RunConfig;
+use zcs::coordinator::{checkpoint, Trainer};
+use zcs::runtime::Runtime;
+
+fn runtime_or_skip() -> Option<Rc<Runtime>> {
+    match Runtime::open("artifacts") {
+        Ok(rt) => Some(Rc::new(rt)),
+        Err(e) => {
+            eprintln!("skipping: {e:#}");
+            None
+        }
+    }
+}
+
+fn quick_config(problem: &str, steps: usize) -> RunConfig {
+    RunConfig {
+        problem: problem.into(),
+        strategy: "zcs".into(),
+        steps,
+        bank_size: 64,
+        bank_grid: 64,
+        log_every: steps.max(1),
+        ..RunConfig::default()
+    }
+}
+
+#[test]
+fn trainer_runs_and_loss_is_finite_everywhere() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut trainer = Trainer::new(rt, quick_config("reaction_diffusion", 8)).unwrap();
+    let report = trainer.run().unwrap();
+    assert_eq!(report.steps, 8);
+    assert!(report.final_loss.is_finite());
+    assert!(!report.curve.is_empty());
+    assert!(report.step_time.as_nanos() > 0);
+}
+
+#[test]
+fn training_is_deterministic_per_seed() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let run = |seed: u64| {
+        let mut cfg = quick_config("reaction_diffusion", 5);
+        cfg.seed = seed;
+        let mut t = Trainer::new(rt.clone(), cfg).unwrap();
+        t.run().unwrap().final_loss
+    };
+    assert_eq!(run(11), run(11));
+    assert_ne!(run(11), run(12));
+}
+
+#[test]
+fn stokes_vector_problem_trains() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut trainer = Trainer::new(rt, quick_config("stokes", 4)).unwrap();
+    let report = trainer.run().unwrap();
+    assert!(report.final_loss.is_finite());
+    // lid BC term participates: loss_bc nonzero at init
+    assert!(report.curve.iter().any(|p| p.loss_bc > 0.0));
+}
+
+#[test]
+fn kirchhoff_fourth_order_trains() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut trainer = Trainer::new(rt, quick_config("kirchhoff", 3)).unwrap();
+    let report = trainer.run().unwrap();
+    assert!(report.final_loss.is_finite());
+}
+
+#[test]
+fn burgers_trains_with_periodic_bc() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut trainer = Trainer::new(rt, quick_config("burgers", 3)).unwrap();
+    let report = trainer.run().unwrap();
+    assert!(report.final_loss.is_finite());
+}
+
+#[test]
+fn checkpoint_round_trip_through_trainer() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let dir = std::env::temp_dir().join("zcs_trainer_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("p.ckpt").to_str().unwrap().to_string();
+    let mut cfg = quick_config("reaction_diffusion", 3);
+    cfg.checkpoint = Some(path.clone());
+    let mut trainer = Trainer::new(rt, cfg).unwrap();
+    trainer.run().unwrap();
+    let loaded = checkpoint::load(&path).unwrap();
+    assert_eq!(loaded.len(), trainer.state.params.len());
+    for (a, b) in loaded.iter().zip(&trainer.state.params) {
+        assert_eq!(a, b);
+    }
+}
+
+#[test]
+fn validation_runs_on_a_short_model() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut cfg = quick_config("reaction_diffusion", 10);
+    cfg.validate = true;
+    let mut trainer = Trainer::new(rt, cfg).unwrap();
+    let report = trainer.run().unwrap();
+    let errors = report.validation.unwrap();
+    assert_eq!(errors.len(), 1);
+    // a barely-trained model is bad but the metric must be a sane number
+    assert!(errors[0].is_finite() && errors[0] > 0.0, "{errors:?}");
+}

@@ -1,0 +1,86 @@
+//! The paper's graph-size claims, asserted on the real lowered artifacts.
+//!
+//! These tests ARE the reproduction's headline numbers in test form:
+//! ZCS's backprop graph must be (a) far smaller than FuncLoop's at the same
+//! scale and (b) essentially M-invariant, while FuncLoop's grows ~linearly.
+
+use zcs::hlostats;
+use zcs::runtime::Runtime;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    match Runtime::open("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping: {e:#}");
+            None
+        }
+    }
+}
+
+fn instr(rt: &Runtime, name: &str) -> Option<usize> {
+    let text = rt.artifact_text(name).ok()?;
+    Some(hlostats::analyze(&text).ok()?.total_instructions)
+}
+
+#[test]
+fn zcs_graph_is_much_smaller_than_funcloop_on_every_problem() {
+    let Some(rt) = runtime_or_skip() else { return };
+    for problem in ["reaction_diffusion", "burgers", "kirchhoff", "stokes"] {
+        let zcs = instr(&rt, &format!("{problem}__zcs__bench.train"));
+        let floop = instr(&rt, &format!("{problem}__funcloop__bench.train"));
+        let (Some(zcs), Some(floop)) = (zcs, floop) else { continue };
+        assert!(
+            floop as f64 >= 2.0 * zcs as f64,
+            "{problem}: funcloop {floop} !>= 2x zcs {zcs}"
+        );
+    }
+}
+
+#[test]
+fn zcs_graph_is_nearly_m_invariant_on_the_fig2_sweep() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let at = |m: usize| instr(&rt, &format!("highorder_p3__zcs__M{m}_N512.train"));
+    let (Some(small), Some(large)) = (at(2), at(32)) else { return };
+    // 16x more functions must cost < 25% more instructions for ZCS
+    assert!(
+        (large as f64) < 1.25 * small as f64,
+        "zcs graph grew with M: {small} -> {large}"
+    );
+}
+
+#[test]
+fn funcloop_graph_grows_linearly_on_the_fig2_sweep() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let at = |m: usize| instr(&rt, &format!("highorder_p3__funcloop__M{m}_N512.train"));
+    let (Some(m4), Some(m16)) = (at(4), at(16)) else { return };
+    // 4x M should be ~4x instructions (allow 2.5x-6x for fixed overhead)
+    let ratio = m16 as f64 / m4 as f64;
+    assert!(
+        (2.5..6.0).contains(&ratio),
+        "funcloop scaling off: {m4} -> {m16} (ratio {ratio:.2})"
+    );
+}
+
+#[test]
+fn datavect_memory_exceeds_zcs_at_scale() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let peak = |name: &str| -> Option<u64> {
+        let text = rt.artifact_text(name).ok()?;
+        Some(hlostats::analyze(&text).ok()?.peak_live_bytes)
+    };
+    let zcs = peak("highorder_p3__zcs__M32_N512.train");
+    let dv = peak("highorder_p3__datavect__M32_N512.train");
+    let (Some(zcs), Some(dv)) = (zcs, dv) else { return };
+    assert!(dv > zcs, "datavect live bytes {dv} !> zcs {zcs}");
+}
+
+#[test]
+fn p_order_dominates_graph_growth() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let at = |p: usize| instr(&rt, &format!("highorder_p{p}__zcs__M8_N512.train"));
+    let (Some(p1), Some(p5)) = (at(1), at(5)) else { return };
+    assert!(
+        p5 as f64 > 2.0 * p1 as f64,
+        "P growth too weak: P=1 {p1}, P=5 {p5}"
+    );
+}

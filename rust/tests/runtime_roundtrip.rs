@@ -1,0 +1,161 @@
+//! Integration: load real AOT artifacts through the PJRT runtime, execute
+//! them, and check the numerics make sense end to end.
+//!
+//! These tests require `make artifacts` to have run (they are skipped with a
+//! note otherwise, so `cargo test` stays usable on a fresh checkout).
+
+use zcs::coordinator::params::init_params;
+use zcs::rng::Pcg64;
+use zcs::runtime::{HostTensor, RunArg, Runtime};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    match Runtime::open("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping: {e:#}");
+            None
+        }
+    }
+}
+
+fn rand_batch(meta: &zcs::runtime::ArtifactMeta, rng: &mut Pcg64) -> Vec<RunArg> {
+    meta.batch_schema
+        .iter()
+        .map(|(name, shape)| {
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> = if name.starts_with("x_") {
+                rng.uniforms_in(n, 0.0, 1.0).iter().map(|&v| v as f32).collect()
+            } else {
+                rng.normals(n).iter().map(|&v| (v * 0.1) as f32).collect()
+            };
+            RunArg::F32(HostTensor::new(shape.clone(), data))
+        })
+        .collect()
+}
+
+#[test]
+fn forward_artifact_executes_with_correct_shapes() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let name = "reaction_diffusion__forward_N256";
+    let exe = rt.load(name).expect("compile forward artifact");
+    let meta = &exe.meta;
+    let mut rng = Pcg64::seeded(1);
+    let params = init_params(&meta.param_layout, &mut rng);
+    let mut args: Vec<RunArg> = params.into_iter().map(RunArg::F32).collect();
+    let m = meta.inputs[meta.inputs.len() - 2].shape.clone();
+    let pts = meta.inputs.last().unwrap().shape.clone();
+    args.push(RunArg::F32(HostTensor::new(
+        m.clone(),
+        rng.normals(m.iter().product()).iter().map(|&v| v as f32).collect(),
+    )));
+    args.push(RunArg::F32(HostTensor::new(
+        pts.clone(),
+        rng.uniforms_in(pts.iter().product(), 0.0, 1.0)
+            .iter()
+            .map(|&v| v as f32)
+            .collect(),
+    )));
+    let out = exe.run(&args).expect("execute");
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].dims, meta.outputs[0].shape);
+    assert!(out[0].data.iter().all(|v| v.is_finite()));
+    // outputs must not be all-zero: the net actually computed something
+    assert!(out[0].data.iter().any(|&v| v != 0.0));
+}
+
+#[test]
+fn train_step_decreases_loss_on_fixed_batch() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let name = "reaction_diffusion__zcs__bench.train";
+    let exe = rt.load(name).expect("compile train artifact");
+    let meta = exe.meta.clone();
+    let mut rng = Pcg64::seeded(7);
+    let mut params = init_params(&meta.param_layout, &mut rng);
+    let mut m: Vec<HostTensor> =
+        params.iter().map(|p| HostTensor::zeros(&p.dims)).collect();
+    let mut v = m.clone();
+    let mut step = 0i32;
+    let batch = rand_batch(&meta, &mut rng);
+    let np = meta.n_params;
+
+    let mut first_loss = None;
+    let mut last_loss = 0.0f32;
+    for _ in 0..20 {
+        let mut args: Vec<RunArg> = Vec::new();
+        args.extend(params.iter().cloned().map(RunArg::F32));
+        args.extend(m.iter().cloned().map(RunArg::F32));
+        args.extend(v.iter().cloned().map(RunArg::F32));
+        args.push(RunArg::I32(step));
+        args.extend(batch.iter().cloned());
+        let out = exe.run(&args).expect("train step");
+        assert_eq!(out.len(), 3 * np + 4);
+        params = out[..np].to_vec();
+        m = out[np..2 * np].to_vec();
+        v = out[2 * np..3 * np].to_vec();
+        step = out[3 * np].data[0] as i32;
+        last_loss = out[3 * np + 1].data[0];
+        if first_loss.is_none() {
+            first_loss = Some(last_loss);
+        }
+        assert!(last_loss.is_finite());
+    }
+    let first = first_loss.unwrap();
+    assert!(step == 20);
+    assert!(
+        last_loss < first,
+        "loss should decrease: first {first}, last {last_loss}"
+    );
+}
+
+#[test]
+fn zcs_and_zcs_fwd_agree_on_loss_value() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Pcg64::seeded(3);
+    let a = rt.load("reaction_diffusion__zcs__bench.loss").expect("zcs loss");
+    let b = rt.load("reaction_diffusion__zcs_fwd__bench.loss").expect("fwd loss");
+    let params = init_params(&a.meta.param_layout, &mut rng);
+    let batch = rand_batch(&a.meta, &mut rng);
+    let run = |exe: &zcs::runtime::Executable| -> f32 {
+        let mut args: Vec<RunArg> = params.iter().cloned().map(RunArg::F32).collect();
+        args.extend(batch.iter().cloned());
+        exe.run(&args).expect("loss run")[0].data[0]
+    };
+    let la = run(&a);
+    let lb = run(&b);
+    assert!(
+        (la - lb).abs() <= 1e-4 * la.abs().max(1e-6),
+        "strategy loss mismatch: {la} vs {lb}"
+    );
+}
+
+#[test]
+fn baseline_strategies_agree_with_zcs_too() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Pcg64::seeded(5);
+    let zcs = rt.load("reaction_diffusion__zcs__bench.loss").unwrap();
+    let params = init_params(&zcs.meta.param_layout, &mut rng);
+    let batch = rand_batch(&zcs.meta, &mut rng);
+    let run = |exe: &zcs::runtime::Executable| -> f32 {
+        let mut args: Vec<RunArg> = params.iter().cloned().map(RunArg::F32).collect();
+        args.extend(batch.iter().cloned());
+        exe.run(&args).unwrap()[0].data[0]
+    };
+    let base = run(&zcs);
+    for strat in ["funcloop", "datavect"] {
+        let exe = rt.load(&format!("reaction_diffusion__{strat}__bench.loss")).unwrap();
+        let l = run(&exe);
+        assert!(
+            (l - base).abs() <= 5e-3 * base.abs().max(1e-6),
+            "{strat}: {l} vs zcs {base}"
+        );
+    }
+}
+
+#[test]
+fn manifest_names_resolve_to_files() {
+    let Some(rt) = runtime_or_skip() else { return };
+    for name in rt.artifact_names() {
+        let text = rt.artifact_text(&name).expect(&name);
+        assert!(text.starts_with("HloModule"), "{name}");
+    }
+}
