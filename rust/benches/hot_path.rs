@@ -3,16 +3,22 @@
 //! Measures the pieces that surround every PJRT step -- batch assembly, GP
 //! bank generation, host<->literal conversion via a tiny forward artifact,
 //! HLO parsing -- so the perf pass can verify the coordinator is not the
-//! bottleneck (DESIGN.md §6).  Run: `cargo bench --bench hot_path`.
+//! bottleneck (DESIGN.md §6).  Also measures interpreted `Graph::eval` vs
+//! compiled `Program` execution of the native AD strategies and writes the
+//! comparison to `BENCH_compile.json`, so the compile-layer perf trajectory
+//! is tracked from PR to PR.  Run: `cargo bench --bench hot_path`.
 
 use std::rc::Rc;
+use zcs::autodiff::{zcs_demo, Executor, Strategy};
 use zcs::config::RunConfig;
 use zcs::coordinator::{batch::Batcher, params::init_params};
 use zcs::pde::ProblemKind;
 use zcs::rng::Pcg64;
 use zcs::runtime::{RunArg, Runtime};
 use zcs::sampler::{FunctionBank, GpSampler1d, Kernel};
-use zcs::util::benchkit::{Bench, Table};
+use zcs::tensor::Tensor;
+use zcs::util::benchkit::{Bench, Stats, Table};
+use zcs::util::json::{obj, Json};
 
 fn main() -> anyhow::Result<()> {
     let bench = Bench::default();
@@ -20,6 +26,10 @@ fn main() -> anyhow::Result<()> {
     let fmt = |s: &zcs::util::benchkit::Stats| {
         (format!("{:.3} ms", s.mean_ms()), format!("{:.3} ms", s.p50.as_secs_f64() * 1e3))
     };
+
+    // interpreted vs compiled execution of the native AD strategies
+    let compile_rows = bench_compiled_vs_interpreted(&mut table);
+    write_bench_compile_json(&compile_rows)?;
 
     // GP bank generation (one-time cost, amortised)
     let stats = Bench::heavy().run(|| {
@@ -104,5 +114,102 @@ fn main() -> anyhow::Result<()> {
     table.row(&["stokes solver (48^2, 4k iters)".into(), mean, p50, stats.iters.to_string()]);
 
     table.print();
+    Ok(())
+}
+
+/// One interpreted-vs-compiled measurement.
+struct CompileRow {
+    strategy: &'static str,
+    order: usize,
+    graph_nodes: usize,
+    instructions: usize,
+    interpreted: Stats,
+    compiled: Stats,
+}
+
+impl CompileRow {
+    fn speedup(&self) -> f64 {
+        self.interpreted.mean.as_secs_f64() / self.compiled.mean.as_secs_f64().max(1e-12)
+    }
+}
+
+/// Interpreted `Graph::eval` vs compiled `Program` execution for the three
+/// strategies (first + second order on ZCS, first order on the baselines).
+fn bench_compiled_vs_interpreted(table: &mut Table) -> Vec<CompileRow> {
+    let (m, n, q, h, k) = (8usize, 32usize, 8usize, 32usize, 16usize);
+    let mut rng = Pcg64::seeded(5);
+    let net = zcs_demo::DemoNet::random(q, h, k, &mut rng);
+    let p = Tensor::new(&[m, q], rng.normals(m * q));
+    let x = Tensor::new(&[n, 1], rng.uniforms_in(n, 0.0, 1.0));
+    let bench = Bench::default();
+    let mut exec = Executor::new();
+
+    let cases: [(Strategy, &'static str, usize); 4] = [
+        (Strategy::Zcs, "zcs", 1),
+        (Strategy::Zcs, "zcs", 2),
+        (Strategy::FuncLoop, "funcloop", 1),
+        (Strategy::DataVect, "datavect", 1),
+    ];
+    let mut rows = Vec::new();
+    for (strat, name, order) in cases {
+        let built = zcs_demo::build_derivative(&net, strat, m, n, q, order);
+        let compiled = built.compile();
+        let interpreted = bench.run(|| zcs_demo::eval_derivative(&built, &p, &x, m, n));
+        let compiled_t = bench.run(|| {
+            zcs_demo::eval_derivative_compiled(&compiled, &mut exec, &p, &x, m, n)
+        });
+        let row = CompileRow {
+            strategy: name,
+            order,
+            graph_nodes: compiled.graph_nodes,
+            instructions: compiled.program.stats.instructions,
+            interpreted,
+            compiled: compiled_t,
+        };
+        table.row(&[
+            format!("native {name} d{order}: interpreted ({} nodes)", row.graph_nodes),
+            format!("{:.3} ms", row.interpreted.mean_ms()),
+            format!("{:.3} ms", row.interpreted.p50.as_secs_f64() * 1e3),
+            row.interpreted.iters.to_string(),
+        ]);
+        table.row(&[
+            format!(
+                "native {name} d{order}: compiled ({} instrs, {:.1}x)",
+                row.instructions,
+                row.speedup()
+            ),
+            format!("{:.3} ms", row.compiled.mean_ms()),
+            format!("{:.3} ms", row.compiled.p50.as_secs_f64() * 1e3),
+            row.compiled.iters.to_string(),
+        ]);
+        rows.push(row);
+    }
+    rows
+}
+
+/// Persist the interpreted-vs-compiled numbers (ns/step) so the perf
+/// trajectory is tracked across PRs.
+fn write_bench_compile_json(rows: &[CompileRow]) -> anyhow::Result<()> {
+    let cases: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("strategy", Json::from(r.strategy)),
+                ("order", Json::from(r.order)),
+                ("graph_nodes", Json::from(r.graph_nodes)),
+                ("instructions", Json::from(r.instructions)),
+                ("interpreted_ns", Json::from(r.interpreted.mean.as_nanos() as f64)),
+                ("compiled_ns", Json::from(r.compiled.mean.as_nanos() as f64)),
+                ("speedup", Json::from(r.speedup())),
+            ])
+        })
+        .collect();
+    let doc = obj(vec![
+        ("bench", Json::from("hot_path.compile")),
+        ("unit", Json::from("ns/step")),
+        ("cases", Json::from(cases)),
+    ]);
+    std::fs::write("BENCH_compile.json", doc.to_string())?;
+    eprintln!("wrote BENCH_compile.json");
     Ok(())
 }

@@ -1,0 +1,186 @@
+//! Arena execution of compiled [`Program`]s.
+//!
+//! The [`Executor`] owns a dense arena of tensor slots sized by the
+//! program's liveness analysis.  Each instruction takes its destination
+//! slot's previous tensor out of the arena (recycling its allocation),
+//! writes the result in place via [`crate::tensor::kernels`], and puts it
+//! back -- no `HashMap` lookups, no per-node clones, and after warmup no
+//! heap allocation at all.  Keep one `Executor` alive across runs
+//! (compile-once/run-many); it is reusable across *different* programs
+//! too, growing its arena as needed.
+
+use super::graph::NodeId;
+use super::program::{Instr, OpCode, Operand, Program};
+use crate::tensor::{kernels, Tensor};
+use std::collections::HashMap;
+
+/// Reusable execution arena.
+#[derive(Default)]
+pub struct Executor {
+    arena: Vec<Option<Tensor>>,
+}
+
+/// Placeholder tensor for a slot that has never been written (zero-sized,
+/// no allocation).
+fn empty_tensor() -> Tensor {
+    Tensor::new(&[0], Vec::new())
+}
+
+fn resolve<'a>(
+    arena: &'a [Option<Tensor>],
+    inputs: &[&'a Tensor],
+    consts: &'a [Tensor],
+    v: Operand,
+) -> &'a Tensor {
+    match v {
+        Operand::Buf(b) => arena[b].as_ref().expect("operand buffer is live"),
+        Operand::In(i) => inputs[i],
+        Operand::Const(c) => &consts[c],
+    }
+}
+
+impl Executor {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Execute `program`, feeding graph inputs by their original `NodeId`
+    /// (same convention as [`super::graph::Graph::eval`]).  Returns the
+    /// requested outputs in order.
+    ///
+    /// Panics if a required input is missing or has the wrong shape --
+    /// mirroring the interpreter's contract.
+    pub fn run(&mut self, program: &Program, inputs: &HashMap<NodeId, Tensor>) -> Vec<Tensor> {
+        let refs: HashMap<NodeId, &Tensor> = inputs.iter().map(|(id, t)| (*id, t)).collect();
+        self.run_ref(program, &refs)
+    }
+
+    /// Like [`Executor::run`] but with borrowed input tensors -- the
+    /// per-step path for compile-once/run-many callers, which feed
+    /// long-lived weights and batch tensors without cloning them.
+    pub fn run_ref(&mut self, program: &Program, inputs: &HashMap<NodeId, &Tensor>) -> Vec<Tensor> {
+        let ins: Vec<&Tensor> = program
+            .inputs
+            .iter()
+            .zip(&program.input_shapes)
+            .map(|(id, shape)| {
+                let t: &Tensor = inputs
+                    .get(id)
+                    .copied()
+                    .unwrap_or_else(|| panic!("missing input for node {id}"));
+                assert_eq!(t.shape(), &shape[..], "input {id} shape");
+                t
+            })
+            .collect();
+        if self.arena.len() < program.n_slots {
+            self.arena.resize_with(program.n_slots, || None);
+        }
+
+        for instr in &program.instrs {
+            let mut out = self.arena[instr.out].take().unwrap_or_else(empty_tensor);
+            self.step(instr, &ins, &program.consts, &mut out);
+            self.arena[instr.out] = Some(out);
+        }
+
+        program
+            .outputs
+            .iter()
+            .map(|&v| resolve(&self.arena, &ins, &program.consts, v).clone())
+            .collect()
+    }
+
+    fn step(&self, instr: &Instr, ins: &[&Tensor], consts: &[Tensor], out: &mut Tensor) {
+        let arg = |k: usize| resolve(&self.arena, ins, consts, instr.args[k]);
+        match instr.op {
+            OpCode::Add => kernels::add_into(arg(0), arg(1), out),
+            OpCode::Sub => kernels::sub_into(arg(0), arg(1), out),
+            OpCode::Mul => kernels::mul_into(arg(0), arg(1), out),
+            OpCode::ScaleBy => {
+                let s = arg(0).data()[0];
+                kernels::scale_into(arg(1), s, out);
+            }
+            OpCode::Scale(c) => kernels::scale_into(arg(0), c, out),
+            OpCode::Tanh => kernels::tanh_into(arg(0), out),
+            OpCode::Broadcast => {
+                let v = arg(0).data()[0];
+                kernels::broadcast_into(v, &instr.shape, out);
+            }
+            OpCode::SumAll => kernels::sum_all_into(arg(0), out),
+            OpCode::MatMulNT => kernels::matmul_nt_into(arg(0), arg(1), out),
+            OpCode::MatMul => kernels::matmul_into(arg(0), arg(1), out),
+            OpCode::Transpose => kernels::transpose_into(arg(0), out),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autodiff::graph::Graph;
+
+    #[test]
+    fn executor_is_reusable_across_runs() {
+        let mut g = Graph::new();
+        let x = g.input(&[3]);
+        let t = g.tanh(x);
+        let s = g.mul(t, t);
+        let out = g.sum_all(s);
+        let prog = Program::compile(&g, &[out]);
+        let mut exec = Executor::new();
+        for seed in 0..4u64 {
+            let mut rng = crate::rng::Pcg64::seeded(seed);
+            let xv = Tensor::vec1(rng.normals(3));
+            let mut inputs = HashMap::new();
+            inputs.insert(x, xv);
+            let got = exec.run(&prog, &inputs);
+            assert_eq!(got[0], g.eval(out, &inputs));
+        }
+    }
+
+    #[test]
+    fn executor_is_reusable_across_programs() {
+        let mut g1 = Graph::new();
+        let x1 = g1.input(&[2]);
+        let o1 = g1.sum_all(x1);
+        let p1 = Program::compile(&g1, &[o1]);
+
+        let mut g2 = Graph::new();
+        let x2 = g2.input(&[2, 2]);
+        let t2 = g2.transpose_of(x2);
+        let m = g2.matmul(x2, t2);
+        let o2 = g2.sum_all(m);
+        let p2 = Program::compile(&g2, &[o2]);
+
+        let mut exec = Executor::new();
+        let mut in1 = HashMap::new();
+        in1.insert(x1, Tensor::vec1(vec![1.0, 2.0]));
+        assert_eq!(exec.run(&p1, &in1)[0].data(), &[3.0]);
+        let mut in2 = HashMap::new();
+        in2.insert(x2, Tensor::new(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]));
+        assert_eq!(exec.run(&p2, &in2)[0].data(), &[2.0]);
+        // and back to the first program
+        assert_eq!(exec.run(&p1, &in1)[0].data(), &[3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "missing input")]
+    fn missing_input_panics_like_eval() {
+        let mut g = Graph::new();
+        let x = g.input(&[1]);
+        let out = g.sum_all(x);
+        let prog = Program::compile(&g, &[out]);
+        Executor::new().run(&prog, &HashMap::new());
+    }
+
+    #[test]
+    #[should_panic(expected = "shape")]
+    fn wrong_input_shape_panics() {
+        let mut g = Graph::new();
+        let x = g.input(&[2]);
+        let out = g.sum_all(x);
+        let prog = Program::compile(&g, &[out]);
+        let mut inputs = HashMap::new();
+        inputs.insert(x, Tensor::vec1(vec![1.0, 2.0, 3.0]));
+        Executor::new().run(&prog, &inputs);
+    }
+}

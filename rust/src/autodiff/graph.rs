@@ -255,10 +255,11 @@ impl Graph {
                     self.accumulate(&mut adjoint, node.inputs[0], ga);
                 }
                 Op::Tanh => {
-                    // d tanh = 1 - tanh^2; rebuild tanh(x) as a node so the
-                    // derivative remains differentiable
+                    // d tanh = 1 - tanh^2; this node *is* tanh(x), so reuse
+                    // it instead of appending a duplicate -- the vjp stays
+                    // differentiable and shares the forward work
                     let x = node.inputs[0];
-                    let y = self.tanh(x);
+                    let y = id;
                     let y2 = self.mul(y, y);
                     let ones = self.constant(Tensor::full(&node.shape, 1.0));
                     let sech2 = self.sub(ones, y2);
@@ -298,14 +299,28 @@ impl Graph {
                 }
             }
         }
-        wrt.iter()
-            .map(|&w| {
-                adjoint.get(&w).copied().unwrap_or_else(|| {
+        // unused leaves get a zero constant, shared per shape so M unused
+        // leaves of one shape cost one node, not M
+        let mut zero_by_shape: HashMap<Vec<usize>, NodeId> = HashMap::new();
+        let mut grads = Vec::with_capacity(wrt.len());
+        for &w in wrt {
+            let gid = match adjoint.get(&w) {
+                Some(&g) => g,
+                None => {
                     let shape = self.shape(w).to_vec();
-                    self.constant(Tensor::zeros(&shape))
-                })
-            })
-            .collect()
+                    match zero_by_shape.get(&shape) {
+                        Some(&z) => z,
+                        None => {
+                            let z = self.constant(Tensor::zeros(&shape));
+                            zero_by_shape.insert(shape, z);
+                            z
+                        }
+                    }
+                }
+            };
+            grads.push(gid);
+        }
+        grads
     }
 
     fn accumulate(&mut self, adjoint: &mut HashMap<NodeId, NodeId>, node: NodeId, g: NodeId) {
@@ -455,5 +470,35 @@ mod tests {
         let before = g.len();
         g.grad(f, &[x]);
         assert!(g.len() > before);
+        // the Tanh vjp reuses the forward tanh node instead of rebuilding
+        // it, so the whole tape holds exactly one Tanh ...
+        let tanhs = g.nodes.iter().filter(|n| matches!(n.op, Op::Tanh)).count();
+        assert_eq!(tanhs, 1);
+        // ... and the adjoint sweep appends exactly 6 nodes (seed 1.0,
+        // broadcast, y*y, ones, 1-y^2, g*sech2) -- one fewer than before
+        // the reuse fix
+        assert_eq!(g.len() - before, 6);
+    }
+
+    #[test]
+    fn unused_leaves_share_one_zero_constant_per_shape() {
+        let mut g = Graph::new();
+        let x = g.input(&[2]);
+        let unused: Vec<NodeId> = (0..5).map(|_| g.input(&[3])).collect();
+        let f = g.sum_all(x);
+        let before = g.len();
+        let mut wrt = vec![x];
+        wrt.extend(&unused);
+        let grads = g.grad(f, &wrt);
+        // all 5 unused [3]-leaves map to the same zero constant
+        assert!(grads[1..].windows(2).all(|w| w[0] == w[1]));
+        // appended: seed 1.0, broadcast for x, one shared zero const
+        assert_eq!(g.len() - before, 3);
+        let mut inputs = HashMap::new();
+        inputs.insert(x, Tensor::vec1(vec![1.0, 1.0]));
+        for &u in &unused {
+            inputs.insert(u, Tensor::vec1(vec![7.0, 7.0, 7.0]));
+        }
+        assert_eq!(g.eval(grads[1], &inputs).data(), &[0.0, 0.0, 0.0]);
     }
 }

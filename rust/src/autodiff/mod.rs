@@ -12,9 +12,23 @@
 //! property tests pin the equivalences of eqs. (7), (10) and (11) and the
 //! "ZCS graph is M-invariant" claim natively (see `rust/benches/zcs_native.rs`
 //! for the quantitative sweep).
+//!
+//! On top of the tape sits a compilation layer: [`program::Program`]
+//! lowers a graph + requested outputs through DCE / constant folding /
+//! CSE / algebraic simplification ([`passes`]) into a linear instruction
+//! list over a liveness-packed buffer arena, executed clone-free by
+//! [`exec::Executor`] with the in-place kernels of
+//! [`crate::tensor::kernels`].  Programs are compiled once and run many
+//! times -- `rust/benches/hot_path.rs` measures the interpreted-vs-compiled
+//! gap and `rust/tests/zcs_native_props.rs` proves bit-equality.
 
+pub mod exec;
 pub mod graph;
+pub mod passes;
+pub mod program;
 pub mod zcs_demo;
 
+pub use exec::Executor;
 pub use graph::{Graph, NodeId, Op};
+pub use program::{Instr, OpCode, Operand, Program, ProgramStats};
 pub use zcs_demo::{DemoNet, Strategy};

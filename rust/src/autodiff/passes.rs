@@ -1,0 +1,373 @@
+//! Compiler passes: one forward value-numbering walk that performs DCE,
+//! constant folding, CSE and algebraic simplification together.
+//!
+//! The walk visits the reachable nodes of a [`Graph`] in construction
+//! order (which is topological), so every node sees its operands already
+//! normalized -- folds cascade and CSE sees canonical operand ids without
+//! any fixpoint iteration.  The result is a [`Dag`]: a compact list of
+//! surviving operations plus interned inputs/constants, which
+//! [`super::program`] lowers to an instruction list with buffer liveness.
+//!
+//! Only *bit-preserving* rewrites are applied: compiled execution must
+//! reproduce the interpreted [`Graph::eval`] values exactly (the
+//! differential property tests in `rust/tests/zcs_native_props.rs` hold
+//! this to `==`, not a tolerance).  That rules out e.g. reassociation or
+//! `Scale(c) . Scale(d)` -> `Scale(c*d)`, and keeps `x + 0`, `x - 0`,
+//! `x * 1`, `Scale(1)`, `ScaleBy(const c)` -> `Scale(c)`, and
+//! `(A^T)^T` -> `A`, all of which are exact in IEEE-754 (`x * 1.0` and
+//! `x + 0.0` preserve every finite value; a `-0.0` result differs only in
+//! zero sign, which `==` treats as equal).
+
+use super::graph::{Graph, NodeId, Op};
+use super::program::OpCode;
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+
+/// A normalized value: a per-run input, an interned constant, or an
+/// operation node in [`Dag::nodes`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Val {
+    In(usize),
+    Const(usize),
+    Node(usize),
+}
+
+/// One surviving operation.
+#[derive(Clone, Debug)]
+pub struct DagNode {
+    pub op: OpCode,
+    pub args: Vec<Val>,
+    pub shape: Vec<usize>,
+}
+
+/// Output of the pass pipeline.
+pub struct Dag {
+    /// original graph ids of the inputs, in feed order
+    pub inputs: Vec<NodeId>,
+    pub input_shapes: Vec<Vec<usize>>,
+    /// deduplicated constants
+    pub consts: Vec<Tensor>,
+    /// surviving operations, topologically ordered
+    pub nodes: Vec<DagNode>,
+    /// one entry per requested graph output
+    pub outputs: Vec<Val>,
+    pub graph_nodes: usize,
+    pub live_nodes: usize,
+    pub folded: usize,
+    pub cse_hits: usize,
+    pub simplified: usize,
+}
+
+/// Hash-cons key for constants: shape + exact bit pattern.
+#[derive(PartialEq, Eq, Hash)]
+struct ConstKey(Vec<usize>, Vec<u64>);
+
+fn const_key(t: &Tensor) -> ConstKey {
+    ConstKey(t.shape().to_vec(), t.data().iter().map(|x| x.to_bits()).collect())
+}
+
+/// Hash-cons key for operations: opcode tag + payload bits + operands +
+/// result shape (`Broadcast` of the same scalar to different shapes must
+/// not collide).
+#[derive(PartialEq, Eq, Hash)]
+struct OpKey(u8, u64, Vec<Val>, Vec<usize>);
+
+fn op_key(op: &OpCode, args: &[Val], shape: &[usize]) -> OpKey {
+    let (tag, payload) = match op {
+        OpCode::Add => (0u8, 0u64),
+        OpCode::Sub => (1, 0),
+        OpCode::Mul => (2, 0),
+        OpCode::ScaleBy => (3, 0),
+        OpCode::Scale(c) => (4, c.to_bits()),
+        OpCode::Tanh => (5, 0),
+        OpCode::Broadcast => (6, 0),
+        OpCode::SumAll => (7, 0),
+        OpCode::MatMulNT => (8, 0),
+        OpCode::MatMul => (9, 0),
+        OpCode::Transpose => (10, 0),
+    };
+    OpKey(tag, payload, args.to_vec(), shape.to_vec())
+}
+
+struct Builder {
+    inputs: Vec<NodeId>,
+    input_shapes: Vec<Vec<usize>>,
+    consts: Vec<Tensor>,
+    const_ids: HashMap<ConstKey, usize>,
+    nodes: Vec<DagNode>,
+    cse: HashMap<OpKey, Val>,
+    folded: usize,
+    cse_hits: usize,
+    simplified: usize,
+}
+
+impl Builder {
+    fn new() -> Self {
+        Self {
+            inputs: Vec::new(),
+            input_shapes: Vec::new(),
+            consts: Vec::new(),
+            const_ids: HashMap::new(),
+            nodes: Vec::new(),
+            cse: HashMap::new(),
+            folded: 0,
+            cse_hits: 0,
+            simplified: 0,
+        }
+    }
+
+    fn intern_const(&mut self, t: Tensor) -> Val {
+        let key = const_key(&t);
+        if let Some(&i) = self.const_ids.get(&key) {
+            return Val::Const(i);
+        }
+        let i = self.consts.len();
+        self.consts.push(t);
+        self.const_ids.insert(key, i);
+        Val::Const(i)
+    }
+
+    fn const_of(&self, v: Val) -> Option<&Tensor> {
+        match v {
+            Val::Const(i) => Some(&self.consts[i]),
+            _ => None,
+        }
+    }
+
+    fn is_const_fill(&self, v: Val, fill: f64) -> bool {
+        self.const_of(v)
+            .map(|t| !t.is_empty() && t.data().iter().all(|&x| x == fill))
+            .unwrap_or(false)
+    }
+
+    /// Emit `op(args)`, applying simplification, folding and CSE.
+    fn emit(&mut self, op: OpCode, args: Vec<Val>, shape: &[usize]) -> Val {
+        // -- algebraic identities (bit-preserving only)
+        match op {
+            OpCode::Add => {
+                if self.is_const_fill(args[1], 0.0) {
+                    self.simplified += 1;
+                    return args[0];
+                }
+                if self.is_const_fill(args[0], 0.0) {
+                    self.simplified += 1;
+                    return args[1];
+                }
+            }
+            OpCode::Sub => {
+                if self.is_const_fill(args[1], 0.0) {
+                    self.simplified += 1;
+                    return args[0];
+                }
+            }
+            OpCode::Mul => {
+                if self.is_const_fill(args[1], 1.0) {
+                    self.simplified += 1;
+                    return args[0];
+                }
+                if self.is_const_fill(args[0], 1.0) {
+                    self.simplified += 1;
+                    return args[1];
+                }
+            }
+            OpCode::Scale(c) => {
+                if c == 1.0 {
+                    self.simplified += 1;
+                    return args[0];
+                }
+            }
+            OpCode::ScaleBy => {
+                // constant scalar factor: become a Scale (same multiply)
+                if let Some(t) = self.const_of(args[0]) {
+                    let c = t.data()[0];
+                    self.simplified += 1;
+                    return self.emit(OpCode::Scale(c), vec![args[1]], shape);
+                }
+            }
+            OpCode::Transpose => {
+                if let Val::Node(n) = args[0] {
+                    if matches!(self.nodes[n].op, OpCode::Transpose) {
+                        self.simplified += 1;
+                        return self.nodes[n].args[0];
+                    }
+                }
+            }
+            _ => {}
+        }
+
+        // -- constant folding: every operand known at compile time
+        if args.iter().all(|&a| matches!(a, Val::Const(_))) {
+            let tensors: Vec<&Tensor> =
+                args.iter().map(|&a| self.const_of(a).unwrap()).collect();
+            let out = fold(&op, &tensors, shape);
+            self.folded += 1;
+            return self.intern_const(out);
+        }
+
+        // -- CSE
+        let key = op_key(&op, &args, shape);
+        if let Some(&v) = self.cse.get(&key) {
+            self.cse_hits += 1;
+            return v;
+        }
+        let v = Val::Node(self.nodes.len());
+        self.nodes.push(DagNode { op, args, shape: shape.to_vec() });
+        self.cse.insert(key, v);
+        v
+    }
+}
+
+/// Evaluate `op` on constant operands -- the same operation sequence as
+/// [`Graph::eval`], so folding is bit-exact.
+fn fold(op: &OpCode, args: &[&Tensor], shape: &[usize]) -> Tensor {
+    match op {
+        OpCode::Add => args[0] + args[1],
+        OpCode::Sub => args[0] - args[1],
+        OpCode::Mul => args[0] * args[1],
+        OpCode::ScaleBy => args[1].clone().scale(args[0].data()[0]),
+        OpCode::Scale(c) => args[0].clone().scale(*c),
+        OpCode::Tanh => args[0].map(f64::tanh),
+        OpCode::Broadcast => Tensor::full(shape, args[0].data()[0]),
+        OpCode::SumAll => Tensor::new(&[], vec![args[0].data().iter().sum()]),
+        OpCode::MatMulNT => args[0].matmul(&args[1].transpose()),
+        OpCode::MatMul => args[0].matmul(args[1]),
+        OpCode::Transpose => args[0].transpose(),
+    }
+}
+
+/// Translate a graph [`Op`] into an [`OpCode`] (leaves handled upstream).
+fn opcode_of(op: &Op) -> OpCode {
+    match op {
+        Op::Add => OpCode::Add,
+        Op::Sub => OpCode::Sub,
+        Op::Mul => OpCode::Mul,
+        Op::ScaleBy => OpCode::ScaleBy,
+        Op::Scale(c) => OpCode::Scale(*c),
+        Op::Tanh => OpCode::Tanh,
+        Op::Broadcast(_) => OpCode::Broadcast,
+        Op::SumAll => OpCode::SumAll,
+        Op::MatMulNT => OpCode::MatMulNT,
+        Op::MatMul => OpCode::MatMul,
+        Op::Transpose => OpCode::Transpose,
+        Op::Input | Op::Const(_) => unreachable!("leaf ops are interned, not emitted"),
+    }
+}
+
+/// Run the pass pipeline on `graph` restricted to `outputs`.
+pub fn build_dag(graph: &Graph, outputs: &[NodeId]) -> Dag {
+    // -- DCE seed: reachability from the requested outputs
+    let mut reach = vec![false; graph.len()];
+    let mut stack: Vec<NodeId> = outputs.to_vec();
+    while let Some(id) = stack.pop() {
+        if reach[id] {
+            continue;
+        }
+        reach[id] = true;
+        stack.extend(graph.nodes[id].inputs.iter().copied());
+    }
+    let live_nodes = reach.iter().filter(|&&b| b).count();
+
+    // -- forward normalization walk
+    let mut b = Builder::new();
+    let mut val_of: Vec<Option<Val>> = vec![None; graph.len()];
+    for (id, node) in graph.nodes.iter().enumerate() {
+        if !reach[id] {
+            continue;
+        }
+        let val = match &node.op {
+            Op::Input => {
+                let idx = b.inputs.len();
+                b.inputs.push(id);
+                b.input_shapes.push(node.shape.clone());
+                Val::In(idx)
+            }
+            Op::Const(t) => b.intern_const(t.clone()),
+            op => {
+                let args: Vec<Val> = node
+                    .inputs
+                    .iter()
+                    .map(|&i| val_of[i].expect("graph ids are topologically ordered"))
+                    .collect();
+                b.emit(opcode_of(op), args, &node.shape)
+            }
+        };
+        val_of[id] = Some(val);
+    }
+
+    Dag {
+        inputs: b.inputs,
+        input_shapes: b.input_shapes,
+        consts: b.consts,
+        nodes: b.nodes,
+        outputs: outputs
+            .iter()
+            .map(|&o| val_of[o].expect("requested output is reachable"))
+            .collect(),
+        graph_nodes: graph.len(),
+        live_nodes,
+        folded: b.folded,
+        cse_hits: b.cse_hits,
+        simplified: b.simplified,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants_are_deduplicated() {
+        let mut g = Graph::new();
+        let x = g.input(&[2]);
+        let c1 = g.constant(Tensor::full(&[2], 1.5));
+        let c2 = g.constant(Tensor::full(&[2], 1.5)); // same bits
+        let a = g.mul(x, c1);
+        let bb = g.mul(x, c2);
+        let s = g.add(a, bb);
+        let dag = build_dag(&g, &[s]);
+        assert_eq!(dag.consts.len(), 1);
+        // mul(x, c) appears once thanks to const-dedup + CSE
+        assert_eq!(dag.cse_hits, 1);
+    }
+
+    #[test]
+    fn scale_by_constant_becomes_scale() {
+        let mut g = Graph::new();
+        let x = g.input(&[3]);
+        let c = g.constant(Tensor::new(&[], vec![2.5]));
+        let y = g.scale_by(c, x);
+        let dag = build_dag(&g, &[y]);
+        assert_eq!(dag.nodes.len(), 1);
+        assert!(matches!(dag.nodes[0].op, OpCode::Scale(c) if c == 2.5));
+    }
+
+    #[test]
+    fn folding_cascades_through_const_subtrees() {
+        let mut g = Graph::new();
+        let a = g.constant(Tensor::vec1(vec![1.0, 2.0]));
+        let b2 = g.constant(Tensor::vec1(vec![3.0, 4.0]));
+        let s = g.add(a, b2);
+        let t = g.tanh(s); // still fully constant
+        let x = g.input(&[2]);
+        let out = g.add(x, t);
+        let dag = build_dag(&g, &[out]);
+        assert_eq!(dag.folded, 2);
+        assert_eq!(dag.nodes.len(), 1); // only add(x, const)
+        let want = (&Tensor::vec1(vec![1.0, 2.0]) + &Tensor::vec1(vec![3.0, 4.0])).map(f64::tanh);
+        assert!(dag.consts.iter().any(|c| *c == want));
+    }
+
+    #[test]
+    fn unreachable_side_graph_is_ignored() {
+        let mut g = Graph::new();
+        let x = g.input(&[4]);
+        let out = g.sum_all(x);
+        // dead weight: a whole unreachable chain
+        let d = g.tanh(x);
+        let d2 = g.mul(d, d);
+        let _d3 = g.sum_all(d2);
+        let dag = build_dag(&g, &[out]);
+        assert_eq!(dag.live_nodes, 2);
+        assert_eq!(dag.nodes.len(), 1);
+    }
+}

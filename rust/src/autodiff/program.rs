@@ -1,0 +1,471 @@
+//! Compiled programs: a `Graph` lowered to a linear instruction list over a
+//! dense buffer arena.
+//!
+//! # Why a compiler
+//!
+//! The paper's argument is about the *size of the reverse-mode graph*: under
+//! FuncLoop (eq. 4) the tape replays M root-to-leaf adjoint chains, under
+//! DataVect (eq. 5) the leaves are tiled M-fold, and under ZCS (eq. 10) one
+//! scalar leaf `z` plus the dummy-summation leaf `a` keep the whole
+//! higher-order chain O(1) in M.  Building the small graph is half the win;
+//! the other half is *executing* it well.  The interpreted
+//! [`Graph::eval`](super::graph::Graph::eval) walks the tape with a
+//! `HashMap` memo and clones a tensor at every node, and
+//! [`Graph::grad`](super::graph::Graph::grad) emits duplicated
+//! subexpressions (each z-chain re-derives shared forward pieces), so the
+//! ZCS graphs -- exactly the ones this repo cares about -- pay the same
+//! work many times per training step.
+//!
+//! [`Program::compile`] lowers a graph plus its requested outputs through a
+//! pass pipeline into a form that is built **once** and executed **many**
+//! times:
+//!
+//! 1. **Dead-code elimination** -- only nodes reachable from the requested
+//!    outputs survive.  FuncLoop builds (eq. 4) drop the per-function
+//!    forward rows no derivative ever reads.
+//! 2. **Constant folding** -- subtrees with only `Const` leaves are
+//!    evaluated at compile time (e.g. the DataVect tiling matrices of
+//!    eq. 5 applied to constant operands, `Broadcast` of a constant `z`
+//!    seed).
+//! 3. **Common-subexpression elimination** -- hash-consing over
+//!    (op, operands, shape); this deduplicates the repeated `tanh`
+//!    forward/adjoint pairs and `Broadcast`/ones constants that nested
+//!    [`Graph::grad`] sweeps emit along the second-order z-chain of
+//!    eq. 10.
+//! 4. **Algebraic simplification** -- `x + 0`, `x - 0`, `x * 1`,
+//!    `Scale(1)`, `ScaleBy(const)` -> `Scale`, `(A^T)^T` -> `A`; only
+//!    rewrites whose results are bit-identical to the interpreted path are
+//!    applied.
+//! 5. **Buffer liveness** -- each instruction output is assigned an arena
+//!    slot; slots are recycled the instant their value dies, so execution
+//!    (see [`super::exec::Executor`]) is clone-free and reports an exact
+//!    `peak_live_bytes` -- the native-engine analogue of the paper's
+//!    Table-1 "Graph" memory column, computed by the same def-to-last-use
+//!    convention as [`crate::hlostats`].
+//!
+//! The compiled [`Program`] is strategy-agnostic: `zcs_demo` compiles all
+//! three of FuncLoop / DataVect / ZCS, and the differential property tests
+//! assert compiled output == interpreted output for first- and second-order
+//! derivatives under each.
+
+use super::graph::{Graph, NodeId, Op};
+use super::{exec::Executor, passes};
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+
+/// Arena slot index.
+pub type BufId = usize;
+
+/// Where an instruction operand (or program output) lives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Operand {
+    /// arena slot written by an earlier instruction
+    Buf(BufId),
+    /// index into [`Program::inputs`] (fed per run)
+    In(usize),
+    /// index into [`Program::consts`] (embedded at compile time)
+    Const(usize),
+}
+
+/// Executable opcode -- [`Op`] minus the leaf variants, payloads reduced to
+/// what the kernels need (a `Broadcast` target shape lives in
+/// [`Instr::shape`]).
+#[derive(Clone, Debug, PartialEq)]
+pub enum OpCode {
+    Add,
+    Sub,
+    Mul,
+    ScaleBy,
+    Scale(f64),
+    Tanh,
+    Broadcast,
+    SumAll,
+    MatMulNT,
+    MatMul,
+    Transpose,
+}
+
+/// One instruction: `arena[out] = op(args...)`.
+#[derive(Clone, Debug)]
+pub struct Instr {
+    pub op: OpCode,
+    pub args: Vec<Operand>,
+    pub out: BufId,
+    pub shape: Vec<usize>,
+}
+
+/// Compile-time facts about a program (the native-engine analogue of
+/// [`crate::hlostats::ModuleStats`]).
+#[derive(Clone, Debug, Default)]
+pub struct ProgramStats {
+    /// nodes in the source graph (the tape the interpreter walks)
+    pub graph_nodes: usize,
+    /// nodes reachable from the requested outputs (post-DCE)
+    pub live_nodes: usize,
+    /// instructions in the final program
+    pub instructions: usize,
+    /// nodes evaluated away by constant folding
+    pub folded: usize,
+    /// nodes deduplicated by CSE
+    pub cse_hits: usize,
+    /// algebraic identity rewrites applied
+    pub simplified: usize,
+    /// arena slots after liveness-driven reuse (<= instructions)
+    pub n_slots: usize,
+    /// peak simultaneously-live intermediate bytes during execution
+    /// (def-to-last-use, f64 elements; inputs and constants excluded)
+    pub peak_live_bytes: u64,
+    /// bytes of embedded constants
+    pub const_bytes: u64,
+}
+
+impl ProgramStats {
+    pub fn peak_live_mib(&self) -> f64 {
+        self.peak_live_bytes as f64 / (1024.0 * 1024.0)
+    }
+}
+
+/// A compiled, immutable program: build once, execute many times.
+#[derive(Clone, Debug)]
+pub struct Program {
+    pub instrs: Vec<Instr>,
+    /// number of arena slots execution needs
+    pub n_slots: usize,
+    /// graph `Input` ids this program reads, in feed order
+    pub inputs: Vec<NodeId>,
+    pub input_shapes: Vec<Vec<usize>>,
+    /// embedded constants (deduplicated)
+    pub consts: Vec<Tensor>,
+    /// requested outputs, aligned with the `outputs` argument of
+    /// [`Program::compile`]
+    pub outputs: Vec<Operand>,
+    pub output_shapes: Vec<Vec<usize>>,
+    pub stats: ProgramStats,
+}
+
+impl Program {
+    /// Lower `graph` restricted to `outputs` through the full pass
+    /// pipeline (DCE, constant folding, CSE, algebraic simplification,
+    /// buffer liveness).
+    pub fn compile(graph: &Graph, outputs: &[NodeId]) -> Program {
+        let dag = passes::build_dag(graph, outputs);
+        lower(dag)
+    }
+
+    /// One-shot convenience: compile-once/run-many callers should hold an
+    /// [`Executor`] instead (see [`Executor::run`]).
+    pub fn eval_once(&self, inputs: &HashMap<NodeId, Tensor>) -> Vec<Tensor> {
+        Executor::new().run(self, inputs)
+    }
+}
+
+/// Lower a normalized DAG to an instruction list with slot reuse.
+fn lower(dag: passes::Dag) -> Program {
+    // -- second DCE: simplification/CSE may have orphaned interior nodes
+    let mut used = vec![false; dag.nodes.len()];
+    let mut stack: Vec<usize> = dag
+        .outputs
+        .iter()
+        .filter_map(|v| match v {
+            passes::Val::Node(n) => Some(*n),
+            _ => None,
+        })
+        .collect();
+    while let Some(n) = stack.pop() {
+        if used[n] {
+            continue;
+        }
+        used[n] = true;
+        for arg in &dag.nodes[n].args {
+            if let passes::Val::Node(m) = arg {
+                stack.push(*m);
+            }
+        }
+    }
+
+    // -- renumber live nodes in topo (construction) order
+    let mut instr_index: Vec<Option<usize>> = vec![None; dag.nodes.len()];
+    let mut order: Vec<usize> = Vec::new();
+    for (n, live) in used.iter().enumerate() {
+        if *live {
+            instr_index[n] = Some(order.len());
+            order.push(n);
+        }
+    }
+
+    // -- keep only referenced constants
+    let mut const_index: Vec<Option<usize>> = vec![None; dag.consts.len()];
+    let mut consts: Vec<Tensor> = Vec::new();
+    let mut intern_const = |c: usize, consts: &mut Vec<Tensor>, all: &[Tensor]| -> usize {
+        // (closure over const_index)
+        if let Some(i) = const_index[c] {
+            return i;
+        }
+        let i = consts.len();
+        consts.push(all[c].clone());
+        const_index[c] = Some(i);
+        i
+    };
+
+    // -- last use (instruction index) of every live node's value
+    let mut last_use: Vec<usize> = vec![0; order.len()];
+    for (i, &n) in order.iter().enumerate() {
+        for arg in &dag.nodes[n].args {
+            if let passes::Val::Node(m) = arg {
+                last_use[instr_index[*m].expect("arg of live node is live")] = i;
+            }
+        }
+    }
+    for v in &dag.outputs {
+        if let passes::Val::Node(n) = v {
+            last_use[instr_index[*n].expect("output is live")] = usize::MAX;
+        }
+    }
+
+    // -- slot assignment with a free list + exact peak-live accounting.
+    // Allocate the output slot *before* freeing dying operands, so an
+    // instruction's destination never aliases one of its sources (the
+    // kernels' aliasing contract).
+    let mut free: Vec<BufId> = Vec::new();
+    let mut n_slots = 0usize;
+    let mut slot_of: Vec<BufId> = vec![0; order.len()];
+    let mut live_bytes: u64 = 0;
+    let mut peak_live_bytes: u64 = 0;
+    let bytes_of = |shape: &[usize]| -> u64 { shape.iter().product::<usize>() as u64 * 8 };
+
+    let mut instrs: Vec<Instr> = Vec::with_capacity(order.len());
+    for (i, &n) in order.iter().enumerate() {
+        let node = &dag.nodes[n];
+        let out = free.pop().unwrap_or_else(|| {
+            n_slots += 1;
+            n_slots - 1
+        });
+        slot_of[i] = out;
+        live_bytes += bytes_of(&node.shape);
+        peak_live_bytes = peak_live_bytes.max(live_bytes);
+
+        let args: Vec<Operand> = node
+            .args
+            .iter()
+            .map(|v| match v {
+                passes::Val::Node(m) => Operand::Buf(slot_of[instr_index[*m].unwrap()]),
+                passes::Val::In(k) => Operand::In(*k),
+                passes::Val::Const(c) => Operand::Const(intern_const(*c, &mut consts, &dag.consts)),
+            })
+            .collect();
+        instrs.push(Instr { op: node.op.clone(), args, out, shape: node.shape.clone() });
+
+        // free operands whose last use is this instruction (dedup: an
+        // operand may appear twice, e.g. mul(y, y))
+        let mut dying: Vec<usize> = node
+            .args
+            .iter()
+            .filter_map(|v| match v {
+                passes::Val::Node(m) => {
+                    let j = instr_index[*m].unwrap();
+                    (last_use[j] == i).then_some(j)
+                }
+                _ => None,
+            })
+            .collect();
+        dying.sort_unstable();
+        dying.dedup();
+        for j in dying {
+            free.push(slot_of[j]);
+            live_bytes -= bytes_of(&dag.nodes[order[j]].shape);
+        }
+    }
+
+    // -- program outputs
+    let outputs: Vec<Operand> = dag
+        .outputs
+        .iter()
+        .map(|v| match v {
+            passes::Val::Node(n) => Operand::Buf(slot_of[instr_index[*n].unwrap()]),
+            passes::Val::In(k) => Operand::In(*k),
+            passes::Val::Const(c) => Operand::Const(intern_const(*c, &mut consts, &dag.consts)),
+        })
+        .collect();
+    let output_shapes: Vec<Vec<usize>> = dag
+        .outputs
+        .iter()
+        .map(|v| match v {
+            passes::Val::Node(n) => dag.nodes[*n].shape.clone(),
+            passes::Val::In(k) => dag.input_shapes[*k].clone(),
+            passes::Val::Const(c) => dag.consts[*c].shape().to_vec(),
+        })
+        .collect();
+
+    let const_bytes: u64 = consts.iter().map(|t| t.len() as u64 * 8).sum();
+    let stats = ProgramStats {
+        graph_nodes: dag.graph_nodes,
+        live_nodes: dag.live_nodes,
+        instructions: instrs.len(),
+        folded: dag.folded,
+        cse_hits: dag.cse_hits,
+        simplified: dag.simplified,
+        n_slots,
+        peak_live_bytes,
+        const_bytes,
+    };
+    Program {
+        instrs,
+        n_slots,
+        inputs: dag.inputs,
+        input_shapes: dag.input_shapes,
+        consts,
+        outputs,
+        output_shapes,
+        stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compile_simple_expression_and_run() {
+        let mut g = Graph::new();
+        let x = g.input(&[2]);
+        let y = g.input(&[2]);
+        let s = g.add(x, y);
+        let p = g.mul(s, s);
+        let out = g.sum_all(p);
+        let prog = Program::compile(&g, &[out]);
+        assert_eq!(prog.instrs.len(), 3);
+        let mut inputs = HashMap::new();
+        inputs.insert(x, Tensor::vec1(vec![1.0, 2.0]));
+        inputs.insert(y, Tensor::vec1(vec![3.0, 4.0]));
+        let got = prog.eval_once(&inputs);
+        assert_eq!(got[0].data(), &[16.0 + 36.0]);
+        assert_eq!(got[0], g.eval(out, &inputs));
+    }
+
+    #[test]
+    fn dce_drops_unreachable_nodes() {
+        let mut g = Graph::new();
+        let x = g.input(&[2]);
+        let dead = g.tanh(x); // never requested
+        let _dead2 = g.mul(dead, dead);
+        let live = g.scale(x, 2.0);
+        let prog = Program::compile(&g, &[live]);
+        assert_eq!(prog.instrs.len(), 1);
+        assert!(matches!(prog.instrs[0].op, OpCode::Scale(_)));
+        assert_eq!(prog.stats.live_nodes, 2); // x + scale
+    }
+
+    #[test]
+    fn cse_merges_identical_subtrees() {
+        let mut g = Graph::new();
+        let x = g.input(&[3]);
+        let t1 = g.tanh(x);
+        let t2 = g.tanh(x); // identical subtree
+        let s = g.add(t1, t2);
+        let out = g.sum_all(s);
+        let prog = Program::compile(&g, &[out]);
+        // tanh appears once; add(t, t) and sum remain
+        let tanhs = prog.instrs.iter().filter(|i| matches!(i.op, OpCode::Tanh)).count();
+        assert_eq!(tanhs, 1);
+        assert_eq!(prog.stats.cse_hits, 1);
+        let mut inputs = HashMap::new();
+        inputs.insert(x, Tensor::vec1(vec![0.1, -0.2, 0.3]));
+        assert_eq!(prog.eval_once(&inputs)[0], g.eval(out, &inputs));
+    }
+
+    #[test]
+    fn constant_folding_precomputes_const_subtrees() {
+        let mut g = Graph::new();
+        let a = g.constant(Tensor::vec1(vec![1.0, 2.0]));
+        let b = g.constant(Tensor::vec1(vec![3.0, 4.0]));
+        let s = g.add(a, b); // fully constant
+        let x = g.input(&[2]);
+        let out = g.mul(s, x);
+        let prog = Program::compile(&g, &[out]);
+        assert_eq!(prog.instrs.len(), 1); // only the mul survives
+        assert!(prog.stats.folded >= 1);
+        let mut inputs = HashMap::new();
+        inputs.insert(x, Tensor::vec1(vec![10.0, 10.0]));
+        assert_eq!(prog.eval_once(&inputs)[0].data(), &[40.0, 60.0]);
+    }
+
+    #[test]
+    fn zero_and_identity_simplification() {
+        let mut g = Graph::new();
+        let x = g.input(&[2]);
+        let zero = g.constant(Tensor::zeros(&[2]));
+        let one = g.constant(Tensor::full(&[2], 1.0));
+        let a = g.add(x, zero); // = x
+        let b = g.mul(a, one); // = x
+        let c = g.sub(b, zero); // = x
+        let d = g.scale(c, 1.0); // = x
+        let out = g.sum_all(d);
+        let prog = Program::compile(&g, &[out]);
+        assert_eq!(prog.instrs.len(), 1); // just the SumAll
+        assert!(prog.stats.simplified >= 4);
+        let mut inputs = HashMap::new();
+        inputs.insert(x, Tensor::vec1(vec![2.0, 3.0]));
+        assert_eq!(prog.eval_once(&inputs)[0].data(), &[5.0]);
+    }
+
+    #[test]
+    fn double_transpose_cancels() {
+        let mut g = Graph::new();
+        let x = g.input(&[2, 3]);
+        let t1 = g.transpose_of(x);
+        let t2 = g.transpose_of(t1);
+        let out = g.sum_all(t2);
+        let prog = Program::compile(&g, &[out]);
+        assert_eq!(prog.instrs.len(), 1); // SumAll(x) directly
+        let mut inputs = HashMap::new();
+        inputs.insert(x, Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]));
+        assert_eq!(prog.eval_once(&inputs)[0].data(), &[21.0]);
+    }
+
+    #[test]
+    fn slots_are_reused_along_a_chain() {
+        // x -> tanh -> tanh -> tanh -> sum: at most 2 live at a time
+        let mut g = Graph::new();
+        let x = g.input(&[4]);
+        let mut cur = x;
+        for _ in 0..5 {
+            cur = g.tanh(cur);
+        }
+        let out = g.sum_all(cur);
+        let prog = Program::compile(&g, &[out]);
+        assert_eq!(prog.instrs.len(), 6);
+        assert!(prog.n_slots <= 2, "chain should reuse slots, got {}", prog.n_slots);
+        // peak: two [4] tensors live across one step
+        assert_eq!(prog.stats.peak_live_bytes, 2 * 4 * 8);
+    }
+
+    #[test]
+    fn output_can_be_an_input_or_constant() {
+        let mut g = Graph::new();
+        let x = g.input(&[2]);
+        let c = g.constant(Tensor::vec1(vec![7.0, 8.0]));
+        let prog = Program::compile(&g, &[x, c]);
+        assert!(prog.instrs.is_empty());
+        let mut inputs = HashMap::new();
+        inputs.insert(x, Tensor::vec1(vec![1.0, 2.0]));
+        let got = prog.eval_once(&inputs);
+        assert_eq!(got[0].data(), &[1.0, 2.0]);
+        assert_eq!(got[1].data(), &[7.0, 8.0]);
+    }
+
+    #[test]
+    fn grad_program_matches_interpreter() {
+        let mut g = Graph::new();
+        let x = g.input(&[3]);
+        let p = g.mul(x, x);
+        let out = g.sum_all(p);
+        let gx = g.grad(out, &[x])[0];
+        let prog = Program::compile(&g, &[out, gx]);
+        let mut inputs = HashMap::new();
+        inputs.insert(x, Tensor::vec1(vec![1.0, -2.0, 0.5]));
+        let got = prog.eval_once(&inputs);
+        assert_eq!(got[0], g.eval(out, &inputs));
+        assert_eq!(got[1], g.eval(gx, &inputs));
+        assert_eq!(got[1].data(), &[2.0, -4.0, 1.0]);
+    }
+}

@@ -13,7 +13,9 @@
 //! `rust/benches/zcs_native.rs` prints the quantitative sweep and
 //! `rust/tests/zcs_native_props.rs` property-tests the equivalences.
 
+use super::exec::Executor;
 use super::graph::{Graph, NodeId};
+use super::program::Program;
 use crate::rng::Pcg64;
 use crate::tensor::Tensor;
 use std::collections::HashMap;
@@ -24,6 +26,26 @@ pub enum Strategy {
     FuncLoop,
     DataVect,
     Zcs,
+}
+
+impl Strategy {
+    /// Parse the CLI / manifest spelling.
+    pub fn from_name(name: &str) -> Option<Strategy> {
+        match name {
+            "zcs" => Some(Strategy::Zcs),
+            "funcloop" => Some(Strategy::FuncLoop),
+            "datavect" => Some(Strategy::DataVect),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Zcs => "zcs",
+            Strategy::FuncLoop => "funcloop",
+            Strategy::DataVect => "datavect",
+        }
+    }
 }
 
 /// A miniature DeepONet with fixed weights (1-D coordinates).
@@ -90,7 +112,43 @@ pub fn build_first_derivative(
     n: usize,
     q: usize,
 ) -> BuiltDerivative {
+    build_derivative(net, strategy, m, n, q, 1)
+}
+
+/// Build the pointwise second derivative `d^2 u_ij / dx_j^2`.
+pub fn build_second_derivative(
+    net: &DemoNet,
+    strategy: Strategy,
+    m: usize,
+    n: usize,
+    q: usize,
+) -> BuiltDerivative {
+    build_derivative(net, strategy, m, n, q, 2)
+}
+
+/// Pointwise derivative of order `order` (>= 1): each output entry is
+/// `d^order u_ij / dx_j^order`.  Higher orders nest [`Graph::grad`]; since
+/// `u_ij` depends on `x_j` only, re-rooting via `sum_all` between sweeps
+/// keeps the result pointwise (the cross terms are identically zero).
+pub fn build_derivative(
+    net: &DemoNet,
+    strategy: Strategy,
+    m: usize,
+    n: usize,
+    q: usize,
+    order: usize,
+) -> BuiltDerivative {
+    assert!(order >= 1, "derivative order must be >= 1");
     let mut g = Graph::new();
+    // nested pointwise derivative w.r.t. an (n, 1)-shaped leaf/node
+    fn nest(g: &mut Graph, root: NodeId, wrt: NodeId, order: usize) -> NodeId {
+        let mut d = g.grad(root, &[wrt])[0];
+        for _ in 1..order {
+            let re_root = g.sum_all(d);
+            d = g.grad(re_root, &[wrt])[0];
+        }
+        d
+    }
     match strategy {
         Strategy::Zcs => {
             let p = g.input(&[m, q]);
@@ -106,8 +164,13 @@ pub fn build_first_derivative(
             let a = g.input(&[m, n]);
             let au = g.mul(a, u);
             let omega = g.sum_all(au);
-            // eq. (10): du/dx = d/da (d omega / dz)
-            let dz = g.grad(omega, &[z])[0];
+            // eq. (10): d^k u/dx^k = d/da (d^k omega / dz^k) -- each
+            // z-derivative of the scalar omega is itself scalar, so the
+            // z-chain nests without re-rooting
+            let mut dz = omega;
+            for _ in 0..order {
+                dz = g.grad(dz, &[z])[0];
+            }
             let da = g.grad(dz, &[a])[0]; // (m, n)
             BuiltDerivative {
                 p,
@@ -126,7 +189,7 @@ pub fn build_first_derivative(
             let t = net.trunk(&mut g, x); // shared forward
             let b = net.branch(&mut g, p);
             let u = g.matmul_nt(b, t); // (m, n)
-            // eq. (4): one reverse pass per function i
+            // eq. (4): one reverse pass (per order) per function i
             let mut outputs = Vec::with_capacity(m);
             for i in 0..m {
                 // select row i via a constant one-hot: e_i^T U -> (1, n)
@@ -135,7 +198,7 @@ pub fn build_first_derivative(
                 let ei = g.constant(e);
                 let row = g.matmul(ei, u); // (1, n)
                 let root = g.sum_all(row);
-                let dx = g.grad(root, &[x])[0]; // (n, 1) -- pointwise du_i/dx
+                let dx = nest(&mut g, root, x, order); // (n, 1)
                 outputs.push(dx);
             }
             BuiltDerivative { p, x, extra_inputs: vec![], outputs, graph: g }
@@ -165,7 +228,9 @@ pub fn build_first_derivative(
             let ones = g.constant(Tensor::full(&[k, 1], 1.0));
             let u_rows = g.matmul(bt, ones); // (mn, 1)
             let root = g.sum_all(u_rows);
-            let dxh = g.grad(root, &[xh])[0]; // (mn, 1) pointwise derivative
+            // derivative w.r.t. the tiled coordinates: rows are independent
+            // copies, so this is the pointwise derivative of every (i, j)
+            let dxh = nest(&mut g, root, xh, order); // (mn, 1)
             BuiltDerivative { p, x, extra_inputs: vec![], outputs: vec![dxh], graph: g }
         }
     }
@@ -179,12 +244,7 @@ pub fn eval_derivative(
     m: usize,
     n: usize,
 ) -> Vec<f64> {
-    let mut inputs: HashMap<NodeId, Tensor> = HashMap::new();
-    inputs.insert(built.p, p.clone());
-    inputs.insert(built.x, x.clone());
-    for (id, t) in &built.extra_inputs {
-        inputs.insert(*id, t.clone());
-    }
+    let inputs = built.feed(p, x);
     match built.outputs.len() {
         1 => {
             let out = built.graph.eval(built.outputs[0], &inputs);
@@ -197,6 +257,96 @@ pub fn eval_derivative(
             let mut flat = Vec::with_capacity(m * n);
             for &o in &built.outputs {
                 flat.extend(built.graph.eval(o, &inputs).into_data());
+            }
+            flat
+        }
+    }
+}
+
+impl BuiltDerivative {
+    /// The leaf feed for a (p, x) evaluation, extras included.
+    pub fn feed(&self, p: &Tensor, x: &Tensor) -> HashMap<NodeId, Tensor> {
+        let mut inputs: HashMap<NodeId, Tensor> = HashMap::new();
+        inputs.insert(self.p, p.clone());
+        inputs.insert(self.x, x.clone());
+        for (id, t) in &self.extra_inputs {
+            inputs.insert(*id, t.clone());
+        }
+        inputs
+    }
+
+    /// Lower this derivative to a compiled [`Program`] (DCE + folding +
+    /// CSE + simplification + buffer liveness).  Build once, run many.
+    pub fn compile(&self) -> CompiledDerivative {
+        CompiledDerivative {
+            program: Program::compile(&self.graph, &self.outputs),
+            p: self.p,
+            x: self.x,
+            extra_inputs: self.extra_inputs.clone(),
+            graph_nodes: self.graph.len(),
+        }
+    }
+}
+
+/// A strategy build lowered to a compiled program.
+pub struct CompiledDerivative {
+    pub program: Program,
+    pub p: NodeId,
+    pub x: NodeId,
+    pub extra_inputs: Vec<(NodeId, Tensor)>,
+    /// size of the source tape (what the interpreter walks)
+    pub graph_nodes: usize,
+}
+
+impl CompiledDerivative {
+    /// Borrowed leaf feed for a (p, x) evaluation, extras included -- no
+    /// tensor clones on the run-many path (see [`Executor::run_ref`]).
+    pub fn feed_refs<'a>(&'a self, p: &'a Tensor, x: &'a Tensor) -> HashMap<NodeId, &'a Tensor> {
+        let mut inputs: HashMap<NodeId, &'a Tensor> = HashMap::new();
+        inputs.insert(self.p, p);
+        inputs.insert(self.x, x);
+        for (id, t) in &self.extra_inputs {
+            inputs.insert(*id, t);
+        }
+        inputs
+    }
+}
+
+/// Build + compile in one step (the compile-once entry point call sites
+/// use; the [`BuiltDerivative`] is discarded after lowering).
+pub fn compile_derivative(
+    net: &DemoNet,
+    strategy: Strategy,
+    m: usize,
+    n: usize,
+    q: usize,
+    order: usize,
+) -> CompiledDerivative {
+    build_derivative(net, strategy, m, n, q, order).compile()
+}
+
+/// Evaluate a compiled derivative into a flat (m*n) row-major vector,
+/// reusing `exec`'s arena across calls.
+pub fn eval_derivative_compiled(
+    compiled: &CompiledDerivative,
+    exec: &mut Executor,
+    p: &Tensor,
+    x: &Tensor,
+    m: usize,
+    n: usize,
+) -> Vec<f64> {
+    let inputs = compiled.feed_refs(p, x);
+    let outs = exec.run_ref(&compiled.program, &inputs);
+    match outs.len() {
+        1 => {
+            let out = outs.into_iter().next().unwrap();
+            assert_eq!(out.len(), m * n);
+            out.into_data()
+        }
+        _ => {
+            let mut flat = Vec::with_capacity(m * n);
+            for o in outs {
+                flat.extend(o.into_data());
             }
             flat
         }
@@ -279,6 +429,64 @@ mod tests {
             .collect();
         assert_eq!(sizes[0], sizes[1]);
         assert_eq!(sizes[1], sizes[2]);
+    }
+
+    #[test]
+    fn second_order_strategies_agree_and_match_fd_of_first() {
+        let (m, n) = (2, 4);
+        let (net, p, x) = setup(m, n);
+        let zcs2 = {
+            let b = build_second_derivative(&net, Strategy::Zcs, m, n, 3);
+            eval_derivative(&b, &p, &x, m, n)
+        };
+        for strat in [Strategy::FuncLoop, Strategy::DataVect] {
+            let b = build_second_derivative(&net, strat, m, n, 3);
+            let got = eval_derivative(&b, &p, &x, m, n);
+            for (a, c) in zcs2.iter().zip(&got) {
+                assert!((a - c).abs() < 1e-8 * (1.0 + a.abs()), "{strat:?}: {a} vs {c}");
+            }
+        }
+        // FD of the first derivative confirms it really is d2u/dx2
+        let b1 = build_first_derivative(&net, Strategy::Zcs, m, n, 3);
+        let h = 1e-5;
+        let xp = x.map(|v| v + h);
+        let xm = x.map(|v| v - h);
+        let d1p = eval_derivative(&b1, &p, &xp, m, n);
+        let d1m = eval_derivative(&b1, &p, &xm, m, n);
+        for (k, want) in zcs2.iter().enumerate() {
+            let fd = (d1p[k] - d1m[k]) / (2.0 * h);
+            assert!((want - fd).abs() < 1e-4 * (1.0 + want.abs()), "{k}: {want} vs {fd}");
+        }
+    }
+
+    #[test]
+    fn compiled_matches_interpreted_for_all_strategies() {
+        let (m, n) = (3, 5);
+        let (net, p, x) = setup(m, n);
+        let mut exec = Executor::new();
+        for order in [1usize, 2] {
+            for strat in [Strategy::Zcs, Strategy::FuncLoop, Strategy::DataVect] {
+                let built = build_derivative(&net, strat, m, n, 3, order);
+                let interpreted = eval_derivative(&built, &p, &x, m, n);
+                let compiled = built.compile();
+                let got = eval_derivative_compiled(&compiled, &mut exec, &p, &x, m, n);
+                assert_eq!(interpreted, got, "{strat:?} order {order}");
+            }
+        }
+    }
+
+    #[test]
+    fn compiled_program_is_smaller_than_the_tape() {
+        let (net, _, _) = setup(4, 6);
+        let c = compile_derivative(&net, Strategy::Zcs, 4, 6, 3, 2);
+        let stats = &c.program.stats;
+        assert!(
+            stats.instructions < stats.graph_nodes,
+            "compiled {} vs tape {}",
+            stats.instructions,
+            stats.graph_nodes
+        );
+        assert!(stats.cse_hits > 0, "second-order z-chain must have shared subtrees");
     }
 
     #[test]

@@ -2,13 +2,21 @@
 //! flat array), `#` comments.  Covers `configs/*.toml`; nothing more.
 
 use std::collections::BTreeMap;
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum TomlError {
-    #[error("line {0}: {1}")]
     Line(usize, String),
 }
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let Self::Line(ln, msg) = self;
+        write!(f, "line {ln}: {msg}")
+    }
+}
+
+impl std::error::Error for TomlError {}
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum TomlValue {

@@ -10,7 +10,7 @@ use crate::config::RunConfig;
 use crate::pde::ProblemKind;
 use crate::rng::Pcg64;
 use crate::runtime::{ArtifactMeta, HostTensor, RunArg};
-use crate::sampler::{boundary_points_2d, interior_points_2d, Edge, FunctionBank, GpSampler1d};
+use crate::sampler::{boundary_points_2d, interior_points_2d, Edge, FunctionBank, GpSampler1d, Kernel};
 use crate::tensor::Tensor;
 use anyhow::{bail, Result};
 
@@ -231,6 +231,74 @@ impl Batcher {
     }
 }
 
+/// Batch generator for the *native* engine (no artifacts, no PJRT): draws
+/// M sensor rows from a GP function bank and resamples N 1-D collocation
+/// points each step, plus the per-point function values the native
+/// antiderivative objective fits against.  The native counterpart of
+/// [`Batcher`], feeding compiled [`crate::autodiff::Program`]s in
+/// [`crate::coordinator::native::NativeTrainer`].
+pub struct NativeBatcher {
+    bank: FunctionBank,
+    m: usize,
+    q: usize,
+    n: usize,
+    rng: Pcg64,
+    last_functions: Vec<usize>,
+}
+
+/// One native batch, in `f64` [`Tensor`] form.
+pub struct NativeBatch {
+    /// sensor matrix (M, Q)
+    pub p: Tensor,
+    /// collocation points (N, 1) in [0, 1)
+    pub x: Tensor,
+    /// bank-function values at the collocation points, (M, N)
+    pub f_at_x: Tensor,
+}
+
+impl NativeBatcher {
+    pub fn new(
+        m: usize,
+        n: usize,
+        q: usize,
+        bank_size: usize,
+        bank_grid: usize,
+        rng: &mut Pcg64,
+    ) -> Result<Self> {
+        anyhow::ensure!(bank_size >= m, "bank_size {bank_size} < batch functions {m}");
+        let sampler =
+            GpSampler1d::new(Kernel::Rbf { length_scale: 0.2, variance: 1.0 }, bank_grid);
+        let bank = FunctionBank::generate(&sampler, bank_size, rng)?;
+        Ok(Self { bank, m, q, n, rng: rng.clone(), last_functions: Vec::new() })
+    }
+
+    pub fn bank(&self) -> &FunctionBank {
+        &self.bank
+    }
+
+    pub fn last_functions(&self) -> &[usize] {
+        &self.last_functions
+    }
+
+    /// Next (p, x, f(x)) batch.
+    pub fn next_batch(&mut self) -> NativeBatch {
+        self.last_functions = self.rng.choose(self.bank.len(), self.m);
+        let mut pdata = Vec::with_capacity(self.m * self.q);
+        for &fi in &self.last_functions {
+            pdata.extend(self.bank.sensors(fi, self.q));
+        }
+        let p = Tensor::new(&[self.m, self.q], pdata);
+        let xs = self.rng.uniforms_in(self.n, 0.0, 1.0);
+        let mut fdata = Vec::with_capacity(self.m * self.n);
+        for &fi in &self.last_functions {
+            fdata.extend(self.bank.eval_many(fi, &xs));
+        }
+        let f_at_x = Tensor::new(&[self.m, self.n], fdata);
+        let x = Tensor::new(&[self.n, 1], xs);
+        NativeBatch { p, x, f_at_x }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -392,6 +460,32 @@ mod tests {
             let x = lr.data[2 * r];
             assert!(x == 0.0 || x == 1.0);
         }
+    }
+
+    #[test]
+    fn native_batcher_shapes_and_consistency() {
+        let mut rng = Pcg64::seeded(9);
+        let (m, n, q) = (3, 12, 7);
+        let mut b = NativeBatcher::new(m, n, q, 16, 32, &mut rng).unwrap();
+        let batch = b.next_batch();
+        assert_eq!(batch.p.shape(), &[m, q]);
+        assert_eq!(batch.x.shape(), &[n, 1]);
+        assert_eq!(batch.f_at_x.shape(), &[m, n]);
+        // f_at_x row 0 is the bank eval of the chosen function at x
+        let fi = b.last_functions()[0];
+        for j in [0usize, 5, 11] {
+            let want = b.bank().eval(fi, batch.x.data()[j]);
+            assert!((batch.f_at_x.at2(0, j) - want).abs() < 1e-12);
+        }
+        // batches differ
+        let batch2 = b.next_batch();
+        assert_ne!(batch.x.data(), batch2.x.data());
+    }
+
+    #[test]
+    fn native_batcher_rejects_small_bank() {
+        let mut rng = Pcg64::seeded(10);
+        assert!(NativeBatcher::new(8, 4, 4, 4, 16, &mut rng).is_err());
     }
 
     #[test]

@@ -11,11 +11,15 @@
 //! * [`validate`]   -- relative-L2 error of the trained operator against the
 //!   independent Rust solvers through the `forward` artifact (the paper's
 //!   "Relative error" column);
-//! * [`checkpoint`] -- binary save/load of the flat parameter tuple.
+//! * [`checkpoint`] -- binary save/load of the flat parameter tuple;
+//! * [`native`]     -- an artifact-free training loop driving *compiled*
+//!   native autodiff programs (see [`crate::autodiff::program`]) through
+//!   the same compile-once/run-many shape as the PJRT path.
 
 pub mod batch;
 pub mod checkpoint;
 pub mod fields;
+pub mod native;
 pub mod params;
 pub mod validate;
 

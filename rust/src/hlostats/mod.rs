@@ -84,6 +84,61 @@ pub fn analyze_module(module: &HloModule) -> ModuleStats {
     }
 }
 
+/// Program-level statistics of a *native* compiled [`Program`] -- the
+/// in-process counterpart of [`ModuleStats`], computed from the compiler's
+/// own liveness analysis instead of HLO text.  This turns the paper's
+/// Table-1 "Graph" memory column into a measured quantity for the native
+/// engine: `stats.peak_live_bytes` follows the same def-to-last-use
+/// convention as [`analyze_module`] (inputs/parameters excluded,
+/// intermediates only).
+///
+/// [`Program`]: crate::autodiff::Program
+#[derive(Clone, Debug)]
+pub struct ProgramReport {
+    /// the compiler's own counters (instructions, DCE/CSE/fold wins,
+    /// arena slots, peak live bytes, const bytes)
+    pub stats: crate::autodiff::ProgramStats,
+    /// per-opcode instruction counts
+    pub opcode_histogram: BTreeMap<String, usize>,
+}
+
+impl ProgramReport {
+    pub fn peak_live_mib(&self) -> f64 {
+        self.stats.peak_live_mib()
+    }
+
+    /// Fraction of tape nodes the compiled program actually executes.
+    pub fn compression(&self) -> f64 {
+        if self.stats.graph_nodes == 0 {
+            return 1.0;
+        }
+        self.stats.instructions as f64 / self.stats.graph_nodes as f64
+    }
+}
+
+/// Analyse a compiled native program.
+pub fn analyze_program(program: &crate::autodiff::Program) -> ProgramReport {
+    use crate::autodiff::OpCode;
+    let mut histogram = BTreeMap::new();
+    for instr in &program.instrs {
+        let name = match &instr.op {
+            OpCode::Add => "add",
+            OpCode::Sub => "subtract",
+            OpCode::Mul => "multiply",
+            OpCode::ScaleBy => "scale-by",
+            OpCode::Scale(_) => "scale",
+            OpCode::Tanh => "tanh",
+            OpCode::Broadcast => "broadcast",
+            OpCode::SumAll => "reduce-sum",
+            OpCode::MatMulNT => "dot-nt",
+            OpCode::MatMul => "dot",
+            OpCode::Transpose => "transpose",
+        };
+        *histogram.entry(name.to_string()).or_insert(0) += 1;
+    }
+    ProgramReport { stats: program.stats.clone(), opcode_histogram: histogram }
+}
+
 /// Peak live bytes of one computation (recursing into called computations);
 /// returns `(peak, root_output_bytes)`.
 fn computation_peak<'m>(
@@ -212,6 +267,25 @@ ENTRY e {
         let s = analyze(src).unwrap();
         // during the call: x's output (1024) + helper peak (h1+h2 = 2048)
         assert_eq!(s.peak_live_bytes, 1024 + 2048);
+    }
+
+    #[test]
+    fn program_report_matches_compiler_stats() {
+        use crate::autodiff::{Graph, Program};
+        let mut g = Graph::new();
+        let x = g.input(&[8]);
+        let t = g.tanh(x);
+        let s = g.mul(t, t);
+        let out = g.sum_all(s);
+        let prog = Program::compile(&g, &[out]);
+        let report = analyze_program(&prog);
+        assert_eq!(report.stats.instructions, 3);
+        assert_eq!(report.opcode_histogram["tanh"], 1);
+        assert_eq!(report.opcode_histogram["multiply"], 1);
+        assert_eq!(report.opcode_histogram["reduce-sum"], 1);
+        assert!(report.compression() <= 1.0);
+        // peak: tanh result + mul result live together (8 f64 each)
+        assert_eq!(report.stats.peak_live_bytes, 2 * 8 * 8);
     }
 
     #[test]

@@ -19,15 +19,24 @@
 //! naively.
 
 use std::collections::BTreeMap;
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum ParseError {
-    #[error("line {0}: {1}")]
     Line(usize, String),
-    #[error("module has no ENTRY computation")]
     NoEntry,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Line(ln, msg) => write!(f, "line {ln}: {msg}"),
+            Self::NoEntry => write!(f, "module has no ENTRY computation"),
+        }
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 /// Element type + dimensions; tuples hold their elements.
 #[derive(Clone, Debug, PartialEq)]

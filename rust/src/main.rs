@@ -33,6 +33,7 @@ fn dispatch(args: &[String]) -> Result<()> {
     let rest = if args.is_empty() { &[][..] } else { &args[1..] };
     match cmd {
         "train" => cmd_train(rest),
+        "ntrain" => cmd_ntrain(rest),
         "config" => cmd_config(rest),
         "stats" => cmd_stats(rest),
         "list" => cmd_list(rest),
@@ -43,8 +44,11 @@ fn dispatch(args: &[String]) -> Result<()> {
                 "zcs -- Zero Coordinate Shift reproduction (rust + jax + pallas)\n\n\
                  commands:\n\
                  \x20 train    train a physics-informed DeepONet from AOT artifacts\n\
+                 \x20 ntrain   train the native antiderivative operator on the\n\
+                 \x20          in-process AD engine (compiled programs, no artifacts)\n\
                  \x20 config   train from a TOML config file\n\
-                 \x20 stats    HLO graph-memory statistics per artifact\n\
+                 \x20 stats    graph-memory statistics (HLO artifacts, or\n\
+                 \x20          --native for compiled tape programs)\n\
                  \x20 list     list available artifacts\n\
                  \x20 solve    run a reference PDE solver demo\n\
                  \x20 fields   dump true-vs-predicted Stokes fields (Fig. 3)\n\n\
@@ -54,6 +58,78 @@ fn dispatch(args: &[String]) -> Result<()> {
         }
         other => bail!("unknown command {other:?}; try `zcs help`"),
     }
+}
+
+fn cmd_ntrain(args: &[String]) -> Result<()> {
+    use zcs::autodiff::Strategy;
+    use zcs::coordinator::native::{NativeRunConfig, NativeTrainer};
+    let opts = Opts::new("zcs ntrain", "native compiled-program training (no artifacts)")
+        .opt("strategy", "zcs", "zcs | funcloop | datavect")
+        .opt("m", "4", "functions per batch (paper M)")
+        .opt("n", "16", "collocation points per batch (paper N)")
+        .opt("q", "8", "branch sensors (paper Q)")
+        .opt("hidden", "16", "MLP hidden width")
+        .opt("k", "8", "DeepONet latent dimension")
+        .opt("steps", "200", "training steps")
+        .opt("lr", "0.01", "SGD learning rate")
+        .opt("seed", "20230923", "RNG seed")
+        .opt("bank-size", "64", "GP function-bank size")
+        .opt("log-every", "20", "loss-curve logging interval")
+        .switch("help", "show usage");
+    let p = opts.parse(args)?;
+    if p.switch("help") {
+        print!("{}", opts.usage());
+        return Ok(());
+    }
+    let strategy = Strategy::from_name(p.get("strategy"))
+        .ok_or_else(|| anyhow!("unknown strategy {:?}", p.get("strategy")))?;
+    let config = NativeRunConfig {
+        strategy,
+        m: p.get_usize("m")?,
+        n: p.get_usize("n")?,
+        q: p.get_usize("q")?,
+        hidden: p.get_usize("hidden")?,
+        k: p.get_usize("k")?,
+        steps: p.get_usize("steps")?,
+        lr: p.get_f64("lr")?,
+        seed: p.get_u64("seed")?,
+        bank_size: p.get_usize("bank-size")?,
+        log_every: p.get_usize("log-every")?.max(1),
+        ..NativeRunConfig::default()
+    };
+    println!(
+        "native training: antiderivative operator under {} (M={} N={} Q={}, {} steps)",
+        strategy.name(),
+        config.m,
+        config.n,
+        config.q,
+        config.steps
+    );
+    let mut trainer = NativeTrainer::new(config)?;
+    let report = trainer.run()?;
+    let prog = &report.program;
+    println!(
+        "step program: {} instructions from a {}-node tape \
+         (CSE {}, folded {}, simplified {}; {} slots, peak {:.1} KiB)",
+        prog.stats.instructions,
+        prog.stats.graph_nodes,
+        prog.stats.cse_hits,
+        prog.stats.folded,
+        prog.stats.simplified,
+        prog.stats.n_slots,
+        prog.stats.peak_live_bytes as f64 / 1024.0
+    );
+    println!("compiled in {:.2?}\n\nloss curve:", report.compile_time);
+    for (step, loss) in &report.curve {
+        println!("  step {step:>6}  loss {loss:>12.6e}");
+    }
+    println!(
+        "\ntimings: inputs {:.2?}, steps {:.2?} ({:.3} s / 1000 batches)",
+        report.input_time,
+        report.step_time,
+        report.sec_per_1000()
+    );
+    Ok(())
 }
 
 fn train_opts() -> Opts {
@@ -152,14 +228,20 @@ fn trainer_compile_time(t: &Trainer) -> std::time::Duration {
 }
 
 fn cmd_stats(args: &[String]) -> Result<()> {
-    let opts = Opts::new("zcs stats", "HLO graph statistics per artifact")
+    let opts = Opts::new("zcs stats", "graph statistics (HLO artifacts or native programs)")
         .opt("artifacts", "artifacts", "artifact directory")
         .opt("filter", "", "substring filter on artifact names")
+        .opt("m", "8", "(--native) functions per batch")
+        .opt("n", "64", "(--native) collocation points")
+        .switch("native", "compile the native tape strategies and report program stats")
         .switch("help", "show usage");
     let p = opts.parse(args)?;
     if p.switch("help") {
         print!("{}", opts.usage());
         return Ok(());
+    }
+    if p.switch("native") {
+        return native_stats(p.get_usize("m")?, p.get_usize("n")?);
     }
     let runtime = Runtime::open(p.get("artifacts"))?;
     let filter = p.get("filter");
@@ -193,6 +275,44 @@ fn cmd_stats(args: &[String]) -> Result<()> {
         ]);
     }
     table.print();
+    Ok(())
+}
+
+/// `zcs stats --native`: compiled-program statistics of the three tape
+/// strategies at first and second derivative order -- the native-engine
+/// version of the artifact table, no artifacts required.
+fn native_stats(m: usize, n: usize) -> Result<()> {
+    use zcs::autodiff::{zcs_demo, Strategy};
+    let (q, h, k) = (8usize, 32usize, 16usize);
+    let mut rng = zcs::rng::Pcg64::seeded(5);
+    let net = zcs_demo::DemoNet::random(q, h, k, &mut rng);
+    let mut table = Table::new(&[
+        "strategy", "order", "tape nodes", "instructions", "cse", "folded", "slots",
+        "peak KiB", "const KiB",
+    ]);
+    for strat in [Strategy::Zcs, Strategy::FuncLoop, Strategy::DataVect] {
+        for order in [1usize, 2] {
+            let compiled = zcs_demo::compile_derivative(&net, strat, m, n, q, order);
+            let s = zcs::hlostats::analyze_program(&compiled.program).stats;
+            table.row(&[
+                strat.name().to_string(),
+                order.to_string(),
+                s.graph_nodes.to_string(),
+                s.instructions.to_string(),
+                s.cse_hits.to_string(),
+                s.folded.to_string(),
+                s.n_slots.to_string(),
+                format!("{:.1}", s.peak_live_bytes as f64 / 1024.0),
+                format!("{:.1}", s.const_bytes as f64 / 1024.0),
+            ]);
+        }
+    }
+    table.print();
+    println!(
+        "\nreading guide: ZCS tape size is M-invariant and its compiled \
+         program executes a fraction of the tape (DCE drops dead adjoint \
+         chains, CSE merges the z-chain's repeated subtrees)."
+    );
     Ok(())
 }
 

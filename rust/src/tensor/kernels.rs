@@ -1,0 +1,217 @@
+//! In-place tensor kernels for the compiled-program executor.
+//!
+//! Every kernel writes its result into a caller-owned `out` tensor,
+//! reusing its allocation (`Vec` capacity) when possible -- this is what
+//! lets [`crate::autodiff::exec::Executor`] run a compiled
+//! [`crate::autodiff::Program`] clone-free: arena slots are recycled across
+//! instructions and across runs, so the steady state performs no heap
+//! allocation at all.
+//!
+//! Numeric contract: each kernel performs bit-for-bit the same operation
+//! sequence as the interpreted [`crate::autodiff::Graph::eval`] path (same
+//! accumulation order in the matmuls, same elementwise ops), so compiled
+//! and interpreted execution agree exactly -- property-tested in
+//! `rust/tests/zcs_native_props.rs`.
+//!
+//! Aliasing contract: `out` must not alias any input (the program lowerer
+//! guarantees this by never freeing an operand's arena slot before the
+//! instruction that last reads it has completed).
+
+use super::Tensor;
+
+/// Reset `out` to `shape` with all-zero contents, reusing its allocation.
+fn zero_fill(out: &mut Tensor, shape: &[usize]) {
+    let n: usize = shape.iter().product();
+    out.shape.clear();
+    out.shape.extend_from_slice(shape);
+    out.data.clear();
+    out.data.resize(n, 0.0);
+}
+
+/// Reset `out` to `shape` without defined contents, reusing its allocation.
+/// Caller must overwrite every element.
+fn shape_only(out: &mut Tensor, shape: &[usize]) {
+    zero_fill(out, shape);
+}
+
+/// `out = a + b` (same shape).
+pub fn add_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
+    assert_eq!(a.shape, b.shape, "add_into shapes");
+    shape_only(out, &a.shape);
+    for (o, (x, y)) in out.data.iter_mut().zip(a.data.iter().zip(&b.data)) {
+        *o = x + y;
+    }
+}
+
+/// `out = a - b` (same shape).
+pub fn sub_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
+    assert_eq!(a.shape, b.shape, "sub_into shapes");
+    shape_only(out, &a.shape);
+    for (o, (x, y)) in out.data.iter_mut().zip(a.data.iter().zip(&b.data)) {
+        *o = x - y;
+    }
+}
+
+/// `out = a * b` elementwise (same shape).
+pub fn mul_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
+    assert_eq!(a.shape, b.shape, "mul_into shapes");
+    shape_only(out, &a.shape);
+    for (o, (x, y)) in out.data.iter_mut().zip(a.data.iter().zip(&b.data)) {
+        *o = x * y;
+    }
+}
+
+/// `out = a * s`.
+pub fn scale_into(a: &Tensor, s: f64, out: &mut Tensor) {
+    shape_only(out, &a.shape);
+    for (o, x) in out.data.iter_mut().zip(&a.data) {
+        *o = x * s;
+    }
+}
+
+/// `out = tanh(a)` elementwise.
+pub fn tanh_into(a: &Tensor, out: &mut Tensor) {
+    shape_only(out, &a.shape);
+    for (o, x) in out.data.iter_mut().zip(&a.data) {
+        *o = x.tanh();
+    }
+}
+
+/// `out = full(shape, v)`.
+pub fn broadcast_into(v: f64, shape: &[usize], out: &mut Tensor) {
+    let n: usize = shape.iter().product();
+    out.shape.clear();
+    out.shape.extend_from_slice(shape);
+    out.data.clear();
+    out.data.resize(n, v);
+}
+
+/// `out = sum(a)` as a scalar (shape `[]`).
+pub fn sum_all_into(a: &Tensor, out: &mut Tensor) {
+    shape_only(out, &[]);
+    out.data[0] = a.data.iter().sum();
+}
+
+/// `out = a @ b` for `(m,k) @ (k,n)`, same ikj loop order (and the same
+/// zero-skip) as [`Tensor::matmul`] so results match bit for bit.
+pub fn matmul_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
+    assert_eq!(a.shape.len(), 2);
+    assert_eq!(b.shape.len(), 2);
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "matmul_into {:?} @ {:?}", a.shape, b.shape);
+    zero_fill(out, &[m, n]);
+    for i in 0..m {
+        let orow = &mut out.data[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let av = a.data[i * k + kk];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// `out = a @ b^T` for `(m,k) @ (n,k)^T -> (m,n)` without materialising the
+/// transpose.  Accumulation order over `k` matches
+/// `a.matmul(&b.transpose())`, so results are identical.
+pub fn matmul_nt_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
+    assert_eq!(a.shape.len(), 2);
+    assert_eq!(b.shape.len(), 2);
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (n, k2) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "matmul_nt_into {:?} @ {:?}^T", a.shape, b.shape);
+    zero_fill(out, &[m, n]);
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let orow = &mut out.data[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let av = arow[kk];
+            if av == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                orow[j] += av * b.data[j * k + kk];
+            }
+        }
+    }
+}
+
+/// `out = a^T` (2-D).
+pub fn transpose_into(a: &Tensor, out: &mut Tensor) {
+    assert_eq!(a.shape.len(), 2);
+    let (m, n) = (a.shape[0], a.shape[1]);
+    shape_only(out, &[n, m]);
+    for i in 0..m {
+        for j in 0..n {
+            out.data[j * m + i] = a.data[i * n + j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: &[usize], data: Vec<f64>) -> Tensor {
+        Tensor::new(shape, data)
+    }
+
+    #[test]
+    fn elementwise_match_operators() {
+        let a = t(&[3], vec![1.0, -2.0, 0.5]);
+        let b = t(&[3], vec![4.0, 0.25, -8.0]);
+        let mut out = Tensor::zeros(&[0]);
+        add_into(&a, &b, &mut out);
+        assert_eq!(out, &a + &b);
+        sub_into(&a, &b, &mut out);
+        assert_eq!(out, &a - &b);
+        mul_into(&a, &b, &mut out);
+        assert_eq!(out, &a * &b);
+        scale_into(&a, -1.5, &mut out);
+        assert_eq!(out, a.clone().scale(-1.5));
+        tanh_into(&a, &mut out);
+        assert_eq!(out, a.map(f64::tanh));
+    }
+
+    #[test]
+    fn reductions_and_broadcast() {
+        let a = t(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let mut out = Tensor::zeros(&[0]);
+        sum_all_into(&a, &mut out);
+        assert_eq!(out.shape(), &[] as &[usize]);
+        assert_eq!(out.data(), &[10.0]);
+        broadcast_into(2.5, &[2, 3], &mut out);
+        assert_eq!(out, Tensor::full(&[2, 3], 2.5));
+    }
+
+    #[test]
+    fn matmuls_bit_match_interpreted_path() {
+        let mut rng = crate::rng::Pcg64::seeded(17);
+        let a = t(&[3, 4], rng.normals(12));
+        let b = t(&[4, 5], rng.normals(20));
+        let c = t(&[5, 4], rng.normals(20));
+        let mut out = Tensor::zeros(&[0]);
+        matmul_into(&a, &b, &mut out);
+        assert_eq!(out, a.matmul(&b));
+        matmul_nt_into(&a, &c, &mut out);
+        assert_eq!(out, a.matmul(&c.transpose()));
+        transpose_into(&a, &mut out);
+        assert_eq!(out, a.transpose());
+    }
+
+    #[test]
+    fn out_allocation_is_reused() {
+        let a = t(&[4], vec![1.0; 4]);
+        let b = t(&[4], vec![2.0; 4]);
+        let mut out = Tensor::zeros(&[8]); // larger than needed
+        let cap_before = out.data.capacity();
+        add_into(&a, &b, &mut out);
+        assert_eq!(out.shape(), &[4]);
+        assert_eq!(out.data.capacity(), cap_before);
+    }
+}

@@ -1,15 +1,26 @@
 //! Dense linear algebra needed by the GP sampler: Cholesky + triangular solves.
 
 use super::Tensor;
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum CholeskyError {
-    #[error("matrix not positive definite at pivot {0} (value {1})")]
     NotPositiveDefinite(usize, f64),
-    #[error("matrix not square: {0:?}")]
     NotSquare(Vec<usize>),
 }
+
+impl fmt::Display for CholeskyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::NotPositiveDefinite(pivot, value) => {
+                write!(f, "matrix not positive definite at pivot {pivot} (value {value})")
+            }
+            Self::NotSquare(shape) => write!(f, "matrix not square: {shape:?}"),
+        }
+    }
+}
+
+impl std::error::Error for CholeskyError {}
 
 /// Lower Cholesky factor `L` with `L L^T = A` (A symmetric positive definite).
 pub fn cholesky(a: &Tensor) -> Result<Tensor, CholeskyError> {

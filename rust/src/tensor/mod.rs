@@ -7,6 +7,7 @@
 //! request-path math runs there; this substrate exists for workload
 //! generation and truth computation.
 
+pub mod kernels;
 mod linalg;
 
 pub use linalg::{cholesky, solve_lower, solve_upper, CholeskyError};

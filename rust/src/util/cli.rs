@@ -4,21 +4,34 @@
 //! switches, defaults, and auto-generated `--help` text.
 
 use std::collections::BTreeMap;
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown option --{0}")]
     UnknownOption(String),
-    #[error("option --{0} needs a value")]
     MissingValue(String),
-    #[error("missing required option --{0}")]
     MissingRequired(String),
-    #[error("invalid value {1:?} for --{0}: {2}")]
     BadValue(String, String, String),
-    #[error("unexpected positional argument {0:?}")]
     UnexpectedPositional(String),
 }
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::UnknownOption(name) => write!(f, "unknown option --{name}"),
+            Self::MissingValue(name) => write!(f, "option --{name} needs a value"),
+            Self::MissingRequired(name) => write!(f, "missing required option --{name}"),
+            Self::BadValue(name, value, why) => {
+                write!(f, "invalid value {value:?} for --{name}: {why}")
+            }
+            Self::UnexpectedPositional(arg) => {
+                write!(f, "unexpected positional argument {arg:?}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// One option specification.
 #[derive(Clone)]

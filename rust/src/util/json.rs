@@ -5,8 +5,8 @@
 //! every integer the artifact manifest contains.
 
 use std::collections::BTreeMap;
+use std::fmt;
 use std::fmt::Write as _;
-use thiserror::Error;
 
 /// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
@@ -19,23 +19,32 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("unexpected end of input at byte {0}")]
     Eof(usize),
-    #[error("unexpected character {0:?} at byte {1}")]
     Unexpected(char, usize),
-    #[error("invalid number at byte {0}")]
     BadNumber(usize),
-    #[error("invalid escape \\{0} at byte {1}")]
     BadEscape(char, usize),
-    #[error("trailing garbage at byte {0}")]
     Trailing(usize),
-    #[error("type error: expected {0}")]
     Type(&'static str),
-    #[error("missing key {0:?}")]
     MissingKey(String),
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Eof(at) => write!(f, "unexpected end of input at byte {at}"),
+            Self::Unexpected(c, at) => write!(f, "unexpected character {c:?} at byte {at}"),
+            Self::BadNumber(at) => write!(f, "invalid number at byte {at}"),
+            Self::BadEscape(c, at) => write!(f, "invalid escape \\{c} at byte {at}"),
+            Self::Trailing(at) => write!(f, "trailing garbage at byte {at}"),
+            Self::Type(expected) => write!(f, "type error: expected {expected}"),
+            Self::MissingKey(key) => write!(f, "missing key {key:?}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     /// Parse a complete JSON document.

@@ -2,9 +2,15 @@
 //!
 //! These are the eq.-(7)/(10)/(11) invariants and the coordinator-facing
 //! graph-size claims, checked over randomly generated networks, batch sizes
-//! and point sets with shrinking on failure.
+//! and point sets with shrinking on failure -- plus the compile-layer
+//! differential suite: a compiled [`Program`](zcs::autodiff::Program) must
+//! reproduce the interpreted `Graph::eval` values *exactly* (`==`, not a
+//! tolerance) for every op, both derivative orders and all three
+//! strategies, while executing strictly fewer instructions than the
+//! interpreter touches nodes.
 
-use zcs::autodiff::{zcs_demo, Strategy};
+use std::collections::HashMap;
+use zcs::autodiff::{zcs_demo, Executor, Graph, NodeId, Program, Strategy};
 use zcs::rng::Pcg64;
 use zcs::tensor::Tensor;
 use zcs::util::propkit::{usize_in, Gen, Runner};
@@ -98,6 +104,132 @@ fn prop_funcloop_graph_strictly_grows_with_m() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_compiled_program_bit_matches_interpreter() {
+    // differential testing: for random instances, both derivative orders
+    // and all three strategies, the compiled program's output must equal
+    // the interpreted tape's output EXACTLY
+    Runner { cases: 25, ..Default::default() }.check(instance_gen(), |&(m, n, q, seed)| {
+        let (net, p, x) = setup(m, n, q, seed);
+        let mut exec = Executor::new();
+        for order in [1usize, 2] {
+            for strat in [Strategy::Zcs, Strategy::FuncLoop, Strategy::DataVect] {
+                let built = zcs_demo::build_derivative(&net, strat, m, n, q, order);
+                let interpreted = zcs_demo::eval_derivative(&built, &p, &x, m, n);
+                let compiled = built.compile();
+                let got =
+                    zcs_demo::eval_derivative_compiled(&compiled, &mut exec, &p, &x, m, n);
+                if interpreted != got {
+                    let k = interpreted
+                        .iter()
+                        .zip(&got)
+                        .position(|(a, b)| a != b)
+                        .unwrap_or(0);
+                    return Err(format!(
+                        "{strat:?} order {order} entry {k}: {} vs {}",
+                        interpreted[k], got[k]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Build a graph exercising EVERY `Op` variant, returning the scalar root
+/// and the differentiable leaves.
+fn every_op_graph() -> (Graph, NodeId, Vec<NodeId>, HashMap<NodeId, Tensor>) {
+    let mut rng = Pcg64::seeded(0xa11_0b5);
+    let mut g = Graph::new();
+    let p = g.input(&[2, 3]); // Input
+    let w = g.input(&[3, 2]);
+    let s = g.input(&[]);
+    let c1 = g.constant(Tensor::new(&[2, 2], rng.normals(4))); // Const
+    let c2 = g.constant(Tensor::new(&[2, 2], rng.normals(4)));
+    let mm = g.matmul(p, w); // MatMul       (2,2)
+    let mnt = g.matmul_nt(mm, c1); // MatMulNT (2,2)
+    let tr = g.transpose_of(mnt); // Transpose
+    let th = g.tanh(tr); // Tanh
+    let sc = g.scale(th, 0.5); // Scale
+    let sb = g.scale_by(s, sc); // ScaleBy
+    let bc = g.broadcast(s, &[2, 2]); // Broadcast
+    let ad = g.add(sb, bc); // Add
+    let su = g.sub(ad, c2); // Sub
+    let ml = g.mul(su, su); // Mul
+    let root = g.sum_all(ml); // SumAll
+
+    let mut inputs = HashMap::new();
+    inputs.insert(p, Tensor::new(&[2, 3], rng.normals(6)));
+    inputs.insert(w, Tensor::new(&[3, 2], rng.normals(6)));
+    inputs.insert(s, Tensor::new(&[], vec![0.37]));
+    (g, root, vec![p, w, s], inputs)
+}
+
+#[test]
+fn compiled_matches_interpreter_for_every_op_and_derivative() {
+    let (mut g, root, leaves, inputs) = every_op_graph();
+    // first-order grads w.r.t. every leaf, then a second-order sweep
+    let g1 = g.grad(root, &leaves);
+    let g1_sum = g.sum_all(g1[0]);
+    let g2 = g.grad(g1_sum, &leaves);
+    let mut outputs = vec![root];
+    outputs.extend(&g1);
+    outputs.extend(&g2);
+
+    let prog = Program::compile(&g, &outputs);
+    let got = prog.eval_once(&inputs);
+    for (k, (&node, out)) in outputs.iter().zip(&got).enumerate() {
+        let want = g.eval(node, &inputs);
+        assert_eq!(&want, out, "output {k} (node {node}) diverged");
+    }
+    // sanity: the graph really contains all 13 op variants
+    use zcs::autodiff::Op;
+    let mut seen = std::collections::HashSet::new();
+    for node in &g.nodes {
+        seen.insert(std::mem::discriminant(&node.op));
+    }
+    let all = [
+        Op::Input,
+        Op::Const(Tensor::zeros(&[1])),
+        Op::Add,
+        Op::Sub,
+        Op::Mul,
+        Op::ScaleBy,
+        Op::Scale(1.0),
+        Op::Tanh,
+        Op::Broadcast(vec![1]),
+        Op::SumAll,
+        Op::MatMulNT,
+        Op::MatMul,
+        Op::Transpose,
+    ];
+    for op in &all {
+        assert!(
+            seen.contains(&std::mem::discriminant(op)),
+            "graph is missing op {op:?}"
+        );
+    }
+}
+
+#[test]
+fn dce_and_cse_strictly_shrink_the_zcs_second_order_chain() {
+    let mut rng = Pcg64::seeded(13);
+    let net = zcs_demo::DemoNet::random(6, 16, 8, &mut rng);
+    let compiled = zcs_demo::compile_derivative(&net, Strategy::Zcs, 4, 24, 6, 2);
+    let s = &compiled.program.stats;
+    // DCE: the z-chain leaves whole adjoint subtrees (e.g. the branch
+    // gradients) unreachable from d/da
+    assert!(s.live_nodes < s.graph_nodes, "DCE found nothing: {s:?}");
+    // CSE + folding + simplification: strictly fewer instructions than the
+    // nodes the interpreter memoizes
+    assert!(s.instructions < s.live_nodes, "no compile win: {s:?}");
+    assert!(s.cse_hits > 0, "second-order chain must share subtrees: {s:?}");
+    assert!(s.folded > 0, "constant broadcasts should fold: {s:?}");
+    assert!(s.simplified > 0, "identity rewrites should fire: {s:?}");
+    // and the arena is denser than one-slot-per-instruction
+    assert!(s.n_slots < s.instructions, "no slot reuse: {s:?}");
 }
 
 #[test]
