@@ -21,7 +21,7 @@ use zcs::util::benchkit::{Bench, Stats, Table};
 use zcs::util::json::{obj, Json};
 
 fn main() -> anyhow::Result<()> {
-    let bench = Bench::default();
+    let bench = Bench::from_env();
     let mut table = Table::new(&["component", "mean", "p50", "iters"]);
     let fmt = |s: &zcs::util::benchkit::Stats| {
         (format!("{:.3} ms", s.mean_ms()), format!("{:.3} ms", s.p50.as_secs_f64() * 1e3))
@@ -32,7 +32,7 @@ fn main() -> anyhow::Result<()> {
     write_bench_compile_json(&compile_rows)?;
 
     // GP bank generation (one-time cost, amortised)
-    let stats = Bench::heavy().run(|| {
+    let stats = Bench::heavy_from_env().run(|| {
         let sampler = GpSampler1d::new(Kernel::Rbf { length_scale: 0.2, variance: 1.0 }, 256);
         let mut rng = Pcg64::seeded(1);
         FunctionBank::generate(&sampler, 100, &mut rng).unwrap()
@@ -94,7 +94,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // reference solvers
-    let stats = Bench::heavy().run(|| {
+    let stats = Bench::heavy_from_env().run(|| {
         let s = zcs::solvers::ReactionDiffusionSolver::default();
         let f: Vec<f64> = (0..s.nx).map(|i| (i as f64).sin()).collect();
         s.solve_grid(&f)
@@ -102,7 +102,7 @@ fn main() -> anyhow::Result<()> {
     let (mean, p50) = fmt(&stats);
     table.row(&["rd solver (128x512 grid)".into(), mean, p50, stats.iters.to_string()]);
 
-    let stats = Bench::heavy().run(|| {
+    let stats = Bench::heavy_from_env().run(|| {
         let s = zcs::solvers::StokesSolver { n: 48, max_iters: 4000, ..Default::default() };
         let lid: Vec<f64> = (0..48).map(|i| {
             let x = i as f64 / 47.0;
@@ -141,7 +141,7 @@ fn bench_compiled_vs_interpreted(table: &mut Table) -> Vec<CompileRow> {
     let net = zcs_demo::DemoNet::random(q, h, k, &mut rng);
     let p = Tensor::new(&[m, q], rng.normals(m * q));
     let x = Tensor::new(&[n, 1], rng.uniforms_in(n, 0.0, 1.0));
-    let bench = Bench::default();
+    let bench = Bench::from_env();
     let mut exec = Executor::new();
 
     let cases: [(Strategy, &'static str, usize); 4] = [
@@ -207,6 +207,8 @@ fn write_bench_compile_json(rows: &[CompileRow]) -> anyhow::Result<()> {
     let doc = obj(vec![
         ("bench", Json::from("hot_path.compile")),
         ("unit", Json::from("ns/step")),
+        // distinguishes CI smoke budgets from full-budget measurements
+        ("quick", Json::Bool(zcs::util::benchkit::quick_mode())),
         ("cases", Json::from(cases)),
     ]);
     std::fs::write("BENCH_compile.json", doc.to_string())?;

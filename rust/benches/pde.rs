@@ -1,0 +1,127 @@
+//! Per-problem strategy comparison on the native engine: wall time per
+//! compiled training step for ZCS vs FuncLoop vs DataVect at two function
+//! counts M -- the native-engine version of the paper's Table-1 timing
+//! columns, measured on the real case-study residuals (reaction-diffusion,
+//! Burgers, and 4th-order Kirchhoff).  Writes `BENCH_pde.json` so the
+//! per-problem perf trajectory is tracked from PR to PR.  Run:
+//! `cargo bench --bench pde` (set `ZCS_BENCH_QUICK=1` for the CI smoke).
+
+use zcs::autodiff::Strategy;
+use zcs::coordinator::native::{NativeRunConfig, NativeTrainer};
+use zcs::pde::ProblemKind;
+use zcs::util::benchkit::{quick_mode, Bench, Table};
+use zcs::util::json::{obj, Json};
+
+struct PdeRow {
+    problem: String,
+    strategy: &'static str,
+    m: usize,
+    graph_nodes: usize,
+    instructions: usize,
+    compile_ms: f64,
+    step_ns: f64,
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = quick_mode();
+    let problems: Vec<ProblemKind> = if quick {
+        vec![ProblemKind::ReactionDiffusion]
+    } else {
+        vec![ProblemKind::ReactionDiffusion, ProblemKind::Burgers, ProblemKind::Kirchhoff]
+    };
+    let ms: [usize; 2] = if quick { [2, 8] } else { [4, 16] };
+    let n = if quick { 16 } else { 32 };
+    let bench = Bench::from_env();
+    let mut table = Table::new(&[
+        "problem", "strategy", "M", "tape nodes", "instrs", "compile ms", "step ms",
+    ]);
+    let mut rows: Vec<PdeRow> = Vec::new();
+    for &problem in &problems {
+        let q = if problem == ProblemKind::Kirchhoff { 9 } else { 8 };
+        for m in ms {
+            for strategy in Strategy::ALL {
+                let config = NativeRunConfig {
+                    problem,
+                    strategy,
+                    m,
+                    n,
+                    n_bc: 8,
+                    q,
+                    hidden: 16,
+                    k: 8,
+                    steps: 0,
+                    // lr 0: measure the full step (forward + gradients)
+                    // without walking the weights anywhere
+                    lr: 0.0,
+                    seed: 5,
+                    bank_size: m.max(16),
+                    bank_grid: 64,
+                    log_every: 1,
+                };
+                let mut trainer = NativeTrainer::new(config)?;
+                let batch = trainer.next_batch();
+                let report = trainer.program_report();
+                let compile_ms = trainer.compile_time().as_secs_f64() * 1e3;
+                let stats = bench.run(|| trainer.step(&batch).unwrap());
+                let row = PdeRow {
+                    problem: problem.name(),
+                    strategy: strategy.name(),
+                    m,
+                    graph_nodes: report.stats.graph_nodes,
+                    instructions: report.stats.instructions,
+                    compile_ms,
+                    step_ns: stats.mean.as_nanos() as f64,
+                };
+                table.row(&[
+                    row.problem.clone(),
+                    row.strategy.to_string(),
+                    m.to_string(),
+                    row.graph_nodes.to_string(),
+                    row.instructions.to_string(),
+                    format!("{compile_ms:.1}"),
+                    format!("{:.3}", stats.mean_ms()),
+                ]);
+                rows.push(row);
+            }
+        }
+    }
+    table.print();
+    println!(
+        "\nreading guide: the ZCS tape (and hence its compiled program) is \
+         M-invariant per problem, while FuncLoop replays the reverse pass \
+         per function and DataVect tiles the leaves -- the step-time gap \
+         widens with M, most visibly on Kirchhoff's 4th-order chains."
+    );
+    write_bench_pde_json(&rows)?;
+    Ok(())
+}
+
+/// Persist the per-problem strategy timings (ns/step) for the perf log.
+fn write_bench_pde_json(rows: &[PdeRow]) -> anyhow::Result<()> {
+    let quick = quick_mode();
+    let cases: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("problem", Json::from(r.problem.as_str())),
+                ("strategy", Json::from(r.strategy)),
+                ("m", Json::from(r.m)),
+                ("graph_nodes", Json::from(r.graph_nodes)),
+                ("instructions", Json::from(r.instructions)),
+                ("compile_ms", Json::from(r.compile_ms)),
+                ("step_ns", Json::from(r.step_ns)),
+            ])
+        })
+        .collect();
+    let doc = obj(vec![
+        ("bench", Json::from("pde.native_step")),
+        ("unit", Json::from("ns/step")),
+        // CI smoke numbers (tiny budget) must never be compared against
+        // full-budget runs as if they were the same measurement
+        ("quick", Json::Bool(quick)),
+        ("cases", Json::from(cases)),
+    ]);
+    std::fs::write("BENCH_pde.json", doc.to_string())?;
+    eprintln!("wrote BENCH_pde.json");
+    Ok(())
+}

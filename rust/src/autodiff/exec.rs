@@ -101,11 +101,17 @@ impl Executor {
             }
             OpCode::Scale(c) => kernels::scale_into(arg(0), c, out),
             OpCode::Tanh => kernels::tanh_into(arg(0), out),
+            OpCode::Neg => kernels::neg_into(arg(0), out),
+            OpCode::Square => kernels::square_into(arg(0), out),
+            OpCode::Sin => kernels::sin_into(arg(0), out),
+            OpCode::Cos => kernels::cos_into(arg(0), out),
+            OpCode::Reshape => kernels::reshape_into(arg(0), &instr.shape, out),
             OpCode::Broadcast => {
                 let v = arg(0).data()[0];
                 kernels::broadcast_into(v, &instr.shape, out);
             }
             OpCode::SumAll => kernels::sum_all_into(arg(0), out),
+            OpCode::SumAxis(axis) => kernels::sum_axis_into(arg(0), axis, out),
             OpCode::MatMulNT => kernels::matmul_nt_into(arg(0), arg(1), out),
             OpCode::MatMul => kernels::matmul_into(arg(0), arg(1), out),
             OpCode::Transpose => kernels::transpose_into(arg(0), out),

@@ -29,10 +29,22 @@ pub enum Op {
     Scale(f64),
     /// tanh
     Tanh,
+    /// elementwise negation
+    Neg,
+    /// elementwise x * x (the residual-norm primitive)
+    Square,
+    /// elementwise sine (analytic source terms / manufactured solutions)
+    Sin,
+    /// elementwise cosine
+    Cos,
+    /// same data, new shape (row-major reinterpretation)
+    Reshape(Vec<usize>),
     /// broadcast a scalar (shape []) to `shape`
     Broadcast(Vec<usize>),
     /// reduce-sum everything to a scalar
     SumAll,
+    /// keep-dims reduce-sum of a 2-D tensor along `axis` (0 or 1)
+    SumAxis(usize),
     /// (m,k) x (n,k) -> (m,n): A B^T -- the DeepONet combine
     MatMulNT,
     /// (m,k) matmul (k,n) -> (m,n)
@@ -121,6 +133,33 @@ impl Graph {
         self.push(Op::Tanh, vec![a], shape)
     }
 
+    pub fn neg(&mut self, a: NodeId) -> NodeId {
+        let shape = self.shape(a).to_vec();
+        self.push(Op::Neg, vec![a], shape)
+    }
+
+    pub fn square(&mut self, a: NodeId) -> NodeId {
+        let shape = self.shape(a).to_vec();
+        self.push(Op::Square, vec![a], shape)
+    }
+
+    pub fn sin(&mut self, a: NodeId) -> NodeId {
+        let shape = self.shape(a).to_vec();
+        self.push(Op::Sin, vec![a], shape)
+    }
+
+    pub fn cos(&mut self, a: NodeId) -> NodeId {
+        let shape = self.shape(a).to_vec();
+        self.push(Op::Cos, vec![a], shape)
+    }
+
+    /// Reinterpret `a`'s row-major data as `shape` (same element count).
+    pub fn reshape_of(&mut self, a: NodeId, shape: &[usize]) -> NodeId {
+        let n: usize = self.shape(a).iter().product();
+        assert_eq!(n, shape.iter().product::<usize>(), "reshape element count");
+        self.push(Op::Reshape(shape.to_vec()), vec![a], shape.to_vec())
+    }
+
     pub fn broadcast(&mut self, scalar: NodeId, shape: &[usize]) -> NodeId {
         assert!(self.shape(scalar).is_empty(), "broadcast wants a scalar");
         self.push(Op::Broadcast(shape.to_vec()), vec![scalar], shape.to_vec())
@@ -128,6 +167,23 @@ impl Graph {
 
     pub fn sum_all(&mut self, a: NodeId) -> NodeId {
         self.push(Op::SumAll, vec![a], vec![])
+    }
+
+    /// Keep-dims row/column sums of a 2-D tensor: axis 1 -> (m, 1) row
+    /// sums, axis 0 -> (1, n) column sums.
+    pub fn sum_axis(&mut self, a: NodeId, axis: usize) -> NodeId {
+        let s = self.shape(a).to_vec();
+        assert_eq!(s.len(), 2, "sum_axis wants a 2-D tensor");
+        assert!(axis < 2, "sum_axis axis must be 0 or 1");
+        let out_shape = if axis == 1 { vec![s[0], 1] } else { vec![1, s[1]] };
+        self.push(Op::SumAxis(axis), vec![a], out_shape)
+    }
+
+    /// Keep-dims mean along `axis` (sum / length).
+    pub fn mean_axis(&mut self, a: NodeId, axis: usize) -> NodeId {
+        let len = self.shape(a)[axis];
+        let s = self.sum_axis(a, axis);
+        self.scale(s, 1.0 / len as f64)
     }
 
     pub fn matmul_nt(&mut self, a: NodeId, b: NodeId) -> NodeId {
@@ -180,6 +236,11 @@ impl Graph {
             }
             Op::Scale(c) => get(self, 0, inputs, memo).scale(*c),
             Op::Tanh => get(self, 0, inputs, memo).map(f64::tanh),
+            Op::Neg => get(self, 0, inputs, memo).map(|v| -v),
+            Op::Square => get(self, 0, inputs, memo).map(|v| v * v),
+            Op::Sin => get(self, 0, inputs, memo).map(f64::sin),
+            Op::Cos => get(self, 0, inputs, memo).map(f64::cos),
+            Op::Reshape(shape) => get(self, 0, inputs, memo).reshape(shape),
             Op::Broadcast(shape) => {
                 let v = get(self, 0, inputs, memo).data()[0];
                 Tensor::full(shape, v)
@@ -187,6 +248,10 @@ impl Graph {
             Op::SumAll => {
                 let t = get(self, 0, inputs, memo);
                 Tensor::new(&[], vec![t.data().iter().sum()])
+            }
+            Op::SumAxis(axis) => {
+                let t = get(self, 0, inputs, memo);
+                sum_axis_eval(&t, *axis)
             }
             Op::MatMulNT => {
                 let a = get(self, 0, inputs, memo);
@@ -266,6 +331,35 @@ impl Graph {
                     let ga = self.mul(g, sech2);
                     self.accumulate(&mut adjoint, x, ga);
                 }
+                Op::Neg => {
+                    let ga = self.neg(g);
+                    self.accumulate(&mut adjoint, node.inputs[0], ga);
+                }
+                Op::Square => {
+                    // d(x^2) = 2x: g * x scaled by 2 (differentiable again)
+                    let x = node.inputs[0];
+                    let gx = self.mul(g, x);
+                    let ga = self.scale(gx, 2.0);
+                    self.accumulate(&mut adjoint, x, ga);
+                }
+                Op::Sin => {
+                    let x = node.inputs[0];
+                    let c = self.cos(x);
+                    let ga = self.mul(g, c);
+                    self.accumulate(&mut adjoint, x, ga);
+                }
+                Op::Cos => {
+                    let x = node.inputs[0];
+                    let s = self.sin(x);
+                    let gs = self.mul(g, s);
+                    let ga = self.neg(gs);
+                    self.accumulate(&mut adjoint, x, ga);
+                }
+                Op::Reshape(_) => {
+                    let shape = self.shape(node.inputs[0]).to_vec();
+                    let gr = self.reshape_of(g, &shape);
+                    self.accumulate(&mut adjoint, node.inputs[0], gr);
+                }
                 Op::Broadcast(_) => {
                     let gs = self.sum_all(g);
                     self.accumulate(&mut adjoint, node.inputs[0], gs);
@@ -273,6 +367,19 @@ impl Graph {
                 Op::SumAll => {
                     let shape = self.shape(node.inputs[0]).to_vec();
                     let gb = self.broadcast(g, &shape);
+                    self.accumulate(&mut adjoint, node.inputs[0], gb);
+                }
+                Op::SumAxis(axis) => {
+                    // broadcast g back along the summed axis via a ones
+                    // matmul: axis 1 -> (m,1) @ (1,n); axis 0 -> (m,1) @ (1,n)
+                    let shape = self.shape(node.inputs[0]).to_vec();
+                    let gb = if axis == 1 {
+                        let ones = self.constant(Tensor::full(&[1, shape[1]], 1.0));
+                        self.matmul(g, ones)
+                    } else {
+                        let ones = self.constant(Tensor::full(&[shape[0], 1], 1.0));
+                        self.matmul(ones, g)
+                    };
                     self.accumulate(&mut adjoint, node.inputs[0], gb);
                 }
                 Op::MatMulNT => {
@@ -340,6 +447,27 @@ impl Graph {
         let s = self.shape(a).to_vec();
         assert_eq!(s.len(), 2);
         self.push(Op::Transpose, vec![a], vec![s[1], s[0]])
+    }
+}
+
+/// Keep-dims axis sum of a 2-D tensor; the kernels and constant folder
+/// perform bit-for-bit the same accumulation order.
+pub(crate) fn sum_axis_eval(t: &Tensor, axis: usize) -> Tensor {
+    let (m, n) = (t.shape()[0], t.shape()[1]);
+    if axis == 1 {
+        let mut out = Vec::with_capacity(m);
+        for i in 0..m {
+            out.push(t.data()[i * n..(i + 1) * n].iter().sum());
+        }
+        Tensor::new(&[m, 1], out)
+    } else {
+        let mut out = vec![0.0; n];
+        for i in 0..m {
+            for (j, o) in out.iter_mut().enumerate() {
+                *o += t.data()[i * n + j];
+            }
+        }
+        Tensor::new(&[1, n], out)
     }
 }
 
@@ -478,6 +606,80 @@ mod tests {
         // broadcast, y*y, ones, 1-y^2, g*sech2) -- one fewer than before
         // the reuse fix
         assert_eq!(g.len() - before, 6);
+    }
+
+    #[test]
+    fn elementwise_op_grads_match_closed_forms() {
+        // f = sum(square(sin(x)) + cos(x) + neg(x))
+        // f' = 2 sin cos - sin - 1
+        let mut g = Graph::new();
+        let x = g.input(&[3]);
+        let s = g.sin(x);
+        let s2 = g.square(s);
+        let c = g.cos(x);
+        let n = g.neg(x);
+        let a = g.add(s2, c);
+        let b = g.add(a, n);
+        let f = g.sum_all(b);
+        let gx = g.grad(f, &[x])[0];
+        let xv = vec![0.3, -1.1, 2.0];
+        let mut inputs = HashMap::new();
+        inputs.insert(x, Tensor::vec1(xv.clone()));
+        let got = g.eval(gx, &inputs);
+        for (i, &v) in xv.iter().enumerate() {
+            let want = 2.0 * v.sin() * v.cos() - v.sin() - 1.0;
+            assert!((got.data()[i] - want).abs() < 1e-12, "{i}: {} vs {want}", got.data()[i]);
+        }
+    }
+
+    #[test]
+    fn sum_axis_values_and_grad() {
+        let mut g = Graph::new();
+        let x = g.input(&[2, 3]);
+        let rows = g.sum_axis(x, 1); // (2, 1)
+        let cols = g.sum_axis(x, 0); // (1, 3)
+        assert_eq!(g.shape(rows), &[2, 1]);
+        assert_eq!(g.shape(cols), &[1, 3]);
+        let sr = g.sum_all(rows);
+        let w = g.constant(Tensor::new(&[1, 3], vec![1.0, 2.0, 3.0]));
+        let wc = g.mul(w, cols);
+        let sc = g.sum_all(wc);
+        let mut inputs = HashMap::new();
+        inputs.insert(x, Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]));
+        assert_eq!(g.eval(rows, &inputs).data(), &[6.0, 15.0]);
+        assert_eq!(g.eval(cols, &inputs).data(), &[5.0, 7.0, 9.0]);
+        // d sum(rows)/dx = all ones; d sum(w * cols)/dx = w per column
+        let gr = g.grad(sr, &[x])[0];
+        assert_eq!(g.eval(gr, &inputs).data(), &[1.0; 6]);
+        let gc = g.grad(sc, &[x])[0];
+        assert_eq!(g.eval(gc, &inputs).data(), &[1., 2., 3., 1., 2., 3.]);
+    }
+
+    #[test]
+    fn mean_axis_is_scaled_sum() {
+        let mut g = Graph::new();
+        let x = g.input(&[2, 4]);
+        let m1 = g.mean_axis(x, 1);
+        let mut inputs = HashMap::new();
+        inputs.insert(x, Tensor::new(&[2, 4], vec![1., 2., 3., 4., 10., 10., 10., 10.]));
+        assert_eq!(g.eval(m1, &inputs).data(), &[2.5, 10.0]);
+    }
+
+    #[test]
+    fn reshape_preserves_data_and_grads() {
+        let mut g = Graph::new();
+        let x = g.input(&[6, 1]);
+        let r = g.reshape_of(x, &[2, 3]);
+        let sq = g.square(r);
+        let f = g.sum_all(sq);
+        let gx = g.grad(f, &[x])[0];
+        assert_eq!(g.shape(gx), &[6, 1]);
+        let mut inputs = HashMap::new();
+        inputs.insert(x, Tensor::new(&[6, 1], vec![1., -2., 3., -4., 5., -6.]));
+        let rv = g.eval(r, &inputs);
+        assert_eq!(rv.shape(), &[2, 3]);
+        assert_eq!(rv.data(), &[1., -2., 3., -4., 5., -6.]);
+        assert_eq!(g.eval(gx, &inputs).data(), &[2., -4., 6., -8., 10., -12.]);
     }
 
     #[test]

@@ -85,6 +85,13 @@ fn op_key(op: &OpCode, args: &[Val], shape: &[usize]) -> OpKey {
         OpCode::MatMulNT => (8, 0),
         OpCode::MatMul => (9, 0),
         OpCode::Transpose => (10, 0),
+        OpCode::Neg => (11, 0),
+        OpCode::Square => (12, 0),
+        OpCode::Sin => (13, 0),
+        OpCode::Cos => (14, 0),
+        // result shape (already part of the key) disambiguates reshapes
+        OpCode::Reshape => (15, 0),
+        OpCode::SumAxis(axis) => (16, *axis as u64),
     };
     OpKey(tag, payload, args.to_vec(), shape.to_vec())
 }
@@ -131,6 +138,14 @@ impl Builder {
         match v {
             Val::Const(i) => Some(&self.consts[i]),
             _ => None,
+        }
+    }
+
+    fn shape_of(&self, v: Val) -> &[usize] {
+        match v {
+            Val::In(i) => &self.input_shapes[i],
+            Val::Const(c) => self.consts[c].shape(),
+            Val::Node(n) => &self.nodes[n].shape,
         }
     }
 
@@ -192,6 +207,30 @@ impl Builder {
                     }
                 }
             }
+            OpCode::Neg => {
+                // -(-x) = x, exact in IEEE-754 (sign-bit flips)
+                if let Val::Node(n) = args[0] {
+                    if matches!(self.nodes[n].op, OpCode::Neg) {
+                        self.simplified += 1;
+                        return self.nodes[n].args[0];
+                    }
+                }
+            }
+            OpCode::Reshape => {
+                // reshape to the operand's own shape is the identity
+                if self.shape_of(args[0]) == shape {
+                    self.simplified += 1;
+                    return args[0];
+                }
+                // reshape-of-reshape collapses to one (data never moves)
+                if let Val::Node(n) = args[0] {
+                    if matches!(self.nodes[n].op, OpCode::Reshape) {
+                        let inner = self.nodes[n].args[0];
+                        self.simplified += 1;
+                        return self.emit(OpCode::Reshape, vec![inner], shape);
+                    }
+                }
+            }
             _ => {}
         }
 
@@ -227,8 +266,14 @@ fn fold(op: &OpCode, args: &[&Tensor], shape: &[usize]) -> Tensor {
         OpCode::ScaleBy => args[1].clone().scale(args[0].data()[0]),
         OpCode::Scale(c) => args[0].clone().scale(*c),
         OpCode::Tanh => args[0].map(f64::tanh),
+        OpCode::Neg => args[0].map(|v| -v),
+        OpCode::Square => args[0].map(|v| v * v),
+        OpCode::Sin => args[0].map(f64::sin),
+        OpCode::Cos => args[0].map(f64::cos),
+        OpCode::Reshape => args[0].clone().reshape(shape),
         OpCode::Broadcast => Tensor::full(shape, args[0].data()[0]),
         OpCode::SumAll => Tensor::new(&[], vec![args[0].data().iter().sum()]),
+        OpCode::SumAxis(axis) => super::graph::sum_axis_eval(args[0], *axis),
         OpCode::MatMulNT => args[0].matmul(&args[1].transpose()),
         OpCode::MatMul => args[0].matmul(args[1]),
         OpCode::Transpose => args[0].transpose(),
@@ -244,8 +289,14 @@ fn opcode_of(op: &Op) -> OpCode {
         Op::ScaleBy => OpCode::ScaleBy,
         Op::Scale(c) => OpCode::Scale(*c),
         Op::Tanh => OpCode::Tanh,
+        Op::Neg => OpCode::Neg,
+        Op::Square => OpCode::Square,
+        Op::Sin => OpCode::Sin,
+        Op::Cos => OpCode::Cos,
+        Op::Reshape(_) => OpCode::Reshape,
         Op::Broadcast(_) => OpCode::Broadcast,
         Op::SumAll => OpCode::SumAll,
+        Op::SumAxis(axis) => OpCode::SumAxis(*axis),
         Op::MatMulNT => OpCode::MatMulNT,
         Op::MatMul => OpCode::MatMul,
         Op::Transpose => OpCode::Transpose,
@@ -355,6 +406,27 @@ mod tests {
         assert_eq!(dag.nodes.len(), 1); // only add(x, const)
         let want = (&Tensor::vec1(vec![1.0, 2.0]) + &Tensor::vec1(vec![3.0, 4.0])).map(f64::tanh);
         assert!(dag.consts.iter().any(|c| *c == want));
+    }
+
+    #[test]
+    fn neg_neg_and_reshape_identities_simplify() {
+        let mut g = Graph::new();
+        let x = g.input(&[2, 3]);
+        let n1 = g.neg(x);
+        let n2 = g.neg(n1); // = x
+        let r1 = g.reshape_of(n2, &[3, 2]);
+        let r2 = g.reshape_of(r1, &[2, 3]); // reshape chain back to x's shape
+        let out = g.sum_all(r2);
+        let dag = build_dag(&g, &[out]);
+        assert!(dag.simplified >= 3, "simplified {}", dag.simplified);
+        // the only op that must execute is the SumAll; the intermediate
+        // Reshape emitted before the chain collapsed is dead (second DCE
+        // in the lowerer drops it)
+        let prog = crate::autodiff::Program::compile(&g, &[out]);
+        assert_eq!(prog.instrs.len(), 1);
+        let mut inputs = HashMap::new();
+        inputs.insert(x, Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]));
+        assert_eq!(prog.eval_once(&inputs)[0].data(), &[21.0]);
     }
 
     #[test]

@@ -78,8 +78,15 @@ pub enum OpCode {
     ScaleBy,
     Scale(f64),
     Tanh,
+    Neg,
+    Square,
+    Sin,
+    Cos,
+    /// target shape lives in [`Instr::shape`]
+    Reshape,
     Broadcast,
     SumAll,
+    SumAxis(usize),
     MatMulNT,
     MatMul,
     Transpose,

@@ -29,14 +29,26 @@ pub enum Strategy {
 }
 
 impl Strategy {
-    /// Parse the CLI / manifest spelling.
+    /// The three strategies in display order.
+    pub const ALL: [Strategy; 3] = [Strategy::Zcs, Strategy::FuncLoop, Strategy::DataVect];
+
+    /// Parse the CLI / manifest spelling (case-insensitive).
     pub fn from_name(name: &str) -> Option<Strategy> {
-        match name {
+        match name.to_ascii_lowercase().as_str() {
             "zcs" => Some(Strategy::Zcs),
             "funcloop" => Some(Strategy::FuncLoop),
             "datavect" => Some(Strategy::DataVect),
             _ => None,
         }
+    }
+
+    /// Parse with an error message that lists the valid choices.
+    pub fn parse(name: &str) -> Result<Strategy, String> {
+        Strategy::from_name(name).ok_or_else(|| {
+            format!(
+                "unknown strategy {name:?}; valid choices (case-insensitive): zcs, funcloop, datavect"
+            )
+        })
     }
 
     pub fn name(&self) -> &'static str {
@@ -363,6 +375,21 @@ mod tests {
         let p = Tensor::new(&[m, 3], rng.normals(m * 3));
         let x = Tensor::new(&[n, 1], rng.uniforms_in(n, 0.0, 1.0));
         (net, p, x)
+    }
+
+    #[test]
+    fn strategy_parsing_is_case_insensitive_and_lists_choices() {
+        assert_eq!(Strategy::from_name("ZCS"), Some(Strategy::Zcs));
+        assert_eq!(Strategy::from_name("FuncLoop"), Some(Strategy::FuncLoop));
+        assert_eq!(Strategy::from_name("DATAVECT"), Some(Strategy::DataVect));
+        assert_eq!(Strategy::from_name("nope"), None);
+        let err = Strategy::parse("bogus").unwrap_err();
+        for choice in ["zcs", "funcloop", "datavect"] {
+            assert!(err.contains(choice), "{err}");
+        }
+        for s in Strategy::ALL {
+            assert_eq!(Strategy::parse(s.name()), Ok(s));
+        }
     }
 
     #[test]

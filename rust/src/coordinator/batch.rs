@@ -7,12 +7,13 @@
 //! byte for byte -- the Rust/Python contract is positional.
 
 use crate::config::RunConfig;
-use crate::pde::ProblemKind;
+use crate::pde::{residual::residual_for, ProblemKind};
 use crate::rng::Pcg64;
 use crate::runtime::{ArtifactMeta, HostTensor, RunArg};
-use crate::sampler::{boundary_points_2d, interior_points_2d, Edge, FunctionBank, GpSampler1d, Kernel};
+use crate::sampler::{boundary_points_2d, interior_points_2d, Edge, FunctionBank, GpSampler1d};
+use crate::solvers::KirchhoffSolver;
 use crate::tensor::Tensor;
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 /// Stateful batch generator bound to one (problem, artifact) pair.
 pub struct Batcher {
@@ -231,71 +232,250 @@ impl Batcher {
     }
 }
 
-/// Batch generator for the *native* engine (no artifacts, no PJRT): draws
-/// M sensor rows from a GP function bank and resamples N 1-D collocation
-/// points each step, plus the per-point function values the native
-/// antiderivative objective fits against.  The native counterpart of
-/// [`Batcher`], feeding compiled [`crate::autodiff::Program`]s in
+/// Sizes of one native batch (the native analogue of an artifact's
+/// `batch_schema` dimensions).
+#[derive(Clone, Copy, Debug)]
+pub struct PdeBatchSpec {
+    /// functions per batch (the paper's M)
+    pub m: usize,
+    /// interior collocation points per batch (the paper's N)
+    pub n_in: usize,
+    /// points per boundary/initial block
+    pub n_bc: usize,
+    /// branch sensors (the paper's Q)
+    pub q: usize,
+    /// GP function-bank size (ignored for Kirchhoff)
+    pub bank_size: usize,
+    /// GP bank grid resolution
+    pub bank_grid: usize,
+}
+
+/// One native batch: the sensor matrix plus the named feeds of
+/// [`crate::pde::residual::BuiltProblem::feeds`], in schema order.
+pub struct PdeBatch {
+    /// sensor matrix (M, Q): GP samples at the sensors, or Kirchhoff's
+    /// i.i.d. normal load coefficients
+    pub p: Tensor,
+    pub feeds: Vec<(String, Tensor)>,
+}
+
+/// Batch generator for the *native* engine (no artifacts, no PJRT): every
+/// step it picks a fresh function subset from the GP bank (or draws fresh
+/// Kirchhoff coefficients), resamples collocation points via `sampler/`,
+/// and interpolates whatever auxiliary fields the problem's
+/// [`crate::pde::residual::PdeResidual`] declared.  The native counterpart
+/// of [`Batcher`], feeding compiled [`crate::autodiff::Program`]s in
 /// [`crate::coordinator::native::NativeTrainer`].
-pub struct NativeBatcher {
-    bank: FunctionBank,
-    m: usize,
-    q: usize,
-    n: usize,
+pub struct PdeBatcher {
+    kind: ProblemKind,
+    spec: PdeBatchSpec,
+    /// GP input-function bank (None for Kirchhoff / coefficient problems)
+    bank: Option<FunctionBank>,
+    /// sqrt(q) sine modes per direction (Kirchhoff only)
+    kirchhoff_modes: usize,
     rng: Pcg64,
     last_functions: Vec<usize>,
+    last_coeffs: Vec<f64>,
 }
 
-/// One native batch, in `f64` [`Tensor`] form.
-pub struct NativeBatch {
-    /// sensor matrix (M, Q)
-    pub p: Tensor,
-    /// collocation points (N, 1) in [0, 1)
-    pub x: Tensor,
-    /// bank-function values at the collocation points, (M, N)
-    pub f_at_x: Tensor,
+fn col(v: &[f64]) -> Tensor {
+    Tensor::new(&[v.len(), 1], v.to_vec())
 }
 
-impl NativeBatcher {
-    pub fn new(
-        m: usize,
-        n: usize,
-        q: usize,
-        bank_size: usize,
-        bank_grid: usize,
-        rng: &mut Pcg64,
-    ) -> Result<Self> {
-        anyhow::ensure!(bank_size >= m, "bank_size {bank_size} < batch functions {m}");
-        let sampler =
-            GpSampler1d::new(Kernel::Rbf { length_scale: 0.2, variance: 1.0 }, bank_grid);
-        let bank = FunctionBank::generate(&sampler, bank_size, rng)?;
-        Ok(Self { bank, m, q, n, rng: rng.clone(), last_functions: Vec::new() })
+impl PdeBatcher {
+    pub fn new(kind: ProblemKind, spec: PdeBatchSpec, rng: &mut Pcg64) -> Result<Self> {
+        ensure!(
+            residual_for(kind).is_some(),
+            "problem {:?} has no native residual; native problems: antiderivative, \
+             reaction_diffusion, burgers, kirchhoff",
+            kind.name()
+        );
+        ensure!(spec.m >= 1 && spec.n_in >= 1 && spec.n_bc >= 1 && spec.q >= 1, "empty batch spec");
+        let bank = match kind.function_prior() {
+            Some(kernel) => {
+                ensure!(
+                    spec.bank_size >= spec.m,
+                    "bank_size {} < batch functions {}",
+                    spec.bank_size,
+                    spec.m
+                );
+                let sampler = GpSampler1d::new(kernel, spec.bank_grid);
+                Some(FunctionBank::generate(&sampler, spec.bank_size, rng)?)
+            }
+            None => None,
+        };
+        let kirchhoff_modes = if kind == ProblemKind::Kirchhoff {
+            let r = (spec.q as f64).sqrt().round() as usize;
+            ensure!(
+                r * r == spec.q,
+                "kirchhoff sensors are an R x R sine-mode grid; q = {} is not square",
+                spec.q
+            );
+            r
+        } else {
+            0
+        };
+        Ok(Self {
+            kind,
+            spec,
+            bank,
+            kirchhoff_modes,
+            rng: rng.clone(),
+            last_functions: Vec::new(),
+            last_coeffs: Vec::new(),
+        })
     }
 
-    pub fn bank(&self) -> &FunctionBank {
-        &self.bank
+    pub fn bank(&self) -> Option<&FunctionBank> {
+        self.bank.as_ref()
     }
 
     pub fn last_functions(&self) -> &[usize] {
         &self.last_functions
     }
 
-    /// Next (p, x, f(x)) batch.
-    pub fn next_batch(&mut self) -> NativeBatch {
-        self.last_functions = self.rng.choose(self.bank.len(), self.m);
-        let mut pdata = Vec::with_capacity(self.m * self.q);
-        for &fi in &self.last_functions {
-            pdata.extend(self.bank.sensors(fi, self.q));
+    pub fn last_coeffs(&self) -> &[f64] {
+        &self.last_coeffs
+    }
+
+    /// Next batch, feeds in the residual layer's registration order.
+    pub fn next_batch(&mut self) -> PdeBatch {
+        let PdeBatchSpec { m, n_in, n_bc, q, .. } = self.spec;
+        let p = match self.kind {
+            ProblemKind::Kirchhoff => {
+                self.last_coeffs = self.rng.normals(m * q);
+                Tensor::new(&[m, q], self.last_coeffs.clone())
+            }
+            _ => {
+                let bank = self.bank.as_ref().expect("problem has a function bank");
+                self.last_functions = self.rng.choose(bank.len(), m);
+                let mut data = Vec::with_capacity(m * q);
+                for &fi in &self.last_functions {
+                    data.extend(bank.sensors(fi, q));
+                }
+                Tensor::new(&[m, q], data)
+            }
+        };
+        let mut feeds: Vec<(String, Tensor)> = Vec::new();
+        match self.kind {
+            ProblemKind::Antiderivative => {
+                let xs = self.rng.uniforms_in(n_in, 0.0, 1.0);
+                feeds.push(("in.x0".into(), col(&xs)));
+                feeds.push(("in.f".into(), self.bank_rows(&xs)));
+            }
+            ProblemKind::ReactionDiffusion => {
+                let (xs, ts) = self.interior(n_in);
+                feeds.push(("in.x0".into(), col(&xs)));
+                feeds.push(("in.x1".into(), col(&ts)));
+                // the source f is time-independent: evaluate at the x column
+                feeds.push(("in.f".into(), self.bank_rows(&xs)));
+                let icx = self.rng.uniforms_in(n_bc, 0.0, 1.0);
+                feeds.push(("ic.x0".into(), col(&icx)));
+                feeds.push(("ic.x1".into(), Tensor::zeros(&[n_bc, 1])));
+                let walls: Vec<f64> = (0..n_bc).map(|i| (i % 2) as f64).collect();
+                let wt = self.rng.uniforms_in(n_bc, 0.0, 1.0);
+                feeds.push(("bc.x0".into(), col(&walls)));
+                feeds.push(("bc.x1".into(), col(&wt)));
+            }
+            ProblemKind::Burgers => {
+                let (xs, ts) = self.interior(n_in);
+                feeds.push(("in.x0".into(), col(&xs)));
+                feeds.push(("in.x1".into(), col(&ts)));
+                let icx = self.rng.uniforms_in(n_bc, 0.0, 1.0);
+                feeds.push(("ic.x0".into(), col(&icx)));
+                feeds.push(("ic.x1".into(), Tensor::zeros(&[n_bc, 1])));
+                feeds.push(("ic.u0".into(), self.bank_rows(&icx)));
+                // periodic pairs share their t coordinates
+                let tb = self.rng.uniforms_in(n_bc, 0.0, 1.0);
+                feeds.push(("left.x0".into(), Tensor::zeros(&[n_bc, 1])));
+                feeds.push(("left.x1".into(), col(&tb)));
+                feeds.push(("right.x0".into(), Tensor::full(&[n_bc, 1], 1.0)));
+                feeds.push(("right.x1".into(), col(&tb)));
+            }
+            ProblemKind::Kirchhoff => {
+                let (xs, ys) = self.interior(n_in);
+                feeds.push(("in.x0".into(), col(&xs)));
+                feeds.push(("in.x1".into(), col(&ys)));
+                feeds.push(("in.q".into(), self.kirchhoff_load(&xs, &ys)));
+                let (bx, by) = self.edge_cycle(n_bc);
+                feeds.push(("bnd.x0".into(), col(&bx)));
+                feeds.push(("bnd.x1".into(), col(&by)));
+                // moment blocks: u_xx on the x-walls, u_yy on the y-walls
+                let mxw: Vec<f64> = (0..n_bc).map(|i| (i % 2) as f64).collect();
+                let mxf = self.rng.uniforms_in(n_bc, 0.0, 1.0);
+                feeds.push(("mx.x0".into(), col(&mxw)));
+                feeds.push(("mx.x1".into(), col(&mxf)));
+                let myf = self.rng.uniforms_in(n_bc, 0.0, 1.0);
+                let myw: Vec<f64> = (0..n_bc).map(|i| (i % 2) as f64).collect();
+                feeds.push(("my.x0".into(), col(&myf)));
+                feeds.push(("my.x1".into(), col(&myw)));
+            }
+            other => unreachable!("PdeBatcher::new rejects {other:?}"),
         }
-        let p = Tensor::new(&[self.m, self.q], pdata);
-        let xs = self.rng.uniforms_in(self.n, 0.0, 1.0);
-        let mut fdata = Vec::with_capacity(self.m * self.n);
+        PdeBatch { p, feeds }
+    }
+
+    /// Interior collocation points split into per-dimension columns.
+    fn interior(&mut self, n: usize) -> (Vec<f64>, Vec<f64>) {
+        let pts = interior_points_2d(&mut self.rng, n, (0.0, 1.0), (0.0, 1.0));
+        let xs = (0..n).map(|r| pts.at2(r, 0)).collect();
+        let ts = (0..n).map(|r| pts.at2(r, 1)).collect();
+        (xs, ts)
+    }
+
+    /// Bank functions evaluated at explicit abscissae, (M, len).
+    fn bank_rows(&self, xs: &[f64]) -> Tensor {
+        let bank = self.bank.as_ref().expect("problem has a function bank");
+        let mut data = Vec::with_capacity(self.spec.m * xs.len());
         for &fi in &self.last_functions {
-            fdata.extend(self.bank.eval_many(fi, &xs));
+            data.extend(bank.eval_many(fi, xs));
         }
-        let f_at_x = Tensor::new(&[self.m, self.n], fdata);
-        let x = Tensor::new(&[self.n, 1], xs);
-        NativeBatch { p, x, f_at_x }
+        Tensor::new(&[self.spec.m, xs.len()], data)
+    }
+
+    /// The Kirchhoff load `q(x, y)` synthesised from the current
+    /// coefficient draw at the given points, (M, len).
+    fn kirchhoff_load(&self, xs: &[f64], ys: &[f64]) -> Tensor {
+        let r = self.kirchhoff_modes;
+        // rigidity never enters the load series; keep the shared constant
+        // anyway so every Kirchhoff site reads the same value
+        let rigidity = ProblemKind::Kirchhoff.constant("D_flex").expect("paper constant");
+        let solver = KirchhoffSolver { rigidity, r_modes: r, s_modes: r };
+        let pts: Vec<(f64, f64)> = xs.iter().zip(ys).map(|(&x, &y)| (x, y)).collect();
+        let mut data = Vec::with_capacity(self.spec.m * xs.len());
+        for i in 0..self.spec.m {
+            let c = &self.last_coeffs[i * self.spec.q..(i + 1) * self.spec.q];
+            data.extend(solver.source_at(c, &pts));
+        }
+        Tensor::new(&[self.spec.m, xs.len()], data)
+    }
+
+    /// Points cycling the four unit-square edges.
+    fn edge_cycle(&mut self, n: usize) -> (Vec<f64>, Vec<f64>) {
+        let mut xs = Vec::with_capacity(n);
+        let mut ys = Vec::with_capacity(n);
+        for i in 0..n {
+            let s = self.rng.uniform();
+            match i % 4 {
+                0 => {
+                    xs.push(0.0);
+                    ys.push(s);
+                }
+                1 => {
+                    xs.push(1.0);
+                    ys.push(s);
+                }
+                2 => {
+                    xs.push(s);
+                    ys.push(0.0);
+                }
+                _ => {
+                    xs.push(s);
+                    ys.push(1.0);
+                }
+            }
+        }
+        (xs, ys)
     }
 }
 
@@ -462,30 +642,111 @@ mod tests {
         }
     }
 
-    #[test]
-    fn native_batcher_shapes_and_consistency() {
-        let mut rng = Pcg64::seeded(9);
-        let (m, n, q) = (3, 12, 7);
-        let mut b = NativeBatcher::new(m, n, q, 16, 32, &mut rng).unwrap();
-        let batch = b.next_batch();
-        assert_eq!(batch.p.shape(), &[m, q]);
-        assert_eq!(batch.x.shape(), &[n, 1]);
-        assert_eq!(batch.f_at_x.shape(), &[m, n]);
-        // f_at_x row 0 is the bank eval of the chosen function at x
-        let fi = b.last_functions()[0];
-        for j in [0usize, 5, 11] {
-            let want = b.bank().eval(fi, batch.x.data()[j]);
-            assert!((batch.f_at_x.at2(0, j) - want).abs() < 1e-12);
-        }
-        // batches differ
-        let batch2 = b.next_batch();
-        assert_ne!(batch.x.data(), batch2.x.data());
+    fn spec(m: usize, n_in: usize, n_bc: usize, q: usize) -> PdeBatchSpec {
+        PdeBatchSpec { m, n_in, n_bc, q, bank_size: 16, bank_grid: 32 }
+    }
+
+    fn feed<'a>(batch: &'a PdeBatch, name: &str) -> &'a Tensor {
+        &batch.feeds.iter().find(|(n, _)| n == name).unwrap_or_else(|| panic!("{name}")).1
     }
 
     #[test]
-    fn native_batcher_rejects_small_bank() {
+    fn pde_batcher_antiderivative_shapes_and_consistency() {
+        let mut rng = Pcg64::seeded(9);
+        let (m, n, q) = (3, 12, 7);
+        let mut b =
+            PdeBatcher::new(ProblemKind::Antiderivative, spec(m, n, 4, q), &mut rng).unwrap();
+        let batch = b.next_batch();
+        assert_eq!(batch.p.shape(), &[m, q]);
+        let x = feed(&batch, "in.x0");
+        let f = feed(&batch, "in.f");
+        assert_eq!(x.shape(), &[n, 1]);
+        assert_eq!(f.shape(), &[m, n]);
+        // f row 0 is the bank eval of the chosen function at x
+        let fi = b.last_functions()[0];
+        for j in [0usize, 5, 11] {
+            let want = b.bank().unwrap().eval(fi, x.data()[j]);
+            assert!((f.at2(0, j) - want).abs() < 1e-12);
+        }
+        // batches differ
+        let batch2 = b.next_batch();
+        assert_ne!(x.data(), feed(&batch2, "in.x0").data());
+    }
+
+    #[test]
+    fn pde_batcher_rd_points_respect_the_domain() {
+        let mut rng = Pcg64::seeded(12);
+        let mut b =
+            PdeBatcher::new(ProblemKind::ReactionDiffusion, spec(2, 8, 6, 5), &mut rng).unwrap();
+        let batch = b.next_batch();
+        // IC points sit on t = 0, BC points on x in {0, 1}
+        assert!(feed(&batch, "ic.x1").data().iter().all(|&t| t == 0.0));
+        assert!(feed(&batch, "bc.x0").data().iter().all(|&x| x == 0.0 || x == 1.0));
+        // source rows are the bank functions at the interior x column
+        let xs = feed(&batch, "in.x0");
+        let f = feed(&batch, "in.f");
+        let fi = b.last_functions()[1];
+        for j in [0usize, 7] {
+            let want = b.bank().unwrap().eval(fi, xs.data()[j]);
+            assert!((f.at2(1, j) - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn pde_batcher_burgers_periodic_pairs_share_t() {
+        let mut rng = Pcg64::seeded(13);
+        let mut b = PdeBatcher::new(ProblemKind::Burgers, spec(2, 8, 6, 5), &mut rng).unwrap();
+        let batch = b.next_batch();
+        assert!(feed(&batch, "left.x0").data().iter().all(|&x| x == 0.0));
+        assert!(feed(&batch, "right.x0").data().iter().all(|&x| x == 1.0));
+        assert_eq!(feed(&batch, "left.x1").data(), feed(&batch, "right.x1").data());
+        // u0 rows equal bank evals at the IC abscissae
+        let icx = feed(&batch, "ic.x0");
+        let u0 = feed(&batch, "ic.u0");
+        let fi = b.last_functions()[0];
+        for j in 0..6 {
+            let want = b.bank().unwrap().eval(fi, icx.data()[j]);
+            assert!((u0.at2(0, j) - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn pde_batcher_kirchhoff_load_matches_the_solver_series() {
+        let mut rng = Pcg64::seeded(14);
+        let mut b = PdeBatcher::new(ProblemKind::Kirchhoff, spec(2, 6, 8, 9), &mut rng).unwrap();
+        let batch = b.next_batch();
+        assert_eq!(batch.p.shape(), &[2, 9]);
+        // load row equals the solver's source series for the same coeffs
+        let xs = feed(&batch, "in.x0");
+        let ys = feed(&batch, "in.x1");
+        let qf = feed(&batch, "in.q");
+        let solver = KirchhoffSolver { rigidity: 0.01, r_modes: 3, s_modes: 3 };
+        let want = solver.source_at(&b.last_coeffs()[..9], &[(xs.data()[2], ys.data()[2])]);
+        assert!((qf.at2(0, 2) - want[0]).abs() < 1e-12);
+        // all edge points are on an edge; moment blocks pin the right wall
+        let bx = feed(&batch, "bnd.x0");
+        let by = feed(&batch, "bnd.x1");
+        for i in 0..8 {
+            let (x, y) = (bx.data()[i], by.data()[i]);
+            assert!(x == 0.0 || x == 1.0 || y == 0.0 || y == 1.0);
+        }
+        assert!(feed(&batch, "mx.x0").data().iter().all(|&x| x == 0.0 || x == 1.0));
+        assert!(feed(&batch, "my.x1").data().iter().all(|&y| y == 0.0 || y == 1.0));
+        // fresh coefficients each batch
+        let c1 = b.last_coeffs().to_vec();
+        b.next_batch();
+        assert_ne!(c1, b.last_coeffs());
+    }
+
+    #[test]
+    fn pde_batcher_rejects_bad_specs() {
         let mut rng = Pcg64::seeded(10);
-        assert!(NativeBatcher::new(8, 4, 4, 4, 16, &mut rng).is_err());
+        // bank smaller than the batch
+        assert!(PdeBatcher::new(ProblemKind::Antiderivative, spec(20, 4, 4, 4), &mut rng).is_err());
+        // kirchhoff wants a square sensor count
+        assert!(PdeBatcher::new(ProblemKind::Kirchhoff, spec(2, 4, 4, 8), &mut rng).is_err());
+        // stokes has no native residual yet
+        assert!(PdeBatcher::new(ProblemKind::Stokes, spec(2, 4, 4, 4), &mut rng).is_err());
     }
 
     #[test]

@@ -14,7 +14,10 @@
 //! * [`checkpoint`] -- binary save/load of the flat parameter tuple;
 //! * [`native`]     -- an artifact-free training loop driving *compiled*
 //!   native autodiff programs (see [`crate::autodiff::program`]) through
-//!   the same compile-once/run-many shape as the PJRT path.
+//!   the same compile-once/run-many shape as the PJRT path; the physics
+//!   comes from the native residual layer ([`crate::pde::residual`]), so
+//!   it trains the real case studies (reaction-diffusion, Burgers,
+//!   Kirchhoff) as well as the antiderivative toy.
 
 pub mod batch;
 pub mod checkpoint;

@@ -1,41 +1,55 @@
 //! Native training loop: compiled [`Program`]s executed inside the train
 //! loop, no artifacts or PJRT anywhere.
 //!
-//! The workload is the canonical operator-learning benchmark: learn the
-//! *antiderivative* operator.  A miniature DeepONet `u_ij = branch(p_i) .
-//! trunk(x_j)` is trained so that its coordinate derivative matches the
-//! input function, `du_i/dx (x_j) = f_i(x_j)` -- a physics-informed loss
-//! whose residual is itself a derivative, so the loss gradient w.r.t. the
-//! weights differentiates *through* the chosen AD strategy (eq. 4 FuncLoop,
-//! eq. 5 DataVect, or the eq. 10 ZCS z-chain), exactly like the paper's
-//! PDE losses.
+//! The physics comes from the native residual layer
+//! ([`crate::pde::residual`]): `zcs ntrain --problem <name>` trains any
+//! problem with an implemented [`PdeResidual`] -- the antiderivative toy,
+//! reaction-diffusion, Burgers, and the fourth-order Kirchhoff-Love plate
+//! -- under any of the paper's three AD strategies (eq. 4 FuncLoop, eq. 5
+//! DataVect, or the eq. 10 ZCS z-chain).  The loss gradient w.r.t. the
+//! weights differentiates *through* the chosen strategy, exactly like the
+//! paper's PDE losses.
 //!
-//! The entire step -- forward, strategy derivative, residual, weight
-//! gradients -- is built as one [`Graph`], lowered **once** by
-//! [`Program::compile`], and then executed every step by a persistent
-//! [`Executor`] (compile-once / run-many).  [`NativeReport`] carries the
-//! same staged timings as the PJRT [`super::TrainReport`], plus the
-//! compiler's [`ProgramReport`], so `zcs ntrain` and the benches can put
-//! interpreted vs compiled and strategy vs strategy numbers side by side.
+//! The entire step -- forward, strategy derivatives, residual + boundary
+//! losses, weight gradients -- is built as one [`Graph`], lowered **once**
+//! by [`Program::compile`], and then executed every step by a persistent
+//! [`Executor`] (compile-once / run-many).  Batches come from
+//! [`PdeBatcher`], matched to the residual layer's feed schema by name.
+//! [`NativeReport`] carries the same staged timings as the PJRT
+//! [`super::TrainReport`], plus the compiler's [`ProgramReport`], so
+//! `zcs ntrain` and the benches can put strategy-vs-strategy and
+//! per-problem numbers side by side; [`NativeTrainer::validate`] closes
+//! the loop against the independent reference solvers in
+//! [`crate::solvers`].
+//!
+//! [`PdeResidual`]: crate::pde::residual::PdeResidual
+//! [`Graph`]: crate::autodiff::Graph
 
 use crate::autodiff::zcs_demo::Strategy;
-use crate::autodiff::{Executor, Graph, NodeId, Program};
-use crate::coordinator::batch::{NativeBatch, NativeBatcher};
+use crate::autodiff::{Executor, NodeId, Program};
+use crate::coordinator::batch::{PdeBatch, PdeBatchSpec, PdeBatcher};
 use crate::hlostats::{analyze_program, ProgramReport};
+use crate::pde::residual::{build_forward, build_training_problem, BlockSizes, NetDims};
+use crate::pde::ProblemKind;
 use crate::rng::Pcg64;
+use crate::sampler::{FunctionBank, GpSampler1d};
+use crate::solvers::{BurgersSolver, KirchhoffSolver, ReactionDiffusionSolver};
 use crate::tensor::Tensor;
-use anyhow::{bail, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
 /// Configuration of a native training run.
 #[derive(Clone, Debug)]
 pub struct NativeRunConfig {
+    pub problem: ProblemKind,
     pub strategy: Strategy,
     /// functions per batch (the paper's M)
     pub m: usize,
-    /// collocation points per batch (the paper's N)
+    /// interior collocation points per batch (the paper's N)
     pub n: usize,
+    /// points per boundary/initial block
+    pub n_bc: usize,
     /// branch sensors (the paper's Q)
     pub q: usize,
     /// hidden width of both MLPs
@@ -53,9 +67,11 @@ pub struct NativeRunConfig {
 impl Default for NativeRunConfig {
     fn default() -> Self {
         Self {
+            problem: ProblemKind::Antiderivative,
             strategy: Strategy::Zcs,
             m: 4,
             n: 16,
+            n_bc: 8,
             q: 8,
             hidden: 16,
             k: 8,
@@ -69,10 +85,31 @@ impl Default for NativeRunConfig {
     }
 }
 
+impl NativeRunConfig {
+    /// A problem-appropriate learning rate (the Kirchhoff load keeps its
+    /// loss orders of magnitude above the others, so SGD needs a smaller
+    /// step there).
+    pub fn default_lr(problem: ProblemKind) -> f64 {
+        match problem {
+            ProblemKind::Kirchhoff => 2e-3,
+            _ => 1e-2,
+        }
+    }
+}
+
+/// One logged point of the native loss curve.
+#[derive(Clone, Copy, Debug)]
+pub struct NativePoint {
+    pub step: usize,
+    pub loss: f64,
+    pub loss_pde: f64,
+    pub loss_bc: f64,
+}
+
 /// Outcome of a native run.
 #[derive(Clone, Debug)]
 pub struct NativeReport {
-    pub curve: Vec<(usize, f64)>,
+    pub curve: Vec<NativePoint>,
     pub final_loss: f64,
     pub steps: usize,
     /// batch generation time (the paper's "Inputs" stage)
@@ -95,20 +132,29 @@ impl NativeReport {
     }
 }
 
+/// Relative-L2 validation of the trained operator on held-out inputs.
+#[derive(Clone, Copy, Debug)]
+pub struct NativeValidation {
+    pub rel_l2: f64,
+    pub n_functions: usize,
+    pub n_points: usize,
+}
+
 /// The native training orchestrator: one compiled step program + a
 /// persistent executor + host-side SGD.
 pub struct NativeTrainer {
     pub config: NativeRunConfig,
     program: Program,
     exec: Executor,
-    batcher: NativeBatcher,
-    /// wb (q,h), wb2 (h,k), wt (1,h), wt2 (h,k)
+    batcher: PdeBatcher,
+    /// wb (q,h), wb2 (h,k), wt (d,h), wt2 (h,k)
     weights: Vec<Tensor>,
     weight_ids: Vec<NodeId>,
     p_id: NodeId,
-    x_id: NodeId,
-    target_id: NodeId,
+    /// named batch feeds, in the residual layer's schema order
+    feeds: Vec<(String, NodeId)>,
     extra_inputs: Vec<(NodeId, Tensor)>,
+    coord_dim: usize,
     compile_time: Duration,
 }
 
@@ -116,28 +162,41 @@ impl NativeTrainer {
     pub fn new(config: NativeRunConfig) -> Result<Self> {
         ensure!(config.m >= 1 && config.n >= 1 && config.q >= 1, "empty problem");
         let t0 = Instant::now();
-        let build = build_step_graph(&config);
-        let program = Program::compile(&build.graph, &build.outputs);
+        let built = build_training_problem(
+            config.problem,
+            config.strategy,
+            config.m,
+            config.q,
+            config.hidden,
+            config.k,
+            BlockSizes { n_in: config.n, n_bc: config.n_bc },
+        )?;
+        let program = Program::compile(&built.graph, &built.outputs);
         let compile_time = t0.elapsed();
 
+        // weight init: same draw order (wb, wb2, wt, wt2) and scaling as
+        // the original antiderivative trainer
         let mut init_rng = Pcg64::new(config.seed, 2);
-        let (q, h, k) = (config.q, config.hidden, config.k);
-        let mk = |r: usize, c: usize, rng: &mut Pcg64| {
-            Tensor::new(&[r, c], rng.normals(r * c)).scale(1.0 / (r as f64).sqrt())
-        };
-        let weights = vec![
-            mk(q, h, &mut init_rng),
-            mk(h, k, &mut init_rng),
-            mk(1, h, &mut init_rng),
-            mk(h, k, &mut init_rng),
-        ];
+        let weights: Vec<Tensor> = built
+            .weight_ids
+            .iter()
+            .map(|&id| {
+                let shape = built.graph.shape(id).to_vec();
+                let n: usize = shape.iter().product();
+                Tensor::new(&shape, init_rng.normals(n)).scale(1.0 / (shape[0] as f64).sqrt())
+            })
+            .collect();
         let mut batch_rng = Pcg64::new(config.seed, 1);
-        let batcher = NativeBatcher::new(
-            config.m,
-            config.n,
-            config.q,
-            config.bank_size,
-            config.bank_grid,
+        let batcher = PdeBatcher::new(
+            config.problem,
+            PdeBatchSpec {
+                m: config.m,
+                n_in: config.n,
+                n_bc: config.n_bc,
+                q: config.q,
+                bank_size: config.bank_size,
+                bank_grid: config.bank_grid,
+            },
             &mut batch_rng,
         )?;
         Ok(Self {
@@ -146,11 +205,11 @@ impl NativeTrainer {
             exec: Executor::new(),
             batcher,
             weights,
-            weight_ids: build.weight_ids,
-            p_id: build.p,
-            x_id: build.x,
-            target_id: build.target,
-            extra_inputs: build.extra_inputs,
+            weight_ids: built.weight_ids,
+            p_id: built.p,
+            feeds: built.feeds,
+            extra_inputs: built.extra_inputs,
+            coord_dim: built.coord_dim,
             compile_time,
         })
     }
@@ -160,39 +219,64 @@ impl NativeTrainer {
         analyze_program(&self.program)
     }
 
+    /// Graph build + compile time (paid once at construction).
+    pub fn compile_time(&self) -> Duration {
+        self.compile_time
+    }
+
     /// Current weights (wb, wb2, wt, wt2).
     pub fn weights(&self) -> &[Tensor] {
         &self.weights
     }
 
-    /// One SGD step on one batch; returns the loss.
-    pub fn step(&mut self, batch: &NativeBatch) -> Result<f64> {
-        // only DataVect needs an owned (re-laid-out) target; everything
-        // else is fed by reference -- no tensor clones in the hot loop
-        let target_owned = match self.config.strategy {
-            Strategy::DataVect => Some(reshape_target(&batch.f_at_x, Strategy::DataVect)),
-            _ => None,
-        };
-        let target: &Tensor = target_owned.as_ref().unwrap_or(&batch.f_at_x);
+    /// Draw the next batch from the trainer's own batcher (exposed so
+    /// benches and tests can freeze a batch without re-building a second
+    /// batcher from a hand-copied spec).
+    pub fn next_batch(&mut self) -> PdeBatch {
+        self.batcher.next_batch()
+    }
+
+    /// One SGD step on one batch; returns (loss, loss_pde, loss_bc).
+    pub fn step(&mut self, batch: &PdeBatch) -> Result<(f64, f64, f64)> {
+        ensure!(
+            batch.feeds.len() == self.feeds.len(),
+            "batch has {} feeds, the step program wants {}",
+            batch.feeds.len(),
+            self.feeds.len()
+        );
         let mut inputs: HashMap<NodeId, &Tensor> = HashMap::new();
         for (id, w) in self.weight_ids.iter().zip(&self.weights) {
             inputs.insert(*id, w);
         }
         inputs.insert(self.p_id, &batch.p);
-        inputs.insert(self.x_id, &batch.x);
-        inputs.insert(self.target_id, target);
+        for (i, (name, node)) in self.feeds.iter().enumerate() {
+            // batches arrive in registration order: positional fast path,
+            // name search only if a producer reordered its feeds
+            let t = match batch.feeds.get(i) {
+                Some((n, t)) if n == name => t,
+                _ => batch
+                    .feeds
+                    .iter()
+                    .find(|(n, _)| n == name)
+                    .map(|(_, t)| t)
+                    .ok_or_else(|| anyhow!("batch is missing feed {name:?}"))?,
+            };
+            inputs.insert(*node, t);
+        }
         for (id, t) in &self.extra_inputs {
             inputs.insert(*id, t);
         }
         let outs = self.exec.run_ref(&self.program, &inputs);
         let loss = outs[0].data()[0];
+        let loss_pde = outs[1].data()[0];
+        let loss_bc = outs[2].data()[0];
         if !loss.is_finite() {
             bail!("native loss diverged: {loss}");
         }
-        for (w, gw) in self.weights.iter_mut().zip(outs.into_iter().skip(1)) {
+        for (w, gw) in self.weights.iter_mut().zip(outs.into_iter().skip(3)) {
             *w = &*w - &gw.scale(self.config.lr);
         }
-        Ok(loss)
+        Ok((loss, loss_pde, loss_bc))
     }
 
     /// Run the configured number of steps.
@@ -200,7 +284,7 @@ impl NativeTrainer {
         let mut curve = Vec::new();
         let mut input_time = Duration::ZERO;
         let mut step_time = Duration::ZERO;
-        let mut last = f64::NAN;
+        let mut last = (f64::NAN, f64::NAN, f64::NAN);
         for it in 0..self.config.steps {
             let t0 = Instant::now();
             let batch = self.batcher.next_batch();
@@ -209,12 +293,17 @@ impl NativeTrainer {
             last = self.step(&batch)?;
             step_time += t1.elapsed();
             if (it + 1) % self.config.log_every.max(1) == 0 || it + 1 == self.config.steps {
-                curve.push((it + 1, last));
+                curve.push(NativePoint {
+                    step: it + 1,
+                    loss: last.0,
+                    loss_pde: last.1,
+                    loss_bc: last.2,
+                });
             }
         }
         Ok(NativeReport {
             curve,
-            final_loss: last,
+            final_loss: last.0,
             steps: self.config.steps,
             input_time,
             step_time,
@@ -222,142 +311,94 @@ impl NativeTrainer {
             program: self.program_report(),
         })
     }
-}
 
-/// The (m, n) target in the layout the strategy's residual expects.
-fn reshape_target(f_at_x: &Tensor, strategy: Strategy) -> Tensor {
-    match strategy {
-        // DataVect residuals are tiled rows: (m*n, 1), same row-major data
-        Strategy::DataVect => {
-            let (m, n) = (f_at_x.shape()[0], f_at_x.shape()[1]);
-            f_at_x.clone().reshape(&[m * n, 1])
-        }
-        _ => f_at_x.clone(),
-    }
-}
-
-/// Everything the trainer needs to feed the compiled step program.
-struct StepGraph {
-    graph: Graph,
-    /// [loss, d loss/d wb, d loss/d wb2, d loss/d wt, d loss/d wt2]
-    outputs: Vec<NodeId>,
-    weight_ids: Vec<NodeId>,
-    p: NodeId,
-    x: NodeId,
-    target: NodeId,
-    extra_inputs: Vec<(NodeId, Tensor)>,
-}
-
-/// Build the full training-step graph: forward, strategy derivative,
-/// residual vs target, weight gradients.
-fn build_step_graph(config: &NativeRunConfig) -> StepGraph {
-    let (m, n, q, h, k) = (config.m, config.n, config.q, config.hidden, config.k);
-    let mut g = Graph::new();
-    let wb = g.input(&[q, h]);
-    let wb2 = g.input(&[h, k]);
-    let wt = g.input(&[1, h]);
-    let wt2 = g.input(&[h, k]);
-    let p = g.input(&[m, q]);
-    let x = g.input(&[n, 1]);
-
-    let branch = |g: &mut Graph, pin: NodeId| {
-        let hb = g.matmul(pin, wb);
-        let ab = g.tanh(hb);
-        g.matmul(ab, wb2)
-    };
-    let trunk = |g: &mut Graph, xin: NodeId| {
-        let ht = g.matmul(xin, wt);
-        let at = g.tanh(ht);
-        g.matmul(at, wt2)
-    };
-    let norm = 1.0 / (m * n) as f64;
-
-    let mut extra_inputs: Vec<(NodeId, Tensor)> = Vec::new();
-    let (target, loss) = match config.strategy {
-        Strategy::Zcs => {
-            let target = g.input(&[m, n]);
-            // eq. (6) shift + eq. (9) dummy summation + eq. (10) z-chain
-            let z = g.input(&[]);
-            let zb = g.broadcast(z, &[n, 1]);
-            let xz = g.add(x, zb);
-            let b = branch(&mut g, p);
-            let t = trunk(&mut g, xz);
-            let u = g.matmul_nt(b, t); // (m, n)
-            let a = g.input(&[m, n]);
-            let au = g.mul(a, u);
-            let omega = g.sum_all(au);
-            let dz = g.grad(omega, &[z])[0];
-            let du = g.grad(dz, &[a])[0]; // (m, n) = du_ij/dx_j
-            let r = g.sub(du, target);
-            let r2 = g.mul(r, r);
-            let sum = g.sum_all(r2);
-            let loss = g.scale(sum, norm);
-            extra_inputs.push((z, Tensor::new(&[], vec![0.0])));
-            extra_inputs.push((a, Tensor::full(&[m, n], 1.0)));
-            (target, loss)
-        }
-        Strategy::FuncLoop => {
-            let target = g.input(&[m, n]);
-            let b = branch(&mut g, p);
-            let t = trunk(&mut g, x);
-            let u = g.matmul_nt(b, t); // (m, n)
-            // eq. (4): one reverse pass per function
-            let mut acc: Option<NodeId> = None;
-            for i in 0..m {
-                let mut e = Tensor::zeros(&[1, m]);
-                e.data_mut()[i] = 1.0;
-                let ei = g.constant(e);
-                let row = g.matmul(ei, u); // (1, n)
-                let root = g.sum_all(row);
-                let dx = g.grad(root, &[x])[0]; // (n, 1)
-                let dxt = g.transpose_of(dx); // (1, n)
-                let trow = g.matmul(ei, target); // (1, n)
-                let r = g.sub(dxt, trow);
-                let r2 = g.mul(r, r);
-                let li = g.sum_all(r2);
-                acc = Some(match acc {
-                    Some(prev) => g.add(prev, li),
-                    None => li,
-                });
+    /// Validate the trained operator against the problem's reference
+    /// solver on `n_heldout` freshly sampled input functions (never seen
+    /// by the training bank).  Returns `None` for problems without a
+    /// native reference (the antiderivative is defined only up to a
+    /// constant, so it has no pointwise truth).
+    pub fn validate(&self, n_heldout: usize) -> Result<Option<NativeValidation>> {
+        ensure!(n_heldout >= 1, "validation wants at least one function");
+        let kind = self.config.problem;
+        let q = self.config.q;
+        // interior evaluation grid (strictly inside the domain)
+        let g = 9usize;
+        let mut pts = Vec::with_capacity(g * g);
+        for i in 1..=g {
+            for j in 1..=g {
+                pts.push((i as f64 / (g + 1) as f64, j as f64 / (g + 1) as f64));
             }
-            let loss = g.scale(acc.expect("m >= 1"), norm);
-            (target, loss)
         }
-        Strategy::DataVect => {
-            // eq. (5): tiled pointwise rows; the target arrives pre-tiled
-            let target = g.input(&[m * n, 1]);
-            let mut rp = Tensor::zeros(&[m * n, m]);
-            let mut rx = Tensor::zeros(&[m * n, n]);
-            for i in 0..m {
-                for j in 0..n {
-                    rp.data_mut()[(i * n + j) * m + i] = 1.0;
-                    rx.data_mut()[(i * n + j) * n + j] = 1.0;
+        let mut rng = Pcg64::new(self.config.seed ^ 0x5eed_cafe, 77);
+        let mut pdata: Vec<f64> = Vec::with_capacity(n_heldout * q);
+        let mut tdata: Vec<f64> = Vec::with_capacity(n_heldout * pts.len());
+        match kind {
+            ProblemKind::ReactionDiffusion => {
+                let solver = ReactionDiffusionSolver::default();
+                let prior = kind.function_prior().expect("rd has a GP prior");
+                let sampler = GpSampler1d::new(prior, solver.nx);
+                let bank = FunctionBank::generate(&sampler, n_heldout, &mut rng)?;
+                for fi in 0..n_heldout {
+                    pdata.extend(bank.sensors(fi, q));
+                    tdata.extend(solver.solve_at(bank.values(fi), &pts));
                 }
             }
-            let rp = g.constant(rp);
-            let rx = g.constant(rx);
-            let ph = g.matmul(rp, p); // (mn, q)
-            let xh = g.matmul(rx, x); // (mn, 1)
-            let b = branch(&mut g, ph); // (mn, k)
-            let t = trunk(&mut g, xh); // (mn, k)
-            let bt = g.mul(b, t);
-            let ones = g.constant(Tensor::full(&[k, 1], 1.0));
-            let u_rows = g.matmul(bt, ones); // (mn, 1)
-            let root = g.sum_all(u_rows);
-            let dxh = g.grad(root, &[xh])[0]; // (mn, 1)
-            let r = g.sub(dxh, target);
-            let r2 = g.mul(r, r);
-            let sum = g.sum_all(r2);
-            let loss = g.scale(sum, norm);
-            (target, loss)
+            ProblemKind::Burgers => {
+                let solver = BurgersSolver { nx: 128, ..Default::default() };
+                let prior = kind.function_prior().expect("burgers has a GP prior");
+                let sampler = GpSampler1d::new(prior, solver.nx);
+                let bank = FunctionBank::generate(&sampler, n_heldout, &mut rng)?;
+                // the solver grid is periodic: x_i = i / nx, no endpoint
+                let xs: Vec<f64> =
+                    (0..solver.nx).map(|i| i as f64 / solver.nx as f64).collect();
+                for fi in 0..n_heldout {
+                    pdata.extend(bank.sensors(fi, q));
+                    let u0 = bank.eval_many(fi, &xs);
+                    tdata.extend(solver.solve_at(&u0, &pts));
+                }
+            }
+            ProblemKind::Kirchhoff => {
+                let r = (q as f64).sqrt().round() as usize;
+                ensure!(r * r == q, "kirchhoff sensors must be a square mode count");
+                let rigidity = kind.constant("D_flex").expect("paper constant D_flex");
+                let solver = KirchhoffSolver { rigidity, r_modes: r, s_modes: r };
+                for _ in 0..n_heldout {
+                    let c = rng.normals(q);
+                    tdata.extend(solver.solve_at(&c, &pts));
+                    pdata.extend(c);
+                }
+            }
+            _ => return Ok(None),
         }
-    };
+        let p_rows = Tensor::new(&[n_heldout, q], pdata);
+        let truth = Tensor::new(&[n_heldout, pts.len()], tdata);
 
-    let weight_ids = vec![wb, wb2, wt, wt2];
-    let grads = g.grad(loss, &weight_ids);
-    let mut outputs = vec![loss];
-    outputs.extend(grads);
-    StepGraph { graph: g, outputs, weight_ids, p, x, target, extra_inputs }
+        // predicted field from the trained weights (plain forward)
+        let dims = NetDims {
+            q,
+            hidden: self.config.hidden,
+            k: self.config.k,
+            coord_dim: self.coord_dim,
+        };
+        let fg = build_forward(n_heldout, dims, pts.len());
+        let mut inputs: HashMap<NodeId, Tensor> = HashMap::new();
+        for (id, w) in fg.weight_ids.iter().zip(&self.weights) {
+            inputs.insert(*id, w.clone());
+        }
+        inputs.insert(fg.p, p_rows);
+        for (c, &node) in fg.coords.iter().enumerate() {
+            let column: Vec<f64> =
+                pts.iter().map(|pt| if c == 0 { pt.0 } else { pt.1 }).collect();
+            inputs.insert(node, Tensor::new(&[pts.len(), 1], column));
+        }
+        let prog = Program::compile(&fg.graph, &[fg.u]);
+        let pred = prog.eval_once(&inputs).swap_remove(0);
+        Ok(Some(NativeValidation {
+            rel_l2: pred.rel_l2_error(&truth),
+            n_functions: n_heldout,
+            n_points: pts.len(),
+        }))
+    }
 }
 
 #[cfg(test)]
@@ -366,9 +407,11 @@ mod tests {
 
     fn tiny(strategy: Strategy) -> NativeRunConfig {
         NativeRunConfig {
+            problem: ProblemKind::Antiderivative,
             strategy,
             m: 2,
             n: 6,
+            n_bc: 4,
             q: 5,
             hidden: 8,
             k: 4,
@@ -388,32 +431,40 @@ mod tests {
         assert_eq!(report.steps, 40);
         assert!(report.final_loss.is_finite());
         // robust to batch noise: average the first vs the last 5 points
-        let losses: Vec<f64> = report.curve.iter().map(|&(_, l)| l).collect();
+        let losses: Vec<f64> = report.curve.iter().map(|p| p.loss).collect();
         let head: f64 = losses[..5].iter().sum::<f64>() / 5.0;
         let tail: f64 = losses[losses.len() - 5..].iter().sum::<f64>() / 5.0;
         assert!(tail < head, "loss did not trend down: {head:.4} -> {tail:.4}");
         // the step program was compiled, not interpreted
         assert!(report.program.stats.instructions > 0);
         assert!(report.program.stats.instructions < report.program.stats.graph_nodes);
+        // the antiderivative has no boundary term
+        assert!(report.curve.iter().all(|p| p.loss_bc == 0.0));
     }
 
     #[test]
     fn strategies_share_the_loss_trajectory() {
         // same seed => same batches => identical math, so the three
         // strategies must produce (numerically) the same loss sequence
-        let losses: Vec<Vec<f64>> = [Strategy::Zcs, Strategy::FuncLoop, Strategy::DataVect]
-            .iter()
-            .map(|&s| {
-                let mut cfg = tiny(s);
-                cfg.steps = 3;
-                let mut tr = NativeTrainer::new(cfg).unwrap();
-                let rep = tr.run().unwrap();
-                rep.curve.iter().map(|&(_, l)| l).collect()
-            })
-            .collect();
-        for other in &losses[1..] {
-            for (a, b) in losses[0].iter().zip(other) {
-                assert!((a - b).abs() <= 1e-8 * (1.0 + a.abs()), "{a} vs {b}");
+        for problem in [ProblemKind::Antiderivative, ProblemKind::ReactionDiffusion] {
+            let losses: Vec<Vec<f64>> = Strategy::ALL
+                .iter()
+                .map(|&s| {
+                    let mut cfg = tiny(s);
+                    cfg.problem = problem;
+                    cfg.steps = 3;
+                    let mut tr = NativeTrainer::new(cfg).unwrap();
+                    let rep = tr.run().unwrap();
+                    rep.curve.iter().map(|p| p.loss).collect()
+                })
+                .collect();
+            for other in &losses[1..] {
+                for (a, b) in losses[0].iter().zip(other) {
+                    assert!(
+                        (a - b).abs() <= 1e-8 * (1.0 + a.abs()),
+                        "{problem:?}: {a} vs {b}"
+                    );
+                }
             }
         }
     }
@@ -425,20 +476,20 @@ mod tests {
         let mut trainer = NativeTrainer::new(cfg).unwrap();
         let batch = trainer.batcher.next_batch();
 
-        // analytic gradient from the compiled program
-        let target = reshape_target(&batch.f_at_x, trainer.config.strategy);
         let mut inputs: HashMap<NodeId, Tensor> = HashMap::new();
         for (id, w) in trainer.weight_ids.iter().zip(&trainer.weights) {
             inputs.insert(*id, w.clone());
         }
         inputs.insert(trainer.p_id, batch.p.clone());
-        inputs.insert(trainer.x_id, batch.x.clone());
-        inputs.insert(trainer.target_id, target);
+        for (name, node) in &trainer.feeds {
+            let t = batch.feeds.iter().find(|(n, _)| n == name).unwrap().1.clone();
+            inputs.insert(*node, t);
+        }
         for (id, t) in &trainer.extra_inputs {
             inputs.insert(*id, t.clone());
         }
         let outs = trainer.exec.run(&trainer.program, &inputs);
-        let analytic = outs[2].data()[0]; // d loss / d wb2, first entry
+        let analytic = outs[4].data()[0]; // d loss / d wb2, first entry
 
         let h = 1e-6;
         let mut loss_at = |delta: f64| -> f64 {
@@ -453,5 +504,11 @@ mod tests {
             (analytic - fd).abs() < 1e-5 * (1.0 + analytic.abs()),
             "{analytic} vs {fd}"
         );
+    }
+
+    #[test]
+    fn per_problem_default_lr_is_sane() {
+        assert_eq!(NativeRunConfig::default_lr(ProblemKind::Burgers), 1e-2);
+        assert!(NativeRunConfig::default_lr(ProblemKind::Kirchhoff) < 1e-2);
     }
 }

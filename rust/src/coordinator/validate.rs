@@ -27,8 +27,9 @@ pub fn validate(
     params: &[HostTensor],
     batcher: &mut Batcher,
 ) -> Result<Vec<f64>> {
-    if matches!(kind, ProblemKind::HighOrder(_)) {
-        return Ok(Vec::new()); // pure scaling benchmark, no solution to test
+    if matches!(kind, ProblemKind::HighOrder(_) | ProblemKind::Antiderivative) {
+        // pure scaling benchmark / native-only toy: no artifact truth to test
+        return Ok(Vec::new());
     }
     let g = GRID_SIDE * GRID_SIDE;
     let fwd_name = format!("{}__forward_G{}", kind.name(), g);
@@ -103,7 +104,7 @@ pub fn validate(
             }
             (p, truth)
         }
-        ProblemKind::HighOrder(_) => unreachable!(),
+        ProblemKind::HighOrder(_) | ProblemKind::Antiderivative => unreachable!(),
     };
 
     // forward pass through the trained operator

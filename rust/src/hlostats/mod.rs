@@ -128,8 +128,15 @@ pub fn analyze_program(program: &crate::autodiff::Program) -> ProgramReport {
             OpCode::ScaleBy => "scale-by",
             OpCode::Scale(_) => "scale",
             OpCode::Tanh => "tanh",
+            OpCode::Neg => "negate",
+            OpCode::Square => "square",
+            OpCode::Sin => "sine",
+            OpCode::Cos => "cosine",
+            OpCode::Reshape => "reshape",
             OpCode::Broadcast => "broadcast",
             OpCode::SumAll => "reduce-sum",
+            OpCode::SumAxis(0) => "reduce-sum-cols",
+            OpCode::SumAxis(_) => "reduce-sum-rows",
             OpCode::MatMulNT => "dot-nt",
             OpCode::MatMul => "dot",
             OpCode::Transpose => "transpose",

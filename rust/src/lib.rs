@@ -17,6 +17,10 @@
 //! A native tape-based autodiff engine ([`autodiff`]) additionally
 //! demonstrates the ZCS graph-size claim without any XLA involvement and
 //! hosts the property tests of the paper's eqs. (7), (11) and (12).
+//! Since the native residual layer landed ([`pde::residual`]), the
+//! case-study physics itself (reaction-diffusion, Burgers, Kirchhoff)
+//! builds and trains natively too — `zcs ntrain --problem ...` — with the
+//! Python HLO artifacts kept as a legacy record of the XLA lowering.
 
 pub mod autodiff;
 pub mod config;

@@ -44,8 +44,9 @@ fn dispatch(args: &[String]) -> Result<()> {
                 "zcs -- Zero Coordinate Shift reproduction (rust + jax + pallas)\n\n\
                  commands:\n\
                  \x20 train    train a physics-informed DeepONet from AOT artifacts\n\
-                 \x20 ntrain   train the native antiderivative operator on the\n\
-                 \x20          in-process AD engine (compiled programs, no artifacts)\n\
+                 \x20 ntrain   train a native operator (antiderivative, reaction_diffusion,\n\
+                 \x20          burgers, kirchhoff) on the in-process AD engine\n\
+                 \x20          (compiled programs, no artifacts)\n\
                  \x20 config   train from a TOML config file\n\
                  \x20 stats    graph-memory statistics (HLO artifacts, or\n\
                  \x20          --native for compiled tape programs)\n\
@@ -64,45 +65,75 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
     use zcs::autodiff::Strategy;
     use zcs::coordinator::native::{NativeRunConfig, NativeTrainer};
     let opts = Opts::new("zcs ntrain", "native compiled-program training (no artifacts)")
-        .opt("strategy", "zcs", "zcs | funcloop | datavect")
+        .opt(
+            "problem",
+            "antiderivative",
+            "antiderivative | reaction_diffusion | burgers | kirchhoff (case-insensitive)",
+        )
+        .opt("strategy", "zcs", "zcs | funcloop | datavect (case-insensitive)")
         .opt("m", "4", "functions per batch (paper M)")
-        .opt("n", "16", "collocation points per batch (paper N)")
-        .opt("q", "8", "branch sensors (paper Q)")
+        .opt("n", "16", "interior collocation points per batch (paper N)")
+        .opt("n-bc", "8", "points per boundary/initial block")
+        .opt("q", "auto", "branch sensors (paper Q); auto = 8, or 9 for kirchhoff (R x R modes)")
         .opt("hidden", "16", "MLP hidden width")
         .opt("k", "8", "DeepONet latent dimension")
         .opt("steps", "200", "training steps")
-        .opt("lr", "0.01", "SGD learning rate")
+        .opt("lr", "auto", "SGD learning rate (auto = per-problem default)")
         .opt("seed", "20230923", "RNG seed")
         .opt("bank-size", "64", "GP function-bank size")
         .opt("log-every", "20", "loss-curve logging interval")
+        .opt("heldout", "4", "held-out input functions for --validate")
+        .switch("validate", "rel-L2 error vs the reference solver after training")
         .switch("help", "show usage");
     let p = opts.parse(args)?;
     if p.switch("help") {
         print!("{}", opts.usage());
         return Ok(());
     }
-    let strategy = Strategy::from_name(p.get("strategy"))
-        .ok_or_else(|| anyhow!("unknown strategy {:?}", p.get("strategy")))?;
+    let strategy = Strategy::parse(p.get("strategy")).map_err(|e| anyhow!(e))?;
+    let problem = ProblemKind::parse(p.get("problem")).map_err(|e| anyhow!(e))?;
+    let lr = match p.get("lr") {
+        "auto" => NativeRunConfig::default_lr(problem),
+        other => other
+            .parse()
+            .map_err(|e| anyhow!("invalid value {other:?} for --lr: {e}"))?,
+    };
+    let q = match p.get("q") {
+        "auto" => {
+            if problem == ProblemKind::Kirchhoff {
+                9
+            } else {
+                8
+            }
+        }
+        other => other
+            .parse()
+            .map_err(|e| anyhow!("invalid value {other:?} for --q: {e}"))?,
+    };
     let config = NativeRunConfig {
+        problem,
         strategy,
         m: p.get_usize("m")?,
         n: p.get_usize("n")?,
-        q: p.get_usize("q")?,
+        n_bc: p.get_usize("n-bc")?,
+        q,
         hidden: p.get_usize("hidden")?,
         k: p.get_usize("k")?,
         steps: p.get_usize("steps")?,
-        lr: p.get_f64("lr")?,
+        lr,
         seed: p.get_u64("seed")?,
         bank_size: p.get_usize("bank-size")?,
         log_every: p.get_usize("log-every")?.max(1),
         ..NativeRunConfig::default()
     };
     println!(
-        "native training: antiderivative operator under {} (M={} N={} Q={}, {} steps)",
+        "native training: {} under {} (M={} N={} Q={}, lr={}, {} steps)",
+        problem.name(),
         strategy.name(),
         config.m,
         config.n,
         config.q,
+        config.lr,
         config.steps
     );
     let mut trainer = NativeTrainer::new(config)?;
@@ -120,8 +151,11 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
         prog.stats.peak_live_bytes as f64 / 1024.0
     );
     println!("compiled in {:.2?}\n\nloss curve:", report.compile_time);
-    for (step, loss) in &report.curve {
-        println!("  step {step:>6}  loss {loss:>12.6e}");
+    for pt in &report.curve {
+        println!(
+            "  step {:>6}  loss {:>12.6e}  pde {:>12.6e}  ic+bc {:>12.6e}",
+            pt.step, pt.loss, pt.loss_pde, pt.loss_bc
+        );
     }
     println!(
         "\ntimings: inputs {:.2?}, steps {:.2?} ({:.3} s / 1000 batches)",
@@ -129,6 +163,18 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
         report.step_time,
         report.sec_per_1000()
     );
+    if p.switch("validate") {
+        match trainer.validate(p.get_usize("heldout")?)? {
+            Some(v) => println!(
+                "validation vs reference solver: rel-L2 = {:.2}% \
+                 ({} held-out functions x {} points)",
+                v.rel_l2 * 100.0,
+                v.n_functions,
+                v.n_points
+            ),
+            None => println!("validation: no native reference for {}", problem.name()),
+        }
+    }
     Ok(())
 }
 
@@ -233,6 +279,7 @@ fn cmd_stats(args: &[String]) -> Result<()> {
         .opt("filter", "", "substring filter on artifact names")
         .opt("m", "8", "(--native) functions per batch")
         .opt("n", "64", "(--native) collocation points")
+        .opt("problem", "", "(--native) a native problem: show its step-program stats per strategy")
         .switch("native", "compile the native tape strategies and report program stats")
         .switch("help", "show usage");
     let p = opts.parse(args)?;
@@ -241,7 +288,12 @@ fn cmd_stats(args: &[String]) -> Result<()> {
         return Ok(());
     }
     if p.switch("native") {
-        return native_stats(p.get_usize("m")?, p.get_usize("n")?);
+        let (m, n) = (p.get_usize("m")?, p.get_usize("n")?);
+        if p.get("problem").is_empty() {
+            return native_stats(m, n);
+        }
+        let problem = ProblemKind::parse(p.get("problem")).map_err(|e| anyhow!(e))?;
+        return native_problem_stats(problem, m, n);
     }
     let runtime = Runtime::open(p.get("artifacts"))?;
     let filter = p.get("filter");
@@ -316,6 +368,53 @@ fn native_stats(m: usize, n: usize) -> Result<()> {
     Ok(())
 }
 
+/// `zcs stats --native --problem <name>`: compiled step-program statistics
+/// of one native PDE problem under each strategy, with the full per-op
+/// instruction histogram (so the grown op set stays visible).
+fn native_problem_stats(problem: ProblemKind, m: usize, n: usize) -> Result<()> {
+    use zcs::autodiff::{Program, Strategy};
+    use zcs::pde::residual::{build_training_problem, BlockSizes};
+    // mirror `zcs ntrain`'s defaults so the printed step program is the
+    // one ntrain actually compiles for this problem
+    let defaults = zcs::coordinator::native::NativeRunConfig::default();
+    let q = if problem == ProblemKind::Kirchhoff { 9 } else { defaults.q };
+    let (hidden, k) = (defaults.hidden, defaults.k);
+    let sizes = BlockSizes { n_in: n, n_bc: defaults.n_bc };
+    let mut table = Table::new(&[
+        "strategy", "tape nodes", "instructions", "cse", "folded", "slots", "peak KiB",
+    ]);
+    let mut histograms = Vec::new();
+    for strat in Strategy::ALL {
+        let built = build_training_problem(problem, strat, m, q, hidden, k, sizes)?;
+        let program = Program::compile(&built.graph, &built.outputs);
+        let report = zcs::hlostats::analyze_program(&program);
+        let s = &report.stats;
+        table.row(&[
+            strat.name().to_string(),
+            s.graph_nodes.to_string(),
+            s.instructions.to_string(),
+            s.cse_hits.to_string(),
+            s.folded.to_string(),
+            s.n_slots.to_string(),
+            format!("{:.1}", s.peak_live_bytes as f64 / 1024.0),
+        ]);
+        let line = report
+            .opcode_histogram
+            .iter()
+            .map(|(op, count)| format!("{op}={count}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        histograms.push((strat.name(), line));
+    }
+    println!("step program for {} (M={m}, N={n}):", problem.name());
+    table.print();
+    println!("\nper-op instruction counts:");
+    for (name, line) in histograms {
+        println!("  {name:>9}: {line}");
+    }
+    Ok(())
+}
+
 fn cmd_list(args: &[String]) -> Result<()> {
     let opts = Opts::new("zcs list", "artifact inventory")
         .opt("artifacts", "artifacts", "artifact directory")
@@ -345,8 +444,7 @@ fn cmd_solve(args: &[String]) -> Result<()> {
         print!("{}", opts.usage());
         return Ok(());
     }
-    let kind = ProblemKind::from_name(p.get("problem"))
-        .ok_or_else(|| anyhow!("unknown problem"))?;
+    let kind = ProblemKind::parse(p.get("problem")).map_err(|e| anyhow!(e))?;
     match kind {
         ProblemKind::ReactionDiffusion => {
             let s = zcs::solvers::ReactionDiffusionSolver::default();
@@ -384,6 +482,9 @@ fn cmd_solve(args: &[String]) -> Result<()> {
             println!("stokes at (0.5, 0.8): u={u:.5} v={v:.5} p={pr:.5}");
         }
         ProblemKind::HighOrder(_) => bail!("highorder has no reference solver"),
+        ProblemKind::Antiderivative => {
+            bail!("the antiderivative has no reference solver (defined up to a constant)")
+        }
     }
     Ok(())
 }

@@ -1,18 +1,31 @@
-//! Problem descriptors: the Rust-side mirror of `python/compile/pdes.py`.
+//! Problem descriptors and the native PDE residual layer.
 //!
-//! The Python layer owns the *physics* (residuals are baked into the HLO
-//! artifacts); this module owns everything the coordinator must know to
-//! *feed* those artifacts: which input-function prior to sample, how each
-//! batch array is filled, and which reference solver validates the result.
-//! The two sides meet through `artifacts/meta.json` -- batch array names
-//! here must match the python `batch_schema` names exactly (checked by the
-//! coordinator at batch-build time and by integration tests).
+//! The *physics* of the paper's case studies lives right here, in Rust:
+//! [`residual`] builds each problem's PDE residual and boundary/initial
+//! losses as native [`crate::autodiff::Graph`] nodes under any of the
+//! three AD strategies (FuncLoop / DataVect / ZCS), which the coordinator
+//! compiles once and trains end-to-end (`zcs ntrain --problem ...`).  The
+//! legacy Python HLO artifacts remain a replayable record of the original
+//! XLA lowering, but this module -- not the Python layer -- is the source
+//! of truth for the residuals.
+//!
+//! [`ProblemKind`] itself stays engine-agnostic: which input-function
+//! prior to sample, how many output channels, the paper's constants, and
+//! (for the artifact path) how each batch array is filled.  Batch array
+//! names for artifacts must still match the python `batch_schema` names
+//! exactly; the native path instead checks feed names against
+//! [`residual::BuiltProblem::feeds`].
+
+pub mod residual;
 
 use crate::sampler::Kernel;
 
-/// The four Table-1 operators plus the Fig.-2 scaling operator.
+/// The four Table-1 operators, the Fig.-2 scaling operator, and the
+/// canonical antiderivative operator the native engine bootstrapped on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ProblemKind {
+    /// learn `u` with `du/dx = f` (the operator-learning "hello world")
+    Antiderivative,
     ReactionDiffusion,
     Burgers,
     Kirchhoff,
@@ -22,9 +35,20 @@ pub enum ProblemKind {
 }
 
 impl ProblemKind {
-    /// Parse the manifest's problem name.
+    /// Every fixed-name problem (excludes the parameterised `highorder_pP`).
+    pub const NAMED: [ProblemKind; 5] = [
+        ProblemKind::Antiderivative,
+        ProblemKind::ReactionDiffusion,
+        ProblemKind::Burgers,
+        ProblemKind::Kirchhoff,
+        ProblemKind::Stokes,
+    ];
+
+    /// Parse the manifest / CLI problem name (case-insensitive).
     pub fn from_name(name: &str) -> Option<Self> {
-        match name {
+        let name = name.to_ascii_lowercase();
+        match name.as_str() {
+            "antiderivative" => Some(Self::Antiderivative),
             "reaction_diffusion" => Some(Self::ReactionDiffusion),
             "burgers" => Some(Self::Burgers),
             "kirchhoff" => Some(Self::Kirchhoff),
@@ -36,8 +60,20 @@ impl ProblemKind {
         }
     }
 
+    /// Parse with an error message that lists the valid choices.
+    pub fn parse(name: &str) -> Result<Self, String> {
+        Self::from_name(name).ok_or_else(|| {
+            format!(
+                "unknown problem {name:?}; valid choices (case-insensitive): \
+                 antiderivative, reaction_diffusion, burgers, kirchhoff, stokes, \
+                 highorder_pP (e.g. highorder_p3)"
+            )
+        })
+    }
+
     pub fn name(&self) -> String {
         match self {
+            Self::Antiderivative => "antiderivative".into(),
             Self::ReactionDiffusion => "reaction_diffusion".into(),
             Self::Burgers => "burgers".into(),
             Self::Kirchhoff => "kirchhoff".into(),
@@ -57,6 +93,7 @@ impl ProblemKind {
     /// Max differential order appearing in the PDE (the paper's P).
     pub fn p_order(&self) -> usize {
         match self {
+            Self::Antiderivative => 1,
             Self::Kirchhoff => 4,
             Self::HighOrder(p) => *p,
             _ => 2,
@@ -67,7 +104,7 @@ impl ProblemKind {
     /// (Kirchhoff samples i.i.d. normal coefficients instead).
     pub fn function_prior(&self) -> Option<Kernel> {
         match self {
-            Self::ReactionDiffusion | Self::HighOrder(_) => {
+            Self::Antiderivative | Self::ReactionDiffusion | Self::HighOrder(_) => {
                 Some(Kernel::Rbf { length_scale: 0.2, variance: 1.0 })
             }
             // Burgers initial conditions must be periodic (eq. 17 BC)
@@ -83,6 +120,13 @@ impl ProblemKind {
         matches!(self, Self::Stokes)
     }
 
+    /// Look up one of the paper's constants by name -- the single source
+    /// of truth shared by the residual layer, the batcher's load
+    /// synthesis, and validation.
+    pub fn constant(&self, name: &str) -> Option<f64> {
+        self.constants().into_iter().find(|(n, _)| *n == name).map(|(_, v)| v)
+    }
+
     /// PDE constants, as named in the paper.
     pub fn constants(&self) -> Vec<(&'static str, f64)> {
         match self {
@@ -90,7 +134,7 @@ impl ProblemKind {
             Self::Burgers => vec![("nu", 0.01)],
             Self::Kirchhoff => vec![("D_flex", 0.01)],
             Self::Stokes => vec![("mu", 0.01)],
-            Self::HighOrder(_) => vec![],
+            Self::Antiderivative | Self::HighOrder(_) => vec![],
         }
     }
 }
@@ -101,17 +145,37 @@ mod tests {
 
     #[test]
     fn name_round_trip() {
-        for k in [
-            ProblemKind::ReactionDiffusion,
-            ProblemKind::Burgers,
-            ProblemKind::Kirchhoff,
-            ProblemKind::Stokes,
-            ProblemKind::HighOrder(3),
-        ] {
+        for k in ProblemKind::NAMED {
             assert_eq!(ProblemKind::from_name(&k.name()), Some(k));
         }
+        assert_eq!(
+            ProblemKind::from_name(&ProblemKind::HighOrder(3).name()),
+            Some(ProblemKind::HighOrder(3))
+        );
         assert_eq!(ProblemKind::from_name("nope"), None);
         assert_eq!(ProblemKind::from_name("highorder_px"), None);
+    }
+
+    #[test]
+    fn parsing_is_case_insensitive_and_lists_choices() {
+        assert_eq!(ProblemKind::from_name("Burgers"), Some(ProblemKind::Burgers));
+        assert_eq!(
+            ProblemKind::from_name("REACTION_DIFFUSION"),
+            Some(ProblemKind::ReactionDiffusion)
+        );
+        assert_eq!(ProblemKind::from_name("HIGHORDER_P4"), Some(ProblemKind::HighOrder(4)));
+        let err = ProblemKind::parse("bogus").unwrap_err();
+        for choice in ["antiderivative", "reaction_diffusion", "burgers", "kirchhoff", "stokes"] {
+            assert!(err.contains(choice), "{err}");
+        }
+    }
+
+    #[test]
+    fn constants_lookup_by_name() {
+        assert_eq!(ProblemKind::Kirchhoff.constant("D_flex"), Some(0.01));
+        assert_eq!(ProblemKind::Burgers.constant("nu"), Some(0.01));
+        assert_eq!(ProblemKind::ReactionDiffusion.constant("D"), Some(0.01));
+        assert_eq!(ProblemKind::Burgers.constant("bogus"), None);
     }
 
     #[test]

@@ -1,0 +1,917 @@
+//! The native PDE residual layer: the paper's case-study physics built as
+//! [`Graph`] nodes, trainable end-to-end under any AD strategy.
+//!
+//! A [`PdeResidual`] turns a DeepONet forward pass plus the strategy's
+//! derivative builders into residual and boundary/initial loss nodes.  The
+//! machinery mirrors `autodiff::zcs_demo` but generalises it to
+//! d-dimensional coordinates and mixed partial derivatives:
+//!
+//! * [`ProblemBuilder`] owns the tape, the DeepONet weight leaves
+//!   (`wb (q,h)`, `wb2 (h,k)`, `wt (d,h)`, `wt2 (h,k)`), the sensor leaf
+//!   `p (m,q)`, and the named batch-feed registry;
+//! * [`DerivBlock`] is one set of collocation points with pointwise
+//!   derivatives `d^|a| u / dx0^a0 dx1^a1` available through
+//!   [`DerivBlock::d`].  Under **ZCS** each coordinate gets a scalar shift
+//!   leaf `z_c` (eq. 6) and derivatives come off the `omega = sum(a * u)`
+//!   z-chain (eqs. 9-10); under **FuncLoop** each function takes its own
+//!   nested reverse sweeps (eq. 4); under **DataVect** coordinates are
+//!   tiled `m`-fold at the leaf end (eq. 5).  All three present results in
+//!   one `(m, n)` layout, so each residual is written exactly once;
+//! * value blocks evaluate the plain forward `u` at boundary/initial
+//!   points (no derivative, hence no strategy split).
+//!
+//! Feed names are the Rust-native analogue of the artifact
+//! `batch_schema`: [`BuiltProblem::feeds`] lists `(name, leaf)` pairs the
+//! coordinator's `PdeBatcher` must produce per step (checked by name).
+//!
+//! Implemented problems (Table 1 of the paper; Stokes remains
+//! artifact-only for now):
+//!
+//! | problem            | residual (graph form)                               |
+//! |--------------------|-----------------------------------------------------|
+//! | antiderivative     | `u_x - f`                                           |
+//! | reaction_diffusion | `u_t - D u_xx + k u^2 - f`         (eq. 16)         |
+//! | burgers            | `u_t + u u_x - nu u_xx`            (eq. 17)         |
+//! | kirchhoff          | `D (u_xxxx + 2 u_xxyy + u_yyyy) - q` (eq. 18, scaled by the rigidity so the target stays O(1)) |
+
+use crate::autodiff::graph::{Graph, NodeId};
+use crate::autodiff::zcs_demo::Strategy;
+use crate::pde::ProblemKind;
+use crate::tensor::Tensor;
+use anyhow::{anyhow, ensure, Result};
+use std::collections::HashMap;
+
+/// DeepONet dimensions for the native residual layer.
+#[derive(Clone, Copy, Debug)]
+pub struct NetDims {
+    /// branch sensors (the paper's Q)
+    pub q: usize,
+    /// hidden width of both MLPs
+    pub hidden: usize,
+    /// latent combine dimension (the DeepONet K)
+    pub k: usize,
+    /// coordinate dimension of the trunk input (1 or 2 here)
+    pub coord_dim: usize,
+}
+
+/// Collocation-block sizes for one problem build.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockSizes {
+    /// interior (residual) points per batch (the paper's N)
+    pub n_in: usize,
+    /// points per boundary/initial block
+    pub n_bc: usize,
+}
+
+/// Builder state shared by every block of one problem graph.
+pub struct ProblemBuilder {
+    /// the growing tape; residual implementations append ops directly
+    pub g: Graph,
+    strategy: Strategy,
+    m: usize,
+    dims: NetDims,
+    /// wb (q,h), wb2 (h,k), wt (d,h), wt2 (h,k)
+    weights: [NodeId; 4],
+    /// sensor leaf (m, q)
+    p: NodeId,
+    /// branch(p) (m, k), shared by every non-tiled block
+    branch_p: NodeId,
+    feeds: Vec<(String, NodeId)>,
+    extra_inputs: Vec<(NodeId, Tensor)>,
+}
+
+impl ProblemBuilder {
+    pub fn new(strategy: Strategy, m: usize, dims: NetDims) -> Self {
+        let mut g = Graph::new();
+        let wb = g.input(&[dims.q, dims.hidden]);
+        let wb2 = g.input(&[dims.hidden, dims.k]);
+        let wt = g.input(&[dims.coord_dim, dims.hidden]);
+        let wt2 = g.input(&[dims.hidden, dims.k]);
+        let p = g.input(&[m, dims.q]);
+        let h = g.matmul(p, wb);
+        let a = g.tanh(h);
+        let branch_p = g.matmul(a, wb2);
+        Self {
+            g,
+            strategy,
+            m,
+            dims,
+            weights: [wb, wb2, wt, wt2],
+            p,
+            branch_p,
+            feeds: Vec::new(),
+            extra_inputs: Vec::new(),
+        }
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn strategy(&self) -> Strategy {
+        self.strategy
+    }
+
+    pub fn coord_dim(&self) -> usize {
+        self.dims.coord_dim
+    }
+
+    /// Named batch feeds registered so far.
+    pub fn feeds(&self) -> &[(String, NodeId)] {
+        &self.feeds
+    }
+
+    /// Constant-valued leaves (ZCS z and a) to feed at evaluation time.
+    pub fn extra_inputs(&self) -> &[(NodeId, Tensor)] {
+        &self.extra_inputs
+    }
+
+    /// Branch MLP on an arbitrary sensor matrix (rows, q) -> (rows, k).
+    fn branch_of(&mut self, pin: NodeId) -> NodeId {
+        let [wb, wb2, _, _] = self.weights;
+        let h = self.g.matmul(pin, wb);
+        let a = self.g.tanh(h);
+        self.g.matmul(a, wb2)
+    }
+
+    /// Trunk MLP on a coordinate matrix (rows, d) -> (rows, k).
+    fn trunk(&mut self, xin: NodeId) -> NodeId {
+        let [_, _, wt, wt2] = self.weights;
+        let h = self.g.matmul(xin, wt);
+        let a = self.g.tanh(h);
+        self.g.matmul(a, wt2)
+    }
+
+    /// Assemble the (rows, d) trunk input from per-dimension (rows, 1)
+    /// columns via constant one-hot embeddings (no concat op needed).
+    fn combine_coords(&mut self, cols: &[NodeId]) -> NodeId {
+        let dim = self.dims.coord_dim;
+        assert_eq!(cols.len(), dim);
+        if dim == 1 {
+            return cols[0];
+        }
+        let mut acc: Option<NodeId> = None;
+        for (c, &col) in cols.iter().enumerate() {
+            let mut e = Tensor::zeros(&[1, dim]);
+            e.data_mut()[c] = 1.0;
+            let ec = self.g.constant(e);
+            let term = self.g.matmul(col, ec); // (rows, d)
+            acc = Some(match acc {
+                Some(prev) => self.g.add(prev, term),
+                None => term,
+            });
+        }
+        acc.expect("dim >= 1")
+    }
+
+    /// The DeepONet field on (already shifted / tiled) coordinate columns:
+    /// `(m, rows)` under ZCS / FuncLoop, `(rows, 1)` under DataVect.
+    fn deeponet_field(&mut self, cols: &[NodeId]) -> NodeId {
+        let rows = self.g.shape(cols[0])[0];
+        let tin = self.combine_coords(cols);
+        let t = self.trunk(tin);
+        match self.strategy {
+            Strategy::DataVect => {
+                let n = rows / self.m;
+                let rp = self.g.constant(tile_functions(self.m, n));
+                let ph = self.g.matmul(rp, self.p); // (m n, q)
+                let b = self.branch_of(ph); // (m n, k)
+                let bt = self.g.mul(b, t);
+                self.g.sum_axis(bt, 1) // (m n, 1)
+            }
+            _ => self.g.matmul_nt(self.branch_p, t), // (m, rows)
+        }
+    }
+
+    /// Register a named batch-fed leaf (aux fields, targets).
+    pub fn aux(&mut self, name: &str, shape: &[usize]) -> NodeId {
+        let id = self.g.input(shape);
+        self.feeds.push((name.to_string(), id));
+        id
+    }
+
+    /// A value-only point block: plain forward `u` of shape (m, n) at `n`
+    /// batch-fed points.  Registers feeds `{name}.x{c}` of shape (n, 1).
+    pub fn value_block(&mut self, name: &str, n: usize) -> (Vec<NodeId>, NodeId) {
+        let dim = self.dims.coord_dim;
+        let mut coords = Vec::with_capacity(dim);
+        for c in 0..dim {
+            let x = self.g.input(&[n, 1]);
+            self.feeds.push((format!("{name}.x{c}"), x));
+            coords.push(x);
+        }
+        let tin = self.combine_coords(&coords);
+        let t = self.trunk(tin);
+        let u = self.g.matmul_nt(self.branch_p, t); // (m, n)
+        (coords, u)
+    }
+
+    /// A derivative-capable point block over the DeepONet field.
+    pub fn deriv_block(&mut self, name: &str, n: usize) -> DerivBlock {
+        self.deriv_block_with(name, n, &mut |b, cols| b.deeponet_field(cols))
+    }
+
+    /// A derivative-capable point block over an arbitrary field.  The
+    /// closure receives the per-dimension coordinate columns *after* the
+    /// strategy's preprocessing (ZCS shift / DataVect tiling) and must
+    /// return `(m, rows)` under ZCS / FuncLoop or `(rows, 1)` under
+    /// DataVect.  Used directly by the residual-consistency tests to
+    /// differentiate analytic reference fields.
+    pub fn deriv_block_with(
+        &mut self,
+        name: &str,
+        n: usize,
+        field: &mut dyn FnMut(&mut ProblemBuilder, &[NodeId]) -> NodeId,
+    ) -> DerivBlock {
+        let dim = self.dims.coord_dim;
+        let m = self.m;
+        let mut coords = Vec::with_capacity(dim);
+        for c in 0..dim {
+            let x = self.g.input(&[n, 1]);
+            self.feeds.push((format!("{name}.x{c}"), x));
+            coords.push(x);
+        }
+        match self.strategy {
+            Strategy::Zcs => {
+                // eq. (6): shift each coordinate by its own scalar leaf
+                let mut zs = Vec::with_capacity(dim);
+                let mut shifted = Vec::with_capacity(dim);
+                for &x in &coords {
+                    let z = self.g.input(&[]);
+                    let zb = self.g.broadcast(z, &[n, 1]);
+                    let xz = self.g.add(x, zb);
+                    self.extra_inputs.push((z, Tensor::new(&[], vec![0.0])));
+                    zs.push(z);
+                    shifted.push(xz);
+                }
+                let u = field(self, &shifted);
+                assert_eq!(self.g.shape(u), &[m, n], "zcs field layout");
+                // eq. (9): omega = sum(a * u) with the dummy leaf a
+                let a = self.g.input(&[m, n]);
+                self.extra_inputs.push((a, Tensor::full(&[m, n], 1.0)));
+                let au = self.g.mul(a, u);
+                let omega = self.g.sum_all(au);
+                let mut zcache = HashMap::new();
+                zcache.insert(vec![0usize; dim], omega);
+                DerivBlock {
+                    m,
+                    n,
+                    dim,
+                    coords,
+                    u_mn: u,
+                    inner: BlockInner::Zcs { zs, a, zcache, dcache: HashMap::new() },
+                }
+            }
+            Strategy::FuncLoop => {
+                let u = field(self, &coords);
+                assert_eq!(self.g.shape(u), &[m, n], "funcloop field layout");
+                DerivBlock {
+                    m,
+                    n,
+                    dim,
+                    coords,
+                    u_mn: u,
+                    inner: BlockInner::FuncLoop { cache: HashMap::new(), dcache: HashMap::new() },
+                }
+            }
+            Strategy::DataVect => {
+                // eq. (5): tile the coordinates to m*n pointwise rows
+                let rx = self.g.constant(tile_points(m, n));
+                let xh: Vec<NodeId> = coords.iter().map(|&x| self.g.matmul(rx, x)).collect();
+                let u_rows = field(self, &xh);
+                assert_eq!(self.g.shape(u_rows), &[m * n, 1], "datavect field layout");
+                let u = self.g.reshape_of(u_rows, &[m, n]);
+                DerivBlock {
+                    m,
+                    n,
+                    dim,
+                    coords,
+                    u_mn: u,
+                    inner: BlockInner::DataVect {
+                        u_rows,
+                        xh,
+                        cache: HashMap::new(),
+                        dcache: HashMap::new(),
+                    },
+                }
+            }
+        }
+    }
+
+    /// Mean of squared entries of an (m, n) node -- the loss primitive
+    /// (row means via the axis-aware reduction, then the function mean).
+    pub fn mean_sq(&mut self, r: NodeId) -> NodeId {
+        let m = self.g.shape(r)[0];
+        let r2 = self.g.square(r);
+        let row_means = self.g.mean_axis(r2, 1); // (m, 1)
+        let s = self.g.sum_all(row_means);
+        self.g.scale(s, 1.0 / m as f64)
+    }
+}
+
+/// `(m n, m)` selector replicating each function row n times (eq. 5).
+fn tile_functions(m: usize, n: usize) -> Tensor {
+    let mut rp = Tensor::zeros(&[m * n, m]);
+    for i in 0..m {
+        for j in 0..n {
+            rp.data_mut()[(i * n + j) * m + i] = 1.0;
+        }
+    }
+    rp
+}
+
+/// `(m n, n)` selector replicating the point set m times (eq. 5).
+fn tile_points(m: usize, n: usize) -> Tensor {
+    let mut rx = Tensor::zeros(&[m * n, n]);
+    for i in 0..m {
+        for j in 0..n {
+            rx.data_mut()[(i * n + j) * n + j] = 1.0;
+        }
+    }
+    rx
+}
+
+/// One collocation-point block with strategy-built pointwise derivatives.
+pub struct DerivBlock {
+    m: usize,
+    n: usize,
+    dim: usize,
+    /// unshifted coordinate leaves, (n, 1) per dimension (batch-fed)
+    coords: Vec<NodeId>,
+    /// the field in the normalized (m, n) layout
+    u_mn: NodeId,
+    inner: BlockInner,
+}
+
+enum BlockInner {
+    Zcs {
+        /// one shift scalar per coordinate dimension
+        zs: Vec<NodeId>,
+        /// the eq.-9 dummy-summation leaf (m, n)
+        a: NodeId,
+        /// z-chain scalars keyed by partial derivative orders
+        zcache: HashMap<Vec<usize>, NodeId>,
+        /// finished (m, n) derivatives keyed by orders
+        dcache: HashMap<Vec<usize>, NodeId>,
+    },
+    FuncLoop {
+        /// per-function chain nodes keyed by (function, orders); the
+        /// all-zero key holds the scalar root, others the (n, 1) rows
+        cache: HashMap<(usize, Vec<usize>), NodeId>,
+        dcache: HashMap<Vec<usize>, NodeId>,
+    },
+    DataVect {
+        /// tiled field rows (m n, 1)
+        u_rows: NodeId,
+        /// tiled coordinate columns (m n, 1) per dimension
+        xh: Vec<NodeId>,
+        /// chain nodes (m n, 1) keyed by orders
+        cache: HashMap<Vec<usize>, NodeId>,
+        dcache: HashMap<Vec<usize>, NodeId>,
+    },
+}
+
+impl DerivBlock {
+    /// The field itself, (m, n).
+    pub fn u(&self) -> NodeId {
+        self.u_mn
+    }
+
+    /// The unshifted coordinate leaves, one (n, 1) input per dimension.
+    pub fn coords(&self) -> &[NodeId] {
+        &self.coords
+    }
+
+    /// Pointwise mixed partial `d^|orders| u / prod_c dx_c^orders[c]` in
+    /// the (m, n) layout.  Chains are cached, so e.g. `u_xx` extends the
+    /// tape built for `u_x` instead of rebuilding it.
+    pub fn d(&mut self, b: &mut ProblemBuilder, orders: &[usize]) -> NodeId {
+        assert_eq!(orders.len(), self.dim, "one order per coordinate dimension");
+        let total: usize = orders.iter().sum();
+        assert!(total >= 1, "derivative order must be >= 1");
+        let (m, n, dim) = (self.m, self.n, self.dim);
+        let coords = self.coords.clone();
+        match &mut self.inner {
+            BlockInner::Zcs { zs, a, zcache, dcache } => {
+                if let Some(&v) = dcache.get(orders) {
+                    return v;
+                }
+                // eq. (10): walk the z-chain (each step is scalar -> scalar,
+                // so no re-rooting), then one d/da pass back to (m, n)
+                let mut key = vec![0usize; dim];
+                let mut cur = *zcache.get(&key).expect("omega seeds the chain");
+                for c in (0..dim).rev() {
+                    for _ in 0..orders[c] {
+                        key[c] += 1;
+                        cur = match zcache.get(&key) {
+                            Some(&v) => v,
+                            None => {
+                                let d = b.g.grad(cur, &[zs[c]])[0];
+                                zcache.insert(key.clone(), d);
+                                d
+                            }
+                        };
+                    }
+                }
+                let da = b.g.grad(cur, &[*a])[0]; // (m, n)
+                dcache.insert(orders.to_vec(), da);
+                da
+            }
+            BlockInner::FuncLoop { cache, dcache } => {
+                if let Some(&v) = dcache.get(orders) {
+                    return v;
+                }
+                let u = self.u_mn;
+                let mut acc: Option<NodeId> = None;
+                for i in 0..m {
+                    // eq. (4): one nested reverse chain per function
+                    let mut key = (i, vec![0usize; dim]);
+                    let mut cur = match cache.get(&key) {
+                        Some(&v) => v,
+                        None => {
+                            let mut e = Tensor::zeros(&[1, m]);
+                            e.data_mut()[i] = 1.0;
+                            let ei = b.g.constant(e);
+                            let row = b.g.matmul(ei, u); // (1, n)
+                            let root = b.g.sum_all(row);
+                            cache.insert(key.clone(), root);
+                            root
+                        }
+                    };
+                    let mut at_root = true; // cur is the scalar sum_j u_ij
+                    for c in (0..dim).rev() {
+                        for _ in 0..orders[c] {
+                            key.1[c] += 1;
+                            cur = match cache.get(&key) {
+                                Some(&v) => v,
+                                None => {
+                                    // u_ij depends on point j only, so
+                                    // re-rooting via sum_all keeps the
+                                    // nested derivative pointwise
+                                    let root = if at_root { cur } else { b.g.sum_all(cur) };
+                                    let d = b.g.grad(root, &[coords[c]])[0]; // (n, 1)
+                                    cache.insert(key.clone(), d);
+                                    d
+                                }
+                            };
+                            at_root = false;
+                        }
+                    }
+                    let dt = b.g.transpose_of(cur); // (1, n)
+                    let mut ecol = Tensor::zeros(&[m, 1]);
+                    ecol.data_mut()[i] = 1.0;
+                    let ecol = b.g.constant(ecol);
+                    let term = b.g.matmul(ecol, dt); // (m, n), row i only
+                    acc = Some(match acc {
+                        Some(prev) => b.g.add(prev, term),
+                        None => term,
+                    });
+                }
+                let out = acc.expect("m >= 1");
+                dcache.insert(orders.to_vec(), out);
+                out
+            }
+            BlockInner::DataVect { u_rows, xh, cache, dcache } => {
+                if let Some(&v) = dcache.get(orders) {
+                    return v;
+                }
+                let mut key = vec![0usize; dim];
+                let mut cur = *u_rows;
+                for c in (0..dim).rev() {
+                    for _ in 0..orders[c] {
+                        key[c] += 1;
+                        cur = match cache.get(&key) {
+                            Some(&v) => v,
+                            None => {
+                                // tiled rows are independent copies: the
+                                // summed root's gradient is pointwise
+                                let root = b.g.sum_all(cur);
+                                let d = b.g.grad(root, &[xh[c]])[0]; // (m n, 1)
+                                cache.insert(key.clone(), d);
+                                d
+                            }
+                        };
+                    }
+                }
+                let out = b.g.reshape_of(cur, &[m, n]);
+                dcache.insert(orders.to_vec(), out);
+                out
+            }
+        }
+    }
+}
+
+/// Loss nodes one residual build produces.
+pub struct ResidualLosses {
+    /// mean squared PDE residual over the interior block (scalar)
+    pub loss_pde: NodeId,
+    /// summed boundary/initial losses (scalar)
+    pub loss_bc: NodeId,
+    /// the raw interior residual (m, n), exposed for consistency tests
+    pub residual: NodeId,
+}
+
+/// A problem's physics: residual + boundary/initial losses as graph nodes.
+pub trait PdeResidual {
+    fn kind(&self) -> ProblemKind;
+    fn coord_dim(&self) -> usize;
+    /// Append the losses to `b`'s tape.  Feed registration order defines
+    /// the batch contract (see [`BuiltProblem::feeds`]).
+    fn build_losses(&self, b: &mut ProblemBuilder, sizes: BlockSizes) -> ResidualLosses;
+}
+
+/// `du/dx = f` on (0, 1) -- no boundary term (the operator is learned up
+/// to the derivative, exactly like the original native demo).
+pub struct Antiderivative;
+
+impl PdeResidual for Antiderivative {
+    fn kind(&self) -> ProblemKind {
+        ProblemKind::Antiderivative
+    }
+
+    fn coord_dim(&self) -> usize {
+        1
+    }
+
+    fn build_losses(&self, b: &mut ProblemBuilder, sizes: BlockSizes) -> ResidualLosses {
+        let m = b.m();
+        let mut blk = b.deriv_block("in", sizes.n_in);
+        let ux = blk.d(b, &[1]);
+        let f = b.aux("in.f", &[m, sizes.n_in]);
+        let r = b.g.sub(ux, f);
+        let loss_pde = b.mean_sq(r);
+        let loss_bc = b.g.constant(Tensor::new(&[], vec![0.0]));
+        ResidualLosses { loss_pde, loss_bc, residual: r }
+    }
+}
+
+/// Reaction-diffusion `u_t - D u_xx + k u^2 - f = 0` on the unit square
+/// with `u(x, 0) = 0` and `u(0, t) = u(1, t) = 0` (paper eq. 16).
+pub struct ReactionDiffusionResidual {
+    pub diff_coef: f64,
+    pub react_coef: f64,
+}
+
+impl Default for ReactionDiffusionResidual {
+    fn default() -> Self {
+        let kind = ProblemKind::ReactionDiffusion;
+        Self {
+            diff_coef: kind.constant("D").expect("paper constant D"),
+            react_coef: kind.constant("k").expect("paper constant k"),
+        }
+    }
+}
+
+impl PdeResidual for ReactionDiffusionResidual {
+    fn kind(&self) -> ProblemKind {
+        ProblemKind::ReactionDiffusion
+    }
+
+    fn coord_dim(&self) -> usize {
+        2
+    }
+
+    fn build_losses(&self, b: &mut ProblemBuilder, sizes: BlockSizes) -> ResidualLosses {
+        let m = b.m();
+        let mut blk = b.deriv_block("in", sizes.n_in);
+        let u = blk.u();
+        let ut = blk.d(b, &[0, 1]);
+        let uxx = blk.d(b, &[2, 0]);
+        let f = b.aux("in.f", &[m, sizes.n_in]);
+        let du = b.g.scale(uxx, self.diff_coef);
+        let r1 = b.g.sub(ut, du);
+        let u2 = b.g.square(u);
+        let ku2 = b.g.scale(u2, self.react_coef);
+        let r2 = b.g.add(r1, ku2);
+        let r = b.g.sub(r2, f);
+        let loss_pde = b.mean_sq(r);
+        // u = 0 on the initial line and the two spatial walls
+        let (_, u_ic) = b.value_block("ic", sizes.n_bc);
+        let l_ic = b.mean_sq(u_ic);
+        let (_, u_bc) = b.value_block("bc", sizes.n_bc);
+        let l_bc = b.mean_sq(u_bc);
+        let loss_bc = b.g.add(l_ic, l_bc);
+        ResidualLosses { loss_pde, loss_bc, residual: r }
+    }
+}
+
+/// Periodic Burgers `u_t + u u_x - nu u_xx = 0` with `u(x, 0) = u0(x)`
+/// and `u(0, t) = u(1, t)` (paper eq. 17).
+pub struct BurgersResidual {
+    pub viscosity: f64,
+}
+
+impl Default for BurgersResidual {
+    fn default() -> Self {
+        Self { viscosity: ProblemKind::Burgers.constant("nu").expect("paper constant nu") }
+    }
+}
+
+impl PdeResidual for BurgersResidual {
+    fn kind(&self) -> ProblemKind {
+        ProblemKind::Burgers
+    }
+
+    fn coord_dim(&self) -> usize {
+        2
+    }
+
+    fn build_losses(&self, b: &mut ProblemBuilder, sizes: BlockSizes) -> ResidualLosses {
+        let m = b.m();
+        let mut blk = b.deriv_block("in", sizes.n_in);
+        let u = blk.u();
+        let ut = blk.d(b, &[0, 1]);
+        let ux = blk.d(b, &[1, 0]);
+        let uxx = blk.d(b, &[2, 0]);
+        let uux = b.g.mul(u, ux);
+        let adv = b.g.add(ut, uux);
+        let visc = b.g.scale(uxx, self.viscosity);
+        let nvisc = b.g.neg(visc);
+        let r = b.g.add(adv, nvisc);
+        let loss_pde = b.mean_sq(r);
+        // initial condition u(x, 0) = u0(x)
+        let (_, u_ic) = b.value_block("ic", sizes.n_bc);
+        let u0 = b.aux("ic.u0", &[m, sizes.n_bc]);
+        let ric = b.g.sub(u_ic, u0);
+        let l_ic = b.mean_sq(ric);
+        // periodicity: u at (0, t) equals u at (1, t) for shared t's
+        let (_, u_left) = b.value_block("left", sizes.n_bc);
+        let (_, u_right) = b.value_block("right", sizes.n_bc);
+        let rper = b.g.sub(u_left, u_right);
+        let l_per = b.mean_sq(rper);
+        let loss_bc = b.g.add(l_ic, l_per);
+        ResidualLosses { loss_pde, loss_bc, residual: r }
+    }
+}
+
+/// Kirchhoff-Love plate `D (u_xxxx + 2 u_xxyy + u_yyyy) = q` on the unit
+/// square, simply supported: `u = 0` on every edge, `u_xx = 0` on the
+/// x-walls and `u_yy = 0` on the y-walls (paper eq. 18; the residual is
+/// kept in the rigidity-scaled form so its magnitude tracks the load).
+pub struct KirchhoffResidual {
+    pub rigidity: f64,
+}
+
+impl Default for KirchhoffResidual {
+    fn default() -> Self {
+        Self {
+            rigidity: ProblemKind::Kirchhoff.constant("D_flex").expect("paper constant D_flex"),
+        }
+    }
+}
+
+impl PdeResidual for KirchhoffResidual {
+    fn kind(&self) -> ProblemKind {
+        ProblemKind::Kirchhoff
+    }
+
+    fn coord_dim(&self) -> usize {
+        2
+    }
+
+    fn build_losses(&self, b: &mut ProblemBuilder, sizes: BlockSizes) -> ResidualLosses {
+        let m = b.m();
+        let mut blk = b.deriv_block("in", sizes.n_in);
+        let d4x = blk.d(b, &[4, 0]);
+        let d22 = blk.d(b, &[2, 2]);
+        let d4y = blk.d(b, &[0, 4]);
+        let q = b.aux("in.q", &[m, sizes.n_in]);
+        let two_d22 = b.g.scale(d22, 2.0);
+        let s1 = b.g.add(d4x, two_d22);
+        let bih = b.g.add(s1, d4y);
+        let dbih = b.g.scale(bih, self.rigidity);
+        let r = b.g.sub(dbih, q);
+        let loss_pde = b.mean_sq(r);
+        // deflection-free edges
+        let (_, u_bnd) = b.value_block("bnd", sizes.n_bc);
+        let l_u = b.mean_sq(u_bnd);
+        // moment-free edges: u_xx = 0 where x is pinned, u_yy = 0 where y is
+        let mut mx = b.deriv_block("mx", sizes.n_bc);
+        let uxx_b = mx.d(b, &[2, 0]);
+        let l_mx = b.mean_sq(uxx_b);
+        let mut my = b.deriv_block("my", sizes.n_bc);
+        let uyy_b = my.d(b, &[0, 2]);
+        let l_my = b.mean_sq(uyy_b);
+        let lm = b.g.add(l_mx, l_my);
+        let loss_bc = b.g.add(l_u, lm);
+        ResidualLosses { loss_pde, loss_bc, residual: r }
+    }
+}
+
+/// The native residual for a problem, if implemented (Stokes and the
+/// high-order family remain artifact-only).
+pub fn residual_for(kind: ProblemKind) -> Option<Box<dyn PdeResidual>> {
+    match kind {
+        ProblemKind::Antiderivative => Some(Box::new(Antiderivative)),
+        ProblemKind::ReactionDiffusion => Some(Box::new(ReactionDiffusionResidual::default())),
+        ProblemKind::Burgers => Some(Box::new(BurgersResidual::default())),
+        ProblemKind::Kirchhoff => Some(Box::new(KirchhoffResidual::default())),
+        _ => None,
+    }
+}
+
+/// A fully built training-step graph for one (problem, strategy) pair.
+pub struct BuiltProblem {
+    pub graph: Graph,
+    /// `[loss, loss_pde, loss_bc, d loss/d wb, d wb2, d wt, d wt2]`
+    pub outputs: Vec<NodeId>,
+    /// wb (q,h), wb2 (h,k), wt (d,h), wt2 (h,k)
+    pub weight_ids: Vec<NodeId>,
+    /// sensor leaf (m, q)
+    pub p: NodeId,
+    /// named batch feeds, in registration order (the native batch schema)
+    pub feeds: Vec<(String, NodeId)>,
+    /// constant-valued leaves (ZCS z and a), fed every step
+    pub extra_inputs: Vec<(NodeId, Tensor)>,
+    /// the raw interior residual (m, n)
+    pub residual: NodeId,
+    pub coord_dim: usize,
+}
+
+/// Build the full training-step graph: forward, strategy derivatives,
+/// residual + boundary losses, weight gradients.
+pub fn build_training_problem(
+    kind: ProblemKind,
+    strategy: Strategy,
+    m: usize,
+    q: usize,
+    hidden: usize,
+    k: usize,
+    sizes: BlockSizes,
+) -> Result<BuiltProblem> {
+    let residual = residual_for(kind).ok_or_else(|| {
+        anyhow!(
+            "problem {:?} has no native residual; native problems: antiderivative, \
+             reaction_diffusion, burgers, kirchhoff",
+            kind.name()
+        )
+    })?;
+    ensure!(m >= 1 && q >= 1 && sizes.n_in >= 1 && sizes.n_bc >= 1, "empty problem");
+    let dims = NetDims { q, hidden, k, coord_dim: residual.coord_dim() };
+    let mut b = ProblemBuilder::new(strategy, m, dims);
+    let parts = residual.build_losses(&mut b, sizes);
+    let loss = b.g.add(parts.loss_pde, parts.loss_bc);
+    let weight_ids = b.weights.to_vec();
+    let grads = b.g.grad(loss, &weight_ids);
+    let mut outputs = vec![loss, parts.loss_pde, parts.loss_bc];
+    outputs.extend(grads);
+    Ok(BuiltProblem {
+        graph: b.g,
+        outputs,
+        weight_ids,
+        p: b.p,
+        feeds: b.feeds,
+        extra_inputs: b.extra_inputs,
+        residual: parts.residual,
+        coord_dim: dims.coord_dim,
+    })
+}
+
+/// A plain forward graph `u(p_i, x_j)` for validation / inference.
+pub struct ForwardGraph {
+    pub graph: Graph,
+    /// predicted field (m, n_pts)
+    pub u: NodeId,
+    pub weight_ids: Vec<NodeId>,
+    pub p: NodeId,
+    /// per-dimension coordinate columns (n_pts, 1)
+    pub coords: Vec<NodeId>,
+}
+
+/// Build a strategy-free forward evaluation graph.
+pub fn build_forward(m: usize, dims: NetDims, n_pts: usize) -> ForwardGraph {
+    let mut b = ProblemBuilder::new(Strategy::Zcs, m, dims);
+    let (coords, u) = b.value_block("pts", n_pts);
+    ForwardGraph { graph: b.g, u, weight_ids: b.weights.to_vec(), p: b.p, coords }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autodiff::Program;
+    use crate::rng::Pcg64;
+
+    fn sizes() -> BlockSizes {
+        BlockSizes { n_in: 6, n_bc: 4 }
+    }
+
+    fn feed_everything(built: &BuiltProblem, rng: &mut Pcg64) -> HashMap<NodeId, Tensor> {
+        let mut inputs = HashMap::new();
+        for &w in &built.weight_ids {
+            let shape = built.graph.shape(w).to_vec();
+            let n: usize = shape.iter().product();
+            inputs.insert(w, Tensor::new(&shape, rng.normals(n)).scale(1.0 / (shape[0] as f64).sqrt()));
+        }
+        let pshape = built.graph.shape(built.p).to_vec();
+        inputs.insert(built.p, Tensor::new(&pshape, rng.normals(pshape.iter().product())));
+        for (_, id) in &built.feeds {
+            let shape = built.graph.shape(*id).to_vec();
+            let n: usize = shape.iter().product();
+            inputs.insert(*id, Tensor::new(&shape, rng.uniforms_in(n, 0.1, 0.9)));
+        }
+        for (id, t) in &built.extra_inputs {
+            inputs.insert(*id, t.clone());
+        }
+        inputs
+    }
+
+    #[test]
+    fn every_native_problem_builds_and_runs_under_every_strategy() {
+        for kind in [
+            ProblemKind::Antiderivative,
+            ProblemKind::ReactionDiffusion,
+            ProblemKind::Burgers,
+            ProblemKind::Kirchhoff,
+        ] {
+            for strategy in Strategy::ALL {
+                let built =
+                    build_training_problem(kind, strategy, 2, 4, 6, 4, sizes()).unwrap();
+                assert_eq!(built.outputs.len(), 7, "{kind:?}/{strategy:?}");
+                let prog = Program::compile(&built.graph, &built.outputs);
+                let mut rng = Pcg64::seeded(17);
+                let inputs = feed_everything(&built, &mut rng);
+                let outs = prog.eval_once(&inputs);
+                assert_eq!(outs.len(), 7);
+                let loss = outs[0].data()[0];
+                assert!(loss.is_finite() && loss >= 0.0, "{kind:?}/{strategy:?}: {loss}");
+                // loss = loss_pde + loss_bc
+                let want = outs[1].data()[0] + outs[2].data()[0];
+                assert!((loss - want).abs() <= 1e-12 * (1.0 + loss.abs()));
+            }
+        }
+    }
+
+    #[test]
+    fn unsupported_problems_name_the_native_choices() {
+        let err = build_training_problem(
+            ProblemKind::Stokes,
+            Strategy::Zcs,
+            2,
+            4,
+            6,
+            4,
+            sizes(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("reaction_diffusion"), "{err}");
+        assert!(err.contains("antiderivative"), "{err}");
+    }
+
+    #[test]
+    fn zcs_tape_is_m_invariant_funcloop_grows() {
+        let at = |strategy: Strategy, m: usize| {
+            build_training_problem(
+                ProblemKind::ReactionDiffusion,
+                strategy,
+                m,
+                4,
+                6,
+                4,
+                sizes(),
+            )
+            .unwrap()
+            .graph
+            .len()
+        };
+        assert_eq!(at(Strategy::Zcs, 2), at(Strategy::Zcs, 16));
+        assert!(at(Strategy::FuncLoop, 16) > at(Strategy::FuncLoop, 2));
+    }
+
+    #[test]
+    fn feed_names_follow_the_documented_schema() {
+        let built = build_training_problem(
+            ProblemKind::Burgers,
+            Strategy::Zcs,
+            2,
+            4,
+            6,
+            4,
+            sizes(),
+        )
+        .unwrap();
+        let names: Vec<&str> = built.feeds.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(
+            names,
+            [
+                "in.x0", "in.x1", "ic.x0", "ic.x1", "ic.u0", "left.x0", "left.x1",
+                "right.x0", "right.x1"
+            ]
+        );
+    }
+
+    #[test]
+    fn derivative_cache_reuses_chains() {
+        // asking for u_x then u_xx must not rebuild the first-order chain
+        let dims = NetDims { q: 4, hidden: 6, k: 4, coord_dim: 1 };
+        let mut b = ProblemBuilder::new(Strategy::Zcs, 2, dims);
+        let mut blk = b.deriv_block("in", 5);
+        let d1 = blk.d(&mut b, &[1]);
+        let len_after_d1 = b.g.len();
+        let d1_again = blk.d(&mut b, &[1]);
+        assert_eq!(d1, d1_again);
+        assert_eq!(b.g.len(), len_after_d1, "cache hit must not grow the tape");
+        let _d2 = blk.d(&mut b, &[2]);
+        assert!(b.g.len() > len_after_d1);
+    }
+}

@@ -77,6 +77,65 @@ pub fn tanh_into(a: &Tensor, out: &mut Tensor) {
     }
 }
 
+/// `out = -a` elementwise.
+pub fn neg_into(a: &Tensor, out: &mut Tensor) {
+    shape_only(out, &a.shape);
+    for (o, x) in out.data.iter_mut().zip(&a.data) {
+        *o = -x;
+    }
+}
+
+/// `out = a * a` elementwise (same multiply as the interpreter's `v * v`).
+pub fn square_into(a: &Tensor, out: &mut Tensor) {
+    shape_only(out, &a.shape);
+    for (o, x) in out.data.iter_mut().zip(&a.data) {
+        *o = x * x;
+    }
+}
+
+/// `out = sin(a)` elementwise.
+pub fn sin_into(a: &Tensor, out: &mut Tensor) {
+    shape_only(out, &a.shape);
+    for (o, x) in out.data.iter_mut().zip(&a.data) {
+        *o = x.sin();
+    }
+}
+
+/// `out = cos(a)` elementwise.
+pub fn cos_into(a: &Tensor, out: &mut Tensor) {
+    shape_only(out, &a.shape);
+    for (o, x) in out.data.iter_mut().zip(&a.data) {
+        *o = x.cos();
+    }
+}
+
+/// `out = a` reinterpreted as `shape` (same row-major data).
+pub fn reshape_into(a: &Tensor, shape: &[usize], out: &mut Tensor) {
+    assert_eq!(a.data.len(), shape.iter().product::<usize>(), "reshape_into count");
+    shape_only(out, shape);
+    out.data.copy_from_slice(&a.data);
+}
+
+/// Keep-dims axis sum of a 2-D tensor: axis 1 -> (m, 1), axis 0 -> (1, n).
+/// Accumulation order matches the interpreter's `sum_axis_eval` exactly.
+pub fn sum_axis_into(a: &Tensor, axis: usize, out: &mut Tensor) {
+    assert_eq!(a.shape.len(), 2, "sum_axis_into wants 2-D");
+    let (m, n) = (a.shape[0], a.shape[1]);
+    if axis == 1 {
+        shape_only(out, &[m, 1]);
+        for i in 0..m {
+            out.data[i] = a.data[i * n..(i + 1) * n].iter().sum();
+        }
+    } else {
+        zero_fill(out, &[1, n]);
+        for i in 0..m {
+            for (j, o) in out.data.iter_mut().enumerate() {
+                *o += a.data[i * n + j];
+            }
+        }
+    }
+}
+
 /// `out = full(shape, v)`.
 pub fn broadcast_into(v: f64, shape: &[usize], out: &mut Tensor) {
     let n: usize = shape.iter().product();
@@ -176,6 +235,29 @@ mod tests {
         assert_eq!(out, a.clone().scale(-1.5));
         tanh_into(&a, &mut out);
         assert_eq!(out, a.map(f64::tanh));
+        neg_into(&a, &mut out);
+        assert_eq!(out, a.map(|v| -v));
+        square_into(&a, &mut out);
+        assert_eq!(out, a.map(|v| v * v));
+        sin_into(&a, &mut out);
+        assert_eq!(out, a.map(f64::sin));
+        cos_into(&a, &mut out);
+        assert_eq!(out, a.map(f64::cos));
+    }
+
+    #[test]
+    fn reshape_and_sum_axis_kernels() {
+        let a = t(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let mut out = Tensor::zeros(&[0]);
+        reshape_into(&a, &[3, 2], &mut out);
+        assert_eq!(out.shape(), &[3, 2]);
+        assert_eq!(out.data(), a.data());
+        sum_axis_into(&a, 1, &mut out);
+        assert_eq!(out.shape(), &[2, 1]);
+        assert_eq!(out.data(), &[6.0, 15.0]);
+        sum_axis_into(&a, 0, &mut out);
+        assert_eq!(out.shape(), &[1, 3]);
+        assert_eq!(out.data(), &[5.0, 7.0, 9.0]);
     }
 
     #[test]

@@ -71,6 +71,12 @@ impl Default for Bench {
     }
 }
 
+/// Whether the CI smoke mode is requested (`ZCS_BENCH_QUICK` set): benches
+/// keep their structure but shrink their measurement budget.
+pub fn quick_mode() -> bool {
+    std::env::var_os("ZCS_BENCH_QUICK").is_some()
+}
+
 impl Bench {
     /// Quick preset for expensive end-to-end steps.
     pub fn heavy() -> Self {
@@ -79,6 +85,34 @@ impl Bench {
             budget: Duration::from_secs(3),
             min_iters: 3,
             max_iters: 200,
+        }
+    }
+
+    /// Smoke preset: a tiny budget that still yields a usable mean.
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(10),
+            budget: Duration::from_millis(120),
+            min_iters: 3,
+            max_iters: 60,
+        }
+    }
+
+    /// [`Default`], or [`Bench::quick`] under `ZCS_BENCH_QUICK`.
+    pub fn from_env() -> Self {
+        if quick_mode() {
+            Self::quick()
+        } else {
+            Self::default()
+        }
+    }
+
+    /// [`Bench::heavy`], or [`Bench::quick`] under `ZCS_BENCH_QUICK`.
+    pub fn heavy_from_env() -> Self {
+        if quick_mode() {
+            Self::quick()
+        } else {
+            Self::heavy()
         }
     }
 

@@ -13,7 +13,7 @@ use std::collections::HashMap;
 use zcs::autodiff::{zcs_demo, Executor, Graph, NodeId, Program, Strategy};
 use zcs::rng::Pcg64;
 use zcs::tensor::Tensor;
-use zcs::util::propkit::{usize_in, Gen, Runner};
+use zcs::util::propkit::{Gen, Runner};
 
 /// Random problem instance: (m, n, q, seed).
 fn instance_gen() -> Gen<(usize, usize, usize, u64)> {
@@ -158,7 +158,15 @@ fn every_op_graph() -> (Graph, NodeId, Vec<NodeId>, HashMap<NodeId, Tensor>) {
     let ad = g.add(sb, bc); // Add
     let su = g.sub(ad, c2); // Sub
     let ml = g.mul(su, su); // Mul
-    let root = g.sum_all(ml); // SumAll
+    let sa1 = g.sum_axis(ml, 1); // SumAxis(1)  (2,1)
+    let sa0 = g.sum_axis(ml, 0); // SumAxis(0)  (1,2)
+    let op = g.matmul(sa1, sa0); // (2,2)
+    let ng = g.neg(op); // Neg
+    let sq = g.square(ng); // Square
+    let sn = g.sin(sq); // Sin
+    let cs = g.cos(sn); // Cos
+    let rs = g.reshape_of(cs, &[4, 1]); // Reshape
+    let root = g.sum_all(rs); // SumAll
 
     let mut inputs = HashMap::new();
     inputs.insert(p, Tensor::new(&[2, 3], rng.normals(6)));
@@ -184,7 +192,7 @@ fn compiled_matches_interpreter_for_every_op_and_derivative() {
         let want = g.eval(node, &inputs);
         assert_eq!(&want, out, "output {k} (node {node}) diverged");
     }
-    // sanity: the graph really contains all 13 op variants
+    // sanity: the graph really contains all 19 op variants
     use zcs::autodiff::Op;
     let mut seen = std::collections::HashSet::new();
     for node in &g.nodes {
@@ -199,8 +207,14 @@ fn compiled_matches_interpreter_for_every_op_and_derivative() {
         Op::ScaleBy,
         Op::Scale(1.0),
         Op::Tanh,
+        Op::Neg,
+        Op::Square,
+        Op::Sin,
+        Op::Cos,
+        Op::Reshape(vec![1]),
         Op::Broadcast(vec![1]),
         Op::SumAll,
+        Op::SumAxis(0),
         Op::MatMulNT,
         Op::MatMul,
         Op::Transpose,
