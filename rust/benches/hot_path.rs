@@ -8,10 +8,13 @@
 //! comparison to `BENCH_compile.json`, so the compile-layer perf trajectory
 //! is tracked from PR to PR.  Run: `cargo bench --bench hot_path`.
 
+use std::collections::HashMap;
 use std::rc::Rc;
-use zcs::autodiff::{zcs_demo, Executor, Strategy};
+use zcs::autodiff::{zcs_demo, Executor, NodeId, PassConfig, Program, Strategy};
 use zcs::config::RunConfig;
-use zcs::coordinator::{batch::Batcher, params::init_params};
+use zcs::coordinator::batch::{Batcher, PdeBatchSpec, PdeBatcher};
+use zcs::coordinator::params::init_params;
+use zcs::pde::residual::{build_training_problem, init_problem_weights, BlockSizes};
 use zcs::pde::ProblemKind;
 use zcs::rng::Pcg64;
 use zcs::runtime::{RunArg, Runtime};
@@ -30,6 +33,10 @@ fn main() -> anyhow::Result<()> {
     // interpreted vs compiled execution of the native AD strategies
     let compile_rows = bench_compiled_vs_interpreted(&mut table);
     write_bench_compile_json(&compile_rows)?;
+
+    // fused + threaded execution of the ZCS training-step programs
+    let exec_rows = bench_exec_hot_path(&mut table)?;
+    write_bench_exec_json(&exec_rows)?;
 
     // GP bank generation (one-time cost, amortised)
     let stats = Bench::heavy_from_env().run(|| {
@@ -114,6 +121,161 @@ fn main() -> anyhow::Result<()> {
     table.row(&["stokes solver (48^2, 4k iters)".into(), mean, p50, stats.iters.to_string()]);
 
     table.print();
+    Ok(())
+}
+
+/// One fused/threaded execution measurement of a ZCS step program.
+struct ExecRow {
+    problem: &'static str,
+    m: usize,
+    n: usize,
+    instructions_unfused: usize,
+    instructions_fused: usize,
+    fused_groups: usize,
+    fusion_kib_saved: f64,
+    unfused_1t: Stats,
+    fused_1t: Stats,
+    fused_2t: Stats,
+    fused_4t: Stats,
+}
+
+impl ExecRow {
+    /// Fusion alone (single thread).
+    fn speedup_fusion(&self) -> f64 {
+        self.unfused_1t.mean.as_secs_f64() / self.fused_1t.mean.as_secs_f64().max(1e-12)
+    }
+
+    /// Fusion + 4 threads vs the old single-thread unfused path -- the
+    /// headline wall-time win.
+    fn speedup_total(&self) -> f64 {
+        self.unfused_1t.mean.as_secs_f64() / self.fused_4t.mean.as_secs_f64().max(1e-12)
+    }
+}
+
+/// The full ZCS training-step program per case-study problem, executed
+/// unfused/serial (the old hot path), fused/serial, and fused on 2 and 4
+/// threads -- all on one frozen batch, so every run computes bit-identical
+/// outputs and only wall time moves.
+fn bench_exec_hot_path(table: &mut Table) -> anyhow::Result<Vec<ExecRow>> {
+    let bench = Bench::from_env();
+    let (hidden, k, n_bc) = (64usize, 32usize, 32usize);
+    let cases: [(ProblemKind, &'static str, usize, usize, usize); 3] = [
+        (ProblemKind::Antiderivative, "antiderivative", 64, 512, 8),
+        (ProblemKind::ReactionDiffusion, "reaction_diffusion", 48, 384, 8),
+        (ProblemKind::Kirchhoff, "kirchhoff", 16, 128, 9),
+    ];
+    let mut rows = Vec::new();
+    for (kind, name, m, n, q) in cases {
+        let sizes = BlockSizes { n_in: n, n_bc };
+        let built = build_training_problem(kind, Strategy::Zcs, m, q, hidden, k, sizes)?;
+        let fused = Program::compile(&built.graph, &built.outputs);
+        let unfused =
+            Program::compile_with(&built.graph, &built.outputs, PassConfig { fuse: false });
+        let weights = init_problem_weights(&built, 9);
+        let mut batcher = PdeBatcher::new(
+            kind,
+            PdeBatchSpec { m, n_in: n, n_bc, q, bank_size: m.max(16), bank_grid: 64 },
+            &mut Pcg64::seeded(3),
+        )?;
+        let batch = batcher.next_batch();
+        let mut inputs: HashMap<NodeId, &Tensor> = HashMap::new();
+        for (id, w) in built.weight_ids.iter().zip(&weights) {
+            inputs.insert(*id, w);
+        }
+        inputs.insert(built.p, &batch.p);
+        for (feed_name, node) in &built.feeds {
+            let t = &batch
+                .feeds
+                .iter()
+                .find(|(fname, _)| fname == feed_name)
+                .expect("batcher emits every feed")
+                .1;
+            inputs.insert(*node, t);
+        }
+        for (id, t) in &built.extra_inputs {
+            inputs.insert(*id, t);
+        }
+
+        let mut exec1 = Executor::with_threads(1);
+        let unfused_1t = bench.run(|| exec1.run_ref(&unfused, &inputs));
+        let fused_1t = bench.run(|| exec1.run_ref(&fused, &inputs));
+        let mut exec2 = Executor::with_threads(2);
+        let fused_2t = bench.run(|| exec2.run_ref(&fused, &inputs));
+        let mut exec4 = Executor::with_threads(4);
+        let fused_4t = bench.run(|| exec4.run_ref(&fused, &inputs));
+
+        let row = ExecRow {
+            problem: name,
+            m,
+            n,
+            instructions_unfused: unfused.stats.instructions,
+            instructions_fused: fused.stats.instructions,
+            fused_groups: fused.stats.fused_groups,
+            fusion_kib_saved: fused.stats.fusion_bytes_saved as f64 / 1024.0,
+            unfused_1t,
+            fused_1t,
+            fused_2t,
+            fused_4t,
+        };
+        for (label, stats) in [
+            ("unfused 1t", &row.unfused_1t),
+            ("fused 1t", &row.fused_1t),
+            ("fused 2t", &row.fused_2t),
+            ("fused 4t", &row.fused_4t),
+        ] {
+            table.row(&[
+                format!("zcs step {name}: {label}"),
+                format!("{:.3} ms", stats.mean_ms()),
+                format!("{:.3} ms", stats.p50.as_secs_f64() * 1e3),
+                stats.iters.to_string(),
+            ]);
+        }
+        eprintln!(
+            "zcs step {name}: fusion x{:.2}, fusion+4t x{:.2} \
+             ({} -> {} instructions, {} groups)",
+            row.speedup_fusion(),
+            row.speedup_total(),
+            row.instructions_unfused,
+            row.instructions_fused,
+            row.fused_groups,
+        );
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
+/// Persist the fused/threaded hot-path numbers so the perf trajectory is
+/// tracked across PRs (`BENCH_exec.json`).
+fn write_bench_exec_json(rows: &[ExecRow]) -> anyhow::Result<()> {
+    let cases: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("problem", Json::from(r.problem)),
+                ("strategy", Json::from("zcs")),
+                ("m", Json::from(r.m)),
+                ("n", Json::from(r.n)),
+                ("instructions_unfused", Json::from(r.instructions_unfused)),
+                ("instructions_fused", Json::from(r.instructions_fused)),
+                ("fused_groups", Json::from(r.fused_groups)),
+                ("fusion_kib_saved", Json::from(r.fusion_kib_saved)),
+                ("unfused_1t_ns", Json::from(r.unfused_1t.mean.as_nanos() as f64)),
+                ("fused_1t_ns", Json::from(r.fused_1t.mean.as_nanos() as f64)),
+                ("fused_2t_ns", Json::from(r.fused_2t.mean.as_nanos() as f64)),
+                ("fused_4t_ns", Json::from(r.fused_4t.mean.as_nanos() as f64)),
+                ("speedup_fusion", Json::from(r.speedup_fusion())),
+                ("speedup_total", Json::from(r.speedup_total())),
+            ])
+        })
+        .collect();
+    let doc = obj(vec![
+        ("bench", Json::from("hot_path.exec")),
+        ("unit", Json::from("ns/step")),
+        ("quick", Json::Bool(zcs::util::benchkit::quick_mode())),
+        ("cases", Json::from(cases)),
+    ]);
+    std::fs::write("BENCH_exec.json", doc.to_string())?;
+    eprintln!("wrote BENCH_exec.json");
     Ok(())
 }
 

@@ -57,6 +57,7 @@ fn main() -> anyhow::Result<()> {
                     bank_size: m.max(16),
                     bank_grid: 64,
                     log_every: 1,
+                    threads: 1,
                 };
                 let mut trainer = NativeTrainer::new(config)?;
                 let batch = trainer.next_batch();

@@ -8,16 +8,34 @@
 //! heap allocation at all.  Keep one `Executor` alive across runs
 //! (compile-once/run-many); it is reusable across *different* programs
 //! too, growing its arena as needed.
+//!
+//! The executor also owns a [`Pool`] of worker threads (default: the
+//! `ZCS_THREADS` environment variable, else serial).  The matmuls, the
+//! axis reductions and the fused elementwise instructions row-partition
+//! their output over the pool with every per-element accumulation kept
+//! sequential, so execution is bit-identical for any thread count --
+//! `rust/tests/fusion_pool.rs` pins threaded == serial to `==`.
 
 use super::graph::NodeId;
 use super::program::{Instr, OpCode, Operand, Program};
 use crate::tensor::{kernels, Tensor};
+use crate::util::pool::{default_threads, Pool};
 use std::collections::HashMap;
 
-/// Reusable execution arena.
-#[derive(Default)]
+/// Reusable execution arena plus the kernel worker pool.
 pub struct Executor {
     arena: Vec<Option<Tensor>>,
+    pool: Pool,
+    /// scratch for resolving `Fused` instruction operands without a
+    /// per-instruction allocation (raw pointers because the borrows it
+    /// holds are scoped to one instruction, not to the executor)
+    ext_scratch: Vec<*const Tensor>,
+}
+
+impl Default for Executor {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 /// Placeholder tensor for a slot that has never been written (zero-sized,
@@ -40,8 +58,20 @@ fn resolve<'a>(
 }
 
 impl Executor {
+    /// An executor with the environment-default thread count
+    /// (`ZCS_THREADS`, else serial).
     pub fn new() -> Self {
-        Self::default()
+        Self::with_threads(default_threads())
+    }
+
+    /// An executor whose kernels run on `threads` threads (1 = serial).
+    pub fn with_threads(threads: usize) -> Self {
+        Self { arena: Vec::new(), pool: Pool::new(threads), ext_scratch: Vec::new() }
+    }
+
+    /// Kernel threads this executor runs on.
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
     }
 
     /// Execute `program`, feeding graph inputs by their original `NodeId`
@@ -62,34 +92,55 @@ impl Executor {
         let ins: Vec<&Tensor> = program
             .inputs
             .iter()
-            .zip(&program.input_shapes)
-            .map(|(id, shape)| {
-                let t: &Tensor = inputs
+            .map(|id| {
+                inputs
                     .get(id)
                     .copied()
-                    .unwrap_or_else(|| panic!("missing input for node {id}"));
-                assert_eq!(t.shape(), &shape[..], "input {id} shape");
-                t
+                    .unwrap_or_else(|| panic!("missing input for node {id}"))
             })
             .collect();
+        self.run_inputs(program, &ins)
+    }
+
+    /// Lowest-overhead entry point: inputs already resolved into
+    /// [`Program::inputs`] order (what [`crate::coordinator::native`]'s
+    /// per-step feed plan produces -- no `HashMap` on the hot path).
+    pub fn run_inputs(&mut self, program: &Program, ins: &[&Tensor]) -> Vec<Tensor> {
+        assert_eq!(ins.len(), program.inputs.len(), "input count");
+        for ((id, shape), t) in program.inputs.iter().zip(&program.input_shapes).zip(ins) {
+            assert_eq!(t.shape(), &shape[..], "input {id} shape");
+        }
         if self.arena.len() < program.n_slots {
             self.arena.resize_with(program.n_slots, || None);
         }
 
+        // the fused-operand scratch is taken out for the duration of the
+        // instruction loop (it cannot be borrowed from `self` while the
+        // arena is) and put back so its capacity is reused across runs
+        let mut ext_scratch = std::mem::take(&mut self.ext_scratch);
         for instr in &program.instrs {
             let mut out = self.arena[instr.out].take().unwrap_or_else(empty_tensor);
-            self.step(instr, &ins, &program.consts, &mut out);
+            self.step(instr, ins, &program.consts, &mut out, &mut ext_scratch);
             self.arena[instr.out] = Some(out);
         }
+        ext_scratch.clear();
+        self.ext_scratch = ext_scratch;
 
         program
             .outputs
             .iter()
-            .map(|&v| resolve(&self.arena, &ins, &program.consts, v).clone())
+            .map(|&v| resolve(&self.arena, ins, &program.consts, v).clone())
             .collect()
     }
 
-    fn step(&self, instr: &Instr, ins: &[&Tensor], consts: &[Tensor], out: &mut Tensor) {
+    fn step(
+        &self,
+        instr: &Instr,
+        ins: &[&Tensor],
+        consts: &[Tensor],
+        out: &mut Tensor,
+        ext_scratch: &mut Vec<*const Tensor>,
+    ) {
         let arg = |k: usize| resolve(&self.arena, ins, consts, instr.args[k]);
         match instr.op {
             OpCode::Add => kernels::add_into(arg(0), arg(1), out),
@@ -111,10 +162,27 @@ impl Executor {
                 kernels::broadcast_into(v, &instr.shape, out);
             }
             OpCode::SumAll => kernels::sum_all_into(arg(0), out),
-            OpCode::SumAxis(axis) => kernels::sum_axis_into(arg(0), axis, out),
-            OpCode::MatMulNT => kernels::matmul_nt_into(arg(0), arg(1), out),
-            OpCode::MatMul => kernels::matmul_into(arg(0), arg(1), out),
+            OpCode::SumAxis(axis) => kernels::sum_axis_into_pool(arg(0), axis, out, &self.pool),
+            OpCode::MatMulNT => kernels::matmul_nt_into_pool(arg(0), arg(1), out, &self.pool),
+            OpCode::MatMul => kernels::matmul_into_pool(arg(0), arg(1), out, &self.pool),
             OpCode::Transpose => kernels::transpose_into(arg(0), out),
+            OpCode::Fused(ref kernel) => {
+                ext_scratch.clear();
+                for k in 0..instr.args.len() {
+                    ext_scratch.push(arg(k) as *const Tensor);
+                }
+                // SAFETY: `&Tensor` and `*const Tensor` have identical
+                // layout, and the pointees (arena slots, inputs, constants)
+                // are live and unmodified for the whole instruction -- the
+                // destination never aliases an operand (lowerer contract)
+                let exts: &[&Tensor] = unsafe {
+                    std::slice::from_raw_parts(
+                        ext_scratch.as_ptr() as *const &Tensor,
+                        ext_scratch.len(),
+                    )
+                };
+                kernels::fused_into(kernel, exts, &instr.shape, out, &self.pool);
+            }
         }
     }
 }
@@ -166,6 +234,31 @@ mod tests {
         assert_eq!(exec.run(&p2, &in2)[0].data(), &[2.0]);
         // and back to the first program
         assert_eq!(exec.run(&p1, &in1)[0].data(), &[3.0]);
+    }
+
+    #[test]
+    fn threaded_executor_bit_matches_serial() {
+        // a program touching matmul, fused elementwise and both reductions
+        let mut g = Graph::new();
+        let x = g.input(&[9, 7]);
+        let w = g.input(&[7, 9]);
+        let mm = g.matmul(x, w); // (9, 9)
+        let t = g.tanh(mm);
+        let sq = g.square(t);
+        let s = g.sum_axis(sq, 1);
+        let s0 = g.sum_axis(sq, 0);
+        let o1 = g.sum_all(s);
+        let o2 = g.sum_all(s0);
+        let prog = Program::compile(&g, &[o1, o2]);
+        let mut rng = crate::rng::Pcg64::seeded(11);
+        let mut inputs = HashMap::new();
+        inputs.insert(x, Tensor::new(&[9, 7], rng.normals(63)));
+        inputs.insert(w, Tensor::new(&[7, 9], rng.normals(63)));
+        let serial = Executor::with_threads(1).run(&prog, &inputs);
+        for threads in [2usize, 4] {
+            let threaded = Executor::with_threads(threads).run(&prog, &inputs);
+            assert_eq!(serial, threaded, "{threads} threads");
+        }
     }
 
     #[test]

@@ -30,5 +30,5 @@ pub mod zcs_demo;
 
 pub use exec::Executor;
 pub use graph::{Graph, NodeId, Op};
-pub use program::{Instr, OpCode, Operand, Program, ProgramStats};
+pub use program::{Instr, OpCode, Operand, PassConfig, Program, ProgramStats};
 pub use zcs_demo::{DemoNet, Strategy};

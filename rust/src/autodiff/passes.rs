@@ -20,6 +20,7 @@
 
 use super::graph::{Graph, NodeId, Op};
 use super::program::OpCode;
+use crate::tensor::kernels::{ExtKind, FusedKernel, MicroOp};
 use crate::tensor::Tensor;
 use std::collections::HashMap;
 
@@ -56,6 +57,12 @@ pub struct Dag {
     pub folded: usize,
     pub cse_hits: usize,
     pub simplified: usize,
+    /// `Fused` nodes emitted by [`fuse_elementwise`]
+    pub fused_groups: usize,
+    /// elementwise nodes absorbed into fused groups (instructions saved)
+    pub fused_ops: usize,
+    /// estimated intermediate bytes-moved saved per run by fusion
+    pub fusion_bytes_saved: u64,
 }
 
 /// Hash-cons key for constants: shape + exact bit pattern.
@@ -92,6 +99,8 @@ fn op_key(op: &OpCode, args: &[Val], shape: &[usize]) -> OpKey {
         // result shape (already part of the key) disambiguates reshapes
         OpCode::Reshape => (15, 0),
         OpCode::SumAxis(axis) => (16, *axis as u64),
+        // fusion runs after value numbering, so Fused never reaches CSE
+        OpCode::Fused(_) => unreachable!("Fused is produced after CSE"),
     };
     OpKey(tag, payload, args.to_vec(), shape.to_vec())
 }
@@ -277,6 +286,7 @@ fn fold(op: &OpCode, args: &[&Tensor], shape: &[usize]) -> Tensor {
         OpCode::MatMulNT => args[0].matmul(&args[1].transpose()),
         OpCode::MatMul => args[0].matmul(args[1]),
         OpCode::Transpose => args[0].transpose(),
+        OpCode::Fused(_) => unreachable!("Fused is produced after constant folding"),
     }
 }
 
@@ -359,7 +369,301 @@ pub fn build_dag(graph: &Graph, outputs: &[NodeId]) -> Dag {
         folded: b.folded,
         cse_hits: b.cse_hits,
         simplified: b.simplified,
+        fused_groups: 0,
+        fused_ops: 0,
+        fusion_bytes_saved: 0,
     }
+}
+
+// ---------------------------------------------------------------------------
+// Elementwise fusion
+// ---------------------------------------------------------------------------
+
+/// Ops that can join a fused elementwise group.
+fn fusable(op: &OpCode) -> bool {
+    matches!(
+        op,
+        OpCode::Add
+            | OpCode::Sub
+            | OpCode::Mul
+            | OpCode::Scale(_)
+            | OpCode::ScaleBy
+            | OpCode::Neg
+            | OpCode::Square
+            | OpCode::Sin
+            | OpCode::Cos
+            | OpCode::Tanh
+            | OpCode::Broadcast
+    )
+}
+
+/// How argument `pos` of an elementwise op is read inside a fused group.
+fn ext_kind(op: &OpCode, pos: usize) -> ExtKind {
+    match op {
+        OpCode::Broadcast => ExtKind::Scalar,
+        OpCode::ScaleBy if pos == 0 => ExtKind::Scalar,
+        _ => ExtKind::Elem,
+    }
+}
+
+/// Greedy elementwise fusion over a normalized [`Dag`].
+///
+/// A node joins the fused group of its consumers when (a) it is an
+/// elementwise op ([`fusable`]), (b) *every* use of its value -- including
+/// as a program output -- lies inside one group, and (c) its output shape
+/// equals the group's shape (`Broadcast` members satisfy this by
+/// definition: their scalar operand becomes a per-pass external).  Walking
+/// nodes in reverse topological order makes the membership transitive in a
+/// single sweep: chains, diamonds and arbitrary single-escape DAGs all
+/// collapse into one group.
+///
+/// Each group with two or more members is replaced by a single
+/// [`OpCode::Fused`] node carrying a register-machine micro-program
+/// ([`FusedKernel`]) over the group's *external* arguments; every interior
+/// value lives only in a register, so one pass over the data replaces one
+/// pass per original instruction.  The micro-ops are the same scalar
+/// operations in the same dependency order, so fused execution is
+/// bit-identical to unfused execution (pinned by
+/// `rust/tests/fusion_pool.rs`).
+pub fn fuse_elementwise(dag: Dag) -> Dag {
+    let n = dag.nodes.len();
+    if n == 0 {
+        return dag;
+    }
+
+    // -- liveness: simplification can orphan interior nodes; prune them
+    // here so dead consumers neither block fusion nor skew its accounting
+    // (the lowerer's own DCE would drop them anyway)
+    let mut live = vec![false; n];
+    let mut stack: Vec<usize> = dag
+        .outputs
+        .iter()
+        .filter_map(|v| match v {
+            Val::Node(m) => Some(*m),
+            _ => None,
+        })
+        .collect();
+    while let Some(i) = stack.pop() {
+        if live[i] {
+            continue;
+        }
+        live[i] = true;
+        for arg in &dag.nodes[i].args {
+            if let Val::Node(m) = arg {
+                stack.push(*m);
+            }
+        }
+    }
+
+    // -- uses of every live node's value
+    let mut consumers: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, node) in dag.nodes.iter().enumerate() {
+        if !live[i] {
+            continue;
+        }
+        for arg in &node.args {
+            if let Val::Node(m) = arg {
+                consumers[*m].push(i);
+            }
+        }
+    }
+    let mut escapes = vec![false; n];
+    for v in &dag.outputs {
+        if let Val::Node(m) = *v {
+            escapes[m] = true;
+        }
+    }
+
+    // -- group assignment: group[i] is the root (sink) node of i's group
+    let mut group: Vec<usize> = (0..n).collect();
+    let mut in_group = vec![false; n];
+    for i in (0..n).rev() {
+        if !live[i] || !fusable(&dag.nodes[i].op) {
+            continue;
+        }
+        in_group[i] = true;
+        if escapes[i] || consumers[i].is_empty() {
+            continue; // must stay materialized: it is a root at best
+        }
+        let g = group[consumers[i][0]];
+        let all_in_one_group = consumers[i]
+            .iter()
+            .all(|&c| in_group[c] && group[c] == g);
+        if all_in_one_group && in_group[g] && dag.nodes[i].shape == dag.nodes[g].shape {
+            group[i] = g;
+        }
+    }
+
+    // -- members per root, ascending (construction order is topological)
+    let mut members_of: HashMap<usize, Vec<usize>> = HashMap::new();
+    for i in 0..n {
+        if in_group[i] {
+            members_of.entry(group[i]).or_default().push(i);
+        }
+    }
+
+    // -- rebuild the node list, collapsing multi-member groups
+    let mut new_nodes: Vec<DagNode> = Vec::new();
+    let mut remap: Vec<Option<Val>> = vec![None; n];
+    let remap_val = |v: Val, remap: &[Option<Val>]| -> Val {
+        match v {
+            Val::Node(m) => remap[m].expect("args precede uses in topo order"),
+            other => other,
+        }
+    };
+    let mut fused_groups = 0usize;
+    let mut fused_ops = 0usize;
+    let mut fusion_bytes_saved = 0u64;
+    for i in 0..n {
+        if !live[i] {
+            continue; // orphaned by simplification: drop
+        }
+        if in_group[i] && group[i] != i {
+            continue; // absorbed member: value lives in a register only
+        }
+        let node = &dag.nodes[i];
+        if in_group[i] {
+            let members = &members_of[&i];
+            if members.len() >= 2 {
+                let (kernel, ext_vals, saved) =
+                    build_fused_kernel(&dag, members, &group, &in_group, i);
+                let args: Vec<Val> =
+                    ext_vals.iter().map(|&v| remap_val(v, &remap)).collect();
+                fused_groups += 1;
+                fused_ops += members.len() - 1;
+                fusion_bytes_saved += saved;
+                new_nodes.push(DagNode {
+                    op: OpCode::Fused(Box::new(kernel)),
+                    args,
+                    shape: node.shape.clone(),
+                });
+                remap[i] = Some(Val::Node(new_nodes.len() - 1));
+                continue;
+            }
+        }
+        let args: Vec<Val> = node.args.iter().map(|&v| remap_val(v, &remap)).collect();
+        new_nodes.push(DagNode { op: node.op.clone(), args, shape: node.shape.clone() });
+        remap[i] = Some(Val::Node(new_nodes.len() - 1));
+    }
+
+    let outputs: Vec<Val> = dag.outputs.iter().map(|&v| remap_val(v, &remap)).collect();
+    Dag {
+        inputs: dag.inputs,
+        input_shapes: dag.input_shapes,
+        consts: dag.consts,
+        nodes: new_nodes,
+        outputs,
+        graph_nodes: dag.graph_nodes,
+        live_nodes: dag.live_nodes,
+        folded: dag.folded,
+        cse_hits: dag.cse_hits,
+        simplified: dag.simplified,
+        fused_groups,
+        fused_ops,
+        fusion_bytes_saved,
+    }
+}
+
+/// Lower one fused group (members ascending, `root` last) to a
+/// [`FusedKernel`] micro-program.  Returns the kernel, the external
+/// argument values in load order (original-dag `Val`s, to be remapped by
+/// the caller), and the estimated bytes-moved saved per run.
+fn build_fused_kernel(
+    dag: &Dag,
+    members: &[usize],
+    group: &[usize],
+    in_group: &[bool],
+    root: usize,
+) -> (FusedKernel, Vec<Val>, u64) {
+    let internal = |v: Val| -> Option<usize> {
+        match v {
+            Val::Node(a) if in_group[a] && group[a] == root && a != root => Some(a),
+            _ => None,
+        }
+    };
+
+    // pass 1: intern external arguments in first-use order
+    let mut ext_vals: Vec<Val> = Vec::new();
+    let mut ext_kinds: Vec<ExtKind> = Vec::new();
+    let mut ext_index: HashMap<(Val, ExtKind), u16> = HashMap::new();
+    for &mem in members {
+        let node = &dag.nodes[mem];
+        for (pos, &arg) in node.args.iter().enumerate() {
+            if internal(arg).is_none() {
+                let kind = ext_kind(&node.op, pos);
+                ext_index.entry((arg, kind)).or_insert_with(|| {
+                    ext_vals.push(arg);
+                    ext_kinds.push(kind);
+                    (ext_vals.len() - 1) as u16
+                });
+            }
+        }
+    }
+
+    // pass 2: emit micro-ops; register file = externals then op results.
+    // Register indices are u16: a group can never outgrow that space
+    // silently (wrapped indices would compute wrong values bit for bit).
+    assert!(
+        ext_vals.len() + members.len() <= u16::MAX as usize,
+        "fused group too large for the u16 register file ({} externals + {} members)",
+        ext_vals.len(),
+        members.len()
+    );
+    let n_ext = ext_vals.len();
+    let mut reg_of: HashMap<usize, u16> = HashMap::new();
+    let mut ops: Vec<MicroOp> = Vec::new();
+    for &mem in members {
+        let node = &dag.nodes[mem];
+        let reg = |pos: usize, reg_of: &HashMap<usize, u16>| -> u16 {
+            let arg = node.args[pos];
+            match internal(arg) {
+                Some(a) => reg_of[&a],
+                None => ext_index[&(arg, ext_kind(&node.op, pos))],
+            }
+        };
+        let micro = match &node.op {
+            // a Broadcast member is just "read the scalar external":
+            // its register is the external's register, no op needed
+            OpCode::Broadcast => {
+                let r = reg(0, &reg_of);
+                reg_of.insert(mem, r);
+                continue;
+            }
+            OpCode::Add => MicroOp::Add(reg(0, &reg_of), reg(1, &reg_of)),
+            OpCode::Sub => MicroOp::Sub(reg(0, &reg_of), reg(1, &reg_of)),
+            OpCode::Mul => MicroOp::Mul(reg(0, &reg_of), reg(1, &reg_of)),
+            // ScaleBy(s, x) = x * s: same multiply, scalar loaded once
+            OpCode::ScaleBy => MicroOp::Mul(reg(1, &reg_of), reg(0, &reg_of)),
+            OpCode::Scale(c) => MicroOp::Scale(reg(0, &reg_of), *c),
+            OpCode::Neg => MicroOp::Neg(reg(0, &reg_of)),
+            OpCode::Square => MicroOp::Square(reg(0, &reg_of)),
+            OpCode::Sin => MicroOp::Sin(reg(0, &reg_of)),
+            OpCode::Cos => MicroOp::Cos(reg(0, &reg_of)),
+            OpCode::Tanh => MicroOp::Tanh(reg(0, &reg_of)),
+            other => unreachable!("non-elementwise op {other:?} in fused group"),
+        };
+        ops.push(micro);
+        reg_of.insert(mem, (n_ext + ops.len() - 1) as u16);
+    }
+    let out = reg_of[&root];
+    let kernel = FusedKernel { exts: ext_kinds, ops, out };
+
+    // traffic estimate: unfused, every member streams its reads + one
+    // write over the group's element count (scalars are register-resident
+    // either way); fused, one read per Elem external + one write
+    let elems = dag.nodes[root].shape.iter().product::<usize>() as u64;
+    let mut unfused: u64 = 0;
+    for &mem in members {
+        let node = &dag.nodes[mem];
+        let reads = match node.op {
+            OpCode::Broadcast => 0,
+            OpCode::ScaleBy => 1,
+            _ => node.args.len(),
+        } as u64;
+        unfused += (reads + 1) * elems * 8;
+    }
+    let fused_traffic = (kernel.elem_exts() as u64 + 1) * elems * 8;
+    (kernel, ext_vals, unfused.saturating_sub(fused_traffic))
 }
 
 #[cfg(test)]
@@ -427,6 +731,88 @@ mod tests {
         let mut inputs = HashMap::new();
         inputs.insert(x, Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]));
         assert_eq!(prog.eval_once(&inputs)[0].data(), &[21.0]);
+    }
+
+    #[test]
+    fn fusion_collapses_chains_and_diamonds() {
+        // diamond: t = tanh(x); u = t*t; v = -t; w = u + v; out = sum(w)
+        let mut g = Graph::new();
+        let x = g.input(&[8]);
+        let t = g.tanh(x);
+        let u = g.square(t);
+        let v = g.neg(t);
+        let w = g.add(u, v);
+        let out = g.sum_all(w);
+        let dag = fuse_elementwise(build_dag(&g, &[out]));
+        assert_eq!(dag.fused_groups, 1);
+        assert_eq!(dag.fused_ops, 3); // 4 members -> 1 instruction
+        assert_eq!(dag.nodes.len(), 2); // Fused + SumAll
+        let OpCode::Fused(kernel) = &dag.nodes[0].op else {
+            panic!("first node should be fused, got {:?}", dag.nodes[0].op)
+        };
+        assert_eq!(kernel.exts.len(), 1); // x, loaded once per element
+        assert_eq!(kernel.ops.len(), 4);
+        assert!(dag.fusion_bytes_saved > 0);
+    }
+
+    #[test]
+    fn escaping_values_stay_materialized() {
+        // t is a program output, so it cannot be absorbed
+        let mut g = Graph::new();
+        let x = g.input(&[4]);
+        let t = g.tanh(x);
+        let u = g.square(t);
+        let v = g.sin(u);
+        let dag = fuse_elementwise(build_dag(&g, &[t, v]));
+        // t standalone; {u, v} fuse with t as an external
+        assert_eq!(dag.fused_groups, 1);
+        assert_eq!(dag.nodes.len(), 2);
+        assert!(matches!(dag.nodes[0].op, OpCode::Tanh));
+        assert!(matches!(dag.nodes[1].op, OpCode::Fused(_)));
+        assert_eq!(dag.nodes[1].args, vec![Val::Node(0)]);
+    }
+
+    #[test]
+    fn broadcast_becomes_a_scalar_external() {
+        let mut g = Graph::new();
+        let x = g.input(&[2, 3]);
+        let s = g.input(&[]);
+        let bc = g.broadcast(s, &[2, 3]);
+        let y = g.add(bc, x);
+        let out = g.sum_all(y);
+        let dag = fuse_elementwise(build_dag(&g, &[out]));
+        assert_eq!(dag.fused_groups, 1);
+        let OpCode::Fused(kernel) = &dag.nodes[0].op else { panic!("expected fused") };
+        assert_eq!(kernel.ops.len(), 1); // just the add; broadcast is a load
+        assert_eq!(kernel.exts, vec![ExtKind::Scalar, ExtKind::Elem]);
+    }
+
+    #[test]
+    fn multi_consumer_values_split_groups() {
+        // t feeds both an elementwise chain and a matmul: it must stay
+        // materialized, and only the chain fuses
+        let mut g = Graph::new();
+        let x = g.input(&[3, 3]);
+        let t = g.tanh(x);
+        let c = g.cos(t);
+        let sq = g.square(c);
+        let mm = g.matmul(t, sq);
+        let out = g.sum_all(mm);
+        let dag = fuse_elementwise(build_dag(&g, &[out]));
+        assert_eq!(dag.fused_groups, 1); // {c, sq}
+        assert_eq!(dag.fused_ops, 1);
+        assert!(matches!(dag.nodes[0].op, OpCode::Tanh));
+    }
+
+    #[test]
+    fn singleton_groups_are_left_unfused() {
+        let mut g = Graph::new();
+        let x = g.input(&[4]);
+        let t = g.tanh(x);
+        let out = g.sum_all(t);
+        let dag = fuse_elementwise(build_dag(&g, &[out]));
+        assert_eq!(dag.fused_groups, 0);
+        assert!(matches!(dag.nodes[0].op, OpCode::Tanh));
     }
 
     #[test]

@@ -50,6 +50,7 @@
 
 use super::graph::{Graph, NodeId, Op};
 use super::{exec::Executor, passes};
+use crate::tensor::kernels::FusedKernel;
 use crate::tensor::Tensor;
 use std::collections::HashMap;
 
@@ -90,6 +91,10 @@ pub enum OpCode {
     MatMulNT,
     MatMul,
     Transpose,
+    /// a fused chain/DAG of same-shape elementwise ops, executed as one
+    /// pass over the data (see [`passes::fuse_elementwise`] and
+    /// [`crate::tensor::kernels::fused_into`])
+    Fused(Box<FusedKernel>),
 }
 
 /// One instruction: `arena[out] = op(args...)`.
@@ -117,6 +122,14 @@ pub struct ProgramStats {
     pub cse_hits: usize,
     /// algebraic identity rewrites applied
     pub simplified: usize,
+    /// `Fused` instructions emitted by the elementwise-fusion pass
+    pub fused_groups: usize,
+    /// elementwise instructions absorbed into fused groups (instructions
+    /// eliminated = `fused_ops`)
+    pub fused_ops: usize,
+    /// estimated intermediate bytes-moved the fusion pass saves per run
+    /// (loads+stores of fused-away temporaries)
+    pub fusion_bytes_saved: u64,
     /// arena slots after liveness-driven reuse (<= instructions)
     pub n_slots: usize,
     /// peak simultaneously-live intermediate bytes during execution
@@ -150,12 +163,34 @@ pub struct Program {
     pub stats: ProgramStats,
 }
 
+/// Pass-pipeline switches for [`Program::compile_with`].
+#[derive(Clone, Copy, Debug)]
+pub struct PassConfig {
+    /// run the elementwise-fusion pass (on by default; switched off by the
+    /// differential tests that pin fused == unfused bit-exactness)
+    pub fuse: bool,
+}
+
+impl Default for PassConfig {
+    fn default() -> Self {
+        Self { fuse: true }
+    }
+}
+
 impl Program {
     /// Lower `graph` restricted to `outputs` through the full pass
     /// pipeline (DCE, constant folding, CSE, algebraic simplification,
-    /// buffer liveness).
+    /// elementwise fusion, buffer liveness).
     pub fn compile(graph: &Graph, outputs: &[NodeId]) -> Program {
-        let dag = passes::build_dag(graph, outputs);
+        Self::compile_with(graph, outputs, PassConfig::default())
+    }
+
+    /// [`Program::compile`] with explicit pass switches.
+    pub fn compile_with(graph: &Graph, outputs: &[NodeId], config: PassConfig) -> Program {
+        let mut dag = passes::build_dag(graph, outputs);
+        if config.fuse {
+            dag = passes::fuse_elementwise(dag);
+        }
         lower(dag)
     }
 
@@ -311,6 +346,9 @@ fn lower(dag: passes::Dag) -> Program {
         folded: dag.folded,
         cse_hits: dag.cse_hits,
         simplified: dag.simplified,
+        fused_groups: dag.fused_groups,
+        fused_ops: dag.fused_ops,
+        fusion_bytes_saved: dag.fusion_bytes_saved,
         n_slots,
         peak_live_bytes,
         const_bytes,
@@ -339,14 +377,22 @@ mod tests {
         let s = g.add(x, y);
         let p = g.mul(s, s);
         let out = g.sum_all(p);
+        // default pipeline: add + mul fuse into one elementwise pass
         let prog = Program::compile(&g, &[out]);
-        assert_eq!(prog.instrs.len(), 3);
+        assert_eq!(prog.instrs.len(), 2);
+        assert_eq!(prog.stats.fused_groups, 1);
+        assert_eq!(prog.stats.fused_ops, 1);
+        // fusion off: one instruction per surviving node
+        let unfused = Program::compile_with(&g, &[out], PassConfig { fuse: false });
+        assert_eq!(unfused.instrs.len(), 3);
+        assert_eq!(unfused.stats.fused_groups, 0);
         let mut inputs = HashMap::new();
         inputs.insert(x, Tensor::vec1(vec![1.0, 2.0]));
         inputs.insert(y, Tensor::vec1(vec![3.0, 4.0]));
         let got = prog.eval_once(&inputs);
         assert_eq!(got[0].data(), &[16.0 + 36.0]);
         assert_eq!(got[0], g.eval(out, &inputs));
+        assert_eq!(got[0], unfused.eval_once(&inputs)[0]);
     }
 
     #[test]
@@ -370,14 +416,19 @@ mod tests {
         let t2 = g.tanh(x); // identical subtree
         let s = g.add(t1, t2);
         let out = g.sum_all(s);
-        let prog = Program::compile(&g, &[out]);
-        // tanh appears once; add(t, t) and sum remain
+        // fusion off, so the structure is visible: tanh appears once;
+        // add(t, t) and sum remain
+        let prog = Program::compile_with(&g, &[out], PassConfig { fuse: false });
         let tanhs = prog.instrs.iter().filter(|i| matches!(i.op, OpCode::Tanh)).count();
         assert_eq!(tanhs, 1);
         assert_eq!(prog.stats.cse_hits, 1);
         let mut inputs = HashMap::new();
         inputs.insert(x, Tensor::vec1(vec![0.1, -0.2, 0.3]));
         assert_eq!(prog.eval_once(&inputs)[0], g.eval(out, &inputs));
+        // default pipeline fuses the deduplicated tanh into the add
+        let fused = Program::compile(&g, &[out]);
+        assert_eq!(fused.stats.fused_groups, 1);
+        assert_eq!(fused.eval_once(&inputs)[0], g.eval(out, &inputs));
     }
 
     #[test]
@@ -439,11 +490,21 @@ mod tests {
             cur = g.tanh(cur);
         }
         let out = g.sum_all(cur);
-        let prog = Program::compile(&g, &[out]);
+        let prog = Program::compile_with(&g, &[out], PassConfig { fuse: false });
         assert_eq!(prog.instrs.len(), 6);
         assert!(prog.n_slots <= 2, "chain should reuse slots, got {}", prog.n_slots);
         // peak: two [4] tensors live across one step
         assert_eq!(prog.stats.peak_live_bytes, 2 * 4 * 8);
+        // fused: the whole chain is one pass + the reduction, and the
+        // intermediate tanh buffers are gone from the peak
+        let fused = Program::compile(&g, &[out]);
+        assert_eq!(fused.instrs.len(), 2);
+        assert_eq!(fused.stats.fused_groups, 1);
+        assert_eq!(fused.stats.fused_ops, 4);
+        assert_eq!(fused.stats.peak_live_bytes, 4 * 8 + 8);
+        let mut inputs = HashMap::new();
+        inputs.insert(x, Tensor::vec1(vec![0.3, -0.1, 0.7, 0.2]));
+        assert_eq!(fused.eval_once(&inputs)[0], prog.eval_once(&inputs)[0]);
     }
 
     #[test]

@@ -10,7 +10,9 @@ use crate::config::RunConfig;
 use crate::pde::{residual::residual_for, ProblemKind};
 use crate::rng::Pcg64;
 use crate::runtime::{ArtifactMeta, HostTensor, RunArg};
-use crate::sampler::{boundary_points_2d, interior_points_2d, Edge, FunctionBank, GpSampler1d};
+use crate::sampler::{
+    boundary_points_2d, interior_columns_2d, interior_points_2d, Edge, FunctionBank, GpSampler1d,
+};
 use crate::solvers::KirchhoffSolver;
 use crate::tensor::Tensor;
 use anyhow::{bail, ensure, Result};
@@ -259,6 +261,14 @@ pub struct PdeBatch {
     pub feeds: Vec<(String, Tensor)>,
 }
 
+impl PdeBatch {
+    /// An empty batch for [`PdeBatcher::fill_batch`] to populate; after
+    /// the first fill every subsequent fill reuses the allocations.
+    pub fn empty() -> Self {
+        Self { p: Tensor::zeros(&[0]), feeds: Vec::new() }
+    }
+}
+
 /// Batch generator for the *native* engine (no artifacts, no PJRT): every
 /// step it picks a fresh function subset from the GP bank (or draws fresh
 /// Kirchhoff coefficients), resamples collocation points via `sampler/`,
@@ -276,10 +286,44 @@ pub struct PdeBatcher {
     rng: Pcg64,
     last_functions: Vec<usize>,
     last_coeffs: Vec<f64>,
+    /// sensor abscissae (lazily built linspace over [0, 1])
+    sensor_xs: Vec<f64>,
+    /// scratch columns reused across [`PdeBatcher::fill_batch`] calls so
+    /// the steady state allocates nothing
+    scratch_x: Vec<f64>,
+    scratch_y: Vec<f64>,
 }
 
-fn col(v: &[f64]) -> Tensor {
-    Tensor::new(&[v.len(), 1], v.to_vec())
+/// Write cursor over a [`PdeBatch`]'s named feeds: reuses the tensor at
+/// each position (growing the vec only on the first fill), so batch
+/// buffers are overwritten in place step after step.
+struct FeedCursor<'a> {
+    feeds: &'a mut Vec<(String, Tensor)>,
+    idx: usize,
+}
+
+impl FeedCursor<'_> {
+    /// The mutable payload of the next feed, reset to `shape`; the caller
+    /// must overwrite every element.
+    fn next(&mut self, name: &str, shape: &[usize]) -> &mut [f64] {
+        if self.idx == self.feeds.len() {
+            self.feeds.push((name.to_string(), Tensor::zeros(&[0])));
+        }
+        let (have, t) = &mut self.feeds[self.idx];
+        assert_eq!(have.as_str(), name, "feed order changed between fills");
+        self.idx += 1;
+        t.reset(shape)
+    }
+
+    /// A feed that is a single column of `values`.
+    fn col(&mut self, name: &str, values: &[f64]) {
+        self.next(name, &[values.len(), 1]).copy_from_slice(values);
+    }
+
+    /// A constant-valued column feed.
+    fn const_col(&mut self, name: &str, n: usize, v: f64) {
+        self.next(name, &[n, 1]).fill(v);
+    }
 }
 
 impl PdeBatcher {
@@ -323,6 +367,9 @@ impl PdeBatcher {
             rng: rng.clone(),
             last_functions: Vec::new(),
             last_coeffs: Vec::new(),
+            sensor_xs: Vec::new(),
+            scratch_x: Vec::new(),
+            scratch_y: Vec::new(),
         })
     }
 
@@ -339,143 +386,187 @@ impl PdeBatcher {
     }
 
     /// Next batch, feeds in the residual layer's registration order.
+    /// Allocates a fresh [`PdeBatch`]; steady-state callers should hold
+    /// one batch and refill it with [`PdeBatcher::fill_batch`].
     pub fn next_batch(&mut self) -> PdeBatch {
+        let mut batch = PdeBatch::empty();
+        self.fill_batch(&mut batch);
+        batch
+    }
+
+    /// Overwrite `batch` in place with the next draw -- no feed tensor is
+    /// reallocated after the first fill, and the random sequence is
+    /// identical to repeated [`PdeBatcher::next_batch`] calls.
+    pub fn fill_batch(&mut self, batch: &mut PdeBatch) {
         let PdeBatchSpec { m, n_in, n_bc, q, .. } = self.spec;
-        let p = match self.kind {
+        // -- sensor matrix p
+        match self.kind {
             ProblemKind::Kirchhoff => {
-                self.last_coeffs = self.rng.normals(m * q);
-                Tensor::new(&[m, q], self.last_coeffs.clone())
+                self.last_coeffs.resize(m * q, 0.0);
+                self.rng.fill_normals(&mut self.last_coeffs);
+                batch.p.reset(&[m, q]).copy_from_slice(&self.last_coeffs);
             }
             _ => {
                 let bank = self.bank.as_ref().expect("problem has a function bank");
                 self.last_functions = self.rng.choose(bank.len(), m);
-                let mut data = Vec::with_capacity(m * q);
-                for &fi in &self.last_functions {
-                    data.extend(bank.sensors(fi, q));
+                if self.sensor_xs.len() != q {
+                    self.sensor_xs = Tensor::linspace(0.0, 1.0, q).into_data();
                 }
-                Tensor::new(&[m, q], data)
+                let p = batch.p.reset(&[m, q]);
+                for (i, &fi) in self.last_functions.iter().enumerate() {
+                    for (j, &x) in self.sensor_xs.iter().enumerate() {
+                        p[i * q + j] = bank.eval(fi, x);
+                    }
+                }
             }
-        };
-        let mut feeds: Vec<(String, Tensor)> = Vec::new();
+        }
+
+        let mut cur = FeedCursor { feeds: &mut batch.feeds, idx: 0 };
         match self.kind {
             ProblemKind::Antiderivative => {
-                let xs = self.rng.uniforms_in(n_in, 0.0, 1.0);
-                feeds.push(("in.x0".into(), col(&xs)));
-                feeds.push(("in.f".into(), self.bank_rows(&xs)));
+                self.scratch_x.resize(n_in, 0.0);
+                self.rng.fill_uniforms_in(&mut self.scratch_x, 0.0, 1.0);
+                cur.col("in.x0", &self.scratch_x);
+                bank_rows(
+                    self.bank.as_ref(),
+                    &self.last_functions,
+                    &self.scratch_x,
+                    cur.next("in.f", &[m, n_in]),
+                );
             }
             ProblemKind::ReactionDiffusion => {
-                let (xs, ts) = self.interior(n_in);
-                feeds.push(("in.x0".into(), col(&xs)));
-                feeds.push(("in.x1".into(), col(&ts)));
+                fill_interior(&mut self.rng, &mut self.scratch_x, &mut self.scratch_y, n_in);
+                cur.col("in.x0", &self.scratch_x);
+                cur.col("in.x1", &self.scratch_y);
                 // the source f is time-independent: evaluate at the x column
-                feeds.push(("in.f".into(), self.bank_rows(&xs)));
-                let icx = self.rng.uniforms_in(n_bc, 0.0, 1.0);
-                feeds.push(("ic.x0".into(), col(&icx)));
-                feeds.push(("ic.x1".into(), Tensor::zeros(&[n_bc, 1])));
-                let walls: Vec<f64> = (0..n_bc).map(|i| (i % 2) as f64).collect();
-                let wt = self.rng.uniforms_in(n_bc, 0.0, 1.0);
-                feeds.push(("bc.x0".into(), col(&walls)));
-                feeds.push(("bc.x1".into(), col(&wt)));
+                bank_rows(
+                    self.bank.as_ref(),
+                    &self.last_functions,
+                    &self.scratch_x,
+                    cur.next("in.f", &[m, n_in]),
+                );
+                self.scratch_x.resize(n_bc, 0.0);
+                self.rng.fill_uniforms_in(&mut self.scratch_x, 0.0, 1.0);
+                cur.col("ic.x0", &self.scratch_x);
+                cur.const_col("ic.x1", n_bc, 0.0);
+                let walls = cur.next("bc.x0", &[n_bc, 1]);
+                for (i, w) in walls.iter_mut().enumerate() {
+                    *w = (i % 2) as f64;
+                }
+                self.rng.fill_uniforms_in(&mut self.scratch_x, 0.0, 1.0);
+                cur.col("bc.x1", &self.scratch_x);
             }
             ProblemKind::Burgers => {
-                let (xs, ts) = self.interior(n_in);
-                feeds.push(("in.x0".into(), col(&xs)));
-                feeds.push(("in.x1".into(), col(&ts)));
-                let icx = self.rng.uniforms_in(n_bc, 0.0, 1.0);
-                feeds.push(("ic.x0".into(), col(&icx)));
-                feeds.push(("ic.x1".into(), Tensor::zeros(&[n_bc, 1])));
-                feeds.push(("ic.u0".into(), self.bank_rows(&icx)));
+                fill_interior(&mut self.rng, &mut self.scratch_x, &mut self.scratch_y, n_in);
+                cur.col("in.x0", &self.scratch_x);
+                cur.col("in.x1", &self.scratch_y);
+                self.scratch_x.resize(n_bc, 0.0);
+                self.rng.fill_uniforms_in(&mut self.scratch_x, 0.0, 1.0);
+                cur.col("ic.x0", &self.scratch_x);
+                cur.const_col("ic.x1", n_bc, 0.0);
+                bank_rows(
+                    self.bank.as_ref(),
+                    &self.last_functions,
+                    &self.scratch_x,
+                    cur.next("ic.u0", &[m, n_bc]),
+                );
                 // periodic pairs share their t coordinates
-                let tb = self.rng.uniforms_in(n_bc, 0.0, 1.0);
-                feeds.push(("left.x0".into(), Tensor::zeros(&[n_bc, 1])));
-                feeds.push(("left.x1".into(), col(&tb)));
-                feeds.push(("right.x0".into(), Tensor::full(&[n_bc, 1], 1.0)));
-                feeds.push(("right.x1".into(), col(&tb)));
+                self.rng.fill_uniforms_in(&mut self.scratch_x, 0.0, 1.0);
+                cur.const_col("left.x0", n_bc, 0.0);
+                cur.col("left.x1", &self.scratch_x);
+                cur.const_col("right.x0", n_bc, 1.0);
+                cur.col("right.x1", &self.scratch_x);
             }
             ProblemKind::Kirchhoff => {
-                let (xs, ys) = self.interior(n_in);
-                feeds.push(("in.x0".into(), col(&xs)));
-                feeds.push(("in.x1".into(), col(&ys)));
-                feeds.push(("in.q".into(), self.kirchhoff_load(&xs, &ys)));
-                let (bx, by) = self.edge_cycle(n_bc);
-                feeds.push(("bnd.x0".into(), col(&bx)));
-                feeds.push(("bnd.x1".into(), col(&by)));
+                fill_interior(&mut self.rng, &mut self.scratch_x, &mut self.scratch_y, n_in);
+                cur.col("in.x0", &self.scratch_x);
+                cur.col("in.x1", &self.scratch_y);
+                kirchhoff_load(
+                    self.kirchhoff_modes,
+                    &self.last_coeffs,
+                    (m, q),
+                    &self.scratch_x,
+                    &self.scratch_y,
+                    cur.next("in.q", &[m, n_in]),
+                );
+                // points cycling the four unit-square edges
+                self.scratch_x.resize(n_bc, 0.0);
+                self.scratch_y.resize(n_bc, 0.0);
+                for i in 0..n_bc {
+                    let s = self.rng.uniform();
+                    let (x, y) = match i % 4 {
+                        0 => (0.0, s),
+                        1 => (1.0, s),
+                        2 => (s, 0.0),
+                        _ => (s, 1.0),
+                    };
+                    self.scratch_x[i] = x;
+                    self.scratch_y[i] = y;
+                }
+                cur.col("bnd.x0", &self.scratch_x);
+                cur.col("bnd.x1", &self.scratch_y);
                 // moment blocks: u_xx on the x-walls, u_yy on the y-walls
-                let mxw: Vec<f64> = (0..n_bc).map(|i| (i % 2) as f64).collect();
-                let mxf = self.rng.uniforms_in(n_bc, 0.0, 1.0);
-                feeds.push(("mx.x0".into(), col(&mxw)));
-                feeds.push(("mx.x1".into(), col(&mxf)));
-                let myf = self.rng.uniforms_in(n_bc, 0.0, 1.0);
-                let myw: Vec<f64> = (0..n_bc).map(|i| (i % 2) as f64).collect();
-                feeds.push(("my.x0".into(), col(&myf)));
-                feeds.push(("my.x1".into(), col(&myw)));
+                let mx = cur.next("mx.x0", &[n_bc, 1]);
+                for (i, w) in mx.iter_mut().enumerate() {
+                    *w = (i % 2) as f64;
+                }
+                self.scratch_x.resize(n_bc, 0.0);
+                self.rng.fill_uniforms_in(&mut self.scratch_x, 0.0, 1.0);
+                cur.col("mx.x1", &self.scratch_x);
+                self.rng.fill_uniforms_in(&mut self.scratch_x, 0.0, 1.0);
+                cur.col("my.x0", &self.scratch_x);
+                let my = cur.next("my.x1", &[n_bc, 1]);
+                for (i, w) in my.iter_mut().enumerate() {
+                    *w = (i % 2) as f64;
+                }
             }
             other => unreachable!("PdeBatcher::new rejects {other:?}"),
         }
-        PdeBatch { p, feeds }
+        let filled = cur.idx;
+        assert_eq!(filled, batch.feeds.len(), "stale extra feeds in batch");
     }
+}
 
-    /// Interior collocation points split into per-dimension columns.
-    fn interior(&mut self, n: usize) -> (Vec<f64>, Vec<f64>) {
-        let pts = interior_points_2d(&mut self.rng, n, (0.0, 1.0), (0.0, 1.0));
-        let xs = (0..n).map(|r| pts.at2(r, 0)).collect();
-        let ts = (0..n).map(|r| pts.at2(r, 1)).collect();
-        (xs, ts)
-    }
+/// Draw `n` interior points into the two scratch columns --
+/// [`interior_columns_2d`] is the same sampler [`interior_points_2d`]
+/// delegates to, so the native and artifact batchers can never drift.
+fn fill_interior(rng: &mut Pcg64, xs: &mut Vec<f64>, ys: &mut Vec<f64>, n: usize) {
+    interior_columns_2d(rng, n, (0.0, 1.0), (0.0, 1.0), xs, ys);
+}
 
-    /// Bank functions evaluated at explicit abscissae, (M, len).
-    fn bank_rows(&self, xs: &[f64]) -> Tensor {
-        let bank = self.bank.as_ref().expect("problem has a function bank");
-        let mut data = Vec::with_capacity(self.spec.m * xs.len());
-        for &fi in &self.last_functions {
-            data.extend(bank.eval_many(fi, xs));
+/// Bank functions evaluated at explicit abscissae into an (M, len) row
+/// block.
+fn bank_rows(bank: Option<&FunctionBank>, functions: &[usize], xs: &[f64], out: &mut [f64]) {
+    let bank = bank.expect("problem has a function bank");
+    let n = xs.len();
+    assert_eq!(out.len(), functions.len() * n);
+    for (i, &fi) in functions.iter().enumerate() {
+        for (j, &x) in xs.iter().enumerate() {
+            out[i * n + j] = bank.eval(fi, x);
         }
-        Tensor::new(&[self.spec.m, xs.len()], data)
     }
+}
 
-    /// The Kirchhoff load `q(x, y)` synthesised from the current
-    /// coefficient draw at the given points, (M, len).
-    fn kirchhoff_load(&self, xs: &[f64], ys: &[f64]) -> Tensor {
-        let r = self.kirchhoff_modes;
-        // rigidity never enters the load series; keep the shared constant
-        // anyway so every Kirchhoff site reads the same value
-        let rigidity = ProblemKind::Kirchhoff.constant("D_flex").expect("paper constant");
-        let solver = KirchhoffSolver { rigidity, r_modes: r, s_modes: r };
-        let pts: Vec<(f64, f64)> = xs.iter().zip(ys).map(|(&x, &y)| (x, y)).collect();
-        let mut data = Vec::with_capacity(self.spec.m * xs.len());
-        for i in 0..self.spec.m {
-            let c = &self.last_coeffs[i * self.spec.q..(i + 1) * self.spec.q];
-            data.extend(solver.source_at(c, &pts));
-        }
-        Tensor::new(&[self.spec.m, xs.len()], data)
-    }
-
-    /// Points cycling the four unit-square edges.
-    fn edge_cycle(&mut self, n: usize) -> (Vec<f64>, Vec<f64>) {
-        let mut xs = Vec::with_capacity(n);
-        let mut ys = Vec::with_capacity(n);
-        for i in 0..n {
-            let s = self.rng.uniform();
-            match i % 4 {
-                0 => {
-                    xs.push(0.0);
-                    ys.push(s);
-                }
-                1 => {
-                    xs.push(1.0);
-                    ys.push(s);
-                }
-                2 => {
-                    xs.push(s);
-                    ys.push(0.0);
-                }
-                _ => {
-                    xs.push(s);
-                    ys.push(1.0);
-                }
-            }
-        }
-        (xs, ys)
+/// The Kirchhoff load `q(x, y)` synthesised from the current coefficient
+/// draw at the given points, into an (M, len) row block.
+fn kirchhoff_load(
+    modes: usize,
+    coeffs: &[f64],
+    (m, q): (usize, usize),
+    xs: &[f64],
+    ys: &[f64],
+    out: &mut [f64],
+) {
+    // rigidity never enters the load series; keep the shared constant
+    // anyway so every Kirchhoff site reads the same value
+    let rigidity = ProblemKind::Kirchhoff.constant("D_flex").expect("paper constant");
+    let solver = KirchhoffSolver { rigidity, r_modes: modes, s_modes: modes };
+    let pts: Vec<(f64, f64)> = xs.iter().zip(ys).map(|(&x, &y)| (x, y)).collect();
+    let n = xs.len();
+    assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let c = &coeffs[i * q..(i + 1) * q];
+        out[i * n..(i + 1) * n].copy_from_slice(&solver.source_at(c, &pts));
     }
 }
 

@@ -29,7 +29,9 @@ use crate::autodiff::zcs_demo::Strategy;
 use crate::autodiff::{Executor, NodeId, Program};
 use crate::coordinator::batch::{PdeBatch, PdeBatchSpec, PdeBatcher};
 use crate::hlostats::{analyze_program, ProgramReport};
-use crate::pde::residual::{build_forward, build_training_problem, BlockSizes, NetDims};
+use crate::pde::residual::{
+    build_forward, build_training_problem, init_problem_weights, BlockSizes, NetDims,
+};
 use crate::pde::ProblemKind;
 use crate::rng::Pcg64;
 use crate::sampler::{FunctionBank, GpSampler1d};
@@ -62,6 +64,9 @@ pub struct NativeRunConfig {
     pub bank_size: usize,
     pub bank_grid: usize,
     pub log_every: usize,
+    /// kernel threads for the executor (0 = auto: `ZCS_THREADS`, else 1);
+    /// results are bit-identical for any value
+    pub threads: usize,
 }
 
 impl Default for NativeRunConfig {
@@ -81,6 +86,7 @@ impl Default for NativeRunConfig {
             bank_size: 64,
             bank_grid: 128,
             log_every: 20,
+            threads: 0,
         }
     }
 }
@@ -140,6 +146,19 @@ pub struct NativeValidation {
     pub n_points: usize,
 }
 
+/// Where one program input comes from on the per-step fast path.
+#[derive(Clone, Copy, Debug)]
+enum FeedSrc {
+    /// index into the trainer's weight vector
+    Weight(usize),
+    /// the batch's sensor matrix `p`
+    Sensor,
+    /// index into the batch's named feeds
+    Feed(usize),
+    /// index into the constant extra inputs (ZCS `z` and `a`)
+    Extra(usize),
+}
+
 /// The native training orchestrator: one compiled step program + a
 /// persistent executor + host-side SGD.
 pub struct NativeTrainer {
@@ -154,6 +173,9 @@ pub struct NativeTrainer {
     /// named batch feeds, in the residual layer's schema order
     feeds: Vec<(String, NodeId)>,
     extra_inputs: Vec<(NodeId, Tensor)>,
+    /// one source per [`Program::inputs`] entry, resolved once at build
+    /// time so stepping never rebuilds a feed `HashMap`
+    feed_plan: Vec<FeedSrc>,
     coord_dim: usize,
     compile_time: Duration,
 }
@@ -174,18 +196,7 @@ impl NativeTrainer {
         let program = Program::compile(&built.graph, &built.outputs);
         let compile_time = t0.elapsed();
 
-        // weight init: same draw order (wb, wb2, wt, wt2) and scaling as
-        // the original antiderivative trainer
-        let mut init_rng = Pcg64::new(config.seed, 2);
-        let weights: Vec<Tensor> = built
-            .weight_ids
-            .iter()
-            .map(|&id| {
-                let shape = built.graph.shape(id).to_vec();
-                let n: usize = shape.iter().product();
-                Tensor::new(&shape, init_rng.normals(n)).scale(1.0 / (shape[0] as f64).sqrt())
-            })
-            .collect();
+        let weights = init_problem_weights(&built, config.seed);
         let mut batch_rng = Pcg64::new(config.seed, 1);
         let batcher = PdeBatcher::new(
             config.problem,
@@ -199,16 +210,47 @@ impl NativeTrainer {
             },
             &mut batch_rng,
         )?;
+
+        // resolve every program input to its source once, so the hot loop
+        // never hashes node ids or rebuilds a feed map
+        let mut src_of: HashMap<NodeId, FeedSrc> = HashMap::new();
+        for (i, id) in built.weight_ids.iter().enumerate() {
+            src_of.insert(*id, FeedSrc::Weight(i));
+        }
+        src_of.insert(built.p, FeedSrc::Sensor);
+        for (i, (_, id)) in built.feeds.iter().enumerate() {
+            src_of.insert(*id, FeedSrc::Feed(i));
+        }
+        for (i, (id, _)) in built.extra_inputs.iter().enumerate() {
+            src_of.insert(*id, FeedSrc::Extra(i));
+        }
+        let feed_plan: Vec<FeedSrc> = program
+            .inputs
+            .iter()
+            .map(|id| {
+                src_of
+                    .get(id)
+                    .copied()
+                    .ok_or_else(|| anyhow!("step program wants unknown input node {id}"))
+            })
+            .collect::<Result<_>>()?;
+
+        let threads = if config.threads == 0 {
+            crate::util::pool::default_threads()
+        } else {
+            config.threads
+        };
         Ok(Self {
             config,
             program,
-            exec: Executor::new(),
+            exec: Executor::with_threads(threads),
             batcher,
             weights,
             weight_ids: built.weight_ids,
             p_id: built.p,
             feeds: built.feeds,
             extra_inputs: built.extra_inputs,
+            feed_plan,
             coord_dim: built.coord_dim,
             compile_time,
         })
@@ -229,6 +271,23 @@ impl NativeTrainer {
         &self.weights
     }
 
+    /// Graph id of the sensor-matrix leaf `p` (useful for feeding the
+    /// step program directly in tests and tools).
+    pub fn sensor_node(&self) -> NodeId {
+        self.p_id
+    }
+
+    /// Graph ids of the weight leaves, aligned with
+    /// [`NativeTrainer::weights`].
+    pub fn weight_nodes(&self) -> &[NodeId] {
+        &self.weight_ids
+    }
+
+    /// Kernel threads the step executor runs on.
+    pub fn threads(&self) -> usize {
+        self.exec.threads()
+    }
+
     /// Draw the next batch from the trainer's own batcher (exposed so
     /// benches and tests can freeze a batch without re-building a second
     /// batcher from a hand-copied spec).
@@ -244,29 +303,32 @@ impl NativeTrainer {
             batch.feeds.len(),
             self.feeds.len()
         );
-        let mut inputs: HashMap<NodeId, &Tensor> = HashMap::new();
-        for (id, w) in self.weight_ids.iter().zip(&self.weights) {
-            inputs.insert(*id, w);
-        }
-        inputs.insert(self.p_id, &batch.p);
-        for (i, (name, node)) in self.feeds.iter().enumerate() {
-            // batches arrive in registration order: positional fast path,
-            // name search only if a producer reordered its feeds
-            let t = match batch.feeds.get(i) {
-                Some((n, t)) if n == name => t,
-                _ => batch
-                    .feeds
-                    .iter()
-                    .find(|(n, _)| n == name)
-                    .map(|(_, t)| t)
-                    .ok_or_else(|| anyhow!("batch is missing feed {name:?}"))?,
+        // resolve the precomputed feed plan into program-input order -- no
+        // HashMap, no clones, just one reference per input
+        let mut ins: Vec<&Tensor> = Vec::with_capacity(self.feed_plan.len());
+        for src in &self.feed_plan {
+            let t: &Tensor = match *src {
+                FeedSrc::Weight(i) => &self.weights[i],
+                FeedSrc::Sensor => &batch.p,
+                FeedSrc::Feed(i) => {
+                    // batches arrive in registration order: positional fast
+                    // path, name search only if a producer reordered them
+                    let name = &self.feeds[i].0;
+                    match batch.feeds.get(i) {
+                        Some((n, t)) if n == name => t,
+                        _ => batch
+                            .feeds
+                            .iter()
+                            .find(|(n, _)| n == name)
+                            .map(|(_, t)| t)
+                            .ok_or_else(|| anyhow!("batch is missing feed {name:?}"))?,
+                    }
+                }
+                FeedSrc::Extra(i) => &self.extra_inputs[i].1,
             };
-            inputs.insert(*node, t);
+            ins.push(t);
         }
-        for (id, t) in &self.extra_inputs {
-            inputs.insert(*id, t);
-        }
-        let outs = self.exec.run_ref(&self.program, &inputs);
+        let outs = self.exec.run_inputs(&self.program, &ins);
         let loss = outs[0].data()[0];
         let loss_pde = outs[1].data()[0];
         let loss_bc = outs[2].data()[0];
@@ -285,9 +347,11 @@ impl NativeTrainer {
         let mut input_time = Duration::ZERO;
         let mut step_time = Duration::ZERO;
         let mut last = (f64::NAN, f64::NAN, f64::NAN);
+        // one batch's buffers, refilled in place every step
+        let mut batch = PdeBatch::empty();
         for it in 0..self.config.steps {
             let t0 = Instant::now();
-            let batch = self.batcher.next_batch();
+            self.batcher.fill_batch(&mut batch);
             input_time += t0.elapsed();
             let t1 = Instant::now();
             last = self.step(&batch)?;
@@ -421,6 +485,7 @@ mod tests {
             bank_size: 8,
             bank_grid: 32,
             log_every: 1,
+            threads: 1,
         }
     }
 
@@ -504,6 +569,23 @@ mod tests {
             (analytic - fd).abs() < 1e-5 * (1.0 + analytic.abs()),
             "{analytic} vs {fd}"
         );
+    }
+
+    #[test]
+    fn threaded_training_is_bit_identical_to_serial() {
+        let losses_at = |threads: usize| -> Vec<f64> {
+            let mut cfg = tiny(Strategy::Zcs);
+            cfg.steps = 5;
+            cfg.threads = threads;
+            let mut trainer = NativeTrainer::new(cfg).unwrap();
+            assert_eq!(trainer.threads(), threads);
+            let report = trainer.run().unwrap();
+            report.curve.iter().map(|p| p.loss).collect()
+        };
+        let serial = losses_at(1);
+        for threads in [2usize, 4] {
+            assert_eq!(serial, losses_at(threads), "{threads} threads drifted");
+        }
     }
 
     #[test]

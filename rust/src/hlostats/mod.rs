@@ -96,10 +96,15 @@ pub fn analyze_module(module: &HloModule) -> ModuleStats {
 #[derive(Clone, Debug)]
 pub struct ProgramReport {
     /// the compiler's own counters (instructions, DCE/CSE/fold wins,
-    /// arena slots, peak live bytes, const bytes)
+    /// fusion wins, arena slots, peak live bytes, const bytes)
     pub stats: crate::autodiff::ProgramStats,
-    /// per-opcode instruction counts
+    /// per-opcode instruction counts (`Fused` instructions count as one
+    /// "fused" entry here; their interiors are in
+    /// [`ProgramReport::fused_micro_histogram`])
     pub opcode_histogram: BTreeMap<String, usize>,
+    /// per-micro-op counts inside `Fused` instructions, named like the
+    /// unfused opcodes they replaced
+    pub fused_micro_histogram: BTreeMap<String, usize>,
 }
 
 impl ProgramReport {
@@ -114,12 +119,26 @@ impl ProgramReport {
         }
         self.stats.instructions as f64 / self.stats.graph_nodes as f64
     }
+
+    /// One-line fusion summary: instructions before/after the fusion pass
+    /// and the estimated intermediate traffic saved per run.
+    pub fn fusion_summary(&self) -> String {
+        let s = &self.stats;
+        format!(
+            "{} -> {} instructions ({} groups, {:.1} KiB/run saved)",
+            s.instructions + s.fused_ops,
+            s.instructions,
+            s.fused_groups,
+            s.fusion_bytes_saved as f64 / 1024.0
+        )
+    }
 }
 
 /// Analyse a compiled native program.
 pub fn analyze_program(program: &crate::autodiff::Program) -> ProgramReport {
     use crate::autodiff::OpCode;
     let mut histogram = BTreeMap::new();
+    let mut fused_micro = BTreeMap::new();
     for instr in &program.instrs {
         let name = match &instr.op {
             OpCode::Add => "add",
@@ -140,10 +159,20 @@ pub fn analyze_program(program: &crate::autodiff::Program) -> ProgramReport {
             OpCode::MatMulNT => "dot-nt",
             OpCode::MatMul => "dot",
             OpCode::Transpose => "transpose",
+            OpCode::Fused(kernel) => {
+                for op in &kernel.ops {
+                    *fused_micro.entry(op.name().to_string()).or_insert(0) += 1;
+                }
+                "fused"
+            }
         };
         *histogram.entry(name.to_string()).or_insert(0) += 1;
     }
-    ProgramReport { stats: program.stats.clone(), opcode_histogram: histogram }
+    ProgramReport {
+        stats: program.stats.clone(),
+        opcode_histogram: histogram,
+        fused_micro_histogram: fused_micro,
+    }
 }
 
 /// Peak live bytes of one computation (recursing into called computations);
@@ -278,13 +307,13 @@ ENTRY e {
 
     #[test]
     fn program_report_matches_compiler_stats() {
-        use crate::autodiff::{Graph, Program};
+        use crate::autodiff::{Graph, PassConfig, Program};
         let mut g = Graph::new();
         let x = g.input(&[8]);
         let t = g.tanh(x);
         let s = g.mul(t, t);
         let out = g.sum_all(s);
-        let prog = Program::compile(&g, &[out]);
+        let prog = Program::compile_with(&g, &[out], PassConfig { fuse: false });
         let report = analyze_program(&prog);
         assert_eq!(report.stats.instructions, 3);
         assert_eq!(report.opcode_histogram["tanh"], 1);
@@ -293,6 +322,31 @@ ENTRY e {
         assert!(report.compression() <= 1.0);
         // peak: tanh result + mul result live together (8 f64 each)
         assert_eq!(report.stats.peak_live_bytes, 2 * 8 * 8);
+    }
+
+    #[test]
+    fn program_report_tracks_fusion() {
+        use crate::autodiff::{Graph, Program};
+        let mut g = Graph::new();
+        let x = g.input(&[8]);
+        let t = g.tanh(x);
+        let s = g.mul(t, t);
+        let out = g.sum_all(s);
+        // default pipeline: tanh + mul fuse into one pass
+        let prog = Program::compile(&g, &[out]);
+        let report = analyze_program(&prog);
+        assert_eq!(report.stats.instructions, 2);
+        assert_eq!(report.stats.fused_groups, 1);
+        assert_eq!(report.stats.fused_ops, 1);
+        assert_eq!(report.opcode_histogram["fused"], 1);
+        assert_eq!(report.opcode_histogram["reduce-sum"], 1);
+        assert!(!report.opcode_histogram.contains_key("tanh"));
+        assert_eq!(report.fused_micro_histogram["tanh"], 1);
+        assert_eq!(report.fused_micro_histogram["multiply"], 1);
+        // fused: only the fused result is ever materialized
+        assert_eq!(report.stats.peak_live_bytes, 8 * 8 + 8);
+        assert!(report.stats.fusion_bytes_saved > 0);
+        assert!(report.fusion_summary().contains("1 groups"));
     }
 
     #[test]

@@ -83,6 +83,11 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
         .opt("bank-size", "64", "GP function-bank size")
         .opt("log-every", "20", "loss-curve logging interval")
         .opt("heldout", "4", "held-out input functions for --validate")
+        .opt(
+            "threads",
+            "auto",
+            "kernel threads (auto = ZCS_THREADS env, else 1); results are bit-identical",
+        )
         .switch("validate", "rel-L2 error vs the reference solver after training")
         .switch("help", "show usage");
     let p = opts.parse(args)?;
@@ -110,6 +115,12 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
             .parse()
             .map_err(|e| anyhow!("invalid value {other:?} for --q: {e}"))?,
     };
+    let threads = match p.get("threads") {
+        "auto" => 0,
+        other => other
+            .parse()
+            .map_err(|e| anyhow!("invalid value {other:?} for --threads: {e}"))?,
+    };
     let config = NativeRunConfig {
         problem,
         strategy,
@@ -124,6 +135,7 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
         seed: p.get_u64("seed")?,
         bank_size: p.get_usize("bank-size")?,
         log_every: p.get_usize("log-every")?.max(1),
+        threads,
         ..NativeRunConfig::default()
     };
     println!(
@@ -137,6 +149,7 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
         config.steps
     );
     let mut trainer = NativeTrainer::new(config)?;
+    println!("kernel threads: {}", trainer.threads());
     let report = trainer.run()?;
     let prog = &report.program;
     println!(
@@ -150,6 +163,7 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
         prog.stats.n_slots,
         prog.stats.peak_live_bytes as f64 / 1024.0
     );
+    println!("elementwise fusion: {}", prog.fusion_summary());
     println!("compiled in {:.2?}\n\nloss curve:", report.compile_time);
     for pt in &report.curve {
         println!(
@@ -381,7 +395,7 @@ fn native_problem_stats(problem: ProblemKind, m: usize, n: usize) -> Result<()> 
     let (hidden, k) = (defaults.hidden, defaults.k);
     let sizes = BlockSizes { n_in: n, n_bc: defaults.n_bc };
     let mut table = Table::new(&[
-        "strategy", "tape nodes", "instructions", "cse", "folded", "slots", "peak KiB",
+        "strategy", "tape nodes", "instructions", "cse", "folded", "fused", "slots", "peak KiB",
     ]);
     let mut histograms = Vec::new();
     for strat in Strategy::ALL {
@@ -395,6 +409,7 @@ fn native_problem_stats(problem: ProblemKind, m: usize, n: usize) -> Result<()> 
             s.instructions.to_string(),
             s.cse_hits.to_string(),
             s.folded.to_string(),
+            format!("{}>{}", s.fused_ops + s.fused_groups, s.fused_groups),
             s.n_slots.to_string(),
             format!("{:.1}", s.peak_live_bytes as f64 / 1024.0),
         ]);
@@ -404,13 +419,23 @@ fn native_problem_stats(problem: ProblemKind, m: usize, n: usize) -> Result<()> 
             .map(|(op, count)| format!("{op}={count}"))
             .collect::<Vec<_>>()
             .join(" ");
-        histograms.push((strat.name(), line));
+        let micro = report
+            .fused_micro_histogram
+            .iter()
+            .map(|(op, count)| format!("{op}={count}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        histograms.push((strat.name(), line, micro, report.fusion_summary()));
     }
     println!("step program for {} (M={m}, N={n}):", problem.name());
     table.print();
-    println!("\nper-op instruction counts:");
-    for (name, line) in histograms {
+    println!("\nper-op instruction counts (fused column: ops>groups):");
+    for (name, line, micro, summary) in histograms {
         println!("  {name:>9}: {line}");
+        if !micro.is_empty() {
+            println!("  {:>9}  inside fused: {micro}", "");
+            println!("  {:>9}  fusion: {summary}", "");
+        }
     }
     Ok(())
 }

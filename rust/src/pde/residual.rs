@@ -37,6 +37,7 @@
 use crate::autodiff::graph::{Graph, NodeId};
 use crate::autodiff::zcs_demo::Strategy;
 use crate::pde::ProblemKind;
+use crate::rng::Pcg64;
 use crate::tensor::Tensor;
 use anyhow::{anyhow, ensure, Result};
 use std::collections::HashMap;
@@ -726,6 +727,26 @@ pub struct BuiltProblem {
     /// the raw interior residual (m, n)
     pub residual: NodeId,
     pub coord_dim: usize,
+}
+
+/// The trainer-canonical weight initialization for a built problem: draw
+/// order (wb, wb2, wt, wt2) from stream 2 of the run seed, each matrix
+/// scaled by `1/sqrt(fan_in)`.  [`NativeTrainer`], the benches and the
+/// differential tests all share this one definition so they can never
+/// drift apart.
+///
+/// [`NativeTrainer`]: crate::coordinator::native::NativeTrainer
+pub fn init_problem_weights(built: &BuiltProblem, seed: u64) -> Vec<Tensor> {
+    let mut rng = Pcg64::new(seed, 2);
+    built
+        .weight_ids
+        .iter()
+        .map(|&id| {
+            let shape = built.graph.shape(id).to_vec();
+            let n: usize = shape.iter().product();
+            Tensor::new(&shape, rng.normals(n)).scale(1.0 / (shape[0] as f64).sqrt())
+        })
+        .collect()
 }
 
 /// Build the full training-step graph: forward, strategy derivatives,

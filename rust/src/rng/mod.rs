@@ -80,9 +80,26 @@ impl Pcg64 {
         (0..n).map(|_| self.normal()).collect()
     }
 
+    /// Overwrite `out` with standard normals -- the allocation-free
+    /// counterpart of [`Pcg64::normals`], drawing the identical sequence.
+    pub fn fill_normals(&mut self, out: &mut [f64]) {
+        for o in out {
+            *o = self.normal();
+        }
+    }
+
     /// Fill a buffer with uniforms in `[lo, hi)`.
     pub fn uniforms_in(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
         (0..n).map(|_| self.uniform_in(lo, hi)).collect()
+    }
+
+    /// Overwrite `out` with uniforms in `[lo, hi)` -- the allocation-free
+    /// counterpart of [`Pcg64::uniforms_in`], drawing the identical
+    /// sequence.
+    pub fn fill_uniforms_in(&mut self, out: &mut [f64], lo: f64, hi: f64) {
+        for o in out {
+            *o = self.uniform_in(lo, hi);
+        }
     }
 
     /// Fisher-Yates shuffle.

@@ -13,7 +13,9 @@ mod gp;
 mod points;
 
 pub use gp::{FunctionBank, GpSampler1d, Kernel};
-pub use points::{boundary_points_2d, interior_points_2d, tensor_grid_2d, Edge};
+pub use points::{
+    boundary_points_2d, interior_columns_2d, interior_points_2d, tensor_grid_2d, Edge,
+};
 
 #[cfg(test)]
 mod tests {

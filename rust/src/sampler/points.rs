@@ -28,12 +28,35 @@ pub fn interior_points_2d(
     d0: (f64, f64),
     d1: (f64, f64),
 ) -> Tensor {
+    let (mut xs, mut ys) = (Vec::new(), Vec::new());
+    interior_columns_2d(rng, n, d0, d1, &mut xs, &mut ys);
     let mut data = Vec::with_capacity(2 * n);
-    for _ in 0..n {
-        data.push(rng.uniform_in(d0.0, d0.1));
-        data.push(rng.uniform_in(d1.0, d1.1));
+    for (x, y) in xs.iter().zip(&ys) {
+        data.push(*x);
+        data.push(*y);
     }
     Tensor::new(&[n, 2], data)
+}
+
+/// Column-split, allocation-reusing variant of [`interior_points_2d`]:
+/// the identical per-point x-then-y draw order, written into two caller
+/// buffers (what [`crate::coordinator::batch::PdeBatcher`] refills every
+/// step).  [`interior_points_2d`] delegates here, so the two can never
+/// drift apart.
+pub fn interior_columns_2d(
+    rng: &mut Pcg64,
+    n: usize,
+    d0: (f64, f64),
+    d1: (f64, f64),
+    xs: &mut Vec<f64>,
+    ys: &mut Vec<f64>,
+) {
+    xs.resize(n, 0.0);
+    ys.resize(n, 0.0);
+    for i in 0..n {
+        xs[i] = rng.uniform_in(d0.0, d0.1);
+        ys[i] = rng.uniform_in(d1.0, d1.1);
+    }
 }
 
 /// `n` points on one edge of the unit square, shape `(n, 2)`.
@@ -126,5 +149,20 @@ mod tests {
             assert!((0.25..0.5).contains(&pts.at2(i, 0)));
             assert!((0.75..1.0).contains(&pts.at2(i, 1)));
         }
+    }
+
+    #[test]
+    fn interior_columns_draw_the_identical_sequence() {
+        let mut rng_a = Pcg64::seeded(21);
+        let mut rng_b = rng_a.clone();
+        let pts = interior_points_2d(&mut rng_a, 17, (0.0, 1.0), (0.0, 1.0));
+        let (mut xs, mut ys) = (vec![9.9; 3], Vec::new()); // stale scratch is overwritten
+        interior_columns_2d(&mut rng_b, 17, (0.0, 1.0), (0.0, 1.0), &mut xs, &mut ys);
+        for i in 0..17 {
+            assert_eq!(pts.at2(i, 0), xs[i]);
+            assert_eq!(pts.at2(i, 1), ys[i]);
+        }
+        // both rngs advanced identically
+        assert_eq!(rng_a.uniform(), rng_b.uniform());
     }
 }

@@ -13,11 +13,34 @@
 //! and interpreted execution agree exactly -- property-tested in
 //! `rust/tests/zcs_native_props.rs`.
 //!
+//! Parallelism contract: the `*_pool` variants split work into
+//! *data-disjoint* blocks (whole output rows for the matmuls, element
+//! blocks for [`fused_into`], columns for the axis-0 reduction) and keep
+//! every per-element accumulation sequential, so results are bit-identical
+//! for any thread count -- property-tested in `rust/tests/fusion_pool.rs`.
+//! The serial entry points are thin wrappers over the same code.
+//!
 //! Aliasing contract: `out` must not alias any input (the program lowerer
 //! guarantees this by never freeing an operand's arena slot before the
 //! instruction that last reads it has completed).
 
 use super::Tensor;
+use crate::util::pool::Pool;
+
+/// Minimum multiply-adds per matmul task; below this a row block is not
+/// worth shipping to another thread.  Unit tests shrink both minimums to
+/// a few elements so the pooled code paths genuinely cross threads even
+/// on tiny tensors (the production values would run them inline and the
+/// threaded==serial differential tests would prove nothing).
+#[cfg(not(test))]
+const MATMUL_MIN_FLOPS_PER_TASK: usize = 16 * 1024;
+#[cfg(test)]
+const MATMUL_MIN_FLOPS_PER_TASK: usize = 8;
+/// Minimum elements per task for the elementwise kernels/reductions.
+#[cfg(not(test))]
+const ELEMWISE_MIN_PER_TASK: usize = 4 * 1024;
+#[cfg(test)]
+const ELEMWISE_MIN_PER_TASK: usize = 2;
 
 /// Reset `out` to `shape` with all-zero contents, reusing its allocation.
 fn zero_fill(out: &mut Tensor, shape: &[usize]) {
@@ -28,10 +51,15 @@ fn zero_fill(out: &mut Tensor, shape: &[usize]) {
     out.data.resize(n, 0.0);
 }
 
-/// Reset `out` to `shape` without defined contents, reusing its allocation.
-/// Caller must overwrite every element.
+/// Reset `out` to `shape` *without* touching the payload, reusing its
+/// allocation: the caller overwrites every element, so zeroing first would
+/// only double the memory traffic (only elements past the previous length
+/// are initialised, and only when the buffer grows).
 fn shape_only(out: &mut Tensor, shape: &[usize]) {
-    zero_fill(out, shape);
+    let n: usize = shape.iter().product();
+    out.shape.clear();
+    out.shape.extend_from_slice(shape);
+    out.data.resize(n, 0.0);
 }
 
 /// `out = a + b` (same shape).
@@ -119,20 +147,37 @@ pub fn reshape_into(a: &Tensor, shape: &[usize], out: &mut Tensor) {
 /// Keep-dims axis sum of a 2-D tensor: axis 1 -> (m, 1), axis 0 -> (1, n).
 /// Accumulation order matches the interpreter's `sum_axis_eval` exactly.
 pub fn sum_axis_into(a: &Tensor, axis: usize, out: &mut Tensor) {
+    sum_axis_into_pool(a, axis, out, &Pool::serial());
+}
+
+/// Pooled [`sum_axis_into`]: axis 1 parallelises over output rows, axis 0
+/// over output columns; either way each output element's accumulation
+/// stays in the serial order, so results are bit-identical.
+pub fn sum_axis_into_pool(a: &Tensor, axis: usize, out: &mut Tensor, pool: &Pool) {
     assert_eq!(a.shape.len(), 2, "sum_axis_into wants 2-D");
     let (m, n) = (a.shape[0], a.shape[1]);
     if axis == 1 {
         shape_only(out, &[m, 1]);
-        for i in 0..m {
-            out.data[i] = a.data[i * n..(i + 1) * n].iter().sum();
-        }
+        let min_rows = (ELEMWISE_MIN_PER_TASK / n.max(1)).max(1);
+        let data = &a.data;
+        pool.par_rows(m, 1, &mut out.data, min_rows, |range, block| {
+            for (off, o) in block.iter_mut().enumerate() {
+                let i = range.start + off;
+                *o = data[i * n..(i + 1) * n].iter().sum();
+            }
+        });
     } else {
         zero_fill(out, &[1, n]);
-        for i in 0..m {
-            for (j, o) in out.data.iter_mut().enumerate() {
-                *o += a.data[i * n + j];
+        let min_cols = (ELEMWISE_MIN_PER_TASK / m.max(1)).max(1);
+        let data = &a.data;
+        pool.par_rows(n, 1, &mut out.data, min_cols, |range, block| {
+            for i in 0..m {
+                let arow = &data[i * n..(i + 1) * n];
+                for (off, o) in block.iter_mut().enumerate() {
+                    *o += arow[range.start + off];
+                }
             }
-        }
+        });
     }
 }
 
@@ -151,25 +196,62 @@ pub fn sum_all_into(a: &Tensor, out: &mut Tensor) {
     out.data[0] = a.data.iter().sum();
 }
 
-/// `out = a @ b` for `(m,k) @ (k,n)`, same ikj loop order (and the same
-/// zero-skip) as [`Tensor::matmul`] so results match bit for bit.
+/// `out = a @ b` for `(m,k) @ (k,n)`, same per-element `k` accumulation
+/// order (and the same zero-skip) as [`Tensor::matmul`] so results match
+/// bit for bit.
 pub fn matmul_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
+    matmul_into_pool(a, b, out, &Pool::serial());
+}
+
+/// Pooled, cache-blocked [`matmul_into`]: output rows are partitioned over
+/// the pool and the j/k loops are tiled so the `b` panel stays hot; every
+/// `(i, j)` element still accumulates over `k` in ascending order, so the
+/// result is bit-identical to the serial ikj kernel for any thread count
+/// or tile size.
+pub fn matmul_into_pool(a: &Tensor, b: &Tensor, out: &mut Tensor, pool: &Pool) {
     assert_eq!(a.shape.len(), 2);
     assert_eq!(b.shape.len(), 2);
     let (m, k) = (a.shape[0], a.shape[1]);
     let (k2, n) = (b.shape[0], b.shape[1]);
     assert_eq!(k, k2, "matmul_into {:?} @ {:?}", a.shape, b.shape);
     zero_fill(out, &[m, n]);
-    for i in 0..m {
-        let orow = &mut out.data[i * n..(i + 1) * n];
-        for kk in 0..k {
-            let av = a.data[i * k + kk];
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b.data[kk * n..(kk + 1) * n];
-            for j in 0..n {
-                orow[j] += av * brow[j];
+    let min_rows = (MATMUL_MIN_FLOPS_PER_TASK / (k * n).max(1)).max(1);
+    let (a_data, b_data) = (&a.data, &b.data);
+    pool.par_rows(m, n, &mut out.data, min_rows, |range, block| {
+        matmul_rows(a_data, b_data, range, k, n, block);
+    });
+}
+
+/// j/k cache tiles for the blocked matmul inner loops (f64 elements; a
+/// 128 x 128 `b` panel is 128 KiB, comfortably within L2).
+const J_TILE: usize = 128;
+const K_TILE: usize = 128;
+
+/// The blocked ikj kernel for one contiguous block of output rows.
+fn matmul_rows(
+    a: &[f64],
+    b: &[f64],
+    rows: std::ops::Range<usize>,
+    k: usize,
+    n: usize,
+    block: &mut [f64],
+) {
+    for jb in (0..n).step_by(J_TILE) {
+        let jend = (jb + J_TILE).min(n);
+        for kb in (0..k).step_by(K_TILE) {
+            let kend = (kb + K_TILE).min(k);
+            for (ri, i) in rows.clone().enumerate() {
+                let arow = &a[i * k..(i + 1) * k];
+                let orow = &mut block[ri * n..(ri + 1) * n];
+                for (kk, &av) in arow.iter().enumerate().take(kend).skip(kb) {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for j in jb..jend {
+                        orow[j] += av * brow[j];
+                    }
+                }
             }
         }
     }
@@ -179,25 +261,39 @@ pub fn matmul_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
 /// transpose.  Accumulation order over `k` matches
 /// `a.matmul(&b.transpose())`, so results are identical.
 pub fn matmul_nt_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
+    matmul_nt_into_pool(a, b, out, &Pool::serial());
+}
+
+/// Pooled [`matmul_nt_into`] in dot-product form: both operand rows are
+/// contiguous, output rows are partitioned over the pool, and each `(i, j)`
+/// dot accumulates over `k` ascending with the interpreter's zero-skip --
+/// the identical addition sequence, so results are bit-exact.
+pub fn matmul_nt_into_pool(a: &Tensor, b: &Tensor, out: &mut Tensor, pool: &Pool) {
     assert_eq!(a.shape.len(), 2);
     assert_eq!(b.shape.len(), 2);
     let (m, k) = (a.shape[0], a.shape[1]);
     let (n, k2) = (b.shape[0], b.shape[1]);
     assert_eq!(k, k2, "matmul_nt_into {:?} @ {:?}^T", a.shape, b.shape);
-    zero_fill(out, &[m, n]);
-    for i in 0..m {
-        let arow = &a.data[i * k..(i + 1) * k];
-        let orow = &mut out.data[i * n..(i + 1) * n];
-        for kk in 0..k {
-            let av = arow[kk];
-            if av == 0.0 {
-                continue;
-            }
-            for j in 0..n {
-                orow[j] += av * b.data[j * k + kk];
+    shape_only(out, &[m, n]);
+    let min_rows = (MATMUL_MIN_FLOPS_PER_TASK / (k * n).max(1)).max(1);
+    let (a_data, b_data) = (&a.data, &b.data);
+    pool.par_rows(m, n, &mut out.data, min_rows, |range, block| {
+        for (ri, i) in range.enumerate() {
+            let arow = &a_data[i * k..(i + 1) * k];
+            let orow = &mut block[ri * n..(ri + 1) * n];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let brow = &b_data[j * k..(j + 1) * k];
+                let mut acc = 0.0;
+                for (kk, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    acc += av * brow[kk];
+                }
+                *o = acc;
             }
         }
-    }
+    });
 }
 
 /// `out = a^T` (2-D).
@@ -210,6 +306,134 @@ pub fn transpose_into(a: &Tensor, out: &mut Tensor) {
             out.data[j * m + i] = a.data[i * n + j];
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Fused elementwise micro-programs
+// ---------------------------------------------------------------------------
+
+/// How a fused instruction reads one of its external arguments.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ExtKind {
+    /// a tensor of the fused group's shape: element `i` is read for output
+    /// element `i`
+    Elem,
+    /// a scalar (one element), broadcast across the whole pass
+    Scalar,
+}
+
+/// One register-machine micro-op.  Operands index a register file whose
+/// first `exts.len()` registers hold the loaded external arguments; each
+/// micro-op appends one result register.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MicroOp {
+    Add(u16, u16),
+    Sub(u16, u16),
+    Mul(u16, u16),
+    Scale(u16, f64),
+    Neg(u16),
+    Square(u16),
+    Sin(u16),
+    Cos(u16),
+    Tanh(u16),
+}
+
+impl MicroOp {
+    /// Histogram name, matching the unfused opcode names of
+    /// [`crate::hlostats::analyze_program`].
+    pub fn name(&self) -> &'static str {
+        match self {
+            MicroOp::Add(..) => "add",
+            MicroOp::Sub(..) => "subtract",
+            MicroOp::Mul(..) => "multiply",
+            MicroOp::Scale(..) => "scale",
+            MicroOp::Neg(..) => "negate",
+            MicroOp::Square(..) => "square",
+            MicroOp::Sin(..) => "sine",
+            MicroOp::Cos(..) => "cosine",
+            MicroOp::Tanh(..) => "tanh",
+        }
+    }
+}
+
+/// A fused chain/DAG of same-shape elementwise operations, executed as a
+/// single pass over the data: per output element, the external arguments
+/// are loaded once, the micro-ops run in registers, and one store writes
+/// the result -- instead of one full load/store sweep per original
+/// instruction.  Scalar semantics are identical to running the original
+/// instructions one by one, so fusion preserves the compiled==interpreted
+/// bit-match contract.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FusedKernel {
+    /// per external argument: how it is read
+    pub exts: Vec<ExtKind>,
+    /// micro-ops in dependency order; op `j` writes register
+    /// `exts.len() + j`
+    pub ops: Vec<MicroOp>,
+    /// register holding the fused group's output
+    pub out: u16,
+}
+
+impl FusedKernel {
+    pub fn n_regs(&self) -> usize {
+        self.exts.len() + self.ops.len()
+    }
+
+    /// External arguments read per element (the `Elem` ones).
+    pub fn elem_exts(&self) -> usize {
+        self.exts.iter().filter(|k| **k == ExtKind::Elem).count()
+    }
+}
+
+/// Execute a fused micro-program over `exts` into `out` (shape `shape`),
+/// element blocks partitioned over the pool.
+pub fn fused_into(
+    kernel: &FusedKernel,
+    exts: &[&Tensor],
+    shape: &[usize],
+    out: &mut Tensor,
+    pool: &Pool,
+) {
+    assert_eq!(exts.len(), kernel.exts.len(), "fused_into arity");
+    shape_only(out, shape);
+    let len = out.data.len();
+    for (ext, kind) in exts.iter().zip(&kernel.exts) {
+        match kind {
+            ExtKind::Elem => assert_eq!(ext.data.len(), len, "fused elem ext length"),
+            ExtKind::Scalar => assert_eq!(ext.data.len(), 1, "fused scalar ext length"),
+        }
+    }
+    let n_ext = kernel.exts.len();
+    let out_reg = kernel.out as usize;
+    pool.par_rows(len, 1, &mut out.data, ELEMWISE_MIN_PER_TASK, |range, block| {
+        let mut regs = vec![0.0f64; kernel.n_regs()];
+        for (off, o) in block.iter_mut().enumerate() {
+            let i = range.start + off;
+            for (r, (ext, kind)) in exts.iter().zip(&kernel.exts).enumerate() {
+                regs[r] = match kind {
+                    ExtKind::Elem => ext.data[i],
+                    ExtKind::Scalar => ext.data[0],
+                };
+            }
+            for (j, op) in kernel.ops.iter().enumerate() {
+                regs[n_ext + j] = match *op {
+                    MicroOp::Add(x, y) => regs[x as usize] + regs[y as usize],
+                    MicroOp::Sub(x, y) => regs[x as usize] - regs[y as usize],
+                    MicroOp::Mul(x, y) => regs[x as usize] * regs[y as usize],
+                    MicroOp::Scale(x, c) => regs[x as usize] * c,
+                    MicroOp::Neg(x) => -regs[x as usize],
+                    MicroOp::Square(x) => {
+                        let v = regs[x as usize];
+                        v * v
+                    }
+                    MicroOp::Sin(x) => regs[x as usize].sin(),
+                    MicroOp::Cos(x) => regs[x as usize].cos(),
+                    MicroOp::Tanh(x) => regs[x as usize].tanh(),
+                };
+            }
+            *o = regs[out_reg];
+        }
+    });
 }
 
 #[cfg(test)]
@@ -287,6 +511,72 @@ mod tests {
     }
 
     #[test]
+    fn blocked_matmul_bit_matches_across_tile_boundaries() {
+        // shapes straddling the 128-wide j/k tiles
+        let mut rng = crate::rng::Pcg64::seeded(23);
+        let (m, k, n) = (5, 200, 150);
+        let a = t(&[m, k], rng.normals(m * k));
+        let b = t(&[k, n], rng.normals(k * n));
+        let bt = t(&[n, k], rng.normals(n * k));
+        let mut out = Tensor::zeros(&[0]);
+        matmul_into(&a, &b, &mut out);
+        assert_eq!(out, a.matmul(&b));
+        matmul_nt_into(&a, &bt, &mut out);
+        assert_eq!(out, a.matmul(&bt.transpose()));
+    }
+
+    #[test]
+    fn pooled_kernels_bit_match_serial() {
+        let mut rng = crate::rng::Pcg64::seeded(31);
+        let (m, k, n) = (7, 40, 33);
+        let a = t(&[m, k], rng.normals(m * k));
+        let b = t(&[k, n], rng.normals(k * n));
+        let bt = t(&[n, k], rng.normals(n * k));
+        let wide = t(&[m, n], rng.normals(m * n));
+        let mut serial = Tensor::zeros(&[0]);
+        let mut pooled = Tensor::zeros(&[0]);
+        for threads in [2usize, 4] {
+            let pool = Pool::new(threads);
+            matmul_into(&a, &b, &mut serial);
+            matmul_into_pool(&a, &b, &mut pooled, &pool);
+            assert_eq!(serial, pooled);
+            matmul_nt_into(&a, &bt, &mut serial);
+            matmul_nt_into_pool(&a, &bt, &mut pooled, &pool);
+            assert_eq!(serial, pooled);
+            for axis in [0usize, 1] {
+                sum_axis_into(&wide, axis, &mut serial);
+                sum_axis_into_pool(&wide, axis, &mut pooled, &pool);
+                assert_eq!(serial, pooled);
+            }
+        }
+    }
+
+    #[test]
+    fn fused_kernel_matches_the_op_by_op_sequence() {
+        // fused tanh(x) * tanh(x) + s (s scalar): regs [x, s, t, m, a]
+        let kernel = FusedKernel {
+            exts: vec![ExtKind::Elem, ExtKind::Scalar],
+            ops: vec![MicroOp::Tanh(0), MicroOp::Mul(2, 2), MicroOp::Add(3, 1)],
+            out: 4,
+        };
+        let mut rng = crate::rng::Pcg64::seeded(3);
+        let x = t(&[4, 3], rng.normals(12));
+        let s = t(&[1], vec![0.75]);
+        let mut out = Tensor::zeros(&[0]);
+        fused_into(&kernel, &[&x, &s], &[4, 3], &mut out, &Pool::serial());
+        // op-by-op reference through the serial kernels
+        let (mut t1, mut t2) = (Tensor::zeros(&[0]), Tensor::zeros(&[0]));
+        tanh_into(&x, &mut t1);
+        mul_into(&t1.clone(), &t1, &mut t2);
+        let want = t2.map(|v| v + 0.75);
+        assert_eq!(out, want);
+        // and pooled execution matches serial exactly
+        let mut pooled = Tensor::zeros(&[0]);
+        fused_into(&kernel, &[&x, &s], &[4, 3], &mut pooled, &Pool::new(4));
+        assert_eq!(out, pooled);
+    }
+
+    #[test]
     fn out_allocation_is_reused() {
         let a = t(&[4], vec![1.0; 4]);
         let b = t(&[4], vec![2.0; 4]);
@@ -295,5 +585,19 @@ mod tests {
         add_into(&a, &b, &mut out);
         assert_eq!(out.shape(), &[4]);
         assert_eq!(out.data.capacity(), cap_before);
+    }
+
+    #[test]
+    fn shape_only_reuse_never_leaks_stale_values() {
+        // shrink then regrow: every element must come from the new kernel
+        let mut out = Tensor::zeros(&[0]);
+        let big = t(&[6], vec![9.0; 6]);
+        add_into(&big, &big, &mut out); // out = [18; 6]
+        let small = t(&[2], vec![1.0, 2.0]);
+        scale_into(&small, 3.0, &mut out);
+        assert_eq!(out.data(), &[3.0, 6.0]);
+        let mid = t(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        transpose_into(&mid, &mut out);
+        assert_eq!(out.data(), &[1.0, 3.0, 2.0, 4.0]);
     }
 }

@@ -111,6 +111,18 @@ impl Tensor {
         self
     }
 
+    /// Re-size to `shape` reusing the allocation and return the data for
+    /// overwriting.  Existing contents are unspecified afterwards; the
+    /// caller must write every element.  This is what lets batch buffers
+    /// be filled in place step after step without reallocating.
+    pub fn reset(&mut self, shape: &[usize]) -> &mut [f64] {
+        let n: usize = shape.iter().product();
+        self.shape.clear();
+        self.shape.extend_from_slice(shape);
+        self.data.resize(n, 0.0);
+        &mut self.data
+    }
+
     /// 2-D index.
     pub fn at2(&self, i: usize, j: usize) -> f64 {
         debug_assert_eq!(self.shape.len(), 2);

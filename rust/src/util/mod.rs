@@ -9,9 +9,12 @@
 //! * [`cli`]    -- declarative flag/positional argument parser,
 //! * [`benchkit`] -- criterion-style micro-benchmark harness (warmup,
 //!   timed iterations, mean/stddev/percentiles, throughput),
-//! * [`propkit`]  -- seeded property-testing harness with shrinking.
+//! * [`propkit`]  -- seeded property-testing harness with shrinking,
+//! * [`pool`]     -- persistent scoped worker pool for the deterministic
+//!   data-parallel kernels (the rayon stand-in).
 
 pub mod benchkit;
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod propkit;

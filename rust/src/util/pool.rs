@@ -1,0 +1,411 @@
+//! Pure-std scoped worker pool for deterministic data-parallel kernels.
+//!
+//! The build is offline (no rayon/crossbeam), so the pool is built from
+//! `std::thread` + `Mutex`/`Condvar`/`AtomicUsize` only.  Design goals, in
+//! order:
+//!
+//! 1. **Bit-exactness.**  Work is split into *data-disjoint* tasks (e.g.
+//!    contiguous row blocks of a matmul output) and every task performs the
+//!    same scalar operation sequence the serial kernel would -- which thread
+//!    claims which task never changes a single bit of the result.  The
+//!    differential tests in `rust/tests/fusion_pool.rs` pin
+//!    pooled == serial to `==`.
+//! 2. **Persistence.**  Workers are spawned once and parked on a condvar
+//!    between jobs; submitting a job is a mutex lock + notify, not a thread
+//!    spawn, so the pool is usable from kernels that run thousands of times
+//!    per training step.
+//! 3. **Scoped borrows.**  [`Pool::run`] accepts a non-`'static` closure.
+//!    The borrow is erased to hand it to the persistent workers and
+//!    re-validated by construction: `run` does not return until every
+//!    claimed task has finished, and a late-waking worker can only observe
+//!    the job after all tasks are claimed, in which case it executes
+//!    nothing (see the `SAFETY` comment in [`Pool::run`]).
+//!
+//! A `Pool` with one thread (the default) spawns no workers and runs
+//! everything inline -- `Pool::serial()` is free to construct, so serial
+//! kernel wrappers can share the pooled code path.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// First panic payload captured from a task (worker or submitter side).
+type PanicSlot = Arc<Mutex<Option<Box<dyn std::any::Any + Send>>>>;
+
+/// Number of threads to use when the caller asks for "auto": the
+/// `ZCS_THREADS` environment variable, else 1 (serial).
+pub fn default_threads() -> usize {
+    std::env::var("ZCS_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(1)
+}
+
+/// One published job: a type-erased task closure plus the claim/finish
+/// counters.  `f` is only *called* for task indices below `n_tasks`, all of
+/// which are claimed (and completed) before [`Pool::run`] returns, so the
+/// erased borrow never escapes the submitting call.
+#[derive(Clone)]
+struct Job {
+    f: &'static (dyn Fn(usize) + Sync),
+    next: Arc<AtomicUsize>,
+    done: Arc<AtomicUsize>,
+    /// first panic from any task; re-raised by the submitter after all
+    /// tasks have finished (so the erased borrow is dead before unwinding)
+    panic: PanicSlot,
+    n_tasks: usize,
+}
+
+/// Claim-and-execute loop shared by workers and the submitter.  Panics in
+/// `f` are captured (first one wins) and `done` is incremented regardless,
+/// so a panicking task can never hang [`Pool::run`].
+fn drain_tasks(
+    f: &(dyn Fn(usize) + Sync),
+    next: &AtomicUsize,
+    done: &AtomicUsize,
+    panic_slot: &PanicSlot,
+    n_tasks: usize,
+) {
+    loop {
+        let t = next.fetch_add(1, Ordering::Relaxed);
+        if t >= n_tasks {
+            break;
+        }
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(|| f(t))) {
+            let mut slot = panic_slot.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+        }
+        done.fetch_add(1, Ordering::Release);
+    }
+}
+
+struct Control {
+    /// bumped once per submitted job so a worker never re-enters a job it
+    /// already drained
+    epoch: u64,
+    job: Option<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    ctl: Mutex<Control>,
+    /// workers park here between jobs
+    work_cv: Condvar,
+    /// the submitter parks here waiting for stragglers
+    done_cv: Condvar,
+}
+
+/// Persistent worker pool; see the module docs.
+pub struct Pool {
+    shared: Option<Arc<Shared>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    threads: usize,
+}
+
+impl Pool {
+    /// A pool that runs tasks on `threads` threads total (the submitting
+    /// thread participates, so `threads - 1` workers are spawned).
+    /// `threads <= 1` builds a serial pool with no worker threads.
+    pub fn new(threads: usize) -> Pool {
+        let threads = threads.max(1);
+        if threads == 1 {
+            return Pool { shared: None, workers: Vec::new(), threads: 1 };
+        }
+        let shared = Arc::new(Shared {
+            ctl: Mutex::new(Control { epoch: 0, job: None, shutdown: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let workers = (0..threads - 1)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&shared))
+            })
+            .collect();
+        Pool { shared: Some(shared), workers, threads }
+    }
+
+    /// A no-thread pool that runs everything inline (free to construct).
+    pub fn serial() -> Pool {
+        Pool::new(1)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(0), f(1), ..., f(n_tasks - 1)`, distributing task indices
+    /// over the pool (the calling thread participates).  Tasks must be
+    /// data-disjoint; every call to `f` has returned when `run` returns.
+    pub fn run(&self, n_tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        let Some(shared) = self.shared.as_ref() else {
+            for t in 0..n_tasks {
+                f(t);
+            }
+            return;
+        };
+        if n_tasks <= 1 {
+            for t in 0..n_tasks {
+                f(t);
+            }
+            return;
+        }
+        // SAFETY: the borrow's lifetime is erased to 'static so it can
+        // reach the persistent workers, but it is only dereferenced for
+        // task indices claimed from `next` while they are < n_tasks.  We
+        // block below until `done == n_tasks`, i.e. until every claimed
+        // task has *finished*; a worker that wakes after that point claims
+        // an index >= n_tasks and never touches `f`.  Hence the borrow is
+        // never used after `run` returns.
+        let f_static: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+        };
+        let next = Arc::new(AtomicUsize::new(0));
+        let done = Arc::new(AtomicUsize::new(0));
+        let panic_slot: PanicSlot = Arc::new(Mutex::new(None));
+        {
+            let mut ctl = shared.ctl.lock().unwrap();
+            ctl.epoch += 1;
+            ctl.job = Some(Job {
+                f: f_static,
+                next: Arc::clone(&next),
+                done: Arc::clone(&done),
+                panic: Arc::clone(&panic_slot),
+                n_tasks,
+            });
+            shared.work_cv.notify_all();
+        }
+        // participate (panics captured, never unwound past live workers)
+        drain_tasks(f, &next, &done, &panic_slot, n_tasks);
+        // wait for stragglers, then retire the job
+        {
+            let mut ctl = shared.ctl.lock().unwrap();
+            while done.load(Ordering::Acquire) < n_tasks {
+                ctl = shared.done_cv.wait(ctl).unwrap();
+            }
+            ctl.job = None;
+        }
+        // every task has finished and no worker holds the erased borrow
+        // any more: now a captured panic can safely unwind the submitter
+        if let Some(payload) = panic_slot.lock().unwrap().take() {
+            resume_unwind(payload);
+        }
+    }
+
+    /// Split `out` (a `rows x row_len` row-major buffer) into contiguous
+    /// row blocks of at least `min_rows` rows and run
+    /// `f(row_range, block)` over them in parallel.  Blocks are disjoint,
+    /// the partition depends only on `rows` and the pool size, and `f`
+    /// must fully define the block it is given.
+    pub fn par_rows(
+        &self,
+        rows: usize,
+        row_len: usize,
+        out: &mut [f64],
+        min_rows: usize,
+        f: impl Fn(std::ops::Range<usize>, &mut [f64]) + Sync,
+    ) {
+        assert_eq!(out.len(), rows * row_len, "par_rows buffer size");
+        let min_rows = min_rows.max(1);
+        let n_tasks = if rows == 0 { 0 } else { self.threads.min(rows.div_ceil(min_rows)).max(1) };
+        if n_tasks <= 1 {
+            if rows > 0 {
+                f(0..rows, out);
+            }
+            return;
+        }
+        let base = SyncPtr(out.as_mut_ptr());
+        self.run(n_tasks, &|t: usize| {
+            let lo = rows * t / n_tasks;
+            let hi = rows * (t + 1) / n_tasks;
+            if lo >= hi {
+                return;
+            }
+            // SAFETY: [lo, hi) blocks are disjoint across tasks and stay
+            // within the `rows * row_len` buffer `base` points into, which
+            // outlives `run` (it borrows `out`).  `base.get()` (a &self
+            // method) makes the closure capture the Sync wrapper, not the
+            // raw pointer field.
+            let block = unsafe {
+                std::slice::from_raw_parts_mut(base.get().add(lo * row_len), (hi - lo) * row_len)
+            };
+            f(lo..hi, block);
+        });
+    }
+}
+
+impl Default for Pool {
+    fn default() -> Self {
+        Pool::serial()
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        if let Some(shared) = self.shared.take() {
+            {
+                let mut ctl = shared.ctl.lock().unwrap();
+                ctl.shutdown = true;
+                shared.work_cv.notify_all();
+            }
+            for h in self.workers.drain(..) {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Raw base pointer made shareable so the task closure can slice disjoint
+/// blocks out of one `&mut [f64]`.  Access goes through [`SyncPtr::get`]
+/// so closures capture the wrapper (Sync) rather than the raw pointer
+/// field (not Sync) under edition-2021 disjoint capture.
+struct SyncPtr(*mut f64);
+
+impl SyncPtr {
+    fn get(&self) -> *mut f64 {
+        self.0
+    }
+}
+
+unsafe impl Send for SyncPtr {}
+unsafe impl Sync for SyncPtr {}
+
+fn worker_loop(shared: &Shared) {
+    let mut last_epoch = 0u64;
+    loop {
+        let job = {
+            let mut ctl = shared.ctl.lock().unwrap();
+            loop {
+                if ctl.shutdown {
+                    return;
+                }
+                if ctl.job.is_some() && ctl.epoch != last_epoch {
+                    last_epoch = ctl.epoch;
+                    break ctl.job.clone().unwrap();
+                }
+                ctl = shared.work_cv.wait(ctl).unwrap();
+            }
+        };
+        drain_tasks(job.f, &job.next, &job.done, &job.panic, job.n_tasks);
+        // lock before notifying so the submitter is either already waiting
+        // or will observe the final count when it re-checks
+        let _ctl = shared.ctl.lock().unwrap();
+        shared.done_cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn serial_pool_runs_inline() {
+        let pool = Pool::serial();
+        assert_eq!(pool.threads(), 1);
+        let hits = AtomicUsize::new(0);
+        pool.run(5, &|t| {
+            hits.fetch_add(t + 1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1 + 2 + 3 + 4 + 5);
+    }
+
+    #[test]
+    fn every_task_runs_exactly_once() {
+        let pool = Pool::new(4);
+        let n = 1000;
+        let counts: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        pool.run(n, &|t| {
+            counts[t].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn pool_is_reusable_across_jobs() {
+        let pool = Pool::new(3);
+        for round in 0..50usize {
+            let sum = AtomicUsize::new(0);
+            pool.run(8, &|t| {
+                sum.fetch_add(t + round, Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), 28 + 8 * round);
+        }
+    }
+
+    #[test]
+    fn par_rows_covers_the_buffer_disjointly() {
+        for threads in [1usize, 2, 4] {
+            let pool = Pool::new(threads);
+            let (rows, row_len) = (37, 5);
+            let mut out = vec![0.0f64; rows * row_len];
+            pool.par_rows(rows, row_len, &mut out, 1, |range, block| {
+                assert_eq!(block.len(), (range.end - range.start) * row_len);
+                for (off, v) in block.iter_mut().enumerate() {
+                    *v += (range.start * row_len + off) as f64;
+                }
+            });
+            // every element written exactly once with its own index
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i as f64, "thread count {threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn par_rows_respects_min_rows() {
+        let pool = Pool::new(8);
+        let mut out = vec![0.0f64; 6];
+        // 6 rows, min 4 per task -> at most 2 tasks; just check coverage
+        pool.par_rows(6, 1, &mut out, 4, |range, block| {
+            for (off, v) in block.iter_mut().enumerate() {
+                *v = (range.start + off) as f64 + 1.0;
+            }
+        });
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn empty_and_single_task_jobs() {
+        let pool = Pool::new(2);
+        pool.run(0, &|_| panic!("no tasks should run"));
+        let hits = AtomicUsize::new(0);
+        pool.run(1, &|t| {
+            assert_eq!(t, 0);
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+        let mut out: Vec<f64> = Vec::new();
+        pool.par_rows(0, 3, &mut out, 1, |_, _| panic!("no rows"));
+    }
+
+    #[test]
+    fn task_panics_propagate_without_hanging() {
+        let pool = Pool::new(3);
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(16, &|t| {
+                if t == 7 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(outcome.is_err(), "panic should reach the submitter");
+        // the pool survives and the next job runs normally
+        let hits = AtomicUsize::new(0);
+        pool.run(4, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn default_threads_reads_env_or_one() {
+        // can't mutate the environment safely in a test binary that may run
+        // threaded; just pin the parse contract on the current value
+        let n = default_threads();
+        assert!(n >= 1);
+    }
+}

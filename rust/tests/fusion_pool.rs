@@ -1,0 +1,211 @@
+//! Differential tests for the execution hot path: elementwise fusion and
+//! the worker pool must be *bit-exact* no-ops semantically.
+//!
+//! For every native problem x strategy step program, and for the
+//! `zcs_demo` derivative programs, the suite pins:
+//!
+//! * fused == unfused (`PassConfig { fuse: false }`) with `==`, never a
+//!   tolerance;
+//! * pooled (2 and 4 threads) == serial with `==`;
+//! * in-place batch refills ([`PdeBatcher::fill_batch`]) draw the
+//!   identical sequence as allocating [`PdeBatcher::next_batch`] calls.
+//!
+//! [`PdeBatcher::fill_batch`]: zcs::coordinator::batch::PdeBatcher
+//! [`PdeBatcher::next_batch`]: zcs::coordinator::batch::PdeBatcher
+
+use std::collections::HashMap;
+use zcs::autodiff::{zcs_demo, Executor, NodeId, PassConfig, Program, Strategy};
+use zcs::coordinator::batch::{PdeBatch, PdeBatchSpec, PdeBatcher};
+use zcs::pde::residual::{build_training_problem, init_problem_weights, BlockSizes, BuiltProblem};
+use zcs::pde::ProblemKind;
+use zcs::rng::Pcg64;
+use zcs::tensor::Tensor;
+
+const NATIVE_PROBLEMS: [ProblemKind; 4] = [
+    ProblemKind::Antiderivative,
+    ProblemKind::ReactionDiffusion,
+    ProblemKind::Burgers,
+    ProblemKind::Kirchhoff,
+];
+
+fn q_for(kind: ProblemKind) -> usize {
+    if kind == ProblemKind::Kirchhoff {
+        9
+    } else {
+        5
+    }
+}
+
+fn spec_for(kind: ProblemKind) -> PdeBatchSpec {
+    PdeBatchSpec { m: 2, n_in: 6, n_bc: 4, q: q_for(kind), bank_size: 8, bank_grid: 32 }
+}
+
+/// Feed map for one step program: weights + sensors + named feeds + the
+/// strategy's constant extras.
+fn feed_map<'a>(
+    built: &'a BuiltProblem,
+    weights: &'a [Tensor],
+    batch: &'a PdeBatch,
+) -> HashMap<NodeId, &'a Tensor> {
+    let mut inputs: HashMap<NodeId, &Tensor> = HashMap::new();
+    for (id, w) in built.weight_ids.iter().zip(weights) {
+        inputs.insert(*id, w);
+    }
+    inputs.insert(built.p, &batch.p);
+    for (name, node) in &built.feeds {
+        let t = &batch
+            .feeds
+            .iter()
+            .find(|(n, _)| n == name)
+            .unwrap_or_else(|| panic!("batch is missing feed {name}"))
+            .1;
+        inputs.insert(*node, t);
+    }
+    for (id, t) in &built.extra_inputs {
+        inputs.insert(*id, t);
+    }
+    inputs
+}
+
+#[test]
+fn fused_step_programs_bit_match_unfused_for_every_problem_and_strategy() {
+    for kind in NATIVE_PROBLEMS {
+        let spec = spec_for(kind);
+        let sizes = BlockSizes { n_in: spec.n_in, n_bc: spec.n_bc };
+        for strategy in Strategy::ALL {
+            let built =
+                build_training_problem(kind, strategy, spec.m, spec.q, 8, 4, sizes).unwrap();
+            let fused = Program::compile(&built.graph, &built.outputs);
+            let unfused =
+                Program::compile_with(&built.graph, &built.outputs, PassConfig { fuse: false });
+            assert!(
+                fused.instrs.len() <= unfused.instrs.len(),
+                "{kind:?}/{strategy:?}: fusion grew the program"
+            );
+            assert_eq!(
+                fused.stats.fused_ops + fused.instrs.len(),
+                unfused.instrs.len(),
+                "{kind:?}/{strategy:?}: fusion accounting is off"
+            );
+            let weights = init_problem_weights(&built, 7);
+            let mut batcher = PdeBatcher::new(kind, spec, &mut Pcg64::seeded(5)).unwrap();
+            let batch = batcher.next_batch();
+            let inputs = feed_map(&built, &weights, &batch);
+            let mut exec = Executor::with_threads(1);
+            let a = exec.run_ref(&fused, &inputs);
+            let b = exec.run_ref(&unfused, &inputs);
+            assert_eq!(a, b, "{kind:?}/{strategy:?}: fused != unfused");
+        }
+    }
+}
+
+#[test]
+fn step_programs_fuse_something() {
+    // at least the flagship ZCS step programs must contain fused groups --
+    // otherwise the pass silently stopped matching anything
+    for kind in NATIVE_PROBLEMS {
+        let spec = spec_for(kind);
+        let sizes = BlockSizes { n_in: spec.n_in, n_bc: spec.n_bc };
+        let built =
+            build_training_problem(kind, Strategy::Zcs, spec.m, spec.q, 8, 4, sizes).unwrap();
+        let fused = Program::compile(&built.graph, &built.outputs);
+        assert!(
+            fused.stats.fused_groups > 0,
+            "{kind:?}: no elementwise group fused in the ZCS step program"
+        );
+        assert!(fused.stats.fusion_bytes_saved > 0, "{kind:?}: zero traffic saved");
+    }
+}
+
+#[test]
+fn pooled_step_programs_bit_match_serial_for_every_problem_and_strategy() {
+    for kind in NATIVE_PROBLEMS {
+        let spec = spec_for(kind);
+        let sizes = BlockSizes { n_in: spec.n_in, n_bc: spec.n_bc };
+        for strategy in Strategy::ALL {
+            let built =
+                build_training_problem(kind, strategy, spec.m, spec.q, 8, 4, sizes).unwrap();
+            let program = Program::compile(&built.graph, &built.outputs);
+            let weights = init_problem_weights(&built, 11);
+            let mut batcher = PdeBatcher::new(kind, spec, &mut Pcg64::seeded(6)).unwrap();
+            let batch = batcher.next_batch();
+            let inputs = feed_map(&built, &weights, &batch);
+            let serial = Executor::with_threads(1).run_ref(&program, &inputs);
+            for threads in [2usize, 4] {
+                let pooled = Executor::with_threads(threads).run_ref(&program, &inputs);
+                assert_eq!(serial, pooled, "{kind:?}/{strategy:?} @ {threads} threads");
+            }
+        }
+    }
+}
+
+#[test]
+fn pooled_execution_crosses_threads_at_production_sizes() {
+    // the small per-problem sweeps above run inline (below the pooled
+    // kernels' per-task minimums); this size forces real row partitioning
+    // -- 16k+ element fused passes and multi-task matmuls -- so the
+    // threaded==serial contract is exercised with actual worker threads
+    let kind = ProblemKind::Antiderivative;
+    let spec = PdeBatchSpec { m: 4, n_in: 4096, n_bc: 64, q: 8, bank_size: 16, bank_grid: 64 };
+    let sizes = BlockSizes { n_in: spec.n_in, n_bc: spec.n_bc };
+    let built =
+        build_training_problem(kind, Strategy::Zcs, spec.m, spec.q, 16, 8, sizes).unwrap();
+    let program = Program::compile(&built.graph, &built.outputs);
+    assert!(program.stats.fused_groups > 0);
+    let weights = init_problem_weights(&built, 13);
+    let mut batcher = PdeBatcher::new(kind, spec, &mut Pcg64::seeded(8)).unwrap();
+    let batch = batcher.next_batch();
+    let inputs = feed_map(&built, &weights, &batch);
+    let serial = Executor::with_threads(1).run_ref(&program, &inputs);
+    for threads in [2usize, 4] {
+        let pooled = Executor::with_threads(threads).run_ref(&program, &inputs);
+        assert_eq!(serial, pooled, "{threads} threads at production sizes");
+    }
+}
+
+#[test]
+fn fused_demo_derivatives_bit_match_unfused_at_both_orders() {
+    let mut rng = Pcg64::seeded(41);
+    let (m, n, q) = (3usize, 9usize, 4usize);
+    let net = zcs_demo::DemoNet::random(q, 8, 4, &mut rng);
+    let p = Tensor::new(&[m, q], rng.normals(m * q));
+    let x = Tensor::new(&[n, 1], rng.uniforms_in(n, 0.0, 1.0));
+    let mut exec = Executor::with_threads(1);
+    for order in [1usize, 2] {
+        for strategy in Strategy::ALL {
+            let built = zcs_demo::build_derivative(&net, strategy, m, n, q, order);
+            let fused = Program::compile(&built.graph, &built.outputs);
+            let unfused =
+                Program::compile_with(&built.graph, &built.outputs, PassConfig { fuse: false });
+            let mut inputs: HashMap<NodeId, &Tensor> = HashMap::new();
+            inputs.insert(built.p, &p);
+            inputs.insert(built.x, &x);
+            for (id, t) in &built.extra_inputs {
+                inputs.insert(*id, t);
+            }
+            let a = exec.run_ref(&fused, &inputs);
+            let b = exec.run_ref(&unfused, &inputs);
+            assert_eq!(a, b, "{strategy:?} order {order}: fused != unfused");
+        }
+    }
+}
+
+#[test]
+fn fill_batch_reuses_buffers_and_draws_the_same_sequence() {
+    for kind in NATIVE_PROBLEMS {
+        let spec = spec_for(kind);
+        let mut fresh = PdeBatcher::new(kind, spec, &mut Pcg64::seeded(9)).unwrap();
+        let mut reusing = PdeBatcher::new(kind, spec, &mut Pcg64::seeded(9)).unwrap();
+        let mut batch = PdeBatch::empty();
+        for round in 0..3 {
+            let want = fresh.next_batch();
+            reusing.fill_batch(&mut batch);
+            assert_eq!(batch.p, want.p, "{kind:?} round {round}: sensors diverged");
+            assert_eq!(batch.feeds.len(), want.feeds.len());
+            for ((na, ta), (nb, tb)) in batch.feeds.iter().zip(&want.feeds) {
+                assert_eq!(na, nb, "{kind:?} round {round}: feed order");
+                assert_eq!(ta, tb, "{kind:?} round {round}: feed {na} diverged");
+            }
+        }
+    }
+}

@@ -163,6 +163,7 @@ fn fixed_batch_descent_reduces_loss_and_strategies_agree() {
                 bank_size: 8,
                 bank_grid: 32,
                 log_every: 1,
+                threads: 1,
             };
             let mut trainer = NativeTrainer::new(config).unwrap();
             // deterministic descent: repeat ONE frozen batch
@@ -385,6 +386,7 @@ fn short_training_validates_against_the_reference_solvers() {
             bank_size: 8,
             bank_grid: 32,
             log_every: 5,
+            threads: 1,
         };
         let mut trainer = NativeTrainer::new(config).unwrap();
         let report = trainer.run().unwrap();

@@ -10,7 +10,7 @@
 //! interpreter touches nodes.
 
 use std::collections::HashMap;
-use zcs::autodiff::{zcs_demo, Executor, Graph, NodeId, Program, Strategy};
+use zcs::autodiff::{zcs_demo, Executor, Graph, NodeId, PassConfig, Program, Strategy};
 use zcs::rng::Pcg64;
 use zcs::tensor::Tensor;
 use zcs::util::propkit::{Gen, Runner};
@@ -231,8 +231,10 @@ fn compiled_matches_interpreter_for_every_op_and_derivative() {
 fn dce_and_cse_strictly_shrink_the_zcs_second_order_chain() {
     let mut rng = Pcg64::seeded(13);
     let net = zcs_demo::DemoNet::random(6, 16, 8, &mut rng);
-    let compiled = zcs_demo::compile_derivative(&net, Strategy::Zcs, 4, 24, 6, 2);
-    let s = &compiled.program.stats;
+    let built = zcs_demo::build_derivative(&net, Strategy::Zcs, 4, 24, 6, 2);
+    // fusion off, so the per-node pass wins are visible in isolation
+    let unfused = Program::compile_with(&built.graph, &built.outputs, PassConfig { fuse: false });
+    let s = &unfused.stats;
     // DCE: the z-chain leaves whole adjoint subtrees (e.g. the branch
     // gradients) unreachable from d/da
     assert!(s.live_nodes < s.graph_nodes, "DCE found nothing: {s:?}");
@@ -244,6 +246,12 @@ fn dce_and_cse_strictly_shrink_the_zcs_second_order_chain() {
     assert!(s.simplified > 0, "identity rewrites should fire: {s:?}");
     // and the arena is denser than one-slot-per-instruction
     assert!(s.n_slots < s.instructions, "no slot reuse: {s:?}");
+    // the default pipeline stacks elementwise fusion on top
+    let fused = Program::compile(&built.graph, &built.outputs);
+    let f = &fused.stats;
+    assert!(f.fused_groups > 0, "z-chain should contain fusable groups: {f:?}");
+    assert!(f.instructions < s.instructions, "fusion saved nothing: {f:?}");
+    assert_eq!(f.instructions + f.fused_ops, s.instructions, "fusion accounting: {f:?}");
 }
 
 #[test]
