@@ -13,6 +13,7 @@ use std::rc::Rc;
 use zcs::autodiff::{zcs_demo, Executor, NodeId, PassConfig, Program, Strategy};
 use zcs::config::RunConfig;
 use zcs::coordinator::batch::{Batcher, PdeBatchSpec, PdeBatcher};
+use zcs::coordinator::native::{NativeRunConfig, NativeTrainer, Optimizer};
 use zcs::coordinator::params::init_params;
 use zcs::pde::residual::{build_training_problem, init_problem_weights, BlockSizes};
 use zcs::pde::ProblemKind;
@@ -37,6 +38,10 @@ fn main() -> anyhow::Result<()> {
     // fused + threaded execution of the ZCS training-step programs
     let exec_rows = bench_exec_hot_path(&mut table)?;
     write_bench_exec_json(&exec_rows)?;
+
+    // the whole training step: feed-based SGD vs resident SGD / Adam
+    let step_rows = bench_whole_step(&mut table)?;
+    write_bench_step_json(&step_rows)?;
 
     // GP bank generation (one-time cost, amortised)
     let stats = Bench::heavy_from_env().run(|| {
@@ -170,7 +175,7 @@ fn bench_exec_hot_path(table: &mut Table) -> anyhow::Result<Vec<ExecRow>> {
         let built = build_training_problem(kind, Strategy::Zcs, m, q, hidden, k, sizes)?;
         let fused = Program::compile(&built.graph, &built.outputs);
         let unfused =
-            Program::compile_with(&built.graph, &built.outputs, PassConfig { fuse: false });
+            Program::compile_with(&built.graph, &built.outputs, PassConfig::NONE);
         let weights = init_problem_weights(&built, 9);
         let mut batcher = PdeBatcher::new(
             kind,
@@ -276,6 +281,174 @@ fn write_bench_exec_json(rows: &[ExecRow]) -> anyhow::Result<()> {
     ]);
     std::fs::write("BENCH_exec.json", doc.to_string())?;
     eprintln!("wrote BENCH_exec.json");
+    Ok(())
+}
+
+/// One whole-training-step measurement: the same (problem, M, N) stepped
+/// by the old feed-based SGD path and by the resident SGD / Adam programs
+/// at 1, 2 and 4 kernel threads.  Identical seeds and lr = 0 keep every
+/// variant on the same frozen batch and stationary weights, so only wall
+/// time moves.
+struct StepRow {
+    problem: &'static str,
+    m: usize,
+    n: usize,
+    /// executor-resident bytes of the resident-Adam program (w + m + v)
+    adam_state_bytes: u64,
+    /// [1t, 2t, 4t] each
+    feed_sgd: [Stats; 3],
+    resident_sgd: [Stats; 3],
+    resident_adam: [Stats; 3],
+}
+
+impl StepRow {
+    /// feed-based SGD time / resident time at the same thread count.
+    fn speedup(feed: &Stats, resident: &Stats) -> f64 {
+        feed.mean.as_secs_f64() / resident.mean.as_secs_f64().max(1e-12)
+    }
+}
+
+/// Measure one step variant at 1/2/4 threads; returns the stats and the
+/// variant's resident-state footprint.
+fn step_variant_stats(
+    bench: &Bench,
+    kind: ProblemKind,
+    m: usize,
+    n: usize,
+    optimizer: Optimizer,
+    resident: bool,
+) -> anyhow::Result<([Stats; 3], u64)> {
+    let mut stats: Vec<Stats> = Vec::new();
+    let mut state_bytes = 0u64;
+    for threads in [1usize, 2, 4] {
+        let config = NativeRunConfig {
+            problem: kind,
+            strategy: Strategy::Zcs,
+            m,
+            n,
+            n_bc: 32,
+            q: 8,
+            hidden: 32,
+            k: 16,
+            steps: 0,
+            // lr 0 keeps the weights stationary across bench iterations
+            // while still paying the full optimizer-update cost
+            lr: 0.0,
+            seed: 11,
+            bank_size: 32,
+            bank_grid: 64,
+            log_every: 1,
+            threads,
+            optimizer,
+            resident,
+        };
+        let mut trainer = NativeTrainer::new(config)?;
+        state_bytes = trainer.resident_state_bytes();
+        let batch = trainer.next_batch();
+        stats.push(bench.run(|| trainer.step(&batch).unwrap()));
+    }
+    let arr: [Stats; 3] =
+        stats.try_into().map_err(|_| anyhow::anyhow!("expected three thread counts"))?;
+    Ok((arr, state_bytes))
+}
+
+/// The whole-step comparison per case-study problem: one `step()` call
+/// covering batch feed, forward, strategy derivatives, weight gradients
+/// and the optimizer -- the quantity `zcs ntrain` pays per iteration.
+fn bench_whole_step(table: &mut Table) -> anyhow::Result<Vec<StepRow>> {
+    let bench = Bench::from_env();
+    let cases: [(ProblemKind, &'static str, usize, usize); 2] = [
+        (ProblemKind::Antiderivative, "antiderivative", 32, 256),
+        (ProblemKind::ReactionDiffusion, "reaction_diffusion", 24, 192),
+    ];
+    let mut rows = Vec::new();
+    for (kind, name, m, n) in cases {
+        let (feed_sgd, _) = step_variant_stats(&bench, kind, m, n, Optimizer::Sgd, false)?;
+        let (resident_sgd, _) = step_variant_stats(&bench, kind, m, n, Optimizer::Sgd, true)?;
+        let (resident_adam, adam_state_bytes) =
+            step_variant_stats(&bench, kind, m, n, Optimizer::Adam, true)?;
+        let row = StepRow {
+            problem: name,
+            m,
+            n,
+            adam_state_bytes,
+            feed_sgd,
+            resident_sgd,
+            resident_adam,
+        };
+        for (label, stats) in [
+            ("feed sgd", &row.feed_sgd),
+            ("resident sgd", &row.resident_sgd),
+            ("resident adam", &row.resident_adam),
+        ] {
+            for (ti, threads) in [1usize, 2, 4].into_iter().enumerate() {
+                table.row(&[
+                    format!("whole step {name}: {label} {threads}t"),
+                    format!("{:.3} ms", stats[ti].mean_ms()),
+                    format!("{:.3} ms", stats[ti].p50.as_secs_f64() * 1e3),
+                    stats[ti].iters.to_string(),
+                ]);
+            }
+        }
+        eprintln!(
+            "whole step {name}: resident sgd x{:.2}, resident adam x{:.2} vs feed sgd (1t); \
+             {:.1} KiB adam state",
+            StepRow::speedup(&row.feed_sgd[0], &row.resident_sgd[0]),
+            StepRow::speedup(&row.feed_sgd[0], &row.resident_adam[0]),
+            row.adam_state_bytes as f64 / 1024.0,
+        );
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
+/// Persist the whole-step numbers (`BENCH_step.json`): feed-based SGD vs
+/// resident SGD vs resident Adam at 1/2/4 threads, with speedup columns
+/// at equal thread count.
+fn write_bench_step_json(rows: &[StepRow]) -> anyhow::Result<()> {
+    let cases: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            let mut named: Vec<(String, Json)> = vec![
+                ("problem".into(), Json::from(r.problem)),
+                ("strategy".into(), Json::from("zcs")),
+                ("m".into(), Json::from(r.m)),
+                ("n".into(), Json::from(r.n)),
+                ("adam_state_kib".into(), Json::from(r.adam_state_bytes as f64 / 1024.0)),
+            ];
+            for (prefix, stats) in [
+                ("feed_sgd", &r.feed_sgd),
+                ("resident_sgd", &r.resident_sgd),
+                ("resident_adam", &r.resident_adam),
+            ] {
+                for (ti, threads) in [1usize, 2, 4].into_iter().enumerate() {
+                    named.push((
+                        format!("{prefix}_{threads}t_ns"),
+                        Json::from(stats[ti].mean.as_nanos() as f64),
+                    ));
+                }
+            }
+            for (ti, threads) in [1usize, 2, 4].into_iter().enumerate() {
+                named.push((
+                    format!("speedup_resident_sgd_{threads}t"),
+                    Json::from(StepRow::speedup(&r.feed_sgd[ti], &r.resident_sgd[ti])),
+                ));
+                named.push((
+                    format!("speedup_resident_adam_{threads}t"),
+                    Json::from(StepRow::speedup(&r.feed_sgd[ti], &r.resident_adam[ti])),
+                ));
+            }
+            obj(named.iter().map(|(k, v)| (k.as_str(), v.clone())).collect())
+        })
+        .collect();
+    let doc = obj(vec![
+        ("bench", Json::from("hot_path.step")),
+        ("unit", Json::from("ns/step")),
+        ("quick", Json::Bool(zcs::util::benchkit::quick_mode())),
+        ("cases", Json::from(cases)),
+    ]);
+    std::fs::write("BENCH_step.json", doc.to_string())?;
+    eprintln!("wrote BENCH_step.json");
     Ok(())
 }
 

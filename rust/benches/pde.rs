@@ -58,6 +58,10 @@ fn main() -> anyhow::Result<()> {
                     bank_grid: 64,
                     log_every: 1,
                     threads: 1,
+                    // feed-based path: this bench isolates forward +
+                    // strategy gradients (lr 0), not the optimizer
+                    resident: false,
+                    ..NativeRunConfig::default()
                 };
                 let mut trainer = NativeTrainer::new(config)?;
                 let batch = trainer.next_batch();

@@ -9,27 +9,44 @@
 //! (compile-once/run-many); it is reusable across *different* programs
 //! too, growing its arena as needed.
 //!
+//! For *resident* programs ([`Program::attach_optimizer`]) the executor
+//! additionally holds the training state -- weights and optimizer moments
+//! -- across runs: [`Executor::bind_states`] seeds it once, each run's
+//! [`super::program::UpdateInstr`]s step it in place straight from the
+//! gradients' arena slots, and [`Executor::run_scalars`] reads the loss
+//! outputs back without materialising a single output tensor.  The whole
+//! training step is one `Executor` call with zero steady-state heap
+//! traffic (asserted by `rust/tests/resident_step.rs`).
+//!
 //! The executor also owns a [`Pool`] of worker threads (default: the
-//! `ZCS_THREADS` environment variable, else serial).  The matmuls, the
-//! axis reductions and the fused elementwise instructions row-partition
-//! their output over the pool with every per-element accumulation kept
-//! sequential, so execution is bit-identical for any thread count --
-//! `rust/tests/fusion_pool.rs` pins threaded == serial to `==`.
+//! `ZCS_THREADS` environment variable, else serial).  The matmuls (with
+//! or without fused epilogues), the axis reductions and the fused
+//! elementwise instructions row-partition their output over the pool with
+//! every per-element accumulation kept sequential, so execution is
+//! bit-identical for any thread count -- `rust/tests/fusion_pool.rs` pins
+//! threaded == serial to `==`.
 
 use super::graph::NodeId;
-use super::program::{Instr, OpCode, Operand, Program};
+use super::program::{Instr, OpCode, Operand, Program, StateKind, UpdateRule};
 use crate::tensor::{kernels, Tensor};
 use crate::util::pool::{default_threads, Pool};
 use std::collections::HashMap;
 
-/// Reusable execution arena plus the kernel worker pool.
+/// Reusable execution arena plus resident state and the kernel pool.
 pub struct Executor {
     arena: Vec<Option<Tensor>>,
+    /// resident state tensors, aligned with [`Program::states`] (bound by
+    /// [`Executor::bind_states`], updated in place every run)
+    states: Vec<Tensor>,
+    /// optimizer timestep: runs-with-updates since the last bind
+    opt_t: u64,
     pool: Pool,
     /// scratch for resolving `Fused` instruction operands without a
     /// per-instruction allocation (raw pointers because the borrows it
     /// holds are scoped to one instruction, not to the executor)
     ext_scratch: Vec<*const Tensor>,
+    /// register-file scratch for fused/epilogue kernels on the serial path
+    reg_scratch: Vec<f64>,
 }
 
 impl Default for Executor {
@@ -48,12 +65,14 @@ fn resolve<'a>(
     arena: &'a [Option<Tensor>],
     inputs: &[&'a Tensor],
     consts: &'a [Tensor],
+    states: &'a [Tensor],
     v: Operand,
 ) -> &'a Tensor {
     match v {
         Operand::Buf(b) => arena[b].as_ref().expect("operand buffer is live"),
         Operand::In(i) => inputs[i],
         Operand::Const(c) => &consts[c],
+        Operand::State(s) => &states[s],
     }
 }
 
@@ -66,12 +85,58 @@ impl Executor {
 
     /// An executor whose kernels run on `threads` threads (1 = serial).
     pub fn with_threads(threads: usize) -> Self {
-        Self { arena: Vec::new(), pool: Pool::new(threads), ext_scratch: Vec::new() }
+        Self {
+            arena: Vec::new(),
+            states: Vec::new(),
+            opt_t: 0,
+            pool: Pool::new(threads),
+            ext_scratch: Vec::new(),
+            reg_scratch: Vec::new(),
+        }
     }
 
     /// Kernel threads this executor runs on.
     pub fn threads(&self) -> usize {
         self.pool.threads()
+    }
+
+    /// Seed the resident state of a program compiled with
+    /// [`Program::attach_optimizer`]: `weights` fill the `Weight` slots in
+    /// order, optimizer moments start at zero, and the optimizer timestep
+    /// resets.  Must be called before running a resident program.
+    pub fn bind_states(&mut self, program: &Program, weights: Vec<Tensor>) {
+        let n_w = program.states.iter().filter(|s| s.kind == StateKind::Weight).count();
+        assert_eq!(weights.len(), n_w, "bind_states weight count");
+        self.states.clear();
+        let mut it = weights.into_iter();
+        for slot in &program.states {
+            let t = match slot.kind {
+                StateKind::Weight => {
+                    let t = it.next().expect("weight slots counted above");
+                    assert_eq!(t.shape(), &slot.shape[..], "bind_states shape for {}", slot.node);
+                    t
+                }
+                StateKind::AdamM | StateKind::AdamV => Tensor::zeros(&slot.shape),
+            };
+            self.states.push(t);
+        }
+        self.opt_t = 0;
+    }
+
+    /// The resident state tensors, aligned with [`Program::states`]
+    /// (weight slots first).  Live values: they move every run.
+    pub fn states(&self) -> &[Tensor] {
+        &self.states
+    }
+
+    /// One resident state tensor by slot index.
+    pub fn state(&self, i: usize) -> &Tensor {
+        &self.states[i]
+    }
+
+    /// Optimizer steps applied since the last [`Executor::bind_states`].
+    pub fn opt_steps(&self) -> u64 {
+        self.opt_t
     }
 
     /// Execute `program`, feeding graph inputs by their original `NodeId`
@@ -102,35 +167,105 @@ impl Executor {
         self.run_inputs(program, &ins)
     }
 
-    /// Lowest-overhead entry point: inputs already resolved into
-    /// [`Program::inputs`] order (what [`crate::coordinator::native`]'s
-    /// per-step feed plan produces -- no `HashMap` on the hot path).
+    /// Lowest-overhead tensor-output entry point: inputs already resolved
+    /// into [`Program::inputs`] order (no `HashMap` on the hot path).
+    /// Output tensors are cloned out of the arena; the loss-only hot loop
+    /// uses [`Executor::run_scalars`] instead, which clones nothing.
     pub fn run_inputs(&mut self, program: &Program, ins: &[&Tensor]) -> Vec<Tensor> {
+        self.execute(program, ins);
+        program
+            .outputs
+            .iter()
+            .map(|&v| resolve(&self.arena, ins, &program.consts, &self.states, v).clone())
+            .collect()
+    }
+
+    /// Borrow-based scalar readback: execute and copy each (scalar)
+    /// program output into `out` -- the whole-step hot path performs no
+    /// output allocation at all.  Panics if an output is not a
+    /// single-element tensor.
+    pub fn run_scalars(&mut self, program: &Program, ins: &[&Tensor], out: &mut [f64]) {
+        assert_eq!(out.len(), program.outputs.len(), "run_scalars output count");
+        self.execute(program, ins);
+        for (o, &v) in out.iter_mut().zip(&program.outputs) {
+            let t = resolve(&self.arena, ins, &program.consts, &self.states, v);
+            assert_eq!(t.len(), 1, "run_scalars wants scalar outputs");
+            *o = t.data()[0];
+        }
+    }
+
+    /// Run the instruction list, then apply the in-place optimizer
+    /// updates (if any) to the resident state.
+    fn execute(&mut self, program: &Program, ins: &[&Tensor]) {
         assert_eq!(ins.len(), program.inputs.len(), "input count");
         for ((id, shape), t) in program.inputs.iter().zip(&program.input_shapes).zip(ins) {
             assert_eq!(t.shape(), &shape[..], "input {id} shape");
+        }
+        if !program.states.is_empty() {
+            assert_eq!(
+                self.states.len(),
+                program.states.len(),
+                "resident program: call bind_states first"
+            );
         }
         if self.arena.len() < program.n_slots {
             self.arena.resize_with(program.n_slots, || None);
         }
 
-        // the fused-operand scratch is taken out for the duration of the
-        // instruction loop (it cannot be borrowed from `self` while the
-        // arena is) and put back so its capacity is reused across runs
+        // the fused-operand and register scratches are taken out for the
+        // duration of the instruction loop (they cannot be borrowed from
+        // `self` while the arena is) and put back so their capacity is
+        // reused across runs
         let mut ext_scratch = std::mem::take(&mut self.ext_scratch);
+        let mut reg_scratch = std::mem::take(&mut self.reg_scratch);
         for instr in &program.instrs {
             let mut out = self.arena[instr.out].take().unwrap_or_else(empty_tensor);
-            self.step(instr, ins, &program.consts, &mut out, &mut ext_scratch);
+            self.step(instr, ins, &program.consts, &mut out, &mut ext_scratch, &mut reg_scratch);
             self.arena[instr.out] = Some(out);
         }
         ext_scratch.clear();
         self.ext_scratch = ext_scratch;
+        self.reg_scratch = reg_scratch;
 
-        program
-            .outputs
-            .iter()
-            .map(|&v| resolve(&self.arena, ins, &program.consts, v).clone())
-            .collect()
+        // in-place optimizer updates: gradients are consumed straight from
+        // their arena slots, weights and moments never leave the executor
+        if !program.updates.is_empty() {
+            self.opt_t += 1;
+            let t = self.opt_t;
+            for up in &program.updates {
+                let g: &Tensor = match up.grad {
+                    Operand::Buf(b) => self.arena[b].as_ref().expect("gradient buffer is live"),
+                    Operand::In(i) => ins[i],
+                    Operand::Const(c) => &program.consts[c],
+                    Operand::State(_) => unreachable!("a gradient is never resident state"),
+                };
+                match up.rule {
+                    UpdateRule::Sgd { lr } => {
+                        kernels::sgd_update(&mut self.states[up.weight], g, lr);
+                    }
+                    UpdateRule::Adam { lr, beta1, beta2, eps } => {
+                        let (mi, vi) = up.moments.expect("adam carries moment slots");
+                        debug_assert!(up.weight < mi && vi == mi + 1);
+                        // weight < m and v == m + 1 by construction
+                        // (Program::attach_optimizer), so one split yields
+                        // all three disjoint borrows
+                        let (head, tail) = self.states.split_at_mut(mi);
+                        let (m_slice, v_slice) = tail.split_at_mut(1);
+                        kernels::adam_update(
+                            &mut head[up.weight],
+                            &mut m_slice[0],
+                            &mut v_slice[0],
+                            g,
+                            lr,
+                            beta1,
+                            beta2,
+                            eps,
+                            t,
+                        );
+                    }
+                }
+            }
+        }
     }
 
     fn step(
@@ -140,8 +275,9 @@ impl Executor {
         consts: &[Tensor],
         out: &mut Tensor,
         ext_scratch: &mut Vec<*const Tensor>,
+        reg_scratch: &mut Vec<f64>,
     ) {
-        let arg = |k: usize| resolve(&self.arena, ins, consts, instr.args[k]);
+        let arg = |k: usize| resolve(&self.arena, ins, consts, &self.states, instr.args[k]);
         match instr.op {
             OpCode::Add => kernels::add_into(arg(0), arg(1), out),
             OpCode::Sub => kernels::sub_into(arg(0), arg(1), out),
@@ -172,16 +308,51 @@ impl Executor {
                     ext_scratch.push(arg(k) as *const Tensor);
                 }
                 // SAFETY: `&Tensor` and `*const Tensor` have identical
-                // layout, and the pointees (arena slots, inputs, constants)
-                // are live and unmodified for the whole instruction -- the
-                // destination never aliases an operand (lowerer contract)
+                // layout, and the pointees (arena slots, inputs, constants,
+                // states) are live and unmodified for the whole instruction
+                // -- the destination never aliases an operand (lowerer
+                // contract)
                 let exts: &[&Tensor] = unsafe {
                     std::slice::from_raw_parts(
                         ext_scratch.as_ptr() as *const &Tensor,
                         ext_scratch.len(),
                     )
                 };
-                kernels::fused_into(kernel, exts, &instr.shape, out, &self.pool);
+                kernels::fused_into(kernel, exts, &instr.shape, out, &self.pool, reg_scratch);
+            }
+            OpCode::MatMulFused(ref me) => {
+                ext_scratch.clear();
+                for k in 2..instr.args.len() {
+                    ext_scratch.push(arg(k) as *const Tensor);
+                }
+                // SAFETY: as for `Fused` above
+                let exts: &[&Tensor] = unsafe {
+                    std::slice::from_raw_parts(
+                        ext_scratch.as_ptr() as *const &Tensor,
+                        ext_scratch.len(),
+                    )
+                };
+                if me.nt {
+                    kernels::matmul_nt_fused_into_pool(
+                        arg(0),
+                        arg(1),
+                        &me.epi,
+                        exts,
+                        out,
+                        &self.pool,
+                        reg_scratch,
+                    );
+                } else {
+                    kernels::matmul_fused_into_pool(
+                        arg(0),
+                        arg(1),
+                        &me.epi,
+                        exts,
+                        out,
+                        &self.pool,
+                        reg_scratch,
+                    );
+                }
             }
         }
     }
@@ -281,5 +452,128 @@ mod tests {
         let mut inputs = HashMap::new();
         inputs.insert(x, Tensor::vec1(vec![1.0, 2.0, 3.0]));
         Executor::new().run(&prog, &inputs);
+    }
+
+    /// loss = sum((x * w)^2) with its weight gradient: the shared toy
+    /// step program of the resident tests below.
+    fn toy_step() -> (Graph, NodeId, NodeId, NodeId, NodeId) {
+        let mut g = Graph::new();
+        let w = g.input(&[2]);
+        let x = g.input(&[2]);
+        let xw = g.mul(x, w);
+        let sq = g.mul(xw, xw);
+        let loss = g.sum_all(sq);
+        let gw = g.grad(loss, &[w])[0];
+        (g, w, x, loss, gw)
+    }
+
+    #[test]
+    fn resident_sgd_bit_matches_the_host_side_loop() {
+        use crate::autodiff::program::UpdateRule;
+        use crate::tensor::kernels;
+        let (g, w, x, loss, gw) = toy_step();
+        let lr = 0.05;
+        let plain = Program::compile(&g, &[loss, gw]);
+        let resident =
+            Program::compile(&g, &[loss, gw]).attach_optimizer(&[w], UpdateRule::Sgd { lr });
+        assert_eq!(resident.outputs.len(), 1);
+        assert_eq!(resident.inputs, vec![x]);
+
+        let w0 = Tensor::vec1(vec![1.0, -2.0]);
+        let xv = Tensor::vec1(vec![0.5, 1.5]);
+        let mut exec = Executor::with_threads(1);
+        exec.bind_states(&resident, vec![w0.clone()]);
+        let mut pexec = Executor::with_threads(1);
+        let mut wh = w0;
+        for step in 0..4 {
+            let mut out = [0.0f64; 1];
+            exec.run_scalars(&resident, &[&xv], &mut out);
+            let outs = pexec.run_inputs(&plain, &[&wh, &xv]);
+            assert_eq!(out[0], outs[0].data()[0], "step {step}: loss drifted");
+            kernels::sgd_update(&mut wh, &outs[1], lr);
+            assert_eq!(exec.state(0), &wh, "step {step}: weights drifted");
+        }
+        assert_eq!(exec.opt_steps(), 4);
+    }
+
+    #[test]
+    fn resident_adam_bit_matches_the_host_side_loop() {
+        use crate::autodiff::program::UpdateRule;
+        use crate::tensor::kernels;
+        let (g, w, x, loss, gw) = toy_step();
+        let (lr, b1, b2, eps) = (1e-2, 0.9, 0.999, 1e-8);
+        let plain = Program::compile(&g, &[loss, gw]);
+        let resident = Program::compile(&g, &[loss, gw])
+            .attach_optimizer(&[w], UpdateRule::Adam { lr, beta1: b1, beta2: b2, eps });
+        assert_eq!(resident.states.len(), 3); // w + m + v
+
+        let w0 = Tensor::vec1(vec![0.7, -1.3]);
+        let xv = Tensor::vec1(vec![1.1, 0.4]);
+        let mut exec = Executor::with_threads(1);
+        exec.bind_states(&resident, vec![w0.clone()]);
+        let mut pexec = Executor::with_threads(1);
+        let mut wh = w0;
+        let mut mh = Tensor::zeros(&[2]);
+        let mut vh = Tensor::zeros(&[2]);
+        for t in 1..=5u64 {
+            let mut out = [0.0f64; 1];
+            exec.run_scalars(&resident, &[&xv], &mut out);
+            let outs = pexec.run_inputs(&plain, &[&wh, &xv]);
+            assert_eq!(out[0], outs[0].data()[0], "step {t}: loss drifted");
+            kernels::adam_update(&mut wh, &mut mh, &mut vh, &outs[1], lr, b1, b2, eps, t);
+            assert_eq!(exec.state(0), &wh, "step {t}: weights drifted");
+            assert_eq!(exec.state(1), &mh, "step {t}: first moment drifted");
+            assert_eq!(exec.state(2), &vh, "step {t}: second moment drifted");
+        }
+    }
+
+    #[test]
+    fn bare_weight_gradients_are_read_at_their_pre_update_values() {
+        use crate::autodiff::program::UpdateRule;
+        // loss = sum(w1 * w2): the simplifier reduces each gradient to the
+        // *other* weight input, so attach_optimizer must materialize both
+        // through pre-update copies -- w1 steps against w2's old value and
+        // vice versa, never against a half-updated state
+        let mut g = Graph::new();
+        let w1 = g.input(&[2]);
+        let w2 = g.input(&[2]);
+        let prod = g.mul(w1, w2);
+        let loss = g.sum_all(prod);
+        let grads = g.grad(loss, &[w1, w2]);
+        let lr = 0.25;
+        let resident = Program::compile(&g, &[loss, grads[0], grads[1]])
+            .attach_optimizer(&[w1, w2], UpdateRule::Sgd { lr });
+        assert!(resident.inputs.is_empty(), "both inputs are resident weights");
+        let a0 = Tensor::vec1(vec![1.0, -2.0]);
+        let b0 = Tensor::vec1(vec![3.0, 0.5]);
+        let mut exec = Executor::with_threads(1);
+        exec.bind_states(&resident, vec![a0.clone(), b0.clone()]);
+        let mut out = [0.0f64];
+        exec.run_scalars(&resident, &[], &mut out);
+        assert_eq!(out[0], 1.0 * 3.0 + (-2.0) * 0.5);
+        for i in 0..2 {
+            assert_eq!(
+                exec.state(0).data()[i],
+                a0.data()[i] - b0.data()[i] * lr,
+                "w1[{i}] must step against w2's pre-update value"
+            );
+            assert_eq!(
+                exec.state(1).data()[i],
+                b0.data()[i] - a0.data()[i] * lr,
+                "w2[{i}] must step against w1's pre-update value"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "bind_states")]
+    fn running_a_resident_program_without_binding_panics() {
+        use crate::autodiff::program::UpdateRule;
+        let (g, w, x, loss, gw) = toy_step();
+        let resident =
+            Program::compile(&g, &[loss, gw]).attach_optimizer(&[w], UpdateRule::Sgd { lr: 0.1 });
+        let xv = Tensor::vec1(vec![1.0, 2.0]);
+        let _ = x;
+        Executor::with_threads(1).run_scalars(&resident, &[&xv], &mut [0.0]);
     }
 }

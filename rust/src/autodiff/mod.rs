@@ -30,5 +30,8 @@ pub mod zcs_demo;
 
 pub use exec::Executor;
 pub use graph::{Graph, NodeId, Op};
-pub use program::{Instr, OpCode, Operand, PassConfig, Program, ProgramStats};
+pub use program::{
+    Instr, MatmulEpilogue, OpCode, Operand, PassConfig, Program, ProgramStats, StateKind,
+    StateSlot, UpdateInstr, UpdateRule,
+};
 pub use zcs_demo::{DemoNet, Strategy};

@@ -19,8 +19,8 @@
 //! zero sign, which `==` treats as equal).
 
 use super::graph::{Graph, NodeId, Op};
-use super::program::OpCode;
-use crate::tensor::kernels::{ExtKind, FusedKernel, MicroOp};
+use super::program::{MatmulEpilogue, OpCode};
+use crate::tensor::kernels::{Epilogue, ExtKind, FusedKernel, MicroOp};
 use crate::tensor::Tensor;
 use std::collections::HashMap;
 
@@ -63,6 +63,11 @@ pub struct Dag {
     pub fused_ops: usize,
     /// estimated intermediate bytes-moved saved per run by fusion
     pub fusion_bytes_saved: u64,
+    /// matmuls that absorbed an elementwise epilogue
+    /// ([`fuse_matmul_epilogue`])
+    pub matmul_epilogues: usize,
+    /// elementwise micro-ops riding inside matmul epilogues
+    pub epilogue_ops: usize,
 }
 
 /// Hash-cons key for constants: shape + exact bit pattern.
@@ -99,8 +104,9 @@ fn op_key(op: &OpCode, args: &[Val], shape: &[usize]) -> OpKey {
         // result shape (already part of the key) disambiguates reshapes
         OpCode::Reshape => (15, 0),
         OpCode::SumAxis(axis) => (16, *axis as u64),
-        // fusion runs after value numbering, so Fused never reaches CSE
+        // fusion runs after value numbering, so fused nodes never reach CSE
         OpCode::Fused(_) => unreachable!("Fused is produced after CSE"),
+        OpCode::MatMulFused(_) => unreachable!("MatMulFused is produced after CSE"),
     };
     OpKey(tag, payload, args.to_vec(), shape.to_vec())
 }
@@ -287,6 +293,9 @@ fn fold(op: &OpCode, args: &[&Tensor], shape: &[usize]) -> Tensor {
         OpCode::MatMul => args[0].matmul(args[1]),
         OpCode::Transpose => args[0].transpose(),
         OpCode::Fused(_) => unreachable!("Fused is produced after constant folding"),
+        OpCode::MatMulFused(_) => {
+            unreachable!("MatMulFused is produced after constant folding")
+        }
     }
 }
 
@@ -372,6 +381,8 @@ pub fn build_dag(graph: &Graph, outputs: &[NodeId]) -> Dag {
         fused_groups: 0,
         fused_ops: 0,
         fusion_bytes_saved: 0,
+        matmul_epilogues: 0,
+        epilogue_ops: 0,
     }
 }
 
@@ -561,6 +572,8 @@ pub fn fuse_elementwise(dag: Dag) -> Dag {
         fused_groups,
         fused_ops,
         fusion_bytes_saved,
+        matmul_epilogues: dag.matmul_epilogues,
+        epilogue_ops: dag.epilogue_ops,
     }
 }
 
@@ -664,6 +677,250 @@ fn build_fused_kernel(
     }
     let fused_traffic = (kernel.elem_exts() as u64 + 1) * elems * 8;
     (kernel, ext_vals, unfused.saturating_sub(fused_traffic))
+}
+
+// ---------------------------------------------------------------------------
+// Matmul epilogue fusion
+// ---------------------------------------------------------------------------
+
+/// Lower one elementwise node to a singleton [`FusedKernel`] whose exts
+/// align one-to-one with the node's args -- the same per-op lowering as
+/// [`build_fused_kernel`], so merging it into a matmul epilogue preserves
+/// scalar semantics exactly.  `None` for non-elementwise ops and for
+/// `Broadcast` (its operand is a scalar, never a matmul result).
+fn singleton_kernel(op: &OpCode) -> Option<FusedKernel> {
+    use ExtKind::{Elem, Scalar};
+    let (exts, micro) = match op {
+        OpCode::Add => (vec![Elem, Elem], MicroOp::Add(0, 1)),
+        OpCode::Sub => (vec![Elem, Elem], MicroOp::Sub(0, 1)),
+        OpCode::Mul => (vec![Elem, Elem], MicroOp::Mul(0, 1)),
+        // ScaleBy(s, x) = x * s, the scalar loaded once per pass
+        OpCode::ScaleBy => (vec![Scalar, Elem], MicroOp::Mul(1, 0)),
+        OpCode::Scale(c) => (vec![Elem], MicroOp::Scale(0, *c)),
+        OpCode::Neg => (vec![Elem], MicroOp::Neg(0)),
+        OpCode::Square => (vec![Elem], MicroOp::Square(0)),
+        OpCode::Sin => (vec![Elem], MicroOp::Sin(0)),
+        OpCode::Cos => (vec![Elem], MicroOp::Cos(0)),
+        OpCode::Tanh => (vec![Elem], MicroOp::Tanh(0)),
+        _ => return None,
+    };
+    let out = exts.len() as u16;
+    Some(FusedKernel { exts, ops: vec![micro], out })
+}
+
+/// Fold single-use `MatMul`/`MatMulNT` results into the elementwise
+/// consumer that follows them.
+///
+/// A matmul merges with its consumer when (a) its value is read by exactly
+/// one surviving node and is not a program output, (b) the consumer has
+/// the matmul's shape, and (c) the consumer is elementwise -- a [`Fused`]
+/// group (so a whole bias-add + activation chain rides along) or a lone
+/// fusable op.  The consumer becomes the matmul's *epilogue*
+/// ([`crate::tensor::kernels::Epilogue`]): its micro-program runs over
+/// each freshly accumulated output row block while the tile is cache-hot,
+/// with the matmul element in register 0.  Accumulation order and the
+/// per-element scalar sequence are untouched, so fused execution is
+/// bit-identical to the unfused instructions for any thread count
+/// (`rust/tests/fusion_pool.rs`).  Runs after [`fuse_elementwise`].
+///
+/// [`Fused`]: OpCode::Fused
+pub fn fuse_matmul_epilogue(dag: Dag) -> Dag {
+    let n = dag.nodes.len();
+    if n == 0 {
+        return dag;
+    }
+
+    // -- liveness, escapes, and per-use consumer lists (`mul(mm, mm)`
+    // records its consumer twice)
+    let mut live = vec![false; n];
+    let mut stack: Vec<usize> = dag
+        .outputs
+        .iter()
+        .filter_map(|v| match v {
+            Val::Node(m) => Some(*m),
+            _ => None,
+        })
+        .collect();
+    while let Some(i) = stack.pop() {
+        if live[i] {
+            continue;
+        }
+        live[i] = true;
+        for arg in &dag.nodes[i].args {
+            if let Val::Node(m) = arg {
+                stack.push(*m);
+            }
+        }
+    }
+    let mut consumers: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, node) in dag.nodes.iter().enumerate() {
+        if !live[i] {
+            continue;
+        }
+        for arg in &node.args {
+            if let Val::Node(m) = arg {
+                consumers[*m].push(i);
+            }
+        }
+    }
+    let mut escapes = vec![false; n];
+    for v in &dag.outputs {
+        if let Val::Node(m) = *v {
+            escapes[m] = true;
+        }
+    }
+
+    // -- plan the merges: matmul -> consumer and consumer -> matmul
+    let mut absorbed_into: Vec<Option<usize>> = vec![None; n];
+    let mut takes: Vec<Option<usize>> = vec![None; n];
+    for i in 0..n {
+        if !live[i] || escapes[i] {
+            continue;
+        }
+        if !matches!(dag.nodes[i].op, OpCode::MatMul | OpCode::MatMulNT) {
+            continue;
+        }
+        let cs = &consumers[i];
+        if cs.is_empty() {
+            continue;
+        }
+        let c = cs[0];
+        if !cs.iter().all(|&x| x == c) {
+            continue; // read by more than one instruction
+        }
+        if takes[c].is_some() {
+            continue; // the consumer already absorbs another matmul
+        }
+        if dag.nodes[c].shape != dag.nodes[i].shape {
+            continue;
+        }
+        let elementwise = match &dag.nodes[c].op {
+            OpCode::Fused(k) => {
+                // every read of the matmul must be a per-element load
+                dag.nodes[c]
+                    .args
+                    .iter()
+                    .zip(&k.exts)
+                    .all(|(&a, &kind)| a != Val::Node(i) || kind == ExtKind::Elem)
+            }
+            op => singleton_kernel(op).is_some(),
+        };
+        if !elementwise {
+            continue;
+        }
+        absorbed_into[i] = Some(c);
+        takes[c] = Some(i);
+    }
+
+    // -- rebuild the node list, merging each planned pair at the
+    // consumer's position (the matmul always precedes it in topo order)
+    let mut new_nodes: Vec<DagNode> = Vec::new();
+    let mut remap: Vec<Option<Val>> = vec![None; n];
+    let remap_val = |v: Val, remap: &[Option<Val>]| -> Val {
+        match v {
+            Val::Node(m) => remap[m].expect("args precede uses in topo order"),
+            other => other,
+        }
+    };
+    let mut matmul_epilogues = 0usize;
+    let mut epilogue_ops = 0usize;
+    let mut bytes_saved = 0u64;
+    for c in 0..n {
+        if !live[c] {
+            continue;
+        }
+        if absorbed_into[c].is_some() {
+            continue; // a matmul folded into its consumer
+        }
+        let node = &dag.nodes[c];
+        if let Some(mm) = takes[c] {
+            let kernel = match &node.op {
+                OpCode::Fused(k) => (**k).clone(),
+                op => singleton_kernel(op).expect("planned consumer is elementwise"),
+            };
+            let mm_node = &dag.nodes[mm];
+            let nt = matches!(mm_node.op, OpCode::MatMulNT);
+            // split the consumer's externals: reads of the matmul value map
+            // to the accumulator register 0, the rest keep loading
+            // (registers 1..=kept); op registers shift accordingly
+            let n_ext_old = kernel.exts.len();
+            let mut ext_reg: Vec<u16> = vec![0; n_ext_old];
+            let mut kept_kinds: Vec<ExtKind> = Vec::new();
+            let mut kept_args: Vec<Val> = Vec::new();
+            for (r, (&arg, &kind)) in node.args.iter().zip(&kernel.exts).enumerate() {
+                if arg == Val::Node(mm) {
+                    ext_reg[r] = 0;
+                } else {
+                    kept_kinds.push(kind);
+                    kept_args.push(arg);
+                    ext_reg[r] = kept_kinds.len() as u16;
+                }
+            }
+            let n_kept = kept_kinds.len();
+            let reg = |r: u16| -> u16 {
+                let r = r as usize;
+                if r < n_ext_old {
+                    ext_reg[r]
+                } else {
+                    (1 + n_kept + (r - n_ext_old)) as u16
+                }
+            };
+            let ops: Vec<MicroOp> = kernel
+                .ops
+                .iter()
+                .map(|op| match *op {
+                    MicroOp::Add(x, y) => MicroOp::Add(reg(x), reg(y)),
+                    MicroOp::Sub(x, y) => MicroOp::Sub(reg(x), reg(y)),
+                    MicroOp::Mul(x, y) => MicroOp::Mul(reg(x), reg(y)),
+                    MicroOp::Scale(x, c2) => MicroOp::Scale(reg(x), c2),
+                    MicroOp::Neg(x) => MicroOp::Neg(reg(x)),
+                    MicroOp::Square(x) => MicroOp::Square(reg(x)),
+                    MicroOp::Sin(x) => MicroOp::Sin(reg(x)),
+                    MicroOp::Cos(x) => MicroOp::Cos(reg(x)),
+                    MicroOp::Tanh(x) => MicroOp::Tanh(reg(x)),
+                })
+                .collect();
+            let epi = Epilogue { exts: kept_kinds, ops, out: reg(kernel.out) };
+            matmul_epilogues += 1;
+            epilogue_ops += epi.ops.len();
+            // the matmul intermediate is never stored and reloaded
+            let elems = node.shape.iter().product::<usize>() as u64;
+            bytes_saved += 2 * elems * 8;
+            let mut args: Vec<Val> = Vec::with_capacity(2 + kept_args.len());
+            args.push(remap_val(mm_node.args[0], &remap));
+            args.push(remap_val(mm_node.args[1], &remap));
+            args.extend(kept_args.iter().map(|&v| remap_val(v, &remap)));
+            new_nodes.push(DagNode {
+                op: OpCode::MatMulFused(Box::new(MatmulEpilogue { nt, epi })),
+                args,
+                shape: node.shape.clone(),
+            });
+            remap[c] = Some(Val::Node(new_nodes.len() - 1));
+            continue;
+        }
+        let args: Vec<Val> = node.args.iter().map(|&v| remap_val(v, &remap)).collect();
+        new_nodes.push(DagNode { op: node.op.clone(), args, shape: node.shape.clone() });
+        remap[c] = Some(Val::Node(new_nodes.len() - 1));
+    }
+
+    let outputs: Vec<Val> = dag.outputs.iter().map(|&v| remap_val(v, &remap)).collect();
+    Dag {
+        inputs: dag.inputs,
+        input_shapes: dag.input_shapes,
+        consts: dag.consts,
+        nodes: new_nodes,
+        outputs,
+        graph_nodes: dag.graph_nodes,
+        live_nodes: dag.live_nodes,
+        folded: dag.folded,
+        cse_hits: dag.cse_hits,
+        simplified: dag.simplified,
+        fused_groups: dag.fused_groups,
+        fused_ops: dag.fused_ops,
+        fusion_bytes_saved: dag.fusion_bytes_saved + bytes_saved,
+        matmul_epilogues,
+        epilogue_ops,
+    }
 }
 
 #[cfg(test)]
@@ -813,6 +1070,65 @@ mod tests {
         let dag = fuse_elementwise(build_dag(&g, &[out]));
         assert_eq!(dag.fused_groups, 0);
         assert!(matches!(dag.nodes[0].op, OpCode::Tanh));
+    }
+
+    #[test]
+    fn matmul_epilogue_merges_a_fused_chain() {
+        // mm = x @ w -> tanh -> square -> sum: fuse_elementwise groups
+        // {tanh, square}; the epilogue pass folds the group into the matmul
+        let mut g = Graph::new();
+        let x = g.input(&[2, 3]);
+        let w = g.input(&[3, 4]);
+        let mm = g.matmul(x, w);
+        let t = g.tanh(mm);
+        let sq = g.square(t);
+        let out = g.sum_all(sq);
+        let dag = fuse_matmul_epilogue(fuse_elementwise(build_dag(&g, &[out])));
+        assert_eq!(dag.matmul_epilogues, 1);
+        assert_eq!(dag.epilogue_ops, 2);
+        assert_eq!(dag.nodes.len(), 2); // MatMulFused + SumAll
+        let OpCode::MatMulFused(me) = &dag.nodes[0].op else {
+            panic!("expected MatMulFused, got {:?}", dag.nodes[0].op)
+        };
+        assert!(!me.nt);
+        assert!(me.epi.exts.is_empty());
+        assert_eq!(me.epi.ops, vec![MicroOp::Tanh(0), MicroOp::Square(1)]);
+        assert_eq!(me.epi.out, 2);
+    }
+
+    #[test]
+    fn matmul_nt_epilogue_keeps_external_operands() {
+        // y = (p @ q^T) * other: the Mul folds as an NT epilogue with one
+        // kept per-element external
+        let mut g = Graph::new();
+        let p = g.input(&[3, 4]);
+        let q = g.input(&[5, 4]);
+        let other = g.input(&[3, 5]);
+        let mm = g.matmul_nt(p, q);
+        let y = g.mul(mm, other);
+        let out = g.sum_all(y);
+        let dag = fuse_matmul_epilogue(fuse_elementwise(build_dag(&g, &[out])));
+        assert_eq!(dag.matmul_epilogues, 1);
+        let OpCode::MatMulFused(me) = &dag.nodes[0].op else {
+            panic!("expected MatMulFused, got {:?}", dag.nodes[0].op)
+        };
+        assert!(me.nt);
+        assert_eq!(me.epi.exts, vec![ExtKind::Elem]);
+        assert_eq!(me.epi.ops, vec![MicroOp::Mul(0, 1)]);
+        assert_eq!(me.epi.out, 2);
+        assert_eq!(dag.nodes[0].args.len(), 3); // p, q, other
+    }
+
+    #[test]
+    fn escaping_or_multi_use_matmul_results_keep_no_epilogue() {
+        // mm itself is a requested output: it must stay materialized
+        let mut g = Graph::new();
+        let x = g.input(&[2, 2]);
+        let mm = g.matmul(x, x);
+        let t = g.tanh(mm);
+        let dag = fuse_matmul_epilogue(fuse_elementwise(build_dag(&g, &[mm, t])));
+        assert_eq!(dag.matmul_epilogues, 0);
+        assert_eq!(dag.nodes.len(), 2);
     }
 
     #[test]

@@ -50,7 +50,7 @@
 
 use super::graph::{Graph, NodeId, Op};
 use super::{exec::Executor, passes};
-use crate::tensor::kernels::FusedKernel;
+use crate::tensor::kernels::{Epilogue, FusedKernel};
 use crate::tensor::Tensor;
 use std::collections::HashMap;
 
@@ -66,6 +66,10 @@ pub enum Operand {
     In(usize),
     /// index into [`Program::consts`] (embedded at compile time)
     Const(usize),
+    /// index into [`Program::states`]: executor-resident state that
+    /// persists across runs (weights and optimizer moments; see
+    /// [`Program::attach_optimizer`])
+    State(usize),
 }
 
 /// Executable opcode -- [`Op`] minus the leaf variants, payloads reduced to
@@ -95,6 +99,21 @@ pub enum OpCode {
     /// pass over the data (see [`passes::fuse_elementwise`] and
     /// [`crate::tensor::kernels::fused_into`])
     Fused(Box<FusedKernel>),
+    /// a matmul whose single elementwise consumer rides along as an
+    /// epilogue applied per cache-hot row block (see
+    /// [`passes::fuse_matmul_epilogue`]); `args[0..2]` are the matmul
+    /// operands, `args[2..]` the epilogue externals
+    MatMulFused(Box<MatmulEpilogue>),
+}
+
+/// Payload of [`OpCode::MatMulFused`]: which matmul flavour, plus the
+/// elementwise micro-program applied to each freshly accumulated row
+/// block.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatmulEpilogue {
+    /// `true` for `A @ B^T` ([`OpCode::MatMulNT`])
+    pub nt: bool,
+    pub epi: Epilogue,
 }
 
 /// One instruction: `arena[out] = op(args...)`.
@@ -130,6 +149,16 @@ pub struct ProgramStats {
     /// estimated intermediate bytes-moved the fusion pass saves per run
     /// (loads+stores of fused-away temporaries)
     pub fusion_bytes_saved: u64,
+    /// `MatMul`/`MatMulNT` instructions that absorbed an elementwise
+    /// epilogue (each one eliminated exactly one instruction)
+    pub matmul_epilogues: usize,
+    /// elementwise micro-ops riding inside matmul epilogues
+    pub epilogue_ops: usize,
+    /// bytes of executor-resident state (weights + optimizer moments);
+    /// 0 until [`Program::attach_optimizer`]
+    pub resident_state_bytes: u64,
+    /// in-Program optimizer update instructions
+    pub update_instrs: usize,
     /// arena slots after liveness-driven reuse (<= instructions)
     pub n_slots: usize,
     /// peak simultaneously-live intermediate bytes during execution
@@ -143,6 +172,54 @@ impl ProgramStats {
     pub fn peak_live_mib(&self) -> f64 {
         self.peak_live_bytes as f64 / (1024.0 * 1024.0)
     }
+}
+
+/// What a resident state slot holds (see [`Program::states`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StateKind {
+    /// a trainable weight, promoted from a graph `Input`
+    Weight,
+    /// Adam first moment of the weight sharing this slot's `node`
+    AdamM,
+    /// Adam second moment
+    AdamV,
+}
+
+/// One executor-resident state slot: bound once via
+/// [`Executor::bind_states`], then read and updated in place across runs.
+///
+/// [`Executor::bind_states`]: super::exec::Executor::bind_states
+#[derive(Clone, Debug)]
+pub struct StateSlot {
+    /// the graph `Input` id this slot serves (for moments: the weight's id)
+    pub node: NodeId,
+    pub shape: Vec<usize>,
+    pub kind: StateKind,
+}
+
+/// The optimizer applied by an [`UpdateInstr`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum UpdateRule {
+    /// `w -= lr * g` ([`crate::tensor::kernels::sgd_update`])
+    Sgd { lr: f64 },
+    /// bias-corrected Adam ([`crate::tensor::kernels::adam_update`])
+    Adam { lr: f64, beta1: f64, beta2: f64, eps: f64 },
+}
+
+/// One in-Program optimizer instruction, executed after the main
+/// instruction list: consume a gradient operand straight out of the arena
+/// and update resident state in place -- no gradient clone, no host-side
+/// weight math.
+#[derive(Clone, Debug)]
+pub struct UpdateInstr {
+    pub rule: UpdateRule,
+    /// state slot of the weight being stepped
+    pub weight: usize,
+    /// where the gradient lives once the instruction list has run
+    pub grad: Operand,
+    /// Adam (m, v) state slots; `weight < m` and `v == m + 1` by
+    /// construction (the executor splits borrows on that order)
+    pub moments: Option<(usize, usize)>,
 }
 
 /// A compiled, immutable program: build once, execute many times.
@@ -160,6 +237,12 @@ pub struct Program {
     /// [`Program::compile`]
     pub outputs: Vec<Operand>,
     pub output_shapes: Vec<Vec<usize>>,
+    /// executor-resident state slots (weight slots first, in
+    /// [`Program::attach_optimizer`] order, then optimizer moments);
+    /// empty for plain functional programs
+    pub states: Vec<StateSlot>,
+    /// optimizer updates executed in place after [`Program::instrs`]
+    pub updates: Vec<UpdateInstr>,
     pub stats: ProgramStats,
 }
 
@@ -169,12 +252,21 @@ pub struct PassConfig {
     /// run the elementwise-fusion pass (on by default; switched off by the
     /// differential tests that pin fused == unfused bit-exactness)
     pub fuse: bool,
+    /// fold single-use matmul results into their elementwise consumer as a
+    /// row-block epilogue (on by default)
+    pub epilogue: bool,
 }
 
 impl Default for PassConfig {
     fn default() -> Self {
-        Self { fuse: true }
+        Self { fuse: true, epilogue: true }
     }
+}
+
+impl PassConfig {
+    /// Every optional pass off -- the one-instruction-per-node baseline
+    /// the differential tests compare against.
+    pub const NONE: PassConfig = PassConfig { fuse: false, epilogue: false };
 }
 
 impl Program {
@@ -191,6 +283,9 @@ impl Program {
         if config.fuse {
             dag = passes::fuse_elementwise(dag);
         }
+        if config.epilogue {
+            dag = passes::fuse_matmul_epilogue(dag);
+        }
         lower(dag)
     }
 
@@ -198,6 +293,136 @@ impl Program {
     /// [`Executor`] instead (see [`Executor::run`]).
     pub fn eval_once(&self, inputs: &HashMap<NodeId, Tensor>) -> Vec<Tensor> {
         Executor::new().run(self, inputs)
+    }
+
+    /// Total bytes of executor-resident state (weights + moments).
+    pub fn resident_state_bytes(&self) -> u64 {
+        self.states.iter().map(|s| s.shape.iter().product::<usize>() as u64 * 8).sum()
+    }
+
+    /// Turn a compiled *training-step* program into a resident one: the
+    /// `weight_ids` inputs are promoted to executor-resident state
+    /// ([`Operand::State`]), and the trailing `weight_ids.len()` outputs --
+    /// which must be the loss gradients w.r.t. those weights, in order --
+    /// are replaced by in-place optimizer [`UpdateInstr`]s.  What remains
+    /// is a program whose per-run inputs are batch data only and whose
+    /// outputs are the leading (loss) scalars: one `Executor` run *is* the
+    /// whole training step, with no gradient readback and no host-side
+    /// weight math.
+    ///
+    /// Bind the initial weights with [`Executor::bind_states`] before
+    /// running; Adam moment slots are allocated here (zero-initialised at
+    /// bind time).
+    ///
+    /// [`Executor::bind_states`]: super::exec::Executor::bind_states
+    pub fn attach_optimizer(mut self, weight_ids: &[NodeId], rule: UpdateRule) -> Program {
+        assert!(self.updates.is_empty(), "optimizer already attached");
+        assert!(self.states.is_empty(), "program already has resident state");
+        let n_w = weight_ids.len();
+        assert!(
+            self.outputs.len() >= n_w,
+            "outputs must end with one gradient per weight ({} outputs, {n_w} weights)",
+            self.outputs.len()
+        );
+        let grads_start = self.outputs.len() - n_w;
+
+        // -- one state slot per weight, in weight order
+        let mut state_of_input: HashMap<usize, usize> = HashMap::new();
+        let mut states: Vec<StateSlot> = Vec::with_capacity(n_w);
+        for (s, &wid) in weight_ids.iter().enumerate() {
+            let pos = self.inputs.iter().position(|&id| id == wid);
+            let shape = match pos {
+                Some(k) => self.input_shapes[k].clone(),
+                // a weight the step never reads (its gradient is a shared
+                // zero const): the gradient output still has its shape
+                None => self.output_shapes[grads_start + s].clone(),
+            };
+            if let Some(k) = pos {
+                state_of_input.insert(k, s);
+            }
+            states.push(StateSlot { node: wid, shape, kind: StateKind::Weight });
+        }
+
+        // -- compact the surviving per-run inputs and remap every operand
+        let mut new_idx: Vec<Option<usize>> = vec![None; self.inputs.len()];
+        let mut inputs = Vec::new();
+        let mut input_shapes = Vec::new();
+        for k in 0..self.inputs.len() {
+            if state_of_input.contains_key(&k) {
+                continue;
+            }
+            new_idx[k] = Some(inputs.len());
+            inputs.push(self.inputs[k]);
+            input_shapes.push(self.input_shapes[k].clone());
+        }
+        let remap = |v: Operand| -> Operand {
+            match v {
+                Operand::In(k) => match state_of_input.get(&k) {
+                    Some(&s) => Operand::State(s),
+                    None => Operand::In(new_idx[k].expect("non-weight input survives")),
+                },
+                other => other,
+            }
+        };
+        for instr in &mut self.instrs {
+            for a in &mut instr.args {
+                *a = remap(*a);
+            }
+        }
+        let outputs: Vec<Operand> = self.outputs.iter().map(|&v| remap(v)).collect();
+
+        // -- the gradient outputs become in-place update instructions
+        let mut updates = Vec::with_capacity(n_w);
+        for s in 0..n_w {
+            // a gradient can simplify to a *bare weight input* (e.g.
+            // d/dw1 sum(w1 * w2) = w2 after the `mul(ones, x) -> x`
+            // rewrite), which the remap above just turned into resident
+            // state.  Updates must read every gradient at its pre-update
+            // value, so materialize such a gradient through an exact copy
+            // (x * 1.0 is bit-preserving) executed before the update loop.
+            let grad = match outputs[grads_start + s] {
+                Operand::State(src) => {
+                    let shape = states[src].shape.clone();
+                    let out = self.n_slots;
+                    self.n_slots += 1;
+                    self.stats.n_slots = self.n_slots;
+                    self.stats.instructions += 1;
+                    self.instrs.push(Instr {
+                        op: OpCode::Scale(1.0),
+                        args: vec![Operand::State(src)],
+                        out,
+                        shape,
+                    });
+                    Operand::Buf(out)
+                }
+                g => g,
+            };
+            let moments = match rule {
+                UpdateRule::Sgd { .. } => None,
+                UpdateRule::Adam { .. } => {
+                    let shape = states[s].shape.clone();
+                    let mi = states.len();
+                    states.push(StateSlot {
+                        node: weight_ids[s],
+                        shape: shape.clone(),
+                        kind: StateKind::AdamM,
+                    });
+                    states.push(StateSlot { node: weight_ids[s], shape, kind: StateKind::AdamV });
+                    Some((mi, mi + 1))
+                }
+            };
+            updates.push(UpdateInstr { rule, weight: s, grad, moments });
+        }
+
+        self.outputs = outputs[..grads_start].to_vec();
+        self.output_shapes.truncate(grads_start);
+        self.inputs = inputs;
+        self.input_shapes = input_shapes;
+        self.states = states;
+        self.updates = updates;
+        self.stats.resident_state_bytes = self.resident_state_bytes();
+        self.stats.update_instrs = self.updates.len();
+        self
     }
 }
 
@@ -349,6 +574,10 @@ fn lower(dag: passes::Dag) -> Program {
         fused_groups: dag.fused_groups,
         fused_ops: dag.fused_ops,
         fusion_bytes_saved: dag.fusion_bytes_saved,
+        matmul_epilogues: dag.matmul_epilogues,
+        epilogue_ops: dag.epilogue_ops,
+        resident_state_bytes: 0,
+        update_instrs: 0,
         n_slots,
         peak_live_bytes,
         const_bytes,
@@ -361,6 +590,8 @@ fn lower(dag: passes::Dag) -> Program {
         consts,
         outputs,
         output_shapes,
+        states: Vec::new(),
+        updates: Vec::new(),
         stats,
     }
 }
@@ -383,7 +614,7 @@ mod tests {
         assert_eq!(prog.stats.fused_groups, 1);
         assert_eq!(prog.stats.fused_ops, 1);
         // fusion off: one instruction per surviving node
-        let unfused = Program::compile_with(&g, &[out], PassConfig { fuse: false });
+        let unfused = Program::compile_with(&g, &[out], PassConfig::NONE);
         assert_eq!(unfused.instrs.len(), 3);
         assert_eq!(unfused.stats.fused_groups, 0);
         let mut inputs = HashMap::new();
@@ -418,7 +649,7 @@ mod tests {
         let out = g.sum_all(s);
         // fusion off, so the structure is visible: tanh appears once;
         // add(t, t) and sum remain
-        let prog = Program::compile_with(&g, &[out], PassConfig { fuse: false });
+        let prog = Program::compile_with(&g, &[out], PassConfig::NONE);
         let tanhs = prog.instrs.iter().filter(|i| matches!(i.op, OpCode::Tanh)).count();
         assert_eq!(tanhs, 1);
         assert_eq!(prog.stats.cse_hits, 1);
@@ -490,7 +721,7 @@ mod tests {
             cur = g.tanh(cur);
         }
         let out = g.sum_all(cur);
-        let prog = Program::compile_with(&g, &[out], PassConfig { fuse: false });
+        let prog = Program::compile_with(&g, &[out], PassConfig::NONE);
         assert_eq!(prog.instrs.len(), 6);
         assert!(prog.n_slots <= 2, "chain should reuse slots, got {}", prog.n_slots);
         // peak: two [4] tensors live across one step
@@ -535,5 +766,106 @@ mod tests {
         assert_eq!(got[0], g.eval(out, &inputs));
         assert_eq!(got[1], g.eval(gx, &inputs));
         assert_eq!(got[1].data(), &[2.0, -4.0, 1.0]);
+    }
+
+    #[test]
+    fn matmul_epilogue_folds_the_following_activation() {
+        // mm = x @ w (single use) -> tanh -> sum: the tanh rides as an
+        // epilogue, eliminating one instruction
+        let mut g = Graph::new();
+        let x = g.input(&[3, 4]);
+        let w = g.input(&[4, 5]);
+        let mm = g.matmul(x, w);
+        let t = g.tanh(mm);
+        let out = g.sum_all(t);
+        let fused = Program::compile(&g, &[out]);
+        assert_eq!(fused.stats.matmul_epilogues, 1);
+        assert_eq!(fused.stats.epilogue_ops, 1);
+        assert_eq!(fused.instrs.len(), 2); // MatMulFused + SumAll
+        assert!(matches!(fused.instrs[0].op, OpCode::MatMulFused(_)));
+        let plain = Program::compile_with(&g, &[out], PassConfig::NONE);
+        assert_eq!(plain.instrs.len(), 3);
+        let mut rng = crate::rng::Pcg64::seeded(2);
+        let mut inputs = HashMap::new();
+        inputs.insert(x, Tensor::new(&[3, 4], rng.normals(12)));
+        inputs.insert(w, Tensor::new(&[4, 5], rng.normals(20)));
+        assert_eq!(fused.eval_once(&inputs)[0], plain.eval_once(&inputs)[0]);
+        assert_eq!(fused.eval_once(&inputs)[0], g.eval(out, &inputs));
+    }
+
+    #[test]
+    fn multi_use_matmul_results_stay_materialized() {
+        // mm feeds both tanh and a second matmul: no epilogue
+        let mut g = Graph::new();
+        let x = g.input(&[3, 3]);
+        let mm = g.matmul(x, x);
+        let t = g.tanh(mm);
+        let mm2 = g.matmul(mm, t);
+        let out = g.sum_all(mm2);
+        let prog = Program::compile(&g, &[out]);
+        assert_eq!(prog.stats.matmul_epilogues, 0);
+        let mut inputs = HashMap::new();
+        inputs.insert(x, Tensor::new(&[3, 3], vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9]));
+        assert_eq!(prog.eval_once(&inputs)[0], g.eval(out, &inputs));
+    }
+
+    #[test]
+    fn attach_optimizer_promotes_weights_and_truncates_outputs() {
+        // loss = sum((x * w)^2); one weight, one batch input
+        let mut g = Graph::new();
+        let w = g.input(&[3]);
+        let x = g.input(&[3]);
+        let xw = g.mul(x, w);
+        let sq = g.mul(xw, xw);
+        let loss = g.sum_all(sq);
+        let gw = g.grad(loss, &[w])[0];
+        let prog = Program::compile(&g, &[loss, gw]);
+        assert_eq!(prog.inputs.len(), 2);
+        let resident = prog.attach_optimizer(&[w], UpdateRule::Sgd { lr: 0.1 });
+        // w left the per-run inputs for a state slot; x was compacted
+        assert_eq!(resident.inputs, vec![x]);
+        assert_eq!(resident.states.len(), 1);
+        assert_eq!(resident.states[0].node, w);
+        assert_eq!(resident.states[0].kind, StateKind::Weight);
+        assert_eq!(resident.outputs.len(), 1); // loss only
+        assert_eq!(resident.updates.len(), 1);
+        assert!(resident.updates[0].moments.is_none());
+        assert_eq!(resident.stats.update_instrs, 1);
+        assert_eq!(resident.stats.resident_state_bytes, 3 * 8);
+        // some instruction actually reads the promoted state
+        assert!(resident
+            .instrs
+            .iter()
+            .any(|i| i.args.iter().any(|a| matches!(a, Operand::State(0)))));
+    }
+
+    #[test]
+    fn attach_adam_allocates_moment_slots_in_split_borrow_order() {
+        let mut g = Graph::new();
+        let w0 = g.input(&[2]);
+        let w1 = g.input(&[4]);
+        let x = g.input(&[2]);
+        let a = g.mul(x, w0);
+        let s0 = g.sum_all(a);
+        let s1 = g.sum_all(w1);
+        let loss0 = g.mul(s0, s0);
+        let loss = g.add(loss0, s1);
+        let grads = g.grad(loss, &[w0, w1]);
+        let prog = Program::compile(&g, &[loss, grads[0], grads[1]]);
+        let rule = UpdateRule::Adam { lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8 };
+        let resident = prog.attach_optimizer(&[w0, w1], rule);
+        // weights first, then (m, v) pairs; the executor's split-borrow
+        // update relies on weight < m and v == m + 1
+        assert_eq!(resident.states.len(), 6);
+        assert_eq!(resident.states[0].kind, StateKind::Weight);
+        assert_eq!(resident.states[1].kind, StateKind::Weight);
+        for up in &resident.updates {
+            let (m, v) = up.moments.expect("adam carries moments");
+            assert!(up.weight < m && v == m + 1);
+            assert_eq!(resident.states[m].kind, StateKind::AdamM);
+            assert_eq!(resident.states[v].kind, StateKind::AdamV);
+            assert_eq!(resident.states[m].shape, resident.states[up.weight].shape);
+        }
+        assert_eq!(resident.stats.resident_state_bytes, 3 * (2 + 4) * 8);
     }
 }

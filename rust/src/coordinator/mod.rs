@@ -17,7 +17,11 @@
 //!   the same compile-once/run-many shape as the PJRT path; the physics
 //!   comes from the native residual layer ([`crate::pde::residual`]), so
 //!   it trains the real case studies (reaction-diffusion, Burgers,
-//!   Kirchhoff) as well as the antiderivative toy.
+//!   Kirchhoff) as well as the antiderivative toy.  The optimizer (SGD
+//!   *or* bias-corrected Adam, `--optimizer`) runs **inside** the
+//!   compiled step program: weights and Adam moments stay resident in
+//!   the executor and are updated in place, so one program execution is
+//!   the whole training step.
 
 pub mod batch;
 pub mod checkpoint;

@@ -120,23 +120,45 @@ impl ProgramReport {
         self.stats.instructions as f64 / self.stats.graph_nodes as f64
     }
 
-    /// One-line fusion summary: instructions before/after the fusion pass
-    /// and the estimated intermediate traffic saved per run.
+    /// One-line fusion summary: instructions before/after the fusion
+    /// passes (elementwise groups + matmul epilogues) and the estimated
+    /// intermediate traffic saved per run.
     pub fn fusion_summary(&self) -> String {
         let s = &self.stats;
-        format!(
+        let mut line = format!(
             "{} -> {} instructions ({} groups, {:.1} KiB/run saved)",
-            s.instructions + s.fused_ops,
+            s.instructions + s.fused_ops + s.matmul_epilogues,
             s.instructions,
             s.fused_groups,
             s.fusion_bytes_saved as f64 / 1024.0
-        )
+        );
+        if s.matmul_epilogues > 0 {
+            line.push_str(&format!(
+                "; {} matmul epilogues ({} ops)",
+                s.matmul_epilogues, s.epilogue_ops
+            ));
+        }
+        line
+    }
+
+    /// One-line resident-state summary, or `None` for a plain functional
+    /// program (no optimizer attached).
+    pub fn resident_summary(&self) -> Option<String> {
+        let s = &self.stats;
+        if s.update_instrs == 0 {
+            return None;
+        }
+        Some(format!(
+            "{} update instrs, {:.1} KiB resident state",
+            s.update_instrs,
+            s.resident_state_bytes as f64 / 1024.0
+        ))
     }
 }
 
 /// Analyse a compiled native program.
 pub fn analyze_program(program: &crate::autodiff::Program) -> ProgramReport {
-    use crate::autodiff::OpCode;
+    use crate::autodiff::{OpCode, UpdateRule};
     let mut histogram = BTreeMap::new();
     let mut fused_micro = BTreeMap::new();
     for instr in &program.instrs {
@@ -165,6 +187,23 @@ pub fn analyze_program(program: &crate::autodiff::Program) -> ProgramReport {
                 }
                 "fused"
             }
+            OpCode::MatMulFused(me) => {
+                for op in &me.epi.ops {
+                    *fused_micro.entry(op.name().to_string()).or_insert(0) += 1;
+                }
+                if me.nt {
+                    "dot-nt-fused"
+                } else {
+                    "dot-fused"
+                }
+            }
+        };
+        *histogram.entry(name.to_string()).or_insert(0) += 1;
+    }
+    for up in &program.updates {
+        let name = match up.rule {
+            UpdateRule::Sgd { .. } => "sgd-update",
+            UpdateRule::Adam { .. } => "adam-update",
         };
         *histogram.entry(name.to_string()).or_insert(0) += 1;
     }
@@ -313,7 +352,7 @@ ENTRY e {
         let t = g.tanh(x);
         let s = g.mul(t, t);
         let out = g.sum_all(s);
-        let prog = Program::compile_with(&g, &[out], PassConfig { fuse: false });
+        let prog = Program::compile_with(&g, &[out], PassConfig::NONE);
         let report = analyze_program(&prog);
         assert_eq!(report.stats.instructions, 3);
         assert_eq!(report.opcode_histogram["tanh"], 1);

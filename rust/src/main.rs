@@ -63,7 +63,7 @@ fn dispatch(args: &[String]) -> Result<()> {
 
 fn cmd_ntrain(args: &[String]) -> Result<()> {
     use zcs::autodiff::Strategy;
-    use zcs::coordinator::native::{NativeRunConfig, NativeTrainer};
+    use zcs::coordinator::native::{NativeRunConfig, NativeTrainer, Optimizer};
     let opts = Opts::new("zcs ntrain", "native compiled-program training (no artifacts)")
         .opt(
             "problem",
@@ -71,6 +71,7 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
             "antiderivative | reaction_diffusion | burgers | kirchhoff (case-insensitive)",
         )
         .opt("strategy", "zcs", "zcs | funcloop | datavect (case-insensitive)")
+        .opt("optimizer", "sgd", "sgd | adam (case-insensitive; runs inside the step program)")
         .opt("m", "4", "functions per batch (paper M)")
         .opt("n", "16", "interior collocation points per batch (paper N)")
         .opt("n-bc", "8", "points per boundary/initial block")
@@ -78,7 +79,7 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
         .opt("hidden", "16", "MLP hidden width")
         .opt("k", "8", "DeepONet latent dimension")
         .opt("steps", "200", "training steps")
-        .opt("lr", "auto", "SGD learning rate (auto = per-problem default)")
+        .opt("lr", "auto", "learning rate (auto = per-problem default)")
         .opt("seed", "20230923", "RNG seed")
         .opt("bank-size", "64", "GP function-bank size")
         .opt("log-every", "20", "loss-curve logging interval")
@@ -87,6 +88,11 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
             "threads",
             "auto",
             "kernel threads (auto = ZCS_THREADS env, else 1); results are bit-identical",
+        )
+        .switch(
+            "feed-weights",
+            "feed weights per step and update host-side instead of keeping them \
+             resident in the executor (same trajectory, more traffic)",
         )
         .switch("validate", "rel-L2 error vs the reference solver after training")
         .switch("help", "show usage");
@@ -97,6 +103,7 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
     }
     let strategy = Strategy::parse(p.get("strategy")).map_err(|e| anyhow!(e))?;
     let problem = ProblemKind::parse(p.get("problem")).map_err(|e| anyhow!(e))?;
+    let optimizer = Optimizer::parse(p.get("optimizer")).map_err(|e| anyhow!(e))?;
     let lr = match p.get("lr") {
         "auto" => NativeRunConfig::default_lr(problem),
         other => other
@@ -136,15 +143,18 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
         bank_size: p.get_usize("bank-size")?,
         log_every: p.get_usize("log-every")?.max(1),
         threads,
+        optimizer,
+        resident: !p.switch("feed-weights"),
         ..NativeRunConfig::default()
     };
     println!(
-        "native training: {} under {} (M={} N={} Q={}, lr={}, {} steps)",
+        "native training: {} under {} (M={} N={} Q={}, {} lr={}, {} steps)",
         problem.name(),
         strategy.name(),
         config.m,
         config.n,
         config.q,
+        config.optimizer.name(),
         config.lr,
         config.steps
     );
@@ -163,7 +173,11 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
         prog.stats.n_slots,
         prog.stats.peak_live_bytes as f64 / 1024.0
     );
-    println!("elementwise fusion: {}", prog.fusion_summary());
+    println!("fusion: {}", prog.fusion_summary());
+    match prog.resident_summary() {
+        Some(s) => println!("resident optimizer: {} ({s})", report.optimizer.name()),
+        None => println!("optimizer: {} (host-side, feed-based weights)", report.optimizer.name()),
+    }
     println!("compiled in {:.2?}\n\nloss curve:", report.compile_time);
     for pt in &report.curve {
         println!(
@@ -172,10 +186,13 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
         );
     }
     println!(
-        "\ntimings: inputs {:.2?}, steps {:.2?} ({:.3} s / 1000 batches)",
+        "\ntimings: inputs {:.2?}, steps {:.2?} ({:.3} s / 1000 batches, \
+         {:.0} steps/s, optimizer {})",
         report.input_time,
         report.step_time,
-        report.sec_per_1000()
+        report.sec_per_1000(),
+        report.steps_per_sec(),
+        report.optimizer.name()
     );
     if p.switch("validate") {
         match trainer.validate(p.get_usize("heldout")?)? {
@@ -384,23 +401,37 @@ fn native_stats(m: usize, n: usize) -> Result<()> {
 
 /// `zcs stats --native --problem <name>`: compiled step-program statistics
 /// of one native PDE problem under each strategy, with the full per-op
-/// instruction histogram (so the grown op set stays visible).
+/// instruction histogram (so the grown op set stays visible).  The
+/// program shown is the *resident* one `zcs ntrain` actually runs:
+/// optimizer attached, weights promoted to executor state.
 fn native_problem_stats(problem: ProblemKind, m: usize, n: usize) -> Result<()> {
     use zcs::autodiff::{Program, Strategy};
+    use zcs::coordinator::native::NativeRunConfig;
     use zcs::pde::residual::{build_training_problem, BlockSizes};
     // mirror `zcs ntrain`'s defaults so the printed step program is the
     // one ntrain actually compiles for this problem
-    let defaults = zcs::coordinator::native::NativeRunConfig::default();
+    let defaults = NativeRunConfig::default();
     let q = if problem == ProblemKind::Kirchhoff { 9 } else { defaults.q };
     let (hidden, k) = (defaults.hidden, defaults.k);
+    let lr = NativeRunConfig::default_lr(problem);
     let sizes = BlockSizes { n_in: n, n_bc: defaults.n_bc };
     let mut table = Table::new(&[
-        "strategy", "tape nodes", "instructions", "cse", "folded", "fused", "slots", "peak KiB",
+        "strategy",
+        "tape nodes",
+        "instructions",
+        "cse",
+        "folded",
+        "fused",
+        "mm-epi",
+        "slots",
+        "peak KiB",
+        "state KiB",
     ]);
     let mut histograms = Vec::new();
     for strat in Strategy::ALL {
         let built = build_training_problem(problem, strat, m, q, hidden, k, sizes)?;
-        let program = Program::compile(&built.graph, &built.outputs);
+        let program = Program::compile(&built.graph, &built.outputs)
+            .attach_optimizer(&built.weight_ids, defaults.optimizer.rule(lr));
         let report = zcs::hlostats::analyze_program(&program);
         let s = &report.stats;
         table.row(&[
@@ -410,8 +441,10 @@ fn native_problem_stats(problem: ProblemKind, m: usize, n: usize) -> Result<()> 
             s.cse_hits.to_string(),
             s.folded.to_string(),
             format!("{}>{}", s.fused_ops + s.fused_groups, s.fused_groups),
+            s.matmul_epilogues.to_string(),
             s.n_slots.to_string(),
             format!("{:.1}", s.peak_live_bytes as f64 / 1024.0),
+            format!("{:.1}", s.resident_state_bytes as f64 / 1024.0),
         ]);
         let line = report
             .opcode_histogram
@@ -425,17 +458,24 @@ fn native_problem_stats(problem: ProblemKind, m: usize, n: usize) -> Result<()> 
             .map(|(op, count)| format!("{op}={count}"))
             .collect::<Vec<_>>()
             .join(" ");
-        histograms.push((strat.name(), line, micro, report.fusion_summary()));
+        let resident =
+            report.resident_summary().unwrap_or_else(|| "no optimizer attached".to_string());
+        histograms.push((strat.name(), line, micro, report.fusion_summary(), resident));
     }
-    println!("step program for {} (M={m}, N={n}):", problem.name());
+    println!(
+        "resident step program for {} (M={m}, N={n}, {}):",
+        problem.name(),
+        defaults.optimizer.name()
+    );
     table.print();
-    println!("\nper-op instruction counts (fused column: ops>groups):");
-    for (name, line, micro, summary) in histograms {
+    println!("\nper-op instruction counts (fused column: ops>groups; mm-epi: matmul epilogues):");
+    for (name, line, micro, summary, resident) in histograms {
         println!("  {name:>9}: {line}");
         if !micro.is_empty() {
             println!("  {:>9}  inside fused: {micro}", "");
-            println!("  {:>9}  fusion: {summary}", "");
         }
+        println!("  {:>9}  fusion: {summary}", "");
+        println!("  {:>9}  resident: {resident}", "");
     }
     Ok(())
 }

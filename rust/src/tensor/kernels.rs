@@ -278,22 +278,91 @@ pub fn matmul_nt_into_pool(a: &Tensor, b: &Tensor, out: &mut Tensor, pool: &Pool
     let min_rows = (MATMUL_MIN_FLOPS_PER_TASK / (k * n).max(1)).max(1);
     let (a_data, b_data) = (&a.data, &b.data);
     pool.par_rows(m, n, &mut out.data, min_rows, |range, block| {
-        for (ri, i) in range.enumerate() {
-            let arow = &a_data[i * k..(i + 1) * k];
-            let orow = &mut block[ri * n..(ri + 1) * n];
-            for (j, o) in orow.iter_mut().enumerate() {
-                let brow = &b_data[j * k..(j + 1) * k];
-                let mut acc = 0.0;
-                for (kk, &av) in arow.iter().enumerate() {
-                    if av == 0.0 {
-                        continue;
-                    }
-                    acc += av * brow[kk];
-                }
-                *o = acc;
-            }
-        }
+        matmul_nt_rows(a_data, b_data, range, k, n, block);
     });
+}
+
+/// The dot-form NT kernel for one contiguous block of output rows.
+fn matmul_nt_rows(
+    a: &[f64],
+    b: &[f64],
+    rows: std::ops::Range<usize>,
+    k: usize,
+    n: usize,
+    block: &mut [f64],
+) {
+    for (ri, i) in rows.enumerate() {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut block[ri * n..(ri + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0;
+            for (kk, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                acc += av * brow[kk];
+            }
+            *o = acc;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// In-place optimizer updates (resident training state)
+// ---------------------------------------------------------------------------
+
+/// In-place SGD: `w[i] = w[i] - g[i] * lr`.
+///
+/// This is the identical floating-point expression the old host-side
+/// `*w = &*w - &gw.scale(lr)` path computed (multiply, then subtract), so
+/// resident training trajectories bit-match the feed-based ones --
+/// pinned by `rust/tests/resident_step.rs`.
+pub fn sgd_update(w: &mut Tensor, g: &Tensor, lr: f64) {
+    assert_eq!(w.shape, g.shape, "sgd_update shapes");
+    for (wi, gi) in w.data.iter_mut().zip(&g.data) {
+        *wi -= gi * lr;
+    }
+}
+
+/// In-place Adam with bias correction (the optimizer the paper's DeepXDE
+/// baselines actually run).  Per element, in exactly this order:
+///
+/// ```text
+/// m = b1 * m + (1 - b1) * g
+/// v = b2 * v + (1 - b2) * (g * g)
+/// w = w - lr * (m / (1 - b1^t)) / (sqrt(v / (1 - b2^t)) + eps)
+/// ```
+///
+/// `t` is the 1-based step count.  The scalar sequence is pinned bit for
+/// bit against a straight-line reference implementation in
+/// `rust/tests/resident_step.rs`.
+#[allow(clippy::too_many_arguments)]
+pub fn adam_update(
+    w: &mut Tensor,
+    m: &mut Tensor,
+    v: &mut Tensor,
+    g: &Tensor,
+    lr: f64,
+    beta1: f64,
+    beta2: f64,
+    eps: f64,
+    t: u64,
+) {
+    assert_eq!(w.shape, g.shape, "adam_update w/g shapes");
+    assert_eq!(m.shape, g.shape, "adam_update m shape");
+    assert_eq!(v.shape, g.shape, "adam_update v shape");
+    let bc1 = 1.0 - beta1.powi(t.min(i32::MAX as u64) as i32);
+    let bc2 = 1.0 - beta2.powi(t.min(i32::MAX as u64) as i32);
+    for (((wi, mi), vi), gi) in
+        w.data.iter_mut().zip(m.data.iter_mut()).zip(v.data.iter_mut()).zip(&g.data)
+    {
+        *mi = beta1 * *mi + (1.0 - beta1) * gi;
+        *vi = beta2 * *vi + (1.0 - beta2) * (gi * gi);
+        let mhat = *mi / bc1;
+        let vhat = *vi / bc2;
+        *wi -= lr * mhat / (vhat.sqrt() + eps);
+    }
 }
 
 /// `out = a^T` (2-D).
@@ -385,14 +454,64 @@ impl FusedKernel {
     }
 }
 
+/// One register-machine micro-op on a register file.
+#[inline]
+fn micro_eval(op: MicroOp, regs: &[f64]) -> f64 {
+    match op {
+        MicroOp::Add(x, y) => regs[x as usize] + regs[y as usize],
+        MicroOp::Sub(x, y) => regs[x as usize] - regs[y as usize],
+        MicroOp::Mul(x, y) => regs[x as usize] * regs[y as usize],
+        MicroOp::Scale(x, c) => regs[x as usize] * c,
+        MicroOp::Neg(x) => -regs[x as usize],
+        MicroOp::Square(x) => {
+            let v = regs[x as usize];
+            v * v
+        }
+        MicroOp::Sin(x) => regs[x as usize].sin(),
+        MicroOp::Cos(x) => regs[x as usize].cos(),
+        MicroOp::Tanh(x) => regs[x as usize].tanh(),
+    }
+}
+
+/// One contiguous block of a fused pass; `block[off]` is output element
+/// `base + off`.  `regs` must hold `kernel.n_regs()` registers.
+fn fused_block(
+    kernel: &FusedKernel,
+    exts: &[&Tensor],
+    base: usize,
+    block: &mut [f64],
+    regs: &mut [f64],
+) {
+    let n_ext = kernel.exts.len();
+    let out_reg = kernel.out as usize;
+    for (off, o) in block.iter_mut().enumerate() {
+        let i = base + off;
+        for (r, (ext, kind)) in exts.iter().zip(&kernel.exts).enumerate() {
+            regs[r] = match kind {
+                ExtKind::Elem => ext.data[i],
+                ExtKind::Scalar => ext.data[0],
+            };
+        }
+        for (j, op) in kernel.ops.iter().enumerate() {
+            let val = micro_eval(*op, regs);
+            regs[n_ext + j] = val;
+        }
+        *o = regs[out_reg];
+    }
+}
+
 /// Execute a fused micro-program over `exts` into `out` (shape `shape`),
-/// element blocks partitioned over the pool.
+/// element blocks partitioned over the pool.  On a serial pool the
+/// caller-owned `regs_scratch` holds the register file, so the steady
+/// state allocates nothing; threaded tasks carry their own small register
+/// file each.
 pub fn fused_into(
     kernel: &FusedKernel,
     exts: &[&Tensor],
     shape: &[usize],
     out: &mut Tensor,
     pool: &Pool,
+    regs_scratch: &mut Vec<f64>,
 ) {
     assert_eq!(exts.len(), kernel.exts.len(), "fused_into arity");
     shape_only(out, shape);
@@ -403,37 +522,168 @@ pub fn fused_into(
             ExtKind::Scalar => assert_eq!(ext.data.len(), 1, "fused scalar ext length"),
         }
     }
-    let n_ext = kernel.exts.len();
-    let out_reg = kernel.out as usize;
-    pool.par_rows(len, 1, &mut out.data, ELEMWISE_MIN_PER_TASK, |range, block| {
-        let mut regs = vec![0.0f64; kernel.n_regs()];
-        for (off, o) in block.iter_mut().enumerate() {
-            let i = range.start + off;
-            for (r, (ext, kind)) in exts.iter().zip(&kernel.exts).enumerate() {
-                regs[r] = match kind {
-                    ExtKind::Elem => ext.data[i],
-                    ExtKind::Scalar => ext.data[0],
-                };
-            }
-            for (j, op) in kernel.ops.iter().enumerate() {
-                regs[n_ext + j] = match *op {
-                    MicroOp::Add(x, y) => regs[x as usize] + regs[y as usize],
-                    MicroOp::Sub(x, y) => regs[x as usize] - regs[y as usize],
-                    MicroOp::Mul(x, y) => regs[x as usize] * regs[y as usize],
-                    MicroOp::Scale(x, c) => regs[x as usize] * c,
-                    MicroOp::Neg(x) => -regs[x as usize],
-                    MicroOp::Square(x) => {
-                        let v = regs[x as usize];
-                        v * v
-                    }
-                    MicroOp::Sin(x) => regs[x as usize].sin(),
-                    MicroOp::Cos(x) => regs[x as usize].cos(),
-                    MicroOp::Tanh(x) => regs[x as usize].tanh(),
-                };
-            }
-            *o = regs[out_reg];
+    if pool.threads() == 1 {
+        regs_scratch.clear();
+        regs_scratch.resize(kernel.n_regs(), 0.0);
+        fused_block(kernel, exts, 0, &mut out.data, regs_scratch);
+    } else {
+        pool.par_rows(len, 1, &mut out.data, ELEMWISE_MIN_PER_TASK, |range, block| {
+            let mut regs = vec![0.0f64; kernel.n_regs()];
+            fused_block(kernel, exts, range.start, block, &mut regs);
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Matmul epilogues
+// ---------------------------------------------------------------------------
+
+/// A matmul epilogue: a fused elementwise micro-program applied to every
+/// element of a freshly accumulated matmul row block while the tile is
+/// still cache-hot.  Register `0` holds the matmul element; external
+/// argument `r` loads into register `1 + r`; micro-op `j` writes register
+/// `1 + exts.len() + j`.  Scalar semantics are exactly the op-by-op
+/// sequence of the unfused instructions, so epilogue fusion preserves the
+/// compiled == interpreted bit-match contract
+/// (`rust/tests/fusion_pool.rs`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Epilogue {
+    /// per external argument: how it is read
+    pub exts: Vec<ExtKind>,
+    /// micro-ops in dependency order
+    pub ops: Vec<MicroOp>,
+    /// register holding the epilogue result
+    pub out: u16,
+}
+
+impl Epilogue {
+    pub fn n_regs(&self) -> usize {
+        1 + self.exts.len() + self.ops.len()
+    }
+}
+
+fn check_epilogue_exts(epi: &Epilogue, exts: &[&Tensor], len: usize) {
+    assert_eq!(exts.len(), epi.exts.len(), "epilogue arity");
+    for (ext, kind) in exts.iter().zip(&epi.exts) {
+        match kind {
+            ExtKind::Elem => assert_eq!(ext.data.len(), len, "epilogue elem ext length"),
+            ExtKind::Scalar => assert_eq!(ext.data.len(), 1, "epilogue scalar ext length"),
         }
-    });
+    }
+}
+
+/// Transform one freshly computed block in place; `block[off]` is output
+/// element `base + off`.  `regs` must hold `epi.n_regs()` registers.
+fn epilogue_block(
+    epi: &Epilogue,
+    exts: &[&Tensor],
+    base: usize,
+    block: &mut [f64],
+    regs: &mut [f64],
+) {
+    let n_ext = epi.exts.len();
+    let out_reg = epi.out as usize;
+    for (off, o) in block.iter_mut().enumerate() {
+        let i = base + off;
+        regs[0] = *o;
+        for (r, (ext, kind)) in exts.iter().zip(&epi.exts).enumerate() {
+            regs[1 + r] = match kind {
+                ExtKind::Elem => ext.data[i],
+                ExtKind::Scalar => ext.data[0],
+            };
+        }
+        for (j, op) in epi.ops.iter().enumerate() {
+            let val = micro_eval(*op, regs);
+            regs[1 + n_ext + j] = val;
+        }
+        *o = regs[out_reg];
+    }
+}
+
+/// [`matmul_into_pool`] with a fused elementwise epilogue: each output row
+/// block is accumulated exactly as the plain kernel would (same blocked
+/// loops, same zero-skip) and then transformed in place by `epi` while it
+/// is cache-hot -- one pass instead of a full store + reload per absorbed
+/// elementwise instruction.  Bit-identical to running the unfused
+/// instructions back to back, for any thread count.
+pub fn matmul_fused_into_pool(
+    a: &Tensor,
+    b: &Tensor,
+    epi: &Epilogue,
+    exts: &[&Tensor],
+    out: &mut Tensor,
+    pool: &Pool,
+    regs_scratch: &mut Vec<f64>,
+) {
+    assert_eq!(a.shape.len(), 2);
+    assert_eq!(b.shape.len(), 2);
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "matmul_fused_into {:?} @ {:?}", a.shape, b.shape);
+    check_epilogue_exts(epi, exts, m * n);
+    zero_fill(out, &[m, n]);
+    let min_rows = (MATMUL_MIN_FLOPS_PER_TASK / (k * n).max(1)).max(1);
+    let (a_data, b_data) = (&a.data, &b.data);
+    if pool.threads() == 1 {
+        regs_scratch.clear();
+        regs_scratch.resize(epi.n_regs(), 0.0);
+        // the same row-block granularity the pool would use, so the
+        // epilogue still runs on cache-hot tiles
+        let mut r0 = 0;
+        while r0 < m {
+            let r1 = (r0 + min_rows).min(m);
+            let block = &mut out.data[r0 * n..r1 * n];
+            matmul_rows(a_data, b_data, r0..r1, k, n, block);
+            epilogue_block(epi, exts, r0 * n, block, regs_scratch);
+            r0 = r1;
+        }
+    } else {
+        pool.par_rows(m, n, &mut out.data, min_rows, |range, block| {
+            matmul_rows(a_data, b_data, range.clone(), k, n, block);
+            let mut regs = vec![0.0f64; epi.n_regs()];
+            epilogue_block(epi, exts, range.start * n, block, &mut regs);
+        });
+    }
+}
+
+/// [`matmul_nt_into_pool`] with a fused elementwise epilogue; see
+/// [`matmul_fused_into_pool`].
+pub fn matmul_nt_fused_into_pool(
+    a: &Tensor,
+    b: &Tensor,
+    epi: &Epilogue,
+    exts: &[&Tensor],
+    out: &mut Tensor,
+    pool: &Pool,
+    regs_scratch: &mut Vec<f64>,
+) {
+    assert_eq!(a.shape.len(), 2);
+    assert_eq!(b.shape.len(), 2);
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (n, k2) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "matmul_nt_fused_into {:?} @ {:?}^T", a.shape, b.shape);
+    check_epilogue_exts(epi, exts, m * n);
+    shape_only(out, &[m, n]);
+    let min_rows = (MATMUL_MIN_FLOPS_PER_TASK / (k * n).max(1)).max(1);
+    let (a_data, b_data) = (&a.data, &b.data);
+    if pool.threads() == 1 {
+        regs_scratch.clear();
+        regs_scratch.resize(epi.n_regs(), 0.0);
+        let mut r0 = 0;
+        while r0 < m {
+            let r1 = (r0 + min_rows).min(m);
+            let block = &mut out.data[r0 * n..r1 * n];
+            matmul_nt_rows(a_data, b_data, r0..r1, k, n, block);
+            epilogue_block(epi, exts, r0 * n, block, regs_scratch);
+            r0 = r1;
+        }
+    } else {
+        pool.par_rows(m, n, &mut out.data, min_rows, |range, block| {
+            matmul_nt_rows(a_data, b_data, range.clone(), k, n, block);
+            let mut regs = vec![0.0f64; epi.n_regs()];
+            epilogue_block(epi, exts, range.start * n, block, &mut regs);
+        });
+    }
 }
 
 #[cfg(test)]
@@ -563,7 +813,8 @@ mod tests {
         let x = t(&[4, 3], rng.normals(12));
         let s = t(&[1], vec![0.75]);
         let mut out = Tensor::zeros(&[0]);
-        fused_into(&kernel, &[&x, &s], &[4, 3], &mut out, &Pool::serial());
+        let mut regs = Vec::new();
+        fused_into(&kernel, &[&x, &s], &[4, 3], &mut out, &Pool::serial(), &mut regs);
         // op-by-op reference through the serial kernels
         let (mut t1, mut t2) = (Tensor::zeros(&[0]), Tensor::zeros(&[0]));
         tanh_into(&x, &mut t1);
@@ -572,8 +823,78 @@ mod tests {
         assert_eq!(out, want);
         // and pooled execution matches serial exactly
         let mut pooled = Tensor::zeros(&[0]);
-        fused_into(&kernel, &[&x, &s], &[4, 3], &mut pooled, &Pool::new(4));
+        fused_into(&kernel, &[&x, &s], &[4, 3], &mut pooled, &Pool::new(4), &mut regs);
         assert_eq!(out, pooled);
+    }
+
+    #[test]
+    fn matmul_epilogues_bit_match_the_separate_passes() {
+        // mm = a @ b, then tanh; and mm_nt = a @ c^T, then (mm_nt + y) * 2
+        let mut rng = crate::rng::Pcg64::seeded(41);
+        let (m, k, n) = (5, 17, 13);
+        let a = t(&[m, k], rng.normals(m * k));
+        let b = t(&[k, n], rng.normals(k * n));
+        let c = t(&[n, k], rng.normals(n * k));
+        let y = t(&[m, n], rng.normals(m * n));
+
+        let tanh_epi = Epilogue { exts: vec![], ops: vec![MicroOp::Tanh(0)], out: 1 };
+        let mut want = Tensor::zeros(&[0]);
+        matmul_into(&a, &b, &mut want);
+        let mut want_t = Tensor::zeros(&[0]);
+        tanh_into(&want, &mut want_t);
+        let mut regs = Vec::new();
+        let mut got = Tensor::zeros(&[0]);
+        for threads in [1usize, 2, 4] {
+            let pool = Pool::new(threads);
+            matmul_fused_into_pool(&a, &b, &tanh_epi, &[], &mut got, &pool, &mut regs);
+            assert_eq!(got, want_t, "matmul+tanh @ {threads} threads");
+        }
+
+        let bias_epi = Epilogue {
+            exts: vec![ExtKind::Elem],
+            ops: vec![MicroOp::Add(0, 1), MicroOp::Scale(2, 2.0)],
+            out: 3,
+        };
+        let mut nt = Tensor::zeros(&[0]);
+        matmul_nt_into(&a, &c, &mut nt);
+        let mut summed = Tensor::zeros(&[0]);
+        add_into(&nt, &y, &mut summed);
+        let mut want_nt = Tensor::zeros(&[0]);
+        scale_into(&summed, 2.0, &mut want_nt);
+        for threads in [1usize, 2, 4] {
+            let pool = Pool::new(threads);
+            matmul_nt_fused_into_pool(&a, &c, &bias_epi, &[&y], &mut got, &pool, &mut regs);
+            assert_eq!(got, want_nt, "matmul_nt+add+scale @ {threads} threads");
+        }
+    }
+
+    #[test]
+    fn sgd_update_matches_the_old_host_expression() {
+        let mut rng = crate::rng::Pcg64::seeded(51);
+        let w0 = t(&[3, 4], rng.normals(12));
+        let g = t(&[3, 4], rng.normals(12));
+        let lr = 3e-3;
+        let mut w = w0.clone();
+        sgd_update(&mut w, &g, lr);
+        let want = &w0 - &g.clone().scale(lr);
+        assert_eq!(w, want);
+    }
+
+    #[test]
+    fn adam_update_moves_against_the_gradient() {
+        let mut w = t(&[4], vec![1.0, -1.0, 0.5, 0.0]);
+        let mut m = Tensor::zeros(&[4]);
+        let mut v = Tensor::zeros(&[4]);
+        let g = t(&[4], vec![1.0, -2.0, 0.5, 0.0]);
+        adam_update(&mut w, &mut m, &mut v, &g, 1e-2, 0.9, 0.999, 1e-8, 1);
+        // step 1 with bias correction moves each coordinate ~lr against g
+        assert!(w.data()[0] < 1.0);
+        assert!(w.data()[1] > -1.0);
+        assert!(w.data()[2] < 0.5);
+        assert_eq!(w.data()[3], 0.0, "zero gradient leaves the weight alone");
+        // moments carry the gradient statistics
+        assert!((m.data()[0] - 0.1).abs() < 1e-15);
+        assert!((v.data()[1] - 0.004).abs() < 1e-12);
     }
 
     #[test]

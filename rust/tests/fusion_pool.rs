@@ -1,11 +1,12 @@
-//! Differential tests for the execution hot path: elementwise fusion and
-//! the worker pool must be *bit-exact* no-ops semantically.
+//! Differential tests for the execution hot path: elementwise fusion,
+//! matmul epilogue fusion and the worker pool must be *bit-exact* no-ops
+//! semantically.
 //!
 //! For every native problem x strategy step program, and for the
 //! `zcs_demo` derivative programs, the suite pins:
 //!
-//! * fused == unfused (`PassConfig { fuse: false }`) with `==`, never a
-//!   tolerance;
+//! * fully fused (elementwise groups + matmul epilogues) == unfused
+//!   (`PassConfig::NONE`) with `==`, never a tolerance;
 //! * pooled (2 and 4 threads) == serial with `==`;
 //! * in-place batch refills ([`PdeBatcher::fill_batch`]) draw the
 //!   identical sequence as allocating [`PdeBatcher::next_batch`] calls.
@@ -77,13 +78,15 @@ fn fused_step_programs_bit_match_unfused_for_every_problem_and_strategy() {
                 build_training_problem(kind, strategy, spec.m, spec.q, 8, 4, sizes).unwrap();
             let fused = Program::compile(&built.graph, &built.outputs);
             let unfused =
-                Program::compile_with(&built.graph, &built.outputs, PassConfig { fuse: false });
+                Program::compile_with(&built.graph, &built.outputs, PassConfig::NONE);
             assert!(
                 fused.instrs.len() <= unfused.instrs.len(),
                 "{kind:?}/{strategy:?}: fusion grew the program"
             );
+            // each elementwise absorption and each matmul epilogue
+            // eliminates exactly one instruction
             assert_eq!(
-                fused.stats.fused_ops + fused.instrs.len(),
+                fused.stats.fused_ops + fused.stats.matmul_epilogues + fused.instrs.len(),
                 unfused.instrs.len(),
                 "{kind:?}/{strategy:?}: fusion accounting is off"
             );
@@ -114,6 +117,56 @@ fn step_programs_fuse_something() {
             "{kind:?}: no elementwise group fused in the ZCS step program"
         );
         assert!(fused.stats.fusion_bytes_saved > 0, "{kind:?}: zero traffic saved");
+    }
+}
+
+#[test]
+fn step_programs_gain_matmul_epilogues() {
+    // the DeepONet trunks/branches are matmul -> tanh chains: every ZCS
+    // step program must fold at least one activation into its matmul
+    for kind in NATIVE_PROBLEMS {
+        let spec = spec_for(kind);
+        let sizes = BlockSizes { n_in: spec.n_in, n_bc: spec.n_bc };
+        let built =
+            build_training_problem(kind, Strategy::Zcs, spec.m, spec.q, 8, 4, sizes).unwrap();
+        let fused = Program::compile(&built.graph, &built.outputs);
+        assert!(
+            fused.stats.matmul_epilogues > 0,
+            "{kind:?}: no matmul epilogue fused in the ZCS step program"
+        );
+        assert!(fused.stats.epilogue_ops >= fused.stats.matmul_epilogues);
+    }
+}
+
+#[test]
+fn matmul_epilogues_bit_match_unfused_serial_and_pooled() {
+    // epilogue-fused == fully unfused for every problem x strategy step
+    // program, and pooled epilogue execution == serial, all to `==`
+    for kind in NATIVE_PROBLEMS {
+        let spec = spec_for(kind);
+        let sizes = BlockSizes { n_in: spec.n_in, n_bc: spec.n_bc };
+        for strategy in Strategy::ALL {
+            let built =
+                build_training_problem(kind, strategy, spec.m, spec.q, 8, 4, sizes).unwrap();
+            let full = Program::compile(&built.graph, &built.outputs);
+            let none =
+                Program::compile_with(&built.graph, &built.outputs, PassConfig::NONE);
+            let weights = init_problem_weights(&built, 21);
+            let mut batcher = PdeBatcher::new(kind, spec, &mut Pcg64::seeded(22)).unwrap();
+            let batch = batcher.next_batch();
+            let inputs = feed_map(&built, &weights, &batch);
+            let mut exec = Executor::with_threads(1);
+            let serial = exec.run_ref(&full, &inputs);
+            assert_eq!(
+                serial,
+                exec.run_ref(&none, &inputs),
+                "{kind:?}/{strategy:?}: epilogue-fused != unfused"
+            );
+            for threads in [2usize, 4] {
+                let pooled = Executor::with_threads(threads).run_ref(&full, &inputs);
+                assert_eq!(serial, pooled, "{kind:?}/{strategy:?} @ {threads} threads");
+            }
+        }
     }
 }
 
@@ -176,7 +229,7 @@ fn fused_demo_derivatives_bit_match_unfused_at_both_orders() {
             let built = zcs_demo::build_derivative(&net, strategy, m, n, q, order);
             let fused = Program::compile(&built.graph, &built.outputs);
             let unfused =
-                Program::compile_with(&built.graph, &built.outputs, PassConfig { fuse: false });
+                Program::compile_with(&built.graph, &built.outputs, PassConfig::NONE);
             let mut inputs: HashMap<NodeId, &Tensor> = HashMap::new();
             inputs.insert(built.p, &p);
             inputs.insert(built.x, &x);

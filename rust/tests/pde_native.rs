@@ -164,6 +164,7 @@ fn fixed_batch_descent_reduces_loss_and_strategies_agree() {
                 bank_grid: 32,
                 log_every: 1,
                 threads: 1,
+                ..NativeRunConfig::default()
             };
             let mut trainer = NativeTrainer::new(config).unwrap();
             // deterministic descent: repeat ONE frozen batch
@@ -387,6 +388,7 @@ fn short_training_validates_against_the_reference_solvers() {
             bank_grid: 32,
             log_every: 5,
             threads: 1,
+            ..NativeRunConfig::default()
         };
         let mut trainer = NativeTrainer::new(config).unwrap();
         let report = trainer.run().unwrap();

@@ -233,7 +233,7 @@ fn dce_and_cse_strictly_shrink_the_zcs_second_order_chain() {
     let net = zcs_demo::DemoNet::random(6, 16, 8, &mut rng);
     let built = zcs_demo::build_derivative(&net, Strategy::Zcs, 4, 24, 6, 2);
     // fusion off, so the per-node pass wins are visible in isolation
-    let unfused = Program::compile_with(&built.graph, &built.outputs, PassConfig { fuse: false });
+    let unfused = Program::compile_with(&built.graph, &built.outputs, PassConfig::NONE);
     let s = &unfused.stats;
     // DCE: the z-chain leaves whole adjoint subtrees (e.g. the branch
     // gradients) unreachable from d/da
@@ -246,12 +246,17 @@ fn dce_and_cse_strictly_shrink_the_zcs_second_order_chain() {
     assert!(s.simplified > 0, "identity rewrites should fire: {s:?}");
     // and the arena is denser than one-slot-per-instruction
     assert!(s.n_slots < s.instructions, "no slot reuse: {s:?}");
-    // the default pipeline stacks elementwise fusion on top
+    // the default pipeline stacks elementwise + matmul-epilogue fusion on
+    // top; each absorbed op and each epilogue kills exactly one instruction
     let fused = Program::compile(&built.graph, &built.outputs);
     let f = &fused.stats;
     assert!(f.fused_groups > 0, "z-chain should contain fusable groups: {f:?}");
     assert!(f.instructions < s.instructions, "fusion saved nothing: {f:?}");
-    assert_eq!(f.instructions + f.fused_ops, s.instructions, "fusion accounting: {f:?}");
+    assert_eq!(
+        f.instructions + f.fused_ops + f.matmul_epilogues,
+        s.instructions,
+        "fusion accounting: {f:?}"
+    );
 }
 
 #[test]
