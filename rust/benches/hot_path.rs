@@ -10,7 +10,8 @@
 
 use std::collections::HashMap;
 use std::rc::Rc;
-use zcs::autodiff::{zcs_demo, Executor, NodeId, PassConfig, Program, Strategy};
+use std::time::Instant;
+use zcs::autodiff::{zcs_demo, Executor, NodeId, PassConfig, Program, SchedMode, Strategy};
 use zcs::config::RunConfig;
 use zcs::coordinator::batch::{Batcher, PdeBatchSpec, PdeBatcher};
 use zcs::coordinator::native::{NativeRunConfig, NativeTrainer, Optimizer};
@@ -42,6 +43,12 @@ fn main() -> anyhow::Result<()> {
     // the whole training step: feed-based SGD vs resident SGD / Adam
     let step_rows = bench_whole_step(&mut table)?;
     write_bench_step_json(&step_rows)?;
+
+    // instruction scheduling: fork-join serial loop vs out-of-order task
+    // graph, plus the double-buffered batch pipeline
+    let sched_rows = bench_sched(&mut table)?;
+    let pipe_rows = bench_pipeline(&mut table)?;
+    write_bench_sched_json(&sched_rows, &pipe_rows)?;
 
     // GP bank generation (one-time cost, amortised)
     let stats = Bench::heavy_from_env().run(|| {
@@ -341,6 +348,7 @@ fn step_variant_stats(
             threads,
             optimizer,
             resident,
+            ..NativeRunConfig::default()
         };
         let mut trainer = NativeTrainer::new(config)?;
         state_bytes = trainer.resident_state_bytes();
@@ -449,6 +457,266 @@ fn write_bench_step_json(rows: &[StepRow]) -> anyhow::Result<()> {
     ]);
     std::fs::write("BENCH_step.json", doc.to_string())?;
     eprintln!("wrote BENCH_step.json");
+    Ok(())
+}
+
+/// One scheduler measurement: the same step program executed by the
+/// fork-join serial loop and by the out-of-order task graph at equal
+/// thread counts (identical outputs; only wall time moves).
+struct SchedRow {
+    problem: &'static str,
+    strategy: &'static str,
+    m: usize,
+    n: usize,
+    instructions: usize,
+    critical_path: usize,
+    max_width: usize,
+    mean_width: f64,
+    hazard_edges: usize,
+    /// [1t, 2t, 4t] under [`SchedMode::Serial`]
+    serial: [Stats; 3],
+    /// [1t, 2t, 4t] under [`SchedMode::Graph`]
+    graph: [Stats; 3],
+}
+
+impl SchedRow {
+    /// serial time / graph time at the same thread count.
+    fn speedup(&self, ti: usize) -> f64 {
+        self.serial[ti].mean.as_secs_f64() / self.graph[ti].mean.as_secs_f64().max(1e-12)
+    }
+}
+
+/// Every case-study problem x strategy step program, executed fork-join
+/// serial vs task-graph at 1/2/4 threads on one frozen batch.
+fn bench_sched(table: &mut Table) -> anyhow::Result<Vec<SchedRow>> {
+    let bench = Bench::from_env();
+    let (hidden, k, n_bc) = (64usize, 32usize, 32usize);
+    let cases: [(ProblemKind, &'static str, usize, usize, usize); 3] = [
+        (ProblemKind::Antiderivative, "antiderivative", 64, 512, 8),
+        (ProblemKind::ReactionDiffusion, "reaction_diffusion", 48, 384, 8),
+        (ProblemKind::Kirchhoff, "kirchhoff", 16, 128, 9),
+    ];
+    let mut rows = Vec::new();
+    for (kind, name, m, n, q) in cases {
+        let sizes = BlockSizes { n_in: n, n_bc };
+        for strategy in Strategy::ALL {
+            let built = build_training_problem(kind, strategy, m, q, hidden, k, sizes)?;
+            let program = Program::compile(&built.graph, &built.outputs);
+            let weights = init_problem_weights(&built, 9);
+            let mut batcher = PdeBatcher::new(
+                kind,
+                PdeBatchSpec { m, n_in: n, n_bc, q, bank_size: m.max(16), bank_grid: 64 },
+                &mut Pcg64::seeded(3),
+            )?;
+            let batch = batcher.next_batch();
+            let mut inputs: HashMap<NodeId, &Tensor> = HashMap::new();
+            for (id, w) in built.weight_ids.iter().zip(&weights) {
+                inputs.insert(*id, w);
+            }
+            inputs.insert(built.p, &batch.p);
+            for (feed_name, node) in &built.feeds {
+                let t = &batch
+                    .feeds
+                    .iter()
+                    .find(|(fname, _)| fname == feed_name)
+                    .expect("batcher emits every feed")
+                    .1;
+                inputs.insert(*node, t);
+            }
+            for (id, t) in &built.extra_inputs {
+                inputs.insert(*id, t);
+            }
+
+            let threads = [1usize, 2, 4];
+            let measure = |mode: SchedMode| -> [Stats; 3] {
+                threads.map(|t| {
+                    let mut exec = Executor::with_threads(t).with_sched(mode);
+                    bench.run(|| exec.run_ref(&program, &inputs))
+                })
+            };
+            let serial = measure(SchedMode::Serial);
+            let graph = measure(SchedMode::Graph);
+            let row = SchedRow {
+                problem: name,
+                strategy: strategy.name(),
+                m,
+                n,
+                instructions: program.stats.instructions,
+                critical_path: program.stats.sched_critical_path,
+                max_width: program.stats.sched_max_width,
+                mean_width: program.stats.sched_mean_width,
+                hazard_edges: program.stats.sched_hazard_edges,
+                serial,
+                graph,
+            };
+            for (ti, t) in threads.into_iter().enumerate() {
+                table.row(&[
+                    format!("sched {name}/{}: serial {t}t", row.strategy),
+                    format!("{:.3} ms", row.serial[ti].mean_ms()),
+                    format!("{:.3} ms", row.serial[ti].p50.as_secs_f64() * 1e3),
+                    row.serial[ti].iters.to_string(),
+                ]);
+                table.row(&[
+                    format!("sched {name}/{}: graph {t}t (x{:.2})", row.strategy, row.speedup(ti)),
+                    format!("{:.3} ms", row.graph[ti].mean_ms()),
+                    format!("{:.3} ms", row.graph[ti].p50.as_secs_f64() * 1e3),
+                    row.graph[ti].iters.to_string(),
+                ]);
+            }
+            eprintln!(
+                "sched {name}/{}: graph x{:.2} @2t, x{:.2} @4t \
+                 ({} instrs, crit path {}, width {}/{:.1}, {} hazard edges)",
+                row.strategy,
+                row.speedup(1),
+                row.speedup(2),
+                row.instructions,
+                row.critical_path,
+                row.max_width,
+                row.mean_width,
+                row.hazard_edges,
+            );
+            rows.push(row);
+        }
+    }
+    Ok(rows)
+}
+
+/// One batch-pipeline measurement: whole `run()` wall time per step,
+/// synchronous vs double-buffered producer (identical trajectories).
+struct PipeRow {
+    problem: &'static str,
+    steps: usize,
+    sync_ns_per_step: f64,
+    pipelined_ns_per_step: f64,
+}
+
+impl PipeRow {
+    fn speedup(&self) -> f64 {
+        self.sync_ns_per_step / self.pipelined_ns_per_step.max(1e-3)
+    }
+}
+
+/// Training-loop wall time with and without the batch pipeline.  Batch
+/// generation is a real fraction of these configs (GP bank interpolation
+/// at every collocation point), so overlap shows up as wall-time savings.
+fn bench_pipeline(table: &mut Table) -> anyhow::Result<Vec<PipeRow>> {
+    let steps = if zcs::util::benchkit::quick_mode() { 30 } else { 150 };
+    let cases: [(ProblemKind, &'static str, usize, usize); 2] = [
+        (ProblemKind::Antiderivative, "antiderivative", 32, 256),
+        (ProblemKind::ReactionDiffusion, "reaction_diffusion", 24, 192),
+    ];
+    let mut rows = Vec::new();
+    for (kind, name, m, n) in cases {
+        let mut per_mode = [0.0f64; 2];
+        for (mi, pipeline) in [false, true].into_iter().enumerate() {
+            let config = NativeRunConfig {
+                problem: kind,
+                strategy: Strategy::Zcs,
+                m,
+                n,
+                n_bc: 32,
+                q: 8,
+                hidden: 32,
+                k: 16,
+                steps,
+                // lr 0 keeps the weights stationary so both modes do the
+                // identical numeric work
+                lr: 0.0,
+                seed: 11,
+                bank_size: 32,
+                bank_grid: 64,
+                log_every: steps,
+                threads: 2,
+                optimizer: Optimizer::Adam,
+                resident: true,
+                pipeline,
+                ..NativeRunConfig::default()
+            };
+            let mut trainer = NativeTrainer::new(config)?;
+            // one throwaway step to warm the arena and batch buffers
+            let warm = trainer.next_batch();
+            trainer.step(&warm)?;
+            let t0 = Instant::now();
+            trainer.run()?;
+            per_mode[mi] = t0.elapsed().as_nanos() as f64 / steps as f64;
+        }
+        let row = PipeRow {
+            problem: name,
+            steps,
+            sync_ns_per_step: per_mode[0],
+            pipelined_ns_per_step: per_mode[1],
+        };
+        table.row(&[
+            format!("batch pipeline {name}: sync"),
+            format!("{:.3} ms", row.sync_ns_per_step / 1e6),
+            format!("{:.3} ms", row.sync_ns_per_step / 1e6),
+            steps.to_string(),
+        ]);
+        table.row(&[
+            format!("batch pipeline {name}: pipelined (x{:.2})", row.speedup()),
+            format!("{:.3} ms", row.pipelined_ns_per_step / 1e6),
+            format!("{:.3} ms", row.pipelined_ns_per_step / 1e6),
+            steps.to_string(),
+        ]);
+        eprintln!("batch pipeline {name}: x{:.2} wall/step over {} steps", row.speedup(), steps);
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
+/// Persist the scheduler + pipeline numbers (`BENCH_sched.json`):
+/// fork-join serial vs task-graph at 1/2/4 threads per problem x
+/// strategy, with equal-thread speedups, plus the pipelined-batch column.
+fn write_bench_sched_json(rows: &[SchedRow], pipes: &[PipeRow]) -> anyhow::Result<()> {
+    let cases: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            let mut named: Vec<(String, Json)> = vec![
+                ("problem".into(), Json::from(r.problem)),
+                ("strategy".into(), Json::from(r.strategy)),
+                ("m".into(), Json::from(r.m)),
+                ("n".into(), Json::from(r.n)),
+                ("instructions".into(), Json::from(r.instructions)),
+                ("critical_path".into(), Json::from(r.critical_path)),
+                ("max_width".into(), Json::from(r.max_width)),
+                ("mean_width".into(), Json::from(r.mean_width)),
+                ("hazard_edges".into(), Json::from(r.hazard_edges)),
+            ];
+            for (ti, threads) in [1usize, 2, 4].into_iter().enumerate() {
+                named.push((
+                    format!("serial_{threads}t_ns"),
+                    Json::from(r.serial[ti].mean.as_nanos() as f64),
+                ));
+                named.push((
+                    format!("graph_{threads}t_ns"),
+                    Json::from(r.graph[ti].mean.as_nanos() as f64),
+                ));
+                named.push((format!("speedup_graph_{threads}t"), Json::from(r.speedup(ti))));
+            }
+            obj(named.iter().map(|(k, v)| (k.as_str(), v.clone())).collect())
+        })
+        .collect();
+    let pipeline: Vec<Json> = pipes
+        .iter()
+        .map(|p| {
+            obj(vec![
+                ("problem", Json::from(p.problem)),
+                ("steps", Json::from(p.steps)),
+                ("sync_ns_per_step", Json::from(p.sync_ns_per_step)),
+                ("pipelined_ns_per_step", Json::from(p.pipelined_ns_per_step)),
+                ("speedup_pipeline", Json::from(p.speedup())),
+            ])
+        })
+        .collect();
+    let doc = obj(vec![
+        ("bench", Json::from("hot_path.sched")),
+        ("unit", Json::from("ns/step")),
+        ("quick", Json::Bool(zcs::util::benchkit::quick_mode())),
+        ("cases", Json::from(cases)),
+        ("pipeline", Json::from(pipeline)),
+    ]);
+    std::fs::write("BENCH_sched.json", doc.to_string())?;
+    eprintln!("wrote BENCH_sched.json");
     Ok(())
 }
 

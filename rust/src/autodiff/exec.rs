@@ -19,18 +19,177 @@
 //! traffic (asserted by `rust/tests/resident_step.rs`).
 //!
 //! The executor also owns a [`Pool`] of worker threads (default: the
-//! `ZCS_THREADS` environment variable, else serial).  The matmuls (with
-//! or without fused epilogues), the axis reductions and the fused
-//! elementwise instructions row-partition their output over the pool with
-//! every per-element accumulation kept sequential, so execution is
-//! bit-identical for any thread count -- `rust/tests/fusion_pool.rs` pins
-//! threaded == serial to `==`.
+//! `ZCS_THREADS` environment variable, else serial) and picks between two
+//! schedules ([`SchedMode`], default `ZCS_SCHED`, else graph):
+//!
+//! * **Serial** -- the instruction list runs strictly in program order;
+//!   parallelism exists only *inside* heavy kernels, which row-partition
+//!   over the pool with a fork-join barrier per instruction.
+//! * **Graph** (default on a threaded pool) -- instructions are claimed
+//!   out of order from the compiler's dependency [`Schedule`]
+//!   ([`super::passes::schedule`]): workers execute any instruction whose
+//!   predecessors (true read-after-write edges plus the WAR/WAW hazard
+//!   edges induced by arena-slot reuse) have retired, running small
+//!   elementwise/`Fused`/epilogue instructions inline on the claiming
+//!   worker with no fork-join, while over-threshold matmul/reduction
+//!   kernels still row-split across idle workers through the pool's help
+//!   list.
+//!
+//! Either way every kernel performs the identical scalar operation
+//! sequence and the hazard edges make arena reuse safe under any
+//! interleaving, so execution is bit-identical for any thread count and
+//! either schedule -- `rust/tests/fusion_pool.rs` and
+//! `rust/tests/sched_exec.rs` pin threaded == serial and graph == serial
+//! to `==`.
+//!
+//! [`Schedule`]: super::passes::Schedule
 
 use super::graph::NodeId;
 use super::program::{Instr, OpCode, Operand, Program, StateKind, UpdateRule};
 use crate::tensor::{kernels, Tensor};
 use crate::util::pool::{default_threads, Pool};
-use std::collections::HashMap;
+use std::cell::UnsafeCell;
+use std::collections::{BTreeMap, HashMap};
+use std::time::Instant;
+
+/// Which instruction schedule [`Executor::execute`] runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedMode {
+    /// strict program order, fork-join parallelism inside kernels only
+    Serial,
+    /// dependency-driven out-of-order claiming over the compiled
+    /// [`super::passes::Schedule`] (falls back to serial on a 1-thread
+    /// pool, where it would be pure overhead)
+    Graph,
+}
+
+impl SchedMode {
+    /// Case-insensitive parse with a choice-listing error.
+    pub fn parse(name: &str) -> Result<SchedMode, String> {
+        match name.to_ascii_lowercase().as_str() {
+            "serial" => Ok(SchedMode::Serial),
+            "graph" => Ok(SchedMode::Graph),
+            other => Err(format!("unknown schedule {other:?}; choices: serial, graph")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedMode::Serial => "serial",
+            SchedMode::Graph => "graph",
+        }
+    }
+
+    /// The environment default: `ZCS_SCHED` (serial | graph), else graph.
+    /// An unparseable value warns on stderr and falls back to graph, so a
+    /// typo cannot silently select the mode the user tried to exclude.
+    pub fn from_env() -> SchedMode {
+        match std::env::var("ZCS_SCHED") {
+            Ok(v) => SchedMode::parse(v.trim()).unwrap_or_else(|e| {
+                eprintln!("warning: ZCS_SCHED ignored: {e}");
+                SchedMode::Graph
+            }),
+            Err(_) => SchedMode::Graph,
+        }
+    }
+}
+
+/// Wall-time tally of one opcode (or update rule) across profiled runs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OpTally {
+    pub count: u64,
+    pub ns: u64,
+}
+
+/// Per-instruction profile accumulated by [`Executor::enable_profiling`]:
+/// wall time per opcode, per scheduler wavefront (dependency level), and
+/// per worker -- summed over every profiled run.  Collection costs two
+/// `Instant::now` calls per instruction and is entirely skipped (one
+/// branch) when profiling is off.
+#[derive(Clone, Debug, Default)]
+pub struct ProfileReport {
+    /// wall nanoseconds per opcode name, across runs and workers
+    pub per_op: BTreeMap<String, OpTally>,
+    /// wall nanoseconds per scheduler wavefront (instruction dependency
+    /// level), across runs and workers
+    pub per_level: Vec<u64>,
+    /// busy nanoseconds per worker (instruction execution only)
+    pub worker_busy_ns: Vec<u64>,
+    /// total executor wall nanoseconds across profiled runs
+    pub wall_ns: u64,
+    /// profiled executor runs
+    pub runs: u64,
+}
+
+impl ProfileReport {
+    /// Opcodes by total wall time, descending.
+    pub fn top_ops(&self) -> Vec<(&str, OpTally)> {
+        let mut v: Vec<(&str, OpTally)> =
+            self.per_op.iter().map(|(k, &t)| (k.as_str(), t)).collect();
+        v.sort_by(|a, b| b.1.ns.cmp(&a.1.ns));
+        v
+    }
+
+    /// Fraction of the profiled wall time each worker spent executing
+    /// instructions (the scheduler's occupancy).
+    pub fn occupancy(&self) -> Vec<f64> {
+        let wall = self.wall_ns.max(1) as f64;
+        self.worker_busy_ns.iter().map(|&b| b as f64 / wall).collect()
+    }
+
+    /// Tally one execution.  `level` is `None` for work outside the
+    /// scheduler's wavefronts (the post-barrier optimizer updates), which
+    /// counts toward the opcode and worker totals only -- so
+    /// `per_level.len()` always matches the schedule's critical path.
+    fn record(&mut self, op: &'static str, level: Option<usize>, worker: usize, ns: u64) {
+        let t = self.per_op.entry(op.to_string()).or_default();
+        t.count += 1;
+        t.ns += ns;
+        if let Some(level) = level {
+            if self.per_level.len() <= level {
+                self.per_level.resize(level + 1, 0);
+            }
+            self.per_level[level] += ns;
+        }
+        if self.worker_busy_ns.len() <= worker {
+            self.worker_busy_ns.resize(worker + 1, 0);
+        }
+        self.worker_busy_ns[worker] += ns;
+    }
+
+    fn merge(&mut self, other: &ProfileReport) {
+        for (k, t) in &other.per_op {
+            let e = self.per_op.entry(k.clone()).or_default();
+            e.count += t.count;
+            e.ns += t.ns;
+        }
+        if self.per_level.len() < other.per_level.len() {
+            self.per_level.resize(other.per_level.len(), 0);
+        }
+        for (a, b) in self.per_level.iter_mut().zip(&other.per_level) {
+            *a += b;
+        }
+        if self.worker_busy_ns.len() < other.worker_busy_ns.len() {
+            self.worker_busy_ns.resize(other.worker_busy_ns.len(), 0);
+        }
+        for (a, b) in self.worker_busy_ns.iter_mut().zip(&other.worker_busy_ns) {
+            *a += b;
+        }
+        self.wall_ns += other.wall_ns;
+        self.runs += other.runs;
+    }
+}
+
+/// Per-worker profile slots for the graph path: workers record into
+/// disjoint indices (the ready-queue hands every concurrently-running
+/// node a distinct worker id), merged after the run.
+struct ProfSlots {
+    slots: Vec<UnsafeCell<ProfileReport>>,
+}
+
+// SAFETY: slot `w` is only touched by the worker currently holding worker
+// id `w`, and worker ids are claimed exclusively per graph run.
+unsafe impl Sync for ProfSlots {}
 
 /// Reusable execution arena plus resident state and the kernel pool.
 pub struct Executor {
@@ -41,6 +200,9 @@ pub struct Executor {
     /// optimizer timestep: runs-with-updates since the last bind
     opt_t: u64,
     pool: Pool,
+    sched: SchedMode,
+    /// accumulated profile; `None` = profiling off (zero overhead)
+    profile: Option<Box<ProfileReport>>,
     /// scratch for resolving `Fused` instruction operands without a
     /// per-instruction allocation (raw pointers because the borrows it
     /// holds are scoped to one instruction, not to the executor)
@@ -61,35 +223,84 @@ fn empty_tensor() -> Tensor {
     Tensor::new(&[0], Vec::new())
 }
 
-fn resolve<'a>(
-    arena: &'a [Option<Tensor>],
-    inputs: &[&'a Tensor],
-    consts: &'a [Tensor],
-    states: &'a [Tensor],
-    v: Operand,
-) -> &'a Tensor {
-    match v {
-        Operand::Buf(b) => arena[b].as_ref().expect("operand buffer is live"),
-        Operand::In(i) => inputs[i],
-        Operand::Const(c) => &consts[c],
-        Operand::State(s) => &states[s],
+/// Shared read-only view of the arena, usable from graph workers.  All
+/// access goes through raw pointers so concurrent instruction execution
+/// never materialises overlapping references to the whole arena; the
+/// schedule's hazard edges guarantee that every slot an instruction reads
+/// is live and not being rewritten concurrently.
+#[derive(Clone, Copy)]
+struct ArenaView {
+    ptr: *const Option<Tensor>,
+}
+
+// SAFETY: dereferences are confined to slots the schedule proves quiescent.
+unsafe impl Send for ArenaView {}
+unsafe impl Sync for ArenaView {}
+
+impl ArenaView {
+    /// # Safety
+    /// Slot `b` must hold a live tensor no one mutates for the duration of
+    /// the returned borrow (guaranteed by RAW edges for the writer and
+    /// WAR/WAW hazard edges against reuse).
+    unsafe fn get<'a>(self, b: usize) -> &'a Tensor {
+        (*self.ptr.add(b)).as_ref().expect("operand buffer is live")
     }
+
+    /// # Safety
+    /// As for [`ArenaView::get`] when `v` is a buffer operand.
+    unsafe fn resolve<'a>(
+        self,
+        inputs: &[&'a Tensor],
+        consts: &'a [Tensor],
+        states: &'a [Tensor],
+        v: Operand,
+    ) -> &'a Tensor {
+        match v {
+            Operand::Buf(b) => self.get(b),
+            Operand::In(i) => inputs[i],
+            Operand::Const(c) => &consts[c],
+            Operand::State(s) => &states[s],
+        }
+    }
+}
+
+/// Mutable arena base pointer for the graph path; workers derive disjoint
+/// per-slot `&mut` from it (destination slots never collide thanks to the
+/// hazard edges).
+#[derive(Clone, Copy)]
+struct ArenaSlots {
+    ptr: *mut Option<Tensor>,
+}
+
+unsafe impl Send for ArenaSlots {}
+unsafe impl Sync for ArenaSlots {}
+
+thread_local! {
+    /// Per-thread operand/register scratch for graph workers, so
+    /// out-of-order execution stays allocation-free in the steady state
+    /// (the pool's workers are persistent, so capacity survives runs).
+    static WORKER_SCRATCH: UnsafeCell<(Vec<*const Tensor>, Vec<f64>)> =
+        const { UnsafeCell::new((Vec::new(), Vec::new())) };
 }
 
 impl Executor {
     /// An executor with the environment-default thread count
-    /// (`ZCS_THREADS`, else serial).
+    /// (`ZCS_THREADS`, else serial) and schedule (`ZCS_SCHED`, else
+    /// graph).
     pub fn new() -> Self {
         Self::with_threads(default_threads())
     }
 
-    /// An executor whose kernels run on `threads` threads (1 = serial).
+    /// An executor whose kernels run on `threads` threads (1 = serial),
+    /// with the environment-default schedule.
     pub fn with_threads(threads: usize) -> Self {
         Self {
             arena: Vec::new(),
             states: Vec::new(),
             opt_t: 0,
             pool: Pool::new(threads),
+            sched: SchedMode::from_env(),
+            profile: None,
             ext_scratch: Vec::new(),
             reg_scratch: Vec::new(),
         }
@@ -98,6 +309,43 @@ impl Executor {
     /// Kernel threads this executor runs on.
     pub fn threads(&self) -> usize {
         self.pool.threads()
+    }
+
+    /// The instruction schedule this executor runs (results are identical
+    /// either way; only wall time moves).
+    pub fn sched(&self) -> SchedMode {
+        self.sched
+    }
+
+    /// Select the instruction schedule.
+    pub fn set_sched(&mut self, sched: SchedMode) {
+        self.sched = sched;
+    }
+
+    /// Builder-style [`Executor::set_sched`].
+    pub fn with_sched(mut self, sched: SchedMode) -> Self {
+        self.sched = sched;
+        self
+    }
+
+    /// Start collecting a per-instruction [`ProfileReport`] on every
+    /// subsequent run.  Off by default; when off, execution pays a single
+    /// branch.
+    pub fn enable_profiling(&mut self) {
+        if self.profile.is_none() {
+            self.profile = Some(Box::default());
+        }
+    }
+
+    /// The profile accumulated so far, if profiling is enabled.
+    pub fn profile(&self) -> Option<&ProfileReport> {
+        self.profile.as_deref()
+    }
+
+    /// Take the accumulated profile, resetting the tallies (profiling
+    /// stays enabled).
+    pub fn take_profile(&mut self) -> Option<ProfileReport> {
+        self.profile.as_mut().map(|p| std::mem::take(&mut **p))
     }
 
     /// Seed the resident state of a program compiled with
@@ -173,11 +421,7 @@ impl Executor {
     /// uses [`Executor::run_scalars`] instead, which clones nothing.
     pub fn run_inputs(&mut self, program: &Program, ins: &[&Tensor]) -> Vec<Tensor> {
         self.execute(program, ins);
-        program
-            .outputs
-            .iter()
-            .map(|&v| resolve(&self.arena, ins, &program.consts, &self.states, v).clone())
-            .collect()
+        program.outputs.iter().map(|&v| self.output(program, ins, v).clone()).collect()
     }
 
     /// Borrow-based scalar readback: execute and copy each (scalar)
@@ -188,14 +432,25 @@ impl Executor {
         assert_eq!(out.len(), program.outputs.len(), "run_scalars output count");
         self.execute(program, ins);
         for (o, &v) in out.iter_mut().zip(&program.outputs) {
-            let t = resolve(&self.arena, ins, &program.consts, &self.states, v);
+            let t = self.output(program, ins, v);
             assert_eq!(t.len(), 1, "run_scalars wants scalar outputs");
             *o = t.data()[0];
         }
     }
 
-    /// Run the instruction list, then apply the in-place optimizer
-    /// updates (if any) to the resident state.
+    /// Resolve one program output after execution (everything quiescent).
+    fn output<'a>(&'a self, program: &'a Program, ins: &[&'a Tensor], v: Operand) -> &'a Tensor {
+        match v {
+            Operand::Buf(b) => self.arena[b].as_ref().expect("output buffer is live"),
+            Operand::In(i) => ins[i],
+            Operand::Const(c) => &program.consts[c],
+            Operand::State(s) => &self.states[s],
+        }
+    }
+
+    /// Run the instruction list -- in program order or out of order over
+    /// the dependency schedule, per [`SchedMode`] -- then apply the
+    /// in-place optimizer updates (if any) to the resident state.
     fn execute(&mut self, program: &Program, ins: &[&Tensor]) {
         assert_eq!(ins.len(), program.inputs.len(), "input count");
         for ((id, shape), t) in program.inputs.iter().zip(&program.input_shapes).zip(ins) {
@@ -212,36 +467,33 @@ impl Executor {
             self.arena.resize_with(program.n_slots, || None);
         }
 
-        // the fused-operand and register scratches are taken out for the
-        // duration of the instruction loop (they cannot be borrowed from
-        // `self` while the arena is) and put back so their capacity is
-        // reused across runs
-        let mut ext_scratch = std::mem::take(&mut self.ext_scratch);
-        let mut reg_scratch = std::mem::take(&mut self.reg_scratch);
-        for instr in &program.instrs {
-            let mut out = self.arena[instr.out].take().unwrap_or_else(empty_tensor);
-            self.step(instr, ins, &program.consts, &mut out, &mut ext_scratch, &mut reg_scratch);
-            self.arena[instr.out] = Some(out);
+        let t_wall = self.profile.is_some().then(Instant::now);
+        if self.sched == SchedMode::Graph && self.pool.threads() > 1 && program.instrs.len() > 1 {
+            self.execute_graph(program, ins);
+        } else {
+            self.execute_serial(program, ins);
         }
-        ext_scratch.clear();
-        self.ext_scratch = ext_scratch;
-        self.reg_scratch = reg_scratch;
 
         // in-place optimizer updates: gradients are consumed straight from
-        // their arena slots, weights and moments never leave the executor
+        // their arena slots, weights and moments never leave the executor.
+        // Updates run after the instruction barrier, so the WAR hazards
+        // they would otherwise induce on the state slots they rewrite (and
+        // on their gradients' arena slots) cannot fire.
         if !program.updates.is_empty() {
             self.opt_t += 1;
             let t = self.opt_t;
             for up in &program.updates {
+                let t_up = self.profile.is_some().then(Instant::now);
                 let g: &Tensor = match up.grad {
                     Operand::Buf(b) => self.arena[b].as_ref().expect("gradient buffer is live"),
                     Operand::In(i) => ins[i],
                     Operand::Const(c) => &program.consts[c],
                     Operand::State(_) => unreachable!("a gradient is never resident state"),
                 };
-                match up.rule {
+                let name = match up.rule {
                     UpdateRule::Sgd { lr } => {
                         kernels::sgd_update(&mut self.states[up.weight], g, lr);
+                        "sgd-update"
                     }
                     UpdateRule::Adam { lr, beta1, beta2, eps } => {
                         let (mi, vi) = up.moments.expect("adam carries moment slots");
@@ -262,97 +514,219 @@ impl Executor {
                             eps,
                             t,
                         );
+                        "adam-update"
                     }
+                };
+                if let (Some(t0), Some(p)) = (t_up, self.profile.as_mut()) {
+                    p.record(name, None, 0, t0.elapsed().as_nanos() as u64);
                 }
             }
         }
+        if let (Some(t0), Some(p)) = (t_wall, self.profile.as_mut()) {
+            p.wall_ns += t0.elapsed().as_nanos() as u64;
+            p.runs += 1;
+        }
     }
 
-    fn step(
-        &self,
-        instr: &Instr,
-        ins: &[&Tensor],
-        consts: &[Tensor],
-        out: &mut Tensor,
-        ext_scratch: &mut Vec<*const Tensor>,
-        reg_scratch: &mut Vec<f64>,
-    ) {
-        let arg = |k: usize| resolve(&self.arena, ins, consts, &self.states, instr.args[k]);
-        match instr.op {
-            OpCode::Add => kernels::add_into(arg(0), arg(1), out),
-            OpCode::Sub => kernels::sub_into(arg(0), arg(1), out),
-            OpCode::Mul => kernels::mul_into(arg(0), arg(1), out),
-            OpCode::ScaleBy => {
-                let s = arg(0).data()[0];
-                kernels::scale_into(arg(1), s, out);
+    /// The in-order instruction loop (serial schedule, and the 1-thread
+    /// fallback of the graph schedule).
+    fn execute_serial(&mut self, program: &Program, ins: &[&Tensor]) {
+        // the fused-operand and register scratches are taken out for the
+        // duration of the instruction loop (they cannot be borrowed from
+        // `self` while the arena is) and put back so their capacity is
+        // reused across runs
+        let mut ext_scratch = std::mem::take(&mut self.ext_scratch);
+        let mut reg_scratch = std::mem::take(&mut self.reg_scratch);
+        let profiling = self.profile.is_some();
+        for (i, instr) in program.instrs.iter().enumerate() {
+            let t0 = profiling.then(Instant::now);
+            let mut out = self.arena[instr.out].take().unwrap_or_else(empty_tensor);
+            let view = ArenaView { ptr: self.arena.as_ptr() };
+            // SAFETY: serial execution -- nothing else touches the arena,
+            // and the destination tensor was moved out of its slot, so
+            // `view` never aliases `out`
+            unsafe {
+                exec_instr(
+                    view,
+                    instr,
+                    ins,
+                    &program.consts,
+                    &self.states,
+                    &self.pool,
+                    &mut out,
+                    &mut ext_scratch,
+                    &mut reg_scratch,
+                );
             }
-            OpCode::Scale(c) => kernels::scale_into(arg(0), c, out),
-            OpCode::Tanh => kernels::tanh_into(arg(0), out),
-            OpCode::Neg => kernels::neg_into(arg(0), out),
-            OpCode::Square => kernels::square_into(arg(0), out),
-            OpCode::Sin => kernels::sin_into(arg(0), out),
-            OpCode::Cos => kernels::cos_into(arg(0), out),
-            OpCode::Reshape => kernels::reshape_into(arg(0), &instr.shape, out),
-            OpCode::Broadcast => {
-                let v = arg(0).data()[0];
-                kernels::broadcast_into(v, &instr.shape, out);
+            self.arena[instr.out] = Some(out);
+            if let (Some(t0), Some(p)) = (t0, self.profile.as_mut()) {
+                let level = program.schedule.level.get(i).map(|&l| l as usize);
+                p.record(instr.op.name(), level, 0, t0.elapsed().as_nanos() as u64);
             }
-            OpCode::SumAll => kernels::sum_all_into(arg(0), out),
-            OpCode::SumAxis(axis) => kernels::sum_axis_into_pool(arg(0), axis, out, &self.pool),
-            OpCode::MatMulNT => kernels::matmul_nt_into_pool(arg(0), arg(1), out, &self.pool),
-            OpCode::MatMul => kernels::matmul_into_pool(arg(0), arg(1), out, &self.pool),
-            OpCode::Transpose => kernels::transpose_into(arg(0), out),
-            OpCode::Fused(ref kernel) => {
-                ext_scratch.clear();
-                for k in 0..instr.args.len() {
-                    ext_scratch.push(arg(k) as *const Tensor);
-                }
-                // SAFETY: `&Tensor` and `*const Tensor` have identical
-                // layout, and the pointees (arena slots, inputs, constants,
-                // states) are live and unmodified for the whole instruction
-                // -- the destination never aliases an operand (lowerer
-                // contract)
-                let exts: &[&Tensor] = unsafe {
-                    std::slice::from_raw_parts(
-                        ext_scratch.as_ptr() as *const &Tensor,
-                        ext_scratch.len(),
-                    )
-                };
-                kernels::fused_into(kernel, exts, &instr.shape, out, &self.pool, reg_scratch);
-            }
-            OpCode::MatMulFused(ref me) => {
-                ext_scratch.clear();
-                for k in 2..instr.args.len() {
-                    ext_scratch.push(arg(k) as *const Tensor);
-                }
-                // SAFETY: as for `Fused` above
-                let exts: &[&Tensor] = unsafe {
-                    std::slice::from_raw_parts(
-                        ext_scratch.as_ptr() as *const &Tensor,
-                        ext_scratch.len(),
-                    )
-                };
-                if me.nt {
-                    kernels::matmul_nt_fused_into_pool(
-                        arg(0),
-                        arg(1),
-                        &me.epi,
-                        exts,
-                        out,
-                        &self.pool,
+        }
+        ext_scratch.clear();
+        self.ext_scratch = ext_scratch;
+        self.reg_scratch = reg_scratch;
+    }
+
+    /// Out-of-order execution over the compiled dependency schedule: pool
+    /// workers claim instructions whose predecessors have retired and run
+    /// them concurrently.  Safety rests on the schedule's edges -- every
+    /// read is ordered after its producing write (RAW) and every arena
+    /// slot rewrite is ordered after the last read/write of the previous
+    /// value (WAR/WAW) -- so any interleaving touches disjoint data and
+    /// the result is bit-identical to the serial loop.
+    fn execute_graph(&mut self, program: &Program, ins: &[&Tensor]) {
+        let sched = &program.schedule;
+        debug_assert_eq!(sched.n_preds.len(), program.instrs.len(), "schedule is stale");
+        let slots = ArenaSlots { ptr: self.arena.as_mut_ptr() };
+        let view = ArenaView { ptr: slots.ptr as *const Option<Tensor> };
+        let states: &[Tensor] = &self.states;
+        let consts: &[Tensor] = &program.consts;
+        let pool = &self.pool;
+        let prof = self.profile.as_deref_mut().map(|p| {
+            let slots: Vec<UnsafeCell<ProfileReport>> =
+                (0..pool.threads()).map(|_| UnsafeCell::new(ProfileReport::default())).collect();
+            (p, ProfSlots { slots })
+        });
+        let prof_slots = prof.as_ref().map(|(_, s)| s);
+        pool.run_graph(&sched.spec(), &|node, worker| {
+            let instr = &program.instrs[node as usize];
+            let t0 = prof_slots.is_some().then(Instant::now);
+            // SAFETY: the schedule orders every access to slot `instr.out`
+            // (WAR/WAW edges) so this worker holds the only live reference
+            // to it; argument slots are quiescent (RAW edges) and read
+            // through `view` only
+            let slot = unsafe { &mut *slots.ptr.add(instr.out) };
+            let mut out = slot.take().unwrap_or_else(empty_tensor);
+            WORKER_SCRATCH.with(|s| {
+                // SAFETY: the thread-local is only borrowed here, once per
+                // instruction, never reentrantly (kernels do not execute
+                // nested instructions)
+                let (ext_scratch, reg_scratch) = unsafe { &mut *s.get() };
+                unsafe {
+                    exec_instr(
+                        view,
+                        instr,
+                        ins,
+                        consts,
+                        states,
+                        pool,
+                        &mut out,
+                        ext_scratch,
                         reg_scratch,
                     );
-                } else {
-                    kernels::matmul_fused_into_pool(
-                        arg(0),
-                        arg(1),
-                        &me.epi,
-                        exts,
-                        out,
-                        &self.pool,
-                        reg_scratch,
-                    );
                 }
+            });
+            *slot = Some(out);
+            if let (Some(t0), Some(ps)) = (t0, prof_slots) {
+                // SAFETY: worker ids of concurrently-running nodes are
+                // distinct, so slot `worker` is exclusively ours right now
+                let p = unsafe { &mut *ps.slots[worker].get() };
+                let level = sched.level.get(node as usize).map(|&l| l as usize);
+                p.record(instr.op.name(), level, worker, t0.elapsed().as_nanos() as u64);
+            }
+        });
+        if let Some((p, ps)) = prof {
+            for slot in ps.slots {
+                p.merge(&slot.into_inner());
+            }
+            // merge() also summed the per-slot wall/runs zeros; wall and
+            // runs for the whole execute() are accounted by the caller
+        }
+    }
+}
+
+/// Execute one instruction into `out`.
+///
+/// # Safety
+/// Every `Operand::Buf` the instruction reads must hold a live tensor
+/// that nothing mutates for the duration of the call, and `out` must not
+/// alias any operand -- the serial loop guarantees this by construction,
+/// the graph scheduler by its RAW + hazard edges.
+#[allow(clippy::too_many_arguments)]
+unsafe fn exec_instr(
+    arena: ArenaView,
+    instr: &Instr,
+    ins: &[&Tensor],
+    consts: &[Tensor],
+    states: &[Tensor],
+    pool: &Pool,
+    out: &mut Tensor,
+    ext_scratch: &mut Vec<*const Tensor>,
+    reg_scratch: &mut Vec<f64>,
+) {
+    // SAFETY: the caller's contract covers every operand this reads
+    let arg = |k: usize| unsafe { arena.resolve(ins, consts, states, instr.args[k]) };
+    match instr.op {
+        OpCode::Add => kernels::add_into(arg(0), arg(1), out),
+        OpCode::Sub => kernels::sub_into(arg(0), arg(1), out),
+        OpCode::Mul => kernels::mul_into(arg(0), arg(1), out),
+        OpCode::ScaleBy => {
+            let s = arg(0).data()[0];
+            kernels::scale_into(arg(1), s, out);
+        }
+        OpCode::Scale(c) => kernels::scale_into(arg(0), c, out),
+        OpCode::Tanh => kernels::tanh_into(arg(0), out),
+        OpCode::Neg => kernels::neg_into(arg(0), out),
+        OpCode::Square => kernels::square_into(arg(0), out),
+        OpCode::Sin => kernels::sin_into(arg(0), out),
+        OpCode::Cos => kernels::cos_into(arg(0), out),
+        OpCode::Reshape => kernels::reshape_into(arg(0), &instr.shape, out),
+        OpCode::Broadcast => {
+            let v = arg(0).data()[0];
+            kernels::broadcast_into(v, &instr.shape, out);
+        }
+        OpCode::SumAll => kernels::sum_all_into(arg(0), out),
+        OpCode::SumAxis(axis) => kernels::sum_axis_into_pool(arg(0), axis, out, pool),
+        OpCode::MatMulNT => kernels::matmul_nt_into_pool(arg(0), arg(1), out, pool),
+        OpCode::MatMul => kernels::matmul_into_pool(arg(0), arg(1), out, pool),
+        OpCode::Transpose => kernels::transpose_into(arg(0), out),
+        OpCode::Fused(ref kernel) => {
+            ext_scratch.clear();
+            for k in 0..instr.args.len() {
+                ext_scratch.push(arg(k) as *const Tensor);
+            }
+            // SAFETY: `&Tensor` and `*const Tensor` have identical layout,
+            // and the pointees (arena slots, inputs, constants, states)
+            // are live and unmodified for the whole instruction -- the
+            // destination never aliases an operand (lowerer contract)
+            let exts: &[&Tensor] = std::slice::from_raw_parts(
+                ext_scratch.as_ptr() as *const &Tensor,
+                ext_scratch.len(),
+            );
+            kernels::fused_into(kernel, exts, &instr.shape, out, pool, reg_scratch);
+        }
+        OpCode::MatMulFused(ref me) => {
+            ext_scratch.clear();
+            for k in 2..instr.args.len() {
+                ext_scratch.push(arg(k) as *const Tensor);
+            }
+            // SAFETY: as for `Fused` above
+            let exts: &[&Tensor] = std::slice::from_raw_parts(
+                ext_scratch.as_ptr() as *const &Tensor,
+                ext_scratch.len(),
+            );
+            if me.nt {
+                kernels::matmul_nt_fused_into_pool(
+                    arg(0),
+                    arg(1),
+                    &me.epi,
+                    exts,
+                    out,
+                    pool,
+                    reg_scratch,
+                );
+            } else {
+                kernels::matmul_fused_into_pool(
+                    arg(0),
+                    arg(1),
+                    &me.epi,
+                    exts,
+                    out,
+                    pool,
+                    reg_scratch,
+                );
             }
         }
     }
@@ -430,6 +804,97 @@ mod tests {
             let threaded = Executor::with_threads(threads).run(&prog, &inputs);
             assert_eq!(serial, threaded, "{threads} threads");
         }
+    }
+
+    /// A program with real width: two matmul branches, fused elementwise
+    /// interiors and both reductions, so the graph schedule genuinely
+    /// interleaves independent instructions.
+    fn wide_program() -> (Graph, NodeId, NodeId, Program) {
+        let mut g = Graph::new();
+        let x = g.input(&[9, 7]);
+        let w = g.input(&[7, 9]);
+        let mm = g.matmul(x, w);
+        let t = g.tanh(mm);
+        let sq = g.square(t);
+        let s1 = g.sum_axis(sq, 1);
+        let s0 = g.sum_axis(sq, 0);
+        let mm2 = g.matmul(x, w);
+        let c = g.cos(mm2);
+        let o1 = g.sum_all(s1);
+        let o2 = g.sum_all(s0);
+        let o3 = g.sum_all(c);
+        let prog = Program::compile(&g, &[o1, o2, o3]);
+        (g, x, w, prog)
+    }
+
+    #[test]
+    fn graph_schedule_bit_matches_serial_across_runs() {
+        let (_g, x, w, prog) = wide_program();
+        let mut rng = crate::rng::Pcg64::seeded(29);
+        let mut inputs = HashMap::new();
+        inputs.insert(x, Tensor::new(&[9, 7], rng.normals(63)));
+        inputs.insert(w, Tensor::new(&[7, 9], rng.normals(63)));
+        let mut serial = Executor::with_threads(1).with_sched(SchedMode::Serial);
+        let want = serial.run(&prog, &inputs);
+        for threads in [2usize, 4] {
+            let mut graph = Executor::with_threads(threads).with_sched(SchedMode::Graph);
+            // repeat: races in the hazard edges would show up as flaky
+            // diffs, not deterministic ones
+            for round in 0..8 {
+                let got = graph.run(&prog, &inputs);
+                assert_eq!(want, got, "{threads} threads, round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn forced_serial_mode_matches_graph_mode_on_a_threaded_pool() {
+        let (_g, x, w, prog) = wide_program();
+        let mut rng = crate::rng::Pcg64::seeded(31);
+        let mut inputs = HashMap::new();
+        inputs.insert(x, Tensor::new(&[9, 7], rng.normals(63)));
+        inputs.insert(w, Tensor::new(&[7, 9], rng.normals(63)));
+        let mut a = Executor::with_threads(4).with_sched(SchedMode::Serial);
+        let mut b = Executor::with_threads(4).with_sched(SchedMode::Graph);
+        assert_eq!(a.run(&prog, &inputs), b.run(&prog, &inputs));
+    }
+
+    #[test]
+    fn profiling_tallies_opcodes_and_is_off_by_default() {
+        let (_g, x, w, prog) = wide_program();
+        let mut rng = crate::rng::Pcg64::seeded(37);
+        let mut inputs = HashMap::new();
+        inputs.insert(x, Tensor::new(&[9, 7], rng.normals(63)));
+        inputs.insert(w, Tensor::new(&[7, 9], rng.normals(63)));
+        for threads in [1usize, 2] {
+            let mut exec = Executor::with_threads(threads);
+            exec.run(&prog, &inputs);
+            assert!(exec.profile().is_none(), "profiling must be opt-in");
+            exec.enable_profiling();
+            exec.run(&prog, &inputs);
+            exec.run(&prog, &inputs);
+            let report = exec.take_profile().expect("profiling enabled");
+            assert_eq!(report.runs, 2);
+            assert!(report.wall_ns > 0);
+            let total_instrs: u64 = report.per_op.values().map(|t| t.count).sum();
+            assert_eq!(total_instrs, prog.instrs.len() as u64 * 2, "{threads} threads");
+            assert_eq!(report.per_level.len(), prog.schedule.critical_path);
+            assert!(!report.top_ops().is_empty());
+            assert!(report.occupancy().iter().all(|&o| (0.0..=1.0).contains(&o)));
+            // take_profile resets but keeps collecting
+            exec.run(&prog, &inputs);
+            assert_eq!(exec.profile().unwrap().runs, 1);
+        }
+    }
+
+    #[test]
+    fn sched_mode_parses_and_reads_env() {
+        assert_eq!(SchedMode::parse("Serial").unwrap(), SchedMode::Serial);
+        assert_eq!(SchedMode::parse("GRAPH").unwrap(), SchedMode::Graph);
+        let err = SchedMode::parse("wavefront").unwrap_err();
+        assert!(err.contains("serial") && err.contains("graph"), "{err}");
+        assert_eq!(SchedMode::Serial.name(), "serial");
+        assert_eq!(SchedMode::Graph.name(), "graph");
     }
 
     #[test]

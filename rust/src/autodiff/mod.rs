@@ -28,8 +28,9 @@ pub mod passes;
 pub mod program;
 pub mod zcs_demo;
 
-pub use exec::Executor;
+pub use exec::{Executor, OpTally, ProfileReport, SchedMode};
 pub use graph::{Graph, NodeId, Op};
+pub use passes::Schedule;
 pub use program::{
     Instr, MatmulEpilogue, OpCode, Operand, PassConfig, Program, ProgramStats, StateKind,
     StateSlot, UpdateInstr, UpdateRule,

@@ -923,9 +923,268 @@ pub fn fuse_matmul_epilogue(dag: Dag) -> Dag {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Instruction scheduling: the dependency DAG over the lowered program
+// ---------------------------------------------------------------------------
+
+/// The dependency schedule of a lowered instruction list, attached to
+/// every [`super::program::Program`] by the `schedule` pass and consumed
+/// by the executor's out-of-order graph mode
+/// ([`crate::util::pool::Pool::run_graph`]).
+///
+/// Edges come in two flavours:
+///
+/// * **true edges** (read-after-write): instruction `i` reads an arena
+///   slot instruction `j` wrote -- `i` cannot start before `j` retires.
+///   Per-run inputs, embedded constants and resident state slots are
+///   read-only for the whole instruction list, so they induce no edges.
+/// * **hazard edges** (write-after-read / write-after-write): liveness
+///   lowering recycles arena slots the instant a value dies, so a later
+///   instruction may *rewrite* a slot earlier instructions still read --
+///   the rewrite must wait for every such read (WAR) and for the previous
+///   write (WAW).  These edges are what makes *any* interleaving of
+///   independent instructions produce bit-identical buffers despite the
+///   aggressive slot reuse.
+///
+/// (The in-place [`super::program::UpdateInstr`]s rewrite resident state
+/// and read gradient slots; the executor runs them after the full
+/// instruction barrier, which subsumes every hazard edge they would
+/// need.)
+#[derive(Clone, Debug, Default)]
+pub struct Schedule {
+    /// predecessor count per instruction (true + hazard, deduplicated)
+    pub n_preds: Vec<u32>,
+    /// CSR successor lists: `succs[succ_offsets[i]..succ_offsets[i + 1]]`
+    pub succs: Vec<u32>,
+    pub succ_offsets: Vec<u32>,
+    /// static claim priority: cost-weighted longest path to a sink, so
+    /// workers pull the critical path forward first
+    pub priority: Vec<u64>,
+    /// wavefront level per instruction (longest edge distance from a
+    /// source; instructions on one level are mutually independent)
+    pub level: Vec<u32>,
+    /// deduplicated read-after-write edges
+    pub true_edges: usize,
+    /// deduplicated WAR + WAW edges from arena-slot reuse
+    pub hazard_edges: usize,
+    /// length of the longest dependency chain, in instructions
+    pub critical_path: usize,
+    /// widest wavefront (peak schedulable parallelism)
+    pub max_width: usize,
+    /// instructions / wavefronts (average available width)
+    pub mean_width: f64,
+}
+
+impl Schedule {
+    /// Borrowed view for [`crate::util::pool::Pool::run_graph`].
+    pub fn spec(&self) -> crate::util::pool::GraphSpec<'_> {
+        crate::util::pool::GraphSpec {
+            n_preds: &self.n_preds,
+            succs: &self.succs,
+            succ_offsets: &self.succ_offsets,
+            priority: &self.priority,
+        }
+    }
+}
+
+/// Rough per-instruction cost for priority ordering (not a timing model:
+/// only relative magnitude matters).  Matmuls dominate elementwise work
+/// on the same output shape by roughly their inner dimension.
+fn instr_cost(instr: &super::program::Instr) -> u64 {
+    let elems = instr.shape.iter().product::<usize>().max(1) as u64;
+    match instr.op {
+        OpCode::MatMul | OpCode::MatMulNT | OpCode::MatMulFused(_) => elems * 16,
+        _ => elems,
+    }
+}
+
+/// The scheduling pass: build the instruction dependency DAG (true RAW
+/// edges plus WAR/WAW hazard edges from arena-slot reuse), wavefront
+/// levels, and the critical-path claim priorities.  Runs in one forward
+/// sweep plus one backward sweep; instruction order is topological by
+/// construction (every edge points forward), which both sweeps exploit.
+pub fn schedule(instrs: &[super::program::Instr], n_slots: usize) -> Schedule {
+    use super::program::Operand;
+    let n = instrs.len();
+    let mut preds: Vec<Vec<u32>> = vec![Vec::new(); n];
+    let mut true_edges = 0usize;
+    let mut hazard_edges = 0usize;
+    // per-slot bookkeeping across the forward sweep
+    let mut last_writer: Vec<Option<u32>> = vec![None; n_slots];
+    let mut readers: Vec<Vec<u32>> = vec![Vec::new(); n_slots];
+    for (i, instr) in instrs.iter().enumerate() {
+        let iu = i as u32;
+        let p = &mut preds[i];
+        for arg in &instr.args {
+            if let Operand::Buf(b) = *arg {
+                let w = last_writer[b].expect("operand slot written before read");
+                if !p.contains(&w) {
+                    p.push(w);
+                    true_edges += 1;
+                }
+                if !readers[b].contains(&iu) {
+                    readers[b].push(iu);
+                }
+            }
+        }
+        // the write side: order after the previous writer (WAW) and after
+        // every reader of the previous value (WAR)
+        let out = instr.out;
+        if let Some(w) = last_writer[out] {
+            if !p.contains(&w) {
+                p.push(w);
+                hazard_edges += 1;
+            }
+        }
+        for r in std::mem::take(&mut readers[out]) {
+            if r != iu && !p.contains(&r) {
+                p.push(r);
+                hazard_edges += 1;
+            }
+        }
+        last_writer[out] = Some(iu);
+    }
+
+    // CSR successors + pred counts
+    let mut n_preds = vec![0u32; n];
+    let mut succ_offsets = vec![0u32; n + 1];
+    for (i, p) in preds.iter().enumerate() {
+        n_preds[i] = p.len() as u32;
+        for &w in p {
+            succ_offsets[w as usize + 1] += 1;
+        }
+    }
+    for i in 0..n {
+        succ_offsets[i + 1] += succ_offsets[i];
+    }
+    let mut cursor: Vec<u32> = succ_offsets[..n].to_vec();
+    let mut succs = vec![0u32; *succ_offsets.last().unwrap_or(&0) as usize];
+    for (i, p) in preds.iter().enumerate() {
+        for &w in p {
+            succs[cursor[w as usize] as usize] = i as u32;
+            cursor[w as usize] += 1;
+        }
+    }
+
+    // wavefront levels and widths (forward over the topological order)
+    let mut level = vec![0u32; n];
+    for (i, p) in preds.iter().enumerate() {
+        level[i] = p.iter().map(|&w| level[w as usize] + 1).max().unwrap_or(0);
+    }
+    let critical_path = level.iter().map(|&l| l as usize + 1).max().unwrap_or(0);
+    let mut width = vec![0usize; critical_path];
+    for &l in &level {
+        width[l as usize] += 1;
+    }
+    let max_width = width.iter().copied().max().unwrap_or(0);
+    let mean_width = if critical_path > 0 { n as f64 / critical_path as f64 } else { 0.0 };
+
+    // claim priority: cost-weighted longest path to any sink (backward)
+    let mut priority = vec![0u64; n];
+    for i in (0..n).rev() {
+        let lo = succ_offsets[i] as usize;
+        let hi = succ_offsets[i + 1] as usize;
+        let downstream = succs[lo..hi].iter().map(|&s| priority[s as usize]).max().unwrap_or(0);
+        priority[i] = instr_cost(&instrs[i]) + downstream;
+    }
+
+    Schedule {
+        n_preds,
+        succs,
+        succ_offsets,
+        priority,
+        level,
+        true_edges,
+        hazard_edges,
+        critical_path,
+        max_width,
+        mean_width,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn schedule_tracks_true_and_hazard_edges() {
+        use super::super::program::{Instr, Operand};
+        // slot 0 = tanh(in0); slot 1 = tanh(slot 0); slot 0 rewritten
+        // (liveness reuse); slot 2 = slot 0 + slot 1
+        let t = |args: Vec<Operand>, out: usize| Instr {
+            op: OpCode::Tanh,
+            args,
+            out,
+            shape: vec![2],
+        };
+        let instrs = vec![
+            t(vec![Operand::In(0)], 0),
+            t(vec![Operand::Buf(0)], 1),
+            t(vec![Operand::In(0)], 0),
+            Instr {
+                op: OpCode::Add,
+                args: vec![Operand::Buf(0), Operand::Buf(1)],
+                out: 2,
+                shape: vec![2],
+            },
+        ];
+        let s = schedule(&instrs, 3);
+        assert_eq!(s.n_preds, vec![0, 1, 2, 2]);
+        // RAW: 0->1, 2->3, 1->3
+        assert_eq!(s.true_edges, 3);
+        // WAW: 0->2 (slot 0 rewritten); WAR: 1->2 (slot 0 still read)
+        assert_eq!(s.hazard_edges, 2);
+        assert_eq!(s.level, vec![0, 1, 2, 3]);
+        assert_eq!(s.critical_path, 4);
+        assert_eq!(s.max_width, 1);
+        assert!((s.mean_width - 1.0).abs() < 1e-12);
+        // critical-path priorities decay along the chain
+        assert!(s.priority[0] > s.priority[1]);
+        assert!(s.priority[1] > s.priority[2]);
+        assert!(s.priority[2] > s.priority[3]);
+        // CSR successors of instr 1: the WAR-hazard rewrite and the add
+        let lo = s.succ_offsets[1] as usize;
+        let hi = s.succ_offsets[2] as usize;
+        let mut succs1 = s.succs[lo..hi].to_vec();
+        succs1.sort_unstable();
+        assert_eq!(succs1, vec![2, 3]);
+    }
+
+    #[test]
+    fn schedule_duplicate_operands_make_one_edge() {
+        use super::super::program::{Instr, Operand};
+        let instrs = vec![
+            Instr { op: OpCode::Tanh, args: vec![Operand::In(0)], out: 0, shape: vec![4] },
+            Instr {
+                op: OpCode::Mul,
+                args: vec![Operand::Buf(0), Operand::Buf(0)],
+                out: 1,
+                shape: vec![4],
+            },
+        ];
+        let s = schedule(&instrs, 2);
+        assert_eq!(s.true_edges, 1);
+        assert_eq!(s.hazard_edges, 0);
+        assert_eq!(s.n_preds, vec![0, 1]);
+    }
+
+    #[test]
+    fn schedule_of_independent_instructions_is_wide() {
+        use super::super::program::{Instr, Operand};
+        let instrs: Vec<Instr> = (0..6)
+            .map(|i| Instr {
+                op: OpCode::Tanh,
+                args: vec![Operand::In(i)],
+                out: i,
+                shape: vec![3],
+            })
+            .collect();
+        let s = schedule(&instrs, 6);
+        assert_eq!(s.critical_path, 1);
+        assert_eq!(s.max_width, 6);
+        assert_eq!(s.true_edges + s.hazard_edges, 0);
+        assert!(s.n_preds.iter().all(|&p| p == 0));
+    }
 
     #[test]
     fn constants_are_deduplicated() {

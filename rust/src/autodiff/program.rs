@@ -42,6 +42,11 @@
 //!    `peak_live_bytes` -- the native-engine analogue of the paper's
 //!    Table-1 "Graph" memory column, computed by the same def-to-last-use
 //!    convention as [`crate::hlostats`].
+//! 6. **Instruction scheduling** -- [`passes::schedule`] builds the
+//!    dependency DAG over the lowered instructions (true read-after-write
+//!    edges plus the WAR/WAW hazard edges that slot recycling induces),
+//!    wavefront levels and critical-path claim priorities, attached as
+//!    [`Program::schedule`] for the executor's out-of-order graph mode.
 //!
 //! The compiled [`Program`] is strategy-agnostic: `zcs_demo` compiles all
 //! three of FuncLoop / DataVect / ZCS, and the differential property tests
@@ -106,6 +111,41 @@ pub enum OpCode {
     MatMulFused(Box<MatmulEpilogue>),
 }
 
+impl OpCode {
+    /// Histogram/profiler name, shared by [`crate::hlostats`] and the
+    /// executor's `--profile` tables.
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpCode::Add => "add",
+            OpCode::Sub => "subtract",
+            OpCode::Mul => "multiply",
+            OpCode::ScaleBy => "scale-by",
+            OpCode::Scale(_) => "scale",
+            OpCode::Tanh => "tanh",
+            OpCode::Neg => "negate",
+            OpCode::Square => "square",
+            OpCode::Sin => "sine",
+            OpCode::Cos => "cosine",
+            OpCode::Reshape => "reshape",
+            OpCode::Broadcast => "broadcast",
+            OpCode::SumAll => "reduce-sum",
+            OpCode::SumAxis(0) => "reduce-sum-cols",
+            OpCode::SumAxis(_) => "reduce-sum-rows",
+            OpCode::MatMulNT => "dot-nt",
+            OpCode::MatMul => "dot",
+            OpCode::Transpose => "transpose",
+            OpCode::Fused(_) => "fused",
+            OpCode::MatMulFused(me) => {
+                if me.nt {
+                    "dot-nt-fused"
+                } else {
+                    "dot-fused"
+                }
+            }
+        }
+    }
+}
+
 /// Payload of [`OpCode::MatMulFused`]: which matmul flavour, plus the
 /// elementwise micro-program applied to each freshly accumulated row
 /// block.
@@ -159,6 +199,17 @@ pub struct ProgramStats {
     pub resident_state_bytes: u64,
     /// in-Program optimizer update instructions
     pub update_instrs: usize,
+    /// longest dependency chain in the instruction DAG (instructions;
+    /// see [`passes::Schedule`])
+    pub sched_critical_path: usize,
+    /// widest scheduler wavefront (peak schedulable parallelism)
+    pub sched_max_width: usize,
+    /// instructions / wavefronts (mean available width)
+    pub sched_mean_width: f64,
+    /// read-after-write edges in the instruction DAG
+    pub sched_true_edges: usize,
+    /// WAR/WAW hazard edges induced by liveness-based arena-slot reuse
+    pub sched_hazard_edges: usize,
     /// arena slots after liveness-driven reuse (<= instructions)
     pub n_slots: usize,
     /// peak simultaneously-live intermediate bytes during execution
@@ -243,6 +294,10 @@ pub struct Program {
     pub states: Vec<StateSlot>,
     /// optimizer updates executed in place after [`Program::instrs`]
     pub updates: Vec<UpdateInstr>,
+    /// instruction dependency DAG (true + hazard edges) with claim
+    /// priorities, computed by [`passes::schedule`] and consumed by the
+    /// executor's out-of-order graph mode
+    pub schedule: passes::Schedule,
     pub stats: ProgramStats,
 }
 
@@ -422,8 +477,23 @@ impl Program {
         self.updates = updates;
         self.stats.resident_state_bytes = self.resident_state_bytes();
         self.stats.update_instrs = self.updates.len();
+        // the appended pre-update copies changed the instruction list:
+        // rebuild the dependency schedule (operand remapping In -> State
+        // left the arena edges untouched, but the copy instructions and
+        // their slots are new)
+        self.schedule = passes::schedule(&self.instrs, self.n_slots);
+        sched_stats(&mut self.stats, &self.schedule);
         self
     }
+}
+
+/// Copy the schedule pass's dependency metrics into the program stats.
+fn sched_stats(stats: &mut ProgramStats, s: &passes::Schedule) {
+    stats.sched_critical_path = s.critical_path;
+    stats.sched_max_width = s.max_width;
+    stats.sched_mean_width = s.mean_width;
+    stats.sched_true_edges = s.true_edges;
+    stats.sched_hazard_edges = s.hazard_edges;
 }
 
 /// Lower a normalized DAG to an instruction list with slot reuse.
@@ -564,7 +634,8 @@ fn lower(dag: passes::Dag) -> Program {
         .collect();
 
     let const_bytes: u64 = consts.iter().map(|t| t.len() as u64 * 8).sum();
-    let stats = ProgramStats {
+    let schedule = passes::schedule(&instrs, n_slots);
+    let mut stats = ProgramStats {
         graph_nodes: dag.graph_nodes,
         live_nodes: dag.live_nodes,
         instructions: instrs.len(),
@@ -578,10 +649,16 @@ fn lower(dag: passes::Dag) -> Program {
         epilogue_ops: dag.epilogue_ops,
         resident_state_bytes: 0,
         update_instrs: 0,
+        sched_critical_path: 0,
+        sched_max_width: 0,
+        sched_mean_width: 0.0,
+        sched_true_edges: 0,
+        sched_hazard_edges: 0,
         n_slots,
         peak_live_bytes,
         const_bytes,
     };
+    sched_stats(&mut stats, &schedule);
     Program {
         instrs,
         n_slots,
@@ -592,6 +669,7 @@ fn lower(dag: passes::Dag) -> Program {
         output_shapes,
         states: Vec::new(),
         updates: Vec::new(),
+        schedule,
         stats,
     }
 }
@@ -807,6 +885,56 @@ mod tests {
         let mut inputs = HashMap::new();
         inputs.insert(x, Tensor::new(&[3, 3], vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9]));
         assert_eq!(prog.eval_once(&inputs)[0], g.eval(out, &inputs));
+    }
+
+    #[test]
+    fn compiled_programs_carry_a_dependency_schedule() {
+        // a pure chain (forced unfused) is all critical path...
+        let mut g = Graph::new();
+        let x = g.input(&[4]);
+        let mut cur = x;
+        for _ in 0..4 {
+            cur = g.tanh(cur);
+        }
+        let out = g.sum_all(cur);
+        let chain = Program::compile_with(&g, &[out], PassConfig::NONE);
+        assert_eq!(chain.schedule.n_preds.len(), chain.instrs.len());
+        assert_eq!(chain.schedule.critical_path, chain.instrs.len());
+        assert_eq!(chain.stats.sched_critical_path, chain.instrs.len());
+        assert_eq!(chain.stats.sched_max_width, 1);
+        // slot reuse along the chain induces hazard edges
+        assert!(chain.stats.sched_hazard_edges > 0, "chain reuses slots");
+
+        // ...while independent branches schedule wide
+        let mut g2 = Graph::new();
+        let a = g2.input(&[4]);
+        let b = g2.input(&[4]);
+        let ta = g2.tanh(a);
+        let tb = g2.tanh(b);
+        let o1 = g2.sum_all(ta);
+        let o2 = g2.sum_all(tb);
+        let wide = Program::compile_with(&g2, &[o1, o2], PassConfig::NONE);
+        assert!(wide.stats.sched_max_width >= 2, "branches are independent");
+        assert!(wide.stats.sched_mean_width > 1.0);
+    }
+
+    #[test]
+    fn attach_optimizer_refreshes_the_schedule() {
+        let mut g = Graph::new();
+        let w = g.input(&[3]);
+        let x = g.input(&[3]);
+        let xw = g.mul(x, w);
+        let sq = g.mul(xw, xw);
+        let loss = g.sum_all(sq);
+        let gw = g.grad(loss, &[w])[0];
+        let resident = Program::compile(&g, &[loss, gw])
+            .attach_optimizer(&[w], UpdateRule::Sgd { lr: 0.1 });
+        // the schedule must cover exactly the (possibly grown) instruction
+        // list, or graph execution would claim stale indices
+        assert_eq!(resident.schedule.n_preds.len(), resident.instrs.len());
+        assert_eq!(resident.stats.sched_critical_path, resident.schedule.critical_path);
+        let spec = resident.schedule.spec();
+        assert_eq!(spec.n_nodes(), resident.instrs.len());
     }
 
     #[test]

@@ -39,7 +39,7 @@
 //! [`UpdateRule`]: crate::autodiff::UpdateRule
 
 use crate::autodiff::zcs_demo::Strategy;
-use crate::autodiff::{Executor, NodeId, Program, UpdateRule};
+use crate::autodiff::{Executor, NodeId, ProfileReport, Program, SchedMode, UpdateRule};
 use crate::coordinator::batch::{PdeBatch, PdeBatchSpec, PdeBatcher};
 use crate::hlostats::{analyze_program, ProgramReport};
 use crate::pde::residual::{
@@ -52,6 +52,7 @@ use crate::solvers::{BurgersSolver, KirchhoffSolver, ReactionDiffusionSolver};
 use crate::tensor::Tensor;
 use anyhow::{anyhow, bail, ensure, Result};
 use std::collections::HashMap;
+use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// The optimizer a native run applies each step.
@@ -132,6 +133,16 @@ pub struct NativeRunConfig {
     /// falls back to feeding weights per step and updating host-side --
     /// same trajectory bit for bit, more per-step traffic
     pub resident: bool,
+    /// instruction schedule: out-of-order graph claiming (the default)
+    /// or the strict serial loop; results are bit-identical either way
+    pub schedule: SchedMode,
+    /// overlap batch generation with step execution on a producer thread
+    /// (double-buffered; identical draw sequence, so trajectories
+    /// bit-match the synchronous loop)
+    pub pipeline: bool,
+    /// collect a per-opcode / per-wavefront wall-time profile
+    /// ([`NativeReport::profile`]); zero overhead when off
+    pub profile: bool,
 }
 
 impl Default for NativeRunConfig {
@@ -154,6 +165,9 @@ impl Default for NativeRunConfig {
             threads: 0,
             optimizer: Optimizer::Sgd,
             resident: true,
+            schedule: SchedMode::from_env(),
+            pipeline: false,
+            profile: false,
         }
     }
 }
@@ -198,6 +212,13 @@ pub struct NativeReport {
     /// bytes of executor-resident training state (weights + moments);
     /// 0 on the feed-based fallback path
     pub resident_state_bytes: u64,
+    /// the instruction schedule the run executed under
+    pub schedule: SchedMode,
+    /// whether batch generation overlapped execution on a producer thread
+    pub pipelined: bool,
+    /// per-opcode / per-wavefront profile, when requested
+    /// ([`NativeRunConfig::profile`])
+    pub profile: Option<ProfileReport>,
 }
 
 impl NativeReport {
@@ -346,7 +367,10 @@ impl NativeTrainer {
         } else {
             config.threads
         };
-        let mut exec = Executor::with_threads(threads);
+        let mut exec = Executor::with_threads(threads).with_sched(config.schedule);
+        if config.profile {
+            exec.enable_profiling();
+        }
         let resident = config.resident;
         let (weights, moments) = if resident {
             exec.bind_states(&program, weights);
@@ -451,129 +475,150 @@ impl NativeTrainer {
     /// loss is read back, so diverged state is already in the executor,
     /// whereas the fallback bails before touching its host weights.
     pub fn step(&mut self, batch: &PdeBatch) -> Result<(f64, f64, f64)> {
-        ensure!(
-            batch.feeds.len() == self.feeds.len(),
-            "batch has {} feeds, the step program wants {}",
-            batch.feeds.len(),
-            self.feeds.len()
-        );
-        // resolve the precomputed feed plan into program-input order -- no
-        // HashMap, no clones, just one reference per input, written into a
-        // buffer whose capacity persists across steps
-        let mut scratch = std::mem::take(&mut self.feed_scratch);
-        scratch.clear();
-        for src in &self.feed_plan {
-            let t: &Tensor = match *src {
-                FeedSrc::Weight(i) => &self.weights[i],
-                FeedSrc::Sensor => &batch.p,
-                FeedSrc::Feed(i) => {
-                    // batches arrive in registration order: positional fast
-                    // path, name search only if a producer reordered them
-                    let name = &self.feeds[i].0;
-                    match batch.feeds.get(i) {
-                        Some((n, t)) if n == name => t,
-                        _ => batch
-                            .feeds
-                            .iter()
-                            .find(|(n, _)| n == name)
-                            .map(|(_, t)| t)
-                            .ok_or_else(|| anyhow!("batch is missing feed {name:?}"))?,
-                    }
-                }
-                FeedSrc::Extra(i) => &self.extra_inputs[i].1,
-            };
-            scratch.push(t as *const Tensor);
-        }
-        let (loss, loss_pde, loss_bc, grads) = {
-            // SAFETY: `&Tensor` and `*const Tensor` have identical layout;
-            // every pointee (host weights, batch tensors, extras) outlives
-            // this block and none is mutated while borrowed -- the
-            // executor's resident state is disjoint from the feeds
-            let ins: &[&Tensor] = unsafe {
-                std::slice::from_raw_parts(scratch.as_ptr() as *const &Tensor, scratch.len())
-            };
-            if self.resident {
-                let mut out = [0.0f64; 3];
-                self.exec.run_scalars(&self.program, ins, &mut out);
-                (out[0], out[1], out[2], Vec::new())
-            } else {
-                let mut outs = self.exec.run_inputs(&self.program, ins);
-                let grads = outs.split_off(3);
-                (outs[0].data()[0], outs[1].data()[0], outs[2].data()[0], grads)
-            }
-        };
-        scratch.clear();
-        self.feed_scratch = scratch;
-        if !loss.is_finite() {
-            bail!("native loss diverged: {loss}");
-        }
-        if !self.resident {
-            // host-side update through the same kernels the resident
-            // update instructions run -- no `gw.scale(lr)` temporary
-            self.host_t += 1;
-            let lr = self.config.lr;
-            match self.config.optimizer {
-                Optimizer::Sgd => {
-                    for (w, gw) in self.weights.iter_mut().zip(&grads) {
-                        crate::tensor::kernels::sgd_update(w, gw, lr);
-                    }
-                }
-                Optimizer::Adam => {
-                    for ((w, (m, v)), gw) in
-                        self.weights.iter_mut().zip(self.moments.iter_mut()).zip(&grads)
-                    {
-                        crate::tensor::kernels::adam_update(
-                            w,
-                            m,
-                            v,
-                            gw,
-                            lr,
-                            Optimizer::BETA1,
-                            Optimizer::BETA2,
-                            Optimizer::EPS,
-                            self.host_t,
-                        );
-                    }
-                }
-            }
-        }
-        Ok((loss, loss_pde, loss_bc))
+        self.split().0.step(batch)
     }
 
-    /// Run the configured number of steps.
+    /// Split the trainer into the stepping engine and the batcher -- the
+    /// disjoint borrows that let [`NativeTrainer::run`]'s pipelined mode
+    /// fill batches on a producer thread while the main thread steps.
+    fn split(&mut self) -> (StepEngine<'_>, &mut PdeBatcher) {
+        let Self {
+            config,
+            program,
+            exec,
+            batcher,
+            weights,
+            moments,
+            host_t,
+            resident,
+            feeds,
+            extra_inputs,
+            feed_plan,
+            feed_scratch,
+            ..
+        } = self;
+        (
+            StepEngine {
+                program: &*program,
+                exec,
+                weights,
+                moments,
+                host_t,
+                resident: *resident,
+                lr: config.lr,
+                optimizer: config.optimizer,
+                feeds: feeds.as_slice(),
+                extra_inputs: extra_inputs.as_slice(),
+                feed_plan: feed_plan.as_slice(),
+                feed_scratch,
+            },
+            batcher,
+        )
+    }
+
+    /// Run the configured number of steps -- synchronously, or with batch
+    /// generation overlapped on a producer thread when
+    /// [`NativeRunConfig::pipeline`] is set.  The pipelined loop consumes
+    /// the identical batch sequence (one batcher, drawn in order, one
+    /// batch ahead at most), so both modes produce bit-identical
+    /// trajectories; `rust/tests/sched_exec.rs` pins this.
     pub fn run(&mut self) -> Result<NativeReport> {
+        let steps = self.config.steps;
+        let log_every = self.config.log_every.max(1);
+        let pipeline = self.config.pipeline;
         let mut curve = Vec::new();
         let mut input_time = Duration::ZERO;
         let mut step_time = Duration::ZERO;
         let mut last = (f64::NAN, f64::NAN, f64::NAN);
-        // one batch's buffers, refilled in place every step
-        let mut batch = PdeBatch::empty();
-        for it in 0..self.config.steps {
-            let t0 = Instant::now();
-            self.batcher.fill_batch(&mut batch);
-            input_time += t0.elapsed();
-            let t1 = Instant::now();
-            last = self.step(&batch)?;
-            step_time += t1.elapsed();
-            if (it + 1) % self.config.log_every.max(1) == 0 || it + 1 == self.config.steps {
-                curve.push(NativePoint {
-                    step: it + 1,
-                    loss: last.0,
-                    loss_pde: last.1,
-                    loss_bc: last.2,
-                });
+        {
+            let (mut engine, batcher) = self.split();
+            let log = |curve: &mut Vec<NativePoint>, it: usize, last: (f64, f64, f64)| {
+                if (it + 1) % log_every == 0 || it + 1 == steps {
+                    curve.push(NativePoint {
+                        step: it + 1,
+                        loss: last.0,
+                        loss_pde: last.1,
+                        loss_bc: last.2,
+                    });
+                }
+            };
+            if !pipeline {
+                // one batch's buffers, refilled in place every step
+                let mut batch = PdeBatch::empty();
+                for it in 0..steps {
+                    let t0 = Instant::now();
+                    batcher.fill_batch(&mut batch);
+                    input_time += t0.elapsed();
+                    let t1 = Instant::now();
+                    last = engine.step(&batch)?;
+                    step_time += t1.elapsed();
+                    log(&mut curve, it, last);
+                }
+            } else {
+                // double-buffered producer: two batches circulate, the
+                // producer fills draw t+1 while the engine steps draw t
+                let pipe = BatchPipe::new();
+                input_time = std::thread::scope(|s| -> Result<Duration> {
+                    // either side dying for any reason -- error return or
+                    // panic -- must close the pipe, or the other side
+                    // would block forever and the scope join would hang
+                    let _consumer_guard = PipeCloser(&pipe);
+                    let producer = s.spawn(|| {
+                        let _guard = PipeCloser(&pipe);
+                        let mut fill_time = Duration::ZERO;
+                        let mut batch = PdeBatch::empty();
+                        for _ in 0..steps {
+                            let t0 = Instant::now();
+                            batcher.fill_batch(&mut batch);
+                            fill_time += t0.elapsed();
+                            match pipe.exchange(batch) {
+                                Some(next) => batch = next,
+                                None => break, // consumer closed early
+                            }
+                        }
+                        fill_time
+                    });
+                    let mut consumed: Result<()> = Ok(());
+                    for it in 0..steps {
+                        let Some(batch) = pipe.take() else {
+                            consumed = Err(anyhow!("batch producer stopped early"));
+                            break;
+                        };
+                        let t1 = Instant::now();
+                        match engine.step(&batch) {
+                            Ok(losses) => last = losses,
+                            Err(e) => {
+                                consumed = Err(e);
+                                break;
+                            }
+                        }
+                        step_time += t1.elapsed();
+                        pipe.recycle(batch);
+                        log(&mut curve, it, last);
+                    }
+                    // unblock the producer whether we finished or errored
+                    pipe.close();
+                    let fill_time = producer
+                        .join()
+                        .map_err(|_| anyhow!("batch producer thread panicked"))?;
+                    consumed?;
+                    Ok(fill_time)
+                })?;
             }
         }
         Ok(NativeReport {
             curve,
             final_loss: last.0,
-            steps: self.config.steps,
+            steps,
             input_time,
             step_time,
             compile_time: self.compile_time,
             program: self.program_report(),
             optimizer: self.config.optimizer,
             resident_state_bytes: self.program.resident_state_bytes(),
+            schedule: self.exec.sched(),
+            pipelined: pipeline,
+            profile: self.exec.take_profile(),
         })
     }
 
@@ -663,6 +708,212 @@ impl NativeTrainer {
             n_functions: n_heldout,
             n_points: pts.len(),
         }))
+    }
+}
+
+/// The stepping half of a [`NativeTrainer`]: everything `step` needs
+/// except the batcher, split out ([`NativeTrainer::split`]) so the
+/// pipelined run can lend the batcher to a producer thread while this
+/// stays on the training thread.
+struct StepEngine<'a> {
+    program: &'a Program,
+    exec: &'a mut Executor,
+    weights: &'a mut Vec<Tensor>,
+    moments: &'a mut Vec<(Tensor, Tensor)>,
+    host_t: &'a mut u64,
+    resident: bool,
+    lr: f64,
+    optimizer: Optimizer,
+    feeds: &'a [(String, NodeId)],
+    extra_inputs: &'a [(NodeId, Tensor)],
+    feed_plan: &'a [FeedSrc],
+    feed_scratch: &'a mut Vec<*const Tensor>,
+}
+
+impl StepEngine<'_> {
+    /// One optimizer step on one batch (see [`NativeTrainer::step`]).
+    fn step(&mut self, batch: &PdeBatch) -> Result<(f64, f64, f64)> {
+        ensure!(
+            batch.feeds.len() == self.feeds.len(),
+            "batch has {} feeds, the step program wants {}",
+            batch.feeds.len(),
+            self.feeds.len()
+        );
+        // resolve the precomputed feed plan into program-input order -- no
+        // HashMap, no clones, just one reference per input, written into a
+        // buffer whose capacity persists across steps
+        let scratch = &mut *self.feed_scratch;
+        scratch.clear();
+        for src in self.feed_plan {
+            let t: &Tensor = match *src {
+                FeedSrc::Weight(i) => &self.weights[i],
+                FeedSrc::Sensor => &batch.p,
+                FeedSrc::Feed(i) => {
+                    // batches arrive in registration order: positional fast
+                    // path, name search only if a producer reordered them
+                    let name = &self.feeds[i].0;
+                    match batch.feeds.get(i) {
+                        Some((n, t)) if n == name => t,
+                        _ => batch
+                            .feeds
+                            .iter()
+                            .find(|(n, _)| n == name)
+                            .map(|(_, t)| t)
+                            .ok_or_else(|| anyhow!("batch is missing feed {name:?}"))?,
+                    }
+                }
+                FeedSrc::Extra(i) => &self.extra_inputs[i].1,
+            };
+            scratch.push(t as *const Tensor);
+        }
+        let (loss, loss_pde, loss_bc, grads) = {
+            // SAFETY: `&Tensor` and `*const Tensor` have identical layout;
+            // every pointee (host weights, batch tensors, extras) outlives
+            // this block and none is mutated while borrowed -- the
+            // executor's resident state is disjoint from the feeds
+            let ins: &[&Tensor] = unsafe {
+                std::slice::from_raw_parts(scratch.as_ptr() as *const &Tensor, scratch.len())
+            };
+            if self.resident {
+                let mut out = [0.0f64; 3];
+                self.exec.run_scalars(self.program, ins, &mut out);
+                (out[0], out[1], out[2], Vec::new())
+            } else {
+                let mut outs = self.exec.run_inputs(self.program, ins);
+                let grads = outs.split_off(3);
+                (outs[0].data()[0], outs[1].data()[0], outs[2].data()[0], grads)
+            }
+        };
+        self.feed_scratch.clear();
+        if !loss.is_finite() {
+            bail!("native loss diverged: {loss}");
+        }
+        if !self.resident {
+            // host-side update through the same kernels the resident
+            // update instructions run -- no `gw.scale(lr)` temporary
+            *self.host_t += 1;
+            let lr = self.lr;
+            match self.optimizer {
+                Optimizer::Sgd => {
+                    for (w, gw) in self.weights.iter_mut().zip(&grads) {
+                        crate::tensor::kernels::sgd_update(w, gw, lr);
+                    }
+                }
+                Optimizer::Adam => {
+                    for ((w, (m, v)), gw) in
+                        self.weights.iter_mut().zip(self.moments.iter_mut()).zip(&grads)
+                    {
+                        crate::tensor::kernels::adam_update(
+                            w,
+                            m,
+                            v,
+                            gw,
+                            lr,
+                            Optimizer::BETA1,
+                            Optimizer::BETA2,
+                            Optimizer::EPS,
+                            *self.host_t,
+                        );
+                    }
+                }
+            }
+        }
+        Ok((loss, loss_pde, loss_bc))
+    }
+}
+
+/// Rendezvous double-buffer between the batch producer thread and the
+/// training loop.  Two [`PdeBatch`]es circulate -- one being filled, one
+/// being stepped -- so the steady state allocates nothing, the producer
+/// runs at most one draw ahead, and the batch sequence is exactly the
+/// synchronous one (one batcher, drawn in order).
+struct BatchPipe {
+    state: Mutex<PipeState>,
+    cv: Condvar,
+}
+
+/// Closes a [`BatchPipe`] when dropped (scope exit or unwind), so neither
+/// side of the pipeline can block forever on a dead peer.
+struct PipeCloser<'p>(&'p BatchPipe);
+
+impl Drop for PipeCloser<'_> {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
+struct PipeState {
+    /// the next filled batch, in draw order
+    full: Option<PdeBatch>,
+    /// a consumed batch handed back for refilling (seeded with the spare
+    /// buffer so the producer starts one draw ahead)
+    empty: Option<PdeBatch>,
+    /// either side has hung up; all waits return immediately
+    closed: bool,
+}
+
+impl BatchPipe {
+    fn new() -> Self {
+        Self {
+            state: Mutex::new(PipeState {
+                full: None,
+                empty: Some(PdeBatch::empty()),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Producer: hand over a filled batch and receive a buffer to refill;
+    /// `None` once the consumer has closed the pipe.
+    fn exchange(&self, filled: PdeBatch) -> Option<PdeBatch> {
+        let mut st = self.state.lock().unwrap();
+        while st.full.is_some() && !st.closed {
+            st = self.cv.wait(st).unwrap();
+        }
+        if st.closed {
+            return None;
+        }
+        st.full = Some(filled);
+        self.cv.notify_all();
+        while st.empty.is_none() && !st.closed {
+            st = self.cv.wait(st).unwrap();
+        }
+        if st.closed {
+            return None;
+        }
+        st.empty.take()
+    }
+
+    /// Consumer: the next batch in draw order; `None` if the producer
+    /// hung up before delivering one.
+    fn take(&self) -> Option<PdeBatch> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(b) = st.full.take() {
+                self.cv.notify_all();
+                return Some(b);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Consumer: return a stepped batch for refilling.
+    fn recycle(&self, batch: PdeBatch) {
+        let mut st = self.state.lock().unwrap();
+        debug_assert!(st.empty.is_none(), "more than two batches in flight");
+        st.empty = Some(batch);
+        self.cv.notify_all();
+    }
+
+    /// Hang up (either side): every pending and future wait returns.
+    fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.cv.notify_all();
     }
 }
 

@@ -154,6 +154,23 @@ impl ProgramReport {
             s.resident_state_bytes as f64 / 1024.0
         ))
     }
+
+    /// One-line dependency-schedule summary: critical-path length,
+    /// available width, and the edge counts of the instruction DAG (see
+    /// [`crate::autodiff::Schedule`]).
+    pub fn schedule_summary(&self) -> String {
+        let s = &self.stats;
+        format!(
+            "critical path {} of {} instrs, width max {} mean {:.1}, \
+             {} true + {} hazard edges",
+            s.sched_critical_path,
+            s.instructions,
+            s.sched_max_width,
+            s.sched_mean_width,
+            s.sched_true_edges,
+            s.sched_hazard_edges
+        )
+    }
 }
 
 /// Analyse a compiled native program.
@@ -162,43 +179,20 @@ pub fn analyze_program(program: &crate::autodiff::Program) -> ProgramReport {
     let mut histogram = BTreeMap::new();
     let mut fused_micro = BTreeMap::new();
     for instr in &program.instrs {
-        let name = match &instr.op {
-            OpCode::Add => "add",
-            OpCode::Sub => "subtract",
-            OpCode::Mul => "multiply",
-            OpCode::ScaleBy => "scale-by",
-            OpCode::Scale(_) => "scale",
-            OpCode::Tanh => "tanh",
-            OpCode::Neg => "negate",
-            OpCode::Square => "square",
-            OpCode::Sin => "sine",
-            OpCode::Cos => "cosine",
-            OpCode::Reshape => "reshape",
-            OpCode::Broadcast => "broadcast",
-            OpCode::SumAll => "reduce-sum",
-            OpCode::SumAxis(0) => "reduce-sum-cols",
-            OpCode::SumAxis(_) => "reduce-sum-rows",
-            OpCode::MatMulNT => "dot-nt",
-            OpCode::MatMul => "dot",
-            OpCode::Transpose => "transpose",
+        match &instr.op {
             OpCode::Fused(kernel) => {
                 for op in &kernel.ops {
                     *fused_micro.entry(op.name().to_string()).or_insert(0) += 1;
                 }
-                "fused"
             }
             OpCode::MatMulFused(me) => {
                 for op in &me.epi.ops {
                     *fused_micro.entry(op.name().to_string()).or_insert(0) += 1;
                 }
-                if me.nt {
-                    "dot-nt-fused"
-                } else {
-                    "dot-fused"
-                }
             }
-        };
-        *histogram.entry(name.to_string()).or_insert(0) += 1;
+            _ => {}
+        }
+        *histogram.entry(instr.op.name().to_string()).or_insert(0) += 1;
     }
     for up in &program.updates {
         let name = match up.rule {

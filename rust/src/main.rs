@@ -89,6 +89,22 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
             "auto",
             "kernel threads (auto = ZCS_THREADS env, else 1); results are bit-identical",
         )
+        .opt(
+            "schedule",
+            "auto",
+            "serial | graph instruction schedule (auto = ZCS_SCHED env, else graph); \
+             results are bit-identical",
+        )
+        .switch(
+            "pipeline-batches",
+            "generate the next batch on a producer thread while the current step \
+             executes (identical draw sequence, bit-identical trajectory)",
+        )
+        .switch(
+            "profile",
+            "record wall time per opcode and scheduler wavefront, printing a top-k \
+             kernel table and worker occupancy (ZCS_PROFILE=1 also enables this)",
+        )
         .switch(
             "feed-weights",
             "feed weights per step and update host-side instead of keeping them \
@@ -128,6 +144,19 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
             .parse()
             .map_err(|e| anyhow!("invalid value {other:?} for --threads: {e}"))?,
     };
+    let schedule = match p.get("schedule") {
+        "auto" => zcs::autodiff::SchedMode::from_env(),
+        other => zcs::autodiff::SchedMode::parse(other).map_err(|e| anyhow!(e))?,
+    };
+    // ZCS_PROFILE follows the usual truthy convention: unset, empty and
+    // "0" mean off
+    let env_profile = std::env::var("ZCS_PROFILE")
+        .map(|v| {
+            let v = v.trim();
+            !v.is_empty() && v != "0"
+        })
+        .unwrap_or(false);
+    let profile = p.switch("profile") || env_profile;
     let config = NativeRunConfig {
         problem,
         strategy,
@@ -145,6 +174,9 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
         threads,
         optimizer,
         resident: !p.switch("feed-weights"),
+        schedule,
+        pipeline: p.switch("pipeline-batches"),
+        profile,
         ..NativeRunConfig::default()
     };
     println!(
@@ -162,6 +194,12 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
     println!("kernel threads: {}", trainer.threads());
     let report = trainer.run()?;
     let prog = &report.program;
+    println!(
+        "scheduling: {} ({}){}",
+        report.schedule.name(),
+        prog.schedule_summary(),
+        if report.pipelined { ", pipelined batches" } else { "" }
+    );
     println!(
         "step program: {} instructions from a {}-node tape \
          (CSE {}, folded {}, simplified {}; {} slots, peak {:.1} KiB)",
@@ -186,14 +224,51 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
         );
     }
     println!(
-        "\ntimings: inputs {:.2?}, steps {:.2?} ({:.3} s / 1000 batches, \
+        "\ntimings: inputs {:.2?}{}, steps {:.2?} ({:.3} s / 1000 batches, \
          {:.0} steps/s, optimizer {})",
         report.input_time,
+        if report.pipelined { " (overlapped)" } else { "" },
         report.step_time,
         report.sec_per_1000(),
         report.steps_per_sec(),
         report.optimizer.name()
     );
+    if let Some(profile) = &report.profile {
+        println!("\nprofile ({} runs, {:.1} ms wall):", profile.runs, profile.wall_ns as f64 / 1e6);
+        let mut table = Table::new(&["opcode", "calls", "total ms", "mean us", "% wall"]);
+        for (op, t) in profile.top_ops().into_iter().take(12) {
+            table.row(&[
+                op.to_string(),
+                t.count.to_string(),
+                format!("{:.2}", t.ns as f64 / 1e6),
+                format!("{:.2}", t.ns as f64 / 1e3 / t.count.max(1) as f64),
+                format!("{:.1}", t.ns as f64 / profile.wall_ns.max(1) as f64 * 100.0),
+            ]);
+        }
+        table.print();
+        let mut occ = String::new();
+        for o in profile.occupancy() {
+            if !occ.is_empty() {
+                occ.push(' ');
+            }
+            occ.push_str(&format!("{:.0}%", o * 100.0));
+        }
+        println!("worker occupancy: [{occ}]");
+        let mut busiest: Option<(usize, u64)> = None;
+        for (level, &ns) in profile.per_level.iter().enumerate() {
+            if busiest.is_none_or(|(_, b)| ns > b) {
+                busiest = Some((level, ns));
+            }
+        }
+        if let Some((level, ns)) = busiest {
+            println!(
+                "wavefronts: {} levels; busiest level {} at {:.2} ms",
+                profile.per_level.len(),
+                level,
+                ns as f64 / 1e6
+            );
+        }
+    }
     if p.switch("validate") {
         match trainer.validate(p.get_usize("heldout")?)? {
             Some(v) => println!(
@@ -460,7 +535,14 @@ fn native_problem_stats(problem: ProblemKind, m: usize, n: usize) -> Result<()> 
             .join(" ");
         let resident =
             report.resident_summary().unwrap_or_else(|| "no optimizer attached".to_string());
-        histograms.push((strat.name(), line, micro, report.fusion_summary(), resident));
+        histograms.push((
+            strat.name(),
+            line,
+            micro,
+            report.fusion_summary(),
+            resident,
+            report.schedule_summary(),
+        ));
     }
     println!(
         "resident step program for {} (M={m}, N={n}, {}):",
@@ -469,13 +551,14 @@ fn native_problem_stats(problem: ProblemKind, m: usize, n: usize) -> Result<()> 
     );
     table.print();
     println!("\nper-op instruction counts (fused column: ops>groups; mm-epi: matmul epilogues):");
-    for (name, line, micro, summary, resident) in histograms {
+    for (name, line, micro, summary, resident, sched) in histograms {
         println!("  {name:>9}: {line}");
         if !micro.is_empty() {
             println!("  {:>9}  inside fused: {micro}", "");
         }
         println!("  {:>9}  fusion: {summary}", "");
         println!("  {:>9}  resident: {resident}", "");
+        println!("  {:>9}  schedule: {sched}", "");
     }
     Ok(())
 }

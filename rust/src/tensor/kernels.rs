@@ -25,22 +25,7 @@
 //! instruction that last reads it has completed).
 
 use super::Tensor;
-use crate::util::pool::Pool;
-
-/// Minimum multiply-adds per matmul task; below this a row block is not
-/// worth shipping to another thread.  Unit tests shrink both minimums to
-/// a few elements so the pooled code paths genuinely cross threads even
-/// on tiny tensors (the production values would run them inline and the
-/// threaded==serial differential tests would prove nothing).
-#[cfg(not(test))]
-const MATMUL_MIN_FLOPS_PER_TASK: usize = 16 * 1024;
-#[cfg(test)]
-const MATMUL_MIN_FLOPS_PER_TASK: usize = 8;
-/// Minimum elements per task for the elementwise kernels/reductions.
-#[cfg(not(test))]
-const ELEMWISE_MIN_PER_TASK: usize = 4 * 1024;
-#[cfg(test)]
-const ELEMWISE_MIN_PER_TASK: usize = 2;
+use crate::util::pool::{grain, Pool};
 
 /// Reset `out` to `shape` with all-zero contents, reusing its allocation.
 fn zero_fill(out: &mut Tensor, shape: &[usize]) {
@@ -158,7 +143,7 @@ pub fn sum_axis_into_pool(a: &Tensor, axis: usize, out: &mut Tensor, pool: &Pool
     let (m, n) = (a.shape[0], a.shape[1]);
     if axis == 1 {
         shape_only(out, &[m, 1]);
-        let min_rows = (ELEMWISE_MIN_PER_TASK / n.max(1)).max(1);
+        let min_rows = grain::elemwise_rows(n);
         let data = &a.data;
         pool.par_rows(m, 1, &mut out.data, min_rows, |range, block| {
             for (off, o) in block.iter_mut().enumerate() {
@@ -168,7 +153,7 @@ pub fn sum_axis_into_pool(a: &Tensor, axis: usize, out: &mut Tensor, pool: &Pool
         });
     } else {
         zero_fill(out, &[1, n]);
-        let min_cols = (ELEMWISE_MIN_PER_TASK / m.max(1)).max(1);
+        let min_cols = grain::elemwise_rows(m);
         let data = &a.data;
         pool.par_rows(n, 1, &mut out.data, min_cols, |range, block| {
             for i in 0..m {
@@ -215,7 +200,7 @@ pub fn matmul_into_pool(a: &Tensor, b: &Tensor, out: &mut Tensor, pool: &Pool) {
     let (k2, n) = (b.shape[0], b.shape[1]);
     assert_eq!(k, k2, "matmul_into {:?} @ {:?}", a.shape, b.shape);
     zero_fill(out, &[m, n]);
-    let min_rows = (MATMUL_MIN_FLOPS_PER_TASK / (k * n).max(1)).max(1);
+    let min_rows = grain::matmul_rows(k, n);
     let (a_data, b_data) = (&a.data, &b.data);
     pool.par_rows(m, n, &mut out.data, min_rows, |range, block| {
         matmul_rows(a_data, b_data, range, k, n, block);
@@ -275,7 +260,7 @@ pub fn matmul_nt_into_pool(a: &Tensor, b: &Tensor, out: &mut Tensor, pool: &Pool
     let (n, k2) = (b.shape[0], b.shape[1]);
     assert_eq!(k, k2, "matmul_nt_into {:?} @ {:?}^T", a.shape, b.shape);
     shape_only(out, &[m, n]);
-    let min_rows = (MATMUL_MIN_FLOPS_PER_TASK / (k * n).max(1)).max(1);
+    let min_rows = grain::matmul_rows(k, n);
     let (a_data, b_data) = (&a.data, &b.data);
     pool.par_rows(m, n, &mut out.data, min_rows, |range, block| {
         matmul_nt_rows(a_data, b_data, range, k, n, block);
@@ -527,7 +512,7 @@ pub fn fused_into(
         regs_scratch.resize(kernel.n_regs(), 0.0);
         fused_block(kernel, exts, 0, &mut out.data, regs_scratch);
     } else {
-        pool.par_rows(len, 1, &mut out.data, ELEMWISE_MIN_PER_TASK, |range, block| {
+        pool.par_rows(len, 1, &mut out.data, grain::elemwise_rows(1), |range, block| {
             let mut regs = vec![0.0f64; kernel.n_regs()];
             fused_block(kernel, exts, range.start, block, &mut regs);
         });
@@ -622,7 +607,7 @@ pub fn matmul_fused_into_pool(
     assert_eq!(k, k2, "matmul_fused_into {:?} @ {:?}", a.shape, b.shape);
     check_epilogue_exts(epi, exts, m * n);
     zero_fill(out, &[m, n]);
-    let min_rows = (MATMUL_MIN_FLOPS_PER_TASK / (k * n).max(1)).max(1);
+    let min_rows = grain::matmul_rows(k, n);
     let (a_data, b_data) = (&a.data, &b.data);
     if pool.threads() == 1 {
         regs_scratch.clear();
@@ -664,7 +649,7 @@ pub fn matmul_nt_fused_into_pool(
     assert_eq!(k, k2, "matmul_nt_fused_into {:?} @ {:?}^T", a.shape, b.shape);
     check_epilogue_exts(epi, exts, m * n);
     shape_only(out, &[m, n]);
-    let min_rows = (MATMUL_MIN_FLOPS_PER_TASK / (k * n).max(1)).max(1);
+    let min_rows = grain::matmul_rows(k, n);
     let (a_data, b_data) = (&a.data, &b.data);
     if pool.threads() == 1 {
         regs_scratch.clear();

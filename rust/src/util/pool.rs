@@ -21,13 +21,62 @@
 //!    the job after all tasks are claimed, in which case it executes
 //!    nothing (see the `SAFETY` comment in [`Pool::run`]).
 //!
+//! The pool has two dispatch modes:
+//!
+//! * **Fork-join** ([`Pool::run`] / [`Pool::par_rows`]): one data-parallel
+//!   job at a time, split into disjoint tasks, with an implicit barrier when
+//!   `run` returns.  This is what individual kernels use.
+//! * **Ready-queue** ([`Pool::run_graph`]): a whole dependency DAG of nodes
+//!   (compiled-program instructions) is handed over at once; workers
+//!   atomically claim nodes whose predecessors have all retired, execute
+//!   them inline, and unlock their successors -- independent nodes overlap
+//!   instead of paying a barrier per node.  A node that is itself a heavy
+//!   row-split kernel still calls [`Pool::run`], which detects the graph
+//!   context and publishes its row blocks to a *help list* that idle graph
+//!   workers drain, so large matmuls keep their intra-kernel parallelism.
+//!
 //! A `Pool` with one thread (the default) spawns no workers and runs
 //! everything inline -- `Pool::serial()` is free to construct, so serial
 //! kernel wrappers can share the pooled code path.
 
+use std::cell::RefCell;
+use std::collections::BinaryHeap;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+
+/// Shared per-task minimum grain sizes for every data-parallel dispatch --
+/// the row-split kernels in [`crate::tensor::kernels`] and the ready-queue
+/// help protocol all size their tasks from here, so "is this worth another
+/// thread?" is answered once, not per call site.  Unit tests shrink the
+/// minimums to a few elements so the pooled code paths genuinely cross
+/// threads even on tiny tensors (the production values would run them
+/// inline and the threaded == serial differential tests would prove
+/// nothing).
+pub mod grain {
+    /// Minimum multiply-adds per matmul task; below this a row block is
+    /// not worth shipping to another thread.
+    #[cfg(not(test))]
+    pub const MATMUL_FLOPS_PER_TASK: usize = 16 * 1024;
+    #[cfg(test)]
+    pub const MATMUL_FLOPS_PER_TASK: usize = 8;
+    /// Minimum elements per task for elementwise kernels and reductions.
+    #[cfg(not(test))]
+    pub const ELEMWISE_PER_TASK: usize = 4 * 1024;
+    #[cfg(test)]
+    pub const ELEMWISE_PER_TASK: usize = 2;
+
+    /// Minimum output rows per task for an `(m, k) @ (k, n)`-shaped matmul.
+    pub fn matmul_rows(k: usize, n: usize) -> usize {
+        (MATMUL_FLOPS_PER_TASK / (k * n).max(1)).max(1)
+    }
+
+    /// Minimum rows per task for an elementwise pass / reduction whose
+    /// rows hold `row_len` elements each.
+    pub fn elemwise_rows(row_len: usize) -> usize {
+        (ELEMWISE_PER_TASK / row_len.max(1)).max(1)
+    }
+}
 
 /// First panic payload captured from a task (worker or submitter side).
 type PanicSlot = Arc<Mutex<Option<Box<dyn std::any::Any + Send>>>>;
@@ -79,6 +128,208 @@ fn drain_tasks(
             }
         }
         done.fetch_add(1, Ordering::Release);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ready-queue (graph) mode
+// ---------------------------------------------------------------------------
+
+/// Borrowed description of a dependency DAG for [`Pool::run_graph`]:
+/// per-node predecessor counts, CSR successor lists and a static claim
+/// priority (higher first; typically critical-path length).
+#[derive(Clone, Copy)]
+pub struct GraphSpec<'a> {
+    /// predecessor count per node
+    pub n_preds: &'a [u32],
+    /// flattened successor lists, indexed by [`GraphSpec::succ_offsets`]
+    pub succs: &'a [u32],
+    /// `succs[succ_offsets[i]..succ_offsets[i + 1]]` are node `i`'s
+    /// successors; length `n_nodes + 1`
+    pub succ_offsets: &'a [u32],
+    /// static scheduling priority per node (higher claims first)
+    pub priority: &'a [u64],
+}
+
+impl GraphSpec<'_> {
+    pub fn n_nodes(&self) -> usize {
+        self.n_preds.len()
+    }
+
+    fn succs_of(&self, i: u32) -> &[u32] {
+        let lo = self.succ_offsets[i as usize] as usize;
+        let hi = self.succ_offsets[i as usize + 1] as usize;
+        &self.succs[lo..hi]
+    }
+}
+
+/// Shared state of one in-flight [`Pool::run_graph`] call.
+struct GraphCtx {
+    q: Mutex<GraphQueue>,
+    /// graph workers park here when no node is ready and no help task is
+    /// claimable; notified on node pushes, help publishes and completion
+    cv: Condvar,
+    /// outstanding predecessor count per node; a node is claimable when
+    /// its counter hits zero
+    pending: Vec<AtomicU32>,
+    /// nodes fully executed so far; `retired == n` terminates the run
+    retired: AtomicUsize,
+    n: usize,
+    /// set when a node panicked: workers drain out instead of hanging
+    abort: AtomicBool,
+}
+
+struct GraphQueue {
+    /// ready nodes, keyed by priority (max-heap)
+    heap: BinaryHeap<(u64, u32)>,
+    /// row-split jobs published by heavy kernels running on graph workers
+    /// (see [`GraphCtx::run_nested`]); idle workers claim tasks from here
+    help: Vec<Job>,
+}
+
+thread_local! {
+    /// The graph run this thread is currently a worker of, if any --
+    /// consulted by [`Pool::run`] to route nested row-split jobs to the
+    /// graph's help list instead of the (busy) parked-worker protocol.
+    static GRAPH_CTX: RefCell<Option<Arc<GraphCtx>>> = const { RefCell::new(None) };
+}
+
+/// Clears the thread-local graph context on scope exit (including panics).
+struct GraphCtxGuard;
+
+impl GraphCtxGuard {
+    fn set(ctx: Arc<GraphCtx>) -> GraphCtxGuard {
+        GRAPH_CTX.with(|g| *g.borrow_mut() = Some(ctx));
+        GraphCtxGuard
+    }
+}
+
+impl Drop for GraphCtxGuard {
+    fn drop(&mut self) {
+        let _ = GRAPH_CTX.try_with(|g| *g.borrow_mut() = None);
+    }
+}
+
+impl GraphCtx {
+    /// A nested fork-join job submitted by a node running on a graph
+    /// worker: publish the tasks to the help list (idle graph workers
+    /// claim them), participate, and spin out the stragglers.  The erased
+    /// borrow is dead before return for the same reason as in
+    /// [`Pool::run`]: every claimed task has finished, and late observers
+    /// claim indices `>= n_tasks`.
+    fn run_nested(&self, n_tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        // SAFETY: as in `Pool::run` -- the borrow is only dereferenced for
+        // claimed task indices, all of which finish before this returns.
+        let f_static: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+        };
+        let next = Arc::new(AtomicUsize::new(0));
+        let done = Arc::new(AtomicUsize::new(0));
+        let panic_slot: PanicSlot = Arc::new(Mutex::new(None));
+        {
+            let mut q = self.q.lock().unwrap();
+            q.help.push(Job {
+                f: f_static,
+                next: Arc::clone(&next),
+                done: Arc::clone(&done),
+                panic: Arc::clone(&panic_slot),
+                n_tasks,
+            });
+            self.cv.notify_all();
+        }
+        drain_tasks(f, &next, &done, &panic_slot, n_tasks);
+        // stragglers hold at most one row block each: spin briefly
+        let mut spins = 0u32;
+        while done.load(Ordering::Acquire) < n_tasks {
+            spins = spins.wrapping_add(1);
+            if spins % 64 == 0 {
+                std::thread::yield_now();
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        {
+            let mut q = self.q.lock().unwrap();
+            q.help.retain(|j| !Arc::ptr_eq(&j.next, &next));
+        }
+        if let Some(payload) = panic_slot.lock().unwrap().take() {
+            resume_unwind(payload);
+        }
+    }
+}
+
+/// One graph worker: claim ready nodes (preferring the just-unlocked
+/// highest-priority successor, which skips the queue entirely for chain
+/// sections), execute them, retire them, and help heavy kernels while
+/// idle.
+fn graph_worker_loop(
+    ctx: &GraphCtx,
+    spec: &GraphSpec<'_>,
+    node: &(dyn Fn(u32, usize) + Sync),
+    w: usize,
+) {
+    let mut extra: Vec<u32> = Vec::new();
+    let mut next: Option<u32> = None;
+    'outer: loop {
+        let i = match next.take() {
+            Some(i) => i,
+            None => {
+                let mut q = ctx.q.lock().unwrap();
+                loop {
+                    if ctx.abort.load(Ordering::Relaxed)
+                        || ctx.retired.load(Ordering::Acquire) >= ctx.n
+                    {
+                        break 'outer;
+                    }
+                    if let Some((_, i)) = q.heap.pop() {
+                        break i;
+                    }
+                    let claimable = q
+                        .help
+                        .iter()
+                        .find(|j| j.next.load(Ordering::Relaxed) < j.n_tasks)
+                        .cloned();
+                    if let Some(job) = claimable {
+                        drop(q);
+                        drain_tasks(job.f, &job.next, &job.done, &job.panic, job.n_tasks);
+                        q = ctx.q.lock().unwrap();
+                        continue;
+                    }
+                    q = ctx.cv.wait(q).unwrap();
+                }
+            }
+        };
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(|| node(i, w))) {
+            // wake everyone so the run drains out, then let the worker-task
+            // machinery capture the payload and re-raise it on the submitter
+            ctx.abort.store(true, Ordering::Relaxed);
+            let _q = ctx.q.lock().unwrap();
+            ctx.cv.notify_all();
+            drop(_q);
+            resume_unwind(payload);
+        }
+        // retire: unlock successors, keeping the best one for ourselves
+        for &s in spec.succs_of(i) {
+            if ctx.pending[s as usize].fetch_sub(1, Ordering::AcqRel) == 1 {
+                match next {
+                    None => next = Some(s),
+                    Some(cur) if spec.priority[s as usize] > spec.priority[cur as usize] => {
+                        extra.push(cur);
+                        next = Some(s);
+                    }
+                    Some(_) => extra.push(s),
+                }
+            }
+        }
+        let retired_now = ctx.retired.fetch_add(1, Ordering::AcqRel) + 1;
+        if !extra.is_empty() || retired_now == ctx.n {
+            let mut q = ctx.q.lock().unwrap();
+            for &e in &extra {
+                q.heap.push((spec.priority[e as usize], e));
+            }
+            extra.clear();
+            ctx.cv.notify_all();
+        }
     }
 }
 
@@ -153,6 +404,13 @@ impl Pool {
             }
             return;
         }
+        // a nested job from inside a graph worker: the parked-worker
+        // protocol is busy running the graph loop, so publish the tasks to
+        // the graph's help list where idle workers claim them
+        if let Some(ctx) = GRAPH_CTX.with(|g| g.borrow().clone()) {
+            ctx.run_nested(n_tasks, f);
+            return;
+        }
         // SAFETY: the borrow's lifetime is erased to 'static so it can
         // reach the persistent workers, but it is only dereferenced for
         // task indices claimed from `next` while they are < n_tasks.  We
@@ -193,6 +451,81 @@ impl Pool {
         if let Some(payload) = panic_slot.lock().unwrap().take() {
             resume_unwind(payload);
         }
+    }
+
+    /// Execute a dependency DAG of nodes over the pool in ready-queue
+    /// mode: `node(i, worker)` is called exactly once per node `i`, only
+    /// after all of `i`'s predecessors have returned, with `worker` in
+    /// `0..threads()` identifying the claiming worker (distinct
+    /// concurrently-running nodes always see distinct worker indices).
+    /// Independent nodes run concurrently with no barrier between them;
+    /// claim order follows `spec.priority` (highest first) but is
+    /// otherwise unspecified -- callers must make any interleaving of
+    /// independent nodes valid (the compiler's hazard edges do exactly
+    /// that for program instructions).
+    ///
+    /// A node may call [`Pool::run`] / [`Pool::par_rows`] (heavy kernels
+    /// row-splitting); those tasks are offered to idle graph workers.  A
+    /// node must not call `run_graph` recursively.  `spec` must be acyclic
+    /// with every edge's endpoints in range; a cycle deadlocks the run.
+    ///
+    /// Panics in `node` propagate to the caller after the run drains.
+    pub fn run_graph(&self, spec: &GraphSpec<'_>, node: &(dyn Fn(u32, usize) + Sync)) {
+        let n = spec.n_nodes();
+        assert_eq!(spec.succ_offsets.len(), n + 1, "run_graph offsets length");
+        assert_eq!(spec.priority.len(), n, "run_graph priority length");
+        if n == 0 {
+            return;
+        }
+        if self.shared.is_none() {
+            // serial pool: claim ready nodes in priority order inline
+            let mut pending: Vec<u32> = spec.n_preds.to_vec();
+            let mut heap: BinaryHeap<(u64, u32)> = BinaryHeap::new();
+            for (i, &p) in pending.iter().enumerate() {
+                if p == 0 {
+                    heap.push((spec.priority[i], i as u32));
+                }
+            }
+            let mut ran = 0usize;
+            while let Some((_, i)) = heap.pop() {
+                node(i, 0);
+                ran += 1;
+                for &s in spec.succs_of(i) {
+                    pending[s as usize] -= 1;
+                    if pending[s as usize] == 0 {
+                        heap.push((spec.priority[s as usize], s));
+                    }
+                }
+            }
+            assert_eq!(ran, n, "run_graph: dependency cycle");
+            return;
+        }
+        let ctx = Arc::new(GraphCtx {
+            q: Mutex::new(GraphQueue { heap: BinaryHeap::new(), help: Vec::new() }),
+            cv: Condvar::new(),
+            pending: spec.n_preds.iter().map(|&p| AtomicU32::new(p)).collect(),
+            retired: AtomicUsize::new(0),
+            n,
+            abort: AtomicBool::new(false),
+        });
+        {
+            let mut q = ctx.q.lock().unwrap();
+            for (i, &p) in spec.n_preds.iter().enumerate() {
+                if p == 0 {
+                    q.heap.push((spec.priority[i], i as u32));
+                }
+            }
+        }
+        // every pool thread becomes a graph worker; panics from nodes are
+        // captured by the worker-task machinery and re-raised here by `run`
+        self.run(self.threads, &|w| {
+            let _guard = GraphCtxGuard::set(Arc::clone(&ctx));
+            graph_worker_loop(&ctx, spec, node, w);
+        });
+        assert!(
+            ctx.retired.load(Ordering::Acquire) == n || ctx.abort.load(Ordering::Relaxed),
+            "run_graph: workers exited with unretired nodes (dependency cycle?)"
+        );
     }
 
     /// Split `out` (a `rows x row_len` row-major buffer) into contiguous
@@ -399,6 +732,151 @@ mod tests {
             hits.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(hits.load(Ordering::Relaxed), 4);
+    }
+
+    /// Build a CSR spec from explicit edge lists (pred -> succ).
+    fn spec_from_edges(n: usize, edges: &[(u32, u32)]) -> (Vec<u32>, Vec<u32>, Vec<u32>, Vec<u64>) {
+        let mut n_preds = vec![0u32; n];
+        let mut succ_offsets = vec![0u32; n + 1];
+        for &(from, to) in edges {
+            n_preds[to as usize] += 1;
+            succ_offsets[from as usize + 1] += 1;
+        }
+        for i in 0..n {
+            succ_offsets[i + 1] += succ_offsets[i];
+        }
+        let mut cursor: Vec<u32> = succ_offsets[..n].to_vec();
+        let mut succs = vec![0u32; edges.len()];
+        for &(from, to) in edges {
+            succs[cursor[from as usize] as usize] = to;
+            cursor[from as usize] += 1;
+        }
+        (n_preds, succs, succ_offsets, vec![1; n])
+    }
+
+    #[test]
+    fn run_graph_respects_dependencies_and_runs_every_node_once() {
+        // diamond with a tail: 0 -> {1, 2} -> 3 -> 4
+        let edges = [(0u32, 1u32), (0, 2), (1, 3), (2, 3), (3, 4)];
+        for threads in [1usize, 2, 4] {
+            let pool = Pool::new(threads);
+            let (n_preds, succs, succ_offsets, priority) = spec_from_edges(5, &edges);
+            let spec = GraphSpec {
+                n_preds: &n_preds,
+                succs: &succs,
+                succ_offsets: &succ_offsets,
+                priority: &priority,
+            };
+            let order = Mutex::new(Vec::new());
+            let runs: Vec<AtomicUsize> = (0..5).map(|_| AtomicUsize::new(0)).collect();
+            pool.run_graph(&spec, &|i, w| {
+                assert!(w < threads, "worker index out of range");
+                runs[i as usize].fetch_add(1, Ordering::Relaxed);
+                order.lock().unwrap().push(i);
+            });
+            assert!(runs.iter().all(|r| r.load(Ordering::Relaxed) == 1), "{threads} threads");
+            let order = order.lock().unwrap();
+            let pos = |n: u32| order.iter().position(|&x| x == n).unwrap();
+            for &(from, to) in &edges {
+                assert!(pos(from) < pos(to), "{threads} threads: {from} before {to}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_graph_prefers_higher_priority_ready_nodes() {
+        // serial pool: claim order is deterministic, priority-descending
+        // among simultaneously-ready nodes
+        let pool = Pool::serial();
+        let (n_preds, succs, succ_offsets, _) = spec_from_edges(3, &[]);
+        let priority = vec![5u64, 50, 1];
+        let spec = GraphSpec {
+            n_preds: &n_preds,
+            succs: &succs,
+            succ_offsets: &succ_offsets,
+            priority: &priority,
+        };
+        let order = Mutex::new(Vec::new());
+        pool.run_graph(&spec, &|i, _| order.lock().unwrap().push(i));
+        assert_eq!(*order.lock().unwrap(), vec![1, 0, 2]);
+    }
+
+    #[test]
+    fn run_graph_nodes_can_fork_join_through_the_pool() {
+        // a node row-splits through Pool::run while other nodes are in
+        // flight: the nested tasks go through the help list
+        let pool = Pool::new(4);
+        let n = 6usize;
+        let (n_preds, succs, succ_offsets, priority) = spec_from_edges(n, &[(0, 5)]);
+        let spec = GraphSpec {
+            n_preds: &n_preds,
+            succs: &succs,
+            succ_offsets: &succ_offsets,
+            priority: &priority,
+        };
+        let sums: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        pool.run_graph(&spec, &|i, _| {
+            let slot = &sums[i as usize];
+            pool.run(8, &|t| {
+                slot.fetch_add(t + 1, Ordering::Relaxed);
+            });
+        });
+        for (i, s) in sums.iter().enumerate() {
+            assert_eq!(s.load(Ordering::Relaxed), 36, "node {i}");
+        }
+    }
+
+    #[test]
+    fn run_graph_panics_propagate_without_hanging() {
+        let pool = Pool::new(3);
+        let (n_preds, succs, succ_offsets, priority) = spec_from_edges(8, &[(0, 1), (1, 2)]);
+        let spec = GraphSpec {
+            n_preds: &n_preds,
+            succs: &succs,
+            succ_offsets: &succ_offsets,
+            priority: &priority,
+        };
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_graph(&spec, &|i, _| {
+                if i == 1 {
+                    panic!("graph boom");
+                }
+            });
+        }));
+        assert!(outcome.is_err(), "panic should reach the submitter");
+        // the pool survives: both modes still work
+        let hits = AtomicUsize::new(0);
+        pool.run(4, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 4);
+        let (n_preds, succs, succ_offsets, priority) = spec_from_edges(3, &[]);
+        let spec = GraphSpec {
+            n_preds: &n_preds,
+            succs: &succs,
+            succ_offsets: &succ_offsets,
+            priority: &priority,
+        };
+        let ran = AtomicUsize::new(0);
+        pool.run_graph(&spec, &|_, _| {
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn run_graph_empty_graph_is_a_noop() {
+        let pool = Pool::new(2);
+        let spec = GraphSpec { n_preds: &[], succs: &[], succ_offsets: &[0], priority: &[] };
+        pool.run_graph(&spec, &|_, _| panic!("no nodes"));
+    }
+
+    #[test]
+    fn grain_minimums_scale_with_row_length() {
+        assert_eq!(grain::matmul_rows(1, 1), grain::MATMUL_FLOPS_PER_TASK);
+        assert!(grain::matmul_rows(1 << 20, 1 << 20) >= 1);
+        assert_eq!(grain::elemwise_rows(1), grain::ELEMWISE_PER_TASK);
+        assert!(grain::elemwise_rows(usize::MAX) >= 1);
     }
 
     #[test]

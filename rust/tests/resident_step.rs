@@ -105,6 +105,7 @@ fn config(
         threads: 1,
         optimizer,
         resident,
+        ..NativeRunConfig::default()
     }
 }
 

@@ -1,0 +1,325 @@
+//! Differential tests for the out-of-order executor and the batch
+//! pipeline: scheduling is a *bit-exact* no-op semantically.
+//!
+//! * graph-scheduled == serial to `==` for every native problem x
+//!   strategy step program, plain and with each optimizer attached
+//!   (resident), at 1/2/4 threads;
+//! * a synthetic hazard-stress program whose arena slots are aggressively
+//!   reused across interleaved chains stays bit-exact over repeated
+//!   out-of-order runs;
+//! * pipelined-batch training bit-matches the synchronous loop (losses
+//!   and final weights), alone and combined with graph scheduling.
+
+use std::collections::HashMap;
+use zcs::autodiff::{
+    Executor, Graph, NodeId, PassConfig, Program, SchedMode, Strategy, UpdateRule,
+};
+use zcs::coordinator::batch::{PdeBatch, PdeBatchSpec, PdeBatcher};
+use zcs::coordinator::native::{NativeRunConfig, NativeTrainer, Optimizer};
+use zcs::pde::residual::{build_training_problem, init_problem_weights, BlockSizes, BuiltProblem};
+use zcs::pde::ProblemKind;
+use zcs::rng::Pcg64;
+use zcs::tensor::Tensor;
+
+const NATIVE_PROBLEMS: [ProblemKind; 4] = [
+    ProblemKind::Antiderivative,
+    ProblemKind::ReactionDiffusion,
+    ProblemKind::Burgers,
+    ProblemKind::Kirchhoff,
+];
+
+fn q_for(kind: ProblemKind) -> usize {
+    if kind == ProblemKind::Kirchhoff {
+        9
+    } else {
+        5
+    }
+}
+
+fn spec_for(kind: ProblemKind) -> PdeBatchSpec {
+    PdeBatchSpec { m: 2, n_in: 6, n_bc: 4, q: q_for(kind), bank_size: 8, bank_grid: 32 }
+}
+
+/// Feed map for one step program: weights + sensors + named feeds + the
+/// strategy's constant extras.
+fn feed_map<'a>(
+    built: &'a BuiltProblem,
+    weights: &'a [Tensor],
+    batch: &'a PdeBatch,
+) -> HashMap<NodeId, &'a Tensor> {
+    let mut inputs: HashMap<NodeId, &Tensor> = HashMap::new();
+    for (id, w) in built.weight_ids.iter().zip(weights) {
+        inputs.insert(*id, w);
+    }
+    inputs.insert(built.p, &batch.p);
+    for (name, node) in &built.feeds {
+        let t = &batch
+            .feeds
+            .iter()
+            .find(|(n, _)| n == name)
+            .unwrap_or_else(|| panic!("batch is missing feed {name}"))
+            .1;
+        inputs.insert(*node, t);
+    }
+    for (id, t) in &built.extra_inputs {
+        inputs.insert(*id, t);
+    }
+    inputs
+}
+
+#[test]
+fn graph_schedule_bit_matches_serial_for_every_problem_and_strategy() {
+    for kind in NATIVE_PROBLEMS {
+        let spec = spec_for(kind);
+        let sizes = BlockSizes { n_in: spec.n_in, n_bc: spec.n_bc };
+        for strategy in Strategy::ALL {
+            let built =
+                build_training_problem(kind, strategy, spec.m, spec.q, 8, 4, sizes).unwrap();
+            let program = Program::compile(&built.graph, &built.outputs);
+            assert_eq!(
+                program.schedule.n_preds.len(),
+                program.instrs.len(),
+                "{kind:?}/{strategy:?}: schedule must cover the program"
+            );
+            let weights = init_problem_weights(&built, 7);
+            let mut batcher = PdeBatcher::new(kind, spec, &mut Pcg64::seeded(5)).unwrap();
+            let batch = batcher.next_batch();
+            let inputs = feed_map(&built, &weights, &batch);
+            let serial =
+                Executor::with_threads(1).with_sched(SchedMode::Serial).run_ref(&program, &inputs);
+            for threads in [1usize, 2, 4] {
+                let mut exec = Executor::with_threads(threads).with_sched(SchedMode::Graph);
+                let got = exec.run_ref(&program, &inputs);
+                assert_eq!(serial, got, "{kind:?}/{strategy:?} graph @ {threads} threads");
+                // and again on the warm executor (arena reuse across runs)
+                let again = exec.run_ref(&program, &inputs);
+                assert_eq!(serial, again, "{kind:?}/{strategy:?} rerun @ {threads} threads");
+            }
+        }
+    }
+}
+
+#[test]
+fn graph_schedule_bit_matches_serial_for_resident_optimizer_programs() {
+    for kind in NATIVE_PROBLEMS {
+        let spec = spec_for(kind);
+        let sizes = BlockSizes { n_in: spec.n_in, n_bc: spec.n_bc };
+        for strategy in Strategy::ALL {
+            for optimizer in [Optimizer::Sgd, Optimizer::Adam] {
+                let built =
+                    build_training_problem(kind, strategy, spec.m, spec.q, 8, 4, sizes).unwrap();
+                let rule = match optimizer {
+                    Optimizer::Sgd => UpdateRule::Sgd { lr: 5e-3 },
+                    Optimizer::Adam => UpdateRule::Adam {
+                        lr: 5e-3,
+                        beta1: Optimizer::BETA1,
+                        beta2: Optimizer::BETA2,
+                        eps: Optimizer::EPS,
+                    },
+                };
+                let resident = Program::compile(&built.graph, &built.outputs)
+                    .attach_optimizer(&built.weight_ids, rule);
+                assert_eq!(resident.schedule.n_preds.len(), resident.instrs.len());
+                let weights = init_problem_weights(&built, 13);
+                let mut batcher = PdeBatcher::new(kind, spec, &mut Pcg64::seeded(17)).unwrap();
+                let batch = batcher.next_batch();
+                // resident inputs are batch data only, in program order
+                let by_node = feed_map(&built, &[], &batch);
+                let ins: Vec<&Tensor> = resident.inputs.iter().map(|id| by_node[id]).collect();
+
+                let mut serial = Executor::with_threads(1).with_sched(SchedMode::Serial);
+                serial.bind_states(&resident, weights.clone());
+                let mut graphs: Vec<Executor> = [1usize, 2, 4]
+                    .into_iter()
+                    .map(|threads| {
+                        let mut e = Executor::with_threads(threads).with_sched(SchedMode::Graph);
+                        e.bind_states(&resident, weights.clone());
+                        e
+                    })
+                    .collect();
+                // several steps on a frozen batch: state evolves in place,
+                // so any schedule divergence compounds and must not appear
+                for step in 0..3 {
+                    let mut want = vec![0.0; resident.outputs.len()];
+                    serial.run_scalars(&resident, &ins, &mut want);
+                    for (gi, exec) in graphs.iter_mut().enumerate() {
+                        let mut got = vec![0.0; resident.outputs.len()];
+                        exec.run_scalars(&resident, &ins, &mut got);
+                        assert_eq!(
+                            want,
+                            got,
+                            "{kind:?}/{strategy:?}/{optimizer:?} step {step} exec {gi}: losses"
+                        );
+                        assert_eq!(
+                            serial.states(),
+                            exec.states(),
+                            "{kind:?}/{strategy:?}/{optimizer:?} step {step} exec {gi}: states"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Interleaved chains over few, heavily recycled arena slots: the
+/// scheduler's WAR/WAW hazard edges are the only thing standing between
+/// out-of-order claiming and silent corruption, so hammer them.
+fn hazard_stress_program() -> (Graph, Vec<(NodeId, Tensor)>, Program) {
+    let chains = 8usize;
+    let depth = 12usize;
+    let mut g = Graph::new();
+    let mut rng = Pcg64::seeded(99);
+    let mut feeds = Vec::new();
+    let mut cur: Vec<NodeId> = (0..chains)
+        .map(|_| {
+            let id = g.input(&[24]);
+            feeds.push((id, Tensor::vec1(rng.normals(24))));
+            id
+        })
+        .collect();
+    // round-robin construction: lowering emits adjacent instructions from
+    // different chains, and liveness hands chain k's freed slot straight
+    // to chain k+1
+    for d in 0..depth {
+        for c in cur.iter_mut() {
+            *c = match d % 3 {
+                0 => g.tanh(*c),
+                1 => g.sin(*c),
+                _ => g.square(*c),
+            };
+        }
+    }
+    let sums: Vec<NodeId> = cur.iter().map(|&c| g.sum_all(c)).collect();
+    // fusion off: keep every tiny instruction visible to the scheduler
+    let program = Program::compile_with(&g, &sums, PassConfig::NONE);
+    (g, feeds, program)
+}
+
+#[test]
+fn hazard_stress_program_is_bit_exact_out_of_order() {
+    let (_g, feeds, program) = hazard_stress_program();
+    assert!(
+        program.stats.sched_hazard_edges > 0,
+        "stress program must actually reuse arena slots (got {} slots for {} instrs)",
+        program.n_slots,
+        program.instrs.len()
+    );
+    assert!(
+        program.stats.sched_max_width >= 4,
+        "stress program must be wide, got {}",
+        program.stats.sched_max_width
+    );
+    let inputs: HashMap<NodeId, &Tensor> = feeds.iter().map(|(id, t)| (*id, t)).collect();
+    let want = Executor::with_threads(1).with_sched(SchedMode::Serial).run_ref(&program, &inputs);
+    for threads in [2usize, 4] {
+        let mut exec = Executor::with_threads(threads).with_sched(SchedMode::Graph);
+        for round in 0..25 {
+            let got = exec.run_ref(&program, &inputs);
+            assert_eq!(want, got, "{threads} threads, round {round}");
+        }
+    }
+}
+
+fn tiny(kind: ProblemKind, optimizer: Optimizer) -> NativeRunConfig {
+    NativeRunConfig {
+        problem: kind,
+        strategy: Strategy::Zcs,
+        m: 2,
+        n: 6,
+        n_bc: 4,
+        q: q_for(kind),
+        hidden: 8,
+        k: 4,
+        steps: 6,
+        lr: if optimizer == Optimizer::Adam { 1e-2 } else { 1e-3 },
+        seed: 23,
+        bank_size: 8,
+        bank_grid: 32,
+        log_every: 1,
+        threads: 1,
+        optimizer,
+        ..NativeRunConfig::default()
+    }
+}
+
+#[test]
+fn pipelined_batches_bit_match_the_synchronous_trajectory() {
+    for kind in [ProblemKind::Antiderivative, ProblemKind::ReactionDiffusion] {
+        for optimizer in [Optimizer::Sgd, Optimizer::Adam] {
+            let sync_cfg = tiny(kind, optimizer);
+            let mut pipe_cfg = sync_cfg.clone();
+            pipe_cfg.pipeline = true;
+            let mut sync = NativeTrainer::new(sync_cfg).unwrap();
+            let mut pipe = NativeTrainer::new(pipe_cfg).unwrap();
+            let rs = sync.run().unwrap();
+            let rp = pipe.run().unwrap();
+            assert!(!rs.pipelined);
+            assert!(rp.pipelined);
+            assert_eq!(rs.curve.len(), rp.curve.len(), "{kind:?}/{optimizer:?}");
+            for (a, b) in rs.curve.iter().zip(&rp.curve) {
+                assert_eq!(a.step, b.step);
+                assert_eq!(a.loss, b.loss, "{kind:?}/{optimizer:?} step {}", a.step);
+                assert_eq!(a.loss_pde, b.loss_pde);
+                assert_eq!(a.loss_bc, b.loss_bc);
+            }
+            assert_eq!(sync.weights(), pipe.weights(), "{kind:?}/{optimizer:?}: weights");
+        }
+    }
+}
+
+#[test]
+fn pipelined_graph_threaded_training_matches_serial_sync() {
+    // everything at once: pipeline + graph schedule + 2 threads against
+    // the serial synchronous baseline
+    let base = tiny(ProblemKind::Burgers, Optimizer::Adam);
+    let mut fancy_cfg = base.clone();
+    fancy_cfg.pipeline = true;
+    fancy_cfg.threads = 2;
+    fancy_cfg.schedule = SchedMode::Graph;
+    let mut plain_cfg = base;
+    plain_cfg.schedule = SchedMode::Serial;
+    let mut plain = NativeTrainer::new(plain_cfg).unwrap();
+    let mut fancy = NativeTrainer::new(fancy_cfg).unwrap();
+    let rp = plain.run().unwrap();
+    let rf = fancy.run().unwrap();
+    for (a, b) in rp.curve.iter().zip(&rf.curve) {
+        assert_eq!(a.loss, b.loss, "step {}", a.step);
+    }
+    assert_eq!(plain.weights(), fancy.weights());
+}
+
+#[test]
+fn trainer_reports_profile_only_when_asked() {
+    let mut cfg = tiny(ProblemKind::Antiderivative, Optimizer::Sgd);
+    cfg.steps = 3;
+    let mut silent = NativeTrainer::new(cfg.clone()).unwrap();
+    assert!(silent.run().unwrap().profile.is_none());
+    cfg.profile = true;
+    cfg.threads = 2;
+    cfg.schedule = SchedMode::Graph;
+    let mut profiled = NativeTrainer::new(cfg).unwrap();
+    let report = profiled.run().unwrap();
+    let profile = report.profile.expect("profile requested");
+    assert_eq!(profile.runs, 3);
+    assert!(profile.wall_ns > 0);
+    assert!(!profile.per_op.is_empty());
+    // the resident optimizer shows up in the kernel table
+    assert!(profile.per_op.contains_key("sgd-update"));
+    assert!(!profile.occupancy().is_empty());
+}
+
+#[test]
+fn schedule_metrics_surface_in_the_program_report() {
+    let mut trainer =
+        NativeTrainer::new(tiny(ProblemKind::Antiderivative, Optimizer::Sgd)).unwrap();
+    let report = trainer.program_report();
+    assert!(report.stats.sched_critical_path > 0);
+    assert!(report.stats.sched_critical_path <= report.stats.instructions);
+    assert!(report.stats.sched_max_width >= 1);
+    assert!(report.stats.sched_mean_width >= 1.0);
+    assert!(report.stats.sched_true_edges > 0);
+    let line = report.schedule_summary();
+    assert!(line.contains("critical path"), "{line}");
+    assert!(line.contains("hazard"), "{line}");
+}
