@@ -21,6 +21,7 @@ use zcs::pde::ProblemKind;
 use zcs::rng::Pcg64;
 use zcs::runtime::{RunArg, Runtime};
 use zcs::sampler::{FunctionBank, GpSampler1d, Kernel};
+use zcs::tensor::simd::SimdMode;
 use zcs::tensor::Tensor;
 use zcs::util::benchkit::{Bench, Stats, Table};
 use zcs::util::json::{obj, Json};
@@ -145,22 +146,38 @@ struct ExecRow {
     instructions_fused: usize,
     fused_groups: usize,
     fusion_kib_saved: f64,
+    /// resolved `--simd auto` lane width on this host
+    simd_lanes: usize,
     unfused_1t: Stats,
     fused_1t: Stats,
     fused_2t: Stats,
     fused_4t: Stats,
+    fused_simd_1t: Stats,
+    fused_simd_2t: Stats,
+    fused_simd_4t: Stats,
 }
 
 impl ExecRow {
-    /// Fusion alone (single thread).
+    /// Fusion alone (single thread, scalar kernels).
     fn speedup_fusion(&self) -> f64 {
         self.unfused_1t.mean.as_secs_f64() / self.fused_1t.mean.as_secs_f64().max(1e-12)
     }
 
     /// Fusion + 4 threads vs the old single-thread unfused path -- the
-    /// headline wall-time win.
+    /// headline scalar wall-time win.
     fn speedup_total(&self) -> f64 {
         self.unfused_1t.mean.as_secs_f64() / self.fused_4t.mean.as_secs_f64().max(1e-12)
+    }
+
+    /// SIMD alone: fused scalar vs fused auto-width, both single-thread.
+    fn speedup_simd(&self) -> f64 {
+        self.fused_1t.mean.as_secs_f64() / self.fused_simd_1t.mean.as_secs_f64().max(1e-12)
+    }
+
+    /// Everything at once: fusion + SIMD + 4 threads vs the old
+    /// single-thread unfused scalar path.
+    fn speedup_simd_total(&self) -> f64 {
+        self.unfused_1t.mean.as_secs_f64() / self.fused_simd_4t.mean.as_secs_f64().max(1e-12)
     }
 }
 
@@ -208,13 +225,22 @@ fn bench_exec_hot_path(table: &mut Table) -> anyhow::Result<Vec<ExecRow>> {
             inputs.insert(*id, t);
         }
 
-        let mut exec1 = Executor::with_threads(1);
+        // scalar rows pin SimdMode::Off so the SIMD columns measure the
+        // backend against a stable baseline regardless of ZCS_SIMD
+        let mut exec1 = Executor::with_threads(1).with_simd(SimdMode::Off);
         let unfused_1t = bench.run(|| exec1.run_ref(&unfused, &inputs));
         let fused_1t = bench.run(|| exec1.run_ref(&fused, &inputs));
-        let mut exec2 = Executor::with_threads(2);
+        let mut exec2 = Executor::with_threads(2).with_simd(SimdMode::Off);
         let fused_2t = bench.run(|| exec2.run_ref(&fused, &inputs));
-        let mut exec4 = Executor::with_threads(4);
+        let mut exec4 = Executor::with_threads(4).with_simd(SimdMode::Off);
         let fused_4t = bench.run(|| exec4.run_ref(&fused, &inputs));
+        let mut simd1 = Executor::with_threads(1).with_simd(SimdMode::Auto);
+        let simd_lanes = simd1.simd().width();
+        let fused_simd_1t = bench.run(|| simd1.run_ref(&fused, &inputs));
+        let mut simd2 = Executor::with_threads(2).with_simd(SimdMode::Auto);
+        let fused_simd_2t = bench.run(|| simd2.run_ref(&fused, &inputs));
+        let mut simd4 = Executor::with_threads(4).with_simd(SimdMode::Auto);
+        let fused_simd_4t = bench.run(|| simd4.run_ref(&fused, &inputs));
 
         let row = ExecRow {
             problem: name,
@@ -224,16 +250,23 @@ fn bench_exec_hot_path(table: &mut Table) -> anyhow::Result<Vec<ExecRow>> {
             instructions_fused: fused.stats.instructions,
             fused_groups: fused.stats.fused_groups,
             fusion_kib_saved: fused.stats.fusion_bytes_saved as f64 / 1024.0,
+            simd_lanes,
             unfused_1t,
             fused_1t,
             fused_2t,
             fused_4t,
+            fused_simd_1t,
+            fused_simd_2t,
+            fused_simd_4t,
         };
         for (label, stats) in [
             ("unfused 1t", &row.unfused_1t),
             ("fused 1t", &row.fused_1t),
             ("fused 2t", &row.fused_2t),
             ("fused 4t", &row.fused_4t),
+            ("fused simd 1t", &row.fused_simd_1t),
+            ("fused simd 2t", &row.fused_simd_2t),
+            ("fused simd 4t", &row.fused_simd_4t),
         ] {
             table.row(&[
                 format!("zcs step {name}: {label}"),
@@ -243,10 +276,13 @@ fn bench_exec_hot_path(table: &mut Table) -> anyhow::Result<Vec<ExecRow>> {
             ]);
         }
         eprintln!(
-            "zcs step {name}: fusion x{:.2}, fusion+4t x{:.2} \
-             ({} -> {} instructions, {} groups)",
+            "zcs step {name}: fusion x{:.2}, fusion+4t x{:.2}, simd({} lanes) x{:.2}, \
+             all-in x{:.2} ({} -> {} instructions, {} groups)",
             row.speedup_fusion(),
             row.speedup_total(),
+            row.simd_lanes,
+            row.speedup_simd(),
+            row.speedup_simd_total(),
             row.instructions_unfused,
             row.instructions_fused,
             row.fused_groups,
@@ -271,12 +307,18 @@ fn write_bench_exec_json(rows: &[ExecRow]) -> anyhow::Result<()> {
                 ("instructions_fused", Json::from(r.instructions_fused)),
                 ("fused_groups", Json::from(r.fused_groups)),
                 ("fusion_kib_saved", Json::from(r.fusion_kib_saved)),
+                ("simd_lanes", Json::from(r.simd_lanes)),
                 ("unfused_1t_ns", Json::from(r.unfused_1t.mean.as_nanos() as f64)),
                 ("fused_1t_ns", Json::from(r.fused_1t.mean.as_nanos() as f64)),
                 ("fused_2t_ns", Json::from(r.fused_2t.mean.as_nanos() as f64)),
                 ("fused_4t_ns", Json::from(r.fused_4t.mean.as_nanos() as f64)),
+                ("fused_simd_1t_ns", Json::from(r.fused_simd_1t.mean.as_nanos() as f64)),
+                ("fused_simd_2t_ns", Json::from(r.fused_simd_2t.mean.as_nanos() as f64)),
+                ("fused_simd_4t_ns", Json::from(r.fused_simd_4t.mean.as_nanos() as f64)),
                 ("speedup_fusion", Json::from(r.speedup_fusion())),
                 ("speedup_total", Json::from(r.speedup_total())),
+                ("speedup_simd", Json::from(r.speedup_simd())),
+                ("speedup_simd_total", Json::from(r.speedup_simd_total())),
             ])
         })
         .collect();
@@ -306,6 +348,8 @@ struct StepRow {
     feed_sgd: [Stats; 3],
     resident_sgd: [Stats; 3],
     resident_adam: [Stats; 3],
+    /// resident Adam again with `--simd auto` (the others pin scalar)
+    resident_adam_simd: [Stats; 3],
 }
 
 impl StepRow {
@@ -324,6 +368,7 @@ fn step_variant_stats(
     n: usize,
     optimizer: Optimizer,
     resident: bool,
+    simd: SimdMode,
 ) -> anyhow::Result<([Stats; 3], u64)> {
     let mut stats: Vec<Stats> = Vec::new();
     let mut state_bytes = 0u64;
@@ -348,6 +393,7 @@ fn step_variant_stats(
             threads,
             optimizer,
             resident,
+            simd,
             ..NativeRunConfig::default()
         };
         let mut trainer = NativeTrainer::new(config)?;
@@ -371,10 +417,14 @@ fn bench_whole_step(table: &mut Table) -> anyhow::Result<Vec<StepRow>> {
     ];
     let mut rows = Vec::new();
     for (kind, name, m, n) in cases {
-        let (feed_sgd, _) = step_variant_stats(&bench, kind, m, n, Optimizer::Sgd, false)?;
-        let (resident_sgd, _) = step_variant_stats(&bench, kind, m, n, Optimizer::Sgd, true)?;
+        let (feed_sgd, _) =
+            step_variant_stats(&bench, kind, m, n, Optimizer::Sgd, false, SimdMode::Off)?;
+        let (resident_sgd, _) =
+            step_variant_stats(&bench, kind, m, n, Optimizer::Sgd, true, SimdMode::Off)?;
         let (resident_adam, adam_state_bytes) =
-            step_variant_stats(&bench, kind, m, n, Optimizer::Adam, true)?;
+            step_variant_stats(&bench, kind, m, n, Optimizer::Adam, true, SimdMode::Off)?;
+        let (resident_adam_simd, _) =
+            step_variant_stats(&bench, kind, m, n, Optimizer::Adam, true, SimdMode::Auto)?;
         let row = StepRow {
             problem: name,
             m,
@@ -383,11 +433,13 @@ fn bench_whole_step(table: &mut Table) -> anyhow::Result<Vec<StepRow>> {
             feed_sgd,
             resident_sgd,
             resident_adam,
+            resident_adam_simd,
         };
         for (label, stats) in [
             ("feed sgd", &row.feed_sgd),
             ("resident sgd", &row.resident_sgd),
             ("resident adam", &row.resident_adam),
+            ("resident adam simd", &row.resident_adam_simd),
         ] {
             for (ti, threads) in [1usize, 2, 4].into_iter().enumerate() {
                 table.row(&[
@@ -399,10 +451,11 @@ fn bench_whole_step(table: &mut Table) -> anyhow::Result<Vec<StepRow>> {
             }
         }
         eprintln!(
-            "whole step {name}: resident sgd x{:.2}, resident adam x{:.2} vs feed sgd (1t); \
-             {:.1} KiB adam state",
+            "whole step {name}: resident sgd x{:.2}, resident adam x{:.2}, \
+             +simd x{:.2} vs feed sgd (1t); {:.1} KiB adam state",
             StepRow::speedup(&row.feed_sgd[0], &row.resident_sgd[0]),
             StepRow::speedup(&row.feed_sgd[0], &row.resident_adam[0]),
+            StepRow::speedup(&row.feed_sgd[0], &row.resident_adam_simd[0]),
             row.adam_state_bytes as f64 / 1024.0,
         );
         rows.push(row);
@@ -428,6 +481,7 @@ fn write_bench_step_json(rows: &[StepRow]) -> anyhow::Result<()> {
                 ("feed_sgd", &r.feed_sgd),
                 ("resident_sgd", &r.resident_sgd),
                 ("resident_adam", &r.resident_adam),
+                ("resident_adam_simd", &r.resident_adam_simd),
             ] {
                 for (ti, threads) in [1usize, 2, 4].into_iter().enumerate() {
                     named.push((
@@ -444,6 +498,10 @@ fn write_bench_step_json(rows: &[StepRow]) -> anyhow::Result<()> {
                 named.push((
                     format!("speedup_resident_adam_{threads}t"),
                     Json::from(StepRow::speedup(&r.feed_sgd[ti], &r.resident_adam[ti])),
+                ));
+                named.push((
+                    format!("speedup_simd_adam_{threads}t"),
+                    Json::from(StepRow::speedup(&r.resident_adam[ti], &r.resident_adam_simd[ti])),
                 ));
             }
             obj(named.iter().map(|(k, v)| (k.as_str(), v.clone())).collect())

@@ -42,10 +42,21 @@
 //! `rust/tests/sched_exec.rs` pin threaded == serial and graph == serial
 //! to `==`.
 //!
+//! Kernels additionally vectorize over the executor's [`SimdLevel`]
+//! (default: the `ZCS_SIMD` environment variable, else the auto-detected
+//! lane width).  Order-preserving kernels stay bit-identical to scalar at
+//! every width; the reassociating reductions (`matmul_nt`'s k-loop, row
+//! sums, full sums) use a fixed lane split so any given width is still
+//! bit-reproducible across runs, thread counts and schedules -- see the
+//! [`crate::tensor::kernels`] module docs for the full contract and
+//! `rust/tests/simd_exec.rs` for the program-level pins.
+//!
 //! [`Schedule`]: super::passes::Schedule
 
 use super::graph::NodeId;
 use super::program::{Instr, OpCode, Operand, Program, StateKind, UpdateRule};
+use crate::tensor::kernels::ExtKind;
+use crate::tensor::simd::{SimdLevel, SimdMode};
 use crate::tensor::{kernels, Tensor};
 use crate::util::pool::{default_threads, Pool};
 use std::cell::UnsafeCell;
@@ -99,6 +110,24 @@ impl SchedMode {
 pub struct OpTally {
     pub count: u64,
     pub ns: u64,
+    /// floating-point operations attributed by the static cost model
+    /// (`instr_cost`), for achieved-GFLOP/s reporting
+    pub flops: u64,
+    /// bytes read + written per the same model, for effective-bandwidth
+    /// reporting
+    pub bytes: u64,
+}
+
+impl OpTally {
+    /// Achieved GFLOP/s over the tallied wall time.
+    pub fn gflops(&self) -> f64 {
+        self.flops as f64 / self.ns.max(1) as f64
+    }
+
+    /// Effective GB/s (bytes moved per the cost model over wall time).
+    pub fn gbytes(&self) -> f64 {
+        self.bytes as f64 / self.ns.max(1) as f64
+    }
 }
 
 /// Per-instruction profile accumulated by [`Executor::enable_profiling`]:
@@ -141,10 +170,21 @@ impl ProfileReport {
     /// scheduler's wavefronts (the post-barrier optimizer updates), which
     /// counts toward the opcode and worker totals only -- so
     /// `per_level.len()` always matches the schedule's critical path.
-    fn record(&mut self, op: &'static str, level: Option<usize>, worker: usize, ns: u64) {
+    /// `flops`/`bytes` come from the static cost model (`instr_cost`).
+    fn record(
+        &mut self,
+        op: &'static str,
+        level: Option<usize>,
+        worker: usize,
+        ns: u64,
+        flops: u64,
+        bytes: u64,
+    ) {
         let t = self.per_op.entry(op.to_string()).or_default();
         t.count += 1;
         t.ns += ns;
+        t.flops += flops;
+        t.bytes += bytes;
         if let Some(level) = level {
             if self.per_level.len() <= level {
                 self.per_level.resize(level + 1, 0);
@@ -162,6 +202,8 @@ impl ProfileReport {
             let e = self.per_op.entry(k.clone()).or_default();
             e.count += t.count;
             e.ns += t.ns;
+            e.flops += t.flops;
+            e.bytes += t.bytes;
         }
         if self.per_level.len() < other.per_level.len() {
             self.per_level.resize(other.per_level.len(), 0);
@@ -201,6 +243,9 @@ pub struct Executor {
     opt_t: u64,
     pool: Pool,
     sched: SchedMode,
+    /// resolved kernel lane width (bound at construction so every run of
+    /// this executor sees one fixed, reproducible width)
+    simd: SimdLevel,
     /// accumulated profile; `None` = profiling off (zero overhead)
     profile: Option<Box<ProfileReport>>,
     /// scratch for resolving `Fused` instruction operands without a
@@ -285,14 +330,14 @@ thread_local! {
 
 impl Executor {
     /// An executor with the environment-default thread count
-    /// (`ZCS_THREADS`, else serial) and schedule (`ZCS_SCHED`, else
-    /// graph).
+    /// (`ZCS_THREADS`, else serial), schedule (`ZCS_SCHED`, else graph)
+    /// and SIMD mode (`ZCS_SIMD`, else auto-detected lane width).
     pub fn new() -> Self {
         Self::with_threads(default_threads())
     }
 
     /// An executor whose kernels run on `threads` threads (1 = serial),
-    /// with the environment-default schedule.
+    /// with the environment-default schedule and SIMD mode.
     pub fn with_threads(threads: usize) -> Self {
         Self {
             arena: Vec::new(),
@@ -300,6 +345,7 @@ impl Executor {
             opt_t: 0,
             pool: Pool::new(threads),
             sched: SchedMode::from_env(),
+            simd: SimdMode::from_env().resolve(),
             profile: None,
             ext_scratch: Vec::new(),
             reg_scratch: Vec::new(),
@@ -325,6 +371,23 @@ impl Executor {
     /// Builder-style [`Executor::set_sched`].
     pub fn with_sched(mut self, sched: SchedMode) -> Self {
         self.sched = sched;
+        self
+    }
+
+    /// The resolved lane width this executor's kernels vectorize over.
+    pub fn simd(&self) -> SimdLevel {
+        self.simd
+    }
+
+    /// Select the SIMD mode ([`SimdMode::Auto`] resolves to the detected
+    /// width immediately, so the level is fixed for all subsequent runs).
+    pub fn set_simd(&mut self, mode: SimdMode) {
+        self.simd = mode.resolve();
+    }
+
+    /// Builder-style [`Executor::set_simd`].
+    pub fn with_simd(mut self, mode: SimdMode) -> Self {
+        self.simd = mode.resolve();
         self
     }
 
@@ -490,10 +553,21 @@ impl Executor {
                     Operand::Const(c) => &program.consts[c],
                     Operand::State(_) => unreachable!("a gradient is never resident state"),
                 };
-                let name = match up.rule {
+                let g_len = g.len() as u64;
+                // the updates row-split over the pool and vectorize like
+                // any other kernel; per-element order is preserved, so
+                // resident trajectories stay bit-exact at every width and
+                // thread count
+                let (name, flops, bytes) = match up.rule {
                     UpdateRule::Sgd { lr } => {
-                        kernels::sgd_update(&mut self.states[up.weight], g, lr);
-                        "sgd-update"
+                        kernels::sgd_update_pool(
+                            &mut self.states[up.weight],
+                            g,
+                            lr,
+                            &self.pool,
+                            self.simd,
+                        );
+                        ("sgd-update", 2 * g_len, 3 * g_len * 8)
                     }
                     UpdateRule::Adam { lr, beta1, beta2, eps } => {
                         let (mi, vi) = up.moments.expect("adam carries moment slots");
@@ -503,7 +577,7 @@ impl Executor {
                         // all three disjoint borrows
                         let (head, tail) = self.states.split_at_mut(mi);
                         let (m_slice, v_slice) = tail.split_at_mut(1);
-                        kernels::adam_update(
+                        kernels::adam_update_pool(
                             &mut head[up.weight],
                             &mut m_slice[0],
                             &mut v_slice[0],
@@ -513,12 +587,14 @@ impl Executor {
                             beta2,
                             eps,
                             t,
+                            &self.pool,
+                            self.simd,
                         );
-                        "adam-update"
+                        ("adam-update", 13 * g_len, 7 * g_len * 8)
                     }
                 };
                 if let (Some(t0), Some(p)) = (t_up, self.profile.as_mut()) {
-                    p.record(name, None, 0, t0.elapsed().as_nanos() as u64);
+                    p.record(name, None, 0, t0.elapsed().as_nanos() as u64, flops, bytes);
                 }
             }
         }
@@ -553,15 +629,26 @@ impl Executor {
                     &program.consts,
                     &self.states,
                     &self.pool,
+                    self.simd,
                     &mut out,
                     &mut ext_scratch,
                     &mut reg_scratch,
                 );
             }
             self.arena[instr.out] = Some(out);
-            if let (Some(t0), Some(p)) = (t0, self.profile.as_mut()) {
+            if let Some(t0) = t0 {
+                let ns = t0.elapsed().as_nanos() as u64;
+                let out_ref = self.arena[instr.out].as_ref().expect("just written");
+                // SAFETY: serial loop -- every operand slot is quiescent
+                let a0 = instr
+                    .args
+                    .first()
+                    .map(|&a| unsafe { view.resolve(ins, &program.consts, &self.states, a) });
+                let (flops, bytes) = instr_cost(instr, a0, out_ref);
                 let level = program.schedule.level.get(i).map(|&l| l as usize);
-                p.record(instr.op.name(), level, 0, t0.elapsed().as_nanos() as u64);
+                if let Some(p) = self.profile.as_mut() {
+                    p.record(instr.op.name(), level, 0, ns, flops, bytes);
+                }
             }
         }
         ext_scratch.clear();
@@ -584,6 +671,7 @@ impl Executor {
         let states: &[Tensor] = &self.states;
         let consts: &[Tensor] = &program.consts;
         let pool = &self.pool;
+        let simd = self.simd;
         let prof = self.profile.as_deref_mut().map(|p| {
             let slots: Vec<UnsafeCell<ProfileReport>> =
                 (0..pool.threads()).map(|_| UnsafeCell::new(ProfileReport::default())).collect();
@@ -612,11 +700,19 @@ impl Executor {
                         consts,
                         states,
                         pool,
+                        simd,
                         &mut out,
                         ext_scratch,
                         reg_scratch,
                     );
                 }
+            });
+            let cost = t0.map(|_| {
+                // SAFETY: the RAW edges keep this node's operands quiescent
+                // until it retires, which is after this closure returns
+                let a0 =
+                    instr.args.first().map(|&a| unsafe { view.resolve(ins, consts, states, a) });
+                instr_cost(instr, a0, &out)
             });
             *slot = Some(out);
             if let (Some(t0), Some(ps)) = (t0, prof_slots) {
@@ -624,7 +720,9 @@ impl Executor {
                 // distinct, so slot `worker` is exclusively ours right now
                 let p = unsafe { &mut *ps.slots[worker].get() };
                 let level = sched.level.get(node as usize).map(|&l| l as usize);
-                p.record(instr.op.name(), level, worker, t0.elapsed().as_nanos() as u64);
+                let (flops, bytes) = cost.unwrap_or((0, 0));
+                let ns = t0.elapsed().as_nanos() as u64;
+                p.record(instr.op.name(), level, worker, ns, flops, bytes);
             }
         });
         if let Some((p, ps)) = prof {
@@ -652,6 +750,7 @@ unsafe fn exec_instr(
     consts: &[Tensor],
     states: &[Tensor],
     pool: &Pool,
+    simd: SimdLevel,
     out: &mut Tensor,
     ext_scratch: &mut Vec<*const Tensor>,
     reg_scratch: &mut Vec<f64>,
@@ -659,28 +758,28 @@ unsafe fn exec_instr(
     // SAFETY: the caller's contract covers every operand this reads
     let arg = |k: usize| unsafe { arena.resolve(ins, consts, states, instr.args[k]) };
     match instr.op {
-        OpCode::Add => kernels::add_into(arg(0), arg(1), out),
-        OpCode::Sub => kernels::sub_into(arg(0), arg(1), out),
-        OpCode::Mul => kernels::mul_into(arg(0), arg(1), out),
+        OpCode::Add => kernels::add_into_simd(arg(0), arg(1), out, simd),
+        OpCode::Sub => kernels::sub_into_simd(arg(0), arg(1), out, simd),
+        OpCode::Mul => kernels::mul_into_simd(arg(0), arg(1), out, simd),
         OpCode::ScaleBy => {
             let s = arg(0).data()[0];
-            kernels::scale_into(arg(1), s, out);
+            kernels::scale_into_simd(arg(1), s, out, simd);
         }
-        OpCode::Scale(c) => kernels::scale_into(arg(0), c, out),
-        OpCode::Tanh => kernels::tanh_into(arg(0), out),
-        OpCode::Neg => kernels::neg_into(arg(0), out),
-        OpCode::Square => kernels::square_into(arg(0), out),
-        OpCode::Sin => kernels::sin_into(arg(0), out),
-        OpCode::Cos => kernels::cos_into(arg(0), out),
+        OpCode::Scale(c) => kernels::scale_into_simd(arg(0), c, out, simd),
+        OpCode::Tanh => kernels::tanh_into_simd(arg(0), out, simd),
+        OpCode::Neg => kernels::neg_into_simd(arg(0), out, simd),
+        OpCode::Square => kernels::square_into_simd(arg(0), out, simd),
+        OpCode::Sin => kernels::sin_into_simd(arg(0), out, simd),
+        OpCode::Cos => kernels::cos_into_simd(arg(0), out, simd),
         OpCode::Reshape => kernels::reshape_into(arg(0), &instr.shape, out),
         OpCode::Broadcast => {
             let v = arg(0).data()[0];
             kernels::broadcast_into(v, &instr.shape, out);
         }
-        OpCode::SumAll => kernels::sum_all_into(arg(0), out),
-        OpCode::SumAxis(axis) => kernels::sum_axis_into_pool(arg(0), axis, out, pool),
-        OpCode::MatMulNT => kernels::matmul_nt_into_pool(arg(0), arg(1), out, pool),
-        OpCode::MatMul => kernels::matmul_into_pool(arg(0), arg(1), out, pool),
+        OpCode::SumAll => kernels::sum_all_into_simd(arg(0), out, simd),
+        OpCode::SumAxis(axis) => kernels::sum_axis_into_pool(arg(0), axis, out, pool, simd),
+        OpCode::MatMulNT => kernels::matmul_nt_into_pool(arg(0), arg(1), out, pool, simd),
+        OpCode::MatMul => kernels::matmul_into_pool(arg(0), arg(1), out, pool, simd),
         OpCode::Transpose => kernels::transpose_into(arg(0), out),
         OpCode::Fused(ref kernel) => {
             ext_scratch.clear();
@@ -695,7 +794,7 @@ unsafe fn exec_instr(
                 ext_scratch.as_ptr() as *const &Tensor,
                 ext_scratch.len(),
             );
-            kernels::fused_into(kernel, exts, &instr.shape, out, pool, reg_scratch);
+            kernels::fused_into(kernel, exts, &instr.shape, out, pool, reg_scratch, simd);
         }
         OpCode::MatMulFused(ref me) => {
             ext_scratch.clear();
@@ -716,6 +815,7 @@ unsafe fn exec_instr(
                     out,
                     pool,
                     reg_scratch,
+                    simd,
                 );
             } else {
                 kernels::matmul_fused_into_pool(
@@ -726,8 +826,45 @@ unsafe fn exec_instr(
                     out,
                     pool,
                     reg_scratch,
+                    simd,
                 );
             }
+        }
+    }
+}
+
+/// Static cost model for the profiler: estimated (flops, bytes moved) of
+/// one executed instruction, from its opcode and resolved shapes.  `a0`
+/// is the instruction's first operand (contraction/reduction extents live
+/// there); byte counts charge each streamed f64 once -- achieved GFLOP/s
+/// and effective GB/s in the `--profile` table come straight from these.
+fn instr_cost(instr: &Instr, a0: Option<&Tensor>, out: &Tensor) -> (u64, u64) {
+    let len = out.len() as u64;
+    let a_len = a0.map_or(0, |t| t.len() as u64);
+    let mm_dims = || {
+        let k = a0.map_or(0, |t| t.shape()[1]) as u64;
+        (out.shape()[0] as u64, k, out.shape()[1] as u64)
+    };
+    match instr.op {
+        OpCode::Add | OpCode::Sub | OpCode::Mul => (len, 3 * len * 8),
+        OpCode::ScaleBy | OpCode::Scale(_) | OpCode::Neg | OpCode::Square => (len, 2 * len * 8),
+        OpCode::Tanh | OpCode::Sin | OpCode::Cos => (len, 2 * len * 8),
+        OpCode::Reshape | OpCode::Transpose => (0, 2 * len * 8),
+        OpCode::Broadcast => (0, len * 8),
+        OpCode::SumAll | OpCode::SumAxis(_) => (a_len, (a_len + len) * 8),
+        OpCode::MatMul | OpCode::MatMulNT => {
+            let (m, k, n) = mm_dims();
+            (2 * m * k * n, (m * k + k * n + m * n) * 8)
+        }
+        OpCode::Fused(ref kernel) => {
+            let streams = kernel.elem_exts() as u64 + 1;
+            (len * kernel.ops.len() as u64, streams * len * 8)
+        }
+        OpCode::MatMulFused(ref me) => {
+            let (m, k, n) = mm_dims();
+            let epi_elem = me.epi.exts.iter().filter(|e| **e == ExtKind::Elem).count() as u64;
+            let flops = 2 * m * k * n + len * me.epi.ops.len() as u64;
+            (flops, (m * k + k * n + m * n + epi_elem * len) * 8)
         }
     }
 }
@@ -884,6 +1021,39 @@ mod tests {
             // take_profile resets but keeps collecting
             exec.run(&prog, &inputs);
             assert_eq!(exec.profile().unwrap().runs, 1);
+        }
+    }
+
+    #[test]
+    fn simd_mode_is_builder_settable_and_resolved() {
+        assert_eq!(Executor::with_threads(1).with_simd(SimdMode::Off).simd(), SimdLevel::Scalar);
+        assert_eq!(Executor::with_threads(1).with_simd(SimdMode::W4).simd(), SimdLevel::W4);
+        assert_eq!(Executor::with_threads(1).with_simd(SimdMode::W8).simd(), SimdLevel::W8);
+        // Auto resolves to a real lane width, never scalar
+        assert!(Executor::with_threads(1).with_simd(SimdMode::Auto).simd().width() > 1);
+    }
+
+    #[test]
+    fn profiler_attributes_flops_and_bytes_on_both_schedules() {
+        let (_g, x, w, prog) = wide_program();
+        let mut rng = crate::rng::Pcg64::seeded(41);
+        let mut inputs = HashMap::new();
+        inputs.insert(x, Tensor::new(&[9, 7], rng.normals(63)));
+        inputs.insert(w, Tensor::new(&[7, 9], rng.normals(63)));
+        for (threads, sched) in [(1usize, SchedMode::Serial), (2, SchedMode::Graph)] {
+            let mut exec = Executor::with_threads(threads).with_sched(sched);
+            exec.enable_profiling();
+            exec.run(&prog, &inputs);
+            let report = exec.take_profile().expect("profiling enabled");
+            let total_flops: u64 = report.per_op.values().map(|t| t.flops).sum();
+            let total_bytes: u64 = report.per_op.values().map(|t| t.bytes).sum();
+            // the (9,7)@(7,9) matmul alone (the program's two are CSE'd
+            // into one) accounts for 2*9*7*9 flops
+            assert!(total_flops >= 2 * 9 * 7 * 9, "{threads} threads: {total_flops} flops");
+            assert!(total_bytes > 0, "{threads} threads");
+            for (_, t) in report.top_ops() {
+                assert!(t.gflops().is_finite() && t.gbytes().is_finite());
+            }
         }
     }
 

@@ -345,9 +345,13 @@ impl Program {
     }
 
     /// One-shot convenience: compile-once/run-many callers should hold an
-    /// [`Executor`] instead (see [`Executor::run`]).
+    /// [`Executor`] instead (see [`Executor::run`]).  Pinned to the scalar
+    /// kernel backend regardless of `ZCS_SIMD`: callers are
+    /// interpreter-differential tests and debugging one-offs that rely on
+    /// the compiled == interpreted bit-match, which a reassociating SIMD
+    /// reduction would loosen to ULP-bounded.
     pub fn eval_once(&self, inputs: &HashMap<NodeId, Tensor>) -> Vec<Tensor> {
-        Executor::new().run(self, inputs)
+        Executor::new().with_simd(crate::tensor::simd::SimdMode::Off).run(self, inputs)
     }
 
     /// Total bytes of executor-resident state (weights + moments).

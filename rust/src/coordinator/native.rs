@@ -49,6 +49,7 @@ use crate::pde::ProblemKind;
 use crate::rng::Pcg64;
 use crate::sampler::{FunctionBank, GpSampler1d};
 use crate::solvers::{BurgersSolver, KirchhoffSolver, ReactionDiffusionSolver};
+use crate::tensor::simd::{SimdLevel, SimdMode};
 use crate::tensor::Tensor;
 use anyhow::{anyhow, bail, ensure, Result};
 use std::collections::HashMap;
@@ -136,6 +137,10 @@ pub struct NativeRunConfig {
     /// instruction schedule: out-of-order graph claiming (the default)
     /// or the strict serial loop; results are bit-identical either way
     pub schedule: SchedMode,
+    /// kernel SIMD mode (off / fixed width / auto-detect); trajectories
+    /// are bit-identical across widths for every order-preserving kernel,
+    /// and reproducible per width for the reassociating reductions
+    pub simd: SimdMode,
     /// overlap batch generation with step execution on a producer thread
     /// (double-buffered; identical draw sequence, so trajectories
     /// bit-match the synchronous loop)
@@ -166,6 +171,7 @@ impl Default for NativeRunConfig {
             optimizer: Optimizer::Sgd,
             resident: true,
             schedule: SchedMode::from_env(),
+            simd: SimdMode::from_env(),
             pipeline: false,
             profile: false,
         }
@@ -214,6 +220,8 @@ pub struct NativeReport {
     pub resident_state_bytes: u64,
     /// the instruction schedule the run executed under
     pub schedule: SchedMode,
+    /// the resolved kernel lane width the run executed under
+    pub simd: SimdLevel,
     /// whether batch generation overlapped execution on a producer thread
     pub pipelined: bool,
     /// per-opcode / per-wavefront profile, when requested
@@ -367,7 +375,8 @@ impl NativeTrainer {
         } else {
             config.threads
         };
-        let mut exec = Executor::with_threads(threads).with_sched(config.schedule);
+        let mut exec =
+            Executor::with_threads(threads).with_sched(config.schedule).with_simd(config.simd);
         if config.profile {
             exec.enable_profiling();
         }
@@ -617,6 +626,7 @@ impl NativeTrainer {
             optimizer: self.config.optimizer,
             resident_state_bytes: self.program.resident_state_bytes(),
             schedule: self.exec.sched(),
+            simd: self.exec.simd(),
             pipelined: pipeline,
             profile: self.exec.take_profile(),
         })

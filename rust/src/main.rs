@@ -95,6 +95,12 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
             "serial | graph instruction schedule (auto = ZCS_SCHED env, else graph); \
              results are bit-identical",
         )
+        .opt(
+            "simd",
+            "auto",
+            "off | 4 | 8 kernel lane width (auto = ZCS_SIMD env, else detected); \
+             order-preserving kernels are bit-identical at every width",
+        )
         .switch(
             "pipeline-batches",
             "generate the next batch on a producer thread while the current step \
@@ -148,6 +154,10 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
         "auto" => zcs::autodiff::SchedMode::from_env(),
         other => zcs::autodiff::SchedMode::parse(other).map_err(|e| anyhow!(e))?,
     };
+    let simd = match p.get("simd") {
+        "auto" => zcs::tensor::simd::SimdMode::from_env(),
+        other => zcs::tensor::simd::SimdMode::parse(other).map_err(|e| anyhow!(e))?,
+    };
     // ZCS_PROFILE follows the usual truthy convention: unset, empty and
     // "0" mean off
     let env_profile = std::env::var("ZCS_PROFILE")
@@ -175,6 +185,7 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
         optimizer,
         resident: !p.switch("feed-weights"),
         schedule,
+        simd,
         pipeline: p.switch("pipeline-batches"),
         profile,
         ..NativeRunConfig::default()
@@ -200,6 +211,7 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
         prog.schedule_summary(),
         if report.pipelined { ", pipelined batches" } else { "" }
     );
+    println!("simd: {} ({} f64 lanes)", report.simd.name(), report.simd.width());
     println!(
         "step program: {} instructions from a {}-node tape \
          (CSE {}, folded {}, simplified {}; {} slots, peak {:.1} KiB)",
@@ -235,7 +247,8 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
     );
     if let Some(profile) = &report.profile {
         println!("\nprofile ({} runs, {:.1} ms wall):", profile.runs, profile.wall_ns as f64 / 1e6);
-        let mut table = Table::new(&["opcode", "calls", "total ms", "mean us", "% wall"]);
+        let mut table =
+            Table::new(&["opcode", "calls", "total ms", "mean us", "% wall", "GFLOP/s", "GB/s"]);
         for (op, t) in profile.top_ops().into_iter().take(12) {
             table.row(&[
                 op.to_string(),
@@ -243,6 +256,8 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
                 format!("{:.2}", t.ns as f64 / 1e6),
                 format!("{:.2}", t.ns as f64 / 1e3 / t.count.max(1) as f64),
                 format!("{:.1}", t.ns as f64 / profile.wall_ns.max(1) as f64 * 100.0),
+                format!("{:.2}", t.gflops()),
+                format!("{:.2}", t.gbytes()),
             ]);
         }
         table.print();

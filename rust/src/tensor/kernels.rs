@@ -7,25 +7,140 @@
 //! instructions and across runs, so the steady state performs no heap
 //! allocation at all.
 //!
-//! Numeric contract: each kernel performs bit-for-bit the same operation
-//! sequence as the interpreted [`crate::autodiff::Graph::eval`] path (same
-//! accumulation order in the matmuls, same elementwise ops), so compiled
-//! and interpreted execution agree exactly -- property-tested in
-//! `rust/tests/zcs_native_props.rs`.
+//! Numeric contract: at [`SimdLevel::Scalar`] each kernel performs
+//! bit-for-bit the same operation sequence as the interpreted
+//! [`crate::autodiff::Graph::eval`] path (same accumulation order in the
+//! matmuls, same elementwise ops), so compiled and interpreted execution
+//! agree exactly -- property-tested in `rust/tests/zcs_native_props.rs`.
+//!
+//! SIMD contract ([`crate::tensor::simd`]): the `*_pool` kernels take a
+//! resolved [`SimdLevel`] and run `W`-lane inner loops with a scalar tail.
+//! *Order-preserving* kernels -- every elementwise op, the fused
+//! micro-program interpreter, matmul epilogues, the plain matmul (its
+//! inner j-loop vectorizes across output elements, keeping each element's
+//! ascending-`k` accumulation and the zero-skip), the axis-0 column sum,
+//! and the optimizer updates -- compute each output element with the
+//! identical scalar operation sequence, so they stay bit-exact against
+//! scalar at every width.  *Reassociating* kernels -- `matmul_nt`'s
+//! k-loop, the axis-1 row sum, and the full sum -- split the reduction
+//! into `W` lane sub-accumulators (lane `l` takes the terms with index
+//! `l` mod `W` over the aligned prefix), combine lanes in ascending lane
+//! order, then add the scalar tail in ascending index order; the split
+//! depends only on the reduction length and the width, so a given width
+//! is bit-reproducible across runs and thread counts and differs from
+//! scalar only by bounded rounding (`matmul_nt` additionally drops the
+//! scalar path's zero-skip in its lane loop).
 //!
 //! Parallelism contract: the `*_pool` variants split work into
 //! *data-disjoint* blocks (whole output rows for the matmuls, element
 //! blocks for [`fused_into`], columns for the axis-0 reduction) and keep
 //! every per-element accumulation sequential, so results are bit-identical
 //! for any thread count -- property-tested in `rust/tests/fusion_pool.rs`.
-//! The serial entry points are thin wrappers over the same code.
+//! The serial entry points are thin wrappers over the same code at
+//! [`SimdLevel::Scalar`].
 //!
 //! Aliasing contract: `out` must not alias any input (the program lowerer
 //! guarantees this by never freeing an operand's arena slot before the
 //! instruction that last reads it has completed).
 
+use super::simd::{F64x4, F64x8, Lane, SimdLevel};
 use super::Tensor;
 use crate::util::pool::{grain, Pool};
+
+/// Dispatch once per kernel call: the scalar arm runs the legacy loop
+/// verbatim; the lane arm is monomorphized per width with `$l` bound to
+/// the lane type.
+macro_rules! simd_dispatch {
+    ($level:expr, $scalar:expr, $l:ident => $vec:expr) => {
+        match $level {
+            SimdLevel::Scalar => $scalar,
+            SimdLevel::W4 => {
+                type $l = F64x4;
+                $vec
+            }
+            SimdLevel::W8 => {
+                type $l = F64x8;
+                $vec
+            }
+        }
+    };
+}
+
+/// Lane-wide elementwise binary map with scalar tail; per-element values
+/// are identical to the scalar loop (lanes only batch independent
+/// elements).
+#[inline]
+fn ew_binary<L: Lane>(
+    a: &[f64],
+    b: &[f64],
+    out: &mut [f64],
+    lane: impl Fn(L, L) -> L,
+    scalar: impl Fn(f64, f64) -> f64,
+) {
+    let main = out.len() - out.len() % L::W;
+    let mut i = 0;
+    while i < main {
+        lane(L::load(&a[i..]), L::load(&b[i..])).store(&mut out[i..]);
+        i += L::W;
+    }
+    for j in main..out.len() {
+        out[j] = scalar(a[j], b[j]);
+    }
+}
+
+/// Lane-wide elementwise unary map with scalar tail; see [`ew_binary`].
+#[inline]
+fn ew_unary<L: Lane>(
+    a: &[f64],
+    out: &mut [f64],
+    lane: impl Fn(L) -> L,
+    scalar: impl Fn(f64) -> f64,
+) {
+    let main = out.len() - out.len() % L::W;
+    let mut i = 0;
+    while i < main {
+        lane(L::load(&a[i..])).store(&mut out[i..]);
+        i += L::W;
+    }
+    for j in main..out.len() {
+        out[j] = scalar(a[j]);
+    }
+}
+
+/// Lane-wide `out[i] += xs[i]`; order-preserving (each output element
+/// receives the identical scalar add).
+#[inline]
+fn ew_acc<L: Lane>(out: &mut [f64], xs: &[f64]) {
+    let main = out.len() - out.len() % L::W;
+    let mut i = 0;
+    while i < main {
+        L::load(&out[i..]).add(L::load(&xs[i..])).store(&mut out[i..]);
+        i += L::W;
+    }
+    for j in main..out.len() {
+        out[j] += xs[j];
+    }
+}
+
+/// Reassociating lane-split sum: lane `l` accumulates the elements with
+/// index `l` mod `W` over the aligned prefix, lanes combine in ascending
+/// lane order, the tail is added last in ascending index order.  The
+/// split depends only on `xs.len()` and `W`.
+#[inline]
+fn lane_sum<L: Lane>(xs: &[f64]) -> f64 {
+    let main = xs.len() - xs.len() % L::W;
+    let mut acc = L::zero();
+    let mut i = 0;
+    while i < main {
+        acc = acc.add(L::load(&xs[i..]));
+        i += L::W;
+    }
+    let mut s = acc.reduce_add_ordered();
+    for &x in &xs[main..] {
+        s += x;
+    }
+    s
+}
 
 /// Reset `out` to `shape` with all-zero contents, reusing its allocation.
 fn zero_fill(out: &mut Tensor, shape: &[usize]) {
@@ -47,79 +162,127 @@ fn shape_only(out: &mut Tensor, shape: &[usize]) {
     out.data.resize(n, 0.0);
 }
 
-/// `out = a + b` (same shape).
-pub fn add_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
-    assert_eq!(a.shape, b.shape, "add_into shapes");
-    shape_only(out, &a.shape);
-    for (o, (x, y)) in out.data.iter_mut().zip(a.data.iter().zip(&b.data)) {
-        *o = x + y;
-    }
+/// Declare an elementwise kernel pair: the legacy serial name (scalar
+/// backend, signature unchanged) plus a `_simd` variant dispatching on a
+/// [`SimdLevel`].  Order-preserving: every width is bit-exact vs scalar.
+macro_rules! ew_binary_kernel {
+    ($(#[$doc:meta])* $name:ident, $name_simd:ident, $scalar:expr, $lane:expr) => {
+        $(#[$doc])*
+        pub fn $name(a: &Tensor, b: &Tensor, out: &mut Tensor) {
+            $name_simd(a, b, out, SimdLevel::Scalar);
+        }
+
+        $(#[$doc])*
+        pub fn $name_simd(a: &Tensor, b: &Tensor, out: &mut Tensor, simd: SimdLevel) {
+            assert_eq!(a.shape, b.shape, concat!(stringify!($name), " shapes"));
+            shape_only(out, &a.shape);
+            let scalar: fn(f64, f64) -> f64 = $scalar;
+            simd_dispatch!(
+                simd,
+                for (o, (x, y)) in out.data.iter_mut().zip(a.data.iter().zip(&b.data)) {
+                    *o = scalar(*x, *y);
+                },
+                L => ew_binary::<L>(&a.data, &b.data, &mut out.data, $lane, scalar)
+            );
+        }
+    };
 }
 
-/// `out = a - b` (same shape).
-pub fn sub_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
-    assert_eq!(a.shape, b.shape, "sub_into shapes");
-    shape_only(out, &a.shape);
-    for (o, (x, y)) in out.data.iter_mut().zip(a.data.iter().zip(&b.data)) {
-        *o = x - y;
-    }
+/// Unary flavor of [`ew_binary_kernel`].
+macro_rules! ew_unary_kernel {
+    ($(#[$doc:meta])* $name:ident, $name_simd:ident, $scalar:expr, $lane:expr) => {
+        $(#[$doc])*
+        pub fn $name(a: &Tensor, out: &mut Tensor) {
+            $name_simd(a, out, SimdLevel::Scalar);
+        }
+
+        $(#[$doc])*
+        pub fn $name_simd(a: &Tensor, out: &mut Tensor, simd: SimdLevel) {
+            shape_only(out, &a.shape);
+            let scalar: fn(f64) -> f64 = $scalar;
+            simd_dispatch!(
+                simd,
+                for (o, x) in out.data.iter_mut().zip(&a.data) {
+                    *o = scalar(*x);
+                },
+                L => ew_unary::<L>(&a.data, &mut out.data, $lane, scalar)
+            );
+        }
+    };
 }
 
-/// `out = a * b` elementwise (same shape).
-pub fn mul_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
-    assert_eq!(a.shape, b.shape, "mul_into shapes");
-    shape_only(out, &a.shape);
-    for (o, (x, y)) in out.data.iter_mut().zip(a.data.iter().zip(&b.data)) {
-        *o = x * y;
-    }
-}
+ew_binary_kernel!(
+    /// `out = a + b` (same shape).
+    add_into,
+    add_into_simd,
+    |x, y| x + y,
+    Lane::add
+);
+ew_binary_kernel!(
+    /// `out = a - b` (same shape).
+    sub_into,
+    sub_into_simd,
+    |x, y| x - y,
+    Lane::sub
+);
+ew_binary_kernel!(
+    /// `out = a * b` elementwise (same shape).
+    mul_into,
+    mul_into_simd,
+    |x, y| x * y,
+    Lane::mul
+);
+ew_unary_kernel!(
+    /// `out = tanh(a)` elementwise.
+    tanh_into,
+    tanh_into_simd,
+    f64::tanh,
+    Lane::tanh
+);
+ew_unary_kernel!(
+    /// `out = -a` elementwise.
+    neg_into,
+    neg_into_simd,
+    |x| -x,
+    Lane::neg
+);
+ew_unary_kernel!(
+    /// `out = a * a` elementwise (same multiply as the interpreter's `v * v`).
+    square_into,
+    square_into_simd,
+    |x| x * x,
+    Lane::square
+);
+ew_unary_kernel!(
+    /// `out = sin(a)` elementwise.
+    sin_into,
+    sin_into_simd,
+    f64::sin,
+    Lane::sin
+);
+ew_unary_kernel!(
+    /// `out = cos(a)` elementwise.
+    cos_into,
+    cos_into_simd,
+    f64::cos,
+    Lane::cos
+);
 
 /// `out = a * s`.
 pub fn scale_into(a: &Tensor, s: f64, out: &mut Tensor) {
-    shape_only(out, &a.shape);
-    for (o, x) in out.data.iter_mut().zip(&a.data) {
-        *o = x * s;
-    }
+    scale_into_simd(a, s, out, SimdLevel::Scalar);
 }
 
-/// `out = tanh(a)` elementwise.
-pub fn tanh_into(a: &Tensor, out: &mut Tensor) {
+/// `out = a * s`; order-preserving at every width.
+pub fn scale_into_simd(a: &Tensor, s: f64, out: &mut Tensor, simd: SimdLevel) {
     shape_only(out, &a.shape);
-    for (o, x) in out.data.iter_mut().zip(&a.data) {
-        *o = x.tanh();
-    }
-}
-
-/// `out = -a` elementwise.
-pub fn neg_into(a: &Tensor, out: &mut Tensor) {
-    shape_only(out, &a.shape);
-    for (o, x) in out.data.iter_mut().zip(&a.data) {
-        *o = -x;
-    }
-}
-
-/// `out = a * a` elementwise (same multiply as the interpreter's `v * v`).
-pub fn square_into(a: &Tensor, out: &mut Tensor) {
-    shape_only(out, &a.shape);
-    for (o, x) in out.data.iter_mut().zip(&a.data) {
-        *o = x * x;
-    }
-}
-
-/// `out = sin(a)` elementwise.
-pub fn sin_into(a: &Tensor, out: &mut Tensor) {
-    shape_only(out, &a.shape);
-    for (o, x) in out.data.iter_mut().zip(&a.data) {
-        *o = x.sin();
-    }
-}
-
-/// `out = cos(a)` elementwise.
-pub fn cos_into(a: &Tensor, out: &mut Tensor) {
-    shape_only(out, &a.shape);
-    for (o, x) in out.data.iter_mut().zip(&a.data) {
-        *o = x.cos();
-    }
+    simd_dispatch!(
+        simd,
+        for (o, x) in out.data.iter_mut().zip(&a.data) {
+            *o = x * s;
+        },
+        L => ew_unary::<L>(&a.data, &mut out.data, |x: L| x.scale(s), |x| x * s)
+    );
 }
 
 /// `out = a` reinterpreted as `shape` (same row-major data).
@@ -132,35 +295,43 @@ pub fn reshape_into(a: &Tensor, shape: &[usize], out: &mut Tensor) {
 /// Keep-dims axis sum of a 2-D tensor: axis 1 -> (m, 1), axis 0 -> (1, n).
 /// Accumulation order matches the interpreter's `sum_axis_eval` exactly.
 pub fn sum_axis_into(a: &Tensor, axis: usize, out: &mut Tensor) {
-    sum_axis_into_pool(a, axis, out, &Pool::serial());
+    sum_axis_into_pool(a, axis, out, &Pool::serial(), SimdLevel::Scalar);
 }
 
 /// Pooled [`sum_axis_into`]: axis 1 parallelises over output rows, axis 0
-/// over output columns; either way each output element's accumulation
-/// stays in the serial order, so results are bit-identical.
-pub fn sum_axis_into_pool(a: &Tensor, axis: usize, out: &mut Tensor, pool: &Pool) {
+/// over output columns; either way each output element belongs to exactly
+/// one task, so a given `simd` width is bit-identical for any thread
+/// count.  Axis 0 is order-preserving under lanes (input rows are added
+/// top-down, vectorized *across* output columns); axis 1 row sums
+/// reassociate via the [`lane_sum`] split.
+pub fn sum_axis_into_pool(a: &Tensor, axis: usize, out: &mut Tensor, pool: &Pool, simd: SimdLevel) {
     assert_eq!(a.shape.len(), 2, "sum_axis_into wants 2-D");
     let (m, n) = (a.shape[0], a.shape[1]);
     if axis == 1 {
         shape_only(out, &[m, 1]);
-        let min_rows = grain::elemwise_rows(n);
+        let min_rows = grain::elemwise_rows_simd(n, simd.width());
         let data = &a.data;
         pool.par_rows(m, 1, &mut out.data, min_rows, |range, block| {
             for (off, o) in block.iter_mut().enumerate() {
                 let i = range.start + off;
-                *o = data[i * n..(i + 1) * n].iter().sum();
+                let row = &data[i * n..(i + 1) * n];
+                *o = simd_dispatch!(simd, row.iter().sum(), L => lane_sum::<L>(row));
             }
         });
     } else {
         zero_fill(out, &[1, n]);
-        let min_cols = grain::elemwise_rows(m);
+        let min_cols = grain::elemwise_rows_simd(m, simd.width());
         let data = &a.data;
         pool.par_rows(n, 1, &mut out.data, min_cols, |range, block| {
             for i in 0..m {
-                let arow = &data[i * n..(i + 1) * n];
-                for (off, o) in block.iter_mut().enumerate() {
-                    *o += arow[range.start + off];
-                }
+                let arow = &data[i * n + range.start..i * n + range.end];
+                simd_dispatch!(
+                    simd,
+                    for (o, x) in block.iter_mut().zip(arow) {
+                        *o += x;
+                    },
+                    L => ew_acc::<L>(block, arow)
+                );
             }
         });
     }
@@ -177,33 +348,41 @@ pub fn broadcast_into(v: f64, shape: &[usize], out: &mut Tensor) {
 
 /// `out = sum(a)` as a scalar (shape `[]`).
 pub fn sum_all_into(a: &Tensor, out: &mut Tensor) {
+    sum_all_into_simd(a, out, SimdLevel::Scalar);
+}
+
+/// [`sum_all_into`] with lanes: reassociates via the [`lane_sum`] split,
+/// so a given width is deterministic but only ULP-close to scalar.
+pub fn sum_all_into_simd(a: &Tensor, out: &mut Tensor, simd: SimdLevel) {
     shape_only(out, &[]);
-    out.data[0] = a.data.iter().sum();
+    out.data[0] = simd_dispatch!(simd, a.data.iter().sum(), L => lane_sum::<L>(&a.data));
 }
 
 /// `out = a @ b` for `(m,k) @ (k,n)`, same per-element `k` accumulation
 /// order (and the same zero-skip) as [`Tensor::matmul`] so results match
 /// bit for bit.
 pub fn matmul_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
-    matmul_into_pool(a, b, out, &Pool::serial());
+    matmul_into_pool(a, b, out, &Pool::serial(), SimdLevel::Scalar);
 }
 
 /// Pooled, cache-blocked [`matmul_into`]: output rows are partitioned over
 /// the pool and the j/k loops are tiled so the `b` panel stays hot; every
 /// `(i, j)` element still accumulates over `k` in ascending order, so the
 /// result is bit-identical to the serial ikj kernel for any thread count
-/// or tile size.
-pub fn matmul_into_pool(a: &Tensor, b: &Tensor, out: &mut Tensor, pool: &Pool) {
+/// or tile size.  Lanes vectorize the inner j-loop *across* output
+/// elements (keeping the zero-skip), so every width is order-preserving
+/// and bit-exact vs scalar.
+pub fn matmul_into_pool(a: &Tensor, b: &Tensor, out: &mut Tensor, pool: &Pool, simd: SimdLevel) {
     assert_eq!(a.shape.len(), 2);
     assert_eq!(b.shape.len(), 2);
     let (m, k) = (a.shape[0], a.shape[1]);
     let (k2, n) = (b.shape[0], b.shape[1]);
     assert_eq!(k, k2, "matmul_into {:?} @ {:?}", a.shape, b.shape);
     zero_fill(out, &[m, n]);
-    let min_rows = grain::matmul_rows(k, n);
+    let min_rows = grain::matmul_rows_simd(k, n, simd.width());
     let (a_data, b_data) = (&a.data, &b.data);
     pool.par_rows(m, n, &mut out.data, min_rows, |range, block| {
-        matmul_rows(a_data, b_data, range, k, n, block);
+        matmul_rows_simd(a_data, b_data, range, k, n, block, simd);
     });
 }
 
@@ -211,6 +390,23 @@ pub fn matmul_into_pool(a: &Tensor, b: &Tensor, out: &mut Tensor, pool: &Pool) {
 /// 128 x 128 `b` panel is 128 KiB, comfortably within L2).
 const J_TILE: usize = 128;
 const K_TILE: usize = 128;
+
+/// [`matmul_rows`] behind the per-call width dispatch.
+fn matmul_rows_simd(
+    a: &[f64],
+    b: &[f64],
+    rows: std::ops::Range<usize>,
+    k: usize,
+    n: usize,
+    block: &mut [f64],
+    simd: SimdLevel,
+) {
+    simd_dispatch!(
+        simd,
+        matmul_rows(a, b, rows, k, n, block),
+        L => matmul_rows_lanes::<L>(a, b, rows, k, n, block)
+    );
+}
 
 /// The blocked ikj kernel for one contiguous block of output rows.
 fn matmul_rows(
@@ -242,29 +438,89 @@ fn matmul_rows(
     }
 }
 
+/// Lane-wide [`matmul_rows`]: identical tiling, zero-skip and per-element
+/// ascending-`k` accumulation; only the j-loop retires `W` output
+/// elements per op, so the result is bit-exact vs the scalar kernel.
+fn matmul_rows_lanes<L: Lane>(
+    a: &[f64],
+    b: &[f64],
+    rows: std::ops::Range<usize>,
+    k: usize,
+    n: usize,
+    block: &mut [f64],
+) {
+    for jb in (0..n).step_by(J_TILE) {
+        let jend = (jb + J_TILE).min(n);
+        let main = jb + (jend - jb) - (jend - jb) % L::W;
+        for kb in (0..k).step_by(K_TILE) {
+            let kend = (kb + K_TILE).min(k);
+            for (ri, i) in rows.clone().enumerate() {
+                let arow = &a[i * k..(i + 1) * k];
+                let orow = &mut block[ri * n..(ri + 1) * n];
+                for (kk, &av) in arow.iter().enumerate().take(kend).skip(kb) {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    let mut j = jb;
+                    while j < main {
+                        let o = L::load(&orow[j..]).add(L::load(&brow[j..]).scale(av));
+                        o.store(&mut orow[j..]);
+                        j += L::W;
+                    }
+                    for jj in main..jend {
+                        orow[jj] += av * brow[jj];
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// `out = a @ b^T` for `(m,k) @ (n,k)^T -> (m,n)` without materialising the
 /// transpose.  Accumulation order over `k` matches
 /// `a.matmul(&b.transpose())`, so results are identical.
 pub fn matmul_nt_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
-    matmul_nt_into_pool(a, b, out, &Pool::serial());
+    matmul_nt_into_pool(a, b, out, &Pool::serial(), SimdLevel::Scalar);
 }
 
 /// Pooled [`matmul_nt_into`] in dot-product form: both operand rows are
 /// contiguous, output rows are partitioned over the pool, and each `(i, j)`
 /// dot accumulates over `k` ascending with the interpreter's zero-skip --
-/// the identical addition sequence, so results are bit-exact.
-pub fn matmul_nt_into_pool(a: &Tensor, b: &Tensor, out: &mut Tensor, pool: &Pool) {
+/// the identical addition sequence, so scalar results are bit-exact.
+/// Lanes *reassociate* each dot via the documented k-split ([`lane_sum`]
+/// order: lane sub-accumulators combined ascending, scalar tail last) and
+/// drop the zero-skip inside the lane loop; the split depends only on `k`
+/// and the width, so each width is deterministic across thread counts.
+pub fn matmul_nt_into_pool(a: &Tensor, b: &Tensor, out: &mut Tensor, pool: &Pool, simd: SimdLevel) {
     assert_eq!(a.shape.len(), 2);
     assert_eq!(b.shape.len(), 2);
     let (m, k) = (a.shape[0], a.shape[1]);
     let (n, k2) = (b.shape[0], b.shape[1]);
     assert_eq!(k, k2, "matmul_nt_into {:?} @ {:?}^T", a.shape, b.shape);
     shape_only(out, &[m, n]);
-    let min_rows = grain::matmul_rows(k, n);
+    let min_rows = grain::matmul_rows_simd(k, n, simd.width());
     let (a_data, b_data) = (&a.data, &b.data);
     pool.par_rows(m, n, &mut out.data, min_rows, |range, block| {
-        matmul_nt_rows(a_data, b_data, range, k, n, block);
+        matmul_nt_rows_simd(a_data, b_data, range, k, n, block, simd);
     });
+}
+
+/// [`matmul_nt_rows`] behind the per-call width dispatch.
+fn matmul_nt_rows_simd(
+    a: &[f64],
+    b: &[f64],
+    rows: std::ops::Range<usize>,
+    k: usize,
+    n: usize,
+    block: &mut [f64],
+    simd: SimdLevel,
+) {
+    simd_dispatch!(
+        simd,
+        matmul_nt_rows(a, b, rows, k, n, block),
+        L => matmul_nt_rows_lanes::<L>(a, b, rows, k, n, block)
+    );
 }
 
 /// The dot-form NT kernel for one contiguous block of output rows.
@@ -293,6 +549,39 @@ fn matmul_nt_rows(
     }
 }
 
+/// Lane-wide dot-form NT kernel: each `(i, j)` dot splits its k-loop into
+/// `W` lane sub-accumulators (lane `l` takes `kk = l mod W` over the
+/// aligned prefix), combines lanes ascending, then adds the scalar tail
+/// ascending -- deterministic per width, ULP-close to scalar.
+fn matmul_nt_rows_lanes<L: Lane>(
+    a: &[f64],
+    b: &[f64],
+    rows: std::ops::Range<usize>,
+    k: usize,
+    n: usize,
+    block: &mut [f64],
+) {
+    let main = k - k % L::W;
+    for (ri, i) in rows.enumerate() {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut block[ri * n..(ri + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = L::zero();
+            let mut kk = 0;
+            while kk < main {
+                acc = acc.add(L::load(&arow[kk..]).mul(L::load(&brow[kk..])));
+                kk += L::W;
+            }
+            let mut s = acc.reduce_add_ordered();
+            for kk in main..k {
+                s += arow[kk] * brow[kk];
+            }
+            *o = s;
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // In-place optimizer updates (resident training state)
 // ---------------------------------------------------------------------------
@@ -304,10 +593,38 @@ fn matmul_nt_rows(
 /// resident training trajectories bit-match the feed-based ones --
 /// pinned by `rust/tests/resident_step.rs`.
 pub fn sgd_update(w: &mut Tensor, g: &Tensor, lr: f64) {
+    sgd_update_pool(w, g, lr, &Pool::serial(), SimdLevel::Scalar);
+}
+
+/// Pooled, lane-wide [`sgd_update`]: element blocks are disjoint and each
+/// element performs the identical multiply-then-subtract, so every width
+/// and thread count is bit-exact -- resident trajectories stay pinned.
+pub fn sgd_update_pool(w: &mut Tensor, g: &Tensor, lr: f64, pool: &Pool, simd: SimdLevel) {
     assert_eq!(w.shape, g.shape, "sgd_update shapes");
-    for (wi, gi) in w.data.iter_mut().zip(&g.data) {
-        *wi -= gi * lr;
-    }
+    let len = w.data.len();
+    let min = grain::elemwise_rows_simd(1, simd.width());
+    let g_data = &g.data;
+    pool.par_rows(len, 1, &mut w.data, min, |range, block| {
+        let g_block = &g_data[range];
+        simd_dispatch!(
+            simd,
+            for (wi, gi) in block.iter_mut().zip(g_block) {
+                *wi -= gi * lr;
+            },
+            L => {
+                let main = block.len() - block.len() % L::W;
+                let mut i = 0;
+                while i < main {
+                    let wl = L::load(&block[i..]).sub(L::load(&g_block[i..]).scale(lr));
+                    wl.store(&mut block[i..]);
+                    i += L::W;
+                }
+                for j in main..block.len() {
+                    block[j] -= g_block[j] * lr;
+                }
+            }
+        );
+    });
 }
 
 /// In-place Adam with bias correction (the optimizer the paper's DeepXDE
@@ -334,20 +651,117 @@ pub fn adam_update(
     eps: f64,
     t: u64,
 ) {
+    adam_update_pool(w, m, v, g, lr, beta1, beta2, eps, t, &Pool::serial(), SimdLevel::Scalar);
+}
+
+/// Pooled, lane-wide [`adam_update`]: element blocks are disjoint and the
+/// lane ops mirror the scalar sequence term for term (commutative
+/// multiplies only -- no FMA, no reciprocal tricks), so every width and
+/// thread count is bit-exact.  Three resident buffers mutate at once, so
+/// the split uses [`Pool::run`] over raw disjoint sub-slices instead of
+/// [`Pool::par_rows`]; a single-task split runs inline and allocates
+/// nothing, preserving the steady-state zero-allocation contract.
+#[allow(clippy::too_many_arguments)]
+pub fn adam_update_pool(
+    w: &mut Tensor,
+    m: &mut Tensor,
+    v: &mut Tensor,
+    g: &Tensor,
+    lr: f64,
+    beta1: f64,
+    beta2: f64,
+    eps: f64,
+    t: u64,
+    pool: &Pool,
+    simd: SimdLevel,
+) {
     assert_eq!(w.shape, g.shape, "adam_update w/g shapes");
     assert_eq!(m.shape, g.shape, "adam_update m shape");
     assert_eq!(v.shape, g.shape, "adam_update v shape");
     let bc1 = 1.0 - beta1.powi(t.min(i32::MAX as u64) as i32);
     let bc2 = 1.0 - beta2.powi(t.min(i32::MAX as u64) as i32);
-    for (((wi, mi), vi), gi) in
-        w.data.iter_mut().zip(m.data.iter_mut()).zip(v.data.iter_mut()).zip(&g.data)
-    {
-        *mi = beta1 * *mi + (1.0 - beta1) * gi;
-        *vi = beta2 * *vi + (1.0 - beta2) * (gi * gi);
-        let mhat = *mi / bc1;
-        let vhat = *vi / bc2;
-        *wi -= lr * mhat / (vhat.sqrt() + eps);
+    let len = w.data.len();
+    let min = grain::elemwise_rows_simd(1, simd.width());
+    let n_tasks = if len == 0 { 0 } else { pool.threads().min(len.div_ceil(min)).max(1) };
+    if n_tasks <= 1 {
+        if len > 0 {
+            adam_block(
+                &mut w.data,
+                &mut m.data,
+                &mut v.data,
+                &g.data,
+                (lr, beta1, beta2, eps),
+                (bc1, bc2),
+                simd,
+            );
+        }
+        return;
     }
+    struct SyncMut(*mut f64);
+    unsafe impl Sync for SyncMut {}
+    let (wp, mp, vp) =
+        (SyncMut(w.data.as_mut_ptr()), SyncMut(m.data.as_mut_ptr()), SyncMut(v.data.as_mut_ptr()));
+    let g_data = &g.data;
+    pool.run(n_tasks, &|task| {
+        let (lo, hi) = (len * task / n_tasks, len * (task + 1) / n_tasks);
+        // SAFETY: tasks cover disjoint index ranges of three equally sized
+        // live buffers, and `Pool::run` joins before the borrow ends
+        let (wb, mb, vb) = unsafe {
+            (
+                std::slice::from_raw_parts_mut(wp.0.add(lo), hi - lo),
+                std::slice::from_raw_parts_mut(mp.0.add(lo), hi - lo),
+                std::slice::from_raw_parts_mut(vp.0.add(lo), hi - lo),
+            )
+        };
+        adam_block(wb, mb, vb, &g_data[lo..hi], (lr, beta1, beta2, eps), (bc1, bc2), simd);
+    });
+}
+
+/// One contiguous block of the Adam update; hyper-parameters travel as
+/// `(lr, beta1, beta2, eps)` and the precomputed bias corrections as
+/// `(bc1, bc2)`.
+fn adam_block(
+    w: &mut [f64],
+    m: &mut [f64],
+    v: &mut [f64],
+    g: &[f64],
+    (lr, beta1, beta2, eps): (f64, f64, f64, f64),
+    (bc1, bc2): (f64, f64),
+    simd: SimdLevel,
+) {
+    simd_dispatch!(
+        simd,
+        for (((wi, mi), vi), gi) in w.iter_mut().zip(m.iter_mut()).zip(v.iter_mut()).zip(g) {
+            *mi = beta1 * *mi + (1.0 - beta1) * gi;
+            *vi = beta2 * *vi + (1.0 - beta2) * (gi * gi);
+            let mhat = *mi / bc1;
+            let vhat = *vi / bc2;
+            *wi -= lr * mhat / (vhat.sqrt() + eps);
+        },
+        L => {
+            let main = w.len() - w.len() % L::W;
+            let mut i = 0;
+            while i < main {
+                let gl = L::load(&g[i..]);
+                let ml = L::load(&m[i..]).scale(beta1).add(gl.scale(1.0 - beta1));
+                let vl = L::load(&v[i..]).scale(beta2).add(gl.mul(gl).scale(1.0 - beta2));
+                ml.store(&mut m[i..]);
+                vl.store(&mut v[i..]);
+                let mhat = ml.div(L::splat(bc1));
+                let vhat = vl.div(L::splat(bc2));
+                let step = mhat.scale(lr).div(vhat.sqrt().add(L::splat(eps)));
+                L::load(&w[i..]).sub(step).store(&mut w[i..]);
+                i += L::W;
+            }
+            for j in main..w.len() {
+                m[j] = beta1 * m[j] + (1.0 - beta1) * g[j];
+                v[j] = beta2 * v[j] + (1.0 - beta2) * (g[j] * g[j]);
+                let mhat = m[j] / bc1;
+                let vhat = v[j] / bc2;
+                w[j] -= lr * mhat / (vhat.sqrt() + eps);
+            }
+        }
+    );
 }
 
 /// `out = a^T` (2-D).
@@ -458,6 +872,26 @@ fn micro_eval(op: MicroOp, regs: &[f64]) -> f64 {
     }
 }
 
+/// One register-machine micro-op on a lane-wide register file: register
+/// `r` lives at `regs[r * W..(r + 1) * W]`.  Each lane applies the
+/// identical scalar operation [`micro_eval`] would, so lane execution is
+/// bit-exact per element.
+#[inline(always)]
+fn micro_eval_lanes<L: Lane>(op: MicroOp, regs: &[f64]) -> L {
+    let ld = |r: u16| L::load(&regs[r as usize * L::W..]);
+    match op {
+        MicroOp::Add(x, y) => ld(x).add(ld(y)),
+        MicroOp::Sub(x, y) => ld(x).sub(ld(y)),
+        MicroOp::Mul(x, y) => ld(x).mul(ld(y)),
+        MicroOp::Scale(x, c) => ld(x).scale(c),
+        MicroOp::Neg(x) => ld(x).neg(),
+        MicroOp::Square(x) => ld(x).square(),
+        MicroOp::Sin(x) => ld(x).sin(),
+        MicroOp::Cos(x) => ld(x).cos(),
+        MicroOp::Tanh(x) => ld(x).tanh(),
+    }
+}
+
 /// One contiguous block of a fused pass; `block[off]` is output element
 /// `base + off`.  `regs` must hold `kernel.n_regs()` registers.
 fn fused_block(
@@ -485,11 +919,50 @@ fn fused_block(
     }
 }
 
+/// Lane-wide [`fused_block`]: the register file widens to
+/// `n_regs * W` scalars and the micro-program runs once per *lane block*
+/// of `W` output elements -- one dispatch per micro-op per block instead
+/// of per element, which is where the fused interpreter's SIMD speedup
+/// comes from.  The scalar tail reuses the first `n_regs` slots of the
+/// same buffer (their lane values are dead once the main loop exits).
+/// `regs` must hold `kernel.n_regs() * W` scalars.
+fn fused_block_lanes<L: Lane>(
+    kernel: &FusedKernel,
+    exts: &[&Tensor],
+    base: usize,
+    block: &mut [f64],
+    regs: &mut [f64],
+) {
+    let w = L::W;
+    let n_ext = kernel.exts.len();
+    let out_reg = kernel.out as usize;
+    let main = block.len() - block.len() % w;
+    let mut off = 0;
+    while off < main {
+        let i = base + off;
+        for (r, (ext, kind)) in exts.iter().zip(&kernel.exts).enumerate() {
+            match kind {
+                ExtKind::Elem => regs[r * w..(r + 1) * w].copy_from_slice(&ext.data[i..i + w]),
+                ExtKind::Scalar => regs[r * w..(r + 1) * w].fill(ext.data[0]),
+            }
+        }
+        for (j, op) in kernel.ops.iter().enumerate() {
+            let val = micro_eval_lanes::<L>(*op, regs);
+            val.store(&mut regs[(n_ext + j) * w..]);
+        }
+        block[off..off + w].copy_from_slice(&regs[out_reg * w..(out_reg + 1) * w]);
+        off += w;
+    }
+    fused_block(kernel, exts, base + main, &mut block[main..], &mut regs[..kernel.n_regs()]);
+}
+
 /// Execute a fused micro-program over `exts` into `out` (shape `shape`),
-/// element blocks partitioned over the pool.  On a serial pool the
-/// caller-owned `regs_scratch` holds the register file, so the steady
-/// state allocates nothing; threaded tasks carry their own small register
-/// file each.
+/// element blocks partitioned over the pool, lane blocks within each task
+/// per `simd` (order-preserving: every width is bit-exact vs scalar for
+/// any thread count or block partition).  On a serial pool the
+/// caller-owned `regs_scratch` holds the (lane-wide) register file, so
+/// the steady state allocates nothing; threaded tasks carry their own
+/// small register file each.
 pub fn fused_into(
     kernel: &FusedKernel,
     exts: &[&Tensor],
@@ -497,6 +970,7 @@ pub fn fused_into(
     out: &mut Tensor,
     pool: &Pool,
     regs_scratch: &mut Vec<f64>,
+    simd: SimdLevel,
 ) {
     assert_eq!(exts.len(), kernel.exts.len(), "fused_into arity");
     shape_only(out, shape);
@@ -507,14 +981,24 @@ pub fn fused_into(
             ExtKind::Scalar => assert_eq!(ext.data.len(), 1, "fused scalar ext length"),
         }
     }
+    let n_regs = kernel.n_regs() * simd.width();
     if pool.threads() == 1 {
         regs_scratch.clear();
-        regs_scratch.resize(kernel.n_regs(), 0.0);
-        fused_block(kernel, exts, 0, &mut out.data, regs_scratch);
+        regs_scratch.resize(n_regs, 0.0);
+        simd_dispatch!(
+            simd,
+            fused_block(kernel, exts, 0, &mut out.data, regs_scratch),
+            L => fused_block_lanes::<L>(kernel, exts, 0, &mut out.data, regs_scratch)
+        );
     } else {
-        pool.par_rows(len, 1, &mut out.data, grain::elemwise_rows(1), |range, block| {
-            let mut regs = vec![0.0f64; kernel.n_regs()];
-            fused_block(kernel, exts, range.start, block, &mut regs);
+        let min = grain::elemwise_rows_simd(1, simd.width());
+        pool.par_rows(len, 1, &mut out.data, min, |range, block| {
+            let mut regs = vec![0.0f64; n_regs];
+            simd_dispatch!(
+                simd,
+                fused_block(kernel, exts, range.start, block, &mut regs),
+                L => fused_block_lanes::<L>(kernel, exts, range.start, block, &mut regs)
+            );
         });
     }
 }
@@ -585,12 +1069,66 @@ fn epilogue_block(
     }
 }
 
+/// Lane-wide [`epilogue_block`]; same layout as [`fused_block_lanes`]
+/// with register 0 loaded from the freshly accumulated matmul elements.
+/// Order-preserving: bit-exact vs the scalar epilogue at every width.
+/// `regs` must hold `epi.n_regs() * W` scalars.
+fn epilogue_block_lanes<L: Lane>(
+    epi: &Epilogue,
+    exts: &[&Tensor],
+    base: usize,
+    block: &mut [f64],
+    regs: &mut [f64],
+) {
+    let w = L::W;
+    let n_ext = epi.exts.len();
+    let out_reg = epi.out as usize;
+    let main = block.len() - block.len() % w;
+    let mut off = 0;
+    while off < main {
+        let i = base + off;
+        regs[..w].copy_from_slice(&block[off..off + w]);
+        for (r, (ext, kind)) in exts.iter().zip(&epi.exts).enumerate() {
+            match kind {
+                ExtKind::Elem => {
+                    regs[(1 + r) * w..(2 + r) * w].copy_from_slice(&ext.data[i..i + w]);
+                }
+                ExtKind::Scalar => regs[(1 + r) * w..(2 + r) * w].fill(ext.data[0]),
+            }
+        }
+        for (j, op) in epi.ops.iter().enumerate() {
+            let val = micro_eval_lanes::<L>(*op, regs);
+            val.store(&mut regs[(1 + n_ext + j) * w..]);
+        }
+        block[off..off + w].copy_from_slice(&regs[out_reg * w..(out_reg + 1) * w]);
+        off += w;
+    }
+    epilogue_block(epi, exts, base + main, &mut block[main..], &mut regs[..epi.n_regs()]);
+}
+
+/// Width dispatch over [`epilogue_block`] / [`epilogue_block_lanes`].
+fn epilogue_block_simd(
+    epi: &Epilogue,
+    exts: &[&Tensor],
+    base: usize,
+    block: &mut [f64],
+    regs: &mut [f64],
+    simd: SimdLevel,
+) {
+    simd_dispatch!(
+        simd,
+        epilogue_block(epi, exts, base, block, regs),
+        L => epilogue_block_lanes::<L>(epi, exts, base, block, regs)
+    );
+}
+
 /// [`matmul_into_pool`] with a fused elementwise epilogue: each output row
 /// block is accumulated exactly as the plain kernel would (same blocked
 /// loops, same zero-skip) and then transformed in place by `epi` while it
 /// is cache-hot -- one pass instead of a full store + reload per absorbed
 /// elementwise instruction.  Bit-identical to running the unfused
 /// instructions back to back, for any thread count.
+#[allow(clippy::too_many_arguments)]
 pub fn matmul_fused_into_pool(
     a: &Tensor,
     b: &Tensor,
@@ -599,6 +1137,7 @@ pub fn matmul_fused_into_pool(
     out: &mut Tensor,
     pool: &Pool,
     regs_scratch: &mut Vec<f64>,
+    simd: SimdLevel,
 ) {
     assert_eq!(a.shape.len(), 2);
     assert_eq!(b.shape.len(), 2);
@@ -607,32 +1146,36 @@ pub fn matmul_fused_into_pool(
     assert_eq!(k, k2, "matmul_fused_into {:?} @ {:?}", a.shape, b.shape);
     check_epilogue_exts(epi, exts, m * n);
     zero_fill(out, &[m, n]);
-    let min_rows = grain::matmul_rows(k, n);
+    let min_rows = grain::matmul_rows_simd(k, n, simd.width());
+    let n_regs = epi.n_regs() * simd.width();
     let (a_data, b_data) = (&a.data, &b.data);
     if pool.threads() == 1 {
         regs_scratch.clear();
-        regs_scratch.resize(epi.n_regs(), 0.0);
+        regs_scratch.resize(n_regs, 0.0);
         // the same row-block granularity the pool would use, so the
         // epilogue still runs on cache-hot tiles
         let mut r0 = 0;
         while r0 < m {
             let r1 = (r0 + min_rows).min(m);
             let block = &mut out.data[r0 * n..r1 * n];
-            matmul_rows(a_data, b_data, r0..r1, k, n, block);
-            epilogue_block(epi, exts, r0 * n, block, regs_scratch);
+            matmul_rows_simd(a_data, b_data, r0..r1, k, n, block, simd);
+            epilogue_block_simd(epi, exts, r0 * n, block, regs_scratch, simd);
             r0 = r1;
         }
     } else {
         pool.par_rows(m, n, &mut out.data, min_rows, |range, block| {
-            matmul_rows(a_data, b_data, range.clone(), k, n, block);
-            let mut regs = vec![0.0f64; epi.n_regs()];
-            epilogue_block(epi, exts, range.start * n, block, &mut regs);
+            matmul_rows_simd(a_data, b_data, range.clone(), k, n, block, simd);
+            let mut regs = vec![0.0f64; n_regs];
+            epilogue_block_simd(epi, exts, range.start * n, block, &mut regs, simd);
         });
     }
 }
 
 /// [`matmul_nt_into_pool`] with a fused elementwise epilogue; see
-/// [`matmul_fused_into_pool`].
+/// [`matmul_fused_into_pool`].  The NT accumulation reassociates under
+/// lanes (same k-split as the unfused NT kernel, so fused == unfused
+/// still holds at every width); the epilogue itself is order-preserving.
+#[allow(clippy::too_many_arguments)]
 pub fn matmul_nt_fused_into_pool(
     a: &Tensor,
     b: &Tensor,
@@ -641,6 +1184,7 @@ pub fn matmul_nt_fused_into_pool(
     out: &mut Tensor,
     pool: &Pool,
     regs_scratch: &mut Vec<f64>,
+    simd: SimdLevel,
 ) {
     assert_eq!(a.shape.len(), 2);
     assert_eq!(b.shape.len(), 2);
@@ -649,24 +1193,25 @@ pub fn matmul_nt_fused_into_pool(
     assert_eq!(k, k2, "matmul_nt_fused_into {:?} @ {:?}^T", a.shape, b.shape);
     check_epilogue_exts(epi, exts, m * n);
     shape_only(out, &[m, n]);
-    let min_rows = grain::matmul_rows(k, n);
+    let min_rows = grain::matmul_rows_simd(k, n, simd.width());
+    let n_regs = epi.n_regs() * simd.width();
     let (a_data, b_data) = (&a.data, &b.data);
     if pool.threads() == 1 {
         regs_scratch.clear();
-        regs_scratch.resize(epi.n_regs(), 0.0);
+        regs_scratch.resize(n_regs, 0.0);
         let mut r0 = 0;
         while r0 < m {
             let r1 = (r0 + min_rows).min(m);
             let block = &mut out.data[r0 * n..r1 * n];
-            matmul_nt_rows(a_data, b_data, r0..r1, k, n, block);
-            epilogue_block(epi, exts, r0 * n, block, regs_scratch);
+            matmul_nt_rows_simd(a_data, b_data, r0..r1, k, n, block, simd);
+            epilogue_block_simd(epi, exts, r0 * n, block, regs_scratch, simd);
             r0 = r1;
         }
     } else {
         pool.par_rows(m, n, &mut out.data, min_rows, |range, block| {
-            matmul_nt_rows(a_data, b_data, range.clone(), k, n, block);
-            let mut regs = vec![0.0f64; epi.n_regs()];
-            epilogue_block(epi, exts, range.start * n, block, &mut regs);
+            matmul_nt_rows_simd(a_data, b_data, range.clone(), k, n, block, simd);
+            let mut regs = vec![0.0f64; n_regs];
+            epilogue_block_simd(epi, exts, range.start * n, block, &mut regs, simd);
         });
     }
 }
@@ -773,14 +1318,14 @@ mod tests {
         for threads in [2usize, 4] {
             let pool = Pool::new(threads);
             matmul_into(&a, &b, &mut serial);
-            matmul_into_pool(&a, &b, &mut pooled, &pool);
+            matmul_into_pool(&a, &b, &mut pooled, &pool, SimdLevel::Scalar);
             assert_eq!(serial, pooled);
             matmul_nt_into(&a, &bt, &mut serial);
-            matmul_nt_into_pool(&a, &bt, &mut pooled, &pool);
+            matmul_nt_into_pool(&a, &bt, &mut pooled, &pool, SimdLevel::Scalar);
             assert_eq!(serial, pooled);
             for axis in [0usize, 1] {
                 sum_axis_into(&wide, axis, &mut serial);
-                sum_axis_into_pool(&wide, axis, &mut pooled, &pool);
+                sum_axis_into_pool(&wide, axis, &mut pooled, &pool, SimdLevel::Scalar);
                 assert_eq!(serial, pooled);
             }
         }
@@ -799,7 +1344,8 @@ mod tests {
         let s = t(&[1], vec![0.75]);
         let mut out = Tensor::zeros(&[0]);
         let mut regs = Vec::new();
-        fused_into(&kernel, &[&x, &s], &[4, 3], &mut out, &Pool::serial(), &mut regs);
+        let serial = Pool::serial();
+        fused_into(&kernel, &[&x, &s], &[4, 3], &mut out, &serial, &mut regs, SimdLevel::Scalar);
         // op-by-op reference through the serial kernels
         let (mut t1, mut t2) = (Tensor::zeros(&[0]), Tensor::zeros(&[0]));
         tanh_into(&x, &mut t1);
@@ -808,7 +1354,8 @@ mod tests {
         assert_eq!(out, want);
         // and pooled execution matches serial exactly
         let mut pooled = Tensor::zeros(&[0]);
-        fused_into(&kernel, &[&x, &s], &[4, 3], &mut pooled, &Pool::new(4), &mut regs);
+        let four = Pool::new(4);
+        fused_into(&kernel, &[&x, &s], &[4, 3], &mut pooled, &four, &mut regs, SimdLevel::Scalar);
         assert_eq!(out, pooled);
     }
 
@@ -831,7 +1378,16 @@ mod tests {
         let mut got = Tensor::zeros(&[0]);
         for threads in [1usize, 2, 4] {
             let pool = Pool::new(threads);
-            matmul_fused_into_pool(&a, &b, &tanh_epi, &[], &mut got, &pool, &mut regs);
+            matmul_fused_into_pool(
+                &a,
+                &b,
+                &tanh_epi,
+                &[],
+                &mut got,
+                &pool,
+                &mut regs,
+                SimdLevel::Scalar,
+            );
             assert_eq!(got, want_t, "matmul+tanh @ {threads} threads");
         }
 
@@ -848,7 +1404,16 @@ mod tests {
         scale_into(&summed, 2.0, &mut want_nt);
         for threads in [1usize, 2, 4] {
             let pool = Pool::new(threads);
-            matmul_nt_fused_into_pool(&a, &c, &bias_epi, &[&y], &mut got, &pool, &mut regs);
+            matmul_nt_fused_into_pool(
+                &a,
+                &c,
+                &bias_epi,
+                &[&y],
+                &mut got,
+                &pool,
+                &mut regs,
+                SimdLevel::Scalar,
+            );
             assert_eq!(got, want_nt, "matmul_nt+add+scale @ {threads} threads");
         }
     }
@@ -905,5 +1470,277 @@ mod tests {
         let mid = t(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
         transpose_into(&mid, &mut out);
         assert_eq!(out.data(), &[1.0, 3.0, 2.0, 4.0]);
+    }
+
+    const WIDTHS: [SimdLevel; 2] = [SimdLevel::W4, SimdLevel::W8];
+
+    #[test]
+    fn simd_elementwise_kernels_bit_match_scalar() {
+        // length 11 covers two 4-lane blocks + tail / one 8-lane block + tail
+        let mut rng = crate::rng::Pcg64::seeded(61);
+        let a = t(&[11], rng.normals(11));
+        let b = t(&[11], rng.normals(11));
+        let (mut want, mut got) = (Tensor::zeros(&[0]), Tensor::zeros(&[0]));
+        for simd in WIDTHS {
+            add_into(&a, &b, &mut want);
+            add_into_simd(&a, &b, &mut got, simd);
+            assert_eq!(want, got, "{simd:?} add");
+            sub_into(&a, &b, &mut want);
+            sub_into_simd(&a, &b, &mut got, simd);
+            assert_eq!(want, got, "{simd:?} sub");
+            mul_into(&a, &b, &mut want);
+            mul_into_simd(&a, &b, &mut got, simd);
+            assert_eq!(want, got, "{simd:?} mul");
+            scale_into(&a, -1.5, &mut want);
+            scale_into_simd(&a, -1.5, &mut got, simd);
+            assert_eq!(want, got, "{simd:?} scale");
+            tanh_into(&a, &mut want);
+            tanh_into_simd(&a, &mut got, simd);
+            assert_eq!(want, got, "{simd:?} tanh");
+            neg_into(&a, &mut want);
+            neg_into_simd(&a, &mut got, simd);
+            assert_eq!(want, got, "{simd:?} neg");
+            square_into(&a, &mut want);
+            square_into_simd(&a, &mut got, simd);
+            assert_eq!(want, got, "{simd:?} square");
+            sin_into(&a, &mut want);
+            sin_into_simd(&a, &mut got, simd);
+            assert_eq!(want, got, "{simd:?} sin");
+            cos_into(&a, &mut want);
+            cos_into_simd(&a, &mut got, simd);
+            assert_eq!(want, got, "{simd:?} cos");
+        }
+    }
+
+    #[test]
+    fn simd_fused_interpreter_bit_matches_scalar_at_every_length() {
+        // degenerate and tail-heavy shapes: 0, sub-lane, exactly one lane
+        // block, lane block + tail for both widths
+        let kernel = FusedKernel {
+            exts: vec![ExtKind::Elem, ExtKind::Scalar],
+            ops: vec![MicroOp::Tanh(0), MicroOp::Mul(2, 2), MicroOp::Add(3, 1)],
+            out: 4,
+        };
+        let mut rng = crate::rng::Pcg64::seeded(62);
+        let s = t(&[1], vec![0.75]);
+        for len in [0usize, 1, 3, 4, 5, 8, 11, 19] {
+            let x = t(&[len], rng.normals(len));
+            let mut regs = Vec::new();
+            let mut want = Tensor::zeros(&[0]);
+            let serial = Pool::serial();
+            let scalar = SimdLevel::Scalar;
+            fused_into(&kernel, &[&x, &s], &[len], &mut want, &serial, &mut regs, scalar);
+            for simd in WIDTHS {
+                for threads in [1usize, 4] {
+                    let pool = Pool::new(threads);
+                    let mut got = Tensor::zeros(&[0]);
+                    fused_into(&kernel, &[&x, &s], &[len], &mut got, &pool, &mut regs, simd);
+                    assert_eq!(want, got, "{simd:?} len {len} @ {threads} threads");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_matmul_bit_matches_scalar_including_zero_skip() {
+        let mut rng = crate::rng::Pcg64::seeded(63);
+        let (m, k, n) = (5, 37, 141); // n straddles a j-tile + lane tails
+        let mut a_data = rng.normals(m * k);
+        for x in a_data.iter_mut().step_by(5) {
+            *x = 0.0; // exercise the zero-skip branch under lanes
+        }
+        let a = t(&[m, k], a_data);
+        let b = t(&[k, n], rng.normals(k * n));
+        let mut want = Tensor::zeros(&[0]);
+        matmul_into(&a, &b, &mut want);
+        let mut got = Tensor::zeros(&[0]);
+        for simd in WIDTHS {
+            for threads in [1usize, 2, 4] {
+                matmul_into_pool(&a, &b, &mut got, &Pool::new(threads), simd);
+                assert_eq!(want, got, "{simd:?} @ {threads} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_matmul_nt_is_deterministic_and_ulp_close() {
+        use crate::util::propkit::assert_ulps_le;
+        let mut rng = crate::rng::Pcg64::seeded(64);
+        let (m, k, n) = (4, 53, 9); // k forces lane blocks + a scalar tail
+        // positive data keeps the dot products well-conditioned, so the
+        // reassociation error stays within a few ULPs per term
+        let a = t(&[m, k], rng.uniforms_in(m * k, 0.5, 1.5));
+        let b = t(&[n, k], rng.uniforms_in(n * k, 0.5, 1.5));
+        let mut want = Tensor::zeros(&[0]);
+        matmul_nt_into(&a, &b, &mut want);
+        for simd in WIDTHS {
+            let mut first = Tensor::zeros(&[0]);
+            matmul_nt_into_pool(&a, &b, &mut first, &Pool::serial(), simd);
+            for (ws, gs) in want.data().iter().zip(first.data()) {
+                assert_ulps_le(*ws, *gs, 2 * k as u64);
+            }
+            // deterministic: repeated runs and any thread count bit-match
+            let mut again = Tensor::zeros(&[0]);
+            for threads in [1usize, 2, 4] {
+                matmul_nt_into_pool(&a, &b, &mut again, &Pool::new(threads), simd);
+                assert_eq!(first, again, "{simd:?} @ {threads} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_reductions_split_deterministically() {
+        use crate::util::propkit::assert_ulps_le;
+        let mut rng = crate::rng::Pcg64::seeded(65);
+        let (m, n) = (7, 29);
+        let pos = t(&[m, n], rng.uniforms_in(m * n, 0.5, 1.5));
+        let mut want = Tensor::zeros(&[0]);
+        let mut got = Tensor::zeros(&[0]);
+        for simd in WIDTHS {
+            // axis 0 is order-preserving under lanes: exact
+            sum_axis_into(&pos, 0, &mut want);
+            for threads in [1usize, 2, 4] {
+                sum_axis_into_pool(&pos, 0, &mut got, &Pool::new(threads), simd);
+                assert_eq!(want, got, "{simd:?} axis 0 @ {threads} threads");
+            }
+            // axis 1 and the full sum reassociate: ULP-close + deterministic
+            sum_axis_into(&pos, 1, &mut want);
+            let mut first = Tensor::zeros(&[0]);
+            sum_axis_into_pool(&pos, 1, &mut first, &Pool::serial(), simd);
+            for (ws, gs) in want.data().iter().zip(first.data()) {
+                assert_ulps_le(*ws, *gs, 2 * n as u64);
+            }
+            for threads in [2usize, 4] {
+                sum_axis_into_pool(&pos, 1, &mut got, &Pool::new(threads), simd);
+                assert_eq!(first, got, "{simd:?} axis 1 @ {threads} threads");
+            }
+            sum_all_into(&pos, &mut want);
+            sum_all_into_simd(&pos, &mut got, simd);
+            assert_ulps_le(want.data()[0], got.data()[0], 2 * (m * n) as u64);
+        }
+    }
+
+    #[test]
+    fn simd_optimizer_updates_bit_match_scalar_at_any_thread_count() {
+        let mut rng = crate::rng::Pcg64::seeded(66);
+        let len = 37;
+        let w0 = t(&[len], rng.normals(len));
+        let m0 = t(&[len], rng.normals(len));
+        let v0 = t(&[len], rng.uniforms_in(len, 0.0, 1.0));
+        let g = t(&[len], rng.normals(len));
+        let mut w_ref = w0.clone();
+        sgd_update(&mut w_ref, &g, 3e-3);
+        for simd in WIDTHS {
+            for threads in [1usize, 2, 4] {
+                let mut w = w0.clone();
+                sgd_update_pool(&mut w, &g, 3e-3, &Pool::new(threads), simd);
+                assert_eq!(w, w_ref, "sgd {simd:?} @ {threads} threads");
+            }
+        }
+        let (mut w_ref, mut m_ref, mut v_ref) = (w0.clone(), m0.clone(), v0.clone());
+        adam_update(&mut w_ref, &mut m_ref, &mut v_ref, &g, 1e-2, 0.9, 0.999, 1e-8, 3);
+        for simd in WIDTHS {
+            for threads in [1usize, 2, 4] {
+                let (mut w, mut m, mut v) = (w0.clone(), m0.clone(), v0.clone());
+                adam_update_pool(
+                    &mut w,
+                    &mut m,
+                    &mut v,
+                    &g,
+                    1e-2,
+                    0.9,
+                    0.999,
+                    1e-8,
+                    3,
+                    &Pool::new(threads),
+                    simd,
+                );
+                assert_eq!(w, w_ref, "adam w {simd:?} @ {threads} threads");
+                assert_eq!(m, m_ref, "adam m {simd:?} @ {threads} threads");
+                assert_eq!(v, v_ref, "adam v {simd:?} @ {threads} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_epilogues_preserve_the_kernel_contracts() {
+        use crate::util::propkit::assert_ulps_le;
+        let mut rng = crate::rng::Pcg64::seeded(67);
+        let (m, k, n) = (5, 21, 13);
+        let a = t(&[m, k], rng.uniforms_in(m * k, 0.5, 1.5));
+        let b = t(&[k, n], rng.normals(k * n));
+        let c = t(&[n, k], rng.uniforms_in(n * k, 0.5, 1.5));
+        let tanh_epi = Epilogue { exts: vec![], ops: vec![MicroOp::Tanh(0)], out: 1 };
+        // plain matmul is order-preserving, so matmul + epilogue is exact
+        let mut regs = Vec::new();
+        let mut want = Tensor::zeros(&[0]);
+        matmul_fused_into_pool(
+            &a,
+            &b,
+            &tanh_epi,
+            &[],
+            &mut want,
+            &Pool::serial(),
+            &mut regs,
+            SimdLevel::Scalar,
+        );
+        let mut got = Tensor::zeros(&[0]);
+        for simd in WIDTHS {
+            for threads in [1usize, 2, 4] {
+                matmul_fused_into_pool(
+                    &a,
+                    &b,
+                    &tanh_epi,
+                    &[],
+                    &mut got,
+                    &Pool::new(threads),
+                    &mut regs,
+                    simd,
+                );
+                assert_eq!(want, got, "mm+tanh {simd:?} @ {threads} threads");
+            }
+        }
+        // NT reassociates; a power-of-two scale epilogue is exact, so the
+        // ULP distance is owed to the k-split alone
+        let x2_epi = Epilogue { exts: vec![], ops: vec![MicroOp::Scale(0, 2.0)], out: 1 };
+        matmul_nt_fused_into_pool(
+            &a,
+            &c,
+            &x2_epi,
+            &[],
+            &mut want,
+            &Pool::serial(),
+            &mut regs,
+            SimdLevel::Scalar,
+        );
+        for simd in WIDTHS {
+            let mut first = Tensor::zeros(&[0]);
+            matmul_nt_fused_into_pool(
+                &a,
+                &c,
+                &x2_epi,
+                &[],
+                &mut first,
+                &Pool::serial(),
+                &mut regs,
+                simd,
+            );
+            for (ws, gs) in want.data().iter().zip(first.data()) {
+                assert_ulps_le(*ws, *gs, 2 * k as u64);
+            }
+            for threads in [2usize, 4] {
+                matmul_nt_fused_into_pool(
+                    &a,
+                    &c,
+                    &x2_epi,
+                    &[],
+                    &mut got,
+                    &Pool::new(threads),
+                    &mut regs,
+                    simd,
+                );
+                assert_eq!(first, got, "nt+scale {simd:?} @ {threads} threads");
+            }
+        }
     }
 }

@@ -9,6 +9,7 @@
 
 pub mod kernels;
 mod linalg;
+pub mod simd;
 
 pub use linalg::{cholesky, solve_lower, solve_upper, CholeskyError};
 

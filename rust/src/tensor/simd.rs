@@ -1,0 +1,386 @@
+//! Portable fixed-width SIMD lanes for the kernel layer.
+//!
+//! Pure-std data-parallel building blocks: a lane is a `[f64; W]` value
+//! type ([`F64x4`] / [`F64x8`]) whose arithmetic is written as
+//! fixed-trip-count loops the optimizer reliably turns into vector
+//! instructions -- no nightly `std::simd`, no intrinsics, no external
+//! crates.  The kernels in [`crate::tensor::kernels`] are generic over
+//! the [`Lane`] trait and dispatch once per call on a resolved
+//! [`SimdLevel`].
+//!
+//! # Knob and dispatch
+//!
+//! The user-facing knob is [`SimdMode`] (`ZCS_SIMD` env /
+//! `zcs ntrain --simd {off,4,8,auto}`): `off` keeps the scalar kernels,
+//! `4`/`8` force a lane width, and `auto` picks the widest width the
+//! host supports ([`detect_width`]: 8 lanes when AVX-512 is available,
+//! else 4).  [`SimdMode::resolve`] turns the knob into the
+//! [`SimdLevel`] the kernels actually branch on.
+//!
+//! # Determinism contract
+//!
+//! Kernels that preserve per-element operation order under lanes
+//! (elementwise, fused micro-programs, epilogues, the plain matmul's
+//! j-vectorized inner loop, optimizer updates) produce results
+//! **bit-identical** to the scalar kernels at every width and thread
+//! count.  Kernels that split a reduction across lanes (`matmul_nt`'s
+//! k-loop, row sums, the full sum) *reassociate*: lane `l` accumulates
+//! the terms with index `l (mod W)` over the length-`W`-aligned prefix,
+//! the lanes are combined strictly in ascending lane order
+//! ([`Lane::reduce_add_ordered`]), and the scalar tail is added last in
+//! ascending index order.  That split depends only on the reduction
+//! length and the lane width -- never on thread count or block
+//! boundaries -- so a given width is bit-reproducible across runs and
+//! thread counts, and differs from scalar only by tightly bounded
+//! rounding (property-tested with
+//! [`crate::util::propkit::assert_ulps_le`]).
+
+/// The user-facing SIMD knob: how wide the kernel lanes should be.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdMode {
+    /// scalar kernels only (the pre-SIMD behavior, bit for bit)
+    Off,
+    /// force 4-lane `f64` vectors
+    W4,
+    /// force 8-lane `f64` vectors
+    W8,
+    /// the widest width the host supports ([`detect_width`])
+    Auto,
+}
+
+impl SimdMode {
+    /// Case-insensitive parse with a choice-listing error.
+    pub fn parse(name: &str) -> Result<SimdMode, String> {
+        match name.to_ascii_lowercase().as_str() {
+            "off" => Ok(SimdMode::Off),
+            "4" => Ok(SimdMode::W4),
+            "8" => Ok(SimdMode::W8),
+            "auto" => Ok(SimdMode::Auto),
+            other => Err(format!("unknown simd mode {other:?}; choices: off, 4, 8, auto")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimdMode::Off => "off",
+            SimdMode::W4 => "4",
+            SimdMode::W8 => "8",
+            SimdMode::Auto => "auto",
+        }
+    }
+
+    /// The environment default: `ZCS_SIMD` (off | 4 | 8 | auto), else
+    /// auto.  An unparseable value warns on stderr and falls back to
+    /// auto, so a typo cannot silently select the mode the user tried to
+    /// exclude.
+    pub fn from_env() -> SimdMode {
+        match std::env::var("ZCS_SIMD") {
+            Ok(v) => SimdMode::parse(v.trim()).unwrap_or_else(|e| {
+                eprintln!("warning: ZCS_SIMD ignored: {e}");
+                SimdMode::Auto
+            }),
+            Err(_) => SimdMode::Auto,
+        }
+    }
+
+    /// Resolve the knob into the level the kernels dispatch on.
+    pub fn resolve(self) -> SimdLevel {
+        match self {
+            SimdMode::Off => SimdLevel::Scalar,
+            SimdMode::W4 => SimdLevel::W4,
+            SimdMode::W8 => SimdLevel::W8,
+            SimdMode::Auto => {
+                if detect_width() >= 8 {
+                    SimdLevel::W8
+                } else {
+                    SimdLevel::W4
+                }
+            }
+        }
+    }
+}
+
+/// A resolved lane width: what the kernels actually branch on (one
+/// `match` per kernel call, monomorphized lane code behind each arm).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    Scalar,
+    W4,
+    W8,
+}
+
+impl SimdLevel {
+    /// Elements retired per lane op (1 for scalar).
+    pub fn width(&self) -> usize {
+        match self {
+            SimdLevel::Scalar => 1,
+            SimdLevel::W4 => 4,
+            SimdLevel::W8 => 8,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::W4 => "w4",
+            SimdLevel::W8 => "w8",
+        }
+    }
+}
+
+/// Widest lane width worth using on this host: 8 when the CPU has
+/// AVX-512 (eight `f64`s per register), else 4 -- a 4-lane value still
+/// vectorizes as two ops on 256-bit AVX and NEON-class machines, and
+/// the fused interpreter's per-op dispatch is amortized either way.
+pub fn detect_width() -> usize {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_64_feature_detected!("avx512f") {
+            return 8;
+        }
+    }
+    4
+}
+
+/// One fixed-width vector of `f64` lanes.  Implementations are plain
+/// arrays with `#[inline(always)]` per-lane loops; the contract that
+/// matters is semantic: every arithmetic op applies the identical scalar
+/// operation to each lane independently (no fused multiply-add, no
+/// reordering), and [`Lane::reduce_add_ordered`] sums lanes strictly in
+/// ascending lane order.
+pub trait Lane: Copy {
+    /// Lane count.
+    const W: usize;
+
+    /// All lanes set to `v`.
+    fn splat(v: f64) -> Self;
+    /// Load lanes from the first `W` elements of `src`.
+    fn load(src: &[f64]) -> Self;
+    /// Store lanes into the first `W` elements of `dst`.
+    fn store(self, dst: &mut [f64]);
+
+    fn add(self, o: Self) -> Self;
+    fn sub(self, o: Self) -> Self;
+    fn mul(self, o: Self) -> Self;
+    fn div(self, o: Self) -> Self;
+    fn scale(self, c: f64) -> Self;
+    fn neg(self) -> Self;
+    fn square(self) -> Self;
+    fn sqrt(self) -> Self;
+    fn sin(self) -> Self;
+    fn cos(self) -> Self;
+    fn tanh(self) -> Self;
+
+    /// Sum of the lanes in ascending lane order
+    /// (`((l0 + l1) + l2) + ...`) -- the documented combine order of
+    /// every reassociating reduction.
+    fn reduce_add_ordered(self) -> f64;
+
+    fn zero() -> Self {
+        Self::splat(0.0)
+    }
+}
+
+macro_rules! lane_impl {
+    ($name:ident, $w:expr) => {
+        /// `[f64; W]` lane vector; see [`Lane`].
+        #[derive(Clone, Copy, Debug, PartialEq)]
+        pub struct $name([f64; $w]);
+
+        impl Lane for $name {
+            const W: usize = $w;
+
+            #[inline(always)]
+            fn splat(v: f64) -> Self {
+                Self([v; $w])
+            }
+
+            #[inline(always)]
+            fn load(src: &[f64]) -> Self {
+                let mut a = [0.0; $w];
+                a.copy_from_slice(&src[..$w]);
+                Self(a)
+            }
+
+            #[inline(always)]
+            fn store(self, dst: &mut [f64]) {
+                dst[..$w].copy_from_slice(&self.0);
+            }
+
+            #[inline(always)]
+            fn add(mut self, o: Self) -> Self {
+                for l in 0..$w {
+                    self.0[l] += o.0[l];
+                }
+                self
+            }
+
+            #[inline(always)]
+            fn sub(mut self, o: Self) -> Self {
+                for l in 0..$w {
+                    self.0[l] -= o.0[l];
+                }
+                self
+            }
+
+            #[inline(always)]
+            fn mul(mut self, o: Self) -> Self {
+                for l in 0..$w {
+                    self.0[l] *= o.0[l];
+                }
+                self
+            }
+
+            #[inline(always)]
+            fn div(mut self, o: Self) -> Self {
+                for l in 0..$w {
+                    self.0[l] /= o.0[l];
+                }
+                self
+            }
+
+            #[inline(always)]
+            fn scale(mut self, c: f64) -> Self {
+                for l in 0..$w {
+                    self.0[l] *= c;
+                }
+                self
+            }
+
+            #[inline(always)]
+            fn neg(mut self) -> Self {
+                for l in 0..$w {
+                    self.0[l] = -self.0[l];
+                }
+                self
+            }
+
+            #[inline(always)]
+            fn square(mut self) -> Self {
+                for l in 0..$w {
+                    self.0[l] *= self.0[l];
+                }
+                self
+            }
+
+            #[inline(always)]
+            fn sqrt(mut self) -> Self {
+                for l in 0..$w {
+                    self.0[l] = self.0[l].sqrt();
+                }
+                self
+            }
+
+            // transcendentals have no vector form in std; per-lane calls
+            // keep the scalar bit patterns (that is the point) and still
+            // profit from the lane-wide load/store and dispatch
+            #[inline(always)]
+            fn sin(mut self) -> Self {
+                for l in 0..$w {
+                    self.0[l] = self.0[l].sin();
+                }
+                self
+            }
+
+            #[inline(always)]
+            fn cos(mut self) -> Self {
+                for l in 0..$w {
+                    self.0[l] = self.0[l].cos();
+                }
+                self
+            }
+
+            #[inline(always)]
+            fn tanh(mut self) -> Self {
+                for l in 0..$w {
+                    self.0[l] = self.0[l].tanh();
+                }
+                self
+            }
+
+            #[inline(always)]
+            fn reduce_add_ordered(self) -> f64 {
+                let mut s = self.0[0];
+                for l in 1..$w {
+                    s += self.0[l];
+                }
+                s
+            }
+        }
+    };
+}
+
+lane_impl!(F64x4, 4);
+lane_impl!(F64x8, 8);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lane_ops_match_scalar<L: Lane>() {
+        let mut rng = crate::rng::Pcg64::seeded(7);
+        let a: Vec<f64> = rng.normals(L::W);
+        let b: Vec<f64> = rng.normals(L::W);
+        let (va, vb) = (L::load(&a), L::load(&b));
+        let mut out = vec![0.0; L::W];
+        let check = |got: L, f: &dyn Fn(f64, f64) -> f64, out: &mut Vec<f64>| {
+            got.store(out);
+            for l in 0..L::W {
+                assert_eq!(out[l], f(a[l], b[l]), "lane {l}");
+            }
+        };
+        check(va.add(vb), &|x, y| x + y, &mut out);
+        check(va.sub(vb), &|x, y| x - y, &mut out);
+        check(va.mul(vb), &|x, y| x * y, &mut out);
+        check(va.div(vb), &|x, y| x / y, &mut out);
+        check(va.scale(-1.5), &|x, _| x * -1.5, &mut out);
+        check(va.neg(), &|x, _| -x, &mut out);
+        check(va.square(), &|x, _| x * x, &mut out);
+        check(va.square().sqrt(), &|x, _| (x * x).sqrt(), &mut out);
+        check(va.sin(), &|x, _| x.sin(), &mut out);
+        check(va.cos(), &|x, _| x.cos(), &mut out);
+        check(va.tanh(), &|x, _| x.tanh(), &mut out);
+        // splat fills every lane; ordered reduction is the ascending fold
+        L::splat(2.5).store(&mut out);
+        assert!(out.iter().all(|&v| v == 2.5));
+        let want = a.iter().copied().reduce(|s, v| s + v).unwrap();
+        assert_eq!(va.reduce_add_ordered(), want);
+        assert_eq!(L::zero().reduce_add_ordered(), 0.0);
+    }
+
+    #[test]
+    fn f64x4_ops_match_scalar() {
+        lane_ops_match_scalar::<F64x4>();
+    }
+
+    #[test]
+    fn f64x8_ops_match_scalar() {
+        lane_ops_match_scalar::<F64x8>();
+    }
+
+    #[test]
+    fn mode_parses_and_resolves() {
+        assert_eq!(SimdMode::parse("OFF").unwrap(), SimdMode::Off);
+        assert_eq!(SimdMode::parse("4").unwrap(), SimdMode::W4);
+        assert_eq!(SimdMode::parse("8").unwrap(), SimdMode::W8);
+        assert_eq!(SimdMode::parse("Auto").unwrap(), SimdMode::Auto);
+        let err = SimdMode::parse("wide").unwrap_err();
+        assert!(err.contains("off") && err.contains("auto"), "{err}");
+        assert_eq!(SimdMode::Off.resolve(), SimdLevel::Scalar);
+        assert_eq!(SimdMode::W4.resolve(), SimdLevel::W4);
+        assert_eq!(SimdMode::W8.resolve(), SimdLevel::W8);
+        let auto = SimdMode::Auto.resolve();
+        assert!(auto == SimdLevel::W4 || auto == SimdLevel::W8);
+        assert_eq!(auto.width(), detect_width());
+    }
+
+    #[test]
+    fn level_reports_width_and_name() {
+        assert_eq!(SimdLevel::Scalar.width(), 1);
+        assert_eq!(SimdLevel::W4.width(), 4);
+        assert_eq!(SimdLevel::W8.width(), 8);
+        assert_eq!(SimdLevel::Scalar.name(), "scalar");
+        assert_eq!(SimdLevel::W4.name(), "w4");
+        assert_eq!(SimdLevel::W8.name(), "w8");
+    }
+}

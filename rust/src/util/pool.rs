@@ -76,6 +76,20 @@ pub mod grain {
     pub fn elemwise_rows(row_len: usize) -> usize {
         (ELEMWISE_PER_TASK / row_len.max(1)).max(1)
     }
+
+    /// SIMD-aware [`elemwise_rows`]: a `width`-lane kernel retires
+    /// `width` elements per dispatch, so a task must be `width`x larger
+    /// to amortize the same fork-join overhead.  `width == 1` is exactly
+    /// the scalar policy.
+    pub fn elemwise_rows_simd(row_len: usize, width: usize) -> usize {
+        elemwise_rows(row_len).saturating_mul(width.max(1))
+    }
+
+    /// SIMD-aware [`matmul_rows`]: same scaling rationale as
+    /// [`elemwise_rows_simd`].
+    pub fn matmul_rows_simd(k: usize, n: usize, width: usize) -> usize {
+        matmul_rows(k, n).saturating_mul(width.max(1))
+    }
 }
 
 /// First panic payload captured from a task (worker or submitter side).

@@ -10,6 +10,39 @@
 
 use crate::rng::Pcg64;
 
+/// Distance between two finite `f64`s in units in the last place: the
+/// number of representable doubles strictly between them (0 when equal,
+/// 1 for adjacent values).  Uses the standard order-preserving mapping of
+/// IEEE-754 bit patterns onto the integer line, so the distance is exact
+/// across exponent boundaries and across the `-0.0`/`+0.0` straddle
+/// (those two count as 1 apart).  Panics on NaN -- a NaN has no position
+/// on the line and a comparison against one is always a bug.
+pub fn ulps_between(a: f64, b: f64) -> u64 {
+    assert!(!a.is_nan() && !b.is_nan(), "ulps_between({a}, {b}): NaN operand");
+    // map the sign-magnitude float encoding onto a monotone unsigned line:
+    // negatives reflect below the midpoint, positives shift above it
+    fn ord(x: f64) -> u64 {
+        let bits = x.to_bits();
+        if bits >> 63 == 1 {
+            !bits
+        } else {
+            bits | (1 << 63)
+        }
+    }
+    ord(a).abs_diff(ord(b))
+}
+
+/// Assert two floats are within `max_ulps` representable values of each
+/// other (see [`ulps_between`]) -- the comparison for kernels whose SIMD
+/// lane splits *reassociate* a reduction and therefore cannot promise the
+/// scalar bit pattern, only a tightly bounded rounding difference.
+/// Order-preserving kernels should keep using `assert_eq!`.
+#[track_caller]
+pub fn assert_ulps_le(a: f64, b: f64, max_ulps: u64) {
+    let d = ulps_between(a, b);
+    assert!(d <= max_ulps, "{a} vs {b}: {d} ulps apart (allowed {max_ulps})");
+}
+
 /// A reusable generator: produce a value from randomness + shrink candidates.
 pub struct Gen<T> {
     pub make: Box<dyn Fn(&mut Pcg64) -> T>,
@@ -173,6 +206,46 @@ mod tests {
         if v.len() > 1 {
             assert!(shrunk.iter().any(|s| s.len() < v.len()));
         }
+    }
+
+    #[test]
+    fn ulps_between_counts_representable_gaps() {
+        assert_eq!(ulps_between(1.0, 1.0), 0);
+        assert_eq!(ulps_between(1.0, f64::from_bits(1.0f64.to_bits() + 1)), 1);
+        assert_eq!(ulps_between(1.5, 1.5 - f64::EPSILON), 1); // spacing in [1, 2) is eps
+        assert_eq!(ulps_between(-0.0, 0.0), 1);
+        assert_eq!(ulps_between(0.0, 0.0), 0);
+        // symmetric, and exact across an exponent boundary
+        let below = f64::from_bits(2.0f64.to_bits() - 1);
+        assert_eq!(ulps_between(2.0, below), 1);
+        assert_eq!(ulps_between(below, 2.0), 1);
+        // sign straddle: -x .. +x spans both halves of the line
+        assert_eq!(
+            ulps_between(-f64::MIN_POSITIVE, f64::MIN_POSITIVE),
+            ulps_between(-f64::MIN_POSITIVE, 0.0) + ulps_between(0.0, f64::MIN_POSITIVE)
+        );
+    }
+
+    #[test]
+    fn assert_ulps_le_accepts_within_bound() {
+        assert_ulps_le(1.0, 1.0, 0);
+        assert_ulps_le(1.0, f64::from_bits(1.0f64.to_bits() + 3), 3);
+        assert_ulps_le(-2.5, -2.5, 0);
+    }
+
+    #[test]
+    fn assert_ulps_le_rejects_beyond_bound() {
+        let caught = std::panic::catch_unwind(|| {
+            assert_ulps_le(1.0, f64::from_bits(1.0f64.to_bits() + 4), 3);
+        });
+        let msg = *caught.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("4 ulps apart (allowed 3)"), "{msg}");
+    }
+
+    #[test]
+    #[should_panic(expected = "NaN")]
+    fn ulps_between_rejects_nan() {
+        ulps_between(f64::NAN, 1.0);
     }
 
     #[test]

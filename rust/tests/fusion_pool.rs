@@ -15,7 +15,7 @@
 //! [`PdeBatcher::next_batch`]: zcs::coordinator::batch::PdeBatcher
 
 use std::collections::HashMap;
-use zcs::autodiff::{zcs_demo, Executor, NodeId, PassConfig, Program, Strategy};
+use zcs::autodiff::{zcs_demo, Executor, Graph, NodeId, PassConfig, Program, Strategy};
 use zcs::coordinator::batch::{PdeBatch, PdeBatchSpec, PdeBatcher};
 use zcs::pde::residual::{build_training_problem, init_problem_weights, BlockSizes, BuiltProblem};
 use zcs::pde::ProblemKind;
@@ -239,6 +239,40 @@ fn fused_demo_derivatives_bit_match_unfused_at_both_orders() {
             let a = exec.run_ref(&fused, &inputs);
             let b = exec.run_ref(&unfused, &inputs);
             assert_eq!(a, b, "{strategy:?} order {order}: fused != unfused");
+        }
+    }
+}
+
+#[test]
+fn fused_passes_survive_degenerate_and_sub_lane_shapes() {
+    // 0-length, shorter-than-lane, exactly-one-lane and lane+tail element
+    // counts: the lane-wide fused interpreter's scalar tail must cover
+    // every one of them, at any thread count, bit-matching the unfused
+    // program (which exercises the plain elementwise kernels' tails too)
+    for len in [0usize, 1, 3, 4, 5, 8, 11] {
+        let mut g = Graph::new();
+        let x = g.input(&[len]);
+        let y = g.input(&[len]);
+        let t = g.tanh(x);
+        let m = g.mul(t, y);
+        let a = g.add(m, x);
+        let out = g.sum_all(a);
+        let fused = Program::compile(&g, &[out]);
+        let unfused = Program::compile_with(&g, &[out], PassConfig::NONE);
+        if len > 0 {
+            assert!(fused.stats.fused_groups > 0, "len {len}: chain did not fuse");
+        }
+        let mut rng = Pcg64::seeded(17 + len as u64);
+        let xv = Tensor::vec1(rng.normals(len));
+        let yv = Tensor::vec1(rng.normals(len));
+        let mut inputs: HashMap<NodeId, &Tensor> = HashMap::new();
+        inputs.insert(x, &xv);
+        inputs.insert(y, &yv);
+        for threads in [1usize, 2, 4] {
+            let mut exec = Executor::with_threads(threads);
+            let got = exec.run_ref(&fused, &inputs);
+            let want = exec.run_ref(&unfused, &inputs);
+            assert_eq!(got, want, "len {len}, {threads} threads");
         }
     }
 }

@@ -1,0 +1,234 @@
+//! Program-level determinism pins for the SIMD kernel backend.
+//!
+//! The kernel layer promises (see `zcs::tensor::kernels` module docs):
+//!
+//! * order-preserving kernels (elementwise, fused interpreter, epilogues,
+//!   plain matmul, column sums, optimizer updates) are bit-identical to
+//!   scalar at every lane width;
+//! * the reassociating reductions (matmul-NT `k` loop, row sums, full
+//!   sums) use a *fixed* lane-split order per width, so results are
+//!   bit-reproducible across runs and thread counts at any given width,
+//!   and ULP-close to scalar across widths.
+//!
+//! This suite pins both halves through the compiled executor: every
+//! native problem x strategy step program, and every resident optimizer
+//! trajectory, must reproduce bit for bit at widths 4 and 8 over 1/2/4
+//! threads; the reassociating kernels get propkit ULP property tests
+//! against the scalar backend.
+
+use std::collections::HashMap;
+use zcs::autodiff::{Executor, NodeId, Program, Strategy, UpdateRule};
+use zcs::coordinator::batch::{PdeBatch, PdeBatchSpec, PdeBatcher};
+use zcs::pde::residual::{build_training_problem, init_problem_weights, BlockSizes, BuiltProblem};
+use zcs::pde::ProblemKind;
+use zcs::rng::Pcg64;
+use zcs::tensor::kernels;
+use zcs::tensor::simd::{SimdLevel, SimdMode};
+use zcs::tensor::Tensor;
+use zcs::util::pool::Pool;
+use zcs::util::propkit::{assert_ulps_le, usize_in, Runner};
+
+const NATIVE_PROBLEMS: [ProblemKind; 4] = [
+    ProblemKind::Antiderivative,
+    ProblemKind::ReactionDiffusion,
+    ProblemKind::Burgers,
+    ProblemKind::Kirchhoff,
+];
+
+const WIDTHS: [SimdMode; 2] = [SimdMode::W4, SimdMode::W8];
+
+fn q_for(kind: ProblemKind) -> usize {
+    if kind == ProblemKind::Kirchhoff {
+        9
+    } else {
+        5
+    }
+}
+
+fn spec_for(kind: ProblemKind) -> PdeBatchSpec {
+    PdeBatchSpec { m: 2, n_in: 6, n_bc: 4, q: q_for(kind), bank_size: 8, bank_grid: 32 }
+}
+
+/// Feed map for one step program: weights + sensors + named feeds + the
+/// strategy's constant extras.  Weight entries are ignored by resident
+/// programs (those inputs became executor state), which keeps one helper
+/// serving both shapes.
+fn feed_map<'a>(
+    built: &'a BuiltProblem,
+    weights: &'a [Tensor],
+    batch: &'a PdeBatch,
+) -> HashMap<NodeId, &'a Tensor> {
+    let mut inputs: HashMap<NodeId, &Tensor> = HashMap::new();
+    for (id, w) in built.weight_ids.iter().zip(weights) {
+        inputs.insert(*id, w);
+    }
+    inputs.insert(built.p, &batch.p);
+    for (name, node) in &built.feeds {
+        let t = &batch
+            .feeds
+            .iter()
+            .find(|(n, _)| n == name)
+            .unwrap_or_else(|| panic!("batch is missing feed {name}"))
+            .1;
+        inputs.insert(*node, t);
+    }
+    for (id, t) in &built.extra_inputs {
+        inputs.insert(*id, t);
+    }
+    inputs
+}
+
+/// Every problem x strategy step program, at widths 4 and 8: outputs are
+/// bit-identical across repeated runs and across 1/2/4 threads.  The
+/// reassociating reductions make no exception -- their lane-split order
+/// is fixed per width and every output element is computed whole inside
+/// one worker, so thread count cannot move a bit.
+#[test]
+fn step_programs_are_bit_reproducible_per_width_across_runs_and_threads() {
+    for kind in NATIVE_PROBLEMS {
+        let spec = spec_for(kind);
+        let sizes = BlockSizes { n_in: spec.n_in, n_bc: spec.n_bc };
+        for strategy in Strategy::ALL {
+            let built =
+                build_training_problem(kind, strategy, spec.m, spec.q, 8, 4, sizes).unwrap();
+            let program = Program::compile(&built.graph, &built.outputs);
+            let weights = init_problem_weights(&built, 11);
+            let mut batcher = PdeBatcher::new(kind, spec, &mut Pcg64::seeded(3)).unwrap();
+            let batch = batcher.next_batch();
+            let inputs = feed_map(&built, &weights, &batch);
+            for mode in [SimdMode::Off, SimdMode::W4, SimdMode::W8] {
+                let reference =
+                    Executor::with_threads(1).with_simd(mode).run_ref(&program, &inputs);
+                for threads in [1usize, 2, 4] {
+                    let mut exec = Executor::with_threads(threads).with_simd(mode);
+                    for rerun in 0..2 {
+                        let got = exec.run_ref(&program, &inputs);
+                        assert_eq!(
+                            got, reference,
+                            "{kind:?}/{strategy:?} {} lanes, {threads} threads, rerun {rerun}",
+                            mode.resolve().width(),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Resident optimizer trajectories (SGD and Adam, satellite of the
+/// pooled-update routing): at a fixed width the full multi-step weight
+/// trajectory is bit-identical across thread counts and re-binds.  The
+/// update kernels themselves are order-preserving, so any divergence
+/// would have to come from the pool partitioning -- which this pins away.
+#[test]
+fn resident_trajectories_are_bit_reproducible_per_width_across_threads() {
+    const STEPS: usize = 3;
+    let rules = [
+        UpdateRule::Sgd { lr: 1e-2 },
+        UpdateRule::Adam { lr: 1e-2, beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+    ];
+    for kind in NATIVE_PROBLEMS {
+        let spec = spec_for(kind);
+        let sizes = BlockSizes { n_in: spec.n_in, n_bc: spec.n_bc };
+        for strategy in Strategy::ALL {
+            let built =
+                build_training_problem(kind, strategy, spec.m, spec.q, 8, 4, sizes).unwrap();
+            let weights = init_problem_weights(&built, 13);
+            let mut batcher = PdeBatcher::new(kind, spec, &mut Pcg64::seeded(9)).unwrap();
+            let batches: Vec<PdeBatch> = (0..STEPS).map(|_| batcher.next_batch()).collect();
+            for rule in rules {
+                let program = Program::compile(&built.graph, &built.outputs)
+                    .attach_optimizer(&built.weight_ids, rule);
+                for mode in WIDTHS {
+                    let mut reference = Executor::with_threads(1).with_simd(mode);
+                    reference.bind_states(&program, weights.clone());
+                    for batch in &batches {
+                        reference.run_ref(&program, &feed_map(&built, &weights, batch));
+                    }
+                    let want: Vec<Tensor> = reference.states().to_vec();
+                    for threads in [1usize, 2, 4] {
+                        let mut exec = Executor::with_threads(threads).with_simd(mode);
+                        exec.bind_states(&program, weights.clone());
+                        for batch in &batches {
+                            exec.run_ref(&program, &feed_map(&built, &weights, batch));
+                        }
+                        assert_eq!(
+                            exec.states(),
+                            &want[..],
+                            "{kind:?}/{strategy:?} {rule:?} {} lanes, {threads} threads",
+                            mode.resolve().width(),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn positive(seed: u64, len: usize) -> Vec<f64> {
+    Pcg64::seeded(seed).uniforms_in(len, 0.5, 1.5)
+}
+
+/// ULP property: the lane-split `k` accumulation of matmul-NT stays
+/// within `2k` ULPs of the scalar left-to-right sum.  Positive operands
+/// keep cancellation out, so the classic `n * eps` recursive-summation
+/// bound applies to both orders.
+#[test]
+fn matmul_nt_simd_is_ulp_close_to_scalar() {
+    let (m, n) = (3usize, 2usize);
+    Runner::default().check(usize_in(1, 96), |&k| {
+        let a = Tensor::new(&[m, k], positive(k as u64, m * k));
+        let b = Tensor::new(&[n, k], positive(k as u64 + 1000, n * k));
+        let mut want = Tensor::zeros(&[m, n]);
+        kernels::matmul_nt_into_pool(&a, &b, &mut want, &Pool::serial(), SimdLevel::Scalar);
+        for level in [SimdLevel::W4, SimdLevel::W8] {
+            for pool in [Pool::serial(), Pool::new(4)] {
+                let mut got = Tensor::zeros(&[m, n]);
+                kernels::matmul_nt_into_pool(&a, &b, &mut got, &pool, level);
+                for (x, y) in got.data().iter().zip(want.data()) {
+                    assert_ulps_le(*x, *y, 2 * k as u64);
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// ULP property: row sums (`SumAxis(1)`, the reassociating axis) stay
+/// within `2n` ULPs of scalar at both widths and any thread count.
+#[test]
+fn sum_axis_rows_simd_is_ulp_close_to_scalar() {
+    let m = 5usize;
+    Runner::default().check(usize_in(1, 96), |&n| {
+        let a = Tensor::new(&[m, n], positive(n as u64 + 2000, m * n));
+        let mut want = Tensor::zeros(&[m, 1]);
+        kernels::sum_axis_into_pool(&a, 1, &mut want, &Pool::serial(), SimdLevel::Scalar);
+        for level in [SimdLevel::W4, SimdLevel::W8] {
+            for pool in [Pool::serial(), Pool::new(4)] {
+                let mut got = Tensor::zeros(&[m, 1]);
+                kernels::sum_axis_into_pool(&a, 1, &mut got, &pool, level);
+                for (x, y) in got.data().iter().zip(want.data()) {
+                    assert_ulps_le(*x, *y, 2 * n as u64);
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// ULP property: the full reduction stays within `2 * len` ULPs of the
+/// scalar iterator sum at both widths.
+#[test]
+fn sum_all_simd_is_ulp_close_to_scalar() {
+    Runner::default().check(usize_in(0, 200), |&len| {
+        let a = Tensor::new(&[len.max(1), 1], positive(len as u64 + 3000, len.max(1)));
+        let mut want = Tensor::zeros(&[]);
+        kernels::sum_all_into_simd(&a, &mut want, SimdLevel::Scalar);
+        for level in [SimdLevel::W4, SimdLevel::W8] {
+            let mut got = Tensor::zeros(&[]);
+            kernels::sum_all_into_simd(&a, &mut got, level);
+            assert_ulps_le(got.data()[0], want.data()[0], 2 * a.len() as u64);
+        }
+        Ok(())
+    });
+}

@@ -12,6 +12,7 @@
 use std::collections::HashMap;
 use zcs::autodiff::{zcs_demo, Executor, Graph, NodeId, PassConfig, Program, Strategy};
 use zcs::rng::Pcg64;
+use zcs::tensor::simd::SimdMode;
 use zcs::tensor::Tensor;
 use zcs::util::propkit::{Gen, Runner};
 
@@ -113,7 +114,10 @@ fn prop_compiled_program_bit_matches_interpreter() {
     // the interpreted tape's output EXACTLY
     Runner { cases: 25, ..Default::default() }.check(instance_gen(), |&(m, n, q, seed)| {
         let (net, p, x) = setup(m, n, q, seed);
-        let mut exec = Executor::new();
+        // scalar backend regardless of ZCS_SIMD: this pin is `==` against
+        // the interpreter, which SIMD's reassociating reductions relax to
+        // ULP-bounded (covered separately in rust/tests/simd_exec.rs)
+        let mut exec = Executor::new().with_simd(SimdMode::Off);
         for order in [1usize, 2] {
             for strat in [Strategy::Zcs, Strategy::FuncLoop, Strategy::DataVect] {
                 let built = zcs_demo::build_derivative(&net, strat, m, n, q, order);
