@@ -1,0 +1,174 @@
+//! Data-parallel replica scaling bench (the §Perf instrument for PR 7).
+//!
+//! Measures the whole resident training step -- batch shard, per-replica
+//! forward/backward, the in-Program gradient all-reduce and the optimizer
+//! update -- at 1, 2 and 4 replicas under a *fixed total thread budget*,
+//! so the columns isolate what replication buys over handing the same
+//! cores to one executor.  Every variant runs the same frozen batch with
+//! lr = 0, so the computed trajectory is bit-identical across replica
+//! counts (pinned by `rust/tests/replica_train.rs`) and only wall time
+//! moves.  Writes `BENCH_replica.json`.  Run: `cargo bench --bench replica`.
+
+use zcs::autodiff::Strategy;
+use zcs::coordinator::native::{NativeRunConfig, NativeTrainer, Optimizer};
+use zcs::pde::ProblemKind;
+use zcs::util::benchkit::{Bench, Stats, Table};
+use zcs::util::json::{obj, Json};
+
+/// Total kernel-thread budget shared by every variant: 1 replica x 4
+/// threads, 2 x 2, or 4 x 1.
+const THREAD_BUDGET: usize = 4;
+
+const REPLICAS: [usize; 3] = [1, 2, 4];
+
+/// One scaling measurement: the same (problem, M, N) resident-Adam step
+/// at each replica count, equal total threads.
+struct ReplicaRow {
+    problem: &'static str,
+    m: usize,
+    n: usize,
+    /// function lanes of the canonical decomposition (fixed by M)
+    lanes: usize,
+    /// [x1, x2, x4] replicas
+    step: [Stats; 3],
+}
+
+impl ReplicaRow {
+    /// single-replica time / N-replica time at the same thread budget.
+    fn speedup(&self, ti: usize) -> f64 {
+        self.step[0].mean.as_secs_f64() / self.step[ti].mean.as_secs_f64().max(1e-12)
+    }
+}
+
+fn measure_case(
+    bench: &Bench,
+    kind: ProblemKind,
+    name: &'static str,
+    m: usize,
+    n: usize,
+    q: usize,
+) -> anyhow::Result<ReplicaRow> {
+    let mut stats: Vec<Stats> = Vec::new();
+    let mut lanes = 0usize;
+    for replicas in REPLICAS {
+        let config = NativeRunConfig {
+            problem: kind,
+            strategy: Strategy::Zcs,
+            m,
+            n,
+            n_bc: 32,
+            q,
+            hidden: 32,
+            k: 16,
+            steps: 0,
+            // lr 0 keeps the weights stationary across bench iterations
+            // while still paying the full all-reduce + optimizer cost
+            lr: 0.0,
+            seed: 11,
+            bank_size: m.max(32),
+            bank_grid: 64,
+            log_every: 1,
+            threads: THREAD_BUDGET,
+            replicas,
+            optimizer: Optimizer::Adam,
+            resident: true,
+            ..NativeRunConfig::default()
+        };
+        let mut trainer = NativeTrainer::new(config)?;
+        anyhow::ensure!(
+            trainer.replicas() == replicas,
+            "{name}: requested {replicas} replicas, got {}",
+            trainer.replicas()
+        );
+        lanes = trainer.lanes();
+        let batch = trainer.next_batch();
+        stats.push(bench.run(|| trainer.step(&batch).unwrap()));
+    }
+    let step: [Stats; 3] =
+        stats.try_into().map_err(|_| anyhow::anyhow!("expected three replica counts"))?;
+    Ok(ReplicaRow { problem: name, m, n, lanes, step })
+}
+
+/// Persist the scaling numbers (`BENCH_replica.json`): ns/step per
+/// replica count plus equal-budget speedup columns.
+fn write_bench_replica_json(rows: &[ReplicaRow]) -> anyhow::Result<()> {
+    let cases: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            let mut named: Vec<(String, Json)> = vec![
+                ("problem".into(), Json::from(r.problem)),
+                ("strategy".into(), Json::from("zcs")),
+                ("optimizer".into(), Json::from("adam")),
+                ("m".into(), Json::from(r.m)),
+                ("n".into(), Json::from(r.n)),
+                ("lanes".into(), Json::from(r.lanes)),
+                ("threads_total".into(), Json::from(THREAD_BUDGET)),
+            ];
+            for (ti, replicas) in REPLICAS.into_iter().enumerate() {
+                named.push((
+                    format!("replicas_{replicas}_ns"),
+                    Json::from(r.step[ti].mean.as_nanos() as f64),
+                ));
+            }
+            for (ti, replicas) in REPLICAS.into_iter().enumerate().skip(1) {
+                named.push((format!("speedup_x{replicas}"), Json::from(r.speedup(ti))));
+            }
+            obj(named.iter().map(|(k, v)| (k.as_str(), v.clone())).collect())
+        })
+        .collect();
+    let doc = obj(vec![
+        ("bench", Json::from("replica.step")),
+        ("unit", Json::from("ns/step")),
+        ("quick", Json::Bool(zcs::util::benchkit::quick_mode())),
+        ("cases", Json::from(cases)),
+    ]);
+    std::fs::write("BENCH_replica.json", doc.to_string())?;
+    eprintln!("wrote BENCH_replica.json");
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let bench = Bench::from_env();
+    let mut table = Table::new(&["component", "mean", "p50", "iters"]);
+
+    // function-heavy shapes: replication shards M, so M dominates the
+    // per-replica work and near-linear scaling is the expectation
+    let cases: [(ProblemKind, &'static str, usize, usize, usize); 3] = [
+        (ProblemKind::Antiderivative, "antiderivative", 64, 256, 8),
+        (ProblemKind::ReactionDiffusion, "reaction_diffusion", 48, 192, 8),
+        (ProblemKind::Kirchhoff, "kirchhoff", 16, 128, 9),
+    ];
+    let mut rows = Vec::new();
+    for (kind, name, m, n, q) in cases {
+        let row = measure_case(&bench, kind, name, m, n, q)?;
+        for (ti, replicas) in REPLICAS.into_iter().enumerate() {
+            let label = if ti == 0 {
+                format!("replica step {name}: x1 ({}t)", THREAD_BUDGET)
+            } else {
+                format!(
+                    "replica step {name}: x{replicas} ({}t each, x{:.2})",
+                    (THREAD_BUDGET / replicas).max(1),
+                    row.speedup(ti)
+                )
+            };
+            table.row(&[
+                label,
+                format!("{:.3} ms", row.step[ti].mean_ms()),
+                format!("{:.3} ms", row.step[ti].p50.as_secs_f64() * 1e3),
+                row.step[ti].iters.to_string(),
+            ]);
+        }
+        eprintln!(
+            "replica step {name}: x{:.2} @2, x{:.2} @4 over {} lanes ({} threads total)",
+            row.speedup(1),
+            row.speedup(2),
+            row.lanes,
+            THREAD_BUDGET,
+        );
+        rows.push(row);
+    }
+    write_bench_replica_json(&rows)?;
+
+    table.print();
+    Ok(())
+}

@@ -18,6 +18,16 @@
 //! training step is one `Executor` call with zero steady-state heap
 //! traffic (asserted by `rust/tests/resident_step.rs`).
 //!
+//! For *data-parallel* programs ([`Program::attach_optimizer_replicated`])
+//! replica executors additionally join a group through
+//! [`Executor::bind_comm`]: each replica's
+//! [`OpCode::GradAllReduce`] instructions publish their local lane
+//! gradients into the shared [`ReplicaComm`] pointer table, meet at the
+//! group barrier, and fold *every* global lane in one fixed ascending
+//! order -- so the reduced gradient, and therefore the whole resident
+//! trajectory, is bit-identical to a single replica folding the same
+//! lanes locally.
+//!
 //! The executor also owns a [`Pool`] of worker threads (default: the
 //! `ZCS_THREADS` environment variable, else serial) and picks between two
 //! schedules ([`SchedMode`], default `ZCS_SCHED`, else graph):
@@ -61,6 +71,8 @@ use crate::tensor::{kernels, Tensor};
 use crate::util::pool::{default_threads, Pool};
 use std::cell::UnsafeCell;
 use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicPtr, Ordering};
+use std::sync::{Arc, Barrier};
 use std::time::Instant;
 
 /// Which instruction schedule [`Executor::execute`] runs.
@@ -95,13 +107,7 @@ impl SchedMode {
     /// An unparseable value warns on stderr and falls back to graph, so a
     /// typo cannot silently select the mode the user tried to exclude.
     pub fn from_env() -> SchedMode {
-        match std::env::var("ZCS_SCHED") {
-            Ok(v) => SchedMode::parse(v.trim()).unwrap_or_else(|e| {
-                eprintln!("warning: ZCS_SCHED ignored: {e}");
-                SchedMode::Graph
-            }),
-            Err(_) => SchedMode::Graph,
-        }
+        crate::util::env::knob("ZCS_SCHED", SchedMode::Graph, SchedMode::parse)
     }
 }
 
@@ -233,6 +239,52 @@ struct ProfSlots {
 // id `w`, and worker ids are claimed exclusively per graph run.
 unsafe impl Sync for ProfSlots {}
 
+/// Cross-replica gradient mailbox for the in-Program all-reduce
+/// ([`OpCode::GradAllReduce`]).
+///
+/// One `ReplicaComm` is shared (via [`Executor::bind_comm`]) by every
+/// replica executor of a data-parallel training step.  Rows of the
+/// pointer table are weights, columns are global lanes; the barrier has
+/// one party per replica.  A reduce publishes its local lane pointers,
+/// meets the group at the barrier, folds all lanes in ascending global
+/// order, and meets the group again -- the closing barrier keeps every
+/// published tensor (including resident weight state, for bare-weight
+/// gradients) alive and unmutated until no replica is still reading it.
+pub struct ReplicaComm {
+    n_lanes: usize,
+    /// published gradient pointers, indexed `weight * n_lanes + lane`
+    slots: Vec<AtomicPtr<Tensor>>,
+    barrier: Barrier,
+}
+
+impl ReplicaComm {
+    /// A mailbox for `n_weights` weights sharded over `n_lanes` global
+    /// lanes, synchronizing `replicas` executors.
+    pub fn new(n_weights: usize, n_lanes: usize, replicas: usize) -> Self {
+        assert!(n_lanes >= 1 && replicas >= 1, "empty replica comm");
+        let slots =
+            (0..n_weights * n_lanes).map(|_| AtomicPtr::new(std::ptr::null_mut())).collect();
+        ReplicaComm { n_lanes, slots, barrier: Barrier::new(replicas) }
+    }
+
+    /// Publish this replica's gradient for `(weight, lane)`.  The pointee
+    /// must stay live and unmutated until every replica has passed the
+    /// reduce's closing barrier.
+    fn publish(&self, weight: usize, lane: usize, grad: &Tensor) {
+        self.slots[weight * self.n_lanes + lane]
+            .store(grad as *const Tensor as *mut Tensor, Ordering::Release);
+    }
+
+    /// # Safety
+    /// Must be called between a reduce's two barrier waits, after every
+    /// replica published this weight's full row of lanes.
+    unsafe fn lane<'a>(&self, weight: usize, lane: usize) -> &'a Tensor {
+        let p = self.slots[weight * self.n_lanes + lane].load(Ordering::Acquire);
+        debug_assert!(!p.is_null(), "lane gradient was never published");
+        &*p
+    }
+}
+
 /// Reusable execution arena plus resident state and the kernel pool.
 pub struct Executor {
     arena: Vec<Option<Tensor>>,
@@ -254,6 +306,9 @@ pub struct Executor {
     ext_scratch: Vec<*const Tensor>,
     /// register-file scratch for fused/epilogue kernels on the serial path
     reg_scratch: Vec<f64>,
+    /// replica group this executor reduces gradients through; `None` (the
+    /// default) folds only the executor's own lanes
+    comm: Option<Arc<ReplicaComm>>,
 }
 
 impl Default for Executor {
@@ -349,6 +404,7 @@ impl Executor {
             profile: None,
             ext_scratch: Vec::new(),
             reg_scratch: Vec::new(),
+            comm: None,
         }
     }
 
@@ -409,6 +465,17 @@ impl Executor {
     /// stays enabled).
     pub fn take_profile(&mut self) -> Option<ProfileReport> {
         self.profile.as_mut().map(|p| std::mem::take(&mut **p))
+    }
+
+    /// Join a replica group: subsequent runs resolve
+    /// [`OpCode::GradAllReduce`] through this shared mailbox (publish,
+    /// barrier, fixed-order fold over every global lane, barrier).  Every
+    /// executor bound to the same comm must run its step program
+    /// concurrently -- the reduce blocks on the group barrier.  An
+    /// unbound executor folds only its own lanes, the single-replica
+    /// degenerate case of the same value sequence.
+    pub fn bind_comm(&mut self, comm: Arc<ReplicaComm>) {
+        self.comm = Some(comm);
     }
 
     /// Seed the resident state of a program compiled with
@@ -614,6 +681,7 @@ impl Executor {
         let mut ext_scratch = std::mem::take(&mut self.ext_scratch);
         let mut reg_scratch = std::mem::take(&mut self.reg_scratch);
         let profiling = self.profile.is_some();
+        let comm = self.comm.as_deref();
         for (i, instr) in program.instrs.iter().enumerate() {
             let t0 = profiling.then(Instant::now);
             let mut out = self.arena[instr.out].take().unwrap_or_else(empty_tensor);
@@ -630,6 +698,7 @@ impl Executor {
                     &self.states,
                     &self.pool,
                     self.simd,
+                    comm,
                     &mut out,
                     &mut ext_scratch,
                     &mut reg_scratch,
@@ -672,6 +741,7 @@ impl Executor {
         let consts: &[Tensor] = &program.consts;
         let pool = &self.pool;
         let simd = self.simd;
+        let comm = self.comm.as_deref();
         let prof = self.profile.as_deref_mut().map(|p| {
             let slots: Vec<UnsafeCell<ProfileReport>> =
                 (0..pool.threads()).map(|_| UnsafeCell::new(ProfileReport::default())).collect();
@@ -701,6 +771,7 @@ impl Executor {
                         states,
                         pool,
                         simd,
+                        comm,
                         &mut out,
                         ext_scratch,
                         reg_scratch,
@@ -751,6 +822,7 @@ unsafe fn exec_instr(
     states: &[Tensor],
     pool: &Pool,
     simd: SimdLevel,
+    comm: Option<&ReplicaComm>,
     out: &mut Tensor,
     ext_scratch: &mut Vec<*const Tensor>,
     reg_scratch: &mut Vec<f64>,
@@ -830,6 +902,49 @@ unsafe fn exec_instr(
                 );
             }
         }
+        OpCode::GradAllReduce(ref spec) => {
+            // args[0..local_lanes.len()] are this replica's lane
+            // gradients; any further arg is a scheduling chain edge
+            // (see `Program::attach_optimizer_replicated`) and is never
+            // read.  The fold is copy-then-axpy in ascending global lane
+            // order -- plain multiply-then-add, no FMA -- so the reduced
+            // value is one fixed scalar sequence regardless of how the
+            // lanes are distributed over replicas.
+            match comm {
+                Some(comm) => {
+                    debug_assert_eq!(comm.n_lanes, spec.n_lanes, "comm lane table mismatch");
+                    for (k, &lane) in spec.local_lanes.iter().enumerate() {
+                        comm.publish(spec.weight, lane, arg(k));
+                    }
+                    comm.barrier.wait();
+                    // SAFETY: every replica published its row before the
+                    // barrier, the pointees are arena slots that are
+                    // program outputs (never recycled) or resident weight
+                    // state (mutated only by the post-loop updates, after
+                    // the last closing barrier), and no replica leaves
+                    // until the closing barrier below -- so every lane
+                    // reference is live and quiescent for the whole fold
+                    let first = unsafe { comm.lane(spec.weight, 0) };
+                    out.reset(&instr.shape).copy_from_slice(first.data());
+                    for lane in 1..spec.n_lanes {
+                        let g = unsafe { comm.lane(spec.weight, lane) };
+                        kernels::axpy_accumulate_pool(out, g, 1.0, pool, simd);
+                    }
+                    comm.barrier.wait();
+                }
+                None => {
+                    debug_assert_eq!(
+                        spec.local_lanes.len(),
+                        spec.n_lanes,
+                        "an unbound executor must own every lane"
+                    );
+                    out.reset(&instr.shape).copy_from_slice(arg(0).data());
+                    for k in 1..spec.local_lanes.len() {
+                        kernels::axpy_accumulate_pool(out, arg(k), 1.0, pool, simd);
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -865,6 +980,13 @@ fn instr_cost(instr: &Instr, a0: Option<&Tensor>, out: &Tensor) -> (u64, u64) {
             let epi_elem = me.epi.exts.iter().filter(|e| **e == ExtKind::Elem).count() as u64;
             let flops = 2 * m * k * n + len * me.epi.ops.len() as u64;
             (flops, (m * k + k * n + m * n + epi_elem * len) * 8)
+        }
+        OpCode::GradAllReduce(ref spec) => {
+            // one streamed pass over the output per global lane (the
+            // tallied wall time also absorbs the barrier waits, which is
+            // exactly the reduce cost a profile should surface)
+            let lanes = spec.n_lanes.max(1) as u64;
+            (lanes * len, (lanes + 1) * len * 8)
         }
     }
 }

@@ -107,6 +107,8 @@ fn op_key(op: &OpCode, args: &[Val], shape: &[usize]) -> OpKey {
         // fusion runs after value numbering, so fused nodes never reach CSE
         OpCode::Fused(_) => unreachable!("Fused is produced after CSE"),
         OpCode::MatMulFused(_) => unreachable!("MatMulFused is produced after CSE"),
+        // appended by attach_optimizer_replicated, long after every pass
+        OpCode::GradAllReduce(_) => unreachable!("GradAllReduce is produced after CSE"),
     };
     OpKey(tag, payload, args.to_vec(), shape.to_vec())
 }
@@ -295,6 +297,9 @@ fn fold(op: &OpCode, args: &[&Tensor], shape: &[usize]) -> Tensor {
         OpCode::Fused(_) => unreachable!("Fused is produced after constant folding"),
         OpCode::MatMulFused(_) => {
             unreachable!("MatMulFused is produced after constant folding")
+        }
+        OpCode::GradAllReduce(_) => {
+            unreachable!("GradAllReduce is produced after constant folding")
         }
     }
 }
@@ -994,6 +999,9 @@ fn instr_cost(instr: &super::program::Instr) -> u64 {
     let elems = instr.shape.iter().product::<usize>().max(1) as u64;
     match instr.op {
         OpCode::MatMul | OpCode::MatMulNT | OpCode::MatMulFused(_) => elems * 16,
+        // one pass over the output per global lane (plus the barrier
+        // waits, which no static model can price)
+        OpCode::GradAllReduce(ref spec) => elems * spec.n_lanes.max(1) as u64,
         _ => elems,
     }
 }

@@ -109,6 +109,15 @@ pub enum OpCode {
     /// [`passes::fuse_matmul_epilogue`]); `args[0..2]` are the matmul
     /// operands, `args[2..]` the epilogue externals
     MatMulFused(Box<MatmulEpilogue>),
+    /// deterministic fixed-order gradient all-reduce across the lane
+    /// blocks of one weight: fold the per-lane gradients (this replica's
+    /// from `args`, remote replicas' through the bound
+    /// [`super::exec::ReplicaComm`]) in ascending global-lane order into
+    /// `out`.  Appended by [`Program::attach_optimizer_replicated`], never
+    /// produced by graph lowering; `args[0..local_lanes.len()]` are the
+    /// local lane gradients, any further arg is a scheduling chain edge
+    /// the kernel ignores
+    GradAllReduce(Box<GradReduceSpec>),
 }
 
 impl OpCode {
@@ -142,8 +151,22 @@ impl OpCode {
                     "dot-fused"
                 }
             }
+            OpCode::GradAllReduce(_) => "grad-allreduce",
         }
     }
+}
+
+/// Payload of [`OpCode::GradAllReduce`]: which weight's lane gradients to
+/// fold, and how the canonical lanes are distributed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GradReduceSpec {
+    /// weight state-slot index (also the row of the comm pointer table)
+    pub weight: usize,
+    /// total lanes in the canonical decomposition, across all replicas
+    pub n_lanes: usize,
+    /// global lane indices this replica computes, ascending; one
+    /// instruction arg per entry, in the same order
+    pub local_lanes: Vec<usize>,
 }
 
 /// Payload of [`OpCode::MatMulFused`]: which matmul flavour, plus the
@@ -384,51 +407,8 @@ impl Program {
             self.outputs.len()
         );
         let grads_start = self.outputs.len() - n_w;
-
-        // -- one state slot per weight, in weight order
-        let mut state_of_input: HashMap<usize, usize> = HashMap::new();
-        let mut states: Vec<StateSlot> = Vec::with_capacity(n_w);
-        for (s, &wid) in weight_ids.iter().enumerate() {
-            let pos = self.inputs.iter().position(|&id| id == wid);
-            let shape = match pos {
-                Some(k) => self.input_shapes[k].clone(),
-                // a weight the step never reads (its gradient is a shared
-                // zero const): the gradient output still has its shape
-                None => self.output_shapes[grads_start + s].clone(),
-            };
-            if let Some(k) = pos {
-                state_of_input.insert(k, s);
-            }
-            states.push(StateSlot { node: wid, shape, kind: StateKind::Weight });
-        }
-
-        // -- compact the surviving per-run inputs and remap every operand
-        let mut new_idx: Vec<Option<usize>> = vec![None; self.inputs.len()];
-        let mut inputs = Vec::new();
-        let mut input_shapes = Vec::new();
-        for k in 0..self.inputs.len() {
-            if state_of_input.contains_key(&k) {
-                continue;
-            }
-            new_idx[k] = Some(inputs.len());
-            inputs.push(self.inputs[k]);
-            input_shapes.push(self.input_shapes[k].clone());
-        }
-        let remap = |v: Operand| -> Operand {
-            match v {
-                Operand::In(k) => match state_of_input.get(&k) {
-                    Some(&s) => Operand::State(s),
-                    None => Operand::In(new_idx[k].expect("non-weight input survives")),
-                },
-                other => other,
-            }
-        };
-        for instr in &mut self.instrs {
-            for a in &mut instr.args {
-                *a = remap(*a);
-            }
-        }
-        let outputs: Vec<Operand> = self.outputs.iter().map(|&v| remap(v)).collect();
+        let (mut states, outputs) =
+            self.promote_weights_to_state(weight_ids, |s| grads_start + s);
 
         // -- the gradient outputs become in-place update instructions
         let mut updates = Vec::with_capacity(n_w);
@@ -475,8 +455,6 @@ impl Program {
 
         self.outputs = outputs[..grads_start].to_vec();
         self.output_shapes.truncate(grads_start);
-        self.inputs = inputs;
-        self.input_shapes = input_shapes;
         self.states = states;
         self.updates = updates;
         self.stats.resident_state_bytes = self.resident_state_bytes();
@@ -488,6 +466,156 @@ impl Program {
         self.schedule = passes::schedule(&self.instrs, self.n_slots);
         sched_stats(&mut self.stats, &self.schedule);
         self
+    }
+
+    /// [`Program::attach_optimizer`] for a *lane-blocked* step program
+    /// (see [`crate::pde::residual::build_lane_training_problem`]): the
+    /// trailing `weight_ids.len() * local_lanes.len()` outputs must be the
+    /// per-lane loss gradients, weight-major (`w0@lane0..w0@laneK,
+    /// w1@lane0, ...`).  For each weight, one [`OpCode::GradAllReduce`]
+    /// instruction folds the lane gradients in ascending *global* lane
+    /// order -- local lanes from its args, remote lanes through the
+    /// executor's bound [`super::exec::ReplicaComm`] -- into a fresh slot
+    /// the in-place update then consumes.  Each reduce chains on the
+    /// previous one so every replica walks the weights in the same order
+    /// (the shared barrier generations must pair up across replicas).
+    ///
+    /// With all lanes local (a single-replica run, no comm bound) the
+    /// fold degenerates to the same ascending-lane sum over the args, so
+    /// the update consumes bit-identical gradients at any replica count.
+    pub fn attach_optimizer_replicated(
+        mut self,
+        weight_ids: &[NodeId],
+        rule: UpdateRule,
+        n_lanes: usize,
+        local_lanes: &[usize],
+    ) -> Program {
+        assert!(self.updates.is_empty(), "optimizer already attached");
+        assert!(self.states.is_empty(), "program already has resident state");
+        let n_w = weight_ids.len();
+        let lanes = local_lanes.len();
+        assert!(lanes >= 1 && lanes <= n_lanes, "replica owns 1..=n_lanes lanes");
+        assert!(local_lanes.windows(2).all(|w| w[0] < w[1]), "local lanes must ascend");
+        assert!(*local_lanes.last().expect("lanes >= 1") < n_lanes, "lane out of range");
+        assert!(
+            self.outputs.len() >= n_w * lanes,
+            "outputs must end with one gradient per (weight, local lane) \
+             ({} outputs, {n_w} weights x {lanes} lanes)",
+            self.outputs.len()
+        );
+        let grads_start = self.outputs.len() - n_w * lanes;
+        let (mut states, outputs) =
+            self.promote_weights_to_state(weight_ids, |s| grads_start + s * lanes);
+
+        let mut updates = Vec::with_capacity(n_w);
+        let mut prev_reduce: Option<BufId> = None;
+        for s in 0..n_w {
+            let shape = states[s].shape.clone();
+            // a lane gradient may live in an arena slot or -- when it
+            // simplified to a bare weight input -- in resident state; the
+            // reduce reads it before any update runs, so it sees the
+            // pre-update value either way (no materializing copy needed)
+            let mut args: Vec<Operand> =
+                (0..lanes).map(|l| outputs[grads_start + s * lanes + l]).collect();
+            if let Some(prev) = prev_reduce {
+                args.push(Operand::Buf(prev));
+            }
+            let out = self.n_slots;
+            self.n_slots += 1;
+            let spec = GradReduceSpec { weight: s, n_lanes, local_lanes: local_lanes.to_vec() };
+            self.instrs.push(Instr {
+                op: OpCode::GradAllReduce(Box::new(spec)),
+                args,
+                out,
+                shape: shape.clone(),
+            });
+            prev_reduce = Some(out);
+            let moments = match rule {
+                UpdateRule::Sgd { .. } => None,
+                UpdateRule::Adam { .. } => {
+                    let mi = states.len();
+                    states.push(StateSlot {
+                        node: weight_ids[s],
+                        shape: shape.clone(),
+                        kind: StateKind::AdamM,
+                    });
+                    states.push(StateSlot { node: weight_ids[s], shape, kind: StateKind::AdamV });
+                    Some((mi, mi + 1))
+                }
+            };
+            updates.push(UpdateInstr { rule, weight: s, grad: Operand::Buf(out), moments });
+        }
+
+        self.outputs = outputs[..grads_start].to_vec();
+        self.output_shapes.truncate(grads_start);
+        self.states = states;
+        self.updates = updates;
+        self.stats.n_slots = self.n_slots;
+        self.stats.instructions = self.instrs.len();
+        self.stats.resident_state_bytes = self.resident_state_bytes();
+        self.stats.update_instrs = self.updates.len();
+        self.schedule = passes::schedule(&self.instrs, self.n_slots);
+        sched_stats(&mut self.stats, &self.schedule);
+        self
+    }
+
+    /// Shared core of the optimizer attachments: promote the `weight_ids`
+    /// inputs to resident state slots, compact the surviving per-run
+    /// inputs, and remap every operand.  `weight_grad_output(s)` locates
+    /// an output holding a gradient of weight `s` (the shape fallback for
+    /// a weight the step never reads).  Returns the weight state slots
+    /// and the fully remapped outputs.
+    fn promote_weights_to_state(
+        &mut self,
+        weight_ids: &[NodeId],
+        weight_grad_output: impl Fn(usize) -> usize,
+    ) -> (Vec<StateSlot>, Vec<Operand>) {
+        let mut state_of_input: HashMap<usize, usize> = HashMap::new();
+        let mut states: Vec<StateSlot> = Vec::with_capacity(weight_ids.len());
+        for (s, &wid) in weight_ids.iter().enumerate() {
+            let pos = self.inputs.iter().position(|&id| id == wid);
+            let shape = match pos {
+                Some(k) => self.input_shapes[k].clone(),
+                // a weight the step never reads (its gradient is a shared
+                // zero const): the gradient output still has its shape
+                None => self.output_shapes[weight_grad_output(s)].clone(),
+            };
+            if let Some(k) = pos {
+                state_of_input.insert(k, s);
+            }
+            states.push(StateSlot { node: wid, shape, kind: StateKind::Weight });
+        }
+
+        // -- compact the surviving per-run inputs and remap every operand
+        let mut new_idx: Vec<Option<usize>> = vec![None; self.inputs.len()];
+        let mut inputs = Vec::new();
+        let mut input_shapes = Vec::new();
+        for k in 0..self.inputs.len() {
+            if state_of_input.contains_key(&k) {
+                continue;
+            }
+            new_idx[k] = Some(inputs.len());
+            inputs.push(self.inputs[k]);
+            input_shapes.push(self.input_shapes[k].clone());
+        }
+        let remap = |v: Operand| -> Operand {
+            match v {
+                Operand::In(k) => match state_of_input.get(&k) {
+                    Some(&s) => Operand::State(s),
+                    None => Operand::In(new_idx[k].expect("non-weight input survives")),
+                },
+                other => other,
+            }
+        };
+        for instr in &mut self.instrs {
+            for a in &mut instr.args {
+                *a = remap(*a);
+            }
+        }
+        let outputs: Vec<Operand> = self.outputs.iter().map(|&v| remap(v)).collect();
+        self.inputs = inputs;
+        self.input_shapes = input_shapes;
+        (states, outputs)
     }
 }
 

@@ -267,6 +267,54 @@ impl PdeBatch {
     pub fn empty() -> Self {
         Self { p: Tensor::zeros(&[0]), feeds: Vec::new() }
     }
+
+    /// Copy the function-dimension rows `rows = (r0, r1)` of this batch
+    /// into `shard`: the sensor matrix and every function-rowed feed
+    /// ([`is_function_rowed`]) keep only those rows, while point feeds
+    /// (shared by all functions) are copied whole.  Overwrites in place
+    /// like [`PdeBatcher::fill_batch`] -- after the first call nothing
+    /// reallocates.
+    ///
+    /// Sharding happens *after* a full draw, so the batcher's random
+    /// sequence is exactly the unsharded one, and concatenating the
+    /// shards of a lane partition reproduces this batch bit-for-bit --
+    /// the property that makes data-parallel replicas trajectory-exact
+    /// (pinned by `function_shards_concatenate_to_the_unsharded_batch`).
+    pub fn shard_into(&self, rows: (usize, usize), shard: &mut PdeBatch) {
+        let (r0, r1) = rows;
+        let m = self.p.shape()[0];
+        assert!(r0 < r1 && r1 <= m, "bad function-row range {r0}..{r1} of {m}");
+        copy_rows(&self.p, r0, r1, &mut shard.p);
+        for (i, (name, src)) in self.feeds.iter().enumerate() {
+            if shard.feeds.len() == i {
+                shard.feeds.push((name.clone(), Tensor::zeros(&[0])));
+            }
+            let (have, dst) = &mut shard.feeds[i];
+            assert_eq!(have, name, "feed order changed between shards");
+            if is_function_rowed(name) {
+                debug_assert_eq!(src.shape()[0], m, "function-rowed feed has M rows");
+                copy_rows(src, r0, r1, dst);
+            } else {
+                dst.reset(src.shape()).copy_from_slice(src.data());
+            }
+        }
+        assert_eq!(shard.feeds.len(), self.feeds.len(), "stale extra feeds in shard");
+    }
+}
+
+/// Whether a named feed's rows are input functions (the paper's M
+/// dimension): exactly the auxiliary fields the residual layer registers
+/// per function -- everything else is a point block shared by every
+/// function.  This is what [`PdeBatch::shard_into`] splits.
+pub fn is_function_rowed(name: &str) -> bool {
+    matches!(name, "in.f" | "in.q" | "ic.u0")
+}
+
+/// Rows `r0..r1` of a row-major `(rows, width)` block copied into `dst`
+/// (reset to `(r1 - r0, width)`, reusing its allocation).
+fn copy_rows(src: &Tensor, r0: usize, r1: usize, dst: &mut Tensor) {
+    let w = src.shape()[1];
+    dst.reset(&[r1 - r0, w]).copy_from_slice(&src.data()[r0 * w..r1 * w]);
 }
 
 /// Batch generator for the *native* engine (no artifacts, no PJRT): every
@@ -827,6 +875,50 @@ mod tests {
         let c1 = b.last_coeffs().to_vec();
         b.next_batch();
         assert_ne!(c1, b.last_coeffs());
+    }
+
+    #[test]
+    fn function_shards_concatenate_to_the_unsharded_batch() {
+        use crate::pde::residual::{lane_bounds, lane_count};
+        // m = 5 over 4 lanes exercises the M % N != 0 remainder (lane row
+        // counts 1/1/1/2); three steps prove sharding leaves the
+        // batcher's draw sequence untouched
+        let m = 5;
+        for kind in
+            [ProblemKind::Antiderivative, ProblemKind::Burgers, ProblemKind::Kirchhoff]
+        {
+            let q = if kind == ProblemKind::Kirchhoff { 9 } else { 6 };
+            let mut rng = Pcg64::seeded(21);
+            let mut b = PdeBatcher::new(kind, spec(m, 8, 6, q), &mut rng).unwrap();
+            let mut rng2 = Pcg64::seeded(21);
+            let mut unsharded = PdeBatcher::new(kind, spec(m, 8, 6, q), &mut rng2).unwrap();
+            let n_lanes = lane_count(m);
+            let mut shards: Vec<PdeBatch> = (0..n_lanes).map(|_| PdeBatch::empty()).collect();
+            for _step in 0..3 {
+                let full = b.next_batch();
+                let want = unsharded.next_batch();
+                assert_eq!(full.p.data(), want.p.data(), "draw sequence drifted");
+                for (l, s) in shards.iter_mut().enumerate() {
+                    full.shard_into(lane_bounds(m, n_lanes, l), s);
+                }
+                let cat: Vec<f64> =
+                    shards.iter().flat_map(|s| s.p.data().iter().copied()).collect();
+                assert_eq!(cat, full.p.data(), "sensor rows");
+                for (i, (name, src)) in full.feeds.iter().enumerate() {
+                    if is_function_rowed(name) {
+                        let cat: Vec<f64> = shards
+                            .iter()
+                            .flat_map(|s| s.feeds[i].1.data().iter().copied())
+                            .collect();
+                        assert_eq!(cat, src.data(), "{name}");
+                    } else {
+                        for s in &shards {
+                            assert_eq!(s.feeds[i].1.data(), src.data(), "{name}");
+                        }
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -21,13 +21,24 @@
 //!   *or* bias-corrected Adam, `--optimizer`) runs **inside** the
 //!   compiled step program: weights and Adam moments stay resident in
 //!   the executor and are updated in place, so one program execution is
-//!   the whole training step.
+//!   the whole training step;
+//! * [`replica`]    -- data-parallel replica executors for the native
+//!   path: the function (branch) dimension is sharded into canonical
+//!   lane blocks, each replica compiles and runs its own step Program on
+//!   its own persistent [`crate::util::pool::Pool`] (the thread budget
+//!   is split across replicas), and gradients fold through a
+//!   deterministic fixed-order in-Program all-reduce
+//!   ([`crate::autodiff::program::OpCode::GradAllReduce`]) so N-replica
+//!   trajectories bit-match single-replica runs.  The native trainer is
+//!   no longer a single-pool/single-executor loop -- it owns a
+//!   [`replica::ReplicaSet`].
 
 pub mod batch;
 pub mod checkpoint;
 pub mod fields;
 pub mod native;
 pub mod params;
+pub mod replica;
 pub mod validate;
 
 use crate::config::RunConfig;

@@ -26,6 +26,16 @@
 //! resident trajectories bit-match the feed-based ones
 //! (`rust/tests/resident_step.rs`).
 //!
+//! With more than one function per batch the trainer steps the
+//! data-parallel replica layer ([`super::replica`]) instead of a single
+//! program: the function dimension is decomposed into canonical lane
+//! blocks, each replica executor owns a contiguous run of lanes on its
+//! own kernel pool (`--replicas` / `ZCS_REPLICAS` splits the thread
+//! budget), and gradients fold through the deterministic fixed-order
+//! in-Program all-reduce -- so N-replica trajectories bit-match
+//! single-replica runs, losses and final weights alike
+//! (`rust/tests/replica_train.rs`).
+//!
 //! Batches come from [`PdeBatcher`], matched to the residual layer's feed
 //! schema by name.  [`NativeReport`] carries the same staged timings as
 //! the PJRT [`super::TrainReport`], plus the compiler's
@@ -41,6 +51,7 @@
 use crate::autodiff::zcs_demo::Strategy;
 use crate::autodiff::{Executor, NodeId, ProfileReport, Program, SchedMode, UpdateRule};
 use crate::coordinator::batch::{PdeBatch, PdeBatchSpec, PdeBatcher};
+use crate::coordinator::replica::ReplicaSet;
 use crate::hlostats::{analyze_program, ProgramReport};
 use crate::pde::residual::{
     build_forward, build_training_problem, init_problem_weights, BlockSizes, NetDims,
@@ -127,6 +138,12 @@ pub struct NativeRunConfig {
     /// kernel threads for the executor (0 = auto: `ZCS_THREADS`, else 1);
     /// results are bit-identical for any value
     pub threads: usize,
+    /// data-parallel replica executors sharding the function dimension
+    /// (0 = auto: `ZCS_REPLICAS`, else 1); clamped to the lane count and
+    /// forced to 1 on the feed-based fallback.  The thread budget is
+    /// split across replicas and trajectories are bit-identical for any
+    /// value ([`super::replica`])
+    pub replicas: usize,
     /// the per-step weight update (SGD or Adam)
     pub optimizer: Optimizer,
     /// keep weights + optimizer state resident in the executor and step
@@ -168,6 +185,7 @@ impl Default for NativeRunConfig {
             bank_grid: 128,
             log_every: 20,
             threads: 0,
+            replicas: 0,
             optimizer: Optimizer::Sgd,
             resident: true,
             schedule: SchedMode::from_env(),
@@ -224,9 +242,19 @@ pub struct NativeReport {
     pub simd: SimdLevel,
     /// whether batch generation overlapped execution on a producer thread
     pub pipelined: bool,
+    /// data-parallel replica executors the run stepped on (1 unless the
+    /// run was replicated)
+    pub replicas: usize,
+    /// lane blocks in the canonical function-dimension decomposition
+    /// (1 on the single-program `m == 1` path)
+    pub lanes: usize,
     /// per-opcode / per-wavefront profile, when requested
-    /// ([`NativeRunConfig::profile`])
+    /// ([`NativeRunConfig::profile`]); on a replicated run this is the
+    /// lead replica's profile
     pub profile: Option<ProfileReport>,
+    /// profiles of replicas 1.. on a profiled replicated run (the lead
+    /// replica's is [`NativeReport::profile`]); empty otherwise
+    pub replica_profiles: Vec<ProfileReport>,
 }
 
 impl NativeReport {
@@ -283,9 +311,27 @@ enum FeedSrc {
 /// error either way.)
 pub struct NativeTrainer {
     pub config: NativeRunConfig,
+    batcher: PdeBatcher,
+    engine: Engine,
+    coord_dim: usize,
+    compile_time: Duration,
+}
+
+/// The stepping machinery behind a [`NativeTrainer`]: one program over
+/// the whole batch when there is a single function, the lane-sharded
+/// replica layer otherwise (even a 1-replica set, so the decomposition
+/// -- and therefore the trajectory -- never depends on the replica
+/// count, only on the problem).
+enum Engine {
+    Single(SingleEngine),
+    Replicated(ReplicaSet),
+}
+
+/// The legacy single-program engine (`m == 1`): one compiled step
+/// program + one executor over the whole function batch.
+struct SingleEngine {
     program: Program,
     exec: Executor,
-    batcher: PdeBatcher,
     /// wb (q,h), wb2 (h,k), wt (d,h), wt2 (h,k) -- fallback path only;
     /// resident weights live in the executor's state slots
     weights: Vec<Tensor>,
@@ -304,15 +350,12 @@ pub struct NativeTrainer {
     /// time so stepping never rebuilds a feed `HashMap`
     feed_plan: Vec<FeedSrc>,
     /// reusable per-step feed buffer (raw pointers so its capacity
-    /// persists across steps; re-borrowed inside [`NativeTrainer::step`])
+    /// persists across steps; re-borrowed inside [`StepEngine::step`])
     feed_scratch: Vec<*const Tensor>,
-    coord_dim: usize,
-    compile_time: Duration,
 }
 
-impl NativeTrainer {
-    pub fn new(config: NativeRunConfig) -> Result<Self> {
-        ensure!(config.m >= 1 && config.n >= 1 && config.q >= 1, "empty problem");
+impl SingleEngine {
+    fn new(config: &NativeRunConfig) -> Result<(Self, usize, Duration)> {
         let t0 = Instant::now();
         let built = build_training_problem(
             config.problem,
@@ -331,19 +374,6 @@ impl NativeTrainer {
 
         let weights = init_problem_weights(&built, config.seed);
         let n_weights = weights.len();
-        let mut batch_rng = Pcg64::new(config.seed, 1);
-        let batcher = PdeBatcher::new(
-            config.problem,
-            PdeBatchSpec {
-                m: config.m,
-                n_in: config.n,
-                n_bc: config.n_bc,
-                q: config.q,
-                bank_size: config.bank_size,
-                bank_grid: config.bank_grid,
-            },
-            &mut batch_rng,
-        )?;
 
         // resolve every program input to its source once, so the hot loop
         // never hashes node ids or rebuilds a feed map (resident programs
@@ -394,11 +424,9 @@ impl NativeTrainer {
             };
             (weights, moments)
         };
-        Ok(Self {
-            config,
+        let engine = Self {
             program,
             exec,
-            batcher,
             weights,
             moments,
             host_t: 0,
@@ -410,17 +438,80 @@ impl NativeTrainer {
             extra_inputs: built.extra_inputs,
             feed_plan,
             feed_scratch: Vec::new(),
-            coord_dim: built.coord_dim,
-            compile_time,
-        })
+        };
+        Ok((engine, built.coord_dim, compile_time))
     }
 
-    /// Compiler statistics of the step program.
+    /// Borrow the per-step stepping view (see [`NativeTrainer::split`]).
+    fn step_engine(&mut self, lr: f64, optimizer: Optimizer) -> StepEngine<'_> {
+        let Self {
+            program,
+            exec,
+            weights,
+            moments,
+            host_t,
+            resident,
+            feeds,
+            extra_inputs,
+            feed_plan,
+            feed_scratch,
+            ..
+        } = self;
+        StepEngine {
+            program: &*program,
+            exec,
+            weights,
+            moments,
+            host_t,
+            resident: *resident,
+            lr,
+            optimizer,
+            feeds: feeds.as_slice(),
+            extra_inputs: extra_inputs.as_slice(),
+            feed_plan: feed_plan.as_slice(),
+            feed_scratch,
+        }
+    }
+}
+
+impl NativeTrainer {
+    pub fn new(config: NativeRunConfig) -> Result<Self> {
+        ensure!(config.m >= 1 && config.n >= 1 && config.q >= 1, "empty problem");
+        let mut batch_rng = Pcg64::new(config.seed, 1);
+        let batcher = PdeBatcher::new(
+            config.problem,
+            PdeBatchSpec {
+                m: config.m,
+                n_in: config.n,
+                n_bc: config.n_bc,
+                q: config.q,
+                bank_size: config.bank_size,
+                bank_grid: config.bank_grid,
+            },
+            &mut batch_rng,
+        )?;
+        let (engine, coord_dim, compile_time) = if config.m == 1 {
+            let (engine, coord_dim, compile_time) = SingleEngine::new(&config)?;
+            (Engine::Single(engine), coord_dim, compile_time)
+        } else {
+            let set = ReplicaSet::new(&config)?;
+            let (coord_dim, compile_time) = (set.coord_dim(), set.compile_time());
+            (Engine::Replicated(set), coord_dim, compile_time)
+        };
+        Ok(Self { config, batcher, engine, coord_dim, compile_time })
+    }
+
+    /// Compiler statistics of the step program (the lead replica's, on a
+    /// replicated run -- replica programs differ only in lane ownership).
     pub fn program_report(&self) -> ProgramReport {
-        analyze_program(&self.program)
+        match &self.engine {
+            Engine::Single(e) => analyze_program(&e.program),
+            Engine::Replicated(r) => r.program_report(),
+        }
     }
 
-    /// Graph build + compile time (paid once at construction).
+    /// Graph build + compile time (paid once at construction; summed over
+    /// all replica programs on a replicated run).
     pub fn compile_time(&self) -> Duration {
         self.compile_time
     }
@@ -429,38 +520,79 @@ impl NativeTrainer {
     /// resident state slots on the resident path, from the host copies on
     /// the fallback path.
     pub fn weights(&self) -> &[Tensor] {
-        if self.resident {
-            &self.exec.states()[..self.n_weights]
-        } else {
-            &self.weights
+        match &self.engine {
+            Engine::Single(e) => {
+                if e.resident {
+                    &e.exec.states()[..e.n_weights]
+                } else {
+                    &e.weights
+                }
+            }
+            Engine::Replicated(r) => r.weights(),
         }
     }
 
-    /// Whether weights + optimizer state live inside the executor.
+    /// Whether weights + optimizer state live inside the executor(s).
     pub fn resident(&self) -> bool {
-        self.resident
+        match &self.engine {
+            Engine::Single(e) => e.resident,
+            Engine::Replicated(r) => r.resident(),
+        }
     }
 
-    /// Bytes of executor-resident training state (0 on the fallback path).
+    /// Bytes of executor-resident training state (0 on the fallback
+    /// path); per replica, on a replicated run.
     pub fn resident_state_bytes(&self) -> u64 {
-        self.program.resident_state_bytes()
+        match &self.engine {
+            Engine::Single(e) => e.program.resident_state_bytes(),
+            Engine::Replicated(r) => r.resident_state_bytes(),
+        }
+    }
+
+    /// Total kernel-thread budget of the run: the executor's pool on the
+    /// single-program path, the budget split across the replica pools on
+    /// a replicated run.
+    pub fn threads(&self) -> usize {
+        match &self.engine {
+            Engine::Single(e) => e.exec.threads(),
+            Engine::Replicated(r) => r.threads(),
+        }
     }
 
     /// Graph id of the sensor-matrix leaf `p` (useful for feeding the
-    /// step program directly in tests and tools).
-    pub fn sensor_node(&self) -> NodeId {
-        self.p_id
+    /// step program directly in tests and tools); `None` on a replicated
+    /// run, where every lane block owns its own sensor leaf.
+    pub fn sensor_node(&self) -> Option<NodeId> {
+        match &self.engine {
+            Engine::Single(e) => Some(e.p_id),
+            Engine::Replicated(_) => None,
+        }
     }
 
     /// Graph ids of the weight leaves, aligned with
-    /// [`NativeTrainer::weights`].
-    pub fn weight_nodes(&self) -> &[NodeId] {
-        &self.weight_ids
+    /// [`NativeTrainer::weights`]; `None` on a replicated run (each
+    /// replica program has its own leaf ids).
+    pub fn weight_nodes(&self) -> Option<&[NodeId]> {
+        match &self.engine {
+            Engine::Single(e) => Some(&e.weight_ids),
+            Engine::Replicated(_) => None,
+        }
     }
 
-    /// Kernel threads the step executor runs on.
-    pub fn threads(&self) -> usize {
-        self.exec.threads()
+    /// Data-parallel replica executors stepping each batch.
+    pub fn replicas(&self) -> usize {
+        match &self.engine {
+            Engine::Single(_) => 1,
+            Engine::Replicated(r) => r.replicas(),
+        }
+    }
+
+    /// Lane blocks in the function-dimension decomposition.
+    pub fn lanes(&self) -> usize {
+        match &self.engine {
+            Engine::Single(_) => 1,
+            Engine::Replicated(r) => r.lanes(),
+        }
     }
 
     /// Draw the next batch from the trainer's own batcher (exposed so
@@ -472,10 +604,10 @@ impl NativeTrainer {
 
     /// One optimizer step on one batch; returns (loss, loss_pde, loss_bc).
     ///
-    /// Resident path: one [`Executor::run_scalars`] call is the whole
-    /// step -- batch references in, three loss scalars out, weights and
-    /// moments stepped in place inside the executor.  After warmup the
-    /// loop performs no heap allocation at all (asserted by
+    /// Resident path: one [`Executor::run_scalars`] call per replica is
+    /// the whole step -- batch references in, loss scalars out, weights
+    /// and moments stepped in place inside the executor(s).  After warmup
+    /// the loop performs no heap allocation at all (asserted by
     /// `rust/tests/resident_step.rs`).  Fallback path: weights are fed per
     /// step and updated host-side with the same optimizer kernels.
     ///
@@ -490,39 +622,14 @@ impl NativeTrainer {
     /// Split the trainer into the stepping engine and the batcher -- the
     /// disjoint borrows that let [`NativeTrainer::run`]'s pipelined mode
     /// fill batches on a producer thread while the main thread steps.
-    fn split(&mut self) -> (StepEngine<'_>, &mut PdeBatcher) {
-        let Self {
-            config,
-            program,
-            exec,
-            batcher,
-            weights,
-            moments,
-            host_t,
-            resident,
-            feeds,
-            extra_inputs,
-            feed_plan,
-            feed_scratch,
-            ..
-        } = self;
-        (
-            StepEngine {
-                program: &*program,
-                exec,
-                weights,
-                moments,
-                host_t,
-                resident: *resident,
-                lr: config.lr,
-                optimizer: config.optimizer,
-                feeds: feeds.as_slice(),
-                extra_inputs: extra_inputs.as_slice(),
-                feed_plan: feed_plan.as_slice(),
-                feed_scratch,
-            },
-            batcher,
-        )
+    fn split(&mut self) -> (StepRef<'_>, &mut PdeBatcher) {
+        let engine = match &mut self.engine {
+            Engine::Single(e) => {
+                StepRef::Single(e.step_engine(self.config.lr, self.config.optimizer))
+            }
+            Engine::Replicated(r) => StepRef::Replicated(r),
+        };
+        (engine, &mut self.batcher)
     }
 
     /// Run the configured number of steps -- synchronously, or with batch
@@ -615,6 +722,12 @@ impl NativeTrainer {
                 })?;
             }
         }
+        let (schedule, simd, profile, replica_profiles) = match &mut self.engine {
+            Engine::Single(e) => (e.exec.sched(), e.exec.simd(), e.exec.take_profile(), Vec::new()),
+            Engine::Replicated(r) => {
+                (r.sched(), r.simd(), r.take_profile(), r.take_replica_profiles())
+            }
+        };
         Ok(NativeReport {
             curve,
             final_loss: last.0,
@@ -624,11 +737,14 @@ impl NativeTrainer {
             compile_time: self.compile_time,
             program: self.program_report(),
             optimizer: self.config.optimizer,
-            resident_state_bytes: self.program.resident_state_bytes(),
-            schedule: self.exec.sched(),
-            simd: self.exec.simd(),
+            resident_state_bytes: self.resident_state_bytes(),
+            schedule,
+            simd,
             pipelined: pipeline,
-            profile: self.exec.take_profile(),
+            replicas: self.replicas(),
+            lanes: self.lanes(),
+            profile,
+            replica_profiles,
         })
     }
 
@@ -721,10 +837,27 @@ impl NativeTrainer {
     }
 }
 
-/// The stepping half of a [`NativeTrainer`]: everything `step` needs
-/// except the batcher, split out ([`NativeTrainer::split`]) so the
-/// pipelined run can lend the batcher to a producer thread while this
-/// stays on the training thread.
+/// The stepping half of a [`NativeTrainer`] ([`NativeTrainer::split`]):
+/// either the single-program engine's per-step view or the whole replica
+/// set, borrowed away from the batcher so the pipelined run can lend the
+/// batcher to a producer thread while this stays on the training thread.
+enum StepRef<'a> {
+    Single(StepEngine<'a>),
+    Replicated(&'a mut ReplicaSet),
+}
+
+impl StepRef<'_> {
+    /// One optimizer step on one batch (see [`NativeTrainer::step`]).
+    fn step(&mut self, batch: &PdeBatch) -> Result<(f64, f64, f64)> {
+        match self {
+            StepRef::Single(e) => e.step(batch),
+            StepRef::Replicated(r) => r.step(batch),
+        }
+    }
+}
+
+/// The single-program stepping view: everything an `m == 1` step needs
+/// except the batcher.
 struct StepEngine<'a> {
     program: &'a Program,
     exec: &'a mut Executor,
@@ -999,35 +1132,40 @@ mod tests {
 
     #[test]
     fn gradients_match_finite_differences() {
-        // d loss / d wb2[0,0] by central FD on a frozen batch; the
-        // feed-based fallback exposes the gradient outputs this test reads
+        // d loss / d wb2[0,0] by central FD on a frozen batch; m == 1
+        // runs the single-program engine, whose feed-based fallback
+        // exposes the gradient outputs this test reads
         let mut cfg = tiny(Strategy::Zcs);
+        cfg.m = 1;
         cfg.resident = false;
         let mut trainer = NativeTrainer::new(cfg).unwrap();
         let batch = trainer.batcher.next_batch();
+        let Engine::Single(engine) = &mut trainer.engine else {
+            panic!("m == 1 must run the single-program engine");
+        };
 
         let mut inputs: HashMap<NodeId, Tensor> = HashMap::new();
-        for (id, w) in trainer.weight_ids.iter().zip(&trainer.weights) {
+        for (id, w) in engine.weight_ids.iter().zip(&engine.weights) {
             inputs.insert(*id, w.clone());
         }
-        inputs.insert(trainer.p_id, batch.p.clone());
-        for (name, node) in &trainer.feeds {
+        inputs.insert(engine.p_id, batch.p.clone());
+        for (name, node) in &engine.feeds {
             let t = batch.feeds.iter().find(|(n, _)| n == name).unwrap().1.clone();
             inputs.insert(*node, t);
         }
-        for (id, t) in &trainer.extra_inputs {
+        for (id, t) in &engine.extra_inputs {
             inputs.insert(*id, t.clone());
         }
-        let outs = trainer.exec.run(&trainer.program, &inputs);
+        let outs = engine.exec.run(&engine.program, &inputs);
         let analytic = outs[4].data()[0]; // d loss / d wb2, first entry
 
         let h = 1e-6;
         let mut loss_at = |delta: f64| -> f64 {
             let mut shifted = inputs.clone();
-            let mut w = trainer.weights[1].clone();
+            let mut w = engine.weights[1].clone();
             w.data_mut()[0] += delta;
-            shifted.insert(trainer.weight_ids[1], w);
-            trainer.exec.run(&trainer.program, &shifted)[0].data()[0]
+            shifted.insert(engine.weight_ids[1], w);
+            engine.exec.run(&engine.program, &shifted)[0].data()[0]
         };
         let fd = (loss_at(h) - loss_at(-h)) / (2.0 * h);
         assert!(

@@ -1,0 +1,623 @@
+//! Data-parallel replica executors for the native training path.
+//!
+//! A [`ReplicaSet`] shards the *function* dimension (the paper's M) of
+//! one training step across N replica executors.  The batch is always
+//! decomposed into the canonical [`lane_count`] lane blocks -- a property
+//! of the problem size, never of N -- and each replica compiles its own
+//! resident step [`Program`] over a contiguous run of those lanes
+//! ([`Program::attach_optimizer_replicated`]).  Per step, every replica
+//! runs forward + backward over its own function rows only, then its
+//! in-Program `grad-allreduce` instructions meet the group at a barrier
+//! and fold *all* lanes' gradients in one fixed ascending order, so each
+//! replica applies the identical reduced gradient to its own copy of the
+//! resident weights.  No gradient ever crosses the host boundary: the
+//! reduce reads peer arena slots through the [`ReplicaComm`] pointer
+//! table and accumulates with the same multiply-then-add `axpy` kernel
+//! at every width and thread count.
+//!
+//! Determinism contract: because the lane decomposition and the fold
+//! order are invariant in N, an N-replica run is **bit-identical** to a
+//! single replica executing the same lanes back to back -- losses and
+//! final weights alike (`rust/tests/replica_train.rs` pins every native
+//! problem x strategy x optimizer at 1, 2, and 4 replicas).
+//!
+//! Threading: the parent thread budget ([`NativeRunConfig::threads`],
+//! resolved through `ZCS_THREADS`) is split evenly across replicas, each
+//! of which owns a persistent [`crate::util::pool::Pool`]; replica 0 (the
+//! *lead*) steps inline on the training thread while replicas 1.. are
+//! driven by parked helper threads woken once per step.  The feed-based
+//! fallback (`resident: false`) keeps weights host-side and therefore
+//! always runs single-replica, folding its lane gradients with the same
+//! serial `axpy` schedule.
+//!
+//! [`lane_count`]: crate::pde::residual::lane_count
+
+use crate::autodiff::{Executor, NodeId, ProfileReport, Program, ReplicaComm, SchedMode};
+use crate::coordinator::batch::PdeBatch;
+use crate::coordinator::native::{NativeRunConfig, Optimizer};
+use crate::hlostats::{analyze_program, ProgramReport};
+use crate::pde::residual::{
+    build_lane_training_problem, init_weights, lane_bounds, lane_count, BlockSizes,
+};
+use crate::tensor::kernels;
+use crate::tensor::simd::SimdLevel;
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, ensure, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Where one replica-program input comes from on the per-step fast path
+/// (the lane-blocked analogue of the trainer's single-program feed plan).
+#[derive(Clone, Copy, Debug)]
+enum LaneFeedSrc {
+    /// index into the host weight vector (feed-based fallback only:
+    /// resident programs read weights from executor state instead)
+    Weight(usize),
+    /// the sensor matrix of local lane shard `j`
+    Sensor(usize),
+    /// named feed `k` of local lane shard `j` (shards arrive in the
+    /// batcher's registration order, which is the lane builder's order)
+    Feed(usize, usize),
+    /// index into the flattened constant extras (ZCS `z` and `a`)
+    Extra(usize),
+}
+
+/// One replica's compiled step program, executor, and per-step buffers.
+struct ReplicaEngine {
+    program: Program,
+    exec: Executor,
+    /// global lane indices this replica owns, ascending
+    local_lanes: Vec<usize>,
+    /// function-row range of each local lane, aligned with `local_lanes`
+    rows: Vec<(usize, usize)>,
+    /// one shard of the global batch per local lane, refilled in place
+    /// every step (allocation-free after warmup)
+    shards: Vec<PdeBatch>,
+    /// one source per [`Program::inputs`] entry, resolved at build time
+    feed_plan: Vec<LaneFeedSrc>,
+    /// reusable feed buffer (raw pointers so its capacity persists; only
+    /// populated inside one step call, cleared before it returns)
+    feed_scratch: Vec<*const Tensor>,
+    /// constant extra inputs of all local lanes, flattened
+    extras: Vec<Tensor>,
+    /// lane-major `[loss, loss_pde, loss_bc]` readback, 3 per local lane
+    losses: Vec<f64>,
+}
+
+// SAFETY: the only non-`Send` fields are raw-pointer scratch buffers --
+// `feed_scratch` here and the executor's operand scratch -- and both are
+// strictly call-local: populated and drained inside a single step, so the
+// engine only ever moves between threads while they hold no live
+// pointers.  Everything else is owned data or `Send + Sync` `Arc`s.
+unsafe impl Send for ReplicaEngine {}
+
+impl ReplicaEngine {
+    /// Refill this replica's per-lane shards from the global batch.
+    fn fill(&mut self, batch: &PdeBatch) {
+        for (rows, shard) in self.rows.iter().zip(&mut self.shards) {
+            batch.shard_into(*rows, shard);
+        }
+    }
+
+    /// Resolve the feed plan into program-input order (no hashing, no
+    /// clones; `weights` is empty on the resident path).
+    fn feed_refs(&mut self, weights: &[Tensor]) {
+        self.feed_scratch.clear();
+        for src in &self.feed_plan {
+            let t: &Tensor = match *src {
+                LaneFeedSrc::Weight(i) => &weights[i],
+                LaneFeedSrc::Sensor(j) => &self.shards[j].p,
+                LaneFeedSrc::Feed(j, k) => &self.shards[j].feeds[k].1,
+                LaneFeedSrc::Extra(i) => &self.extras[i],
+            };
+            self.feed_scratch.push(t as *const Tensor);
+        }
+    }
+
+    /// One resident step over the already-filled shards: blocks at the
+    /// group barriers inside the `grad-allreduce` instructions until
+    /// every replica has folded, leaving the lane losses in `self.losses`.
+    fn step_resident(&mut self) {
+        self.feed_refs(&[]);
+        // SAFETY: `&Tensor` and `*const Tensor` have identical layout;
+        // every pointee (shards, extras) lives in `self`, outlives this
+        // call, and is not mutated while the executor borrows it
+        let ins: &[&Tensor] = unsafe {
+            std::slice::from_raw_parts(
+                self.feed_scratch.as_ptr() as *const &Tensor,
+                self.feed_scratch.len(),
+            )
+        };
+        self.exec.run_scalars(&self.program, ins, &mut self.losses);
+        self.feed_scratch.clear();
+    }
+
+    /// One feed-based run over the filled shards: returns the program
+    /// outputs (lane-major losses, then weight-major per-lane gradients).
+    fn step_fallback(&mut self, weights: &[Tensor]) -> Vec<Tensor> {
+        self.feed_refs(weights);
+        // SAFETY: as in `step_resident`; `weights` additionally outlives
+        // the call and is disjoint from everything the executor writes
+        let ins: &[&Tensor] = unsafe {
+            std::slice::from_raw_parts(
+                self.feed_scratch.as_ptr() as *const &Tensor,
+                self.feed_scratch.len(),
+            )
+        };
+        let outs = self.exec.run_inputs(&self.program, ins);
+        self.feed_scratch.clear();
+        outs
+    }
+}
+
+/// Command mailbox state of one parked replica driver.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Cmd {
+    Idle,
+    Step,
+    Exit,
+}
+
+struct SlotState {
+    /// parked engine; taken out by the driver for the duration of a step
+    engine: Option<ReplicaEngine>,
+    cmd: Cmd,
+    /// the last commanded step has finished and `engine` is parked again
+    done: bool,
+}
+
+/// Mailbox through which the training thread commands one helper-driven
+/// replica (replicas 1..; the lead steps inline).
+struct ReplicaSlot {
+    state: Mutex<SlotState>,
+    cv: Condvar,
+}
+
+/// Helper-thread loop: wait for a step command, run it (blocking at the
+/// group barriers with the other replicas), park the engine again.
+fn replica_driver(slot: &ReplicaSlot) {
+    loop {
+        let mut engine = {
+            let mut st = slot.state.lock().unwrap();
+            loop {
+                match st.cmd {
+                    Cmd::Idle => st = slot.cv.wait(st).unwrap(),
+                    Cmd::Exit => return,
+                    Cmd::Step => break,
+                }
+            }
+            st.cmd = Cmd::Idle;
+            st.engine.take().expect("replica engine missing at step")
+        };
+        engine.step_resident();
+        let mut st = slot.state.lock().unwrap();
+        st.engine = Some(engine);
+        st.done = true;
+        slot.cv.notify_all();
+    }
+}
+
+/// N data-parallel replica executors stepping one sharded batch in lock
+/// step (see the module doc).  Constructed by
+/// [`NativeTrainer`](crate::coordinator::native::NativeTrainer) whenever
+/// the problem has more than one function; a single-replica set folds
+/// all lanes locally and involves no threads or barriers beyond its own
+/// kernel pool.
+pub struct ReplicaSet {
+    /// replica 0, stepped inline on the training thread
+    lead: ReplicaEngine,
+    /// replicas 1.., each parked behind its driver thread's mailbox
+    others: Vec<Arc<ReplicaSlot>>,
+    drivers: Vec<JoinHandle<()>>,
+    n_lanes: usize,
+    n_replicas: usize,
+    n_weights: usize,
+    /// total kernel-thread budget (what [`ReplicaSet::threads`] reports)
+    budget: usize,
+    per_replica_threads: usize,
+    resident: bool,
+    optimizer: Optimizer,
+    lr: f64,
+    /// fallback path only -- resident weights live in executor state
+    host_weights: Vec<Tensor>,
+    /// host-side Adam (m, v) pairs -- fallback path only
+    host_moments: Vec<(Tensor, Tensor)>,
+    /// host-side optimizer timestep -- fallback path only
+    host_t: u64,
+    /// fallback gradient accumulators, one per weight, reused every step
+    grad_scratch: Vec<Tensor>,
+    /// per-global-lane `[loss, loss_pde, loss_bc]` staging for the fold
+    lane_losses: Vec<[f64; 3]>,
+    coord_dim: usize,
+    compile_time: Duration,
+}
+
+impl ReplicaSet {
+    /// Compile one step program per replica and park the helper drivers.
+    /// The replica count is `config.replicas` (0 = `ZCS_REPLICAS`, else
+    /// 1), clamped to the lane count; the feed-based fallback always runs
+    /// single-replica.
+    pub fn new(config: &NativeRunConfig) -> Result<ReplicaSet> {
+        ensure!(config.m >= 1 && config.n >= 1 && config.q >= 1, "empty problem");
+        let n_lanes = lane_count(config.m);
+        let requested = if config.replicas == 0 {
+            crate::util::env::default_replicas()
+        } else {
+            config.replicas
+        };
+        let n_replicas = if config.resident { requested.clamp(1, n_lanes) } else { 1 };
+        let budget = if config.threads == 0 {
+            crate::util::pool::default_threads()
+        } else {
+            config.threads
+        };
+        let per_replica_threads = (budget / n_replicas).max(1);
+
+        let t0 = Instant::now();
+        let mut comm: Option<Arc<ReplicaComm>> = None;
+        let mut engines = Vec::with_capacity(n_replicas);
+        let mut host_weights = Vec::new();
+        let mut n_weights = 0;
+        let mut coord_dim = 0;
+        for r in 0..n_replicas {
+            let (l0, l1) = lane_bounds(n_lanes, n_replicas, r);
+            let local_lanes: Vec<usize> = (l0..l1).collect();
+            let built = build_lane_training_problem(
+                config.problem,
+                config.strategy,
+                config.m,
+                &local_lanes,
+                config.q,
+                config.hidden,
+                config.k,
+                BlockSizes { n_in: config.n, n_bc: config.n_bc },
+            )?;
+            let mut program = Program::compile(&built.graph, &built.outputs);
+            if config.resident {
+                program = program.attach_optimizer_replicated(
+                    &built.weight_ids,
+                    config.optimizer.rule(config.lr),
+                    n_lanes,
+                    &local_lanes,
+                );
+            }
+            // every replica draws the identical init (same seed, same
+            // shapes), so their resident weight copies never diverge
+            let weights = init_weights(&built.graph, &built.weight_ids, config.seed);
+            n_weights = built.weight_ids.len();
+            if comm.is_none() && n_replicas > 1 {
+                comm = Some(Arc::new(ReplicaComm::new(n_weights, n_lanes, n_replicas)));
+            }
+
+            let mut src_of: HashMap<NodeId, LaneFeedSrc> = HashMap::new();
+            for (i, id) in built.weight_ids.iter().enumerate() {
+                src_of.insert(*id, LaneFeedSrc::Weight(i));
+            }
+            let mut n_extras = 0;
+            for (j, lane) in built.lanes.iter().enumerate() {
+                src_of.insert(lane.p, LaneFeedSrc::Sensor(j));
+                for (k, (_, id)) in lane.feeds.iter().enumerate() {
+                    src_of.insert(*id, LaneFeedSrc::Feed(j, k));
+                }
+                for (id, _) in &lane.extra_inputs {
+                    src_of.insert(*id, LaneFeedSrc::Extra(n_extras));
+                    n_extras += 1;
+                }
+            }
+            let feed_plan: Vec<LaneFeedSrc> = program
+                .inputs
+                .iter()
+                .map(|id| {
+                    src_of
+                        .get(id)
+                        .copied()
+                        .ok_or_else(|| anyhow!("replica program wants unknown input node {id}"))
+                })
+                .collect::<Result<_>>()?;
+
+            let mut exec = Executor::with_threads(per_replica_threads)
+                .with_sched(config.schedule)
+                .with_simd(config.simd);
+            if config.profile {
+                exec.enable_profiling();
+            }
+            if config.resident {
+                exec.bind_states(&program, weights);
+            } else {
+                host_weights = weights;
+            }
+            if let Some(comm) = &comm {
+                exec.bind_comm(Arc::clone(comm));
+            }
+            coord_dim = built.coord_dim;
+
+            let rows: Vec<(usize, usize)> = built.lanes.iter().map(|l| l.rows).collect();
+            let shards: Vec<PdeBatch> =
+                built.lanes.iter().map(|_| PdeBatch::empty()).collect();
+            let losses = vec![0.0; 3 * built.lanes.len()];
+            let mut extras = Vec::with_capacity(n_extras);
+            for lane in built.lanes {
+                extras.extend(lane.extra_inputs.into_iter().map(|(_, t)| t));
+            }
+            engines.push(ReplicaEngine {
+                program,
+                exec,
+                local_lanes,
+                rows,
+                shards,
+                feed_plan,
+                feed_scratch: Vec::new(),
+                extras,
+                losses,
+            });
+        }
+        let compile_time = t0.elapsed();
+
+        let host_moments = match (config.resident, config.optimizer) {
+            (false, Optimizer::Adam) => host_weights
+                .iter()
+                .map(|w| (Tensor::zeros(w.shape()), Tensor::zeros(w.shape())))
+                .collect(),
+            _ => Vec::new(),
+        };
+        let grad_scratch = if config.resident {
+            Vec::new()
+        } else {
+            (0..n_weights).map(|_| Tensor::zeros(&[0])).collect()
+        };
+
+        let mut engines = engines.into_iter();
+        let lead = engines.next().expect("at least one replica");
+        let mut others = Vec::new();
+        let mut drivers = Vec::new();
+        for (i, engine) in engines.enumerate() {
+            let slot = Arc::new(ReplicaSlot {
+                state: Mutex::new(SlotState { engine: Some(engine), cmd: Cmd::Idle, done: false }),
+                cv: Condvar::new(),
+            });
+            let driven = Arc::clone(&slot);
+            let handle = std::thread::Builder::new()
+                .name(format!("zcs-replica{}", i + 1))
+                .spawn(move || replica_driver(&driven))
+                .expect("spawn replica driver");
+            others.push(slot);
+            drivers.push(handle);
+        }
+        Ok(ReplicaSet {
+            lead,
+            others,
+            drivers,
+            n_lanes,
+            n_replicas,
+            n_weights,
+            budget,
+            per_replica_threads,
+            resident: config.resident,
+            optimizer: config.optimizer,
+            lr: config.lr,
+            host_weights,
+            host_moments,
+            host_t: 0,
+            grad_scratch,
+            lane_losses: vec![[0.0; 3]; n_lanes],
+            coord_dim,
+            compile_time,
+        })
+    }
+
+    /// One optimizer step on one (unsharded) batch; returns
+    /// `(loss, loss_pde, loss_bc)` folded over every lane in ascending
+    /// order -- the same sum a single replica computes.
+    ///
+    /// Resident path: shards are refilled in place, replicas 1.. are
+    /// woken, the lead steps inline (meeting the others at the gradient
+    /// all-reduce barriers), and only loss scalars cross back per lane.
+    /// After warmup the training thread performs no heap allocation.
+    /// As on the single-program path, a non-finite loss errors *after*
+    /// the resident in-program update has run but *before* the fallback
+    /// touches its host weights.
+    pub fn step(&mut self, batch: &PdeBatch) -> Result<(f64, f64, f64)> {
+        if !self.resident {
+            return self.step_fallback(batch);
+        }
+        for slot in &self.others {
+            let mut st = slot.state.lock().unwrap();
+            let engine = st.engine.as_mut().expect("replica engine parked");
+            engine.fill(batch);
+            st.done = false;
+            st.cmd = Cmd::Step;
+            drop(st);
+            slot.cv.notify_all();
+        }
+        self.lead.fill(batch);
+        self.lead.step_resident();
+        stash_losses(&mut self.lane_losses, &self.lead);
+        for slot in &self.others {
+            let mut st = slot.state.lock().unwrap();
+            while !st.done {
+                st = slot.cv.wait(st).unwrap();
+            }
+            let engine = st.engine.as_ref().expect("replica engine parked");
+            stash_losses(&mut self.lane_losses, engine);
+        }
+        self.fold_losses()
+    }
+
+    /// Feed-based single-replica step: run the lane program with host
+    /// weights, fold lane gradients with the serial `axpy` schedule (the
+    /// exact fold the in-Program all-reduce performs), update host-side.
+    fn step_fallback(&mut self, batch: &PdeBatch) -> Result<(f64, f64, f64)> {
+        debug_assert_eq!(self.n_replicas, 1, "the fallback owns every lane");
+        self.lead.fill(batch);
+        let outs = self.lead.step_fallback(&self.host_weights);
+        let kl = self.lead.local_lanes.len();
+        for (k, &lane) in self.lead.local_lanes.iter().enumerate() {
+            let ls = &outs[3 * k..3 * k + 3];
+            self.lane_losses[lane] = [ls[0].data()[0], ls[1].data()[0], ls[2].data()[0]];
+        }
+        let folded = self.fold_losses()?;
+        // copy lane 0's gradient, then axpy each higher lane in ascending
+        // order -- multiply-then-add, bit-identical to the resident reduce
+        for (w, acc) in self.grad_scratch.iter_mut().enumerate() {
+            let base = 3 * kl + w * kl;
+            acc.reset(outs[base].shape()).copy_from_slice(outs[base].data());
+            for g in &outs[base + 1..base + kl] {
+                kernels::axpy_accumulate(acc, g, 1.0);
+            }
+        }
+        self.host_t += 1;
+        match self.optimizer {
+            Optimizer::Sgd => {
+                for (w, g) in self.host_weights.iter_mut().zip(&self.grad_scratch) {
+                    kernels::sgd_update(w, g, self.lr);
+                }
+            }
+            Optimizer::Adam => {
+                for ((w, (m, v)), g) in self
+                    .host_weights
+                    .iter_mut()
+                    .zip(self.host_moments.iter_mut())
+                    .zip(&self.grad_scratch)
+                {
+                    kernels::adam_update(
+                        w,
+                        m,
+                        v,
+                        g,
+                        self.lr,
+                        Optimizer::BETA1,
+                        Optimizer::BETA2,
+                        Optimizer::EPS,
+                        self.host_t,
+                    );
+                }
+            }
+        }
+        Ok(folded)
+    }
+
+    /// Fold the staged per-lane losses in ascending lane order.
+    fn fold_losses(&self) -> Result<(f64, f64, f64)> {
+        let mut total = [0.0f64; 3];
+        for lane in &self.lane_losses {
+            for (t, v) in total.iter_mut().zip(lane) {
+                *t += v;
+            }
+        }
+        if !total[0].is_finite() {
+            bail!("native loss diverged: {}", total[0]);
+        }
+        Ok((total[0], total[1], total[2]))
+    }
+
+    /// Current weights (wb, wb2, wt, wt2).  Every replica holds the same
+    /// bits (identical init, identical reduced updates), so the lead's
+    /// resident copy speaks for the group.
+    pub fn weights(&self) -> &[Tensor] {
+        if self.resident {
+            &self.lead.exec.states()[..self.n_weights]
+        } else {
+            &self.host_weights
+        }
+    }
+
+    /// Whether weights + optimizer state live inside the executors.
+    pub fn resident(&self) -> bool {
+        self.resident
+    }
+
+    /// Bytes of executor-resident training state *per replica* (0 on the
+    /// fallback path); each replica carries its own full copy.
+    pub fn resident_state_bytes(&self) -> u64 {
+        self.lead.program.resident_state_bytes()
+    }
+
+    /// Compiler statistics of the lead replica's step program (replica
+    /// programs differ only in which lanes they own).
+    pub fn program_report(&self) -> ProgramReport {
+        analyze_program(&self.lead.program)
+    }
+
+    /// Total kernel-thread budget across the set (the parent budget that
+    /// was split `budget / replicas` per replica pool).
+    pub fn threads(&self) -> usize {
+        self.budget
+    }
+
+    /// Kernel threads each replica's pool runs on.
+    pub fn threads_per_replica(&self) -> usize {
+        self.per_replica_threads
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.n_replicas
+    }
+
+    /// Lanes in the canonical function-dimension decomposition.
+    pub fn lanes(&self) -> usize {
+        self.n_lanes
+    }
+
+    pub fn coord_dim(&self) -> usize {
+        self.coord_dim
+    }
+
+    /// Graph build + compile time across all replica programs.
+    pub fn compile_time(&self) -> Duration {
+        self.compile_time
+    }
+
+    pub fn sched(&self) -> SchedMode {
+        self.lead.exec.sched()
+    }
+
+    pub fn simd(&self) -> SimdLevel {
+        self.lead.exec.simd()
+    }
+
+    /// Drain the lead replica's profile (replicas 1.. are drained by
+    /// [`ReplicaSet::take_replica_profiles`]).
+    pub fn take_profile(&mut self) -> Option<ProfileReport> {
+        self.lead.exec.take_profile()
+    }
+
+    /// Drain the profiles of replicas 1.., in replica order (the lead's
+    /// comes from [`ReplicaSet::take_profile`]); empty when profiling is
+    /// off or the set is single-replica.
+    pub fn take_replica_profiles(&mut self) -> Vec<ProfileReport> {
+        let mut out = Vec::new();
+        for slot in &self.others {
+            let mut st = slot.state.lock().unwrap();
+            let engine = st.engine.as_mut().expect("replica engine parked");
+            if let Some(p) = engine.exec.take_profile() {
+                out.push(p);
+            }
+        }
+        out
+    }
+}
+
+impl Drop for ReplicaSet {
+    fn drop(&mut self) {
+        for slot in &self.others {
+            let mut st = slot.state.lock().unwrap();
+            st.cmd = Cmd::Exit;
+            drop(st);
+            slot.cv.notify_all();
+        }
+        for handle in self.drivers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Copy one engine's lane-major loss readback into the per-global-lane
+/// staging table.
+fn stash_losses(lane_losses: &mut [[f64; 3]], engine: &ReplicaEngine) {
+    for (k, &lane) in engine.local_lanes.iter().enumerate() {
+        let ls = &engine.losses[3 * k..3 * k + 3];
+        lane_losses[lane] = [ls[0], ls[1], ls[2]];
+    }
+}

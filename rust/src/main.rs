@@ -90,6 +90,13 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
             "kernel threads (auto = ZCS_THREADS env, else 1); results are bit-identical",
         )
         .opt(
+            "replicas",
+            "auto",
+            "data-parallel replica executors sharding the function dimension \
+             (auto = ZCS_REPLICAS env, else 1); clamped to the lane count, \
+             trajectories are bit-identical",
+        )
+        .opt(
             "schedule",
             "auto",
             "serial | graph instruction schedule (auto = ZCS_SCHED env, else graph); \
@@ -150,6 +157,12 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
             .parse()
             .map_err(|e| anyhow!("invalid value {other:?} for --threads: {e}"))?,
     };
+    let replicas = match p.get("replicas") {
+        "auto" => 0,
+        other => other
+            .parse()
+            .map_err(|e| anyhow!("invalid value {other:?} for --replicas: {e}"))?,
+    };
     let schedule = match p.get("schedule") {
         "auto" => zcs::autodiff::SchedMode::from_env(),
         other => zcs::autodiff::SchedMode::parse(other).map_err(|e| anyhow!(e))?,
@@ -158,14 +171,7 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
         "auto" => zcs::tensor::simd::SimdMode::from_env(),
         other => zcs::tensor::simd::SimdMode::parse(other).map_err(|e| anyhow!(e))?,
     };
-    // ZCS_PROFILE follows the usual truthy convention: unset, empty and
-    // "0" mean off
-    let env_profile = std::env::var("ZCS_PROFILE")
-        .map(|v| {
-            let v = v.trim();
-            !v.is_empty() && v != "0"
-        })
-        .unwrap_or(false);
+    let env_profile = zcs::util::env::knob("ZCS_PROFILE", false, zcs::util::env::parse_switch);
     let profile = p.switch("profile") || env_profile;
     let config = NativeRunConfig {
         problem,
@@ -182,6 +188,7 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
         bank_size: p.get_usize("bank-size")?,
         log_every: p.get_usize("log-every")?.max(1),
         threads,
+        replicas,
         optimizer,
         resident: !p.switch("feed-weights"),
         schedule,
@@ -203,6 +210,14 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
     );
     let mut trainer = NativeTrainer::new(config)?;
     println!("kernel threads: {}", trainer.threads());
+    if trainer.lanes() > 1 {
+        println!(
+            "replicas: {} over {} function lanes ({} kernel threads per replica)",
+            trainer.replicas(),
+            trainer.lanes(),
+            (trainer.threads() / trainer.replicas()).max(1)
+        );
+    }
     let report = trainer.run()?;
     let prog = &report.program;
     println!(
@@ -282,6 +297,28 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
                 level,
                 ns as f64 / 1e6
             );
+        }
+        if report.replicas > 1 {
+            // per-replica reduce time + occupancy (the table above is the
+            // lead replica; its reduce tally absorbs the barrier waits)
+            let reduce_ms = |p: &zcs::autodiff::ProfileReport| {
+                p.per_op.get("grad-allreduce").map_or(0.0, |t| t.ns as f64 / 1e6)
+            };
+            println!("replica 0 (lead): all-reduce {:.2} ms", reduce_ms(profile));
+            for (i, rp) in report.replica_profiles.iter().enumerate() {
+                let mut occ = String::new();
+                for o in rp.occupancy() {
+                    if !occ.is_empty() {
+                        occ.push(' ');
+                    }
+                    occ.push_str(&format!("{:.0}%", o * 100.0));
+                }
+                println!(
+                    "replica {}: all-reduce {:.2} ms, occupancy [{occ}]",
+                    i + 1,
+                    reduce_ms(rp)
+                );
+            }
         }
     }
     if p.switch("validate") {

@@ -77,6 +77,14 @@ pub struct ProblemBuilder {
     p: NodeId,
     /// branch(p) (m, k), shared by every non-tiled block
     branch_p: NodeId,
+    /// prepended to every registered feed name: `""` for the unlaned
+    /// builder, `"l{lane}."` for a lane block
+    prefix: String,
+    /// denominator of the function mean in [`Self::mean_sq`].  For the
+    /// unlaned builder this equals `m`; for a lane block it is the
+    /// *global* function count, so lane losses are partial sums that add
+    /// (never rescale) into the total loss.
+    loss_norm_m: usize,
     feeds: Vec<(String, NodeId)>,
     extra_inputs: Vec<(NodeId, Tensor)>,
 }
@@ -88,6 +96,25 @@ impl ProblemBuilder {
         let wb2 = g.input(&[dims.hidden, dims.k]);
         let wt = g.input(&[dims.coord_dim, dims.hidden]);
         let wt2 = g.input(&[dims.hidden, dims.k]);
+        Self::with_shared_weights(g, strategy, m, dims, [wb, wb2, wt, wt2], String::new(), m)
+    }
+
+    /// A builder over an existing tape and weight leaves -- the lane-block
+    /// constructor ([`build_lane_training_problem`]).  `m` is this lane's
+    /// own row count, `loss_norm_m` the global function count, and
+    /// `prefix` namespaces the lane's feed names.  The lane's sensor leaf
+    /// and branch trunk are private to the lane; only the four weight
+    /// leaves are shared, so lane subgraphs stay fully independent.
+    pub fn with_shared_weights(
+        mut g: Graph,
+        strategy: Strategy,
+        m: usize,
+        dims: NetDims,
+        weights: [NodeId; 4],
+        prefix: String,
+        loss_norm_m: usize,
+    ) -> Self {
+        let [wb, wb2, _, _] = weights;
         let p = g.input(&[m, dims.q]);
         let h = g.matmul(p, wb);
         let a = g.tanh(h);
@@ -97,9 +124,11 @@ impl ProblemBuilder {
             strategy,
             m,
             dims,
-            weights: [wb, wb2, wt, wt2],
+            weights,
             p,
             branch_p,
+            prefix,
+            loss_norm_m,
             feeds: Vec::new(),
             extra_inputs: Vec::new(),
         }
@@ -187,7 +216,7 @@ impl ProblemBuilder {
     /// Register a named batch-fed leaf (aux fields, targets).
     pub fn aux(&mut self, name: &str, shape: &[usize]) -> NodeId {
         let id = self.g.input(shape);
-        self.feeds.push((name.to_string(), id));
+        self.feeds.push((format!("{}{name}", self.prefix), id));
         id
     }
 
@@ -198,7 +227,7 @@ impl ProblemBuilder {
         let mut coords = Vec::with_capacity(dim);
         for c in 0..dim {
             let x = self.g.input(&[n, 1]);
-            self.feeds.push((format!("{name}.x{c}"), x));
+            self.feeds.push((format!("{}{name}.x{c}", self.prefix), x));
             coords.push(x);
         }
         let tin = self.combine_coords(&coords);
@@ -229,7 +258,7 @@ impl ProblemBuilder {
         let mut coords = Vec::with_capacity(dim);
         for c in 0..dim {
             let x = self.g.input(&[n, 1]);
-            self.feeds.push((format!("{name}.x{c}"), x));
+            self.feeds.push((format!("{}{name}.x{c}", self.prefix), x));
             coords.push(x);
         }
         match self.strategy {
@@ -301,12 +330,14 @@ impl ProblemBuilder {
 
     /// Mean of squared entries of an (m, n) node -- the loss primitive
     /// (row means via the axis-aware reduction, then the function mean).
+    /// The function mean divides by `loss_norm_m` (the global M), so a
+    /// lane block contributes `sum(row_means) / M_global` and lane losses
+    /// fold into the total by pure addition.
     pub fn mean_sq(&mut self, r: NodeId) -> NodeId {
-        let m = self.g.shape(r)[0];
         let r2 = self.g.square(r);
         let row_means = self.g.mean_axis(r2, 1); // (m, 1)
         let s = self.g.sum_all(row_means);
-        self.g.scale(s, 1.0 / m as f64)
+        self.g.scale(s, 1.0 / self.loss_norm_m as f64)
     }
 }
 
@@ -737,12 +768,19 @@ pub struct BuiltProblem {
 ///
 /// [`NativeTrainer`]: crate::coordinator::native::NativeTrainer
 pub fn init_problem_weights(built: &BuiltProblem, seed: u64) -> Vec<Tensor> {
+    init_weights(&built.graph, &built.weight_ids, seed)
+}
+
+/// [`init_problem_weights`] for an arbitrary (graph, weight-leaf) pair --
+/// the lane-blocked builds share it, and because the draw order depends
+/// only on the four weight *shapes* (identical in every decomposition),
+/// lane-blocked and unlaned builds start from bit-identical weights.
+pub fn init_weights(graph: &Graph, weight_ids: &[NodeId], seed: u64) -> Vec<Tensor> {
     let mut rng = Pcg64::new(seed, 2);
-    built
-        .weight_ids
+    weight_ids
         .iter()
         .map(|&id| {
-            let shape = built.graph.shape(id).to_vec();
+            let shape = graph.shape(id).to_vec();
             let n: usize = shape.iter().product();
             Tensor::new(&shape, rng.normals(n)).scale(1.0 / (shape[0] as f64).sqrt())
         })
@@ -784,6 +822,150 @@ pub fn build_training_problem(
         feeds: b.feeds,
         extra_inputs: b.extra_inputs,
         residual: parts.residual,
+        coord_dim: dims.coord_dim,
+    })
+}
+
+/// Upper bound on the canonical lane count ([`lane_count`]).
+pub const MAX_LANES: usize = 4;
+
+/// The canonical lane count for an `m`-function problem: `min(4, m)`.
+///
+/// The function dimension is always decomposed into this many lane
+/// blocks *regardless of the replica count* -- replicas only change
+/// which process computes which lane.  Because the decomposition (and
+/// the fixed ascending-lane fold order) never varies with N, an
+/// N-replica run is bit-identical to a single-replica run of the same
+/// problem (see `rust/tests/replica_train.rs`).
+pub fn lane_count(m: usize) -> usize {
+    MAX_LANES.min(m.max(1))
+}
+
+/// Function-row range `[start, end)` of global lane `lane` out of
+/// `n_lanes` over `m` rows: the standard balanced split
+/// `[m*l/L, m*(l+1)/L)`, which covers `0..m` contiguously and keeps
+/// every lane non-empty whenever `n_lanes <= m`.
+pub fn lane_bounds(m: usize, n_lanes: usize, lane: usize) -> (usize, usize) {
+    assert!(n_lanes >= 1 && lane < n_lanes, "lane {lane} of {n_lanes}");
+    (m * lane / n_lanes, m * (lane + 1) / n_lanes)
+}
+
+/// One lane block of a [`BuiltLaneProblem`]: the lane's private leaves.
+pub struct LaneBlock {
+    /// global lane index in `0..n_lanes`
+    pub lane: usize,
+    /// function-row range `[start, end)` this lane covers in the global
+    /// batch (its sensor and m-rowed aux feeds are these rows)
+    pub rows: (usize, usize),
+    /// the lane's sensor leaf (rows, q)
+    pub p: NodeId,
+    /// the lane's named batch feeds, names prefixed `l{lane}.`
+    pub feeds: Vec<(String, NodeId)>,
+    /// the lane's constant-valued leaves (ZCS z and a)
+    pub extra_inputs: Vec<(NodeId, Tensor)>,
+}
+
+/// A lane-blocked training-step graph: one independent residual subgraph
+/// per *local* lane (sharing only the four weight leaves), with per-lane
+/// losses and per-lane weight gradients as outputs.
+pub struct BuiltLaneProblem {
+    pub graph: Graph,
+    /// lane-major losses then weight-major per-lane gradients:
+    /// `[l0.loss, l0.pde, l0.bc, l1.loss, ..., wb@l0, wb@l1, ...,
+    /// wb2@l0, ...]` where `l0 < l1 < ...` are the local lanes
+    pub outputs: Vec<NodeId>,
+    /// wb (q,h), wb2 (h,k), wt (d,h), wt2 (h,k)
+    pub weight_ids: Vec<NodeId>,
+    /// the local lane blocks, ascending by global lane index
+    pub lanes: Vec<LaneBlock>,
+    /// total lanes in the canonical decomposition (across all replicas)
+    pub n_lanes: usize,
+    pub coord_dim: usize,
+}
+
+impl BuiltLaneProblem {
+    /// Index of the first gradient output (after the 3-per-lane losses).
+    pub fn grads_start(&self) -> usize {
+        3 * self.lanes.len()
+    }
+}
+
+/// Build the lane-blocked training-step graph for the local lanes of one
+/// replica (or all lanes, for a single-replica run).  Each lane is a
+/// fully self-contained copy of the problem over its own function rows:
+/// its losses are normalized by the *global* M (so lane losses fold into
+/// the total by pure addition, in ascending lane order) and its weight
+/// gradients are the lane's exact contribution to the global gradient
+/// (folded by the in-Program all-reduce, same fixed order).
+pub fn build_lane_training_problem(
+    kind: ProblemKind,
+    strategy: Strategy,
+    m: usize,
+    local_lanes: &[usize],
+    q: usize,
+    hidden: usize,
+    k: usize,
+    sizes: BlockSizes,
+) -> Result<BuiltLaneProblem> {
+    let residual = residual_for(kind).ok_or_else(|| {
+        anyhow!(
+            "problem {:?} has no native residual; native problems: antiderivative, \
+             reaction_diffusion, burgers, kirchhoff",
+            kind.name()
+        )
+    })?;
+    ensure!(m >= 1 && q >= 1 && sizes.n_in >= 1 && sizes.n_bc >= 1, "empty problem");
+    let n_lanes = lane_count(m);
+    ensure!(!local_lanes.is_empty(), "a replica owns at least one lane");
+    ensure!(local_lanes.windows(2).all(|w| w[0] < w[1]), "local lanes must ascend");
+    ensure!(*local_lanes.last().unwrap() < n_lanes, "lane out of range (n_lanes {n_lanes})");
+    let dims = NetDims { q, hidden, k, coord_dim: residual.coord_dim() };
+    let mut g = Graph::new();
+    let wb = g.input(&[dims.q, dims.hidden]);
+    let wb2 = g.input(&[dims.hidden, dims.k]);
+    let wt = g.input(&[dims.coord_dim, dims.hidden]);
+    let wt2 = g.input(&[dims.hidden, dims.k]);
+    let weight_ids = vec![wb, wb2, wt, wt2];
+    let mut lanes = Vec::with_capacity(local_lanes.len());
+    let mut losses = Vec::with_capacity(3 * local_lanes.len());
+    let mut lane_grads: Vec<Vec<NodeId>> = Vec::with_capacity(local_lanes.len());
+    for &lane in local_lanes {
+        let (r0, r1) = lane_bounds(m, n_lanes, lane);
+        let mut b = ProblemBuilder::with_shared_weights(
+            g,
+            strategy,
+            r1 - r0,
+            dims,
+            [wb, wb2, wt, wt2],
+            format!("l{lane}."),
+            m,
+        );
+        let parts = residual.build_losses(&mut b, sizes);
+        let loss = b.g.add(parts.loss_pde, parts.loss_bc);
+        let grads = b.g.grad(loss, &weight_ids);
+        losses.extend([loss, parts.loss_pde, parts.loss_bc]);
+        lane_grads.push(grads);
+        lanes.push(LaneBlock {
+            lane,
+            rows: (r0, r1),
+            p: b.p,
+            feeds: b.feeds,
+            extra_inputs: b.extra_inputs,
+        });
+        g = b.g;
+    }
+    let mut outputs = losses;
+    for w in 0..weight_ids.len() {
+        for grads in &lane_grads {
+            outputs.push(grads[w]);
+        }
+    }
+    Ok(BuiltLaneProblem {
+        graph: g,
+        outputs,
+        weight_ids,
+        lanes,
+        n_lanes,
         coord_dim: dims.coord_dim,
     })
 }
@@ -919,6 +1101,133 @@ mod tests {
                 "right.x0", "right.x1"
             ]
         );
+    }
+
+    #[test]
+    fn lane_bounds_cover_the_function_rows_exactly() {
+        for m in 1..=9 {
+            let l = lane_count(m);
+            assert_eq!(l, m.min(MAX_LANES));
+            let mut next = 0;
+            for lane in 0..l {
+                let (a, b) = lane_bounds(m, l, lane);
+                assert_eq!(a, next, "m={m} lane={lane}");
+                assert!(b > a, "m={m}: lane {lane} of {l} is empty");
+                next = b;
+            }
+            assert_eq!(next, m, "m={m}");
+        }
+    }
+
+    /// Slice function rows [r0, r1) out of an m-rowed tensor.
+    fn row_slice(t: &Tensor, r0: usize, r1: usize) -> Tensor {
+        let cols: usize = t.shape()[1..].iter().product();
+        let mut shape = t.shape().to_vec();
+        shape[0] = r1 - r0;
+        Tensor::new(&shape, t.data()[r0 * cols..r1 * cols].to_vec())
+    }
+
+    #[test]
+    fn lane_blocks_reproduce_the_unlaned_losses_and_gradients() {
+        // m = 5 -> 4 lanes of sizes 1/1/1/2: feeding each lane its own
+        // function rows (and the full point set) must reproduce the
+        // unlaned build up to summation association
+        let m = 5;
+        for kind in [ProblemKind::Antiderivative, ProblemKind::Burgers] {
+            for strategy in Strategy::ALL {
+                let full = build_training_problem(kind, strategy, m, 4, 6, 4, sizes()).unwrap();
+                let n_lanes = lane_count(m);
+                let local: Vec<usize> = (0..n_lanes).collect();
+                let laned =
+                    build_lane_training_problem(kind, strategy, m, &local, 4, 6, 4, sizes())
+                        .unwrap();
+                assert_eq!(laned.outputs.len(), 3 * n_lanes + 4 * n_lanes);
+                assert_eq!(laned.grads_start(), 3 * n_lanes);
+
+                let mut rng = Pcg64::seeded(17);
+                let full_inputs = feed_everything(&full, &mut rng);
+                let full_outs =
+                    Program::compile(&full.graph, &full.outputs).eval_once(&full_inputs);
+
+                let mut inputs = HashMap::new();
+                for (i, &w) in laned.weight_ids.iter().enumerate() {
+                    inputs.insert(w, full_inputs[&full.weight_ids[i]].clone());
+                }
+                let by_name: HashMap<&str, &Tensor> = full
+                    .feeds
+                    .iter()
+                    .map(|(name, id)| (name.as_str(), &full_inputs[id]))
+                    .collect();
+                for blk in &laned.lanes {
+                    let (r0, r1) = blk.rows;
+                    inputs.insert(blk.p, row_slice(&full_inputs[&full.p], r0, r1));
+                    for (name, id) in &blk.feeds {
+                        let bare = name.strip_prefix(&format!("l{}.", blk.lane)).unwrap();
+                        let src = by_name[bare];
+                        let t = if src.shape()[0] == m {
+                            row_slice(src, r0, r1) // m-rowed aux feed
+                        } else {
+                            (*src).clone() // shared point set
+                        };
+                        inputs.insert(*id, t);
+                    }
+                    for (id, t) in &blk.extra_inputs {
+                        inputs.insert(*id, t.clone());
+                    }
+                }
+                let outs = Program::compile(&laned.graph, &laned.outputs).eval_once(&inputs);
+
+                // losses fold by pure addition, ascending lanes
+                for (slot, label) in [(0, "loss"), (1, "pde"), (2, "bc")] {
+                    let folded: f64 = (0..n_lanes).map(|l| outs[3 * l + slot].data()[0]).sum();
+                    let want = full_outs[slot].data()[0];
+                    assert!(
+                        (folded - want).abs() <= 1e-12 * (1.0 + want.abs()),
+                        "{kind:?}/{strategy:?} {label}: {folded} vs {want}"
+                    );
+                }
+                // per-weight gradients fold the same way
+                for w in 0..4 {
+                    let want = &full_outs[3 + w];
+                    let mut acc = Tensor::zeros(want.shape());
+                    for l in 0..n_lanes {
+                        let g = &outs[laned.grads_start() + w * n_lanes + l];
+                        for (o, x) in acc.data_mut().iter_mut().zip(g.data()) {
+                            *o += x;
+                        }
+                    }
+                    for (got, want) in acc.data().iter().zip(want.data()) {
+                        assert!(
+                            (got - want).abs() <= 1e-10 * (1.0 + want.abs()),
+                            "{kind:?}/{strategy:?} grad {w}: {got} vs {want}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lane_feed_names_carry_the_lane_prefix() {
+        let laned = build_lane_training_problem(
+            ProblemKind::Burgers,
+            Strategy::Zcs,
+            5,
+            &[1, 3],
+            4,
+            6,
+            4,
+            sizes(),
+        )
+        .unwrap();
+        assert_eq!(laned.n_lanes, 4);
+        assert_eq!(laned.lanes.len(), 2);
+        assert_eq!(laned.lanes[0].lane, 1);
+        assert!(laned.lanes[0].feeds.iter().all(|(n, _)| n.starts_with("l1.")));
+        assert_eq!(laned.lanes[0].feeds[0].0, "l1.in.x0");
+        assert!(laned.lanes[1].feeds.iter().all(|(n, _)| n.starts_with("l3.")));
+        // lane 3 of m=5 is the two-row remainder lane
+        assert_eq!(laned.lanes[1].rows, (3, 5));
     }
 
     #[test]

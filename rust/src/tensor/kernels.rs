@@ -627,6 +627,49 @@ pub fn sgd_update_pool(w: &mut Tensor, g: &Tensor, lr: f64, pool: &Pool, simd: S
     });
 }
 
+/// In-place scaled accumulation: `acc[i] = acc[i] + x[i] * a`.
+///
+/// The gradient all-reduce primitive: replica gradients fold into one
+/// buffer by repeated axpy in a fixed lane order, and because every
+/// element performs the identical multiply-then-add (no FMA, no
+/// reassociation) the fold is bit-identical at any SIMD width and thread
+/// count -- which is what lets N-replica trajectories pin `==` against
+/// single-replica (`rust/tests/replica_train.rs`).
+pub fn axpy_accumulate(acc: &mut Tensor, x: &Tensor, a: f64) {
+    axpy_accumulate_pool(acc, x, a, &Pool::serial(), SimdLevel::Scalar);
+}
+
+/// Pooled, lane-wide [`axpy_accumulate`]: element blocks are disjoint and
+/// each element performs the identical multiply-then-add, so every width
+/// and thread count is bit-exact.
+pub fn axpy_accumulate_pool(acc: &mut Tensor, x: &Tensor, a: f64, pool: &Pool, simd: SimdLevel) {
+    assert_eq!(acc.shape, x.shape, "axpy_accumulate shapes");
+    let len = acc.data.len();
+    let min = grain::elemwise_rows_simd(1, simd.width());
+    let x_data = &x.data;
+    pool.par_rows(len, 1, &mut acc.data, min, |range, block| {
+        let x_block = &x_data[range];
+        simd_dispatch!(
+            simd,
+            for (o, xi) in block.iter_mut().zip(x_block) {
+                *o += xi * a;
+            },
+            L => {
+                let main = block.len() - block.len() % L::W;
+                let mut i = 0;
+                while i < main {
+                    let ol = L::load(&block[i..]).add(L::load(&x_block[i..]).scale(a));
+                    ol.store(&mut block[i..]);
+                    i += L::W;
+                }
+                for j in main..block.len() {
+                    block[j] += x_block[j] * a;
+                }
+            }
+        );
+    });
+}
+
 /// In-place Adam with bias correction (the optimizer the paper's DeepXDE
 /// baselines actually run).  Per element, in exactly this order:
 ///
@@ -1658,6 +1701,43 @@ mod tests {
                 assert_eq!(w, w_ref, "adam w {simd:?} @ {threads} threads");
                 assert_eq!(m, m_ref, "adam m {simd:?} @ {threads} threads");
                 assert_eq!(v, v_ref, "adam v {simd:?} @ {threads} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_accumulate_is_a_plain_multiply_then_add() {
+        let mut rng = crate::rng::Pcg64::seeded(68);
+        let len = 11;
+        let acc0 = t(&[len], rng.normals(len));
+        let x = t(&[len], rng.normals(len));
+        let a = 0.37;
+        let mut acc = acc0.clone();
+        axpy_accumulate(&mut acc, &x, a);
+        for i in 0..len {
+            assert_eq!(acc.data()[i], acc0.data()[i] + x.data()[i] * a);
+        }
+        // a = 1.0 is an exact add (the all-reduce's unscaled fold)
+        let mut acc = acc0.clone();
+        axpy_accumulate(&mut acc, &x, 1.0);
+        for i in 0..len {
+            assert_eq!(acc.data()[i], acc0.data()[i] + x.data()[i]);
+        }
+    }
+
+    #[test]
+    fn axpy_accumulate_pool_bit_matches_scalar_at_any_width_and_thread_count() {
+        let mut rng = crate::rng::Pcg64::seeded(69);
+        let len = 41;
+        let acc0 = t(&[len], rng.normals(len));
+        let x = t(&[len], rng.normals(len));
+        let mut want = acc0.clone();
+        axpy_accumulate(&mut want, &x, -1.75);
+        for simd in WIDTHS {
+            for threads in [1usize, 2, 4] {
+                let mut acc = acc0.clone();
+                axpy_accumulate_pool(&mut acc, &x, -1.75, &Pool::new(threads), simd);
+                assert_eq!(acc, want, "axpy {simd:?} @ {threads} threads");
             }
         }
     }

@@ -74,13 +74,7 @@ impl SimdMode {
     /// auto, so a typo cannot silently select the mode the user tried to
     /// exclude.
     pub fn from_env() -> SimdMode {
-        match std::env::var("ZCS_SIMD") {
-            Ok(v) => SimdMode::parse(v.trim()).unwrap_or_else(|e| {
-                eprintln!("warning: ZCS_SIMD ignored: {e}");
-                SimdMode::Auto
-            }),
-            Err(_) => SimdMode::Auto,
-        }
+        crate::util::env::knob("ZCS_SIMD", SimdMode::Auto, SimdMode::parse)
     }
 
     /// Resolve the knob into the level the kernels dispatch on.

@@ -1,0 +1,97 @@
+//! One home for `ZCS_*` environment knobs.
+//!
+//! Every knob (`ZCS_THREADS`, `ZCS_SCHED`, `ZCS_SIMD`, `ZCS_PROFILE`,
+//! `ZCS_REPLICAS`) resolves through [`knob`], which gives them all the
+//! warn-on-typo fallback `ZCS_SIMD` pioneered: an unset variable yields
+//! the default silently, an unparseable value warns once on stderr and
+//! *then* yields the default -- a typo can never silently select the
+//! behaviour the user tried to exclude, and never aborts a run either.
+//!
+//! [`parse_knob`] is the pure core (no process environment touched), so
+//! the policy is unit-testable without mutating env vars from a threaded
+//! test binary.
+
+/// Resolve one knob from an already-read raw value: `None` (unset) gives
+/// the default silently; `Some` is trimmed and parsed, and a parse error
+/// warns on stderr and falls back to the default.
+pub fn parse_knob<T>(
+    name: &str,
+    raw: Option<&str>,
+    default: T,
+    parse: impl FnOnce(&str) -> Result<T, String>,
+) -> T {
+    match raw {
+        Some(v) => parse(v.trim()).unwrap_or_else(|e| {
+            eprintln!("warning: {name} ignored: {e}");
+            default
+        }),
+        None => default,
+    }
+}
+
+/// Read `name` from the process environment and resolve it via
+/// [`parse_knob`].
+pub fn knob<T>(name: &str, default: T, parse: impl FnOnce(&str) -> Result<T, String>) -> T {
+    let raw = std::env::var(name).ok();
+    parse_knob(name, raw.as_deref(), default, parse)
+}
+
+/// Parse a positive count (`>= 1`), for thread and replica budgets.
+pub fn parse_count(v: &str) -> Result<usize, String> {
+    match v.parse::<usize>() {
+        Ok(n) if n >= 1 => Ok(n),
+        _ => Err(format!("{v:?} is not a positive integer")),
+    }
+}
+
+/// Parse an on/off switch: `1 | true | on` and `0 | false | off | ""`
+/// (case-insensitive).
+pub fn parse_switch(v: &str) -> Result<bool, String> {
+    match v.to_ascii_lowercase().as_str() {
+        "1" | "true" | "on" => Ok(true),
+        "" | "0" | "false" | "off" => Ok(false),
+        other => Err(format!("{other:?} is not a switch; choices: 0, 1, true, false, on, off")),
+    }
+}
+
+/// The `ZCS_REPLICAS` default: data-parallel replica executors per
+/// trainer (clamped to the canonical lane count downstream), else 1.
+pub fn default_replicas() -> usize {
+    knob("ZCS_REPLICAS", 1, parse_count)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unset_yields_the_default_without_parsing() {
+        let got = parse_knob("ZCS_TEST", None, 7usize, |_| panic!("must not parse"));
+        assert_eq!(got, 7);
+    }
+
+    #[test]
+    fn set_values_are_trimmed_and_parsed() {
+        assert_eq!(parse_knob("ZCS_TEST", Some("  3 "), 1usize, parse_count), 3);
+        assert_eq!(parse_knob("ZCS_TEST", Some("on"), false, parse_switch), true);
+        assert_eq!(parse_knob("ZCS_TEST", Some("OFF"), true, parse_switch), false);
+    }
+
+    #[test]
+    fn typos_fall_back_to_the_default() {
+        // warns on stderr, never panics, never picks a surprise value
+        assert_eq!(parse_knob("ZCS_TEST", Some("fuor"), 4usize, parse_count), 4);
+        assert_eq!(parse_knob("ZCS_TEST", Some("0"), 2usize, parse_count), 2);
+        assert_eq!(parse_knob("ZCS_TEST", Some("yes"), false, parse_switch), false);
+    }
+
+    #[test]
+    fn count_and_switch_parsers_cover_their_domains() {
+        assert_eq!(parse_count("12"), Ok(12));
+        assert!(parse_count("0").is_err());
+        assert!(parse_count("-1").is_err());
+        assert_eq!(parse_switch(""), Ok(false));
+        assert_eq!(parse_switch("TRUE"), Ok(true));
+        assert!(parse_switch("maybe").is_err());
+    }
+}

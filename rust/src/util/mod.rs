@@ -10,11 +10,14 @@
 //! * [`benchkit`] -- criterion-style micro-benchmark harness (warmup,
 //!   timed iterations, mean/stddev/percentiles, throughput),
 //! * [`propkit`]  -- seeded property-testing harness with shrinking,
+//! * [`env`]      -- `ZCS_*` environment-knob resolution with the shared
+//!   warn-on-typo fallback,
 //! * [`pool`]     -- persistent scoped worker pool for the deterministic
 //!   data-parallel kernels (the rayon stand-in).
 
 pub mod benchkit;
 pub mod cli;
+pub mod env;
 pub mod json;
 pub mod pool;
 pub mod propkit;

@@ -38,6 +38,14 @@
 //! A `Pool` with one thread (the default) spawns no workers and runs
 //! everything inline -- `Pool::serial()` is free to construct, so serial
 //! kernel wrappers can share the pooled code path.
+//!
+//! A process is **not** limited to one pool: the data-parallel replica
+//! layer ([`crate::coordinator::replica`]) pins one independent `Pool`
+//! per replica executor (each a disjoint worker group carved from the
+//! total `ZCS_THREADS` budget), and the pools never share jobs -- each
+//! replica's kernels dispatch only on its own workers, which keeps every
+//! replica's task split, and therefore its bits, identical to a
+//! single-replica run of the same lane block.
 
 use std::cell::RefCell;
 use std::collections::BinaryHeap;
@@ -96,13 +104,11 @@ pub mod grain {
 type PanicSlot = Arc<Mutex<Option<Box<dyn std::any::Any + Send>>>>;
 
 /// Number of threads to use when the caller asks for "auto": the
-/// `ZCS_THREADS` environment variable, else 1 (serial).
+/// `ZCS_THREADS` environment variable, else 1 (serial).  This is the
+/// *total* budget; a multi-replica trainer splits it evenly across its
+/// per-replica pools ([`crate::coordinator::replica`]).
 pub fn default_threads() -> usize {
-    std::env::var("ZCS_THREADS")
-        .ok()
-        .and_then(|v| v.trim().parse::<usize>().ok())
-        .filter(|&n| n >= 1)
-        .unwrap_or(1)
+    crate::util::env::knob("ZCS_THREADS", 1, crate::util::env::parse_count)
 }
 
 /// One published job: a type-erased task closure plus the claim/finish

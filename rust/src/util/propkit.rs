@@ -9,6 +9,7 @@
 //! ranges, tuples via composition).
 
 use crate::rng::Pcg64;
+use crate::tensor::Tensor;
 
 /// Distance between two finite `f64`s in units in the last place: the
 /// number of representable doubles strictly between them (0 when equal,
@@ -41,6 +42,29 @@ pub fn ulps_between(a: f64, b: f64) -> u64 {
 pub fn assert_ulps_le(a: f64, b: f64, max_ulps: u64) {
     let d = ulps_between(a, b);
     assert!(d <= max_ulps, "{a} vs {b}: {d} ulps apart (allowed {max_ulps})");
+}
+
+/// Assert two tensor slices are identical *bit for bit*: same length,
+/// same shapes, and every element's IEEE-754 bit pattern equal (so
+/// `-0.0` vs `0.0`, or two different NaN payloads, fail rather than
+/// comparing loosely).  This is the assertion for determinism contracts
+/// -- resident vs feed-based weights, N-replica vs single-replica
+/// trajectories -- where "close" is already a bug; the failure message
+/// names the first diverging tensor, element, and both bit patterns.
+#[track_caller]
+pub fn assert_tensors_bits_eq(got: &[Tensor], want: &[Tensor], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: tensor count");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.shape(), w.shape(), "{what}: tensor {i} shape");
+        for (j, (a, b)) in g.data().iter().zip(w.data()).enumerate() {
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "{what}: tensor {i} element {j}: {a} ({:#018x}) vs {b} ({:#018x})",
+                a.to_bits(),
+                b.to_bits()
+            );
+        }
+    }
 }
 
 /// A reusable generator: produce a value from randomness + shrink candidates.
@@ -246,6 +270,34 @@ mod tests {
     #[should_panic(expected = "NaN")]
     fn ulps_between_rejects_nan() {
         ulps_between(f64::NAN, 1.0);
+    }
+
+    #[test]
+    fn tensors_bits_eq_accepts_identical_bits() {
+        let a = [Tensor::new(&[2, 2], vec![1.0, -0.0, 3.5, f64::MIN_POSITIVE])];
+        let b = [Tensor::new(&[2, 2], vec![1.0, -0.0, 3.5, f64::MIN_POSITIVE])];
+        assert_tensors_bits_eq(&a, &b, "identical");
+    }
+
+    #[test]
+    fn tensors_bits_eq_rejects_signed_zero_drift() {
+        // -0.0 == 0.0 under `==`, but they are different bit patterns --
+        // exactly the drift a fold-order change would smuggle past assert_eq
+        let a = [Tensor::new(&[2], vec![1.0, 0.0])];
+        let b = [Tensor::new(&[2], vec![1.0, -0.0])];
+        let caught = std::panic::catch_unwind(|| {
+            assert_tensors_bits_eq(&a, &b, "zeros");
+        });
+        let msg = *caught.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("zeros: tensor 0 element 1"), "{msg}");
+    }
+
+    #[test]
+    #[should_panic(expected = "shape")]
+    fn tensors_bits_eq_rejects_shape_mismatch() {
+        let a = [Tensor::new(&[2, 1], vec![1.0, 2.0])];
+        let b = [Tensor::new(&[1, 2], vec![1.0, 2.0])];
+        assert_tensors_bits_eq(&a, &b, "shapes");
     }
 
     #[test]

@@ -20,6 +20,7 @@ use zcs::coordinator::native::{NativeRunConfig, NativeTrainer, Optimizer};
 use zcs::pde::ProblemKind;
 use zcs::rng::Pcg64;
 use zcs::tensor::{kernels, Tensor};
+use zcs::util::propkit::assert_tensors_bits_eq;
 
 // ---------------------------------------------------------------------------
 // Counting allocator: tallies allocations per thread (thread-local, so
@@ -182,9 +183,10 @@ fn resident_sgd_equals_feed_based_sgd_for_every_problem_and_strategy() {
                     curve_r, curve_f,
                     "{kind:?}/{strategy:?} M={m} N={n}: loss trajectories diverged"
                 );
-                assert_eq!(
-                    weights_r, weights_f,
-                    "{kind:?}/{strategy:?} M={m} N={n}: final weights diverged"
+                assert_tensors_bits_eq(
+                    &weights_r,
+                    &weights_f,
+                    &format!("{kind:?}/{strategy:?} M={m} N={n} final weights"),
                 );
             }
         }
@@ -200,7 +202,11 @@ fn resident_adam_equals_feed_based_adam() {
             let (curve_f, weights_f) =
                 trajectory(config(kind, strategy, 2, 6, Optimizer::Adam, false, 3));
             assert_eq!(curve_r, curve_f, "{kind:?}/{strategy:?}: adam trajectories diverged");
-            assert_eq!(weights_r, weights_f, "{kind:?}/{strategy:?}: adam weights diverged");
+            assert_tensors_bits_eq(
+                &weights_r,
+                &weights_f,
+                &format!("{kind:?}/{strategy:?} adam final weights"),
+            );
         }
     }
 }
@@ -255,9 +261,11 @@ fn feed_based_fallback_reuses_its_feed_buffer() {
     let before = thread_allocs();
     trainer.step(&batch).unwrap();
     let per_step = thread_allocs() - before;
-    // 7 outputs cloned (loss x3 + 4 gradients) cost ~a dozen allocations;
-    // the old path added a fresh feed Vec plus scale/subtract temporaries
-    // and new weight tensors on top (~16 more).  A ceiling between the
-    // two catches any regression re-introducing per-step buffers.
-    assert!(per_step <= 24, "fallback step allocated {per_step} times");
+    // At M=2 the lane-split program clones 14 outputs (3 losses + 4
+    // gradients per lane, 2 lanes) -- roughly two dozen allocations.  The
+    // pre-lane path cloned 7; on top of *that*, the pre-resident path
+    // added a fresh feed Vec plus scale/subtract temporaries and new
+    // weight tensors every step.  A ceiling just above today's clone cost
+    // catches any regression re-introducing per-step buffers.
+    assert!(per_step <= 48, "fallback step allocated {per_step} times");
 }
