@@ -1,0 +1,142 @@
+//! Checkpoint cost bench (the robustness instrument for PR 8).
+//!
+//! Two questions: what does one v2 checkpoint cost at the file level
+//! (encode + atomic write, read + decode + verify), and what does
+//! `--checkpoint-every 10` cost a real training loop at 1, 2 and 4
+//! kernel threads.  The periodic save serializes executor-resident
+//! weights and Adam moments mid-run, so its overhead is the honest
+//! price of crash safety.  Writes `BENCH_ckpt.json`.
+//! Run: `cargo bench --bench ckpt`.
+
+use std::time::Instant;
+use zcs::autodiff::Strategy;
+use zcs::coordinator::checkpoint::{encode_train, load_train, save_train};
+use zcs::coordinator::native::{NativeRunConfig, NativeTrainer, Optimizer};
+use zcs::pde::ProblemKind;
+use zcs::util::benchkit::{quick_mode, Bench, Stats, Table};
+use zcs::util::json::{obj, Json};
+
+const THREADS: [usize; 3] = [1, 2, 4];
+const EVERY: usize = 10;
+
+fn config(threads: usize, steps: usize) -> NativeRunConfig {
+    NativeRunConfig {
+        problem: ProblemKind::ReactionDiffusion,
+        strategy: Strategy::Zcs,
+        m: 16,
+        n: 64,
+        n_bc: 16,
+        q: 8,
+        hidden: 32,
+        k: 16,
+        steps,
+        lr: NativeRunConfig::default_lr(ProblemKind::ReactionDiffusion),
+        seed: 11,
+        bank_size: 16,
+        bank_grid: 64,
+        log_every: usize::MAX,
+        threads,
+        optimizer: Optimizer::Adam,
+        resident: true,
+        ..NativeRunConfig::default()
+    }
+}
+
+fn tmp_path(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("zcs_bench_ckpt_{tag}_{}.bin", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+/// Steps/sec of a full `run()` at the given thread count and checkpoint
+/// interval (0 = never), on a fresh trainer each call.
+fn steps_per_sec(threads: usize, steps: usize, every: usize) -> anyhow::Result<f64> {
+    let mut cfg = config(threads, steps);
+    let path = tmp_path(&format!("every_{threads}"));
+    if every > 0 {
+        cfg.checkpoint_every = every;
+        cfg.checkpoint_path = Some(path.clone());
+    }
+    let mut trainer = NativeTrainer::new(cfg)?;
+    let t0 = Instant::now();
+    let report = trainer.run()?;
+    let dt = t0.elapsed().as_secs_f64().max(1e-12);
+    let _ = std::fs::remove_file(&path);
+    Ok(report.steps as f64 / dt)
+}
+
+fn main() -> anyhow::Result<()> {
+    let bench = Bench::from_env();
+    let mut table = Table::new(&["component", "mean", "p50", "iters"]);
+    let quick = quick_mode();
+
+    // -- file-level latency on a genuinely trained checkpoint ------------
+    let warm_steps = if quick { 4 } else { 16 };
+    let mut trainer = NativeTrainer::new(config(1, warm_steps))?;
+    trainer.run()?;
+    let ckpt = trainer.export_checkpoint(warm_steps as u64);
+    let bytes = encode_train(&ckpt).len();
+    let path = tmp_path("latency");
+
+    let save: Stats = bench.run(|| save_train(&path, &ckpt, None).unwrap());
+    let load: Stats = bench.run(|| load_train(&path).unwrap());
+    for (label, s) in [("ckpt save (atomic write)", &save), ("ckpt load (verify+decode)", &load)] {
+        table.row(&[
+            format!("{label}: {bytes} B"),
+            format!("{:.3} us", s.mean.as_secs_f64() * 1e6),
+            format!("{:.3} us", s.p50.as_secs_f64() * 1e6),
+            s.iters.to_string(),
+        ]);
+    }
+    let _ = std::fs::remove_file(&path);
+
+    // -- steady-state overhead of --checkpoint-every ----------------------
+    let run_steps = if quick { 30 } else { 200 };
+    let mut overhead: Vec<(usize, f64, f64)> = Vec::new();
+    for threads in THREADS {
+        let plain = steps_per_sec(threads, run_steps, 0)?;
+        let saved = steps_per_sec(threads, run_steps, EVERY)?;
+        let pct = (plain / saved.max(1e-12) - 1.0) * 100.0;
+        table.row(&[
+            format!("checkpoint-every {EVERY} @ {threads}t"),
+            format!("{plain:.1} -> {saved:.1} steps/s"),
+            format!("{pct:+.2}% wall"),
+            run_steps.to_string(),
+        ]);
+        eprintln!(
+            "ckpt overhead @ {threads} threads: {plain:.1} steps/s plain, \
+             {saved:.1} steps/s with every={EVERY} ({pct:+.2}%)"
+        );
+        overhead.push((threads, plain, saved));
+    }
+
+    // -- BENCH_ckpt.json --------------------------------------------------
+    let mut named: Vec<(String, Json)> = vec![
+        ("bytes".into(), Json::from(bytes)),
+        ("save_ns".into(), Json::from(save.mean.as_nanos() as f64)),
+        ("load_ns".into(), Json::from(load.mean.as_nanos() as f64)),
+        ("every".into(), Json::from(EVERY)),
+        ("run_steps".into(), Json::from(run_steps)),
+    ];
+    for (threads, plain, saved) in &overhead {
+        named.push((format!("threads_{threads}_plain_sps"), Json::from(*plain)));
+        named.push((format!("threads_{threads}_every{EVERY}_sps"), Json::from(*saved)));
+        named.push((
+            format!("threads_{threads}_overhead_pct"),
+            Json::from((plain / saved.max(1e-12) - 1.0) * 100.0),
+        ));
+    }
+    let case = obj(named.iter().map(|(k, v)| (k.as_str(), v.clone())).collect());
+    let doc = obj(vec![
+        ("bench", Json::from("ckpt.io")),
+        ("unit", Json::from("ns / steps_per_sec")),
+        ("quick", Json::Bool(quick)),
+        ("cases", Json::from(vec![case])),
+    ]);
+    std::fs::write("BENCH_ckpt.json", doc.to_string())?;
+    eprintln!("wrote BENCH_ckpt.json");
+
+    table.print();
+    Ok(())
+}

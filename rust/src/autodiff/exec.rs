@@ -68,11 +68,12 @@ use super::program::{Instr, OpCode, Operand, Program, StateKind, UpdateRule};
 use crate::tensor::kernels::ExtKind;
 use crate::tensor::simd::{SimdLevel, SimdMode};
 use crate::tensor::{kernels, Tensor};
+use crate::util::env::{FaultCell, FaultKind};
 use crate::util::pool::{default_threads, Pool};
 use std::cell::UnsafeCell;
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicPtr, Ordering};
-use std::sync::{Arc, Barrier};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 /// Which instruction schedule [`Executor::execute`] runs.
@@ -254,7 +255,90 @@ pub struct ReplicaComm {
     n_lanes: usize,
     /// published gradient pointers, indexed `weight * n_lanes + lane`
     slots: Vec<AtomicPtr<Tensor>>,
-    barrier: Barrier,
+    barrier: PoisonBarrier,
+}
+
+/// The panic message every survivor of a poisoned [`ReplicaComm`] barrier
+/// unwinds with -- the replica layer filters it out when picking which
+/// panic to report (the original fault, not its cascade).
+pub const BARRIER_POISON_MSG: &str = "zcs replica barrier poisoned";
+
+/// A reusable N-party barrier that, unlike [`std::sync::Barrier`], can be
+/// *poisoned*: when a replica dies mid-step, [`PoisonBarrier::poison`]
+/// wakes every parked waiter and makes every wait (current and future,
+/// until [`PoisonBarrier::clear_poison`]) panic with
+/// [`BARRIER_POISON_MSG`] instead of deadlocking the survivors forever.
+/// The cascade panics unwind each replica driver's `catch_unwind`, so the
+/// whole group lands parked and the lead thread reports one typed error.
+struct PoisonBarrier {
+    parties: usize,
+    state: Mutex<BarrierState>,
+    cv: Condvar,
+}
+
+struct BarrierState {
+    /// waiters parked in the current generation
+    count: usize,
+    /// bumped when a generation completes, releasing its waiters
+    generation: u64,
+    poisoned: bool,
+}
+
+impl PoisonBarrier {
+    fn new(parties: usize) -> Self {
+        assert!(parties >= 1, "empty barrier");
+        Self {
+            parties,
+            state: Mutex::new(BarrierState { count: 0, generation: 0, poisoned: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Meet the group; panics with [`BARRIER_POISON_MSG`] if the barrier
+    /// is (or becomes) poisoned before this generation completes.
+    fn wait(&self) {
+        let mut st = self.state.lock().unwrap();
+        if st.poisoned {
+            drop(st);
+            panic!("{BARRIER_POISON_MSG}");
+        }
+        st.count += 1;
+        if st.count == self.parties {
+            st.count = 0;
+            st.generation = st.generation.wrapping_add(1);
+            drop(st);
+            self.cv.notify_all();
+            return;
+        }
+        let gen = st.generation;
+        while st.generation == gen && !st.poisoned {
+            st = self.cv.wait(st).unwrap();
+        }
+        // a completed generation outranks poison: the whole group already
+        // passed, so this waiter's step is intact
+        if st.generation == gen {
+            drop(st);
+            panic!("{BARRIER_POISON_MSG}");
+        }
+    }
+
+    /// Poison the barrier: every parked and future waiter panics instead
+    /// of blocking.  Idempotent.
+    fn poison(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.poisoned = true;
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Reset after a poisoned step, once every party is known to be
+    /// parked outside the barrier (the replica layer clears at step
+    /// entry, when all drivers are idle).
+    fn clear_poison(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.poisoned = false;
+        st.count = 0;
+    }
 }
 
 impl ReplicaComm {
@@ -264,7 +348,20 @@ impl ReplicaComm {
         assert!(n_lanes >= 1 && replicas >= 1, "empty replica comm");
         let slots =
             (0..n_weights * n_lanes).map(|_| AtomicPtr::new(std::ptr::null_mut())).collect();
-        ReplicaComm { n_lanes, slots, barrier: Barrier::new(replicas) }
+        ReplicaComm { n_lanes, slots, barrier: PoisonBarrier::new(replicas) }
+    }
+
+    /// Poison the group barrier (see [`PoisonBarrier::poison`]): called by
+    /// a replica that dies mid-step so the survivors unwind instead of
+    /// waiting forever.
+    pub fn poison(&self) {
+        self.barrier.poison();
+    }
+
+    /// Clear a poisoned barrier between steps, once every replica is
+    /// parked.
+    pub fn clear_poison(&self) {
+        self.barrier.clear_poison();
     }
 
     /// Publish this replica's gradient for `(weight, lane)`.  The pointee
@@ -309,6 +406,9 @@ pub struct Executor {
     /// replica group this executor reduces gradients through; `None` (the
     /// default) folds only the executor's own lanes
     comm: Option<Arc<ReplicaComm>>,
+    /// deterministic fault injector ([`Executor::arm_fault`]); checked
+    /// once per run with updates, so the hot path pays one branch
+    fault: Option<Arc<FaultCell>>,
 }
 
 impl Default for Executor {
@@ -405,6 +505,7 @@ impl Executor {
             ext_scratch: Vec::new(),
             reg_scratch: Vec::new(),
             comm: None,
+            fault: None,
         }
     }
 
@@ -478,6 +579,23 @@ impl Executor {
         self.comm = Some(comm);
     }
 
+    /// Arm a deterministic fault injector: a [`FaultKind::NanGrad`] spec
+    /// poisons the first update's gradient buffer with NaN on the
+    /// matching optimizer step (`opt_t`, 1-based), exercising the
+    /// non-finite guards downstream.  Other kinds are ignored here.
+    pub fn arm_fault(&mut self, cell: Arc<FaultCell>) {
+        self.fault = Some(cell);
+    }
+
+    /// Poison the bound replica barrier, if any (no-op otherwise): called
+    /// on the unwind path when this executor's step dies, so peer
+    /// replicas unwind too instead of waiting forever.
+    pub fn poison_comm(&self) {
+        if let Some(comm) = &self.comm {
+            comm.poison();
+        }
+    }
+
     /// Seed the resident state of a program compiled with
     /// [`Program::attach_optimizer`]: `weights` fill the `Weight` slots in
     /// order, optimizer moments start at zero, and the optimizer timestep
@@ -499,6 +617,22 @@ impl Executor {
             self.states.push(t);
         }
         self.opt_t = 0;
+    }
+
+    /// Overwrite the bound resident state bit-for-bit and set the
+    /// optimizer timestep -- the restore half of checkpointing (and of
+    /// transparent fault recovery).  `states` must align with the bound
+    /// [`Program::states`] layout: same count, same shapes, weights
+    /// first.  Unlike [`Executor::bind_states`] this copies into the
+    /// existing tensors, so a parked replica's state can be rewound
+    /// without rebinding.
+    pub fn restore_states(&mut self, states: &[Tensor], opt_t: u64) {
+        assert_eq!(states.len(), self.states.len(), "restore_states count");
+        for (dst, src) in self.states.iter_mut().zip(states) {
+            assert_eq!(dst.shape(), src.shape(), "restore_states shape");
+            dst.data_mut().copy_from_slice(src.data());
+        }
+        self.opt_t = opt_t;
     }
 
     /// The resident state tensors, aligned with [`Program::states`]
@@ -612,6 +746,19 @@ impl Executor {
         if !program.updates.is_empty() {
             self.opt_t += 1;
             let t = self.opt_t;
+            // fault injection: poison the first update's gradient buffer
+            // with NaN on the armed step, *before* the optimizer consumes
+            // it -- the update then writes NaN into the weights and the
+            // next step's loss guard reports it
+            if let Some(cell) = &self.fault {
+                if cell.should_fire(FaultKind::NanGrad, t) {
+                    if let Some(Operand::Buf(b)) = program.updates.first().map(|u| u.grad) {
+                        if let Some(g) = self.arena[b].as_mut() {
+                            g.data_mut().fill(f64::NAN);
+                        }
+                    }
+                }
+            }
             for up in &program.updates {
                 let t_up = self.profile.is_some().then(Instant::now);
                 let g: &Tensor = match up.grad {

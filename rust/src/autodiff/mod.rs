@@ -28,7 +28,7 @@ pub mod passes;
 pub mod program;
 pub mod zcs_demo;
 
-pub use exec::{Executor, OpTally, ProfileReport, ReplicaComm, SchedMode};
+pub use exec::{Executor, OpTally, ProfileReport, ReplicaComm, SchedMode, BARRIER_POISON_MSG};
 pub use graph::{Graph, NodeId, Op};
 pub use passes::Schedule;
 pub use program::{

@@ -425,6 +425,21 @@ impl PdeBatcher {
         self.bank.as_ref()
     }
 
+    /// Capture the draw state for checkpointing.  The bank is fully
+    /// determined by the construction config (it is generated *before*
+    /// the batcher's own generator is cloned off), so a resume rebuilds
+    /// the batcher from the same config and restores only this snapshot.
+    pub fn rng_snapshot(&self) -> crate::rng::Pcg64Snapshot {
+        self.rng.snapshot()
+    }
+
+    /// Restore the draw state captured by [`PdeBatcher::rng_snapshot`]:
+    /// the subsequent batch stream is bit-identical to the one the
+    /// snapshotted batcher would have produced.
+    pub fn rng_restore(&mut self, snap: &crate::rng::Pcg64Snapshot) {
+        self.rng.restore(snap);
+    }
+
     pub fn last_functions(&self) -> &[usize] {
         &self.last_functions
     }

@@ -1,17 +1,459 @@
-//! Flat-parameter checkpointing: a tiny self-describing binary format.
+//! Checkpointing: the v2 crash-safe training format and the legacy v1
+//! flat-parameter format.
 //!
-//! Layout: magic `ZCSCKPT1`, tensor count (u32 LE), then per tensor:
-//! rank (u32), dims (u32 each), f32 data (LE).  No external deps, stable
-//! across platforms we care about.
+//! **v2** (`ZCSCKPT2`) is the native trainer's format: one
+//! [`TrainCheckpoint`] snapshots everything a bit-exact resume needs --
+//! the resident f64 weights, the Adam moments, the optimizer timestep,
+//! the [`PdeBatcher`](crate::coordinator::batch::PdeBatcher) draw state
+//! (a full [`Pcg64Snapshot`], Box-Muller cache included), and the
+//! trajectory-determining run metadata ([`CheckpointMeta`]).  The file is
+//! magic + version + payload + trailing CRC32 (all little-endian, f64
+//! data verbatim), written atomically: serialize to a buffer, write a
+//! sibling `*.tmp`, fsync, rename.  A torn, truncated, or bit-flipped
+//! file always fails the CRC (or a bounds check) and loads as `Err` --
+//! never as a silently wrong resume; `rust/tests/checkpoint_resume.rs`
+//! property-tests exactly that.
+//!
+//! Because the repo's determinism contract makes trajectories invariant
+//! in thread count, SIMD width, replica count, and pipelining, those
+//! knobs are recorded for information but *not* validated on resume:
+//! a checkpoint taken at `--replicas 4` resumes bit-exactly at
+//! `--replicas 1` and vice versa.  Everything that *does* determine the
+//! trajectory (problem, strategy, optimizer, sizes, lr, seed, bank) is
+//! validated field by field with a typed error.
+//!
+//! **v1** (`ZCSCKPT1`) is the legacy f32 flat-parameter format of the
+//! PJRT artifact path, kept readable for artifact tests; its loader
+//! bounds every header field and the payload length before allocating.
 
+use crate::coordinator::error::TrainError;
+use crate::rng::Pcg64Snapshot;
 use crate::runtime::HostTensor;
+use crate::tensor::Tensor;
+use crate::util::env::{FaultCell, FaultKind};
 use anyhow::{bail, Context, Result};
-use std::io::{Read, Write};
+use std::io::Write;
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"ZCSCKPT1";
+const MAGIC_V2: &[u8; 8] = b"ZCSCKPT2";
+const VERSION_V2: u32 = 2;
 
-/// Save the flat parameter tuple.
+/// Header sanity bounds: a real checkpoint is four small MLP weight
+/// matrices, so anything past these is a corrupt or hostile file.
+const MAX_TENSORS: usize = 4096;
+const MAX_RANK: usize = 8;
+const MAX_STRING: usize = 256;
+
+// ---------------------------------------------------------------------------
+// CRC32 (IEEE 802.3, reflected, poly 0xEDB88320) -- hand-rolled because the
+// crate is pure std + anyhow.  Detects every single-bit flip and every
+// truncation that survives the length checks.
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC32_TABLE: [u32; 256] = crc32_table();
+
+/// CRC32 of a byte slice (IEEE, the zlib/PNG polynomial).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+// ---------------------------------------------------------------------------
+// v2: versioned bit-exact training checkpoints
+
+/// The trajectory-determining configuration a v2 checkpoint was taken
+/// under.  Every field except the last three must match the resuming
+/// run's configuration bit for bit ([`CheckpointMeta::validate`]);
+/// `replicas`, `threads`, and `simd` are informational -- the
+/// determinism contract makes them invisible to the trajectory.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CheckpointMeta {
+    pub problem: String,
+    pub strategy: String,
+    pub optimizer: String,
+    pub m: u64,
+    pub n: u64,
+    pub n_bc: u64,
+    pub q: u64,
+    pub hidden: u64,
+    pub k: u64,
+    pub lr: f64,
+    pub seed: u64,
+    pub bank_size: u64,
+    pub bank_grid: u64,
+    /// informational: replica count of the run that wrote the checkpoint
+    pub replicas: u64,
+    /// informational: thread budget of the writing run
+    pub threads: u64,
+    /// informational: resolved SIMD level name of the writing run
+    pub simd: String,
+}
+
+impl CheckpointMeta {
+    /// Check a resuming run's meta against this checkpoint's, naming the
+    /// first mismatched trajectory-determining field in a typed
+    /// [`TrainError::Checkpoint`].
+    pub fn validate(&self, current: &CheckpointMeta) -> Result<(), TrainError> {
+        let mismatch = |field: &str, have: &str, want: &str| {
+            Err(TrainError::Checkpoint {
+                reason: format!(
+                    "checkpoint was taken under {field}={want}, this run has {field}={have}"
+                ),
+            })
+        };
+        macro_rules! check {
+            ($field:ident) => {
+                if self.$field != current.$field {
+                    return mismatch(
+                        stringify!($field),
+                        &current.$field.to_string(),
+                        &self.$field.to_string(),
+                    );
+                }
+            };
+        }
+        check!(problem);
+        check!(strategy);
+        check!(optimizer);
+        check!(m);
+        check!(n);
+        check!(n_bc);
+        check!(q);
+        check!(hidden);
+        check!(k);
+        check!(seed);
+        check!(bank_size);
+        check!(bank_grid);
+        if self.lr.to_bits() != current.lr.to_bits() {
+            return mismatch("lr", &current.lr.to_string(), &self.lr.to_string());
+        }
+        Ok(())
+    }
+}
+
+/// One v2 checkpoint: everything a bit-exact resume needs.
+#[derive(Clone, Debug)]
+pub struct TrainCheckpoint {
+    pub meta: CheckpointMeta,
+    /// completed training steps at the time of the snapshot
+    pub step: u64,
+    /// optimizer timestep (== `step` today, but stored separately so the
+    /// Adam bias correction can never drift from the weights)
+    pub opt_t: u64,
+    /// the batcher's draw state *after* `step` batches were drawn
+    pub rng: Pcg64Snapshot,
+    /// the weight tensors, in the canonical (wb, wb2, wt, wt2) order
+    pub weights: Vec<Tensor>,
+    /// per-weight Adam (m, v) pairs, aligned with `weights`; empty for
+    /// SGD
+    pub moments: Vec<(Tensor, Tensor)>,
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_string(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_tensor(buf: &mut Vec<u8>, t: &Tensor) {
+    put_u32(buf, t.shape().len() as u32);
+    for &d in t.shape() {
+        put_u32(buf, d as u32);
+    }
+    for &v in t.data() {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Serialize a v2 checkpoint to its on-disk bytes (CRC included).
+pub fn encode_train(ckpt: &TrainCheckpoint) -> Vec<u8> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(MAGIC_V2);
+    put_u32(&mut buf, VERSION_V2);
+    let m = &ckpt.meta;
+    put_string(&mut buf, &m.problem);
+    put_string(&mut buf, &m.strategy);
+    put_string(&mut buf, &m.optimizer);
+    put_string(&mut buf, &m.simd);
+    for v in [
+        m.m, m.n, m.n_bc, m.q, m.hidden, m.k, m.seed, m.bank_size, m.bank_grid, m.replicas,
+        m.threads,
+    ] {
+        put_u64(&mut buf, v);
+    }
+    buf.extend_from_slice(&m.lr.to_le_bytes());
+    put_u64(&mut buf, ckpt.step);
+    put_u64(&mut buf, ckpt.opt_t);
+    buf.extend_from_slice(&ckpt.rng.state.to_le_bytes());
+    buf.extend_from_slice(&ckpt.rng.inc.to_le_bytes());
+    buf.push(ckpt.rng.cached.is_some() as u8);
+    buf.extend_from_slice(&ckpt.rng.cached.unwrap_or(0.0).to_le_bytes());
+    put_u32(&mut buf, ckpt.weights.len() as u32);
+    for w in &ckpt.weights {
+        put_tensor(&mut buf, w);
+    }
+    put_u32(&mut buf, ckpt.moments.len() as u32);
+    for (m, v) in &ckpt.moments {
+        put_tensor(&mut buf, m);
+        put_tensor(&mut buf, v);
+    }
+    let crc = crc32(&buf);
+    put_u32(&mut buf, crc);
+    buf
+}
+
+/// Save a v2 checkpoint atomically: serialize, write a sibling `*.tmp`,
+/// fsync, rename.  A crash at any point leaves either the previous
+/// checkpoint or a complete new one -- never a torn file under the final
+/// name.  `fault` injects a torn write ([`FaultKind::TornCkpt`]) when its
+/// step matches, exercising the loader's rejection path.
+pub fn save_train(
+    path: impl AsRef<Path>,
+    ckpt: &TrainCheckpoint,
+    fault: Option<&FaultCell>,
+) -> Result<()> {
+    let path = path.as_ref();
+    let mut bytes = encode_train(ckpt);
+    if fault.is_some_and(|f| f.should_fire(FaultKind::TornCkpt, ckpt.step)) {
+        // simulate a crash mid-write: half the file, CRC long gone
+        bytes.truncate(bytes.len() / 2);
+    }
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp);
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating checkpoint temp file {tmp:?}"))?;
+        f.write_all(&bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {tmp:?} into place as {path:?}"))?;
+    Ok(())
+}
+
+/// Bounds-checked little-endian reader over a byte slice: every read is
+/// length-checked, so a truncated payload becomes a clean `Err` instead
+/// of a short read or an unchecked allocation.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn bytes(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!("checkpoint truncated: {what} wants {n} bytes, {} left", self.remaining());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.bytes(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8, what)?.try_into().unwrap()))
+    }
+
+    fn u128(&mut self, what: &str) -> Result<u128> {
+        Ok(u128::from_le_bytes(self.bytes(16, what)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self, what: &str) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.bytes(8, what)?.try_into().unwrap()))
+    }
+
+    fn string(&mut self, what: &str) -> Result<String> {
+        let len = self.u32(what)? as usize;
+        if len > MAX_STRING {
+            bail!("implausible {what} length {len}");
+        }
+        let s = self.bytes(len, what)?;
+        String::from_utf8(s.to_vec()).with_context(|| format!("{what} is not utf-8"))
+    }
+
+    fn tensor(&mut self, what: &str) -> Result<Tensor> {
+        let rank = self.u32(what)? as usize;
+        if rank > MAX_RANK {
+            bail!("implausible rank {rank} for {what}");
+        }
+        let mut dims = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            dims.push(self.u32(what)? as usize);
+        }
+        let n = dims
+            .iter()
+            .try_fold(1usize, |a, &d| a.checked_mul(d))
+            .with_context(|| format!("dimension overflow in {what}: {dims:?}"))?;
+        // bound the element count by the bytes actually present *before*
+        // allocating, so a hostile header cannot trigger a huge alloc
+        if n > self.remaining() / 8 {
+            bail!(
+                "checkpoint truncated: {what} claims {n} elements, only {} bytes left",
+                self.remaining()
+            );
+        }
+        let data: Vec<f64> = self
+            .bytes(8 * n, what)?
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(Tensor::new(&dims, data))
+    }
+}
+
+/// Load a v2 checkpoint: verify magic, version, and the trailing CRC32
+/// first, then parse with every header field bounds-checked.  Any
+/// truncation or bit flip yields `Err`.
+pub fn load_train(path: impl AsRef<Path>) -> Result<TrainCheckpoint> {
+    let path = path.as_ref();
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading checkpoint {path:?}"))?;
+    decode_train(&bytes).with_context(|| format!("loading checkpoint {path:?}"))
+}
+
+/// Decode v2 checkpoint bytes (see [`load_train`]).
+pub fn decode_train(bytes: &[u8]) -> Result<TrainCheckpoint> {
+    if bytes.len() < MAGIC_V2.len() + 4 + 4 {
+        bail!("checkpoint truncated: {} bytes is shorter than any valid file", bytes.len());
+    }
+    if &bytes[..8] != MAGIC_V2 {
+        bail!("not a v2 checkpoint: bad magic {:?}", &bytes[..8]);
+    }
+    let (payload, crc_bytes) = bytes.split_at(bytes.len() - 4);
+    let stored = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+    let computed = crc32(payload);
+    if stored != computed {
+        bail!("checkpoint CRC mismatch: stored {stored:#010x}, computed {computed:#010x}");
+    }
+    let mut c = Cursor::new(&payload[8..]);
+    let version = c.u32("version")?;
+    if version != VERSION_V2 {
+        bail!("unsupported checkpoint version {version} (this build reads {VERSION_V2})");
+    }
+    let problem = c.string("problem")?;
+    let strategy = c.string("strategy")?;
+    let optimizer = c.string("optimizer")?;
+    let simd = c.string("simd")?;
+    let mut nums = [0u64; 11];
+    for (i, v) in nums.iter_mut().enumerate() {
+        *v = c.u64(&format!("meta field {i}"))?;
+    }
+    let [m, n, n_bc, q, hidden, k, seed, bank_size, bank_grid, replicas, threads] = nums;
+    let lr = c.f64("lr")?;
+    let step = c.u64("step")?;
+    let opt_t = c.u64("opt_t")?;
+    let state = c.u128("rng state")?;
+    let inc = c.u128("rng inc")?;
+    let has_cached = c.u8("rng cache flag")?;
+    let cached_val = c.f64("rng cache")?;
+    if has_cached > 1 {
+        bail!("corrupt rng cache flag {has_cached}");
+    }
+    let rng = Pcg64Snapshot {
+        state,
+        inc,
+        cached: (has_cached == 1).then_some(cached_val),
+    };
+    let n_weights = c.u32("weight count")? as usize;
+    if n_weights > MAX_TENSORS {
+        bail!("implausible weight count {n_weights}");
+    }
+    let mut weights = Vec::with_capacity(n_weights);
+    for i in 0..n_weights {
+        weights.push(c.tensor(&format!("weight {i}"))?);
+    }
+    let n_moments = c.u32("moment count")? as usize;
+    if n_moments > MAX_TENSORS {
+        bail!("implausible moment count {n_moments}");
+    }
+    if n_moments != 0 && n_moments != n_weights {
+        bail!("moment count {n_moments} does not match weight count {n_weights}");
+    }
+    let mut moments = Vec::with_capacity(n_moments);
+    for i in 0..n_moments {
+        let m_t = c.tensor(&format!("adam m {i}"))?;
+        let v_t = c.tensor(&format!("adam v {i}"))?;
+        if m_t.shape() != weights[i].shape() || v_t.shape() != weights[i].shape() {
+            bail!("adam moment {i} shape does not match its weight");
+        }
+        moments.push((m_t, v_t));
+    }
+    if c.remaining() != 0 {
+        bail!("checkpoint has {} trailing bytes", c.remaining());
+    }
+    Ok(TrainCheckpoint {
+        meta: CheckpointMeta {
+            problem,
+            strategy,
+            optimizer,
+            m,
+            n,
+            n_bc,
+            q,
+            hidden,
+            k,
+            lr,
+            seed,
+            bank_size,
+            bank_grid,
+            replicas,
+            threads,
+            simd,
+        },
+        step,
+        opt_t,
+        rng,
+        weights,
+        moments,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// v1: legacy f32 flat-parameter format (PJRT artifact path)
+
+/// Save the flat parameter tuple (legacy v1, f32).
 pub fn save(path: impl AsRef<Path>, params: &[HostTensor]) -> Result<()> {
     let mut f = std::fs::File::create(path.as_ref())
         .with_context(|| format!("creating {:?}", path.as_ref()))?;
@@ -29,45 +471,58 @@ pub fn save(path: impl AsRef<Path>, params: &[HostTensor]) -> Result<()> {
     Ok(())
 }
 
-/// Load a checkpoint.
+/// Load a legacy v1 checkpoint.  The whole file is read up front and
+/// parsed through the same bounds-checked cursor as v2: tensor count,
+/// rank, and the dims product are all validated against the bytes
+/// actually present before anything is allocated, so an oversized or
+/// truncated header errors instead of allocating unchecked or reading
+/// short.
 pub fn load(path: impl AsRef<Path>) -> Result<Vec<HostTensor>> {
-    let mut f = std::fs::File::open(path.as_ref())
+    let bytes = std::fs::read(path.as_ref())
         .with_context(|| format!("opening {:?}", path.as_ref()))?;
-    let mut magic = [0u8; 8];
-    f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("not a zcs checkpoint: bad magic {magic:?}");
+    if bytes.len() < MAGIC.len() + 4 {
+        bail!("checkpoint truncated: {} bytes is shorter than any valid file", bytes.len());
     }
-    let count = read_u32(&mut f)? as usize;
-    if count > 1_000_000 {
+    if &bytes[..8] != MAGIC {
+        bail!("not a zcs checkpoint: bad magic {:?}", &bytes[..8]);
+    }
+    let mut c = Cursor::new(&bytes[8..]);
+    let count = c.u32("tensor count")? as usize;
+    if count > MAX_TENSORS {
         bail!("implausible tensor count {count}");
     }
     let mut out = Vec::with_capacity(count);
-    for _ in 0..count {
-        let rank = read_u32(&mut f)? as usize;
-        if rank > 16 {
+    for i in 0..count {
+        let what = format!("tensor {i}");
+        let rank = c.u32(&what)? as usize;
+        if rank > MAX_RANK {
             bail!("implausible rank {rank}");
         }
         let mut dims = Vec::with_capacity(rank);
         for _ in 0..rank {
-            dims.push(read_u32(&mut f)? as usize);
+            dims.push(c.u32(&what)? as usize);
         }
-        let n: usize = dims.iter().product();
-        let mut buf = vec![0u8; 4 * n];
-        f.read_exact(&mut buf)?;
-        let data: Vec<f32> = buf
+        let n = dims
+            .iter()
+            .try_fold(1usize, |a, &d| a.checked_mul(d))
+            .with_context(|| format!("dimension overflow in {what}: {dims:?}"))?;
+        if n > c.remaining() / 4 {
+            bail!(
+                "checkpoint truncated: {what} claims {n} elements, only {} bytes left",
+                c.remaining()
+            );
+        }
+        let data: Vec<f32> = c
+            .bytes(4 * n, &what)?
             .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
             .collect();
         out.push(HostTensor::new(dims, data));
     }
+    if c.remaining() != 0 {
+        bail!("checkpoint has {} trailing bytes", c.remaining());
+    }
     Ok(out)
-}
-
-fn read_u32(f: &mut impl Read) -> Result<u32> {
-    let mut b = [0u8; 4];
-    f.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
 }
 
 #[cfg(test)]
@@ -115,5 +570,196 @@ mod tests {
         let p = tmp("empty.ckpt");
         save(&p, &[]).unwrap();
         assert_eq!(load(&p).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn v1_rejects_oversized_headers_without_allocating() {
+        // count = u32::MAX: bounded by MAX_TENSORS, not trusted
+        let mut f = Vec::new();
+        f.extend_from_slice(MAGIC);
+        f.extend_from_slice(&u32::MAX.to_le_bytes());
+        let p = tmp("hostile_count.ckpt");
+        std::fs::write(&p, &f).unwrap();
+        let err = load(&p).unwrap_err().to_string();
+        assert!(err.contains("implausible tensor count"), "{err}");
+
+        // rank = 10_000: bounded by MAX_RANK
+        let mut f = Vec::new();
+        f.extend_from_slice(MAGIC);
+        f.extend_from_slice(&1u32.to_le_bytes());
+        f.extend_from_slice(&10_000u32.to_le_bytes());
+        let p = tmp("hostile_rank.ckpt");
+        std::fs::write(&p, &f).unwrap();
+        let err = load(&p).unwrap_err().to_string();
+        assert!(err.contains("implausible rank"), "{err}");
+
+        // dims whose product overflows usize: checked multiply, clear error
+        let mut f = Vec::new();
+        f.extend_from_slice(MAGIC);
+        f.extend_from_slice(&1u32.to_le_bytes());
+        f.extend_from_slice(&4u32.to_le_bytes());
+        for _ in 0..4 {
+            f.extend_from_slice(&u32::MAX.to_le_bytes());
+        }
+        let p = tmp("hostile_overflow.ckpt");
+        std::fs::write(&p, &f).unwrap();
+        let err = format!("{:#}", load(&p).unwrap_err());
+        assert!(err.contains("overflow"), "{err}");
+
+        // plausible dims but no payload: bounded by the bytes present
+        let mut f = Vec::new();
+        f.extend_from_slice(MAGIC);
+        f.extend_from_slice(&1u32.to_le_bytes());
+        f.extend_from_slice(&2u32.to_le_bytes());
+        f.extend_from_slice(&1000u32.to_le_bytes());
+        f.extend_from_slice(&1000u32.to_le_bytes());
+        let p = tmp("hostile_short.ckpt");
+        std::fs::write(&p, &f).unwrap();
+        let err = load(&p).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn v1_rejects_trailing_garbage() {
+        let params = vec![HostTensor::new(vec![2], vec![1.0, 2.0])];
+        let p = tmp("trailing.ckpt");
+        save(&p, &params).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes.extend_from_slice(b"junk");
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(load(&p).is_err());
+    }
+
+    fn sample_v2(adam: bool) -> TrainCheckpoint {
+        TrainCheckpoint {
+            meta: CheckpointMeta {
+                problem: "antiderivative".into(),
+                strategy: "zcs".into(),
+                optimizer: if adam { "adam" } else { "sgd" }.into(),
+                m: 2,
+                n: 6,
+                n_bc: 4,
+                q: 5,
+                hidden: 8,
+                k: 4,
+                lr: 5e-3,
+                seed: 7,
+                bank_size: 8,
+                bank_grid: 32,
+                replicas: 2,
+                threads: 4,
+                simd: "avx2".into(),
+            },
+            step: 17,
+            opt_t: 17,
+            rng: Pcg64Snapshot {
+                state: 0x0123_4567_89ab_cdef_u128 << 17,
+                inc: 77,
+                cached: Some(-0.25),
+            },
+            weights: vec![
+                Tensor::new(&[2, 3], vec![1.0, -0.0, f64::MIN_POSITIVE, 3.5, -2.0, 1e300]),
+                Tensor::new(&[3], vec![0.1, 0.2, 0.3]),
+            ],
+            moments: if adam {
+                vec![
+                    (Tensor::zeros(&[2, 3]), Tensor::new(&[2, 3], vec![1e-9; 6])),
+                    (Tensor::new(&[3], vec![4.0, 5.0, 6.0]), Tensor::zeros(&[3])),
+                ]
+            } else {
+                Vec::new()
+            },
+        }
+    }
+
+    #[test]
+    fn v2_round_trip_is_bit_exact() {
+        for adam in [false, true] {
+            let ckpt = sample_v2(adam);
+            let p = tmp(if adam { "v2_adam.ckpt" } else { "v2_sgd.ckpt" });
+            save_train(&p, &ckpt, None).unwrap();
+            let back = load_train(&p).unwrap();
+            assert_eq!(back.meta, ckpt.meta);
+            assert_eq!(back.step, ckpt.step);
+            assert_eq!(back.opt_t, ckpt.opt_t);
+            assert_eq!(back.rng, ckpt.rng);
+            assert_eq!(back.weights.len(), ckpt.weights.len());
+            for (a, b) in back.weights.iter().zip(&ckpt.weights) {
+                assert_eq!(a.shape(), b.shape());
+                let ab: Vec<u64> = a.data().iter().map(|v| v.to_bits()).collect();
+                let bb: Vec<u64> = b.data().iter().map(|v| v.to_bits()).collect();
+                assert_eq!(ab, bb, "weights must round-trip bit for bit");
+            }
+            assert_eq!(back.moments.len(), ckpt.moments.len());
+        }
+    }
+
+    #[test]
+    fn v2_rejects_v1_magic_and_vice_versa() {
+        let ckpt = sample_v2(false);
+        let p = tmp("v2_cross.ckpt");
+        save_train(&p, &ckpt, None).unwrap();
+        assert!(load(&p).is_err(), "v1 loader must refuse a v2 file");
+        let p1 = tmp("v1_cross.ckpt");
+        save(&p1, &[HostTensor::scalar(1.0)]).unwrap();
+        assert!(load_train(&p1).is_err(), "v2 loader must refuse a v1 file");
+    }
+
+    #[test]
+    fn v2_rejects_any_truncation() {
+        let bytes = encode_train(&sample_v2(true));
+        for cut in [0, 1, 7, 8, 11, 12, bytes.len() / 2, bytes.len() - 1] {
+            assert!(decode_train(&bytes[..cut]).is_err(), "truncation to {cut} must fail");
+        }
+    }
+
+    #[test]
+    fn v2_rejects_single_bit_flips() {
+        let bytes = encode_train(&sample_v2(true));
+        // a few scattered positions incl. header, payload, and CRC itself
+        for pos in [0usize, 8, 12, 40, bytes.len() / 2, bytes.len() - 5, bytes.len() - 1] {
+            let mut evil = bytes.clone();
+            evil[pos] ^= 0x10;
+            assert!(decode_train(&evil).is_err(), "bit flip at {pos} must fail");
+        }
+    }
+
+    #[test]
+    fn v2_meta_validation_names_the_field() {
+        let a = sample_v2(false).meta;
+        let mut b = a.clone();
+        b.seed = 999;
+        let err = a.validate(&b).unwrap_err().to_string();
+        assert!(err.contains("seed"), "{err}");
+        let mut c = a.clone();
+        c.lr = 1e-2;
+        let err = a.validate(&c).unwrap_err().to_string();
+        assert!(err.contains("lr"), "{err}");
+        // informational fields never block a resume
+        let mut d = a.clone();
+        d.replicas = 64;
+        d.threads = 128;
+        d.simd = "off".into();
+        a.validate(&d).unwrap();
+    }
+
+    #[test]
+    fn torn_ckpt_fault_produces_an_unloadable_file() {
+        use crate::util::env::{FaultSpec, FaultKind};
+        let ckpt = sample_v2(true);
+        let cell = FaultCell::new(FaultSpec { kind: FaultKind::TornCkpt, step: ckpt.step });
+        let p = tmp("torn.ckpt");
+        save_train(&p, &ckpt, Some(&cell)).unwrap();
+        assert!(load_train(&p).is_err(), "torn write must not load");
+        // the fault fired once; the retry writes a good file
+        save_train(&p, &ckpt, Some(&cell)).unwrap();
+        assert!(load_train(&p).is_ok());
+    }
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // standard IEEE CRC32 check values
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
     }
 }

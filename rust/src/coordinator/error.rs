@@ -1,0 +1,88 @@
+//! Typed training failures.
+//!
+//! The native trainer's error path used to be stringly `anyhow::bail!`;
+//! crash-safe training needs callers (the CLI, tests, recovery code) to
+//! distinguish *what* failed: a diverged loss can roll back to the last
+//! checkpoint, a panicking worker can be retried or surfaced, a bad
+//! checkpoint file must abort the resume.  [`TrainError`] is that
+//! taxonomy; it flows through the existing `anyhow::Result` plumbing and
+//! is recovered with `err.downcast_ref::<TrainError>()`.
+
+use std::fmt;
+
+/// What went wrong inside a training run.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TrainError {
+    /// A loss component (or a gradient, in the fallback path) came out
+    /// non-finite: the offending output is named so the report points at
+    /// the physics, not just "NaN somewhere".
+    NonFinite {
+        /// 1-based training step at which the value was observed
+        step: u64,
+        /// which output went bad (`loss`, `loss_pde`, `loss_bc`, `grad`)
+        output: String,
+        value: f64,
+    },
+    /// A worker or replica driver thread panicked mid-step.  The panic
+    /// payload is carried as text; the step state is guaranteed
+    /// unmodified (panics happen before the in-Program optimizer update
+    /// commits), so the step can be retried.
+    WorkerPanic {
+        /// 1-based training step that was being executed
+        step: u64,
+        /// stringified panic payload
+        what: String,
+    },
+    /// A checkpoint could not be loaded, validated, or applied.
+    Checkpoint { reason: String },
+}
+
+impl fmt::Display for TrainError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TrainError::NonFinite { step, output, value } => {
+                write!(f, "non-finite {output} at step {step}: {value}")
+            }
+            TrainError::WorkerPanic { step, what } => {
+                write!(f, "worker panicked at step {step}: {what}")
+            }
+            TrainError::Checkpoint { reason } => write!(f, "checkpoint error: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for TrainError {}
+
+/// Stringify a panic payload (panics carry `&str` or `String` in
+/// practice; anything else is reported opaquely).
+pub(crate) fn panic_text(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn displays_name_the_failure() {
+        let e = TrainError::NonFinite { step: 7, output: "loss_pde".into(), value: f64::NAN };
+        let s = e.to_string();
+        assert!(s.contains("loss_pde") && s.contains("step 7"), "{s}");
+        let e = TrainError::WorkerPanic { step: 3, what: "boom".into() };
+        assert!(e.to_string().contains("boom"));
+    }
+
+    #[test]
+    fn downcasts_through_anyhow() {
+        let err: anyhow::Error =
+            TrainError::WorkerPanic { step: 2, what: "injected".into() }.into();
+        let got = err.downcast_ref::<TrainError>().expect("typed error survives anyhow");
+        assert!(matches!(got, TrainError::WorkerPanic { step: 2, .. }));
+    }
+}

@@ -35,6 +35,7 @@
 
 pub mod batch;
 pub mod checkpoint;
+pub mod error;
 pub mod fields;
 pub mod native;
 pub mod params;

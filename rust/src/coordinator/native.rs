@@ -51,20 +51,24 @@
 use crate::autodiff::zcs_demo::Strategy;
 use crate::autodiff::{Executor, NodeId, ProfileReport, Program, SchedMode, UpdateRule};
 use crate::coordinator::batch::{PdeBatch, PdeBatchSpec, PdeBatcher};
+use crate::coordinator::checkpoint::{self, CheckpointMeta, TrainCheckpoint};
+use crate::coordinator::error::{panic_text, TrainError};
 use crate::coordinator::replica::ReplicaSet;
 use crate::hlostats::{analyze_program, ProgramReport};
 use crate::pde::residual::{
     build_forward, build_training_problem, init_problem_weights, BlockSizes, NetDims,
 };
 use crate::pde::ProblemKind;
-use crate::rng::Pcg64;
+use crate::rng::{Pcg64, Pcg64Snapshot};
 use crate::sampler::{FunctionBank, GpSampler1d};
 use crate::solvers::{BurgersSolver, KirchhoffSolver, ReactionDiffusionSolver};
 use crate::tensor::simd::{SimdLevel, SimdMode};
 use crate::tensor::Tensor;
-use anyhow::{anyhow, bail, ensure, Result};
+use crate::util::env::{env_fault, FaultCell, FaultKind};
+use anyhow::{anyhow, ensure, Context, Result};
 use std::collections::HashMap;
-use std::sync::{Condvar, Mutex};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// The optimizer a native run applies each step.
@@ -165,6 +169,19 @@ pub struct NativeRunConfig {
     /// collect a per-opcode / per-wavefront wall-time profile
     /// ([`NativeReport::profile`]); zero overhead when off
     pub profile: bool,
+    /// write a v2 checkpoint every N completed steps (0 = off; requires
+    /// [`NativeRunConfig::checkpoint_path`])
+    pub checkpoint_every: usize,
+    /// where periodic and final v2 checkpoints go (atomic tmp + fsync +
+    /// rename); also the rollback target when a run dies mid-flight
+    pub checkpoint_path: Option<String>,
+    /// resume bit-exactly from a v2 checkpoint written by an identically
+    /// configured run (trajectory-determining fields are validated;
+    /// thread/replica/SIMD knobs may differ freely)
+    pub resume_from: Option<String>,
+    /// deterministic fault injector (tests pass a local cell here;
+    /// `None` falls back to the process-wide `ZCS_FAULT` cell)
+    pub fault: Option<Arc<FaultCell>>,
 }
 
 impl Default for NativeRunConfig {
@@ -192,6 +209,10 @@ impl Default for NativeRunConfig {
             simd: SimdMode::from_env(),
             pipeline: false,
             profile: false,
+            checkpoint_every: 0,
+            checkpoint_path: None,
+            resume_from: None,
+            fault: None,
         }
     }
 }
@@ -315,6 +336,9 @@ pub struct NativeTrainer {
     engine: Engine,
     coord_dim: usize,
     compile_time: Duration,
+    /// completed steps already in the restored state (0 on a fresh run);
+    /// [`NativeTrainer::run`] executes `start_step..steps`
+    start_step: usize,
 }
 
 /// The stepping machinery behind a [`NativeTrainer`]: one program over
@@ -352,6 +376,8 @@ struct SingleEngine {
     /// reusable per-step feed buffer (raw pointers so its capacity
     /// persists across steps; re-borrowed inside [`StepEngine::step`])
     feed_scratch: Vec<*const Tensor>,
+    /// deterministic fault injector shared with the executor
+    fault: Option<Arc<FaultCell>>,
 }
 
 impl SingleEngine {
@@ -410,6 +436,11 @@ impl SingleEngine {
         if config.profile {
             exec.enable_profiling();
         }
+        if let Some(cell) = &config.fault {
+            // resident NaN injection happens inside the executor's
+            // update pass; the fallback's happens in [`StepEngine::step`]
+            exec.arm_fault(Arc::clone(cell));
+        }
         let resident = config.resident;
         let (weights, moments) = if resident {
             exec.bind_states(&program, weights);
@@ -438,8 +469,73 @@ impl SingleEngine {
             extra_inputs: built.extra_inputs,
             feed_plan,
             feed_scratch: Vec::new(),
+            fault: config.fault.clone(),
         };
         Ok((engine, built.coord_dim, compile_time))
+    }
+
+    /// Snapshot the training state for a checkpoint: weights, Adam
+    /// `(m, v)` pairs (empty for SGD), and the optimizer timestep.
+    fn export_states(&self) -> (Vec<Tensor>, Vec<(Tensor, Tensor)>, u64) {
+        if self.resident {
+            let states = self.exec.states();
+            let weights = states[..self.n_weights].to_vec();
+            let mut moments = Vec::new();
+            if states.len() > self.n_weights {
+                for i in 0..self.n_weights {
+                    moments.push((
+                        states[self.n_weights + 2 * i].clone(),
+                        states[self.n_weights + 2 * i + 1].clone(),
+                    ));
+                }
+            }
+            (weights, moments, self.exec.opt_steps())
+        } else {
+            (self.weights.clone(), self.moments.clone(), self.host_t)
+        }
+    }
+
+    /// Restore a checkpointed training state (see
+    /// [`crate::coordinator::replica::ReplicaSet::restore_states`]).
+    fn restore_states(
+        &mut self,
+        weights: &[Tensor],
+        moments: &[(Tensor, Tensor)],
+        opt_t: u64,
+    ) -> Result<()> {
+        ensure!(
+            weights.len() == self.n_weights,
+            "checkpoint has {} weights, this problem has {}",
+            weights.len(),
+            self.n_weights
+        );
+        if self.resident {
+            // executor-resident layout: weights first, then interleaved
+            // (m, v) pairs in weight order
+            let mut full: Vec<Tensor> = weights.to_vec();
+            for (m, v) in moments {
+                full.push(m.clone());
+                full.push(v.clone());
+            }
+            ensure!(
+                full.len() == self.exec.states().len(),
+                "checkpoint carries {} state tensors, the program wants {}",
+                full.len(),
+                self.exec.states().len()
+            );
+            self.exec.restore_states(&full, opt_t);
+        } else {
+            ensure!(
+                moments.len() == self.moments.len(),
+                "checkpoint has {} adam moment pairs, this optimizer wants {}",
+                moments.len(),
+                self.moments.len()
+            );
+            self.weights = weights.to_vec();
+            self.moments = moments.to_vec();
+            self.host_t = opt_t;
+        }
+        Ok(())
     }
 
     /// Borrow the per-step stepping view (see [`NativeTrainer::split`]).
@@ -450,11 +546,13 @@ impl SingleEngine {
             weights,
             moments,
             host_t,
+            n_weights,
             resident,
             feeds,
             extra_inputs,
             feed_plan,
             feed_scratch,
+            fault,
             ..
         } = self;
         StepEngine {
@@ -463,6 +561,7 @@ impl SingleEngine {
             weights,
             moments,
             host_t,
+            n_weights: *n_weights,
             resident: *resident,
             lr,
             optimizer,
@@ -470,13 +569,23 @@ impl SingleEngine {
             extra_inputs: extra_inputs.as_slice(),
             feed_plan: feed_plan.as_slice(),
             feed_scratch,
+            fault: fault.clone(),
         }
     }
 }
 
 impl NativeTrainer {
     pub fn new(config: NativeRunConfig) -> Result<Self> {
+        let mut config = config;
         ensure!(config.m >= 1 && config.n >= 1 && config.q >= 1, "empty problem");
+        ensure!(
+            config.checkpoint_every == 0 || config.checkpoint_path.is_some(),
+            "checkpoint_every wants a checkpoint path"
+        );
+        if config.fault.is_none() {
+            // the process-wide ZCS_FAULT cell, unless a test armed its own
+            config.fault = env_fault();
+        }
         let mut batch_rng = Pcg64::new(config.seed, 1);
         let batcher = PdeBatcher::new(
             config.problem,
@@ -498,7 +607,97 @@ impl NativeTrainer {
             let (coord_dim, compile_time) = (set.coord_dim(), set.compile_time());
             (Engine::Replicated(set), coord_dim, compile_time)
         };
-        Ok(Self { config, batcher, engine, coord_dim, compile_time })
+        let mut trainer =
+            Self { config, batcher, engine, coord_dim, compile_time, start_step: 0 };
+        if let Some(path) = trainer.config.resume_from.clone() {
+            let ckpt = checkpoint::load_train(&path)?;
+            trainer
+                .restore_checkpoint(&ckpt)
+                .with_context(|| format!("resuming from {path:?}"))?;
+        }
+        Ok(trainer)
+    }
+
+    /// The trajectory-determining metadata of this run, as stored in (and
+    /// validated against) v2 checkpoints.
+    pub fn checkpoint_meta(&self) -> CheckpointMeta {
+        CheckpointMeta {
+            problem: self.config.problem.name(),
+            strategy: self.config.strategy.name().to_string(),
+            optimizer: self.config.optimizer.name().to_string(),
+            m: self.config.m as u64,
+            n: self.config.n as u64,
+            n_bc: self.config.n_bc as u64,
+            q: self.config.q as u64,
+            hidden: self.config.hidden as u64,
+            k: self.config.k as u64,
+            lr: self.config.lr,
+            seed: self.config.seed,
+            bank_size: self.config.bank_size as u64,
+            bank_grid: self.config.bank_grid as u64,
+            replicas: self.replicas() as u64,
+            threads: self.threads() as u64,
+            simd: self.simd_level().name().to_string(),
+        }
+    }
+
+    /// The resolved kernel SIMD level of the run's executor(s).
+    fn simd_level(&self) -> SimdLevel {
+        match &self.engine {
+            Engine::Single(e) => e.exec.simd(),
+            Engine::Replicated(r) => r.simd(),
+        }
+    }
+
+    /// Snapshot the full training state as a v2 checkpoint recording
+    /// `completed` finished steps.  The batcher's draw state is captured
+    /// as of the last batch drawn, so a resume generates exactly the
+    /// batches the uninterrupted run would have.
+    pub fn export_checkpoint(&self, completed: u64) -> TrainCheckpoint {
+        let (weights, moments, opt_t) = match &self.engine {
+            Engine::Single(e) => e.export_states(),
+            Engine::Replicated(r) => r.export_states(),
+        };
+        TrainCheckpoint {
+            meta: self.checkpoint_meta(),
+            step: completed,
+            opt_t,
+            rng: self.batcher.rng_snapshot(),
+            weights,
+            moments,
+        }
+    }
+
+    /// Restore a v2 checkpoint into the engine and batcher (meta is
+    /// validated field by field first), without touching the step window.
+    fn apply_checkpoint(&mut self, ckpt: &TrainCheckpoint) -> Result<()> {
+        ckpt.meta.validate(&self.checkpoint_meta()).map_err(anyhow::Error::from)?;
+        match &mut self.engine {
+            Engine::Single(e) => e.restore_states(&ckpt.weights, &ckpt.moments, ckpt.opt_t)?,
+            Engine::Replicated(r) => {
+                r.restore_states(&ckpt.weights, &ckpt.moments, ckpt.opt_t)?
+            }
+        }
+        self.batcher.rng_restore(&ckpt.rng);
+        Ok(())
+    }
+
+    /// Resume from a v2 checkpoint: validate the metadata, restore the
+    /// weights / moments / optimizer clock / batcher draw state, and make
+    /// [`NativeTrainer::run`] continue from the checkpointed step.  The
+    /// resumed trajectory is bit-identical to the uninterrupted run
+    /// (`rust/tests/checkpoint_resume.rs`).
+    pub fn restore_checkpoint(&mut self, ckpt: &TrainCheckpoint) -> Result<()> {
+        ensure!(
+            (ckpt.step as usize) < self.config.steps,
+            "checkpoint already has {} completed steps, the run is only {} steps; \
+             nothing to resume",
+            ckpt.step,
+            self.config.steps
+        );
+        self.apply_checkpoint(ckpt)?;
+        self.start_step = ckpt.step as usize;
+        Ok(())
     }
 
     /// Compiler statistics of the step program (the lead replica's, on a
@@ -611,12 +810,39 @@ impl NativeTrainer {
     /// `rust/tests/resident_step.rs`).  Fallback path: weights are fed per
     /// step and updated host-side with the same optimizer kernels.
     ///
-    /// A non-finite loss returns an error on both paths, but note the
-    /// asymmetry: the resident in-program update has run by the time the
-    /// loss is read back, so diverged state is already in the executor,
-    /// whereas the fallback bails before touching its host weights.
+    /// A non-finite loss returns a typed [`TrainError::NonFinite`] on
+    /// both paths, but note the asymmetry: the resident in-program update
+    /// has run by the time the loss is read back, so diverged state is
+    /// already in the executor, whereas the fallback bails before
+    /// touching its host weights.  A worker panic surfaces as
+    /// [`TrainError::WorkerPanic`] with the engine state untouched; an
+    /// injected panic (`ZCS_FAULT=panic:K`) is transparently retried
+    /// once, so trajectories under injection bit-match clean runs.
     pub fn step(&mut self, batch: &PdeBatch) -> Result<(f64, f64, f64)> {
-        self.split().0.step(batch)
+        let fault = self.config.fault.clone();
+        let (mut engine, _) = self.split();
+        step_with_retry(&mut engine, batch, fault.as_deref())
+    }
+
+    /// Snapshot (weights, moments, opt_t) from the engine.
+    fn export_states(&self) -> (Vec<Tensor>, Vec<(Tensor, Tensor)>, u64) {
+        match &self.engine {
+            Engine::Single(e) => e.export_states(),
+            Engine::Replicated(r) => r.export_states(),
+        }
+    }
+
+    /// Restore (weights, moments, opt_t) into the engine.
+    fn restore_states_raw(
+        &mut self,
+        weights: &[Tensor],
+        moments: &[(Tensor, Tensor)],
+        opt_t: u64,
+    ) -> Result<()> {
+        match &mut self.engine {
+            Engine::Single(e) => e.restore_states(weights, moments, opt_t),
+            Engine::Replicated(r) => r.restore_states(weights, moments, opt_t),
+        }
     }
 
     /// Split the trainer into the stepping engine and the batcher -- the
@@ -638,89 +864,207 @@ impl NativeTrainer {
     /// the identical batch sequence (one batcher, drawn in order, one
     /// batch ahead at most), so both modes produce bit-identical
     /// trajectories; `rust/tests/sched_exec.rs` pins this.
+    ///
+    /// Crash safety: with [`NativeRunConfig::checkpoint_path`] set, a v2
+    /// checkpoint is written atomically every
+    /// [`NativeRunConfig::checkpoint_every`] steps and once at the end;
+    /// if the run dies, the trainer's state is rolled back to the last
+    /// good on-disk checkpoint before the error is returned.  Injected
+    /// faults (`ZCS_FAULT`) are recovered transparently -- a panicked
+    /// step is retried (engine state is untouched by a panic), a NaN'd
+    /// gradient rolls back to an in-memory pre-fault snapshot -- and the
+    /// recovered trajectory bit-matches a fault-free run.
     pub fn run(&mut self) -> Result<NativeReport> {
+        match self.run_inner() {
+            Ok(report) => Ok(report),
+            Err(e) => {
+                // leave the trainer at the last good checkpoint rather
+                // than in the diverged / half-stepped state
+                if let Some(path) = self.config.checkpoint_path.clone() {
+                    if let Ok(ckpt) = checkpoint::load_train(&path) {
+                        if self.apply_checkpoint(&ckpt).is_ok() {
+                            self.start_step = (ckpt.step as usize).min(self.config.steps);
+                            return Err(e.context(format!(
+                                "training state rolled back to checkpoint {path:?} (step {})",
+                                ckpt.step
+                            )));
+                        }
+                    }
+                }
+                Err(e)
+            }
+        }
+    }
+
+    fn run_inner(&mut self) -> Result<NativeReport> {
         let steps = self.config.steps;
+        let start = self.start_step;
         let log_every = self.config.log_every.max(1);
-        let pipeline = self.config.pipeline;
-        let mut curve = Vec::new();
+        let fault = self.config.fault.clone();
+        let ckpt_every = self.config.checkpoint_every;
+        let ckpt_path = self.config.checkpoint_path.clone();
+        // a pending fault forces the synchronous loop: NaN rollback must
+        // rewind the batcher, which the pipelined producer cannot do.
+        // Determinism makes the switch invisible to the trajectory.
+        let pipeline = self.config.pipeline && !fault.as_ref().is_some_and(|c| c.armed());
+        let mut curve: Vec<NativePoint> = Vec::new();
         let mut input_time = Duration::ZERO;
         let mut step_time = Duration::ZERO;
         let mut last = (f64::NAN, f64::NAN, f64::NAN);
-        {
-            let (mut engine, batcher) = self.split();
-            let log = |curve: &mut Vec<NativePoint>, it: usize, last: (f64, f64, f64)| {
-                if (it + 1) % log_every == 0 || it + 1 == steps {
-                    curve.push(NativePoint {
-                        step: it + 1,
-                        loss: last.0,
-                        loss_pde: last.1,
-                        loss_bc: last.2,
-                    });
+        let log = |curve: &mut Vec<NativePoint>, it: usize, last: (f64, f64, f64)| {
+            if (it + 1) % log_every == 0 || it + 1 == steps {
+                curve.push(NativePoint {
+                    step: it + 1,
+                    loss: last.0,
+                    loss_pde: last.1,
+                    loss_bc: last.2,
+                });
+            }
+        };
+        if !pipeline {
+            // one batch's buffers, refilled in place every step
+            let mut batch = PdeBatch::empty();
+            // pre-step snapshot for transparent NaN recovery, refreshed
+            // while the injected fault is still pending
+            let mut rollback: Option<(
+                usize,
+                Vec<Tensor>,
+                Vec<(Tensor, Tensor)>,
+                u64,
+                Pcg64Snapshot,
+            )> = None;
+            let mut it = start;
+            while it < steps {
+                if fault
+                    .as_ref()
+                    .is_some_and(|c| c.armed() && c.spec().kind == FaultKind::NanGrad)
+                {
+                    let (w, m, t) = self.export_states();
+                    rollback = Some((it, w, m, t, self.batcher.rng_snapshot()));
                 }
-            };
-            if !pipeline {
-                // one batch's buffers, refilled in place every step
-                let mut batch = PdeBatch::empty();
-                for it in 0..steps {
-                    let t0 = Instant::now();
-                    batcher.fill_batch(&mut batch);
-                    input_time += t0.elapsed();
-                    let t1 = Instant::now();
-                    last = engine.step(&batch)?;
-                    step_time += t1.elapsed();
-                    log(&mut curve, it, last);
-                }
-            } else {
-                // double-buffered producer: two batches circulate, the
-                // producer fills draw t+1 while the engine steps draw t
-                let pipe = BatchPipe::new();
-                input_time = std::thread::scope(|s| -> Result<Duration> {
-                    // either side dying for any reason -- error return or
-                    // panic -- must close the pipe, or the other side
-                    // would block forever and the scope join would hang
-                    let _consumer_guard = PipeCloser(&pipe);
-                    let producer = s.spawn(|| {
-                        let _guard = PipeCloser(&pipe);
-                        let mut fill_time = Duration::ZERO;
-                        let mut batch = PdeBatch::empty();
-                        for _ in 0..steps {
-                            let t0 = Instant::now();
-                            batcher.fill_batch(&mut batch);
-                            fill_time += t0.elapsed();
-                            match pipe.exchange(batch) {
-                                Some(next) => batch = next,
-                                None => break, // consumer closed early
+                let t0 = Instant::now();
+                self.batcher.fill_batch(&mut batch);
+                input_time += t0.elapsed();
+                let t1 = Instant::now();
+                let stepped = {
+                    let (mut engine, _) = self.split();
+                    step_with_retry(&mut engine, &batch, fault.as_deref())
+                };
+                match stepped {
+                    Ok(l) => last = l,
+                    Err(e) => {
+                        // transparent recovery from the injected NaN:
+                        // restore the pre-fault snapshot (weights,
+                        // moments, optimizer clock, batcher draw state)
+                        // and re-run -- the recovered trajectory
+                        // bit-matches a fault-free run
+                        let injected_nan = fault.as_ref().is_some_and(|c| {
+                            c.spec().kind == FaultKind::NanGrad
+                                && e.downcast_ref::<TrainError>()
+                                    .is_some_and(|te| matches!(te, TrainError::NonFinite { .. }))
+                                && c.begin_recovery()
+                        });
+                        if injected_nan {
+                            if let Some((rit, w, m, t, rng)) = rollback.take() {
+                                self.restore_states_raw(&w, &m, t)?;
+                                self.batcher.rng_restore(&rng);
+                                curve.retain(|p| p.step <= rit);
+                                it = rit;
+                                continue;
                             }
                         }
-                        fill_time
-                    });
-                    let mut consumed: Result<()> = Ok(());
-                    for it in 0..steps {
-                        let Some(batch) = pipe.take() else {
-                            consumed = Err(anyhow!("batch producer stopped early"));
+                        return Err(e);
+                    }
+                }
+                step_time += t1.elapsed();
+                log(&mut curve, it, last);
+                it += 1;
+                if let Some(path) = &ckpt_path {
+                    if ckpt_every > 0 && it % ckpt_every == 0 && it < steps {
+                        let ckpt = self.export_checkpoint(it as u64);
+                        checkpoint::save_train(path, &ckpt, fault.as_deref())?;
+                    }
+                }
+            }
+        } else {
+            // double-buffered producer: two batches circulate, the
+            // producer fills draw t+1 while the engine steps draw t
+            let meta = self.checkpoint_meta();
+            let (mut engine, batcher) = self.split();
+            let pipe = BatchPipe::new();
+            input_time = std::thread::scope(|s| -> Result<Duration> {
+                // either side dying for any reason -- error return or
+                // panic -- must close the pipe, or the other side
+                // would block forever and the scope join would hang
+                let _consumer_guard = PipeCloser(&pipe);
+                let producer = s.spawn(|| {
+                    let _guard = PipeCloser(&pipe);
+                    let mut fill_time = Duration::ZERO;
+                    let mut batch = PdeBatch::empty();
+                    for _ in start..steps {
+                        let t0 = Instant::now();
+                        batcher.fill_batch(&mut batch);
+                        fill_time += t0.elapsed();
+                        // the post-draw snapshot travels with its batch:
+                        // a checkpoint taken after stepping batch t
+                        // resumes by drawing batch t+1
+                        let snap = batcher.rng_snapshot();
+                        match pipe.exchange(batch, snap) {
+                            Some(next) => batch = next,
+                            None => break, // consumer closed early
+                        }
+                    }
+                    fill_time
+                });
+                let mut consumed: Result<()> = Ok(());
+                for it in start..steps {
+                    let Some((batch, rng_snap)) = pipe.take() else {
+                        consumed = Err(anyhow!("batch producer stopped early"));
+                        break;
+                    };
+                    let t1 = Instant::now();
+                    match step_with_retry(&mut engine, &batch, fault.as_deref()) {
+                        Ok(losses) => last = losses,
+                        Err(e) => {
+                            consumed = Err(e);
                             break;
-                        };
-                        let t1 = Instant::now();
-                        match engine.step(&batch) {
-                            Ok(losses) => last = losses,
-                            Err(e) => {
+                        }
+                    }
+                    step_time += t1.elapsed();
+                    pipe.recycle(batch);
+                    log(&mut curve, it, last);
+                    if let Some(path) = &ckpt_path {
+                        if ckpt_every > 0 && (it + 1) % ckpt_every == 0 && it + 1 < steps {
+                            let (weights, moments, opt_t) = engine.export_states();
+                            let ckpt = TrainCheckpoint {
+                                meta: meta.clone(),
+                                step: (it + 1) as u64,
+                                opt_t,
+                                rng: rng_snap,
+                                weights,
+                                moments,
+                            };
+                            if let Err(e) = checkpoint::save_train(path, &ckpt, fault.as_deref())
+                            {
                                 consumed = Err(e);
                                 break;
                             }
                         }
-                        step_time += t1.elapsed();
-                        pipe.recycle(batch);
-                        log(&mut curve, it, last);
                     }
-                    // unblock the producer whether we finished or errored
-                    pipe.close();
-                    let fill_time = producer
-                        .join()
-                        .map_err(|_| anyhow!("batch producer thread panicked"))?;
-                    consumed?;
-                    Ok(fill_time)
-                })?;
-            }
+                }
+                // unblock the producer whether we finished or errored
+                pipe.close();
+                let fill_time = producer
+                    .join()
+                    .map_err(|_| anyhow!("batch producer thread panicked"))?;
+                consumed?;
+                Ok(fill_time)
+            })?;
+        }
+        // final checkpoint: a finished run is itself a resumable state
+        if let Some(path) = &ckpt_path {
+            let ckpt = self.export_checkpoint(steps as u64);
+            checkpoint::save_train(path, &ckpt, fault.as_deref())?;
         }
         let (schedule, simd, profile, replica_profiles) = match &mut self.engine {
             Engine::Single(e) => (e.exec.sched(), e.exec.simd(), e.exec.take_profile(), Vec::new()),
@@ -731,7 +1075,7 @@ impl NativeTrainer {
         Ok(NativeReport {
             curve,
             final_loss: last.0,
-            steps,
+            steps: steps - start,
             input_time,
             step_time,
             compile_time: self.compile_time,
@@ -740,7 +1084,7 @@ impl NativeTrainer {
             resident_state_bytes: self.resident_state_bytes(),
             schedule,
             simd,
-            pipelined: pipeline,
+            pipelined: self.config.pipeline,
             replicas: self.replicas(),
             lanes: self.lanes(),
             profile,
@@ -854,6 +1198,44 @@ impl StepRef<'_> {
             StepRef::Replicated(r) => r.step(batch),
         }
     }
+
+    /// Snapshot (weights, Adam moments, optimizer step count) for a
+    /// checkpoint, without giving up the split borrow (the pipelined run
+    /// holds the batcher on another thread while saving).
+    fn export_states(&self) -> (Vec<Tensor>, Vec<(Tensor, Tensor)>, u64) {
+        match self {
+            StepRef::Single(e) => e.export_states(),
+            StepRef::Replicated(r) => r.export_states(),
+        }
+    }
+}
+
+/// Step once, transparently retrying after an *injected* worker panic.
+///
+/// A panic unwinds out of a step before the optimizer clock ticks or any
+/// weight update commits, so the engine is exactly as it was before the
+/// attempt and re-running the same batch is bit-exact.  Exactly one retry
+/// is granted per injected fault ([`FaultCell::begin_recovery`]); real
+/// panics and non-injected errors propagate untouched.
+fn step_with_retry(
+    engine: &mut StepRef<'_>,
+    batch: &PdeBatch,
+    fault: Option<&FaultCell>,
+) -> Result<(f64, f64, f64)> {
+    match engine.step(batch) {
+        Err(e) if is_injected_panic(fault, &e) => engine.step(batch),
+        r => r,
+    }
+}
+
+/// True iff `e` is the worker panic we injected ourselves and its one
+/// recovery attempt has not been spent yet.
+fn is_injected_panic(fault: Option<&FaultCell>, e: &anyhow::Error) -> bool {
+    let Some(cell) = fault else { return false };
+    cell.spec().kind == FaultKind::Panic
+        && e.downcast_ref::<TrainError>()
+            .is_some_and(|te| matches!(te, TrainError::WorkerPanic { .. }))
+        && cell.begin_recovery()
 }
 
 /// The single-program stepping view: everything an `m == 1` step needs
@@ -864,6 +1246,7 @@ struct StepEngine<'a> {
     weights: &'a mut Vec<Tensor>,
     moments: &'a mut Vec<(Tensor, Tensor)>,
     host_t: &'a mut u64,
+    n_weights: usize,
     resident: bool,
     lr: f64,
     optimizer: Optimizer,
@@ -871,6 +1254,7 @@ struct StepEngine<'a> {
     extra_inputs: &'a [(NodeId, Tensor)],
     feed_plan: &'a [FeedSrc],
     feed_scratch: &'a mut Vec<*const Tensor>,
+    fault: Option<Arc<FaultCell>>,
 }
 
 impl StepEngine<'_> {
@@ -909,29 +1293,95 @@ impl StepEngine<'_> {
             };
             scratch.push(t as *const Tensor);
         }
-        let (loss, loss_pde, loss_bc, grads) = {
-            // SAFETY: `&Tensor` and `*const Tensor` have identical layout;
-            // every pointee (host weights, batch tensors, extras) outlives
-            // this block and none is mutated while borrowed -- the
-            // executor's resident state is disjoint from the feeds
-            let ins: &[&Tensor] = unsafe {
-                std::slice::from_raw_parts(scratch.as_ptr() as *const &Tensor, scratch.len())
-            };
-            if self.resident {
-                let mut out = [0.0f64; 3];
-                self.exec.run_scalars(self.program, ins, &mut out);
-                (out[0], out[1], out[2], Vec::new())
-            } else {
-                let mut outs = self.exec.run_inputs(self.program, ins);
-                let grads = outs.split_off(3);
-                (outs[0].data()[0], outs[1].data()[0], outs[2].data()[0], grads)
+        // 1-based step this call executes: the resident optimizer clock
+        // (pre-increment) or the host timestep
+        let step_no =
+            if self.resident { self.exec.opt_steps() + 1 } else { *self.host_t + 1 };
+        let (loss, loss_pde, loss_bc, mut grads) = {
+            let scratch_ro: &Vec<*const Tensor> = scratch;
+            let exec = &mut *self.exec;
+            let program = self.program;
+            let resident = self.resident;
+            let fault = self.fault.clone();
+            // catch a panicking kernel worker (or the injected fault):
+            // the engine's state is untouched -- resident updates commit
+            // only at the very end of a successful execute -- so the
+            // caller may simply retry the step
+            let outcome = catch_unwind(AssertUnwindSafe(move || {
+                if let Some(cell) = &fault {
+                    if cell.should_fire(FaultKind::Panic, step_no) {
+                        panic!("zcs injected fault: step panic at step {step_no}");
+                    }
+                }
+                // SAFETY: `&Tensor` and `*const Tensor` have identical
+                // layout; every pointee (host weights, batch tensors,
+                // extras) outlives this block and none is mutated while
+                // borrowed -- the executor's resident state is disjoint
+                // from the feeds
+                let ins: &[&Tensor] = unsafe {
+                    std::slice::from_raw_parts(
+                        scratch_ro.as_ptr() as *const &Tensor,
+                        scratch_ro.len(),
+                    )
+                };
+                if resident {
+                    let mut out = [0.0f64; 3];
+                    exec.run_scalars(program, ins, &mut out);
+                    (out[0], out[1], out[2], Vec::new())
+                } else {
+                    let mut outs = exec.run_inputs(program, ins);
+                    let grads = outs.split_off(3);
+                    (outs[0].data()[0], outs[1].data()[0], outs[2].data()[0], grads)
+                }
+            }));
+            match outcome {
+                Ok(v) => v,
+                Err(payload) => {
+                    self.feed_scratch.clear();
+                    return Err(TrainError::WorkerPanic {
+                        step: step_no,
+                        what: panic_text(payload),
+                    }
+                    .into());
+                }
             }
         };
         self.feed_scratch.clear();
-        if !loss.is_finite() {
-            bail!("native loss diverged: {loss}");
+        for (name, v) in
+            ["loss", "loss_pde", "loss_bc"].into_iter().zip([loss, loss_pde, loss_bc])
+        {
+            if !v.is_finite() {
+                return Err(TrainError::NonFinite {
+                    step: step_no,
+                    output: name.to_string(),
+                    value: v,
+                }
+                .into());
+            }
         }
         if !self.resident {
+            if let Some(cell) = &self.fault {
+                // fallback NaN injection: poison the first weight
+                // gradient before the guard, mirroring the resident
+                // executor's in-update injection
+                if cell.should_fire(FaultKind::NanGrad, step_no) {
+                    if let Some(g) = grads.first_mut() {
+                        g.data_mut().fill(f64::NAN);
+                    }
+                }
+            }
+            // non-finite gradient guard: refuse to commit a poisoned
+            // update, leaving the host weights exactly as they were
+            for (i, gw) in grads.iter().take(self.n_weights).enumerate() {
+                if let Some(&bad) = gw.data().iter().find(|v| !v.is_finite()) {
+                    return Err(TrainError::NonFinite {
+                        step: step_no,
+                        output: format!("grad[{i}]"),
+                        value: bad,
+                    }
+                    .into());
+                }
+            }
             // host-side update through the same kernels the resident
             // update instructions run -- no `gw.scale(lr)` temporary
             *self.host_t += 1;
@@ -963,6 +1413,31 @@ impl StepEngine<'_> {
         }
         Ok((loss, loss_pde, loss_bc))
     }
+
+    /// Snapshot (weights, Adam moments, optimizer step count) for a
+    /// checkpoint; mirrors [`SingleEngine::export_states`] on the
+    /// borrowed stepping view.
+    fn export_states(&self) -> (Vec<Tensor>, Vec<(Tensor, Tensor)>, u64) {
+        if self.resident {
+            let states = self.exec.states();
+            let weights: Vec<Tensor> = states[..self.n_weights].to_vec();
+            let moments = if states.len() > self.n_weights {
+                (0..self.n_weights)
+                    .map(|i| {
+                        (
+                            states[self.n_weights + 2 * i].clone(),
+                            states[self.n_weights + 2 * i + 1].clone(),
+                        )
+                    })
+                    .collect()
+            } else {
+                Vec::new()
+            };
+            (weights, moments, self.exec.opt_steps())
+        } else {
+            (self.weights.clone(), self.moments.clone(), *self.host_t)
+        }
+    }
 }
 
 /// Rendezvous double-buffer between the batch producer thread and the
@@ -986,8 +1461,10 @@ impl Drop for PipeCloser<'_> {
 }
 
 struct PipeState {
-    /// the next filled batch, in draw order
-    full: Option<PdeBatch>,
+    /// the next filled batch, in draw order, paired with the batcher's
+    /// post-draw rng snapshot (what a checkpoint taken after stepping
+    /// this batch must record to draw the next one on resume)
+    full: Option<(PdeBatch, Pcg64Snapshot)>,
     /// a consumed batch handed back for refilling (seeded with the spare
     /// buffer so the producer starts one draw ahead)
     empty: Option<PdeBatch>,
@@ -1007,9 +1484,10 @@ impl BatchPipe {
         }
     }
 
-    /// Producer: hand over a filled batch and receive a buffer to refill;
-    /// `None` once the consumer has closed the pipe.
-    fn exchange(&self, filled: PdeBatch) -> Option<PdeBatch> {
+    /// Producer: hand over a filled batch (plus the post-draw rng
+    /// snapshot) and receive a buffer to refill; `None` once the consumer
+    /// has closed the pipe.
+    fn exchange(&self, filled: PdeBatch, snap: Pcg64Snapshot) -> Option<PdeBatch> {
         let mut st = self.state.lock().unwrap();
         while st.full.is_some() && !st.closed {
             st = self.cv.wait(st).unwrap();
@@ -1017,7 +1495,7 @@ impl BatchPipe {
         if st.closed {
             return None;
         }
-        st.full = Some(filled);
+        st.full = Some((filled, snap));
         self.cv.notify_all();
         while st.empty.is_none() && !st.closed {
             st = self.cv.wait(st).unwrap();
@@ -1030,7 +1508,7 @@ impl BatchPipe {
 
     /// Consumer: the next batch in draw order; `None` if the producer
     /// hung up before delivering one.
-    fn take(&self) -> Option<PdeBatch> {
+    fn take(&self) -> Option<(PdeBatch, Pcg64Snapshot)> {
         let mut st = self.state.lock().unwrap();
         loop {
             if let Some(b) = st.full.take() {

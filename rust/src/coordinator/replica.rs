@@ -32,8 +32,11 @@
 //!
 //! [`lane_count`]: crate::pde::residual::lane_count
 
-use crate::autodiff::{Executor, NodeId, ProfileReport, Program, ReplicaComm, SchedMode};
+use crate::autodiff::{
+    Executor, NodeId, ProfileReport, Program, ReplicaComm, SchedMode, BARRIER_POISON_MSG,
+};
 use crate::coordinator::batch::PdeBatch;
+use crate::coordinator::error::{panic_text, TrainError};
 use crate::coordinator::native::{NativeRunConfig, Optimizer};
 use crate::hlostats::{analyze_program, ProgramReport};
 use crate::pde::residual::{
@@ -42,8 +45,10 @@ use crate::pde::residual::{
 use crate::tensor::kernels;
 use crate::tensor::simd::SimdLevel;
 use crate::tensor::Tensor;
-use anyhow::{anyhow, bail, ensure, Result};
+use crate::util::env::{FaultCell, FaultKind};
+use anyhow::{anyhow, ensure, Result};
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -84,6 +89,10 @@ struct ReplicaEngine {
     extras: Vec<Tensor>,
     /// lane-major `[loss, loss_pde, loss_bc]` readback, 3 per local lane
     losses: Vec<f64>,
+    /// injected-panic fault, armed on the set's last replica only
+    fault: Option<Arc<FaultCell>>,
+    /// resident steps this engine has run (the injected fault's clock)
+    local_step: u64,
 }
 
 // SAFETY: the only non-`Send` fields are raw-pointer scratch buffers --
@@ -120,6 +129,12 @@ impl ReplicaEngine {
     /// group barriers inside the `grad-allreduce` instructions until
     /// every replica has folded, leaving the lane losses in `self.losses`.
     fn step_resident(&mut self) {
+        self.local_step += 1;
+        if let Some(cell) = &self.fault {
+            if cell.should_fire(FaultKind::Panic, self.local_step) {
+                panic!("zcs injected fault: replica worker panic at step {}", self.local_step);
+            }
+        }
         self.feed_refs(&[]);
         // SAFETY: `&Tensor` and `*const Tensor` have identical layout;
         // every pointee (shards, extras) lives in `self`, outlives this
@@ -166,6 +181,8 @@ struct SlotState {
     cmd: Cmd,
     /// the last commanded step has finished and `engine` is parked again
     done: bool,
+    /// the last commanded step panicked; payload text for the lead
+    panicked: Option<String>,
 }
 
 /// Mailbox through which the training thread commands one helper-driven
@@ -177,6 +194,16 @@ struct ReplicaSlot {
 
 /// Helper-thread loop: wait for a step command, run it (blocking at the
 /// group barriers with the other replicas), park the engine again.
+///
+/// Panic safety: the step runs under `catch_unwind`, so a dying replica
+/// (1) poisons the group barrier -- waking every peer blocked in the
+/// gradient all-reduce instead of deadlocking them -- and (2) parks its
+/// engine with `panicked` set, so the lead surfaces a typed
+/// [`TrainError::WorkerPanic`] after the whole group has unwound.  The
+/// driver thread itself survives and keeps serving commands: a panicking
+/// step leaves the resident state untouched (the in-Program optimizer
+/// updates run strictly after the all-reduce barriers), so the step can
+/// simply be retried.
 fn replica_driver(slot: &ReplicaSlot) {
     loop {
         let mut engine = {
@@ -191,9 +218,16 @@ fn replica_driver(slot: &ReplicaSlot) {
             st.cmd = Cmd::Idle;
             st.engine.take().expect("replica engine missing at step")
         };
-        engine.step_resident();
+        let outcome = catch_unwind(AssertUnwindSafe(|| engine.step_resident()));
+        let panicked = outcome.err().map(|payload| {
+            // wake peers blocked at the all-reduce before parking
+            engine.feed_scratch.clear();
+            engine.exec.poison_comm();
+            panic_text(payload)
+        });
         let mut st = slot.state.lock().unwrap();
         st.engine = Some(engine);
+        st.panicked = panicked;
         st.done = true;
         slot.cv.notify_all();
     }
@@ -211,6 +245,11 @@ pub struct ReplicaSet {
     /// replicas 1.., each parked behind its driver thread's mailbox
     others: Vec<Arc<ReplicaSlot>>,
     drivers: Vec<JoinHandle<()>>,
+    /// the group's gradient-reduce channel (None when single-replica);
+    /// held so a poisoned barrier can be reset between steps
+    comm: Option<Arc<ReplicaComm>>,
+    /// deterministic fault injector shared with the engines
+    fault: Option<Arc<FaultCell>>,
     n_lanes: usize,
     n_replicas: usize,
     n_weights: usize,
@@ -323,6 +362,13 @@ impl ReplicaSet {
             if config.profile {
                 exec.enable_profiling();
             }
+            if r == 0 {
+                // NaN injection is armed on the lead only, so exactly one
+                // deterministic executor poisons its gradient
+                if let Some(cell) = &config.fault {
+                    exec.arm_fault(Arc::clone(cell));
+                }
+            }
             if config.resident {
                 exec.bind_states(&program, weights);
             } else {
@@ -351,6 +397,10 @@ impl ReplicaSet {
                 feed_scratch: Vec::new(),
                 extras,
                 losses,
+                // the *last* replica carries the injected panic, so a
+                // multi-replica set exercises the helper-thread unwind
+                fault: if r + 1 == n_replicas { config.fault.clone() } else { None },
+                local_step: 0,
             });
         }
         let compile_time = t0.elapsed();
@@ -374,7 +424,12 @@ impl ReplicaSet {
         let mut drivers = Vec::new();
         for (i, engine) in engines.enumerate() {
             let slot = Arc::new(ReplicaSlot {
-                state: Mutex::new(SlotState { engine: Some(engine), cmd: Cmd::Idle, done: false }),
+                state: Mutex::new(SlotState {
+                    engine: Some(engine),
+                    cmd: Cmd::Idle,
+                    done: false,
+                    panicked: None,
+                }),
                 cv: Condvar::new(),
             });
             let driven = Arc::clone(&slot);
@@ -389,6 +444,8 @@ impl ReplicaSet {
             lead,
             others,
             drivers,
+            comm,
+            fault: config.fault.clone(),
             n_lanes,
             n_replicas,
             n_weights,
@@ -418,31 +475,67 @@ impl ReplicaSet {
     /// As on the single-program path, a non-finite loss errors *after*
     /// the resident in-program update has run but *before* the fallback
     /// touches its host weights.
+    ///
+    /// Panic safety: a panicking replica poisons the gradient-reduce
+    /// barrier, every peer unwinds out of its own step (caught, engines
+    /// parked), and the lead returns a typed
+    /// [`TrainError::WorkerPanic`] carrying the root-cause payload.  No
+    /// resident state was modified (the in-Program updates run after the
+    /// barriers), so the very next [`ReplicaSet::step`] call retries
+    /// cleanly on a reset barrier.
     pub fn step(&mut self, batch: &PdeBatch) -> Result<(f64, f64, f64)> {
         if !self.resident {
             return self.step_fallback(batch);
+        }
+        let step_no = self.lead.exec.opt_steps() + 1;
+        if let Some(comm) = &self.comm {
+            // every driver is parked between steps, so resetting a
+            // poisoned barrier here is race-free
+            comm.clear_poison();
         }
         for slot in &self.others {
             let mut st = slot.state.lock().unwrap();
             let engine = st.engine.as_mut().expect("replica engine parked");
             engine.fill(batch);
             st.done = false;
+            st.panicked = None;
             st.cmd = Cmd::Step;
             drop(st);
             slot.cv.notify_all();
         }
         self.lead.fill(batch);
-        self.lead.step_resident();
+        let lead = &mut self.lead;
+        let lead_panic = catch_unwind(AssertUnwindSafe(|| lead.step_resident()))
+            .err()
+            .map(|payload| {
+                lead.feed_scratch.clear();
+                lead.exec.poison_comm();
+                panic_text(payload)
+            });
         stash_losses(&mut self.lane_losses, &self.lead);
+        let mut panics: Vec<String> = lead_panic.into_iter().collect();
         for slot in &self.others {
             let mut st = slot.state.lock().unwrap();
             while !st.done {
                 st = slot.cv.wait(st).unwrap();
             }
+            if let Some(what) = st.panicked.take() {
+                panics.push(what);
+            }
             let engine = st.engine.as_ref().expect("replica engine parked");
             stash_losses(&mut self.lane_losses, engine);
         }
-        self.fold_losses()
+        if !panics.is_empty() {
+            // the root cause is whichever thread died first; peers that
+            // merely unwound from the poisoned barrier are secondary
+            let what = panics
+                .iter()
+                .find(|p| !p.contains(BARRIER_POISON_MSG))
+                .unwrap_or(&panics[0])
+                .clone();
+            return Err(TrainError::WorkerPanic { step: step_no, what }.into());
+        }
+        self.fold_losses(step_no)
     }
 
     /// Feed-based single-replica step: run the lane program with host
@@ -450,14 +543,47 @@ impl ReplicaSet {
     /// exact fold the in-Program all-reduce performs), update host-side.
     fn step_fallback(&mut self, batch: &PdeBatch) -> Result<(f64, f64, f64)> {
         debug_assert_eq!(self.n_replicas, 1, "the fallback owns every lane");
-        self.lead.fill(batch);
-        let outs = self.lead.step_fallback(&self.host_weights);
+        let step_no = self.host_t + 1;
+        let mut outs = {
+            let lead = &mut self.lead;
+            let weights = &self.host_weights;
+            let fault = self.fault.clone();
+            let outcome = catch_unwind(AssertUnwindSafe(|| {
+                if let Some(cell) = &fault {
+                    if cell.should_fire(FaultKind::Panic, step_no) {
+                        panic!("zcs injected fault: fallback step panic at step {step_no}");
+                    }
+                }
+                lead.fill(batch);
+                lead.step_fallback(weights)
+            }));
+            match outcome {
+                Ok(outs) => outs,
+                Err(payload) => {
+                    lead.feed_scratch.clear();
+                    return Err(TrainError::WorkerPanic {
+                        step: step_no,
+                        what: panic_text(payload),
+                    }
+                    .into());
+                }
+            }
+        };
         let kl = self.lead.local_lanes.len();
         for (k, &lane) in self.lead.local_lanes.iter().enumerate() {
             let ls = &outs[3 * k..3 * k + 3];
             self.lane_losses[lane] = [ls[0].data()[0], ls[1].data()[0], ls[2].data()[0]];
         }
-        let folded = self.fold_losses()?;
+        let folded = self.fold_losses(step_no)?;
+        if let Some(cell) = &self.fault {
+            // fallback NaN injection: poison the first lane gradient
+            // before the fold so the guard below trips
+            if cell.should_fire(FaultKind::NanGrad, step_no) {
+                if let Some(g) = outs.get_mut(3 * kl) {
+                    g.data_mut().fill(f64::NAN);
+                }
+            }
+        }
         // copy lane 0's gradient, then axpy each higher lane in ascending
         // order -- multiply-then-add, bit-identical to the resident reduce
         for (w, acc) in self.grad_scratch.iter_mut().enumerate() {
@@ -465,6 +591,18 @@ impl ReplicaSet {
             acc.reset(outs[base].shape()).copy_from_slice(outs[base].data());
             for g in &outs[base + 1..base + kl] {
                 kernels::axpy_accumulate(acc, g, 1.0);
+            }
+        }
+        // non-finite gradient guard: refuse to commit a poisoned update,
+        // leaving the host weights exactly as they were
+        for (w, acc) in self.grad_scratch.iter().enumerate() {
+            if let Some(&bad) = acc.data().iter().find(|v| !v.is_finite()) {
+                return Err(TrainError::NonFinite {
+                    step: step_no,
+                    output: format!("grad[{w}]"),
+                    value: bad,
+                }
+                .into());
             }
         }
         self.host_t += 1;
@@ -498,16 +636,22 @@ impl ReplicaSet {
         Ok(folded)
     }
 
-    /// Fold the staged per-lane losses in ascending lane order.
-    fn fold_losses(&self) -> Result<(f64, f64, f64)> {
+    /// Fold the staged per-lane losses in ascending lane order.  A
+    /// non-finite component yields a typed [`TrainError::NonFinite`]
+    /// naming the output, so divergence reports point at the physics.
+    fn fold_losses(&self, step: u64) -> Result<(f64, f64, f64)> {
         let mut total = [0.0f64; 3];
         for lane in &self.lane_losses {
             for (t, v) in total.iter_mut().zip(lane) {
                 *t += v;
             }
         }
-        if !total[0].is_finite() {
-            bail!("native loss diverged: {}", total[0]);
+        for (name, v) in ["loss", "loss_pde", "loss_bc"].into_iter().zip(total) {
+            if !v.is_finite() {
+                return Err(
+                    TrainError::NonFinite { step, output: name.to_string(), value: v }.into()
+                );
+            }
         }
         Ok((total[0], total[1], total[2]))
     }
@@ -521,6 +665,74 @@ impl ReplicaSet {
         } else {
             &self.host_weights
         }
+    }
+
+    /// Snapshot the training state for a checkpoint: the weight tensors,
+    /// the per-weight Adam `(m, v)` pairs (empty for SGD), and the
+    /// optimizer timestep.  Resident state is read from the lead replica
+    /// -- every replica holds the identical bits, so the lead speaks for
+    /// the group.
+    pub fn export_states(&self) -> (Vec<Tensor>, Vec<(Tensor, Tensor)>, u64) {
+        if self.resident {
+            let states = self.lead.exec.states();
+            let weights = states[..self.n_weights].to_vec();
+            let mut moments = Vec::new();
+            if self.optimizer == Optimizer::Adam {
+                for i in 0..self.n_weights {
+                    moments.push((
+                        states[self.n_weights + 2 * i].clone(),
+                        states[self.n_weights + 2 * i + 1].clone(),
+                    ));
+                }
+            }
+            (weights, moments, self.lead.exec.opt_steps())
+        } else {
+            (self.host_weights.clone(), self.host_moments.clone(), self.host_t)
+        }
+    }
+
+    /// Restore a checkpointed training state into every replica (or the
+    /// host copies, on the fallback path): the subsequent trajectory is
+    /// bit-identical to the run that wrote the snapshot.
+    pub fn restore_states(
+        &mut self,
+        weights: &[Tensor],
+        moments: &[(Tensor, Tensor)],
+        opt_t: u64,
+    ) -> Result<()> {
+        ensure!(
+            weights.len() == self.n_weights,
+            "checkpoint has {} weights, this problem has {}",
+            weights.len(),
+            self.n_weights
+        );
+        let want_moments = if self.optimizer == Optimizer::Adam { self.n_weights } else { 0 };
+        ensure!(
+            moments.len() == want_moments,
+            "checkpoint has {} adam moment pairs, this optimizer wants {}",
+            moments.len(),
+            want_moments
+        );
+        if self.resident {
+            // rebuild the executor-resident layout: weights first, then
+            // interleaved (m, v) pairs in weight order
+            let mut full: Vec<Tensor> = weights.to_vec();
+            for (m, v) in moments {
+                full.push(m.clone());
+                full.push(v.clone());
+            }
+            self.lead.exec.restore_states(&full, opt_t);
+            for slot in &self.others {
+                let mut st = slot.state.lock().unwrap();
+                let engine = st.engine.as_mut().expect("replica engine parked");
+                engine.exec.restore_states(&full, opt_t);
+            }
+        } else {
+            self.host_weights = weights.to_vec();
+            self.host_moments = moments.to_vec();
+            self.host_t = opt_t;
+        }
+        Ok(())
     }
 
     /// Whether weights + optimizer state live inside the executors.

@@ -113,6 +113,23 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
             "generate the next batch on a producer thread while the current step \
              executes (identical draw sequence, bit-identical trajectory)",
         )
+        .opt(
+            "checkpoint",
+            "",
+            "write a versioned training checkpoint here (atomic tmp+rename; \
+             always written at the end of the run)",
+        )
+        .opt(
+            "checkpoint-every",
+            "0",
+            "also checkpoint every N steps (0 = only at the end; needs --checkpoint)",
+        )
+        .opt(
+            "resume",
+            "",
+            "resume from a checkpoint written by --checkpoint; the resumed \
+             trajectory is bit-identical to the uninterrupted run",
+        )
         .switch(
             "profile",
             "record wall time per opcode and scheduler wavefront, printing a top-k \
@@ -173,6 +190,8 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
     };
     let env_profile = zcs::util::env::knob("ZCS_PROFILE", false, zcs::util::env::parse_switch);
     let profile = p.switch("profile") || env_profile;
+    let ckpt_path = Some(p.get("checkpoint")).filter(|s| !s.is_empty()).map(String::from);
+    let resume_from = Some(p.get("resume")).filter(|s| !s.is_empty()).map(String::from);
     let config = NativeRunConfig {
         problem,
         strategy,
@@ -195,6 +214,9 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
         simd,
         pipeline: p.switch("pipeline-batches"),
         profile,
+        checkpoint_every: p.get_usize("checkpoint-every")?,
+        checkpoint_path: ckpt_path.clone(),
+        resume_from: resume_from.clone(),
         ..NativeRunConfig::default()
     };
     println!(
@@ -209,6 +231,9 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
         config.steps
     );
     let mut trainer = NativeTrainer::new(config)?;
+    if let Some(path) = &resume_from {
+        println!("resumed from checkpoint {path}");
+    }
     println!("kernel threads: {}", trainer.threads());
     if trainer.lanes() > 1 {
         println!(
@@ -320,6 +345,9 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
                 );
             }
         }
+    }
+    if let Some(path) = &ckpt_path {
+        println!("checkpoint written to {path}");
     }
     if p.switch("validate") {
         match trainer.validate(p.get_usize("heldout")?)? {

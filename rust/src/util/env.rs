@@ -1,15 +1,28 @@
 //! One home for `ZCS_*` environment knobs.
 //!
 //! Every knob (`ZCS_THREADS`, `ZCS_SCHED`, `ZCS_SIMD`, `ZCS_PROFILE`,
-//! `ZCS_REPLICAS`) resolves through [`knob`], which gives them all the
-//! warn-on-typo fallback `ZCS_SIMD` pioneered: an unset variable yields
-//! the default silently, an unparseable value warns once on stderr and
-//! *then* yields the default -- a typo can never silently select the
-//! behaviour the user tried to exclude, and never aborts a run either.
+//! `ZCS_REPLICAS`, `ZCS_FAULT`) resolves through [`knob`], which gives
+//! them all the warn-on-typo fallback `ZCS_SIMD` pioneered: an unset
+//! variable yields the default silently, an unparseable value warns once
+//! on stderr and *then* yields the default -- a typo can never silently
+//! select the behaviour the user tried to exclude, and never aborts a
+//! run either.
 //!
 //! [`parse_knob`] is the pure core (no process environment touched), so
 //! the policy is unit-testable without mutating env vars from a threaded
 //! test binary.
+//!
+//! `ZCS_FAULT` is the deterministic fault injector behind the
+//! crash-safety layer: `panic:K` makes the stepping engine panic at step
+//! `K`, `nan:K` poisons a gradient buffer with NaN at step `K`, and
+//! `torn-ckpt:K` truncates the checkpoint written at step `K` mid-file.
+//! Each [`FaultCell`] fires **exactly once** (process-wide for the
+//! environment cell), so the recovery path runs under fault and the rest
+//! of the process proceeds normally -- which is what lets CI run the
+//! whole test suite with injection enabled.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, OnceLock};
 
 /// Resolve one knob from an already-read raw value: `None` (unset) gives
 /// the default silently; `Some` is trimmed and parsed, and a parse error
@@ -60,6 +73,106 @@ pub fn default_replicas() -> usize {
     knob("ZCS_REPLICAS", 1, parse_count)
 }
 
+/// What a [`FaultSpec`] injects.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// panic in the stepping engine (a replica driver, when replicated)
+    Panic,
+    /// overwrite a gradient buffer with NaN before the optimizer update
+    NanGrad,
+    /// truncate the next checkpoint write mid-file (after the CRC is
+    /// appended, so the torn file must fail to load)
+    TornCkpt,
+}
+
+/// One deterministic injected fault: what, and at which 1-based training
+/// step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub kind: FaultKind,
+    pub step: u64,
+}
+
+/// Parse a `ZCS_FAULT` value: `panic:K`, `nan:K`, or `torn-ckpt:K`.
+pub fn parse_fault(v: &str) -> Result<FaultSpec, String> {
+    let (kind, step) = v
+        .split_once(':')
+        .ok_or_else(|| format!("{v:?} is not kind:step; choices: panic, nan, torn-ckpt"))?;
+    let kind = match kind.trim().to_ascii_lowercase().as_str() {
+        "panic" => FaultKind::Panic,
+        "nan" => FaultKind::NanGrad,
+        "torn-ckpt" => FaultKind::TornCkpt,
+        other => return Err(format!("unknown fault {other:?}; choices: panic, nan, torn-ckpt")),
+    };
+    let step = step
+        .trim()
+        .parse::<u64>()
+        .ok()
+        .filter(|&s| s >= 1)
+        .ok_or_else(|| format!("{step:?} is not a positive step number"))?;
+    Ok(FaultSpec { kind, step })
+}
+
+/// A one-shot fault: fires at most once ([`FaultCell::should_fire`]),
+/// and grants the recovery path at most once ([`FaultCell::begin_recovery`]).
+/// The latch is what keeps a whole test suite green under `ZCS_FAULT`:
+/// the first trainer to reach the step absorbs the fault, recovers, and
+/// every later step runs clean.
+#[derive(Debug)]
+pub struct FaultCell {
+    spec: FaultSpec,
+    fired: AtomicBool,
+    recovered: AtomicBool,
+}
+
+impl FaultCell {
+    pub fn new(spec: FaultSpec) -> Self {
+        Self { spec, fired: AtomicBool::new(false), recovered: AtomicBool::new(false) }
+    }
+
+    pub fn spec(&self) -> FaultSpec {
+        self.spec
+    }
+
+    /// The fault has not fired yet (recovery snapshots are only worth
+    /// taking while this holds).
+    pub fn armed(&self) -> bool {
+        !self.fired.load(Ordering::Acquire)
+    }
+
+    /// Whether the fault fires here and now: `kind` and `step` match and
+    /// nobody has fired it before (compare-and-swap, so exactly one call
+    /// site wins even across threads).
+    pub fn should_fire(&self, kind: FaultKind, step: u64) -> bool {
+        self.spec.kind == kind
+            && self.spec.step == step
+            && self.fired.compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire).is_ok()
+    }
+
+    /// Claim the (single) transparent-recovery attempt for a fired fault.
+    /// Returns `false` if the fault never fired or recovery was already
+    /// claimed -- the caller must then surface the error instead.
+    pub fn begin_recovery(&self) -> bool {
+        self.fired.load(Ordering::Acquire)
+            && self
+                .recovered
+                .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+    }
+}
+
+/// The process-wide `ZCS_FAULT` cell, parsed once: every trainer that
+/// does not carry its own cell shares this one, so the configured fault
+/// fires exactly once per process.
+pub fn env_fault() -> Option<Arc<FaultCell>> {
+    static CELL: OnceLock<Option<Arc<FaultCell>>> = OnceLock::new();
+    CELL.get_or_init(|| {
+        knob("ZCS_FAULT", None, |v| parse_fault(v).map(Some))
+            .map(|spec| Arc::new(FaultCell::new(spec)))
+    })
+    .clone()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -93,5 +206,33 @@ mod tests {
         assert_eq!(parse_switch(""), Ok(false));
         assert_eq!(parse_switch("TRUE"), Ok(true));
         assert!(parse_switch("maybe").is_err());
+    }
+
+    #[test]
+    fn fault_specs_parse_and_reject() {
+        assert_eq!(parse_fault("panic:3"), Ok(FaultSpec { kind: FaultKind::Panic, step: 3 }));
+        assert_eq!(parse_fault("NAN:1"), Ok(FaultSpec { kind: FaultKind::NanGrad, step: 1 }));
+        assert_eq!(
+            parse_fault(" torn-ckpt : 12 "),
+            Ok(FaultSpec { kind: FaultKind::TornCkpt, step: 12 })
+        );
+        assert!(parse_fault("panic").is_err());
+        assert!(parse_fault("panic:0").is_err());
+        assert!(parse_fault("segv:3").is_err());
+        assert!(parse_fault("panic:x").is_err());
+    }
+
+    #[test]
+    fn fault_cell_fires_and_recovers_exactly_once() {
+        let cell = FaultCell::new(FaultSpec { kind: FaultKind::Panic, step: 2 });
+        assert!(cell.armed());
+        assert!(!cell.begin_recovery(), "recovery before firing is refused");
+        assert!(!cell.should_fire(FaultKind::Panic, 1), "wrong step");
+        assert!(!cell.should_fire(FaultKind::NanGrad, 2), "wrong kind");
+        assert!(cell.should_fire(FaultKind::Panic, 2));
+        assert!(!cell.armed());
+        assert!(!cell.should_fire(FaultKind::Panic, 2), "one shot only");
+        assert!(cell.begin_recovery());
+        assert!(!cell.begin_recovery(), "one recovery only");
     }
 }

@@ -885,6 +885,40 @@ mod tests {
     }
 
     #[test]
+    fn run_graph_drains_panics_at_every_pool_width() {
+        // crash-safety satellite: a panicking node must reach the
+        // submitter (no deadlocked claim loop, no stuck worker) at 2 and
+        // 4 threads, and the same pool must keep scheduling afterwards
+        for threads in [2usize, 4] {
+            let pool = Pool::new(threads);
+            for round in 0..3usize {
+                let edges = [(0u32, 2u32), (1, 2), (2, 3), (3, 4), (3, 5)];
+                let (n_preds, succs, succ_offsets, priority) = spec_from_edges(6, &edges);
+                let spec = GraphSpec {
+                    n_preds: &n_preds,
+                    succs: &succs,
+                    succ_offsets: &succ_offsets,
+                    priority: &priority,
+                };
+                let outcome = catch_unwind(AssertUnwindSafe(|| {
+                    pool.run_graph(&spec, &|i, _| {
+                        if i as usize == round + 1 {
+                            panic!("graph boom at node {i}");
+                        }
+                    });
+                }));
+                assert!(outcome.is_err(), "{threads} threads round {round}");
+                // drained: an untouched job on the same pool runs clean
+                let ran = AtomicUsize::new(0);
+                pool.run_graph(&spec, &|_, _| {
+                    ran.fetch_add(1, Ordering::Relaxed);
+                });
+                assert_eq!(ran.load(Ordering::Relaxed), 6, "{threads} threads round {round}");
+            }
+        }
+    }
+
+    #[test]
     fn run_graph_empty_graph_is_a_noop() {
         let pool = Pool::new(2);
         let spec = GraphSpec { n_preds: &[], succs: &[], succ_offsets: &[0], priority: &[] };

@@ -1,0 +1,500 @@
+//! Crash-safe training: the resume contract and the fault-injection
+//! recovery paths.
+//!
+//! The determinism stack (fixed reduction orders, canonical lane splits,
+//! snapshot-able [`Pcg64`] draw state) buys a strong crash-safety
+//! property: a run interrupted at step `k` and resumed from its
+//! checkpoint produces the *bit-identical* loss trajectory and final
+//! weights as the uninterrupted run -- across every native problem,
+//! strategy and optimizer, across replica counts, and under pipelined
+//! batch generation.  These tests pin that contract, plus the typed
+//! error surface of the fault injector (`ZCS_FAULT`): injected worker
+//! panics and NaN gradients must be recovered transparently (the
+//! recovered trajectory bit-matches a clean one), and torn or corrupted
+//! checkpoint files must never load.
+//!
+//! [`Pcg64`]: zcs::rng::Pcg64
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use zcs::autodiff::Strategy;
+use zcs::coordinator::checkpoint::{decode_train, encode_train};
+use zcs::coordinator::native::{NativeRunConfig, NativeTrainer, Optimizer};
+use zcs::pde::ProblemKind;
+use zcs::tensor::Tensor;
+use zcs::util::env::{FaultCell, FaultKind, FaultSpec};
+use zcs::util::propkit::{assert_tensors_bits_eq, usize_in, Runner};
+
+const NATIVE_PROBLEMS: [ProblemKind; 4] = [
+    ProblemKind::Antiderivative,
+    ProblemKind::ReactionDiffusion,
+    ProblemKind::Burgers,
+    ProblemKind::Kirchhoff,
+];
+
+fn q_for(kind: ProblemKind) -> usize {
+    if kind == ProblemKind::Kirchhoff {
+        9
+    } else {
+        5
+    }
+}
+
+fn config(
+    kind: ProblemKind,
+    strategy: Strategy,
+    optimizer: Optimizer,
+    steps: usize,
+) -> NativeRunConfig {
+    NativeRunConfig {
+        problem: kind,
+        strategy,
+        m: 5,
+        n: 6,
+        n_bc: 4,
+        q: q_for(kind),
+        hidden: 8,
+        k: 4,
+        steps,
+        lr: NativeRunConfig::default_lr(kind) * 0.5,
+        seed: 17,
+        bank_size: 8,
+        bank_grid: 32,
+        log_every: 1,
+        threads: 1,
+        optimizer,
+        resident: true,
+        ..NativeRunConfig::default()
+    }
+}
+
+/// A unique checkpoint path under the system temp dir (tests run in
+/// parallel in one process; the process id alone is not enough).
+fn temp_ckpt(tag: &str) -> String {
+    static SEQ: AtomicUsize = AtomicUsize::new(0);
+    let n = SEQ.fetch_add(1, Ordering::Relaxed);
+    let dir = std::env::temp_dir();
+    dir.join(format!("zcs_ckpt_{tag}_{}_{n}.bin", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+/// Loss curve as bit-comparable tuples.
+fn bits(report: &zcs::coordinator::native::NativeReport) -> Vec<(usize, u64, u64, u64)> {
+    report
+        .curve
+        .iter()
+        .map(|p| (p.step, p.loss.to_bits(), p.loss_pde.to_bits(), p.loss_bc.to_bits()))
+        .collect()
+}
+
+/// Train `total` steps in one go vs "train `cut` steps, checkpoint, new
+/// trainer resumes to `total`"; both must agree bit-for-bit on the curve
+/// and the final weights.
+fn assert_resume_bit_exact(mut full_cfg: NativeRunConfig, cut: usize, what: &str) {
+    let total = full_cfg.steps;
+    let path = temp_ckpt("resume");
+    // a periodic interval in the incoming config applies to the
+    // interrupted half only (the baseline and the resumed run write no
+    // checkpoints of their own)
+    let every = full_cfg.checkpoint_every;
+    full_cfg.checkpoint_every = 0;
+
+    let mut baseline = NativeTrainer::new(full_cfg.clone()).unwrap();
+    let base_report = baseline.run().unwrap();
+
+    let mut first_half = full_cfg.clone();
+    first_half.steps = cut;
+    first_half.checkpoint_every = every;
+    first_half.checkpoint_path = Some(path.clone());
+    let mut interrupted = NativeTrainer::new(first_half).unwrap();
+    interrupted.run().unwrap();
+
+    full_cfg.resume_from = Some(path.clone());
+    let mut resumed = NativeTrainer::new(full_cfg).unwrap();
+    let resumed_report = resumed.run().unwrap();
+
+    assert_eq!(resumed_report.steps, total - cut, "{what}: resumed step count");
+    let base_bits = bits(&base_report);
+    assert_eq!(
+        &base_bits[cut..],
+        &bits(&resumed_report)[..],
+        "{what}: resumed loss curve diverged"
+    );
+    assert_tensors_bits_eq(
+        resumed.weights(),
+        baseline.weights(),
+        &format!("{what}: final weights after resume"),
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+// ---------------------------------------------------------------------------
+// Resume == uninterrupted, bit for bit
+// ---------------------------------------------------------------------------
+
+#[test]
+fn resume_bit_matches_uninterrupted_sgd_for_every_problem_and_strategy() {
+    for kind in NATIVE_PROBLEMS {
+        for strategy in Strategy::ALL {
+            let cfg = config(kind, strategy, Optimizer::Sgd, 4);
+            assert_resume_bit_exact(cfg, 2, &format!("{kind:?}/{strategy:?}/sgd"));
+        }
+    }
+}
+
+#[test]
+fn resume_bit_matches_uninterrupted_adam_for_every_problem_and_strategy() {
+    // Adam is the sharp edge: the checkpoint must carry both moment
+    // tensors and the bias-correction clock, or the resumed trajectory
+    // silently drifts
+    for kind in NATIVE_PROBLEMS {
+        for strategy in Strategy::ALL {
+            let cfg = config(kind, strategy, Optimizer::Adam, 4);
+            assert_resume_bit_exact(cfg, 2, &format!("{kind:?}/{strategy:?}/adam"));
+        }
+    }
+}
+
+#[test]
+fn resume_bit_matches_on_the_feed_based_fallback() {
+    let mut cfg = config(ProblemKind::Antiderivative, Strategy::Zcs, Optimizer::Adam, 4);
+    cfg.resident = false;
+    assert_resume_bit_exact(cfg, 2, "fallback/adam");
+}
+
+#[test]
+fn resume_crosses_replica_counts_in_both_directions() {
+    // replica topology is informational in the checkpoint: state saved
+    // at N replicas restores at M, because N-replica trajectories
+    // bit-match single-replica ones (replica_train.rs)
+    for (save_replicas, resume_replicas) in [(1usize, 2usize), (2, 1), (2, 4)] {
+        let path = temp_ckpt("xreplica");
+        let mut base_cfg = config(ProblemKind::Burgers, Strategy::Zcs, Optimizer::Adam, 4);
+        base_cfg.replicas = 1;
+        let mut baseline = NativeTrainer::new(base_cfg).unwrap();
+        let base_report = baseline.run().unwrap();
+
+        let mut half = config(ProblemKind::Burgers, Strategy::Zcs, Optimizer::Adam, 2);
+        half.replicas = save_replicas;
+        half.checkpoint_path = Some(path.clone());
+        NativeTrainer::new(half).unwrap().run().unwrap();
+
+        let mut rest = config(ProblemKind::Burgers, Strategy::Zcs, Optimizer::Adam, 4);
+        rest.replicas = resume_replicas;
+        rest.resume_from = Some(path.clone());
+        let mut resumed = NativeTrainer::new(rest).unwrap();
+        let resumed_report = resumed.run().unwrap();
+
+        assert_eq!(
+            &bits(&base_report)[2..],
+            &bits(&resumed_report)[..],
+            "save@{save_replicas} resume@{resume_replicas}: curve diverged"
+        );
+        assert_tensors_bits_eq(
+            resumed.weights(),
+            baseline.weights(),
+            &format!("save@{save_replicas} resume@{resume_replicas} final weights"),
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+#[test]
+fn resume_bit_matches_under_pipelined_batches() {
+    // both halves pipelined, with a periodic in-loop save on the first
+    // half (exercises the snapshot-travels-with-its-batch plumbing)
+    let mut cfg = config(ProblemKind::ReactionDiffusion, Strategy::Zcs, Optimizer::Adam, 4);
+    cfg.pipeline = true;
+    cfg.checkpoint_every = 1;
+    assert_resume_bit_exact(cfg, 2, "pipelined/adam");
+}
+
+#[test]
+fn resume_bit_matches_on_the_single_function_engine() {
+    // m == 1 selects the SingleEngine/StepEngine path, which has its own
+    // export/restore plumbing; run it both plain and pipelined
+    for (pipeline, every) in [(false, 0), (true, 1)] {
+        let mut cfg = config(ProblemKind::Antiderivative, Strategy::Zcs, Optimizer::Adam, 4);
+        cfg.m = 1;
+        cfg.pipeline = pipeline;
+        cfg.checkpoint_every = every;
+        assert_resume_bit_exact(cfg, 2, &format!("m=1 pipeline={pipeline}"));
+    }
+}
+
+#[test]
+fn finished_runs_export_identical_checkpoint_bytes_resumed_or_not() {
+    // the CI resume-smoke job `cmp`s checkpoint files; pin the same
+    // property in-process: an uninterrupted run and a kill+resume run
+    // serialize to the very same bytes (meta, clocks, rng, state)
+    let path = temp_ckpt("bytes");
+    let cfg = config(ProblemKind::Antiderivative, Strategy::Zcs, Optimizer::Adam, 4);
+
+    let mut baseline = NativeTrainer::new(cfg.clone()).unwrap();
+    baseline.run().unwrap();
+
+    let mut half = cfg.clone();
+    half.steps = 2;
+    half.checkpoint_path = Some(path.clone());
+    NativeTrainer::new(half).unwrap().run().unwrap();
+    let mut rest = cfg;
+    rest.resume_from = Some(path.clone());
+    let mut resumed = NativeTrainer::new(rest).unwrap();
+    resumed.run().unwrap();
+
+    let a = encode_train(&baseline.export_checkpoint(4));
+    let b = encode_train(&resumed.export_checkpoint(4));
+    assert_eq!(a, b, "final checkpoints of resumed vs uninterrupted runs differ");
+    let _ = std::fs::remove_file(&path);
+}
+
+// ---------------------------------------------------------------------------
+// Fault injection: transparent recovery, typed surfacing, no deadlock
+// ---------------------------------------------------------------------------
+
+fn with_fault(mut cfg: NativeRunConfig, kind: FaultKind, step: u64) -> NativeRunConfig {
+    cfg.fault = Some(Arc::new(FaultCell::new(FaultSpec { kind, step })));
+    cfg
+}
+
+#[test]
+fn injected_panic_is_recovered_and_bit_matches_the_clean_run() {
+    let clean_cfg = config(ProblemKind::Antiderivative, Strategy::Zcs, Optimizer::Adam, 4);
+    let mut clean = NativeTrainer::new(clean_cfg.clone()).unwrap();
+    let clean_report = clean.run().unwrap();
+
+    let cfg = with_fault(clean_cfg, FaultKind::Panic, 2);
+    let cell = cfg.fault.clone().unwrap();
+    let mut faulted = NativeTrainer::new(cfg).unwrap();
+    let report = faulted.run().expect("injected panic must be recovered, not surfaced");
+
+    assert!(!cell.armed(), "the injected panic never fired");
+    assert_eq!(bits(&clean_report), bits(&report), "recovered trajectory diverged");
+    assert_tensors_bits_eq(faulted.weights(), clean.weights(), "recovered final weights");
+}
+
+#[test]
+fn injected_replica_panic_recovers_without_poisoning_the_barrier() {
+    // the panic fires on the *last* replica's driver thread; the lead
+    // must get a clean retry (barrier poison cleared), not a deadlock
+    let mut clean_cfg = config(ProblemKind::Burgers, Strategy::Zcs, Optimizer::Sgd, 4);
+    clean_cfg.replicas = 2;
+    let mut clean = NativeTrainer::new(clean_cfg.clone()).unwrap();
+    let clean_report = clean.run().unwrap();
+
+    let cfg = with_fault(clean_cfg, FaultKind::Panic, 2);
+    let cell = cfg.fault.clone().unwrap();
+    let mut faulted = NativeTrainer::new(cfg).unwrap();
+    let report = faulted.run().expect("replica panic must be recovered");
+
+    assert!(!cell.armed());
+    assert_eq!(bits(&clean_report), bits(&report), "replicated recovery diverged");
+    assert_tensors_bits_eq(faulted.weights(), clean.weights(), "replicated recovered weights");
+    // the set keeps stepping after recovery: barrier not poisoned
+    let batch = faulted.next_batch();
+    faulted.step(&batch).expect("post-recovery step");
+}
+
+#[test]
+fn injected_nan_gradient_rolls_back_and_bit_matches_the_clean_run() {
+    for replicas in [1usize, 2] {
+        let mut clean_cfg =
+            config(ProblemKind::ReactionDiffusion, Strategy::Zcs, Optimizer::Adam, 4);
+        clean_cfg.replicas = replicas;
+        let mut clean = NativeTrainer::new(clean_cfg.clone()).unwrap();
+        let clean_report = clean.run().unwrap();
+
+        let cfg = with_fault(clean_cfg, FaultKind::NanGrad, 2);
+        let mut faulted = NativeTrainer::new(cfg).unwrap();
+        let report = faulted.run().expect("injected NaN must roll back, not surface");
+
+        assert_eq!(
+            bits(&clean_report),
+            bits(&report),
+            "x{replicas}: NaN-recovered trajectory diverged"
+        );
+        assert_tensors_bits_eq(
+            faulted.weights(),
+            clean.weights(),
+            &format!("x{replicas}: NaN-recovered final weights"),
+        );
+    }
+}
+
+#[test]
+fn pipelined_run_recovers_from_faults_and_keeps_its_report_flag() {
+    // an armed fault forces the (bit-identical) synchronous loop; the
+    // report still says what the user asked for
+    let mut cfg = config(ProblemKind::Antiderivative, Strategy::Zcs, Optimizer::Sgd, 4);
+    cfg.pipeline = true;
+    let cfg = with_fault(cfg, FaultKind::NanGrad, 2);
+    let mut trainer = NativeTrainer::new(cfg).unwrap();
+    let report = trainer.run().expect("fault under pipelining must recover");
+    assert!(report.pipelined, "the report reflects the requested mode");
+}
+
+#[test]
+fn fallback_nan_gradient_surfaces_typed_and_leaves_weights_untouched() {
+    use zcs::coordinator::error::TrainError;
+    let mut cfg = config(ProblemKind::Antiderivative, Strategy::Zcs, Optimizer::Sgd, 4);
+    cfg.resident = false;
+    let cfg = with_fault(cfg, FaultKind::NanGrad, 2);
+    let mut trainer = NativeTrainer::new(cfg).unwrap();
+
+    let b1 = trainer.next_batch();
+    trainer.step(&b1).expect("step 1 is clean");
+    let before: Vec<Tensor> = trainer.weights().to_vec();
+
+    let b2 = trainer.next_batch();
+    let err = trainer.step(&b2).expect_err("poisoned gradient must refuse to commit");
+    match err.downcast_ref::<TrainError>() {
+        Some(TrainError::NonFinite { step: 2, output, .. }) => {
+            assert!(output.starts_with("grad["), "offending output named: {output}")
+        }
+        other => panic!("expected NonFinite at step 2, got {other:?}"),
+    }
+    assert_tensors_bits_eq(trainer.weights(), &before, "weights after refused update");
+
+    // the engine is still serviceable
+    let b3 = trainer.next_batch();
+    trainer.step(&b3).expect("stepping continues after the typed error");
+}
+
+#[test]
+fn resident_nan_detection_names_the_poisoned_loss() {
+    use zcs::coordinator::error::TrainError;
+    // resident injection poisons the in-executor update at step K; the
+    // guard catches it at step K+1 as a non-finite loss
+    let cfg = config(ProblemKind::Antiderivative, Strategy::Zcs, Optimizer::Sgd, 4);
+    let cfg = with_fault(cfg, FaultKind::NanGrad, 1);
+    let mut trainer = NativeTrainer::new(cfg).unwrap();
+    let b1 = trainer.next_batch();
+    trainer.step(&b1).expect("losses at the injection step are still clean");
+    let b2 = trainer.next_batch();
+    let err = trainer.step(&b2).expect_err("poisoned weights must be detected");
+    match err.downcast_ref::<TrainError>() {
+        Some(TrainError::NonFinite { step: 2, output, value }) => {
+            assert!(output.starts_with("loss"), "names the output: {output}");
+            assert!(!value.is_finite());
+        }
+        other => panic!("expected NonFinite at step 2, got {other:?}"),
+    }
+}
+
+#[test]
+fn a_genuinely_diverging_run_rolls_back_to_the_last_disk_checkpoint() {
+    // no injection here: an absurd learning rate blows the loss up, and
+    // the run() wrapper must restore the last good on-disk state
+    let path = temp_ckpt("rollback");
+    let mut cfg = config(ProblemKind::Antiderivative, Strategy::Zcs, Optimizer::Sgd, 6);
+    cfg.lr = 1e200;
+    cfg.checkpoint_path = Some(path.clone());
+    cfg.checkpoint_every = 1;
+    let mut trainer = NativeTrainer::new(cfg).unwrap();
+    let err = trainer.run().expect_err("lr=1e200 must diverge");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("rolled back to checkpoint"), "wrapper engaged: {msg}");
+    let ckpt = zcs::coordinator::checkpoint::load_train(&path).unwrap();
+    assert_tensors_bits_eq(trainer.weights(), &ckpt.weights, "trainer holds checkpoint state");
+    let _ = std::fs::remove_file(&path);
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint files: torn writes, foreign metadata, bad resumes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn torn_checkpoint_write_is_detected_at_resume() {
+    let path = temp_ckpt("torn");
+    let mut cfg = config(ProblemKind::Antiderivative, Strategy::Zcs, Optimizer::Sgd, 2);
+    cfg.checkpoint_path = Some(path.clone());
+    // the final save happens at step 2: tear it
+    let cfg = with_fault(cfg, FaultKind::TornCkpt, 2);
+    NativeTrainer::new(cfg).unwrap().run().unwrap();
+
+    let err = zcs::coordinator::checkpoint::load_train(&path)
+        .expect_err("a torn checkpoint must not load");
+    assert!(format!("{err:#}").contains("checkpoint"), "{err:#}");
+
+    let mut resume = config(ProblemKind::Antiderivative, Strategy::Zcs, Optimizer::Sgd, 4);
+    resume.resume_from = Some(path.clone());
+    assert!(NativeTrainer::new(resume).is_err(), "resume from a torn file must fail");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn resume_with_mismatched_config_names_the_field() {
+    let path = temp_ckpt("meta");
+    let mut cfg = config(ProblemKind::Antiderivative, Strategy::Zcs, Optimizer::Sgd, 2);
+    cfg.checkpoint_path = Some(path.clone());
+    NativeTrainer::new(cfg).unwrap().run().unwrap();
+
+    let mut other = config(ProblemKind::Antiderivative, Strategy::Zcs, Optimizer::Sgd, 4);
+    other.seed = 18;
+    other.resume_from = Some(path.clone());
+    let err = NativeTrainer::new(other).expect_err("seed mismatch must refuse to resume");
+    assert!(format!("{err:#}").contains("seed"), "{err:#}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn resume_needs_steps_beyond_the_checkpoint() {
+    let path = temp_ckpt("done");
+    let mut cfg = config(ProblemKind::Antiderivative, Strategy::Zcs, Optimizer::Sgd, 2);
+    cfg.checkpoint_path = Some(path.clone());
+    NativeTrainer::new(cfg.clone()).unwrap().run().unwrap();
+
+    cfg.checkpoint_path = None;
+    cfg.resume_from = Some(path.clone());
+    let err = NativeTrainer::new(cfg).expect_err("resume at steps == checkpoint step");
+    assert!(format!("{err:#}").contains("nothing to resume"), "{err:#}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn periodic_checkpointing_requires_a_path() {
+    let mut cfg = config(ProblemKind::Antiderivative, Strategy::Zcs, Optimizer::Sgd, 2);
+    cfg.checkpoint_every = 1;
+    assert!(NativeTrainer::new(cfg).is_err(), "checkpoint_every without --checkpoint");
+}
+
+// ---------------------------------------------------------------------------
+// Property tests: no torn or flipped file ever loads
+// ---------------------------------------------------------------------------
+
+/// Serialized bytes of a real (trained) checkpoint.
+fn sample_bytes() -> Vec<u8> {
+    let mut trainer =
+        NativeTrainer::new(config(ProblemKind::Antiderivative, Strategy::Zcs, Optimizer::Adam, 2))
+            .unwrap();
+    trainer.run().unwrap();
+    encode_train(&trainer.export_checkpoint(2))
+}
+
+#[test]
+fn property_truncated_checkpoints_never_decode() {
+    let bytes = sample_bytes();
+    assert!(decode_train(&bytes).is_ok(), "the untruncated file is valid");
+    let runner = Runner { cases: 128, ..Runner::default() };
+    runner.check(usize_in(0, bytes.len() - 1), |&cut| {
+        match decode_train(&bytes[..cut]) {
+            Err(_) => Ok(()),
+            Ok(_) => Err(format!("decoded from a {cut}-byte prefix of {}", bytes.len())),
+        }
+    });
+}
+
+#[test]
+fn property_bit_flipped_checkpoints_never_decode() {
+    let bytes = sample_bytes();
+    let runner = Runner { cases: 128, ..Runner::default() };
+    runner.check(usize_in(0, bytes.len() * 8 - 1), |&flip| {
+        let mut bad = bytes.clone();
+        bad[flip / 8] ^= 1 << (flip % 8);
+        match decode_train(&bad) {
+            Err(_) => Ok(()),
+            Ok(_) => Err(format!("decoded with bit {flip} flipped")),
+        }
+    });
+}
