@@ -1,0 +1,213 @@
+//! Serving latency/throughput bench (the robustness instrument for
+//! PR 9).
+//!
+//! A real `zcs serve` loop -- TCP loopback, wire framing, admission
+//! queue, coalescing dispatcher, resident inference executors -- is
+//! driven by closed-loop clients at increasing concurrency, with batch
+//! coalescing off (`max_batch 1`) and on (`max_batch 8`, 2 ms linger).
+//! Reports p50/p95/p99 request latency and sustained throughput per
+//! offered load.  Writes `BENCH_serve.json`.
+//! Run: `cargo bench --bench serve`.
+
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+use zcs::autodiff::Strategy;
+use zcs::coordinator::checkpoint::save_train;
+use zcs::coordinator::native::{NativeRunConfig, NativeTrainer, Optimizer};
+use zcs::coordinator::registry::Registry;
+use zcs::pde::ProblemKind;
+use zcs::serve::wire::{EvalRequest, Status};
+use zcs::serve::{serve, Client, ServeConfig};
+use zcs::util::benchkit::{quick_mode, Table};
+use zcs::util::json::{obj, Json};
+
+const Q: usize = 8;
+const N_PTS: usize = 32;
+
+fn train_config(steps: usize) -> NativeRunConfig {
+    NativeRunConfig {
+        problem: ProblemKind::ReactionDiffusion,
+        strategy: Strategy::Zcs,
+        m: 16,
+        n: 64,
+        n_bc: 16,
+        q: Q,
+        hidden: 32,
+        k: 16,
+        steps,
+        lr: NativeRunConfig::default_lr(ProblemKind::ReactionDiffusion),
+        seed: 11,
+        bank_size: 16,
+        bank_grid: 64,
+        log_every: usize::MAX,
+        threads: 1,
+        optimizer: Optimizer::Adam,
+        resident: true,
+        ..NativeRunConfig::default()
+    }
+}
+
+/// Fixed evaluation grid: identical `points` blocks are what the
+/// dispatcher coalesces on, mirroring the common serve shape (one grid,
+/// many input functions).
+fn grid_points() -> Vec<f64> {
+    let mut pts = Vec::with_capacity(N_PTS * 2);
+    for i in 0..N_PTS {
+        let t = (i + 1) as f64 / (N_PTS + 1) as f64;
+        pts.push(t);
+        pts.push(0.5);
+    }
+    pts
+}
+
+fn query(client: usize, seq: usize) -> EvalRequest {
+    let sensors: Vec<f64> = (0..Q).map(|s| ((client * 131 + seq * 17 + s) as f64).sin()).collect();
+    EvalRequest {
+        model: "op".to_string(),
+        deadline_ms: 30_000,
+        coord_dim: 2,
+        sensors,
+        points: grid_points(),
+    }
+}
+
+fn percentile(sorted_us: &[f64], p: f64) -> f64 {
+    let idx = ((sorted_us.len() - 1) as f64 * p).round() as usize;
+    sorted_us[idx]
+}
+
+struct CaseResult {
+    clients: usize,
+    max_batch: usize,
+    linger_ms: u64,
+    p50_us: f64,
+    p95_us: f64,
+    p99_us: f64,
+    throughput_rps: f64,
+    served: u64,
+}
+
+fn run_case(
+    registry: &Arc<Registry>,
+    clients: usize,
+    per_client: usize,
+    max_batch: usize,
+    linger_ms: u64,
+) -> anyhow::Result<CaseResult> {
+    let cfg = ServeConfig {
+        queue_cap: 1024,
+        max_batch,
+        linger: Duration::from_millis(linger_ms),
+        workers: 2,
+        ..ServeConfig::default()
+    };
+    let handle = serve(Arc::clone(registry), cfg)?;
+    let addr = handle.addr();
+    let t0 = Instant::now();
+    let joins: Vec<_> = (0..clients)
+        .map(|client| {
+            thread::spawn(move || {
+                let mut conn = Client::connect(&addr).expect("bench client connect");
+                let mut lat_us = Vec::with_capacity(per_client);
+                for seq in 0..per_client {
+                    let t = Instant::now();
+                    let resp = conn.eval(&query(client, seq)).expect("bench eval");
+                    assert_eq!(resp.status, Status::Ok, "{}", resp.error);
+                    lat_us.push(t.elapsed().as_secs_f64() * 1e6);
+                }
+                lat_us
+            })
+        })
+        .collect();
+    let mut lat_us: Vec<f64> = Vec::new();
+    for j in joins {
+        lat_us.extend(j.join().expect("bench client panicked"));
+    }
+    let wall = t0.elapsed().as_secs_f64().max(1e-12);
+    handle.shutdown();
+    let report = handle.join();
+    lat_us.sort_by(|a, b| a.partial_cmp(b).expect("finite latency"));
+    Ok(CaseResult {
+        clients,
+        max_batch,
+        linger_ms,
+        p50_us: percentile(&lat_us, 0.50),
+        p95_us: percentile(&lat_us, 0.95),
+        p99_us: percentile(&lat_us, 0.99),
+        throughput_rps: lat_us.len() as f64 / wall,
+        served: report.served,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = quick_mode();
+
+    // a genuinely trained model behind the registry, like production
+    let train_steps = if quick { 2 } else { 8 };
+    let mut trainer = NativeTrainer::new(train_config(train_steps))?;
+    trainer.run()?;
+    let ckpt = trainer.export_checkpoint(train_steps as u64);
+    let path = std::env::temp_dir()
+        .join(format!("zcs_bench_serve_{}.ckpt", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    save_train(&path, &ckpt, None)?;
+    let registry = Arc::new(Registry::new());
+    registry.load("op", &path)?;
+
+    let loads: &[usize] = if quick { &[1, 4] } else { &[1, 4, 16] };
+    let per_client = if quick { 20 } else { 100 };
+    let coalesce: [(usize, u64); 2] = [(1, 0), (8, 2)];
+
+    let mut table = Table::new(&["case", "p50 us", "p95 us", "p99 us", "req/s"]);
+    let mut cases: Vec<CaseResult> = Vec::new();
+    for &(max_batch, linger_ms) in &coalesce {
+        for &clients in loads {
+            let r = run_case(&registry, clients, per_client, max_batch, linger_ms)?;
+            table.row(&[
+                format!("{clients} clients, batch {max_batch}, linger {linger_ms} ms"),
+                format!("{:.1}", r.p50_us),
+                format!("{:.1}", r.p95_us),
+                format!("{:.1}", r.p99_us),
+                format!("{:.1}", r.throughput_rps),
+            ]);
+            eprintln!(
+                "serve @ {clients} clients (batch {max_batch}, linger {linger_ms} ms): \
+                 p50 {:.1} us, p95 {:.1} us, p99 {:.1} us, {:.1} req/s ({} served)",
+                r.p50_us, r.p95_us, r.p99_us, r.throughput_rps, r.served
+            );
+            cases.push(r);
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+
+    let json_cases: Vec<Json> = cases
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("clients", Json::from(r.clients)),
+                ("max_batch", Json::from(r.max_batch)),
+                ("linger_ms", Json::from(r.linger_ms as usize)),
+                ("per_client", Json::from(per_client)),
+                ("p50_us", Json::from(r.p50_us)),
+                ("p95_us", Json::from(r.p95_us)),
+                ("p99_us", Json::from(r.p99_us)),
+                ("throughput_rps", Json::from(r.throughput_rps)),
+                ("served", Json::from(r.served as usize)),
+            ])
+        })
+        .collect();
+    let doc = obj(vec![
+        ("bench", Json::from("serve.latency")),
+        ("unit", Json::from("us / req_per_sec")),
+        ("quick", Json::Bool(quick)),
+        ("n_pts", Json::from(N_PTS)),
+        ("cases", Json::from(json_cases)),
+    ]);
+    std::fs::write("BENCH_serve.json", doc.to_string())?;
+    eprintln!("wrote BENCH_serve.json");
+
+    table.print();
+    Ok(())
+}

@@ -688,6 +688,64 @@ impl Executor {
         program.outputs.iter().map(|&v| self.output(program, ins, v).clone()).collect()
     }
 
+    /// Multi-sample batched entry point for *inference-only* resident
+    /// programs ([`Program::compile_inference`]): stack one row per
+    /// sample into the program's batched input `batched` (shape `[m,
+    /// row_len]`), feed the remaining inputs from `shared`, run once,
+    /// and split the single `[m, n]` output back into per-sample rows.
+    /// This is the serving shape -- a coalesced batch of independent
+    /// queries answered by one executor pass -- and, because stacking is
+    /// a pure memcpy, each sample's values are bit-identical to running
+    /// it in any other batch composition at the same `m`.
+    ///
+    /// Panics if the program still has update instructions (it is a
+    /// training step, not an inference program), if `rows` does not
+    /// match the compiled batch size, or on any shape mismatch.
+    pub fn run_inference(
+        &mut self,
+        program: &Program,
+        batched: NodeId,
+        rows: &[&[f64]],
+        shared: &HashMap<NodeId, &Tensor>,
+    ) -> Vec<Vec<f64>> {
+        assert!(
+            program.updates.is_empty(),
+            "run_inference wants an inference-only program (no optimizer updates)"
+        );
+        assert_eq!(program.outputs.len(), 1, "run_inference wants a single forward output");
+        let k = program
+            .inputs
+            .iter()
+            .position(|&id| id == batched)
+            .expect("batched input is a program input");
+        let shape = &program.input_shapes[k];
+        assert_eq!(shape.len(), 2, "batched input must be [m, row_len]");
+        let (m, row_len) = (shape[0], shape[1]);
+        assert_eq!(rows.len(), m, "program was compiled for batch size {m}");
+        let mut stacked = Vec::with_capacity(m * row_len);
+        for row in rows {
+            assert_eq!(row.len(), row_len, "sample row length");
+            stacked.extend_from_slice(row);
+        }
+        let stacked = Tensor::new(&[m, row_len], stacked);
+        let ins: Vec<&Tensor> = program
+            .inputs
+            .iter()
+            .map(|id| {
+                if *id == batched {
+                    &stacked
+                } else {
+                    shared.get(id).copied().unwrap_or_else(|| panic!("missing input for node {id}"))
+                }
+            })
+            .collect();
+        self.execute(program, &ins);
+        let out = self.output(program, &ins, program.outputs[0]);
+        assert_eq!(out.shape()[0], m, "forward output is batched over samples");
+        let n = out.len() / m;
+        out.data().chunks_exact(n).map(|c| c.to_vec()).collect()
+    }
+
     /// Borrow-based scalar readback: execute and copy each (scalar)
     /// program output into `out` -- the whole-step hot path performs no
     /// output allocation at all.  Panics if an output is not a

@@ -382,6 +382,36 @@ impl Program {
         self.states.iter().map(|s| s.shape.iter().product::<usize>() as u64 * 8).sum()
     }
 
+    /// Compile an *inference-only* resident program: `graph` restricted
+    /// to the forward `outputs` -- DCE strips the tape, gradient outputs
+    /// and everything an optimizer would touch, because none of it is
+    /// reachable from a forward value -- and the `weight_ids` inputs are
+    /// promoted to executor-resident state ([`Operand::State`]) with
+    /// **no** update instructions attached.  The result is a serving
+    /// program: per-run inputs are query data only, weights stay warm in
+    /// the executor across requests, and nothing can mutate them.
+    ///
+    /// Bind the trained weights with [`Executor::bind_states`] before
+    /// running.  The instruction stream is the one [`Program::compile`]
+    /// emits for the same outputs (operands aside), so inference values
+    /// are bit-identical to a feed-based forward evaluation.
+    ///
+    /// [`Executor::bind_states`]: super::exec::Executor::bind_states
+    pub fn compile_inference(graph: &Graph, outputs: &[NodeId], weight_ids: &[NodeId]) -> Program {
+        let mut p = Self::compile(graph, outputs);
+        // every weight feeds the forward pass, so the gradient-output
+        // shape fallback (for weights a step never reads) cannot apply
+        let (states, outputs) = p.promote_weights_to_state(weight_ids, |s| {
+            panic!("weight {s} is not read by the inference outputs")
+        });
+        p.outputs = outputs;
+        p.states = states;
+        p.stats.resident_state_bytes = p.resident_state_bytes();
+        // no instructions were added or removed: the schedule built by
+        // `compile` is still exact (In -> State leaves arena edges alone)
+        p
+    }
+
     /// Turn a compiled *training-step* program into a resident one: the
     /// `weight_ids` inputs are promoted to executor-resident state
     /// ([`Operand::State`]), and the trailing `weight_ids.len()` outputs --

@@ -478,8 +478,14 @@ pub fn save(path: impl AsRef<Path>, params: &[HostTensor]) -> Result<()> {
 /// truncated header errors instead of allocating unchecked or reading
 /// short.
 pub fn load(path: impl AsRef<Path>) -> Result<Vec<HostTensor>> {
-    let bytes = std::fs::read(path.as_ref())
-        .with_context(|| format!("opening {:?}", path.as_ref()))?;
+    let path = path.as_ref();
+    let bytes = std::fs::read(path).with_context(|| format!("opening {path:?}"))?;
+    // decode errors name the offending file, so a bad checkpoint is
+    // diagnosable straight from a registry or serve log line
+    decode_v1(&bytes).with_context(|| format!("loading checkpoint {path:?}"))
+}
+
+fn decode_v1(bytes: &[u8]) -> Result<Vec<HostTensor>> {
     if bytes.len() < MAGIC.len() + 4 {
         bail!("checkpoint truncated: {} bytes is shorter than any valid file", bytes.len());
     }
@@ -754,6 +760,30 @@ mod tests {
         // the fault fired once; the retry writes a good file
         save_train(&p, &ckpt, Some(&cell)).unwrap();
         assert!(load_train(&p).is_ok());
+    }
+
+    #[test]
+    fn load_errors_name_the_file_and_the_checksums() {
+        // CRC mismatch: the chain names the path and both checksums, so
+        // a registry load failure is diagnosable from one serve log line
+        let ckpt = sample_v2(false);
+        let p = tmp("diag.ckpt");
+        save_train(&p, &ckpt, None).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = format!("{:#}", load_train(&p).unwrap_err());
+        assert!(err.contains("diag.ckpt"), "{err}");
+        assert!(err.contains("CRC mismatch"), "{err}");
+        assert!(err.contains("stored") && err.contains("computed"), "{err}");
+
+        // v1 decode errors carry the path too
+        let p1 = tmp("diag_v1.ckpt");
+        std::fs::write(&p1, b"NOTACKPTxxxx").unwrap();
+        let err = format!("{:#}", load(&p1).unwrap_err());
+        assert!(err.contains("diag_v1.ckpt"), "{err}");
+        assert!(err.contains("bad magic"), "{err}");
     }
 
     #[test]

@@ -39,6 +39,7 @@ pub mod error;
 pub mod fields;
 pub mod native;
 pub mod params;
+pub mod registry;
 pub mod replica;
 pub mod validate;
 

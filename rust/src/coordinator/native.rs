@@ -935,10 +935,7 @@ impl NativeTrainer {
             )> = None;
             let mut it = start;
             while it < steps {
-                if fault
-                    .as_ref()
-                    .is_some_and(|c| c.armed() && c.spec().kind == FaultKind::NanGrad)
-                {
+                if fault.as_ref().is_some_and(|c| c.expects(FaultKind::NanGrad)) {
                     let (w, m, t) = self.export_states();
                     rollback = Some((it, w, m, t, self.batcher.rng_snapshot()));
                 }
@@ -959,10 +956,9 @@ impl NativeTrainer {
                         // and re-run -- the recovered trajectory
                         // bit-matches a fault-free run
                         let injected_nan = fault.as_ref().is_some_and(|c| {
-                            c.spec().kind == FaultKind::NanGrad
-                                && e.downcast_ref::<TrainError>()
-                                    .is_some_and(|te| matches!(te, TrainError::NonFinite { .. }))
-                                && c.begin_recovery()
+                            e.downcast_ref::<TrainError>()
+                                .is_some_and(|te| matches!(te, TrainError::NonFinite { .. }))
+                                && c.begin_recovery(FaultKind::NanGrad)
                         });
                         if injected_nan {
                             if let Some((rit, w, m, t, rng)) = rollback.take() {
@@ -1150,10 +1146,11 @@ impl NativeTrainer {
             }
             _ => return Ok(None),
         }
-        let p_rows = Tensor::new(&[n_heldout, q], pdata);
         let truth = Tensor::new(&[n_heldout, pts.len()], tdata);
 
-        // predicted field from the trained weights (plain forward)
+        // predicted field from the trained weights, through the same
+        // inference-only program the serving path runs (weights resident
+        // as executor state, queries as the only per-run inputs)
         let dims = NetDims {
             q,
             hidden: self.config.hidden,
@@ -1161,18 +1158,24 @@ impl NativeTrainer {
             coord_dim: self.coord_dim,
         };
         let fg = build_forward(n_heldout, dims, pts.len());
-        let mut inputs: HashMap<NodeId, Tensor> = HashMap::new();
-        for (id, w) in fg.weight_ids.iter().zip(self.weights()) {
-            inputs.insert(*id, w.clone());
+        let prog = Program::compile_inference(&fg.graph, &[fg.u], &fg.weight_ids);
+        let mut exec = Executor::new().with_simd(SimdMode::Off);
+        exec.bind_states(&prog, self.weights().to_vec());
+        let columns: Vec<Tensor> = (0..fg.coords.len())
+            .map(|c| {
+                let col: Vec<f64> =
+                    pts.iter().map(|pt| if c == 0 { pt.0 } else { pt.1 }).collect();
+                Tensor::new(&[pts.len(), 1], col)
+            })
+            .collect();
+        let mut shared: HashMap<NodeId, &Tensor> = HashMap::new();
+        for (&node, col) in fg.coords.iter().zip(&columns) {
+            shared.insert(node, col);
         }
-        inputs.insert(fg.p, p_rows);
-        for (c, &node) in fg.coords.iter().enumerate() {
-            let column: Vec<f64> =
-                pts.iter().map(|pt| if c == 0 { pt.0 } else { pt.1 }).collect();
-            inputs.insert(node, Tensor::new(&[pts.len(), 1], column));
-        }
-        let prog = Program::compile(&fg.graph, &[fg.u]);
-        let pred = prog.eval_once(&inputs).swap_remove(0);
+        let sensor_rows: Vec<&[f64]> = pdata.chunks_exact(q).collect();
+        let rows = exec.run_inference(&prog, fg.p, &sensor_rows, &shared);
+        let flat: Vec<f64> = rows.into_iter().flatten().collect();
+        let pred = Tensor::new(&[n_heldout, pts.len()], flat);
         Ok(Some(NativeValidation {
             rel_l2: pred.rel_l2_error(&truth),
             n_functions: n_heldout,
@@ -1232,10 +1235,9 @@ fn step_with_retry(
 /// recovery attempt has not been spent yet.
 fn is_injected_panic(fault: Option<&FaultCell>, e: &anyhow::Error) -> bool {
     let Some(cell) = fault else { return false };
-    cell.spec().kind == FaultKind::Panic
-        && e.downcast_ref::<TrainError>()
-            .is_some_and(|te| matches!(te, TrainError::WorkerPanic { .. }))
-        && cell.begin_recovery()
+    e.downcast_ref::<TrainError>()
+        .is_some_and(|te| matches!(te, TrainError::WorkerPanic { .. }))
+        && cell.begin_recovery(FaultKind::Panic)
 }
 
 /// The single-program stepping view: everything an `m == 1` step needs

@@ -1,0 +1,345 @@
+//! Warm model registry for the serving path.
+//!
+//! A [`Registry`] maps model ids to trained operators loaded from v2
+//! checkpoints ([`super::checkpoint::load_train`]).  Loading validates
+//! the checkpoint end to end -- CRC, metadata, problem support, weight
+//! shapes -- and rejects anything corrupt or mismatched with a typed
+//! [`RegistryError`], so a serve log line tells the operator exactly
+//! which file is bad and why.
+//!
+//! Models are immutable once loaded and handed out as `Arc<Model>`:
+//! **hot reload** ([`Registry::load`] on an existing id) swaps the map
+//! entry atomically while in-flight requests keep evaluating against
+//! the `Arc` they already hold -- nothing is dropped mid-request.  Each
+//! load bumps a process-wide generation, which serve workers use to
+//! retire cached resident executors compiled against stale weights.
+//!
+//! The executor-resident half lives in [`ResidentModel`]: an
+//! inference-only [`Program`] ([`Program::compile_inference`]) compiled
+//! for one `(batch, points)` shape with the model's weights bound as
+//! executor state.  Workers build one per coalesced batch shape and
+//! reuse it across requests -- the compile-once/run-many machinery the
+//! trainer uses, pointed at query traffic.
+
+use crate::autodiff::{Executor, NodeId, Program};
+use crate::coordinator::checkpoint::{load_train, CheckpointMeta};
+use crate::pde::residual::{build_forward, residual_for, NetDims};
+use crate::pde::ProblemKind;
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// Why a model could not be loaded or looked up.  Every variant names
+/// enough context to act on from a log line alone.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RegistryError {
+    /// the checkpoint file failed to read, verify, or decode
+    Checkpoint { path: String, reason: String },
+    /// the checkpoint is intact but this build cannot serve it
+    Unsupported { path: String, reason: String },
+    /// checkpoint metadata and payload disagree (shape/count drift)
+    Mismatched { path: String, reason: String },
+    /// no model loaded under this id
+    UnknownModel { id: String },
+}
+
+impl std::fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Checkpoint { path, reason } => {
+                write!(f, "checkpoint {path:?} rejected: {reason}")
+            }
+            Self::Unsupported { path, reason } => {
+                write!(f, "checkpoint {path:?} unsupported: {reason}")
+            }
+            Self::Mismatched { path, reason } => {
+                write!(f, "checkpoint {path:?} mismatched: {reason}")
+            }
+            Self::UnknownModel { id } => write!(f, "no model loaded under id {id:?}"),
+        }
+    }
+}
+
+impl std::error::Error for RegistryError {}
+
+/// One loaded operator: immutable trained weights plus everything
+/// needed to compile inference programs for it.
+#[derive(Debug)]
+pub struct Model {
+    pub id: String,
+    /// registry-wide load counter at load time; a reload of the same id
+    /// gets a higher generation, retiring stale resident executors
+    pub generation: u64,
+    pub meta: CheckpointMeta,
+    pub kind: ProblemKind,
+    pub dims: NetDims,
+    /// wb (q,h), wb2 (h,k), wt (d,h), wt2 (h,k)
+    pub weights: Vec<Tensor>,
+}
+
+impl Model {
+    /// Load and fully validate one v2 checkpoint.
+    fn open(id: &str, generation: u64, path: &str) -> Result<Model, RegistryError> {
+        let ckpt = load_train(path).map_err(|e| RegistryError::Checkpoint {
+            path: path.to_string(),
+            reason: format!("{e:#}"),
+        })?;
+        let meta = ckpt.meta;
+        let kind = ProblemKind::parse(&meta.problem)
+            .map_err(|reason| RegistryError::Unsupported { path: path.to_string(), reason })?;
+        let residual = residual_for(kind).ok_or_else(|| RegistryError::Unsupported {
+            path: path.to_string(),
+            reason: format!("problem {:?} has no native residual to serve", meta.problem),
+        })?;
+        let dims = NetDims {
+            q: meta.q as usize,
+            hidden: meta.hidden as usize,
+            k: meta.k as usize,
+            coord_dim: residual.coord_dim(),
+        };
+        let mismatch =
+            |reason: String| RegistryError::Mismatched { path: path.to_string(), reason };
+        if ckpt.weights.len() != 4 {
+            return Err(mismatch(format!(
+                "expected 4 weight tensors (wb, wb2, wt, wt2), found {}",
+                ckpt.weights.len()
+            )));
+        }
+        let want: [Vec<usize>; 4] = [
+            vec![dims.q, dims.hidden],
+            vec![dims.hidden, dims.k],
+            vec![dims.coord_dim, dims.hidden],
+            vec![dims.hidden, dims.k],
+        ];
+        for (i, (w, want)) in ckpt.weights.iter().zip(&want).enumerate() {
+            if w.shape() != &want[..] {
+                return Err(mismatch(format!(
+                    "weight {i} has shape {:?}, metadata implies {want:?}",
+                    w.shape()
+                )));
+            }
+        }
+        Ok(Model { id: id.to_string(), generation, meta, kind, dims, weights: ckpt.weights })
+    }
+
+    /// Compile an inference-only resident program for this model at one
+    /// `(batch, points)` shape and bind the trained weights.
+    pub fn resident(self: &Arc<Self>, m: usize, n_pts: usize, threads: usize) -> ResidentModel {
+        let fg = build_forward(m, self.dims, n_pts);
+        let program = Program::compile_inference(&fg.graph, &[fg.u], &fg.weight_ids);
+        let mut exec = Executor::with_threads(threads);
+        exec.bind_states(&program, self.weights.clone());
+        ResidentModel {
+            model: Arc::clone(self),
+            program,
+            p: fg.p,
+            coords: fg.coords,
+            m,
+            n_pts,
+            exec,
+        }
+    }
+}
+
+/// An inference Program warm in its own executor: weights live in
+/// resident state, each call is one multi-sample batched run.
+pub struct ResidentModel {
+    pub model: Arc<Model>,
+    program: Program,
+    p: NodeId,
+    coords: Vec<NodeId>,
+    m: usize,
+    n_pts: usize,
+    exec: Executor,
+}
+
+impl ResidentModel {
+    pub fn batch_size(&self) -> usize {
+        self.m
+    }
+
+    pub fn n_pts(&self) -> usize {
+        self.n_pts
+    }
+
+    /// Evaluate one coalesced batch: `sensors` holds one q-row per
+    /// sample, `points` is the shared point-major coordinate block
+    /// (`n_pts * coord_dim` values).  Returns one value row per sample.
+    ///
+    /// Panics on shape mismatch -- serve validates requests at
+    /// admission, so a panic here is a real bug (or an injected fault)
+    /// and is absorbed by the worker's panic isolation.
+    pub fn eval(&mut self, sensors: &[&[f64]], points: &[f64]) -> Vec<Vec<f64>> {
+        let dim = self.model.dims.coord_dim;
+        assert_eq!(points.len(), self.n_pts * dim, "coordinate block shape");
+        let columns: Vec<Tensor> = (0..dim)
+            .map(|c| {
+                let col: Vec<f64> = (0..self.n_pts).map(|i| points[i * dim + c]).collect();
+                Tensor::new(&[self.n_pts, 1], col)
+            })
+            .collect();
+        let mut shared: HashMap<NodeId, &Tensor> = HashMap::new();
+        for (node, col) in self.coords.iter().zip(&columns) {
+            shared.insert(*node, col);
+        }
+        self.exec.run_inference(&self.program, self.p, sensors, &shared)
+    }
+}
+
+/// The warm model map: id -> loaded model, hot-reloadable.
+pub struct Registry {
+    models: RwLock<HashMap<String, Arc<Model>>>,
+    generation: AtomicU64,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self { models: RwLock::new(HashMap::new()), generation: AtomicU64::new(0) }
+    }
+
+    /// Load (or hot-reload) a checkpoint under `id`.  On success the new
+    /// model replaces any previous one atomically; requests already
+    /// holding the old `Arc<Model>` finish against it undisturbed.  On
+    /// failure the registry is untouched -- a bad reload never evicts a
+    /// good model.
+    pub fn load(&self, id: &str, path: &str) -> Result<Arc<Model>, RegistryError> {
+        let generation = self.generation.fetch_add(1, Ordering::Relaxed) + 1;
+        let model = Arc::new(Model::open(id, generation, path)?);
+        let mut map = self.models.write().expect("registry lock");
+        map.insert(id.to_string(), Arc::clone(&model));
+        Ok(model)
+    }
+
+    /// The current model under `id`.
+    pub fn get(&self, id: &str) -> Result<Arc<Model>, RegistryError> {
+        let map = self.models.read().expect("registry lock");
+        map.get(id).cloned().ok_or_else(|| RegistryError::UnknownModel { id: id.to_string() })
+    }
+
+    /// Loaded ids, sorted (for logs and `zcs serve` startup output).
+    pub fn ids(&self) -> Vec<String> {
+        let map = self.models.read().expect("registry lock");
+        let mut ids: Vec<String> = map.keys().cloned().collect();
+        ids.sort();
+        ids
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::checkpoint::{save_train, TrainCheckpoint};
+    use crate::rng::{Pcg64, Pcg64Snapshot};
+
+    fn tmp(name: &str) -> String {
+        let dir = std::env::temp_dir().join("zcs_registry_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{}_{name}", std::process::id())).to_string_lossy().into_owned()
+    }
+
+    fn sample_meta() -> CheckpointMeta {
+        CheckpointMeta {
+            problem: "reaction_diffusion".into(),
+            strategy: "zcs".into(),
+            optimizer: "adam".into(),
+            m: 4,
+            n: 16,
+            n_bc: 8,
+            q: 5,
+            hidden: 8,
+            k: 4,
+            lr: 1e-3,
+            seed: 7,
+            bank_size: 8,
+            bank_grid: 32,
+            replicas: 1,
+            threads: 1,
+            simd: "off".into(),
+        }
+    }
+
+    fn sample_ckpt() -> TrainCheckpoint {
+        let meta = sample_meta();
+        let (q, h, k) = (meta.q as usize, meta.hidden as usize, meta.k as usize);
+        let mut rng = Pcg64::new(3, 5);
+        let mut w = |shape: &[usize]| {
+            let n: usize = shape.iter().product();
+            Tensor::new(shape, rng.normals(n))
+        };
+        TrainCheckpoint {
+            meta,
+            step: 3,
+            opt_t: 3,
+            rng: Pcg64Snapshot { state: 1, inc: 2, cached: None },
+            weights: vec![w(&[q, h]), w(&[h, k]), w(&[2, h]), w(&[h, k])],
+            moments: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn loads_serves_and_hot_reloads() {
+        let path = tmp("good.ckpt");
+        save_train(&path, &sample_ckpt(), None).unwrap();
+        let reg = Registry::new();
+        let model = reg.load("op", &path).unwrap();
+        assert_eq!(model.kind, ProblemKind::ReactionDiffusion);
+        assert_eq!(model.dims.coord_dim, 2);
+        assert_eq!(reg.ids(), vec!["op".to_string()]);
+
+        // a resident executor answers a batch, values finite
+        let mut resident = model.resident(2, 3, 1);
+        let s0 = vec![0.1; 5];
+        let s1 = vec![-0.2; 5];
+        let points = vec![0.25, 0.5, 0.5, 0.5, 0.75, 0.5];
+        let rows = resident.eval(&[&s0, &s1], &points);
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|r| r.len() == 3 && r.iter().all(|v| v.is_finite())));
+
+        // hot reload bumps the generation; the old Arc stays usable
+        let reloaded = reg.load("op", &path).unwrap();
+        assert!(reloaded.generation > model.generation);
+        let rows2 = resident.eval(&[&s0, &s1], &points);
+        assert_eq!(rows.len(), rows2.len());
+    }
+
+    #[test]
+    fn rejects_corrupt_and_mismatched_checkpoints_typed() {
+        let reg = Registry::new();
+
+        // corrupt bytes -> Checkpoint, message names the path
+        let bad = tmp("corrupt.ckpt");
+        std::fs::write(&bad, b"ZCSCKPT2 definitely not a checkpoint").unwrap();
+        match reg.load("bad", &bad).unwrap_err() {
+            RegistryError::Checkpoint { path, reason } => {
+                assert!(path.contains("corrupt.ckpt"), "{path}");
+                assert!(!reason.is_empty());
+            }
+            other => panic!("expected Checkpoint error, got {other:?}"),
+        }
+
+        // unsupported problem -> Unsupported
+        let mut ckpt = sample_ckpt();
+        ckpt.meta.problem = "stokes".into();
+        let uns = tmp("unsupported.ckpt");
+        save_train(&uns, &ckpt, None).unwrap();
+        assert!(matches!(reg.load("uns", &uns).unwrap_err(), RegistryError::Unsupported { .. }));
+
+        // weight shapes disagreeing with the metadata -> Mismatched
+        let mut ckpt = sample_ckpt();
+        ckpt.weights[0] = Tensor::zeros(&[3, 3]);
+        let mis = tmp("mismatched.ckpt");
+        save_train(&mis, &ckpt, None).unwrap();
+        assert!(matches!(reg.load("mis", &mis).unwrap_err(), RegistryError::Mismatched { .. }));
+
+        // nothing bad ever landed in the map
+        assert!(reg.ids().is_empty());
+        assert!(matches!(reg.get("bad").unwrap_err(), RegistryError::UnknownModel { .. }));
+    }
+}

@@ -30,6 +30,7 @@ pub mod pde;
 pub mod rng;
 pub mod runtime;
 pub mod sampler;
+pub mod serve;
 pub mod solvers;
 pub mod tensor;
 pub mod util;

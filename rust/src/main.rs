@@ -39,6 +39,8 @@ fn dispatch(args: &[String]) -> Result<()> {
         "list" => cmd_list(rest),
         "solve" => cmd_solve(rest),
         "fields" => cmd_fields(rest),
+        "serve" => cmd_serve(rest),
+        "query" => cmd_query(rest),
         "help" | "--help" | "-h" => {
             print!(
                 "zcs -- Zero Coordinate Shift reproduction (rust + jax + pallas)\n\n\
@@ -52,7 +54,11 @@ fn dispatch(args: &[String]) -> Result<()> {
                  \x20          --native for compiled tape programs)\n\
                  \x20 list     list available artifacts\n\
                  \x20 solve    run a reference PDE solver demo\n\
-                 \x20 fields   dump true-vs-predicted Stokes fields (Fig. 3)\n\n\
+                 \x20 fields   dump true-vs-predicted Stokes fields (Fig. 3)\n\
+                 \x20 serve    serve trained checkpoints over TCP through\n\
+                 \x20          inference-only programs (deadlines, admission\n\
+                 \x20          control, graceful drain)\n\
+                 \x20 query    query a running `zcs serve` instance\n\n\
                  run `zcs <command> --help` for options\n"
             );
             Ok(())
@@ -740,5 +746,152 @@ fn cmd_fields(args: &[String]) -> Result<()> {
     let out_dir = p.get("out").to_string();
     zcs::coordinator::fields::dump_stokes_fields(config, &out_dir)?;
     println!("fields written under {out_dir}");
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    use std::sync::Arc;
+    use std::time::Duration;
+    use zcs::coordinator::registry::Registry;
+    use zcs::serve::{serve, ServeConfig};
+    let opts = Opts::new("zcs serve", "serve trained operators over TCP (inference-only programs)")
+        .opt("model", "", "model to load, as id=path/to.ckpt; comma-separate several")
+        .opt("addr", "127.0.0.1:7207", "bind address (port 0 = OS-assigned)")
+        .opt("queue-cap", "64", "bounded admission queue; overflow is shed typed (overloaded)")
+        .opt("max-batch", "8", "max requests coalesced into one batched evaluation")
+        .opt("linger-ms", "2", "how long the dispatcher waits to coalesce compatible requests")
+        .opt("workers", "2", "evaluation worker threads (panic-isolated)")
+        .opt("threads", "1", "executor kernel threads per worker")
+        .opt("shutdown-file", "", "drain and exit when this file appears (SIGTERM stand-in)")
+        .switch("stdin-close", "also drain when stdin reaches EOF (supervised pipelines)")
+        .switch("help", "show usage");
+    let p = opts.parse(args)?;
+    if p.switch("help") {
+        print!("{}", opts.usage());
+        return Ok(());
+    }
+    let spec = p.get("model");
+    if spec.is_empty() {
+        bail!("--model id=path/to.ckpt is required (comma-separate several)");
+    }
+    let registry = Arc::new(Registry::new());
+    for part in spec.split(',') {
+        let part = part.trim();
+        let (id, path) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow!("bad --model entry {part:?}: want id=path/to.ckpt"))?;
+        let model = registry.load(id, path)?;
+        println!(
+            "loaded model {:?}: {} [{}] q={} hidden={} k={} (generation {})",
+            model.id,
+            model.kind.name(),
+            model.meta.strategy,
+            model.dims.q,
+            model.dims.hidden,
+            model.dims.k,
+            model.generation
+        );
+    }
+    let cfg = ServeConfig {
+        addr: p.get("addr").to_string(),
+        queue_cap: p.get_usize("queue-cap")?.max(1),
+        max_batch: p.get_usize("max-batch")?.max(1),
+        linger: Duration::from_millis(p.get_u64("linger-ms")?),
+        workers: p.get_usize("workers")?.max(1),
+        threads: p.get_usize("threads")?.max(1),
+        shutdown_file: Some(p.get("shutdown-file")).filter(|s| !s.is_empty()).map(String::from),
+        fault: zcs::util::env::env_fault(),
+        ..ServeConfig::default()
+    };
+    let handle = serve(registry, cfg)?;
+    println!(
+        "serving on {} (queue {}, batch {}, workers {})",
+        handle.addr(),
+        p.get("queue-cap"),
+        p.get("max-batch"),
+        p.get("workers")
+    );
+    if p.switch("stdin-close") {
+        let trigger = handle.trigger();
+        std::thread::spawn(move || {
+            use std::io::Read;
+            let mut sink = Vec::new();
+            let _ = std::io::stdin().lock().read_to_end(&mut sink);
+            trigger.fire();
+        });
+    }
+    let report = handle.join();
+    println!(
+        "drained: served {} shed {} deadline-missed {} failed {} bad {} \
+         (evals {}, retries {}, conns {}, dropped {})",
+        report.served,
+        report.shed,
+        report.deadline_missed,
+        report.failed,
+        report.bad_requests,
+        report.evals,
+        report.retries,
+        report.conns,
+        report.conns_dropped
+    );
+    Ok(())
+}
+
+fn cmd_query(args: &[String]) -> Result<()> {
+    use zcs::serve::wire::{EvalRequest, Status};
+    use zcs::serve::Client;
+    let opts = Opts::new("zcs query", "query a running `zcs serve` instance")
+        .opt("addr", "127.0.0.1:7207", "server address (ip:port)")
+        .opt("model", "op", "model id on the server")
+        .opt("deadline-ms", "1000", "request time budget; 0 = already expired")
+        .opt("sensors", "", "comma-separated branch sensor values (one q-row)")
+        .opt("points", "", "comma-separated point-major coordinates (n_pts x coord-dim values)")
+        .opt("coord-dim", "2", "coordinate dimension of --points")
+        .switch("shutdown", "ask the server to drain instead of querying")
+        .switch("help", "show usage");
+    let p = opts.parse(args)?;
+    if p.switch("help") {
+        print!("{}", opts.usage());
+        return Ok(());
+    }
+    let addr: std::net::SocketAddr = p
+        .get("addr")
+        .parse()
+        .map_err(|e| anyhow!("invalid value {:?} for --addr: {e}", p.get("addr")))?;
+    let mut client = Client::connect(&addr)?;
+    if p.switch("shutdown") {
+        let resp = client.shutdown()?;
+        println!("status: {}", resp.status.name());
+        return Ok(());
+    }
+    let floats = |flag: &str, v: &str| -> Result<Vec<f64>> {
+        v.split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<f64>()
+                    .map_err(|e| anyhow!("invalid value {s:?} in --{flag}: {e}"))
+            })
+            .collect()
+    };
+    let sensors = floats("sensors", p.get("sensors"))?;
+    let points = floats("points", p.get("points"))?;
+    let req = EvalRequest {
+        model: p.get("model").to_string(),
+        deadline_ms: p.get_u64("deadline-ms")?,
+        coord_dim: p.get_usize("coord-dim")?.try_into().map_err(|_| anyhow!("--coord-dim"))?,
+        sensors,
+        points,
+    };
+    let resp = client.eval(&req)?;
+    println!("status: {}", resp.status.name());
+    if resp.retries > 0 {
+        println!("retries: {}", resp.retries);
+    }
+    if resp.status == Status::Ok {
+        let vals: Vec<String> = resp.values.iter().map(|v| format!("{v:.6e}")).collect();
+        println!("values: {}", vals.join(" "));
+    } else {
+        println!("error: {}", resp.error);
+    }
     Ok(())
 }

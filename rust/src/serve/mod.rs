@@ -1,0 +1,681 @@
+//! Hardened operator serving: `zcs serve`.
+//!
+//! A pure-std TCP server that evaluates trained operators through
+//! inference-only [`Program`](crate::autodiff::Program)s
+//! ([`Program::compile_inference`](crate::autodiff::Program::compile_inference))
+//! resident in warm executors.  The design is degradation-first --
+//! every way a request can fail maps to one typed
+//! [`Status`](wire::Status) the client can act on:
+//!
+//! * **load shedding** -- admission goes through a *bounded* queue;
+//!   when it is full the request is refused with `Overloaded`
+//!   immediately instead of queueing without bound;
+//! * **deadlines** -- every request carries a time budget.  A request
+//!   that expires in the queue is answered `DeadlineExceeded` and
+//!   *never reaches an executor*; one that expires during evaluation
+//!   is answered `DeadlineExceeded` instead of a stale `Ok`;
+//! * **panic isolation + bounded retry** -- evaluation runs under
+//!   `catch_unwind` on worker threads (on top of the executor pool's
+//!   own panic draining, [`crate::util::pool`]); a panicked batch is
+//!   retried once on a freshly compiled resident executor, then fails
+//!   typed with `EvalFailed`;
+//! * **graceful drain** -- shutdown (a [`wire::Frame::Shutdown`]
+//!   frame, [`ServerHandle::shutdown`], or the `--shutdown-file`
+//!   flag file appearing) stops accepting, finishes everything
+//!   already admitted, answers it, and only then exits.
+//!
+//! Requests for the same model with the bit-identical coordinate
+//! block are **coalesced** by a dispatcher into one multi-sample
+//! batched program execution (up to `max_batch`, waiting at most
+//! `linger`), so concurrent query traffic rides the same batched
+//! forward pass the trainer uses.
+//!
+//! Fault injection: `ZCS_FAULT=eval-panic:K` panics the K-th
+//! evaluation attempt, `slow:K` stalls it, `conn-drop:K` drops the
+//! K-th accepted connection ([`crate::util::env::parse_fault`]).
+
+pub mod wire;
+
+use crate::coordinator::registry::{Model, Registry, ResidentModel};
+use crate::util::env::{FaultCell, FaultKind};
+use anyhow::{anyhow, Context, Result};
+use std::any::Any;
+use std::collections::{HashMap, VecDeque};
+use std::io::ErrorKind;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+use self::wire::{EvalRequest, EvalResponse, Frame, Status};
+
+/// How many resident executors one worker keeps warm before evicting.
+const RESIDENT_CACHE_CAP: usize = 8;
+
+/// Server knobs.  Defaults are sized for tests; `zcs serve` overrides
+/// from the command line.
+#[derive(Clone)]
+pub struct ServeConfig {
+    /// bind address; use port 0 to let the OS pick (tests)
+    pub addr: String,
+    /// bounded admission queue capacity; overflow is shed typed
+    pub queue_cap: usize,
+    /// max requests coalesced into one batched program execution
+    pub max_batch: usize,
+    /// how long the dispatcher waits for compatible requests
+    pub linger: Duration,
+    /// evaluation worker threads (each owns its resident executors)
+    pub workers: usize,
+    /// executor pool threads per worker
+    pub threads: usize,
+    /// touch this file to request a graceful drain (SIGTERM stand-in)
+    pub shutdown_file: Option<String>,
+    /// injected faults; `zcs serve` wires `ZCS_FAULT` through here
+    pub fault: Option<Arc<FaultCell>>,
+    /// how long an injected `slow:K` fault stalls an evaluation
+    pub slow_stall: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:0".to_string(),
+            queue_cap: 64,
+            max_batch: 8,
+            linger: Duration::from_millis(2),
+            workers: 2,
+            threads: 1,
+            shutdown_file: None,
+            fault: None,
+            slow_stall: Duration::from_millis(300),
+        }
+    }
+}
+
+/// Lifetime totals, snapshotted when the server drains.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ServeReport {
+    /// requests admitted to the queue
+    pub admitted: u64,
+    /// requests answered `Ok`
+    pub served: u64,
+    /// requests shed at admission (`Overloaded`)
+    pub shed: u64,
+    /// requests answered `DeadlineExceeded`
+    pub deadline_missed: u64,
+    /// requests answered `BadRequest` (including wire errors)
+    pub bad_requests: u64,
+    /// batched program evaluation attempts started
+    pub evals: u64,
+    /// evaluation attempts that were retries after a panic
+    pub retries: u64,
+    /// requests answered `EvalFailed`
+    pub failed: u64,
+    /// connections accepted
+    pub conns: u64,
+    /// connections dropped by the `conn-drop` fault
+    pub conns_dropped: u64,
+}
+
+#[derive(Default)]
+struct Counters {
+    admitted: AtomicU64,
+    served: AtomicU64,
+    shed: AtomicU64,
+    deadline_missed: AtomicU64,
+    bad_requests: AtomicU64,
+    evals: AtomicU64,
+    retries: AtomicU64,
+    failed: AtomicU64,
+    conns: AtomicU64,
+    conns_dropped: AtomicU64,
+}
+
+impl Counters {
+    fn snapshot(&self) -> ServeReport {
+        let get = |c: &AtomicU64| c.load(Ordering::Acquire);
+        ServeReport {
+            admitted: get(&self.admitted),
+            served: get(&self.served),
+            shed: get(&self.shed),
+            deadline_missed: get(&self.deadline_missed),
+            bad_requests: get(&self.bad_requests),
+            evals: get(&self.evals),
+            retries: get(&self.retries),
+            failed: get(&self.failed),
+            conns: get(&self.conns),
+            conns_dropped: get(&self.conns_dropped),
+        }
+    }
+}
+
+/// One admitted request on its way to an executor.
+struct Job {
+    model: Arc<Model>,
+    sensors: Vec<f64>,
+    points: Vec<f64>,
+    deadline: Instant,
+    resp: mpsc::Sender<EvalResponse>,
+}
+
+impl Job {
+    /// Coalescing rule: same loaded model (pointer identity, so a hot
+    /// reload splits batches) and the bit-identical coordinate block.
+    fn compatible(&self, other: &Job) -> bool {
+        Arc::ptr_eq(&self.model, &other.model)
+            && self.points.len() == other.points.len()
+            && self.points.iter().zip(&other.points).all(|(a, b)| a.to_bits() == b.to_bits())
+    }
+}
+
+/// A bounded MPMC queue with close semantics.
+struct Queue<T> {
+    inner: Mutex<QueueInner<T>>,
+    cv: Condvar,
+    cap: usize,
+}
+
+struct QueueInner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> Queue<T> {
+    fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "a queue needs capacity");
+        let inner = Mutex::new(QueueInner { items: VecDeque::new(), closed: false });
+        Self { inner, cv: Condvar::new(), cap }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, QueueInner<T>> {
+        self.inner.lock().expect("serve queue lock")
+    }
+
+    /// Non-blocking admission: the item comes back on overflow so the
+    /// caller can answer `Overloaded`.
+    fn try_push(&self, item: T) -> std::result::Result<(), T> {
+        let mut g = self.lock();
+        if g.closed || g.items.len() >= self.cap {
+            return Err(item);
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Blocking push (dispatcher -> workers backpressure).  Fails only
+    /// after close.
+    fn push_wait(&self, item: T) -> std::result::Result<(), T> {
+        let mut g = self.lock();
+        loop {
+            if g.closed {
+                return Err(item);
+            }
+            if g.items.len() < self.cap {
+                g.items.push_back(item);
+                drop(g);
+                self.cv.notify_all();
+                return Ok(());
+            }
+            g = self.cv.wait(g).expect("serve queue lock");
+        }
+    }
+
+    /// Blocking pop; `None` once the queue is closed *and* empty.
+    fn pop_wait(&self) -> Option<T> {
+        let mut g = self.lock();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                drop(g);
+                self.cv.notify_all();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.cv.wait(g).expect("serve queue lock");
+        }
+    }
+
+    /// Pop the first item matching `pred`, waiting until `until` for
+    /// one to arrive.  `None` on timeout or close-and-no-match.
+    fn pop_matching_until(&self, pred: impl Fn(&T) -> bool, until: Instant) -> Option<T> {
+        let mut g = self.lock();
+        loop {
+            if let Some(i) = g.items.iter().position(&pred) {
+                let item = g.items.remove(i).expect("position just found");
+                drop(g);
+                self.cv.notify_all();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= until {
+                return None;
+            }
+            g = self.cv.wait_timeout(g, until - now).expect("serve queue lock").0;
+        }
+    }
+
+    fn close(&self) {
+        self.lock().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+struct ServerCtx {
+    registry: Arc<Registry>,
+    admission: Queue<Job>,
+    work: Queue<Vec<Job>>,
+    counters: Counters,
+    shutdown: Arc<AtomicBool>,
+    /// admitted requests whose response has not been written yet
+    in_flight: AtomicU64,
+    fault: Option<Arc<FaultCell>>,
+    threads: usize,
+    slow_stall: Duration,
+}
+
+/// A running server.  Drop the handle without `join` and the server
+/// keeps running until told to shut down.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    join: thread::JoinHandle<ServeReport>,
+}
+
+/// A cloneable token that can request a drain from any thread (the
+/// `zcs serve` stdin watcher uses one).
+#[derive(Clone)]
+pub struct ShutdownTrigger(Arc<AtomicBool>);
+
+impl ShutdownTrigger {
+    pub fn fire(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+}
+
+impl ServerHandle {
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Request a graceful drain; returns immediately.
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::Release);
+    }
+
+    /// A detached drain trigger usable from other threads.
+    pub fn trigger(&self) -> ShutdownTrigger {
+        ShutdownTrigger(Arc::clone(&self.shutdown))
+    }
+
+    /// Wait for the drain to finish and collect the totals.
+    pub fn join(self) -> ServeReport {
+        self.join.join().expect("server thread panicked")
+    }
+}
+
+/// Bind and start serving `registry` per `cfg`.
+pub fn serve(registry: Arc<Registry>, cfg: ServeConfig) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(&cfg.addr)
+        .with_context(|| format!("binding serve listener on {}", cfg.addr))?;
+    let addr = listener.local_addr().context("resolving serve listener address")?;
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let ctx = Arc::new(ServerCtx {
+        registry,
+        admission: Queue::new(cfg.queue_cap),
+        work: Queue::new(cfg.workers.max(1)),
+        counters: Counters::default(),
+        shutdown: Arc::clone(&shutdown),
+        in_flight: AtomicU64::new(0),
+        fault: cfg.fault.clone(),
+        threads: cfg.threads,
+        slow_stall: cfg.slow_stall,
+    });
+    let join = thread::Builder::new()
+        .name("zcs-serve".to_string())
+        .spawn(move || run_server(ctx, listener, cfg))
+        .context("spawning serve thread")?;
+    Ok(ServerHandle { addr, shutdown, join })
+}
+
+fn run_server(ctx: Arc<ServerCtx>, listener: TcpListener, cfg: ServeConfig) -> ServeReport {
+    let dispatcher = {
+        let ctx = Arc::clone(&ctx);
+        let max_batch = cfg.max_batch.max(1);
+        let linger = cfg.linger;
+        thread::spawn(move || dispatch_loop(&ctx, max_batch, linger))
+    };
+    let workers: Vec<_> = (0..cfg.workers.max(1))
+        .map(|_| {
+            let ctx = Arc::clone(&ctx);
+            thread::spawn(move || worker_loop(&ctx))
+        })
+        .collect();
+
+    listener.set_nonblocking(true).expect("nonblocking serve listener");
+    let conn_streams: Mutex<Vec<TcpStream>> = Mutex::new(Vec::new());
+    let mut conn_threads = Vec::new();
+    let mut accepted: u64 = 0;
+    while !ctx.shutdown.load(Ordering::Acquire) {
+        if let Some(f) = &cfg.shutdown_file {
+            if Path::new(f).exists() {
+                ctx.shutdown.store(true, Ordering::Release);
+                break;
+            }
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                accepted += 1;
+                ctx.counters.conns.fetch_add(1, Ordering::AcqRel);
+                let dropped = ctx
+                    .fault
+                    .as_ref()
+                    .is_some_and(|f| f.should_fire(FaultKind::ConnDrop, accepted));
+                if dropped {
+                    ctx.counters.conns_dropped.fetch_add(1, Ordering::AcqRel);
+                    drop(stream);
+                    continue;
+                }
+                if let Ok(clone) = stream.try_clone() {
+                    conn_streams.lock().expect("conn stream list").push(clone);
+                }
+                let ctx = Arc::clone(&ctx);
+                conn_threads.push(thread::spawn(move || conn_loop(stream, &ctx)));
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => thread::sleep(Duration::from_millis(5)),
+        }
+    }
+
+    // Drain: stop accepting, let everything already admitted finish
+    // and get answered, then unblock idle connections and exit.
+    drop(listener);
+    ctx.admission.close();
+    dispatcher.join().expect("dispatcher thread panicked");
+    ctx.work.close();
+    for w in workers {
+        w.join().expect("worker thread panicked");
+    }
+    let drain_start = Instant::now();
+    while ctx.in_flight.load(Ordering::Acquire) > 0
+        && drain_start.elapsed() < Duration::from_secs(10)
+    {
+        thread::sleep(Duration::from_millis(2));
+    }
+    for s in conn_streams.lock().expect("conn stream list").iter() {
+        let _ = s.shutdown(std::net::Shutdown::Both);
+    }
+    for c in conn_threads {
+        let _ = c.join();
+    }
+    ctx.counters.snapshot()
+}
+
+fn conn_loop(mut stream: TcpStream, ctx: &ServerCtx) {
+    let _ = stream.set_nodelay(true);
+    loop {
+        let frame = match wire::read_frame(&mut stream) {
+            Ok(Ok(frame)) => frame,
+            Ok(Err(werr)) => {
+                // framing is gone on this connection: answer typed,
+                // then hang up rather than resynchronise garbage
+                ctx.counters.bad_requests.fetch_add(1, Ordering::AcqRel);
+                let resp = EvalResponse::failure(Status::BadRequest, format!("wire error: {werr}"));
+                let _ = wire::write_frame(&mut stream, &Frame::Response(resp));
+                return;
+            }
+            Err(_) => return, // EOF or reset
+        };
+        match frame {
+            Frame::Shutdown => {
+                ctx.shutdown.store(true, Ordering::Release);
+                let ack = EvalResponse {
+                    status: Status::Ok,
+                    retries: 0,
+                    error: "draining".to_string(),
+                    values: Vec::new(),
+                };
+                let _ = wire::write_frame(&mut stream, &Frame::Response(ack));
+                return;
+            }
+            Frame::Response(_) => {
+                ctx.counters.bad_requests.fetch_add(1, Ordering::AcqRel);
+                return;
+            }
+            Frame::Request(req) => {
+                let (resp, admitted) = handle_request(ctx, req);
+                let write_ok = wire::write_frame(&mut stream, &Frame::Response(resp)).is_ok();
+                if admitted {
+                    ctx.in_flight.fetch_sub(1, Ordering::AcqRel);
+                }
+                if !write_ok || ctx.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Validate, admit, and wait for the answer.  The bool says whether
+/// the request was admitted (and thus holds an `in_flight` slot until
+/// the caller has written the response).
+fn handle_request(ctx: &ServerCtx, req: EvalRequest) -> (EvalResponse, bool) {
+    let bad = |msg: String| {
+        ctx.counters.bad_requests.fetch_add(1, Ordering::AcqRel);
+        (EvalResponse::failure(Status::BadRequest, msg), false)
+    };
+    let model = match ctx.registry.get(&req.model) {
+        Ok(model) => model,
+        Err(e) => return bad(e.to_string()),
+    };
+    if req.coord_dim as usize != model.dims.coord_dim {
+        return bad(format!(
+            "model {:?} wants coord_dim {}, request has {}",
+            model.id, model.dims.coord_dim, req.coord_dim
+        ));
+    }
+    if req.sensors.len() != model.dims.q {
+        return bad(format!(
+            "model {:?} wants {} sensor values, request has {}",
+            model.id,
+            model.dims.q,
+            req.sensors.len()
+        ));
+    }
+    if req.points.is_empty() {
+        return bad("request has no evaluation points".to_string());
+    }
+    let deadline = Instant::now() + Duration::from_millis(req.deadline_ms);
+    let (tx, rx) = mpsc::channel();
+    let job = Job { model, sensors: req.sensors, points: req.points, deadline, resp: tx };
+    if ctx.admission.try_push(job).is_err() {
+        ctx.counters.shed.fetch_add(1, Ordering::AcqRel);
+        let msg = "admission queue full, request shed".to_string();
+        return (EvalResponse::failure(Status::Overloaded, msg), false);
+    }
+    ctx.counters.admitted.fetch_add(1, Ordering::AcqRel);
+    ctx.in_flight.fetch_add(1, Ordering::AcqRel);
+    match rx.recv() {
+        Ok(resp) => (resp, true),
+        Err(_) => {
+            let msg = "request dropped during shutdown".to_string();
+            (EvalResponse::failure(Status::EvalFailed, msg), true)
+        }
+    }
+}
+
+fn respond_deadline(ctx: &ServerCtx, job: &Job, where_: &str) {
+    ctx.counters.deadline_missed.fetch_add(1, Ordering::AcqRel);
+    let msg = format!("deadline expired {where_}");
+    let _ = job.resp.send(EvalResponse::failure(Status::DeadlineExceeded, msg));
+}
+
+/// Pull admitted jobs, expire the dead ones *before* they reach any
+/// executor, coalesce compatible ones, hand batches to workers.
+fn dispatch_loop(ctx: &ServerCtx, max_batch: usize, linger: Duration) {
+    while let Some(job) = ctx.admission.pop_wait() {
+        if job.deadline <= Instant::now() {
+            respond_deadline(ctx, &job, "in the admission queue");
+            continue;
+        }
+        let mut batch = vec![job];
+        let linger_end = Instant::now() + linger;
+        while batch.len() < max_batch {
+            let lead = &batch[0];
+            match ctx.admission.pop_matching_until(|j| lead.compatible(j), linger_end) {
+                Some(j) => batch.push(j),
+                None => break,
+            }
+        }
+        if ctx.work.push_wait(batch).is_err() {
+            // only after a hard close; the drain path never hits this
+            return;
+        }
+    }
+}
+
+fn panic_text(e: Box<dyn Any + Send>) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        return (*s).to_string();
+    }
+    if let Some(s) = e.downcast_ref::<String>() {
+        return s.clone();
+    }
+    "opaque panic payload".to_string()
+}
+
+/// Evaluate batches on panic-isolated resident executors.
+fn worker_loop(ctx: &ServerCtx) {
+    // (model id, generation, batch, n_pts) -> warm resident executor
+    let mut cache: HashMap<(String, u64, usize, usize), ResidentModel> = HashMap::new();
+    while let Some(batch) = ctx.work.pop_wait() {
+        let now = Instant::now();
+        let (live, expired): (Vec<Job>, Vec<Job>) =
+            batch.into_iter().partition(|j| j.deadline > now);
+        for job in &expired {
+            respond_deadline(ctx, job, "waiting for an executor");
+        }
+        let Some(lead) = live.first() else { continue };
+        let model = Arc::clone(&lead.model);
+        let m = live.len();
+        let n_pts = lead.points.len() / model.dims.coord_dim;
+        let key = (model.id.clone(), model.generation, m, n_pts);
+        let sensors: Vec<&[f64]> = live.iter().map(|j| j.sensors.as_slice()).collect();
+
+        let mut retried = false;
+        let outcome = loop {
+            if !cache.contains_key(&key) {
+                // retire executors compiled against stale generations
+                // of this model, and keep the cache bounded
+                cache.retain(|k, _| k.0 != model.id || k.1 == model.generation);
+                if cache.len() >= RESIDENT_CACHE_CAP {
+                    cache.clear();
+                }
+                cache.insert(key.clone(), model.resident(m, n_pts, ctx.threads));
+            }
+            let resident = cache.get_mut(&key).expect("just inserted");
+            let attempt = ctx.counters.evals.fetch_add(1, Ordering::AcqRel) + 1;
+            if retried {
+                ctx.counters.retries.fetch_add(1, Ordering::AcqRel);
+            }
+            if let Some(f) = &ctx.fault {
+                if f.should_fire(FaultKind::Slow, attempt) {
+                    thread::sleep(ctx.slow_stall);
+                }
+            }
+            let inject =
+                ctx.fault.as_ref().is_some_and(|f| f.should_fire(FaultKind::EvalPanic, attempt));
+            let result = catch_unwind(AssertUnwindSafe(|| {
+                if inject {
+                    panic!("injected eval panic (attempt {attempt})");
+                }
+                resident.eval(&sensors, &lead.points)
+            }));
+            match result {
+                Ok(rows) => break Ok(rows),
+                Err(payload) => {
+                    // don't trust an executor a panic unwound through:
+                    // recompile fresh for the one bounded retry
+                    cache.remove(&key);
+                    if retried {
+                        break Err(panic_text(payload));
+                    }
+                    retried = true;
+                }
+            }
+        };
+        let retries = u8::from(retried);
+        match outcome {
+            Ok(rows) => {
+                let done = Instant::now();
+                for (job, row) in live.iter().zip(rows) {
+                    if job.deadline <= done {
+                        respond_deadline(ctx, job, "during evaluation");
+                        continue;
+                    }
+                    ctx.counters.served.fetch_add(1, Ordering::AcqRel);
+                    let resp = EvalResponse {
+                        status: Status::Ok,
+                        retries,
+                        error: String::new(),
+                        values: row,
+                    };
+                    let _ = job.resp.send(resp);
+                }
+            }
+            Err(text) => {
+                for job in &live {
+                    ctx.counters.failed.fetch_add(1, Ordering::AcqRel);
+                    let msg = format!("evaluation panicked twice, giving up: {text}");
+                    let _ = job.resp.send(EvalResponse::failure(Status::EvalFailed, msg));
+                }
+            }
+        }
+    }
+}
+
+/// A blocking client for one serve connection.  Used by `zcs query`,
+/// the integration tests, and the serve benchmark.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &SocketAddr) -> Result<Self> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        Ok(Self { stream })
+    }
+
+    fn roundtrip(&mut self, frame: &Frame) -> Result<EvalResponse> {
+        wire::write_frame(&mut self.stream, frame).context("writing request frame")?;
+        let frame = wire::read_frame(&mut self.stream)
+            .context("reading response frame")?
+            .map_err(|werr| anyhow!("protocol error in response: {werr}"))?;
+        match frame {
+            Frame::Response(resp) => Ok(resp),
+            other => Err(anyhow!("expected a response frame, got {other:?}")),
+        }
+    }
+
+    /// Evaluate one request; the typed outcome is in the response's
+    /// [`Status`], transport failures in the `Err`.
+    pub fn eval(&mut self, req: &EvalRequest) -> Result<EvalResponse> {
+        self.roundtrip(&Frame::Request(req.clone()))
+    }
+
+    /// Ask the server to drain; the ack confirms it heard us.
+    pub fn shutdown(&mut self) -> Result<EvalResponse> {
+        self.roundtrip(&Frame::Shutdown)
+    }
+}

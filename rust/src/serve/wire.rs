@@ -1,0 +1,373 @@
+//! Length-prefixed, CRC-framed wire protocol for `zcs serve`.
+//!
+//! One frame on the wire is
+//!
+//! ```text
+//! magic "ZCSW" (4) | kind (1) | payload_len u32 LE (4) | payload | crc32 u32 LE (4)
+//! ```
+//!
+//! where the CRC (the checkpoint layer's [`crc32`]) covers everything
+//! before it -- header *and* payload -- so any torn or bit-flipped
+//! frame decodes to a typed [`WireError`] instead of garbage numbers.
+//! All multi-byte integers and floats are little-endian; strings are
+//! `u16` length + UTF-8.
+//!
+//! The decoder is total: every truncation prefix and every corrupted
+//! byte of a valid frame yields `Err(WireError::..)`, never a panic or
+//! a silently wrong [`Frame`].  The serve property tests pin exactly
+//! that.
+
+use crate::coordinator::checkpoint::crc32;
+use std::io::{Read, Write};
+
+/// Frame magic: "ZCSW" -- ZCS wire.
+pub const MAGIC: [u8; 4] = *b"ZCSW";
+/// Header bytes before the payload: magic + kind + payload length.
+pub const HEADER: usize = 9;
+/// Hard cap on payload size; larger length prefixes are malformed.
+pub const MAX_PAYLOAD: usize = 1 << 24;
+
+const KIND_REQUEST: u8 = 1;
+const KIND_RESPONSE: u8 = 2;
+const KIND_SHUTDOWN: u8 = 3;
+
+/// Why a byte buffer is not a frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// fewer bytes than the frame claims; `need` is the total required
+    Truncated { what: &'static str, need: usize, have: usize },
+    /// first four bytes are not [`MAGIC`]
+    BadMagic([u8; 4]),
+    /// unknown frame kind byte
+    BadKind(u8),
+    /// checksum trailer disagrees with the received bytes
+    BadCrc { stored: u32, computed: u32 },
+    /// structurally invalid payload (bad lengths, counts, UTF-8, ...)
+    Malformed(&'static str),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Truncated { what, need, have } => {
+                write!(f, "truncated frame: {what} needs {need} bytes, have {have}")
+            }
+            Self::BadMagic(m) => write!(f, "bad frame magic {m:?} (want {MAGIC:?})"),
+            Self::BadKind(k) => write!(f, "unknown frame kind {k}"),
+            Self::BadCrc { stored, computed } => {
+                write!(f, "frame CRC mismatch: stored {stored:#010x}, computed {computed:#010x}")
+            }
+            Self::Malformed(what) => write!(f, "malformed frame: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Terminal status of one request, as carried on the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Status {
+    Ok,
+    /// shed at admission: the bounded queue was full
+    Overloaded,
+    /// the deadline expired before evaluation finished (or started)
+    DeadlineExceeded,
+    /// evaluation panicked and the bounded retry also failed
+    EvalFailed,
+    /// the request itself is invalid (unknown model, bad shapes)
+    BadRequest,
+}
+
+impl Status {
+    fn code(self) -> u8 {
+        match self {
+            Self::Ok => 0,
+            Self::Overloaded => 1,
+            Self::DeadlineExceeded => 2,
+            Self::EvalFailed => 3,
+            Self::BadRequest => 4,
+        }
+    }
+
+    fn from_code(code: u8) -> Option<Self> {
+        match code {
+            0 => Some(Self::Ok),
+            1 => Some(Self::Overloaded),
+            2 => Some(Self::DeadlineExceeded),
+            3 => Some(Self::EvalFailed),
+            4 => Some(Self::BadRequest),
+            _ => None,
+        }
+    }
+
+    /// Stable name used by `zcs query` output and the CI smoke test.
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Ok => "ok",
+            Self::Overloaded => "overloaded",
+            Self::DeadlineExceeded => "deadline-exceeded",
+            Self::EvalFailed => "eval-failed",
+            Self::BadRequest => "bad-request",
+        }
+    }
+}
+
+/// One operator evaluation request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EvalRequest {
+    /// registry model id
+    pub model: String,
+    /// time budget from server receipt; 0 means already expired
+    pub deadline_ms: u64,
+    /// trunk coordinate dimension of `points`
+    pub coord_dim: u8,
+    /// branch sensor values (one q-row)
+    pub sensors: Vec<f64>,
+    /// point-major coordinate block, `n_pts * coord_dim` values
+    pub points: Vec<f64>,
+}
+
+impl EvalRequest {
+    pub fn n_pts(&self) -> usize {
+        self.points.len() / self.coord_dim.max(1) as usize
+    }
+}
+
+/// The server's answer: a status plus values on success.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EvalResponse {
+    pub status: Status,
+    /// evaluation attempts beyond the first (0 or 1)
+    pub retries: u8,
+    /// human-readable detail for non-`Ok` statuses
+    pub error: String,
+    /// predicted field at the requested points (`Ok` only)
+    pub values: Vec<f64>,
+}
+
+impl EvalResponse {
+    pub fn failure(status: Status, error: impl Into<String>) -> Self {
+        Self { status, retries: 0, error: error.into(), values: Vec::new() }
+    }
+}
+
+/// Everything that can cross the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    Request(EvalRequest),
+    Response(EvalResponse),
+    /// ask the server to drain and exit
+    Shutdown,
+}
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64s(out: &mut Vec<u8>, vs: &[f64]) {
+    put_u32(out, vs.len() as u32);
+    for v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    assert!(s.len() <= u16::MAX as usize, "wire string too long");
+    put_u16(out, s.len() as u16);
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Encode one frame, CRC trailer included.
+pub fn encode(frame: &Frame) -> Vec<u8> {
+    let (kind, payload) = match frame {
+        Frame::Request(req) => {
+            let mut p = Vec::new();
+            put_str(&mut p, &req.model);
+            put_u64(&mut p, req.deadline_ms);
+            p.push(req.coord_dim);
+            put_f64s(&mut p, &req.sensors);
+            put_f64s(&mut p, &req.points);
+            (KIND_REQUEST, p)
+        }
+        Frame::Response(resp) => {
+            let mut p = Vec::new();
+            p.push(resp.status.code());
+            p.push(resp.retries);
+            put_str(&mut p, &resp.error);
+            put_f64s(&mut p, &resp.values);
+            (KIND_RESPONSE, p)
+        }
+        Frame::Shutdown => (KIND_SHUTDOWN, Vec::new()),
+    };
+    assert!(payload.len() <= MAX_PAYLOAD, "frame payload exceeds the wire cap");
+    let mut out = Vec::with_capacity(HEADER + payload.len() + 4);
+    out.extend_from_slice(&MAGIC);
+    out.push(kind);
+    put_u32(&mut out, payload.len() as u32);
+    out.extend_from_slice(&payload);
+    let crc = crc32(&out);
+    put_u32(&mut out, crc);
+    out
+}
+
+/// Bounds-checked payload reader with typed errors.
+struct Rd<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], WireError> {
+        let have = self.buf.len() - self.pos;
+        if have < n {
+            return Err(WireError::Truncated { what, need: n, have });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &'static str) -> Result<u8, WireError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &'static str) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.take(2, what)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self, what: &'static str) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &'static str) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    fn f64s(&mut self, what: &'static str) -> Result<Vec<f64>, WireError> {
+        let n = self.u32(what)? as usize;
+        if n > (self.buf.len() - self.pos) / 8 {
+            return Err(WireError::Malformed("float count exceeds payload"));
+        }
+        let bytes = self.take(n * 8, what)?;
+        Ok(bytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn string(&mut self, what: &'static str) -> Result<String, WireError> {
+        let n = self.u16(what)? as usize;
+        let bytes = self.take(n, what)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| WireError::Malformed("string is not UTF-8"))
+    }
+
+    fn done(self) -> Result<(), WireError> {
+        if self.pos != self.buf.len() {
+            return Err(WireError::Malformed("trailing bytes after payload"));
+        }
+        Ok(())
+    }
+}
+
+fn decode_request(payload: &[u8]) -> Result<EvalRequest, WireError> {
+    let mut rd = Rd::new(payload);
+    let model = rd.string("request model id")?;
+    let deadline_ms = rd.u64("request deadline")?;
+    let coord_dim = rd.u8("request coord_dim")?;
+    let sensors = rd.f64s("request sensors")?;
+    let points = rd.f64s("request points")?;
+    rd.done()?;
+    if coord_dim == 0 {
+        return Err(WireError::Malformed("coord_dim must be at least 1"));
+    }
+    if points.len() % coord_dim as usize != 0 {
+        return Err(WireError::Malformed("points not a multiple of coord_dim"));
+    }
+    Ok(EvalRequest { model, deadline_ms, coord_dim, sensors, points })
+}
+
+fn decode_response(payload: &[u8]) -> Result<EvalResponse, WireError> {
+    let mut rd = Rd::new(payload);
+    let code = rd.u8("response status")?;
+    let status = Status::from_code(code).ok_or(WireError::Malformed("unknown status code"))?;
+    let retries = rd.u8("response retries")?;
+    let error = rd.string("response error")?;
+    let values = rd.f64s("response values")?;
+    rd.done()?;
+    Ok(EvalResponse { status, retries, error, values })
+}
+
+/// Decode one frame from the head of `buf`.  Returns the frame and the
+/// number of bytes consumed (extra trailing bytes are the next frame's
+/// business).
+pub fn decode(buf: &[u8]) -> Result<(Frame, usize), WireError> {
+    if buf.len() < HEADER {
+        return Err(WireError::Truncated { what: "frame header", need: HEADER, have: buf.len() });
+    }
+    let magic: [u8; 4] = buf[..4].try_into().unwrap();
+    if magic != MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    let kind = buf[4];
+    let len = u32::from_le_bytes(buf[5..9].try_into().unwrap()) as usize;
+    if len > MAX_PAYLOAD {
+        return Err(WireError::Malformed("payload length exceeds the wire cap"));
+    }
+    let total = HEADER + len + 4;
+    if buf.len() < total {
+        return Err(WireError::Truncated { what: "frame body", need: total, have: buf.len() });
+    }
+    let stored = u32::from_le_bytes(buf[total - 4..total].try_into().unwrap());
+    let computed = crc32(&buf[..total - 4]);
+    if stored != computed {
+        return Err(WireError::BadCrc { stored, computed });
+    }
+    let payload = &buf[HEADER..total - 4];
+    let frame = match kind {
+        KIND_REQUEST => Frame::Request(decode_request(payload)?),
+        KIND_RESPONSE => Frame::Response(decode_response(payload)?),
+        KIND_SHUTDOWN => {
+            if !payload.is_empty() {
+                return Err(WireError::Malformed("shutdown frame carries no payload"));
+            }
+            Frame::Shutdown
+        }
+        other => return Err(WireError::BadKind(other)),
+    };
+    Ok((frame, total))
+}
+
+/// Read exactly one frame from a stream.  The outer `Err` is transport
+/// (EOF, reset, timeout); the inner `Err` is a protocol violation the
+/// caller should answer with `BadRequest` before hanging up.
+pub fn read_frame<R: Read>(r: &mut R) -> std::io::Result<Result<Frame, WireError>> {
+    let mut header = [0u8; HEADER];
+    r.read_exact(&mut header)?;
+    let magic: [u8; 4] = header[..4].try_into().unwrap();
+    if magic != MAGIC {
+        return Ok(Err(WireError::BadMagic(magic)));
+    }
+    let len = u32::from_le_bytes(header[5..9].try_into().unwrap()) as usize;
+    if len > MAX_PAYLOAD {
+        return Ok(Err(WireError::Malformed("payload length exceeds the wire cap")));
+    }
+    let mut rest = vec![0u8; len + 4];
+    r.read_exact(&mut rest)?;
+    let mut whole = header.to_vec();
+    whole.extend_from_slice(&rest);
+    Ok(decode(&whole).map(|(frame, _)| frame))
+}
+
+/// Write one frame to a stream.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> std::io::Result<()> {
+    w.write_all(&encode(frame))
+}

@@ -13,13 +13,16 @@
 //! test binary.
 //!
 //! `ZCS_FAULT` is the deterministic fault injector behind the
-//! crash-safety layer: `panic:K` makes the stepping engine panic at step
+//! crash-safety layer: a comma-separated list of `kind:K` specs.
+//! Training faults -- `panic:K` makes the stepping engine panic at step
 //! `K`, `nan:K` poisons a gradient buffer with NaN at step `K`, and
 //! `torn-ckpt:K` truncates the checkpoint written at step `K` mid-file.
-//! Each [`FaultCell`] fires **exactly once** (process-wide for the
-//! environment cell), so the recovery path runs under fault and the rest
-//! of the process proceeds normally -- which is what lets CI run the
-//! whole test suite with injection enabled.
+//! Serving faults -- `eval-panic:K` panics the `K`th serve eval attempt,
+//! `slow:K` stalls it, and `conn-drop:K` drops the `K`th accepted
+//! connection.  Each spec in a [`FaultCell`] fires **exactly once**
+//! (process-wide for the environment cell), so the recovery path runs
+//! under fault and the rest of the process proceeds normally -- which is
+//! what lets CI run the whole test suite with injection enabled.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, OnceLock};
@@ -83,26 +86,37 @@ pub enum FaultKind {
     /// truncate the next checkpoint write mid-file (after the CRC is
     /// appended, so the torn file must fail to load)
     TornCkpt,
+    /// panic inside a serve worker's eval attempt (1-based attempt count)
+    EvalPanic,
+    /// stall a serve eval attempt, backing up the admission queue
+    Slow,
+    /// drop an accepted serve connection before reading its request
+    ConnDrop,
 }
 
 /// One deterministic injected fault: what, and at which 1-based training
-/// step.
+/// step (or serve eval attempt / accepted connection).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct FaultSpec {
     pub kind: FaultKind,
     pub step: u64,
 }
 
-/// Parse a `ZCS_FAULT` value: `panic:K`, `nan:K`, or `torn-ckpt:K`.
-pub fn parse_fault(v: &str) -> Result<FaultSpec, String> {
+const FAULT_CHOICES: &str = "panic, nan, torn-ckpt, eval-panic, slow, conn-drop";
+
+/// Parse one `kind:K` fault spec.
+pub fn parse_fault_spec(v: &str) -> Result<FaultSpec, String> {
     let (kind, step) = v
         .split_once(':')
-        .ok_or_else(|| format!("{v:?} is not kind:step; choices: panic, nan, torn-ckpt"))?;
+        .ok_or_else(|| format!("{v:?} is not kind:step; choices: {FAULT_CHOICES}"))?;
     let kind = match kind.trim().to_ascii_lowercase().as_str() {
         "panic" => FaultKind::Panic,
         "nan" => FaultKind::NanGrad,
         "torn-ckpt" => FaultKind::TornCkpt,
-        other => return Err(format!("unknown fault {other:?}; choices: panic, nan, torn-ckpt")),
+        "eval-panic" => FaultKind::EvalPanic,
+        "slow" => FaultKind::Slow,
+        "conn-drop" => FaultKind::ConnDrop,
+        other => return Err(format!("unknown fault {other:?}; choices: {FAULT_CHOICES}")),
     };
     let step = step
         .trim()
@@ -113,62 +127,89 @@ pub fn parse_fault(v: &str) -> Result<FaultSpec, String> {
     Ok(FaultSpec { kind, step })
 }
 
-/// A one-shot fault: fires at most once ([`FaultCell::should_fire`]),
-/// and grants the recovery path at most once ([`FaultCell::begin_recovery`]).
-/// The latch is what keeps a whole test suite green under `ZCS_FAULT`:
-/// the first trainer to reach the step absorbs the fault, recovers, and
-/// every later step runs clean.
+/// Parse a `ZCS_FAULT` value: a comma-separated list of `kind:K` specs,
+/// e.g. `eval-panic:3,slow:7`.  One bad spec rejects the whole value, so
+/// [`knob`]'s warn-on-typo fallback can never half-apply a list.
+pub fn parse_fault(v: &str) -> Result<Vec<FaultSpec>, String> {
+    v.split(',').map(|s| parse_fault_spec(s.trim())).collect()
+}
+
+/// A set of one-shot faults: each spec fires at most once
+/// ([`FaultCell::should_fire`]), and grants its recovery path at most
+/// once ([`FaultCell::begin_recovery`]).  The latch is what keeps a whole
+/// test suite green under `ZCS_FAULT`: the first trainer to reach the
+/// step absorbs the fault, recovers, and every later step runs clean.
 #[derive(Debug)]
 pub struct FaultCell {
-    spec: FaultSpec,
-    fired: AtomicBool,
-    recovered: AtomicBool,
+    specs: Vec<FaultSpec>,
+    fired: Vec<AtomicBool>,
+    recovered: Vec<AtomicBool>,
 }
 
 impl FaultCell {
     pub fn new(spec: FaultSpec) -> Self {
-        Self { spec, fired: AtomicBool::new(false), recovered: AtomicBool::new(false) }
+        Self::multi(vec![spec])
     }
 
-    pub fn spec(&self) -> FaultSpec {
-        self.spec
+    pub fn multi(specs: Vec<FaultSpec>) -> Self {
+        assert!(!specs.is_empty(), "a fault cell needs at least one spec");
+        let fired = specs.iter().map(|_| AtomicBool::new(false)).collect();
+        let recovered = specs.iter().map(|_| AtomicBool::new(false)).collect();
+        Self { specs, fired, recovered }
     }
 
-    /// The fault has not fired yet (recovery snapshots are only worth
+    pub fn specs(&self) -> &[FaultSpec] {
+        &self.specs
+    }
+
+    /// Some spec has not fired yet (recovery snapshots are only worth
     /// taking while this holds).
     pub fn armed(&self) -> bool {
-        !self.fired.load(Ordering::Acquire)
+        self.fired.iter().any(|f| !f.load(Ordering::Acquire))
     }
 
-    /// Whether the fault fires here and now: `kind` and `step` match and
-    /// nobody has fired it before (compare-and-swap, so exactly one call
-    /// site wins even across threads).
+    /// Some spec of `kind` has not fired yet.
+    pub fn expects(&self, kind: FaultKind) -> bool {
+        self.specs
+            .iter()
+            .zip(&self.fired)
+            .any(|(s, f)| s.kind == kind && !f.load(Ordering::Acquire))
+    }
+
+    /// Whether a fault fires here and now: some spec matches `kind` and
+    /// `step` and nobody has fired it before (compare-and-swap, so
+    /// exactly one call site wins even across threads).
     pub fn should_fire(&self, kind: FaultKind, step: u64) -> bool {
-        self.spec.kind == kind
-            && self.spec.step == step
-            && self.fired.compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire).is_ok()
+        self.specs.iter().zip(&self.fired).any(|(s, f)| {
+            s.kind == kind
+                && s.step == step
+                && f.compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire).is_ok()
+        })
     }
 
-    /// Claim the (single) transparent-recovery attempt for a fired fault.
-    /// Returns `false` if the fault never fired or recovery was already
-    /// claimed -- the caller must then surface the error instead.
-    pub fn begin_recovery(&self) -> bool {
-        self.fired.load(Ordering::Acquire)
-            && self
-                .recovered
-                .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
-                .is_ok()
+    /// Claim the (single) transparent-recovery attempt for a fired fault
+    /// of `kind`.  Returns `false` if no such fault fired or every fired
+    /// one already had its recovery claimed -- the caller must then
+    /// surface the error instead.
+    pub fn begin_recovery(&self, kind: FaultKind) -> bool {
+        self.specs.iter().enumerate().any(|(i, s)| {
+            s.kind == kind
+                && self.fired[i].load(Ordering::Acquire)
+                && self.recovered[i]
+                    .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+        })
     }
 }
 
 /// The process-wide `ZCS_FAULT` cell, parsed once: every trainer that
-/// does not carry its own cell shares this one, so the configured fault
+/// does not carry its own cell shares this one, so each configured fault
 /// fires exactly once per process.
 pub fn env_fault() -> Option<Arc<FaultCell>> {
     static CELL: OnceLock<Option<Arc<FaultCell>>> = OnceLock::new();
     CELL.get_or_init(|| {
         knob("ZCS_FAULT", None, |v| parse_fault(v).map(Some))
-            .map(|spec| Arc::new(FaultCell::new(spec)))
+            .map(|specs| Arc::new(FaultCell::multi(specs)))
     })
     .clone()
 }
@@ -210,11 +251,21 @@ mod tests {
 
     #[test]
     fn fault_specs_parse_and_reject() {
-        assert_eq!(parse_fault("panic:3"), Ok(FaultSpec { kind: FaultKind::Panic, step: 3 }));
-        assert_eq!(parse_fault("NAN:1"), Ok(FaultSpec { kind: FaultKind::NanGrad, step: 1 }));
+        assert_eq!(
+            parse_fault("panic:3"),
+            Ok(vec![FaultSpec { kind: FaultKind::Panic, step: 3 }])
+        );
+        assert_eq!(
+            parse_fault("NAN:1"),
+            Ok(vec![FaultSpec { kind: FaultKind::NanGrad, step: 1 }])
+        );
         assert_eq!(
             parse_fault(" torn-ckpt : 12 "),
-            Ok(FaultSpec { kind: FaultKind::TornCkpt, step: 12 })
+            Ok(vec![FaultSpec { kind: FaultKind::TornCkpt, step: 12 }])
+        );
+        assert_eq!(
+            parse_fault("eval-panic:2"),
+            Ok(vec![FaultSpec { kind: FaultKind::EvalPanic, step: 2 }])
         );
         assert!(parse_fault("panic").is_err());
         assert!(parse_fault("panic:0").is_err());
@@ -223,16 +274,64 @@ mod tests {
     }
 
     #[test]
+    fn fault_lists_parse_every_spec_or_reject_the_whole_value() {
+        assert_eq!(
+            parse_fault("eval-panic:3,slow:7"),
+            Ok(vec![
+                FaultSpec { kind: FaultKind::EvalPanic, step: 3 },
+                FaultSpec { kind: FaultKind::Slow, step: 7 },
+            ])
+        );
+        assert_eq!(
+            parse_fault(" panic:2 , conn-drop:1 , torn-ckpt:4 "),
+            Ok(vec![
+                FaultSpec { kind: FaultKind::Panic, step: 2 },
+                FaultSpec { kind: FaultKind::ConnDrop, step: 1 },
+                FaultSpec { kind: FaultKind::TornCkpt, step: 4 },
+            ])
+        );
+        // one bad entry rejects the list -- warn-on-typo then falls back
+        // to the default instead of half-applying it
+        assert!(parse_fault("panic:2,segv:3").is_err());
+        assert!(parse_fault("panic:2,").is_err());
+        assert!(parse_fault("").is_err());
+        let parse = |v: &str| parse_fault(v).map(Some);
+        assert_eq!(parse_knob("ZCS_TEST", Some("panic:2,typo"), None, parse), None);
+    }
+
+    #[test]
     fn fault_cell_fires_and_recovers_exactly_once() {
         let cell = FaultCell::new(FaultSpec { kind: FaultKind::Panic, step: 2 });
         assert!(cell.armed());
-        assert!(!cell.begin_recovery(), "recovery before firing is refused");
+        assert!(!cell.begin_recovery(FaultKind::Panic), "recovery before firing is refused");
         assert!(!cell.should_fire(FaultKind::Panic, 1), "wrong step");
         assert!(!cell.should_fire(FaultKind::NanGrad, 2), "wrong kind");
         assert!(cell.should_fire(FaultKind::Panic, 2));
         assert!(!cell.armed());
         assert!(!cell.should_fire(FaultKind::Panic, 2), "one shot only");
-        assert!(cell.begin_recovery());
-        assert!(!cell.begin_recovery(), "one recovery only");
+        assert!(cell.begin_recovery(FaultKind::Panic));
+        assert!(!cell.begin_recovery(FaultKind::Panic), "one recovery only");
+    }
+
+    #[test]
+    fn multi_spec_cells_latch_each_spec_independently() {
+        let cell = FaultCell::multi(vec![
+            FaultSpec { kind: FaultKind::EvalPanic, step: 1 },
+            FaultSpec { kind: FaultKind::EvalPanic, step: 2 },
+            FaultSpec { kind: FaultKind::Slow, step: 1 },
+        ]);
+        assert!(cell.expects(FaultKind::EvalPanic));
+        assert!(cell.expects(FaultKind::Slow));
+        assert!(!cell.expects(FaultKind::Panic));
+        assert!(cell.should_fire(FaultKind::EvalPanic, 1));
+        assert!(cell.should_fire(FaultKind::Slow, 1));
+        assert!(!cell.should_fire(FaultKind::Slow, 1), "each spec is one-shot");
+        assert!(cell.expects(FaultKind::EvalPanic), "step-2 spec still pending");
+        assert!(!cell.expects(FaultKind::Slow));
+        assert!(cell.should_fire(FaultKind::EvalPanic, 2));
+        assert!(!cell.armed());
+        assert!(cell.begin_recovery(FaultKind::EvalPanic));
+        assert!(cell.begin_recovery(FaultKind::EvalPanic), "second fired spec recovers too");
+        assert!(!cell.begin_recovery(FaultKind::EvalPanic), "then the well is dry");
     }
 }

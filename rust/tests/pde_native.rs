@@ -408,3 +408,71 @@ fn short_training_validates_against_the_reference_solvers() {
     .unwrap();
     assert!(trainer.validate(2).unwrap().is_none());
 }
+
+/// The serving refactor rerouted `validate` through the inference-only
+/// program (weights resident as executor state).  The numbers must be
+/// bit-identical to the pre-refactor feed-based forward: same held-out
+/// draw, same grid, weights fed as plain graph inputs.
+#[test]
+fn validation_routes_through_the_inference_program_bit_identically() {
+    let kind = ProblemKind::ReactionDiffusion;
+    let config = NativeRunConfig {
+        problem: kind,
+        strategy: Strategy::Zcs,
+        m: 3,
+        n: 12,
+        n_bc: 6,
+        q: q_for(kind),
+        hidden: 8,
+        k: 4,
+        steps: 10,
+        lr: NativeRunConfig::default_lr(kind) * 0.5,
+        seed: 19,
+        bank_size: 8,
+        bank_grid: 32,
+        log_every: 5,
+        threads: 1,
+        ..NativeRunConfig::default()
+    };
+    let mut trainer = NativeTrainer::new(config).unwrap();
+    trainer.run().unwrap();
+    let v = trainer.validate(2).unwrap().expect("rd has a reference solver");
+
+    // the pre-refactor path, replicated: identical held-out functions
+    // (same derived seed), identical interior grid, full forward compile
+    let n_heldout = 2;
+    let q = q_for(kind);
+    let g = 9usize;
+    let mut pts = Vec::new();
+    for i in 1..=g {
+        for j in 1..=g {
+            pts.push((i as f64 / (g + 1) as f64, j as f64 / (g + 1) as f64));
+        }
+    }
+    let solver = zcs::solvers::ReactionDiffusionSolver::default();
+    let prior = kind.function_prior().expect("rd has a GP prior");
+    let sampler = zcs::sampler::GpSampler1d::new(prior, solver.nx);
+    let mut rng = Pcg64::new(19 ^ 0x5eed_cafe, 77);
+    let bank = zcs::sampler::FunctionBank::generate(&sampler, n_heldout, &mut rng).unwrap();
+    let mut pdata = Vec::new();
+    let mut tdata = Vec::new();
+    for fi in 0..n_heldout {
+        pdata.extend(bank.sensors(fi, q));
+        tdata.extend(solver.solve_at(bank.values(fi), &pts));
+    }
+    let truth = Tensor::new(&[n_heldout, pts.len()], tdata);
+    let dims = NetDims { q, hidden: 8, k: 4, coord_dim: 2 };
+    let fg = build_forward(n_heldout, dims, pts.len());
+    let mut inputs: HashMap<NodeId, Tensor> = HashMap::new();
+    for (id, w) in fg.weight_ids.iter().zip(trainer.weights()) {
+        inputs.insert(*id, w.clone());
+    }
+    inputs.insert(fg.p, Tensor::new(&[n_heldout, q], pdata));
+    for (c, &node) in fg.coords.iter().enumerate() {
+        let col: Vec<f64> = pts.iter().map(|pt| if c == 0 { pt.0 } else { pt.1 }).collect();
+        inputs.insert(node, Tensor::new(&[pts.len(), 1], col));
+    }
+    let pred = Program::compile(&fg.graph, &[fg.u]).eval_once(&inputs).swap_remove(0);
+    let reference = pred.rel_l2_error(&truth);
+    assert_eq!(v.rel_l2.to_bits(), reference.to_bits(), "{} vs {reference}", v.rel_l2);
+}

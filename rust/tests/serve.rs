@@ -1,0 +1,457 @@
+//! Integration tests of the hardened serving path:
+//!
+//! * inference-only programs (`Program::compile_inference`) bit-match
+//!   the feed-based training forward for every problem x strategy;
+//! * the wire protocol is total: round-trips exactly, and every
+//!   truncation prefix or corrupted bit decodes to a typed error;
+//! * all four degradation paths fire deterministically under injected
+//!   faults: load shedding (`Overloaded`), deadlines (an already
+//!   expired request never reaches an executor), panic isolation with
+//!   one bounded retry (`Ok` with `retries=1`, then `EvalFailed`), and
+//!   graceful drain (in-flight work completes before exit).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+use zcs::autodiff::{Executor, NodeId, Program, Strategy};
+use zcs::coordinator::checkpoint::{crc32, save_train, CheckpointMeta, TrainCheckpoint};
+use zcs::coordinator::native::{NativeRunConfig, NativeTrainer};
+use zcs::coordinator::registry::Registry;
+use zcs::pde::residual::{build_forward, residual_for, NetDims};
+use zcs::pde::ProblemKind;
+use zcs::rng::{Pcg64, Pcg64Snapshot};
+use zcs::serve::wire::{self, EvalRequest, EvalResponse, Frame, Status, WireError};
+use zcs::serve::{serve, Client, ServeConfig};
+use zcs::tensor::simd::SimdMode;
+use zcs::tensor::Tensor;
+use zcs::util::env::{parse_fault, FaultCell};
+use zcs::util::propkit::{usize_in, Runner};
+
+const NATIVE_PROBLEMS: [ProblemKind; 4] = [
+    ProblemKind::Antiderivative,
+    ProblemKind::ReactionDiffusion,
+    ProblemKind::Burgers,
+    ProblemKind::Kirchhoff,
+];
+
+fn q_for(kind: ProblemKind) -> usize {
+    if kind == ProblemKind::Kirchhoff {
+        9
+    } else {
+        5
+    }
+}
+
+/// Weights trained per (problem, strategy) carry that strategy's whole
+/// optimization history, so bit-matching inference against the
+/// feed-based forward on them exercises the full matrix.
+#[test]
+fn inference_bit_matches_the_feed_based_forward_for_every_problem_and_strategy() {
+    for kind in NATIVE_PROBLEMS {
+        for strategy in [Strategy::Zcs, Strategy::FuncLoop, Strategy::DataVect] {
+            let q = q_for(kind);
+            let config = NativeRunConfig {
+                problem: kind,
+                strategy,
+                m: 2,
+                n: 6,
+                n_bc: 4,
+                q,
+                hidden: 6,
+                k: 4,
+                steps: 2,
+                lr: NativeRunConfig::default_lr(kind) * 0.5,
+                seed: 23,
+                bank_size: 4,
+                bank_grid: 32,
+                log_every: 1,
+                threads: 1,
+                ..NativeRunConfig::default()
+            };
+            let mut trainer = NativeTrainer::new(config).unwrap();
+            trainer.run().unwrap();
+            let weights = trainer.weights().to_vec();
+            let coord_dim = residual_for(kind).expect("native problem").coord_dim();
+            let dims = NetDims { q, hidden: 6, k: 4, coord_dim };
+            let (m_eval, n_pts) = (3, 5);
+            let fg = build_forward(m_eval, dims, n_pts);
+
+            // deterministic query block, point-major
+            let sensor_data = Pcg64::new(77, 1).normals(m_eval * q);
+            let npc = n_pts * coord_dim;
+            let points: Vec<f64> = (0..npc).map(|i| (i + 1) as f64 / (npc + 1) as f64).collect();
+
+            // the training-style forward: weights fed as plain inputs
+            let mut inputs: HashMap<NodeId, Tensor> = HashMap::new();
+            for (id, w) in fg.weight_ids.iter().zip(&weights) {
+                inputs.insert(*id, w.clone());
+            }
+            inputs.insert(fg.p, Tensor::new(&[m_eval, q], sensor_data.clone()));
+            for (c, &node) in fg.coords.iter().enumerate() {
+                let col: Vec<f64> = (0..n_pts).map(|i| points[i * coord_dim + c]).collect();
+                inputs.insert(node, Tensor::new(&[n_pts, 1], col));
+            }
+            let reference = Program::compile(&fg.graph, &[fg.u]).eval_once(&inputs).swap_remove(0);
+
+            // the serving path: weights resident, batched entry point
+            let prog = Program::compile_inference(&fg.graph, &[fg.u], &fg.weight_ids);
+            let mut exec = Executor::new().with_simd(SimdMode::Off);
+            exec.bind_states(&prog, weights.clone());
+            let columns: Vec<Tensor> = (0..coord_dim)
+                .map(|c| {
+                    let col: Vec<f64> = (0..n_pts).map(|i| points[i * coord_dim + c]).collect();
+                    Tensor::new(&[n_pts, 1], col)
+                })
+                .collect();
+            let mut shared: HashMap<NodeId, &Tensor> = HashMap::new();
+            for (&node, col) in fg.coords.iter().zip(&columns) {
+                shared.insert(node, col);
+            }
+            let sensor_rows: Vec<&[f64]> = sensor_data.chunks_exact(q).collect();
+            let rows = exec.run_inference(&prog, fg.p, &sensor_rows, &shared);
+
+            assert_eq!(rows.len(), m_eval);
+            for (i, row) in rows.iter().enumerate() {
+                assert_eq!(row.len(), n_pts);
+                for (j, v) in row.iter().enumerate() {
+                    assert_eq!(
+                        v.to_bits(),
+                        reference.data()[i * n_pts + j].to_bits(),
+                        "{kind:?}/{strategy:?}: sample {i} point {j}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+fn sample_request() -> EvalRequest {
+    EvalRequest {
+        model: "op".to_string(),
+        deadline_ms: 250,
+        coord_dim: 2,
+        sensors: vec![0.1, -0.5, 0.25],
+        points: vec![0.25, 0.5, 0.75, 0.5],
+    }
+}
+
+#[test]
+fn wire_frames_round_trip_exactly() {
+    let frames = [
+        Frame::Request(sample_request()),
+        Frame::Response(EvalResponse {
+            status: Status::Ok,
+            retries: 1,
+            error: String::new(),
+            values: vec![1.0, -2.5, f64::MIN_POSITIVE],
+        }),
+        Frame::Response(EvalResponse::failure(Status::Overloaded, "queue full")),
+        Frame::Shutdown,
+    ];
+    for frame in frames {
+        let bytes = wire::encode(&frame);
+        let (decoded, used) = wire::decode(&bytes).unwrap();
+        assert_eq!(used, bytes.len());
+        assert_eq!(decoded, frame);
+    }
+}
+
+#[test]
+fn every_truncation_prefix_decodes_to_a_typed_error() {
+    let bytes = wire::encode(&Frame::Request(sample_request()));
+    for k in 0..bytes.len() {
+        let err = wire::decode(&bytes[..k]).unwrap_err();
+        assert!(matches!(err, WireError::Truncated { .. }), "prefix {k}: {err:?}");
+    }
+}
+
+#[test]
+fn bit_flips_decode_to_typed_errors_never_values() {
+    let bytes = wire::encode(&Frame::Request(sample_request()));
+    let nbits = bytes.len() * 8;
+    let runner = Runner { cases: 512, ..Runner::default() };
+    runner.check(usize_in(0, nbits - 1), |&flip| {
+        let mut corrupt = bytes.clone();
+        corrupt[flip / 8] ^= 1 << (flip % 8);
+        match wire::decode(&corrupt) {
+            Err(_) => Ok(()),
+            Ok((frame, _)) => Err(format!("flipping bit {flip} still decoded: {frame:?}")),
+        }
+    });
+}
+
+/// Recompute the CRC trailer after deliberately corrupting a frame, so
+/// the *structural* validation (not the checksum) has to catch it.
+fn refresh_crc(bytes: &mut [u8]) {
+    let n = bytes.len();
+    let crc = crc32(&bytes[..n - 4]);
+    bytes[n - 4..].copy_from_slice(&crc.to_le_bytes());
+}
+
+#[test]
+fn structurally_invalid_frames_fail_typed_even_with_a_good_crc() {
+    let mut bad_kind = wire::encode(&Frame::Shutdown);
+    bad_kind[4] = 9;
+    refresh_crc(&mut bad_kind);
+    assert!(matches!(wire::decode(&bad_kind).unwrap_err(), WireError::BadKind(9)));
+
+    let mut bad_magic = wire::encode(&Frame::Shutdown);
+    bad_magic[0] = b'X';
+    assert!(matches!(wire::decode(&bad_magic).unwrap_err(), WireError::BadMagic(_)));
+
+    // unknown status code inside an otherwise valid response payload
+    let mut resp = wire::encode(&Frame::Response(EvalResponse::failure(Status::Ok, "")));
+    resp[wire::HEADER] = 9;
+    refresh_crc(&mut resp);
+    assert!(matches!(wire::decode(&resp).unwrap_err(), WireError::Malformed(_)));
+
+    // a flipped CRC trailer reports both checksums
+    let mut crc_bad = wire::encode(&Frame::Shutdown);
+    let n = crc_bad.len();
+    crc_bad[n - 1] ^= 0xff;
+    match wire::decode(&crc_bad).unwrap_err() {
+        WireError::BadCrc { stored, computed } => assert_ne!(stored, computed),
+        other => panic!("expected BadCrc, got {other:?}"),
+    }
+}
+
+fn tmp(name: &str) -> String {
+    let dir = std::env::temp_dir().join("zcs_serve_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{}_{name}", std::process::id())).to_string_lossy().into_owned()
+}
+
+fn write_rd_checkpoint(path: &str) {
+    let meta = CheckpointMeta {
+        problem: "reaction_diffusion".into(),
+        strategy: "zcs".into(),
+        optimizer: "adam".into(),
+        m: 4,
+        n: 16,
+        n_bc: 8,
+        q: 5,
+        hidden: 8,
+        k: 4,
+        lr: 1e-3,
+        seed: 7,
+        bank_size: 8,
+        bank_grid: 32,
+        replicas: 1,
+        threads: 1,
+        simd: "off".into(),
+    };
+    let (q, h, k) = (5, 8, 4);
+    let mut rng = Pcg64::new(11, 7);
+    let mut w = |shape: &[usize]| {
+        let n: usize = shape.iter().product();
+        Tensor::new(shape, rng.normals(n))
+    };
+    let ckpt = TrainCheckpoint {
+        meta,
+        step: 1,
+        opt_t: 1,
+        rng: Pcg64Snapshot { state: 1, inc: 2, cached: None },
+        weights: vec![w(&[q, h]), w(&[h, k]), w(&[2, h]), w(&[h, k])],
+        moments: Vec::new(),
+    };
+    save_train(path, &ckpt, None).unwrap();
+}
+
+fn registry_with_op(name: &str) -> Arc<Registry> {
+    let path = tmp(name);
+    write_rd_checkpoint(&path);
+    let reg = Arc::new(Registry::new());
+    reg.load("op", &path).unwrap();
+    reg
+}
+
+fn query(deadline_ms: u64) -> EvalRequest {
+    EvalRequest {
+        model: "op".to_string(),
+        deadline_ms,
+        coord_dim: 2,
+        sensors: vec![0.1, 0.2, -0.3, 0.4, 0.0],
+        points: vec![0.25, 0.5, 0.5, 0.5, 0.75, 0.5],
+    }
+}
+
+fn injected(spec: &str) -> Option<Arc<FaultCell>> {
+    Some(Arc::new(FaultCell::multi(parse_fault(spec).unwrap())))
+}
+
+#[test]
+fn serves_queries_and_drains_on_the_shutdown_frame() {
+    let handle = serve(registry_with_op("roundtrip.ckpt"), ServeConfig::default()).unwrap();
+    let mut client = Client::connect(&handle.addr()).unwrap();
+    let resp = client.eval(&query(5_000)).unwrap();
+    assert_eq!(resp.status, Status::Ok, "{}", resp.error);
+    assert_eq!(resp.retries, 0);
+    assert_eq!(resp.values.len(), 3);
+    assert!(resp.values.iter().all(|v| v.is_finite()));
+    // a second request rides the warm resident executor, bit-stable
+    let resp2 = client.eval(&query(5_000)).unwrap();
+    assert_eq!(resp2.status, Status::Ok);
+    let bits = |vs: &[f64]| vs.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&resp.values), bits(&resp2.values));
+    // shutdown frame: acknowledged, then a clean drain
+    let ack = client.shutdown().unwrap();
+    assert_eq!(ack.status, Status::Ok);
+    let report = handle.join();
+    assert_eq!(report.served, 2);
+    assert_eq!(report.shed + report.deadline_missed + report.failed + report.bad_requests, 0);
+}
+
+#[test]
+fn unknown_models_and_bad_shapes_fail_typed_without_evaluating() {
+    let handle = serve(registry_with_op("badreq.ckpt"), ServeConfig::default()).unwrap();
+    let mut client = Client::connect(&handle.addr()).unwrap();
+    let mut req = query(1_000);
+    req.model = "nope".to_string();
+    let resp = client.eval(&req).unwrap();
+    assert_eq!(resp.status, Status::BadRequest);
+    assert!(resp.error.contains("nope"), "{}", resp.error);
+    let mut req = query(1_000);
+    req.sensors.pop();
+    let resp = client.eval(&req).unwrap();
+    assert_eq!(resp.status, Status::BadRequest);
+    assert!(resp.error.contains("sensor"), "{}", resp.error);
+    handle.shutdown();
+    let report = handle.join();
+    assert_eq!(report.bad_requests, 2);
+    assert_eq!(report.evals, 0);
+}
+
+#[test]
+fn expired_requests_never_reach_an_executor() {
+    let handle = serve(registry_with_op("deadline.ckpt"), ServeConfig::default()).unwrap();
+    let mut client = Client::connect(&handle.addr()).unwrap();
+    let resp = client.eval(&query(0)).unwrap();
+    assert_eq!(resp.status, Status::DeadlineExceeded);
+    handle.shutdown();
+    let report = handle.join();
+    assert_eq!(report.deadline_missed, 1);
+    assert_eq!(report.evals, 0, "an expired request must never start an evaluation");
+    assert_eq!(report.served, 0);
+}
+
+#[test]
+fn overload_sheds_typed_instead_of_queueing_unboundedly() {
+    let cfg = ServeConfig {
+        queue_cap: 1,
+        workers: 1,
+        max_batch: 1,
+        linger: Duration::ZERO,
+        fault: injected("slow:1"),
+        slow_stall: Duration::from_millis(800),
+        ..ServeConfig::default()
+    };
+    let handle = serve(registry_with_op("overload.ckpt"), cfg).unwrap();
+    let addr = handle.addr();
+    // the first request stalls the single worker on the injected fault
+    let lead =
+        std::thread::spawn(move || Client::connect(&addr).unwrap().eval(&query(10_000)).unwrap());
+    std::thread::sleep(Duration::from_millis(200));
+    // while it stalls, the pipeline (worker + hand-off + dispatcher +
+    // queue of 1) can absorb only a few of these; the rest must shed
+    let flood: Vec<_> = (0..6)
+        .map(|_| {
+            std::thread::spawn(move || {
+                Client::connect(&addr).unwrap().eval(&query(10_000)).unwrap()
+            })
+        })
+        .collect();
+    let mut statuses = vec![lead.join().unwrap().status];
+    for f in flood {
+        statuses.push(f.join().unwrap().status);
+    }
+    assert!(statuses.contains(&Status::Overloaded), "{statuses:?}");
+    assert!(statuses.contains(&Status::Ok), "{statuses:?}");
+    assert!(
+        statuses.iter().all(|s| matches!(s, Status::Ok | Status::Overloaded)),
+        "{statuses:?}"
+    );
+    handle.shutdown();
+    let report = handle.join();
+    assert!(report.shed >= 1, "{report:?}");
+    assert_eq!(report.shed + report.served, 7, "{report:?}");
+}
+
+#[test]
+fn eval_panics_retry_once_then_fail_typed() {
+    // one injected panic: isolated, retried, answered Ok
+    let cfg = ServeConfig { workers: 1, fault: injected("eval-panic:1"), ..ServeConfig::default() };
+    let handle = serve(registry_with_op("panic1.ckpt"), cfg).unwrap();
+    let mut client = Client::connect(&handle.addr()).unwrap();
+    let resp = client.eval(&query(10_000)).unwrap();
+    assert_eq!(resp.status, Status::Ok, "{}", resp.error);
+    assert_eq!(resp.retries, 1);
+    handle.shutdown();
+    let report = handle.join();
+    assert_eq!((report.evals, report.retries, report.served), (2, 1, 1), "{report:?}");
+
+    // panics on the retry too: typed failure, never a hung request
+    let cfg = ServeConfig {
+        workers: 1,
+        fault: injected("eval-panic:1,eval-panic:2"),
+        ..ServeConfig::default()
+    };
+    let handle = serve(registry_with_op("panic2.ckpt"), cfg).unwrap();
+    let mut client = Client::connect(&handle.addr()).unwrap();
+    let resp = client.eval(&query(10_000)).unwrap();
+    assert_eq!(resp.status, Status::EvalFailed);
+    assert!(resp.error.contains("injected eval panic"), "{}", resp.error);
+    handle.shutdown();
+    let report = handle.join();
+    assert_eq!((report.failed, report.retries, report.served), (1, 1, 0), "{report:?}");
+}
+
+#[test]
+fn conn_drop_faults_sever_the_connection_before_any_frame() {
+    let cfg = ServeConfig { fault: injected("conn-drop:1"), ..ServeConfig::default() };
+    let handle = serve(registry_with_op("conndrop.ckpt"), cfg).unwrap();
+    let addr = handle.addr();
+    // the first accepted connection is dropped: transport error, no frame
+    let mut c1 = Client::connect(&addr).unwrap();
+    assert!(c1.eval(&query(1_000)).is_err());
+    // the next connection is served normally
+    let mut c2 = Client::connect(&addr).unwrap();
+    assert_eq!(c2.eval(&query(1_000)).unwrap().status, Status::Ok);
+    handle.shutdown();
+    let report = handle.join();
+    assert_eq!(report.conns_dropped, 1, "{report:?}");
+    assert_eq!(report.served, 1);
+}
+
+#[test]
+fn drain_finishes_in_flight_work_before_exiting() {
+    let cfg = ServeConfig {
+        workers: 1,
+        fault: injected("slow:1"),
+        slow_stall: Duration::from_millis(400),
+        ..ServeConfig::default()
+    };
+    let handle = serve(registry_with_op("drain.ckpt"), cfg).unwrap();
+    let addr = handle.addr();
+    let inflight =
+        std::thread::spawn(move || Client::connect(&addr).unwrap().eval(&query(10_000)).unwrap());
+    std::thread::sleep(Duration::from_millis(150));
+    handle.shutdown(); // mid-evaluation
+    let report = handle.join();
+    let resp = inflight.join().unwrap();
+    assert_eq!(resp.status, Status::Ok, "in-flight work must complete during drain");
+    assert_eq!(report.served, 1, "{report:?}");
+}
+
+#[test]
+fn the_shutdown_file_triggers_a_drain() {
+    let flag = tmp("drain.flag");
+    let _ = std::fs::remove_file(&flag);
+    let cfg = ServeConfig { shutdown_file: Some(flag.clone()), ..ServeConfig::default() };
+    let handle = serve(registry_with_op("flagfile.ckpt"), cfg).unwrap();
+    let mut client = Client::connect(&handle.addr()).unwrap();
+    assert_eq!(client.eval(&query(1_000)).unwrap().status, Status::Ok);
+    std::fs::write(&flag, b"drain").unwrap();
+    let report = handle.join();
+    assert_eq!(report.served, 1);
+    let _ = std::fs::remove_file(&flag);
+}
