@@ -762,6 +762,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("linger-ms", "2", "how long the dispatcher waits to coalesce compatible requests")
         .opt("workers", "2", "evaluation worker threads (panic-isolated)")
         .opt("threads", "1", "executor kernel threads per worker")
+        .opt("max-conns", "256", "concurrent connection cap; excess is refused typed (overloaded)")
+        .opt("read-timeout-s", "30", "reclaim connections idle this long; 0 = never")
+        .opt("max-points", "65536", "per-request evaluation point cap (bad-request above it)")
         .opt("shutdown-file", "", "drain and exit when this file appears (SIGTERM stand-in)")
         .switch("stdin-close", "also drain when stdin reaches EOF (supervised pipelines)")
         .switch("help", "show usage");
@@ -799,6 +802,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         linger: Duration::from_millis(p.get_u64("linger-ms")?),
         workers: p.get_usize("workers")?.max(1),
         threads: p.get_usize("threads")?.max(1),
+        max_conns: p.get_usize("max-conns")?.max(1),
+        read_timeout: Some(Duration::from_secs(p.get_u64("read-timeout-s")?))
+            .filter(|d| !d.is_zero()),
+        max_points: p.get_usize("max-points")?.max(1),
         shutdown_file: Some(p.get("shutdown-file")).filter(|s| !s.is_empty()).map(String::from),
         fault: zcs::util::env::env_fault(),
         ..ServeConfig::default()
@@ -823,7 +830,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let report = handle.join();
     println!(
         "drained: served {} shed {} deadline-missed {} failed {} bad {} \
-         (evals {}, retries {}, conns {}, dropped {})",
+         (evals {}, retries {}, conns {}, dropped {}, rejected {})",
         report.served,
         report.shed,
         report.deadline_missed,
@@ -832,7 +839,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         report.evals,
         report.retries,
         report.conns,
-        report.conns_dropped
+        report.conns_dropped,
+        report.conns_rejected
     );
     Ok(())
 }

@@ -72,6 +72,15 @@ pub struct ServeConfig {
     pub threads: usize,
     /// touch this file to request a graceful drain (SIGTERM stand-in)
     pub shutdown_file: Option<String>,
+    /// hard cap on concurrently open connections; one over the cap is
+    /// answered `Overloaded` and closed without spawning a handler
+    pub max_conns: usize,
+    /// reclaim a connection idle (no frame) for this long; `None`
+    /// leaves idle connections open until drain
+    pub read_timeout: Option<Duration>,
+    /// per-request cap on evaluation points; larger requests are
+    /// answered `BadRequest` before any executor is compiled
+    pub max_points: usize,
     /// injected faults; `zcs serve` wires `ZCS_FAULT` through here
     pub fault: Option<Arc<FaultCell>>,
     /// how long an injected `slow:K` fault stalls an evaluation
@@ -88,6 +97,9 @@ impl Default for ServeConfig {
             workers: 2,
             threads: 1,
             shutdown_file: None,
+            max_conns: 256,
+            read_timeout: Some(Duration::from_secs(30)),
+            max_points: 1 << 16,
             fault: None,
             slow_stall: Duration::from_millis(300),
         }
@@ -117,6 +129,8 @@ pub struct ServeReport {
     pub conns: u64,
     /// connections dropped by the `conn-drop` fault
     pub conns_dropped: u64,
+    /// connections refused `Overloaded` at the `max_conns` cap
+    pub conns_rejected: u64,
 }
 
 #[derive(Default)]
@@ -131,6 +145,7 @@ struct Counters {
     failed: AtomicU64,
     conns: AtomicU64,
     conns_dropped: AtomicU64,
+    conns_rejected: AtomicU64,
 }
 
 impl Counters {
@@ -147,6 +162,7 @@ impl Counters {
             failed: get(&self.failed),
             conns: get(&self.conns),
             conns_dropped: get(&self.conns_dropped),
+            conns_rejected: get(&self.conns_rejected),
         }
     }
 }
@@ -276,6 +292,13 @@ struct ServerCtx {
     shutdown: Arc<AtomicBool>,
     /// admitted requests whose response has not been written yet
     in_flight: AtomicU64,
+    /// live connections by id: each handler removes its own entry in
+    /// its epilogue, so the map's length is the live-connection count
+    /// and a dup'd stream never outlives its handler.  Drain uses the
+    /// survivors to unblock idle readers.
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    read_timeout: Option<Duration>,
+    max_points: usize,
     fault: Option<Arc<FaultCell>>,
     threads: usize,
     slow_stall: Duration,
@@ -335,6 +358,9 @@ pub fn serve(registry: Arc<Registry>, cfg: ServeConfig) -> Result<ServerHandle> 
         counters: Counters::default(),
         shutdown: Arc::clone(&shutdown),
         in_flight: AtomicU64::new(0),
+        conns: Mutex::new(HashMap::new()),
+        read_timeout: cfg.read_timeout.filter(|d| !d.is_zero()),
+        max_points: cfg.max_points.max(1),
         fault: cfg.fault.clone(),
         threads: cfg.threads,
         slow_stall: cfg.slow_stall,
@@ -361,8 +387,8 @@ fn run_server(ctx: Arc<ServerCtx>, listener: TcpListener, cfg: ServeConfig) -> S
         .collect();
 
     listener.set_nonblocking(true).expect("nonblocking serve listener");
-    let conn_streams: Mutex<Vec<TcpStream>> = Mutex::new(Vec::new());
-    let mut conn_threads = Vec::new();
+    let max_conns = cfg.max_conns.max(1);
+    let mut conn_threads: Vec<thread::JoinHandle<()>> = Vec::new();
     let mut accepted: u64 = 0;
     while !ctx.shutdown.load(Ordering::Acquire) {
         if let Some(f) = &cfg.shutdown_file {
@@ -371,8 +397,18 @@ fn run_server(ctx: Arc<ServerCtx>, listener: TcpListener, cfg: ServeConfig) -> S
                 break;
             }
         }
+        // reap handlers whose connection has closed, so a long-running
+        // server holds threads (and stream dups) only for live clients
+        let mut i = 0;
+        while i < conn_threads.len() {
+            if conn_threads[i].is_finished() {
+                let _ = conn_threads.swap_remove(i).join();
+            } else {
+                i += 1;
+            }
+        }
         match listener.accept() {
-            Ok((stream, _peer)) => {
+            Ok((mut stream, _peer)) => {
                 accepted += 1;
                 ctx.counters.conns.fetch_add(1, Ordering::AcqRel);
                 let dropped = ctx
@@ -384,11 +420,26 @@ fn run_server(ctx: Arc<ServerCtx>, listener: TcpListener, cfg: ServeConfig) -> S
                     drop(stream);
                     continue;
                 }
-                if let Ok(clone) = stream.try_clone() {
-                    conn_streams.lock().expect("conn stream list").push(clone);
+                if ctx.conns.lock().expect("conn registry").len() >= max_conns {
+                    ctx.counters.conns_rejected.fetch_add(1, Ordering::AcqRel);
+                    let msg = format!("connection limit ({max_conns}) reached");
+                    let resp = EvalResponse::failure(Status::Overloaded, msg);
+                    let _ = wire::write_frame(&mut stream, &Frame::Response(resp));
+                    continue;
                 }
+                // the dup unblocks this connection's read at drain time;
+                // if we cannot register it we cannot drain it -- refuse
+                let Ok(clone) = stream.try_clone() else {
+                    drop(stream);
+                    continue;
+                };
+                let conn_id = accepted;
+                ctx.conns.lock().expect("conn registry").insert(conn_id, clone);
                 let ctx = Arc::clone(&ctx);
-                conn_threads.push(thread::spawn(move || conn_loop(stream, &ctx)));
+                conn_threads.push(thread::spawn(move || {
+                    let _ = catch_unwind(AssertUnwindSafe(|| conn_loop(stream, &ctx)));
+                    ctx.conns.lock().expect("conn registry").remove(&conn_id);
+                }));
             }
             Err(e) if e.kind() == ErrorKind::WouldBlock => {
                 thread::sleep(Duration::from_millis(5));
@@ -412,7 +463,7 @@ fn run_server(ctx: Arc<ServerCtx>, listener: TcpListener, cfg: ServeConfig) -> S
     {
         thread::sleep(Duration::from_millis(2));
     }
-    for s in conn_streams.lock().expect("conn stream list").iter() {
+    for s in ctx.conns.lock().expect("conn registry").values() {
         let _ = s.shutdown(std::net::Shutdown::Both);
     }
     for c in conn_threads {
@@ -423,6 +474,8 @@ fn run_server(ctx: Arc<ServerCtx>, listener: TcpListener, cfg: ServeConfig) -> S
 
 fn conn_loop(mut stream: TcpStream, ctx: &ServerCtx) {
     let _ = stream.set_nodelay(true);
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(ctx.read_timeout);
     loop {
         let frame = match wire::read_frame(&mut stream) {
             Ok(Ok(frame)) => frame,
@@ -434,7 +487,7 @@ fn conn_loop(mut stream: TcpStream, ctx: &ServerCtx) {
                 let _ = wire::write_frame(&mut stream, &Frame::Response(resp));
                 return;
             }
-            Err(_) => return, // EOF or reset
+            Err(_) => return, // EOF, reset, or idle past the read timeout
         };
         match frame {
             Frame::Shutdown => {
@@ -495,16 +548,26 @@ fn handle_request(ctx: &ServerCtx, req: EvalRequest) -> (EvalResponse, bool) {
     if req.points.is_empty() {
         return bad("request has no evaluation points".to_string());
     }
+    let n_pts = req.points.len() / model.dims.coord_dim;
+    if n_pts > ctx.max_points {
+        // a fresh (batch, n_pts) shape costs a program compile on a
+        // worker; unbounded client-picked shapes would be
+        // compile-amplification, so cap them at admission
+        return bad(format!("request has {n_pts} points, the server caps at {}", ctx.max_points));
+    }
     let deadline = Instant::now() + Duration::from_millis(req.deadline_ms);
     let (tx, rx) = mpsc::channel();
     let job = Job { model, sensors: req.sensors, points: req.points, deadline, resp: tx };
+    // claim the in-flight slot before admission so the drain loop can
+    // never observe an admitted-but-uncounted request
+    ctx.in_flight.fetch_add(1, Ordering::AcqRel);
     if ctx.admission.try_push(job).is_err() {
+        ctx.in_flight.fetch_sub(1, Ordering::AcqRel);
         ctx.counters.shed.fetch_add(1, Ordering::AcqRel);
         let msg = "admission queue full, request shed".to_string();
         return (EvalResponse::failure(Status::Overloaded, msg), false);
     }
     ctx.counters.admitted.fetch_add(1, Ordering::AcqRel);
-    ctx.in_flight.fetch_add(1, Ordering::AcqRel);
     match rx.recv() {
         Ok(resp) => (resp, true),
         Err(_) => {
@@ -556,8 +619,11 @@ fn panic_text(e: Box<dyn Any + Send>) -> String {
 
 /// Evaluate batches on panic-isolated resident executors.
 fn worker_loop(ctx: &ServerCtx) {
-    // (model id, generation, batch, n_pts) -> warm resident executor
-    let mut cache: HashMap<(String, u64, usize, usize), ResidentModel> = HashMap::new();
+    // (model id, generation, batch, n_pts) -> (last-use tick, warm
+    // resident executor); the tick makes eviction LRU so one odd-shaped
+    // request cannot flush every other warm shape
+    let mut cache: HashMap<(String, u64, usize, usize), (u64, ResidentModel)> = HashMap::new();
+    let mut tick: u64 = 0;
     while let Some(batch) = ctx.work.pop_wait() {
         let now = Instant::now();
         let (live, expired): (Vec<Job>, Vec<Job>) =
@@ -572,18 +638,27 @@ fn worker_loop(ctx: &ServerCtx) {
         let key = (model.id.clone(), model.generation, m, n_pts);
         let sensors: Vec<&[f64]> = live.iter().map(|j| j.sensors.as_slice()).collect();
 
+        tick += 1;
         let mut retried = false;
         let outcome = loop {
             if !cache.contains_key(&key) {
                 // retire executors compiled against stale generations
-                // of this model, and keep the cache bounded
+                // of this model, and keep the cache bounded by evicting
+                // the least recently used shape only
                 cache.retain(|k, _| k.0 != model.id || k.1 == model.generation);
-                if cache.len() >= RESIDENT_CACHE_CAP {
-                    cache.clear();
+                while cache.len() >= RESIDENT_CACHE_CAP {
+                    let lru = cache
+                        .iter()
+                        .min_by_key(|(_, (used, _))| *used)
+                        .map(|(k, _)| k.clone())
+                        .expect("non-empty cache");
+                    cache.remove(&lru);
                 }
-                cache.insert(key.clone(), model.resident(m, n_pts, ctx.threads));
+                cache.insert(key.clone(), (tick, model.resident(m, n_pts, ctx.threads)));
             }
-            let resident = cache.get_mut(&key).expect("just inserted");
+            let entry = cache.get_mut(&key).expect("just inserted");
+            entry.0 = tick;
+            let resident = &mut entry.1;
             let attempt = ctx.counters.evals.fetch_add(1, Ordering::AcqRel) + 1;
             if retried {
                 ctx.counters.retries.fetch_add(1, Ordering::AcqRel);

@@ -180,9 +180,15 @@ fn put_f64s(out: &mut Vec<u8>, vs: &[f64]) {
 }
 
 fn put_str(out: &mut Vec<u8>, s: &str) {
-    assert!(s.len() <= u16::MAX as usize, "wire string too long");
-    put_u16(out, s.len() as u16);
-    out.extend_from_slice(s.as_bytes());
+    // error strings carry arbitrary text (panic payloads); anything
+    // past the u16 length prefix is truncated on a char boundary so
+    // encoding never panics on the response path
+    let mut end = s.len().min(u16::MAX as usize);
+    while !s.is_char_boundary(end) {
+        end -= 1;
+    }
+    put_u16(out, end as u16);
+    out.extend_from_slice(&s.as_bytes()[..end]);
 }
 
 /// Encode one frame, CRC trailer included.

@@ -12,7 +12,7 @@
 
 use std::collections::HashMap;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 use zcs::autodiff::{Executor, NodeId, Program, Strategy};
 use zcs::coordinator::checkpoint::{crc32, save_train, CheckpointMeta, TrainCheckpoint};
 use zcs::coordinator::native::{NativeRunConfig, NativeTrainer};
@@ -213,6 +213,21 @@ fn structurally_invalid_frames_fail_typed_even_with_a_good_crc() {
         WireError::BadCrc { stored, computed } => assert_ne!(stored, computed),
         other => panic!("expected BadCrc, got {other:?}"),
     }
+}
+
+#[test]
+fn oversized_error_text_truncates_on_a_char_boundary_instead_of_panicking() {
+    // 2-byte chars against the odd u16::MAX cap force the step-back:
+    // panic payloads of any size must frame, never assert
+    let long = "é".repeat(60_000);
+    let frame = Frame::Response(EvalResponse::failure(Status::EvalFailed, long));
+    let bytes = wire::encode(&frame);
+    let (decoded, used) = wire::decode(&bytes).unwrap();
+    assert_eq!(used, bytes.len());
+    let Frame::Response(resp) = decoded else { panic!("expected a response frame") };
+    assert_eq!(resp.status, Status::EvalFailed);
+    assert_eq!(resp.error.len(), u16::MAX as usize - 1, "odd cap steps back one byte");
+    assert!(resp.error.chars().all(|c| c == 'é'));
 }
 
 fn tmp(name: &str) -> String {
@@ -439,6 +454,74 @@ fn drain_finishes_in_flight_work_before_exiting() {
     let report = handle.join();
     let resp = inflight.join().unwrap();
     assert_eq!(resp.status, Status::Ok, "in-flight work must complete during drain");
+    assert_eq!(report.served, 1, "{report:?}");
+}
+
+#[test]
+fn oversized_point_blocks_are_rejected_before_any_compile() {
+    let cfg = ServeConfig { max_points: 2, ..ServeConfig::default() };
+    let handle = serve(registry_with_op("maxpts.ckpt"), cfg).unwrap();
+    let mut client = Client::connect(&handle.addr()).unwrap();
+    // query() carries 3 points, one over the configured cap
+    let resp = client.eval(&query(1_000)).unwrap();
+    assert_eq!(resp.status, Status::BadRequest);
+    assert!(resp.error.contains("points"), "{}", resp.error);
+    handle.shutdown();
+    let report = handle.join();
+    assert_eq!(report.evals, 0, "an oversized request must never start a compile: {report:?}");
+    assert_eq!(report.bad_requests, 1, "{report:?}");
+}
+
+#[test]
+fn the_connection_cap_refuses_excess_connections_typed() {
+    let cfg = ServeConfig { max_conns: 1, ..ServeConfig::default() };
+    let handle = serve(registry_with_op("conncap.ckpt"), cfg).unwrap();
+    let addr = handle.addr();
+    let mut c1 = Client::connect(&addr).unwrap();
+    assert_eq!(c1.eval(&query(5_000)).unwrap().status, Status::Ok);
+    // one over the cap: the server answers Overloaded unprompted and
+    // hangs up without ever spawning a handler (read the raw socket so
+    // the refusal is observed deterministically)
+    let mut raw = std::net::TcpStream::connect(addr).unwrap();
+    let resp = match wire::read_frame(&mut raw).unwrap().unwrap() {
+        Frame::Response(resp) => resp,
+        other => panic!("expected a response frame, got {other:?}"),
+    };
+    assert_eq!(resp.status, Status::Overloaded);
+    assert!(resp.error.contains("connection limit"), "{}", resp.error);
+    drop(raw);
+    // closing the live connection frees its slot for a new client
+    drop(c1);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let mut c = Client::connect(&addr).unwrap();
+        match c.eval(&query(5_000)) {
+            Ok(resp) if resp.status == Status::Ok => break,
+            outcome => {
+                assert!(Instant::now() < deadline, "slot never freed, last: {outcome:?}");
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+    handle.shutdown();
+    let report = handle.join();
+    assert!(report.conns_rejected >= 1, "{report:?}");
+    assert_eq!(report.served, 2, "{report:?}");
+}
+
+#[test]
+fn idle_connections_are_reclaimed_by_the_read_timeout() {
+    let cfg =
+        ServeConfig { read_timeout: Some(Duration::from_millis(100)), ..ServeConfig::default() };
+    let handle = serve(registry_with_op("idle.ckpt"), cfg).unwrap();
+    let mut client = Client::connect(&handle.addr()).unwrap();
+    assert_eq!(client.eval(&query(5_000)).unwrap().status, Status::Ok);
+    std::thread::sleep(Duration::from_millis(500));
+    // the server reclaimed the idle connection, so the next roundtrip
+    // fails at the transport level instead of hanging a dead socket
+    assert!(client.eval(&query(5_000)).is_err());
+    handle.shutdown();
+    let report = handle.join();
     assert_eq!(report.served, 1, "{report:?}");
 }
 
