@@ -1,0 +1,161 @@
+//! Sanitizer overhead bench (the §Perf instrument for the correctness
+//! layer): the same resident training step under `ZCS_SANITIZE=off`,
+//! `static` and `full`.
+//!
+//! `off` must be indistinguishable from the seed (the mode is resolved
+//! once and the hot loop carries no checks); `static` pays only at
+//! compile time, so its step column must match `off`; `full` stamps a
+//! shadow arena around every instruction and scans every output for
+//! non-finite values, and this bench is what keeps that overhead honest
+//! and visible.  Writes `BENCH_sanitize.json`.  Run:
+//! `cargo bench --bench sanitize`.
+
+use zcs::autodiff::Strategy;
+use zcs::coordinator::native::{NativeRunConfig, NativeTrainer, Optimizer};
+use zcs::pde::ProblemKind;
+use zcs::util::benchkit::{Bench, Stats, Table};
+use zcs::util::env::SanitizeMode;
+use zcs::util::json::{obj, Json};
+
+const MODES: [SanitizeMode; 3] = [SanitizeMode::Off, SanitizeMode::Static, SanitizeMode::Full];
+
+/// One overhead measurement: the same (problem, threads) step at each
+/// sanitize mode.
+struct ModeRow {
+    problem: &'static str,
+    m: usize,
+    n: usize,
+    threads: usize,
+    /// [off, static, full]
+    step: [Stats; 3],
+}
+
+impl ModeRow {
+    /// mode time / off time at the same shape and thread count.
+    fn overhead(&self, mi: usize) -> f64 {
+        self.step[mi].mean.as_secs_f64() / self.step[0].mean.as_secs_f64().max(1e-12)
+    }
+}
+
+fn measure_case(
+    bench: &Bench,
+    kind: ProblemKind,
+    name: &'static str,
+    m: usize,
+    n: usize,
+    q: usize,
+    threads: usize,
+) -> anyhow::Result<ModeRow> {
+    let mut stats: Vec<Stats> = Vec::new();
+    for mode in MODES {
+        let config = NativeRunConfig {
+            problem: kind,
+            strategy: Strategy::Zcs,
+            m,
+            n,
+            n_bc: 32,
+            q,
+            hidden: 32,
+            k: 16,
+            steps: 0,
+            // lr 0 keeps the weights stationary across bench iterations
+            lr: 0.0,
+            seed: 11,
+            bank_size: m.max(32),
+            bank_grid: 64,
+            log_every: 1,
+            threads,
+            optimizer: Optimizer::Adam,
+            resident: true,
+            sanitize: mode,
+            ..NativeRunConfig::default()
+        };
+        let mut trainer = NativeTrainer::new(config)?;
+        let batch = trainer.next_batch();
+        stats.push(bench.run(|| trainer.step(&batch).unwrap()));
+    }
+    let step: [Stats; 3] =
+        stats.try_into().map_err(|_| anyhow::anyhow!("expected three sanitize modes"))?;
+    Ok(ModeRow { problem: name, m, n, threads, step })
+}
+
+/// Persist the overhead numbers (`BENCH_sanitize.json`): ns/step per
+/// mode plus the full/off and static/off ratios.
+fn write_bench_sanitize_json(rows: &[ModeRow]) -> anyhow::Result<()> {
+    let cases: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            let mut named: Vec<(String, Json)> = vec![
+                ("problem".into(), Json::from(r.problem)),
+                ("strategy".into(), Json::from("zcs")),
+                ("optimizer".into(), Json::from("adam")),
+                ("m".into(), Json::from(r.m)),
+                ("n".into(), Json::from(r.n)),
+                ("threads".into(), Json::from(r.threads)),
+            ];
+            for (mi, mode) in MODES.into_iter().enumerate() {
+                named.push((
+                    format!("{}_ns", mode.name()),
+                    Json::from(r.step[mi].mean.as_nanos() as f64),
+                ));
+            }
+            named.push(("overhead_static".into(), Json::from(r.overhead(1))));
+            named.push(("overhead_full".into(), Json::from(r.overhead(2))));
+            obj(named.iter().map(|(k, v)| (k.as_str(), v.clone())).collect())
+        })
+        .collect();
+    let doc = obj(vec![
+        ("bench", Json::from("sanitize.step")),
+        ("unit", Json::from("ns/step")),
+        ("quick", Json::Bool(zcs::util::benchkit::quick_mode())),
+        ("cases", Json::from(cases)),
+    ]);
+    std::fs::write("BENCH_sanitize.json", doc.to_string())?;
+    eprintln!("wrote BENCH_sanitize.json");
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let bench = Bench::from_env();
+    let mut table = Table::new(&["component", "mean", "p50", "iters"]);
+
+    // one serial and one threaded shape: the serial column isolates the
+    // per-instruction cost, the threaded one adds the shadow-arena
+    // stamping contention on the graph schedule
+    let cases: [(ProblemKind, &'static str, usize, usize, usize, usize); 3] = [
+        (ProblemKind::Antiderivative, "antiderivative", 64, 256, 8, 1),
+        (ProblemKind::ReactionDiffusion, "reaction_diffusion", 48, 192, 8, 1),
+        (ProblemKind::ReactionDiffusion, "reaction_diffusion", 48, 192, 8, 4),
+    ];
+    let mut rows = Vec::new();
+    for (kind, name, m, n, q, threads) in cases {
+        let row = measure_case(&bench, kind, name, m, n, q, threads)?;
+        for (mi, mode) in MODES.into_iter().enumerate() {
+            let label = if mi == 0 {
+                format!("sanitize step {name} ({threads}t): off")
+            } else {
+                format!(
+                    "sanitize step {name} ({threads}t): {} (x{:.3})",
+                    mode.name(),
+                    row.overhead(mi)
+                )
+            };
+            table.row(&[
+                label,
+                format!("{:.3} ms", row.step[mi].mean_ms()),
+                format!("{:.3} ms", row.step[mi].p50.as_secs_f64() * 1e3),
+                row.step[mi].iters.to_string(),
+            ]);
+        }
+        eprintln!(
+            "sanitize step {name} ({threads}t): static x{:.3}, full x{:.3} vs off",
+            row.overhead(1),
+            row.overhead(2),
+        );
+        rows.push(row);
+    }
+    write_bench_sanitize_json(&rows)?;
+
+    table.print();
+    Ok(())
+}

@@ -61,6 +61,19 @@
 //! [`crate::tensor::kernels`] module docs for the full contract and
 //! `rust/tests/simd_exec.rs` for the program-level pins.
 //!
+//! Under `ZCS_SANITIZE=full` (or [`Executor::set_sanitize`]) the executor
+//! additionally arms its runtime tripwires: a shadow arena stamps every
+//! slot access with `(instruction, worker)` and flags overlapping
+//! write/write and write/read pairs the schedule failed to order, every
+//! instruction's output is scanned for NaN/Inf (the first offender is
+//! reported with its graph provenance through [`Executor::take_trip`]),
+//! and the replica all-reduce barrier arms a stall watchdog
+//! (`ZCS_STALL_MS`) that converts a deadlock into a panic carrying
+//! [`BARRIER_STALL_MSG`] plus a state dump instead of hanging forever.
+//! With the sanitizer off (the default) execution is bit- and
+//! allocation-identical to a build without it -- one branch per
+//! instruction, pinned by `rust/tests/resident_step.rs`.
+//!
 //! [`Schedule`]: super::passes::Schedule
 
 use super::graph::NodeId;
@@ -72,9 +85,9 @@ use crate::util::env::{FaultCell, FaultKind};
 use crate::util::pool::{default_threads, Pool};
 use std::cell::UnsafeCell;
 use std::collections::{BTreeMap, HashMap};
-use std::sync::atomic::{AtomicPtr, Ordering};
+use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Which instruction schedule [`Executor::execute`] runs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -263,6 +276,14 @@ pub struct ReplicaComm {
 /// panic to report (the original fault, not its cascade).
 pub const BARRIER_POISON_MSG: &str = "zcs replica barrier poisoned";
 
+/// The prefix of the panic message the barrier stall watchdog unwinds
+/// with when a generation fails to complete within the configured
+/// deadline ([`ReplicaComm::with_stall`], default `ZCS_STALL_MS` under
+/// `ZCS_SANITIZE=full`).  The full message appends a state dump (parties
+/// arrived, generation); the replica layer matches on this prefix to
+/// convert the hang into a typed stall error instead of a generic panic.
+pub const BARRIER_STALL_MSG: &str = "zcs replica barrier stalled";
+
 /// A reusable N-party barrier that, unlike [`std::sync::Barrier`], can be
 /// *poisoned*: when a replica dies mid-step, [`PoisonBarrier::poison`]
 /// wakes every parked waiter and makes every wait (current and future,
@@ -274,6 +295,11 @@ struct PoisonBarrier {
     parties: usize,
     state: Mutex<BarrierState>,
     cv: Condvar,
+    /// stall watchdog deadline: a waiter that sits longer than this
+    /// without its generation completing poisons the barrier and panics
+    /// with [`BARRIER_STALL_MSG`] plus a state dump; `None` (the
+    /// default outside `ZCS_SANITIZE=full`) waits forever
+    stall: Option<Duration>,
 }
 
 struct BarrierState {
@@ -285,17 +311,21 @@ struct BarrierState {
 }
 
 impl PoisonBarrier {
-    fn new(parties: usize) -> Self {
+    fn new(parties: usize, stall: Option<Duration>) -> Self {
         assert!(parties >= 1, "empty barrier");
         Self {
             parties,
             state: Mutex::new(BarrierState { count: 0, generation: 0, poisoned: false }),
             cv: Condvar::new(),
+            stall,
         }
     }
 
     /// Meet the group; panics with [`BARRIER_POISON_MSG`] if the barrier
-    /// is (or becomes) poisoned before this generation completes.
+    /// is (or becomes) poisoned before this generation completes, or with
+    /// [`BARRIER_STALL_MSG`] if a stall deadline is armed and elapses
+    /// first (the stalling waiter also poisons the barrier so its peers
+    /// unwind as cascades rather than hanging).
     fn wait(&self) {
         let mut st = self.state.lock().unwrap();
         if st.poisoned {
@@ -311,8 +341,30 @@ impl PoisonBarrier {
             return;
         }
         let gen = st.generation;
+        let deadline = self.stall.map(|d| Instant::now() + d);
         while st.generation == gen && !st.poisoned {
-            st = self.cv.wait(st).unwrap();
+            match deadline {
+                None => st = self.cv.wait(st).unwrap(),
+                Some(dl) => {
+                    let now = Instant::now();
+                    if now >= dl {
+                        // deadline elapsed with the generation incomplete:
+                        // this is a deadlock in the making.  Dump state,
+                        // poison so peers unwind, and panic typed.
+                        let arrived = st.count;
+                        let stall = self.stall.unwrap();
+                        st.poisoned = true;
+                        drop(st);
+                        self.cv.notify_all();
+                        panic!(
+                            "{BARRIER_STALL_MSG}: {arrived} of {parties} parties arrived \
+                             within {stall:?} (generation {gen})",
+                            parties = self.parties,
+                        );
+                    }
+                    st = self.cv.wait_timeout(st, dl - now).unwrap().0;
+                }
+            }
         }
         // a completed generation outranks poison: the whole group already
         // passed, so this waiter's step is intact
@@ -348,7 +400,20 @@ impl ReplicaComm {
         assert!(n_lanes >= 1 && replicas >= 1, "empty replica comm");
         let slots =
             (0..n_weights * n_lanes).map(|_| AtomicPtr::new(std::ptr::null_mut())).collect();
-        ReplicaComm { n_lanes, slots, barrier: PoisonBarrier::new(replicas) }
+        // under ZCS_SANITIZE=full the barrier arms its stall watchdog by
+        // default; `with_stall` overrides either way
+        let stall = crate::util::env::env_sanitize()
+            .dynamic()
+            .then(|| Duration::from_millis(crate::util::env::env_stall_ms()));
+        ReplicaComm { n_lanes, slots, barrier: PoisonBarrier::new(replicas, stall) }
+    }
+
+    /// Override the barrier stall watchdog: `Some(d)` panics any waiter
+    /// whose generation fails to complete within `d` (see
+    /// [`BARRIER_STALL_MSG`]); `None` waits forever.
+    pub fn with_stall(mut self, stall: Option<Duration>) -> Self {
+        self.barrier.stall = stall;
+        self
     }
 
     /// Poison the group barrier (see [`PoisonBarrier::poison`]): called by
@@ -368,6 +433,12 @@ impl ReplicaComm {
     /// must stay live and unmutated until every replica has passed the
     /// reduce's closing barrier.
     fn publish(&self, weight: usize, lane: usize, grad: &Tensor) {
+        debug_assert!(lane < self.n_lanes, "publish: lane {lane} >= n_lanes {}", self.n_lanes);
+        debug_assert!(
+            weight * self.n_lanes + lane < self.slots.len(),
+            "publish: weight {weight} out of range for {} slots",
+            self.slots.len()
+        );
         self.slots[weight * self.n_lanes + lane]
             .store(grad as *const Tensor as *mut Tensor, Ordering::Release);
     }
@@ -376,9 +447,181 @@ impl ReplicaComm {
     /// Must be called between a reduce's two barrier waits, after every
     /// replica published this weight's full row of lanes.
     unsafe fn lane<'a>(&self, weight: usize, lane: usize) -> &'a Tensor {
+        debug_assert!(lane < self.n_lanes, "lane: lane {lane} >= n_lanes {}", self.n_lanes);
+        debug_assert!(
+            weight * self.n_lanes + lane < self.slots.len(),
+            "lane: weight {weight} out of range for {} slots",
+            self.slots.len()
+        );
         let p = self.slots[weight * self.n_lanes + lane].load(Ordering::Acquire);
         debug_assert!(!p.is_null(), "lane gradient was never published");
         &*p
+    }
+}
+
+/// One tripwire report from the dynamic sanitizer (`ZCS_SANITIZE=full`).
+///
+/// Produced at most once per run (the lowest-index offender wins) and
+/// drained by [`Executor::take_trip`]; the coordinator converts it into
+/// the matching typed [`crate::coordinator::TrainError`] so existing
+/// recovery (NaN rollback, typed surfacing) keeps working.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SanitizeTrip {
+    /// Instruction `instr` (graph node `node`, opcode `op`) produced a
+    /// non-finite value in output buffer `slot`.
+    NonFinite { instr: usize, node: usize, op: &'static str, slot: usize },
+    /// Two instructions touched buffer `slot` concurrently: `instr` (the
+    /// detecting side) overlapped an un-ordered `access` by `other`
+    /// (`None` when the peer was a reader, whose identity is not stamped).
+    Race {
+        instr: usize,
+        node: usize,
+        op: &'static str,
+        slot: usize,
+        access: &'static str,
+        other: Option<usize>,
+    },
+}
+
+impl std::fmt::Display for SanitizeTrip {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SanitizeTrip::NonFinite { instr, node, op, slot } => write!(
+                f,
+                "sanitizer: non-finite value in buffer {slot}, first produced by \
+                 instruction {instr} ({op}, graph node {node})"
+            ),
+            SanitizeTrip::Race { instr, node, op, slot, access, other } => {
+                write!(
+                    f,
+                    "sanitizer: unordered {access} race on buffer {slot} at \
+                     instruction {instr} ({op}, graph node {node})"
+                )?;
+                match other {
+                    Some(o) => write!(f, " against instruction {o}"),
+                    None => write!(f, " against a concurrent reader"),
+                }
+            }
+        }
+    }
+}
+
+/// low 32 bits of a shadow word: live reader count
+const SAN_READERS: u64 = 0xffff_ffff;
+/// writer-present flag
+const SAN_WRITER: u64 = 1 << 63;
+/// shift for the writer's stamped instruction id (31 bits)
+const SAN_INSTR_SHIFT: u32 = 32;
+const SAN_INSTR_MASK: u64 = 0x7fff_ffff;
+
+/// Shadow arena for the dynamic sanitizer: one atomic word per buffer
+/// slot stamping who is touching it *right now*.  A writer sets
+/// [`SAN_WRITER`] plus its instruction id for the duration of its
+/// instruction; readers bump the low reader count.  Any overlap a valid
+/// schedule would have ordered away (writer meets writer, writer meets
+/// reader) is recorded as a [`SanitizeTrip::Race`].  This is a dynamic
+/// detector: it proves observed overlaps are genuine races (valid
+/// schedules give every writer an exclusive window), but absence of a
+/// trip on one run does not prove the schedule sound -- that is the
+/// static verifier's job ([`super::verify`]).
+struct Sanitizer {
+    shadow: Vec<AtomicU64>,
+    /// lowest-instruction-index trip of the current run; locked only when
+    /// a trip actually fires, so the clean path stays lock-free
+    trip: Mutex<Option<SanitizeTrip>>,
+}
+
+impl Sanitizer {
+    fn new() -> Self {
+        Sanitizer { shadow: Vec::new(), trip: Mutex::new(None) }
+    }
+
+    /// Re-zero the shadow for a run over `n` slots.  Grow-only, like the
+    /// arena itself, so after warmup this performs no allocation; the
+    /// unconditional re-zero means a previous run that unwound mid-flight
+    /// (leaving unbalanced begin/end stamps) cannot fake a race now.
+    fn reset(&mut self, n: usize) {
+        if self.shadow.len() < n {
+            self.shadow.resize_with(n, || AtomicU64::new(0));
+        }
+        for w in &self.shadow[..n] {
+            w.store(0, Ordering::Relaxed);
+        }
+        *self.trip.get_mut().unwrap() = None;
+    }
+
+    /// Record a trip, keeping the lowest instruction index seen this run
+    /// so the *first* offender is what gets reported.
+    fn record(&self, t: SanitizeTrip) {
+        let idx = match &t {
+            SanitizeTrip::NonFinite { instr, .. } | SanitizeTrip::Race { instr, .. } => *instr,
+        };
+        let mut g = self.trip.lock().unwrap();
+        let keep = match &*g {
+            None => true,
+            Some(SanitizeTrip::NonFinite { instr, .. })
+            | Some(SanitizeTrip::Race { instr, .. }) => idx < *instr,
+        };
+        if keep {
+            *g = Some(t);
+        }
+    }
+
+    fn begin_read(&self, slot: usize) -> u64 {
+        self.shadow[slot].fetch_add(1, Ordering::AcqRel)
+    }
+
+    fn end_read(&self, slot: usize) {
+        self.shadow[slot].fetch_sub(1, Ordering::AcqRel);
+    }
+
+    fn begin_write(&self, slot: usize, instr: usize) -> u64 {
+        let stamp = SAN_WRITER | ((instr as u64 & SAN_INSTR_MASK) << SAN_INSTR_SHIFT);
+        self.shadow[slot].fetch_or(stamp, Ordering::AcqRel)
+    }
+
+    fn end_write(&self, slot: usize) {
+        self.shadow[slot].fetch_and(SAN_READERS, Ordering::AcqRel);
+    }
+
+    /// Flag any overlap the `prev` shadow word (sampled at begin) proves.
+    fn check_begin(
+        &self,
+        prev: u64,
+        writing: bool,
+        slot: usize,
+        instr: usize,
+        node: usize,
+        op: &'static str,
+    ) {
+        if prev & SAN_WRITER != 0 {
+            // a writer was mid-flight: write/write if we are writing too,
+            // write/read if we came in as a reader.  Note the stamped id
+            // can itself be garbled if >1 writer raced the OR -- but that
+            // only happens when the schedule is already broken, and the
+            // trip still points at a real participant window.
+            let other = Some(((prev >> SAN_INSTR_SHIFT) & SAN_INSTR_MASK) as usize);
+            let access = if writing { "write/write" } else { "write/read" };
+            self.record(SanitizeTrip::Race { instr, node, op, slot, access, other });
+        } else if writing && prev & SAN_READERS != 0 {
+            // we are writing over live readers; their identity is not
+            // stamped, only their count
+            self.record(SanitizeTrip::Race {
+                instr,
+                node,
+                op,
+                slot,
+                access: "write/read",
+                other: None,
+            });
+        }
+    }
+
+    /// Scan an instruction's freshly-produced output for NaN/Inf.
+    fn check_finite(&self, out: &Tensor, instr: usize, node: usize, op: &'static str, slot: usize) {
+        if !out.data().iter().all(|v| v.is_finite()) {
+            self.record(SanitizeTrip::NonFinite { instr, node, op, slot });
+        }
     }
 }
 
@@ -409,6 +652,9 @@ pub struct Executor {
     /// deterministic fault injector ([`Executor::arm_fault`]); checked
     /// once per run with updates, so the hot path pays one branch
     fault: Option<Arc<FaultCell>>,
+    /// dynamic sanitizer (`ZCS_SANITIZE=full` or [`Executor::set_sanitize`]);
+    /// `None` (the default) costs one branch per instruction
+    san: Option<Box<Sanitizer>>,
 }
 
 impl Default for Executor {
@@ -431,6 +677,8 @@ fn empty_tensor() -> Tensor {
 #[derive(Clone, Copy)]
 struct ArenaView {
     ptr: *const Option<Tensor>,
+    /// arena length, carried so debug builds can bounds-check `get`
+    len: usize,
 }
 
 // SAFETY: dereferences are confined to slots the schedule proves quiescent.
@@ -443,6 +691,7 @@ impl ArenaView {
     /// the returned borrow (guaranteed by RAW edges for the writer and
     /// WAR/WAW hazard edges against reuse).
     unsafe fn get<'a>(self, b: usize) -> &'a Tensor {
+        debug_assert!(b < self.len, "arena slot {b} out of range ({} slots)", self.len);
         (*self.ptr.add(b)).as_ref().expect("operand buffer is live")
     }
 
@@ -506,6 +755,7 @@ impl Executor {
             reg_scratch: Vec::new(),
             comm: None,
             fault: None,
+            san: crate::util::env::env_sanitize().dynamic().then(|| Box::new(Sanitizer::new())),
         }
     }
 
@@ -546,6 +796,39 @@ impl Executor {
     pub fn with_simd(mut self, mode: SimdMode) -> Self {
         self.simd = mode.resolve();
         self
+    }
+
+    /// Arm or disarm the dynamic sanitizer explicitly (the constructor
+    /// default follows `ZCS_SANITIZE=full`).  When armed, every run
+    /// stamps slot accesses in a shadow arena to catch unordered
+    /// write/write and write/read pairs, and scans every instruction's
+    /// output for NaN/Inf; trips are drained with
+    /// [`Executor::take_trip`].  When disarmed, execution pays one branch
+    /// per instruction.
+    pub fn set_sanitize(&mut self, on: bool) {
+        if on && self.san.is_none() {
+            self.san = Some(Box::new(Sanitizer::new()));
+        } else if !on {
+            self.san = None;
+        }
+    }
+
+    /// Builder-style [`Executor::set_sanitize`].
+    pub fn with_sanitize(mut self, on: bool) -> Self {
+        self.set_sanitize(on);
+        self
+    }
+
+    /// Whether the dynamic sanitizer is armed.
+    pub fn sanitizing(&self) -> bool {
+        self.san.is_some()
+    }
+
+    /// Drain the sanitizer trip recorded by the most recent run, if any
+    /// (the lowest-instruction-index offender).  Always `None` when the
+    /// sanitizer is disarmed.
+    pub fn take_trip(&mut self) -> Option<SanitizeTrip> {
+        self.san.as_mut().and_then(|s| s.trip.get_mut().unwrap().take())
     }
 
     /// Start collecting a per-instruction [`ProfileReport`] on every
@@ -788,6 +1071,12 @@ impl Executor {
         if self.arena.len() < program.n_slots {
             self.arena.resize_with(program.n_slots, || None);
         }
+        if let Some(san) = self.san.as_mut() {
+            // grow-only like the arena, so the steady state allocates
+            // nothing; re-zeroed every run so a prior unwound run cannot
+            // fake a race
+            san.reset(self.arena.len());
+        }
 
         let t_wall = self.profile.is_some().then(Instant::now);
         if self.sched == SchedMode::Graph && self.pool.threads() > 1 && program.instrs.len() > 1 {
@@ -887,10 +1176,11 @@ impl Executor {
         let mut reg_scratch = std::mem::take(&mut self.reg_scratch);
         let profiling = self.profile.is_some();
         let comm = self.comm.as_deref();
+        let san = self.san.as_deref();
         for (i, instr) in program.instrs.iter().enumerate() {
             let t0 = profiling.then(Instant::now);
             let mut out = self.arena[instr.out].take().unwrap_or_else(empty_tensor);
-            let view = ArenaView { ptr: self.arena.as_ptr() };
+            let view = ArenaView { ptr: self.arena.as_ptr(), len: self.arena.len() };
             // SAFETY: serial execution -- nothing else touches the arena,
             // and the destination tensor was moved out of its slot, so
             // `view` never aliases `out`
@@ -908,6 +1198,12 @@ impl Executor {
                     &mut ext_scratch,
                     &mut reg_scratch,
                 );
+            }
+            if let Some(san) = san {
+                // the serial loop cannot race, so only the non-finite
+                // tripwire applies here
+                let node = program.prov.get(i).copied().unwrap_or(0);
+                san.check_finite(&out, i, node, instr.op.name(), instr.out);
             }
             self.arena[instr.out] = Some(out);
             if let Some(t0) = t0 {
@@ -941,12 +1237,13 @@ impl Executor {
         let sched = &program.schedule;
         debug_assert_eq!(sched.n_preds.len(), program.instrs.len(), "schedule is stale");
         let slots = ArenaSlots { ptr: self.arena.as_mut_ptr() };
-        let view = ArenaView { ptr: slots.ptr as *const Option<Tensor> };
+        let view = ArenaView { ptr: slots.ptr as *const Option<Tensor>, len: self.arena.len() };
         let states: &[Tensor] = &self.states;
         let consts: &[Tensor] = &program.consts;
         let pool = &self.pool;
         let simd = self.simd;
         let comm = self.comm.as_deref();
+        let san = self.san.as_deref();
         let prof = self.profile.as_deref_mut().map(|p| {
             let slots: Vec<UnsafeCell<ProfileReport>> =
                 (0..pool.threads()).map(|_| UnsafeCell::new(ProfileReport::default())).collect();
@@ -956,6 +1253,25 @@ impl Executor {
         pool.run_graph(&sched.spec(), &|node, worker| {
             let instr = &program.instrs[node as usize];
             let t0 = prof_slots.is_some().then(Instant::now);
+            // shadow-arena stamps: declare every slot this instruction is
+            // about to touch.  A valid schedule gives writers an exclusive
+            // window, so any overlap observed here is a genuine race.  The
+            // stamps are held until the closure returns -- the node only
+            // retires (releasing its hazard edges) after that, so the
+            // widened window cannot flag a correctly-ordered successor.
+            let san_ctx = san.map(|s| {
+                let i = node as usize;
+                let g = program.prov.get(i).copied().unwrap_or(0);
+                for &a in &instr.args {
+                    if let Operand::Buf(b) = a {
+                        let prev = s.begin_read(b);
+                        s.check_begin(prev, false, b, i, g, instr.op.name());
+                    }
+                }
+                let prev = s.begin_write(instr.out, i);
+                s.check_begin(prev, true, instr.out, i, g, instr.op.name());
+                (s, i, g)
+            });
             // SAFETY: the schedule orders every access to slot `instr.out`
             // (WAR/WAW edges) so this worker holds the only live reference
             // to it; argument slots are quiescent (RAW edges) and read
@@ -990,6 +1306,9 @@ impl Executor {
                     instr.args.first().map(|&a| unsafe { view.resolve(ins, consts, states, a) });
                 instr_cost(instr, a0, &out)
             });
+            if let Some((s, i, g)) = san_ctx {
+                s.check_finite(&out, i, g, instr.op.name(), instr.out);
+            }
             *slot = Some(out);
             if let (Some(t0), Some(ps)) = (t0, prof_slots) {
                 // SAFETY: worker ids of concurrently-running nodes are
@@ -999,6 +1318,14 @@ impl Executor {
                 let (flops, bytes) = cost.unwrap_or((0, 0));
                 let ns = t0.elapsed().as_nanos() as u64;
                 p.record(instr.op.name(), level, worker, ns, flops, bytes);
+            }
+            if let Some((s, _, _)) = san_ctx {
+                for &a in &instr.args {
+                    if let Operand::Buf(b) = a {
+                        s.end_read(b);
+                    }
+                }
+                s.end_write(instr.out);
             }
         });
         if let Some((p, ps)) = prof {
@@ -1537,5 +1864,131 @@ mod tests {
         let xv = Tensor::vec1(vec![1.0, 2.0]);
         let _ = x;
         Executor::with_threads(1).run_scalars(&resident, &[&xv], &mut [0.0]);
+    }
+
+    fn panic_msg(e: &(dyn std::any::Any + Send)) -> String {
+        e.downcast_ref::<String>()
+            .cloned()
+            .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default()
+    }
+
+    #[test]
+    fn barrier_stall_watchdog_converts_a_hang_into_a_typed_panic() {
+        let comm = ReplicaComm::new(1, 1, 2).with_stall(Some(Duration::from_millis(40)));
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| comm.barrier.wait()))
+            .expect_err("a lone waiter on a 2-party barrier must stall out");
+        let msg = panic_msg(err.as_ref());
+        assert!(msg.starts_with(BARRIER_STALL_MSG), "{msg}");
+        assert!(msg.contains("1 of 2"), "state dump names the arrivals: {msg}");
+        // the stalling waiter poisoned the barrier, so peers cascade out
+        // with the poison message rather than stalling in turn
+        let err2 = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| comm.barrier.wait()))
+            .expect_err("poisoned barrier must panic immediately");
+        assert!(panic_msg(err2.as_ref()).contains(BARRIER_POISON_MSG));
+    }
+
+    #[test]
+    fn stall_watchdog_lets_a_completing_generation_through() {
+        let comm = Arc::new(ReplicaComm::new(1, 1, 2).with_stall(Some(Duration::from_secs(30))));
+        let c2 = Arc::clone(&comm);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            c2.barrier.wait();
+        });
+        comm.barrier.wait();
+        h.join().expect("a generation that completes in time must pass");
+    }
+
+    #[test]
+    fn sanitizer_shadow_arena_flags_unordered_overlaps() {
+        let mut san = Sanitizer::new();
+        san.reset(4);
+        // instruction 2 writes slot 1 and holds its window open
+        let prev = san.begin_write(1, 2);
+        san.check_begin(prev, true, 1, 2, 20, "mul");
+        assert!(san.trip.get_mut().unwrap().is_none(), "exclusive write is clean");
+        // instruction 5 writes the same slot before 2 retired: write/write
+        let prev = san.begin_write(1, 5);
+        san.check_begin(prev, true, 1, 5, 50, "add");
+        match san.trip.get_mut().unwrap().clone() {
+            Some(SanitizeTrip::Race { instr, slot, access, other, .. }) => {
+                assert_eq!((instr, slot, access, other), (5, 1, "write/write", Some(2)));
+            }
+            t => panic!("expected a write/write race, got {t:?}"),
+        }
+        san.reset(4);
+        assert!(san.trip.get_mut().unwrap().is_none(), "reset clears the trip");
+        // concurrent readers never conflict with each other
+        let p1 = san.begin_read(3);
+        san.check_begin(p1, false, 3, 0, 0, "tanh");
+        let p2 = san.begin_read(3);
+        san.check_begin(p2, false, 3, 1, 1, "sin");
+        assert!(san.trip.get_mut().unwrap().is_none(), "read/read is not a race");
+        // but a writer landing on live readers is
+        let p3 = san.begin_write(3, 7);
+        san.check_begin(p3, true, 3, 7, 70, "cos");
+        match san.trip.get_mut().unwrap().clone() {
+            Some(SanitizeTrip::Race { access, other, .. }) => {
+                assert_eq!((access, other), ("write/read", None));
+            }
+            t => panic!("expected a write/read race, got {t:?}"),
+        }
+        // balanced end stamps restore exclusivity
+        san.reset(4);
+        san.begin_write(0, 9);
+        san.end_write(0);
+        let prev = san.begin_write(0, 11);
+        san.check_begin(prev, true, 0, 11, 110, "add");
+        assert!(san.trip.get_mut().unwrap().is_none(), "retired writer leaves no stamp");
+    }
+
+    #[test]
+    fn nan_tripwire_reports_an_offending_instruction_on_both_schedules() {
+        let (_g, x, w, prog) = wide_program();
+        let mut rng = crate::rng::Pcg64::seeded(43);
+        let mut xs = rng.normals(63);
+        xs[5] = f64::NAN;
+        let mut inputs = HashMap::new();
+        inputs.insert(x, Tensor::new(&[9, 7], xs));
+        inputs.insert(w, Tensor::new(&[7, 9], rng.normals(63)));
+        for (threads, sched) in [(1usize, SchedMode::Serial), (4, SchedMode::Graph)] {
+            let mut exec = Executor::with_threads(threads).with_sched(sched).with_sanitize(true);
+            exec.run(&prog, &inputs);
+            let trip = exec.take_trip().expect("NaN input must trip the sanitizer");
+            match trip {
+                SanitizeTrip::NonFinite { instr, op, .. } => {
+                    assert!(instr < prog.instrs.len());
+                    assert!(!op.is_empty());
+                }
+                t => panic!("expected a non-finite trip, got {t}"),
+            }
+            assert!(exec.take_trip().is_none(), "take_trip drains the report");
+            // a clean run after the trip stays quiet
+            let mut rng = crate::rng::Pcg64::seeded(44);
+            let mut clean = HashMap::new();
+            clean.insert(x, Tensor::new(&[9, 7], rng.normals(63)));
+            clean.insert(w, Tensor::new(&[7, 9], rng.normals(63)));
+            exec.run(&prog, &clean);
+            assert!(exec.take_trip().is_none(), "clean run must not trip");
+        }
+    }
+
+    #[test]
+    fn sanitized_runs_are_bit_identical_and_quiet_on_clean_programs() {
+        let (_g, x, w, prog) = wide_program();
+        let mut rng = crate::rng::Pcg64::seeded(47);
+        let mut inputs = HashMap::new();
+        inputs.insert(x, Tensor::new(&[9, 7], rng.normals(63)));
+        inputs.insert(w, Tensor::new(&[7, 9], rng.normals(63)));
+        let want = Executor::with_threads(4).with_sched(SchedMode::Graph).run(&prog, &inputs);
+        let mut exec = Executor::with_threads(4).with_sched(SchedMode::Graph).with_sanitize(true);
+        for _ in 0..4 {
+            assert_eq!(exec.run(&prog, &inputs), want, "sanitizer must not perturb results");
+            assert!(exec.take_trip().is_none(), "a valid schedule must not trip");
+        }
+        assert!(exec.sanitizing());
+        exec.set_sanitize(false);
+        assert!(!exec.sanitizing());
     }
 }

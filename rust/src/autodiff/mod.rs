@@ -26,13 +26,18 @@ pub mod exec;
 pub mod graph;
 pub mod passes;
 pub mod program;
+pub mod verify;
 pub mod zcs_demo;
 
-pub use exec::{Executor, OpTally, ProfileReport, ReplicaComm, SchedMode, BARRIER_POISON_MSG};
+pub use exec::{
+    Executor, OpTally, ProfileReport, ReplicaComm, SanitizeTrip, SchedMode, BARRIER_POISON_MSG,
+    BARRIER_STALL_MSG,
+};
 pub use graph::{Graph, NodeId, Op};
 pub use passes::Schedule;
 pub use program::{
     Instr, MatmulEpilogue, OpCode, Operand, PassConfig, Program, ProgramStats, StateKind,
     StateSlot, UpdateInstr, UpdateRule,
 };
+pub use verify::{verify_program, VerifyError};
 pub use zcs_demo::{DemoNet, Strategy};

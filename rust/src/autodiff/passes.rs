@@ -39,6 +39,10 @@ pub struct DagNode {
     pub op: OpCode,
     pub args: Vec<Val>,
     pub shape: Vec<usize>,
+    /// [`Graph`] node this operation was normalized from (for fused
+    /// nodes, the group root) -- carried into `Program::prov` so
+    /// verifier and sanitizer diagnostics can name graph provenance.
+    pub origin: NodeId,
 }
 
 /// Output of the pass pipeline.
@@ -173,7 +177,9 @@ impl Builder {
     }
 
     /// Emit `op(args)`, applying simplification, folding and CSE.
-    fn emit(&mut self, op: OpCode, args: Vec<Val>, shape: &[usize]) -> Val {
+    /// `origin` is the graph node being normalized; it becomes the
+    /// surviving node's provenance when one is actually pushed.
+    fn emit(&mut self, origin: NodeId, op: OpCode, args: Vec<Val>, shape: &[usize]) -> Val {
         // -- algebraic identities (bit-preserving only)
         match op {
             OpCode::Add => {
@@ -213,7 +219,7 @@ impl Builder {
                 if let Some(t) = self.const_of(args[0]) {
                     let c = t.data()[0];
                     self.simplified += 1;
-                    return self.emit(OpCode::Scale(c), vec![args[1]], shape);
+                    return self.emit(origin, OpCode::Scale(c), vec![args[1]], shape);
                 }
             }
             OpCode::Transpose => {
@@ -244,7 +250,7 @@ impl Builder {
                     if matches!(self.nodes[n].op, OpCode::Reshape) {
                         let inner = self.nodes[n].args[0];
                         self.simplified += 1;
-                        return self.emit(OpCode::Reshape, vec![inner], shape);
+                        return self.emit(origin, OpCode::Reshape, vec![inner], shape);
                     }
                 }
             }
@@ -267,7 +273,7 @@ impl Builder {
             return v;
         }
         let v = Val::Node(self.nodes.len());
-        self.nodes.push(DagNode { op, args, shape: shape.to_vec() });
+        self.nodes.push(DagNode { op, args, shape: shape.to_vec(), origin });
         self.cse.insert(key, v);
         v
     }
@@ -363,7 +369,7 @@ pub fn build_dag(graph: &Graph, outputs: &[NodeId]) -> Dag {
                     .iter()
                     .map(|&i| val_of[i].expect("graph ids are topologically ordered"))
                     .collect();
-                b.emit(opcode_of(op), args, &node.shape)
+                b.emit(id, opcode_of(op), args, &node.shape)
             }
         };
         val_of[id] = Some(val);
@@ -552,13 +558,19 @@ pub fn fuse_elementwise(dag: Dag) -> Dag {
                     op: OpCode::Fused(Box::new(kernel)),
                     args,
                     shape: node.shape.clone(),
+                    origin: node.origin,
                 });
                 remap[i] = Some(Val::Node(new_nodes.len() - 1));
                 continue;
             }
         }
         let args: Vec<Val> = node.args.iter().map(|&v| remap_val(v, &remap)).collect();
-        new_nodes.push(DagNode { op: node.op.clone(), args, shape: node.shape.clone() });
+        new_nodes.push(DagNode {
+            op: node.op.clone(),
+            args,
+            shape: node.shape.clone(),
+            origin: node.origin,
+        });
         remap[i] = Some(Val::Node(new_nodes.len() - 1));
     }
 
@@ -899,12 +911,18 @@ pub fn fuse_matmul_epilogue(dag: Dag) -> Dag {
                 op: OpCode::MatMulFused(Box::new(MatmulEpilogue { nt, epi })),
                 args,
                 shape: node.shape.clone(),
+                origin: node.origin,
             });
             remap[c] = Some(Val::Node(new_nodes.len() - 1));
             continue;
         }
         let args: Vec<Val> = node.args.iter().map(|&v| remap_val(v, &remap)).collect();
-        new_nodes.push(DagNode { op: node.op.clone(), args, shape: node.shape.clone() });
+        new_nodes.push(DagNode {
+            op: node.op.clone(),
+            args,
+            shape: node.shape.clone(),
+            origin: node.origin,
+        });
         remap[c] = Some(Val::Node(new_nodes.len() - 1));
     }
 

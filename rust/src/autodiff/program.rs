@@ -317,6 +317,13 @@ pub struct Program {
     pub states: Vec<StateSlot>,
     /// optimizer updates executed in place after [`Program::instrs`]
     pub updates: Vec<UpdateInstr>,
+    /// graph provenance, aligned with [`Program::instrs`]: the source
+    /// [`Graph`] node each instruction was lowered from (for fused
+    /// instructions, the group root; for appended optimizer/reduce
+    /// instructions, the weight's node).  Consumed by
+    /// [`super::verify`] and the runtime sanitizer so diagnostics can
+    /// name where a failing instruction came from
+    pub prov: Vec<NodeId>,
     /// instruction dependency DAG (true + hazard edges) with claim
     /// priorities, computed by [`passes::schedule`] and consumed by the
     /// executor's out-of-order graph mode
@@ -364,7 +371,22 @@ impl Program {
         if config.epilogue {
             dag = passes::fuse_matmul_epilogue(dag);
         }
-        lower(dag)
+        let p = lower(dag);
+        p.maybe_verify();
+        p
+    }
+
+    /// Run the static verifier ([`super::verify`]) when the build or the
+    /// sanitize knob asks for it: always in debug builds (so the whole
+    /// test suite implicitly audits every program it compiles), and in
+    /// release builds when `ZCS_SANITIZE=static|full`.  Release-mode
+    /// `off` stays zero-cost: one branch per *compile*, never per step.
+    fn maybe_verify(&self) {
+        if cfg!(debug_assertions) || crate::util::env::env_sanitize().verify() {
+            if let Err(e) = self.verify() {
+                panic!("program verification failed: {e}");
+            }
+        }
     }
 
     /// One-shot convenience: compile-once/run-many callers should hold an
@@ -409,6 +431,7 @@ impl Program {
         p.stats.resident_state_bytes = p.resident_state_bytes();
         // no instructions were added or removed: the schedule built by
         // `compile` is still exact (In -> State leaves arena edges alone)
+        p.maybe_verify();
         p
     }
 
@@ -462,6 +485,7 @@ impl Program {
                         out,
                         shape,
                     });
+                    self.prov.push(weight_ids[s]);
                     Operand::Buf(out)
                 }
                 g => g,
@@ -495,6 +519,7 @@ impl Program {
         // their slots are new)
         self.schedule = passes::schedule(&self.instrs, self.n_slots);
         sched_stats(&mut self.stats, &self.schedule);
+        self.maybe_verify();
         self
     }
 
@@ -559,6 +584,7 @@ impl Program {
                 out,
                 shape: shape.clone(),
             });
+            self.prov.push(weight_ids[s]);
             prev_reduce = Some(out);
             let moments = match rule {
                 UpdateRule::Sgd { .. } => None,
@@ -586,6 +612,7 @@ impl Program {
         self.stats.update_instrs = self.updates.len();
         self.schedule = passes::schedule(&self.instrs, self.n_slots);
         sched_stats(&mut self.stats, &self.schedule);
+        self.maybe_verify();
         self
     }
 
@@ -733,8 +760,10 @@ fn lower(dag: passes::Dag) -> Program {
     let bytes_of = |shape: &[usize]| -> u64 { shape.iter().product::<usize>() as u64 * 8 };
 
     let mut instrs: Vec<Instr> = Vec::with_capacity(order.len());
+    let mut prov: Vec<NodeId> = Vec::with_capacity(order.len());
     for (i, &n) in order.iter().enumerate() {
         let node = &dag.nodes[n];
+        prov.push(node.origin);
         let out = free.pop().unwrap_or_else(|| {
             n_slots += 1;
             n_slots - 1
@@ -831,6 +860,7 @@ fn lower(dag: passes::Dag) -> Program {
         output_shapes,
         states: Vec::new(),
         updates: Vec::new(),
+        prov,
         schedule,
         stats,
     }

@@ -1,0 +1,1054 @@
+//! Static [`Program`] verification: prove, instruction by instruction, the
+//! invariants the unsafe executor relies on -- *before* anything runs.
+//!
+//! # Why a verifier
+//!
+//! The executor's graph mode interleaves instructions across workers
+//! through raw arena pointers ([`super::exec::ArenaView`]), and the only
+//! thing standing between that and a data race is the claim the scheduler
+//! makes: every pair of instructions touching the same arena slot with at
+//! least one write is ordered by an edge path in [`passes::Schedule`].
+//! Likewise, slot recycling ([`super::program`]'s liveness pass) is
+//! trusted never to hand out a slot whose previous value is still read,
+//! and every pass (fusion, epilogue folding, `attach_optimizer`, lane
+//! replication) is trusted to preserve per-opcode shape agreement.  Those
+//! invariants were all *assumed*; this module checks them.
+//!
+//! [`verify_program`] replays the instruction stream symbolically and
+//! proves:
+//!
+//! - **liveness** -- every operand is in range and every `Buf` read has a
+//!   preceding write (no read of a dead or never-defined slot), outputs
+//!   and optimizer gradients included; no instruction writes a slot it
+//!   also reads (the kernels require `dst` disjoint from sources);
+//! - **shapes** -- per-opcode shape rules (the same rules the [`Graph`]
+//!   constructors assert) hold for the lowered operands, fused kernels
+//!   and matmul epilogues included;
+//! - **hazard completeness** -- the required orderings (RAW, WAW, WAR)
+//!   recomputed from the stream each have an ordering *path* in the
+//!   stored schedule, and the stored schedule is self-consistent (CSR
+//!   well-formed, edges forward, `n_preds` matches the edge set).  This
+//!   is a static race detector for [`crate::util::pool::Pool::run_graph`]'s
+//!   unsafe interleavings;
+//! - **update/reduce placement** -- optimizer updates point at real
+//!   weight slots with correctly paired Adam moments (`weight < m`,
+//!   `v == m + 1`: the executor splits borrows on that order), no state
+//!   slot is owned by two updates, and [`OpCode::GradAllReduce`]
+//!   instructions walk weights in ascending order with an ordering chain
+//!   between consecutive reduces -- the property that keeps barrier
+//!   generations paired across replicas.
+//!
+//! Errors are typed ([`VerifyError`]) and name the instruction index,
+//! opcode, arena slot and the source-graph node ([`Program::prov`]) so a
+//! compiler bug reads as "instr #12 tanh (graph node #87): ..." instead
+//! of a downstream NaN or a torn arena read.
+//!
+//! The verifier runs automatically after every compile/attach in debug
+//! builds, and in release builds when `ZCS_SANITIZE=static|full` (see
+//! [`crate::util::env::SanitizeMode`]).  It is mutation-tested: the
+//! `mutation_*` tests below seed one violation per class into a real
+//! compiled program and assert the exact error class comes back.
+
+use super::graph::NodeId;
+use super::program::{BufId, Instr, OpCode, Operand, Program, StateKind, UpdateRule};
+use crate::tensor::kernels::ExtKind;
+use std::fmt;
+
+/// One proven-false program invariant.  Every variant names enough
+/// context (instruction index, opcode, slot, provenance node) to locate
+/// the offending compiler pass without a debugger.
+#[derive(Clone, Debug, PartialEq)]
+pub enum VerifyError {
+    /// an operand or output slot indexes outside its table
+    OperandRange { instr: usize, op: String, detail: String, prov: Option<NodeId> },
+    /// a `Buf` operand is read before any instruction writes its slot
+    /// (dead or never-defined value -- premature slot reuse lands here)
+    UseBeforeDef { instr: usize, op: String, slot: BufId, prov: Option<NodeId> },
+    /// an instruction's output slot aliases one of its operands
+    OutAliasesArg { instr: usize, op: String, slot: BufId, prov: Option<NodeId> },
+    /// a per-opcode shape rule does not hold
+    Shape { instr: usize, op: String, detail: String, prov: Option<NodeId> },
+    /// two instructions conflict on a slot with no ordering path in the
+    /// schedule: the graph executor could interleave them
+    Unordered {
+        earlier: usize,
+        later: usize,
+        slot: BufId,
+        kind: &'static str,
+        prov: Option<NodeId>,
+    },
+    /// the stored schedule disagrees with itself or the instruction list
+    Schedule { detail: String },
+    /// a program output operand is out of range or never written
+    Output { index: usize, detail: String },
+    /// optimizer update / gradient all-reduce placement is broken
+    Update { detail: String },
+    /// the provenance table is not aligned with the instruction list
+    Provenance { detail: String },
+}
+
+impl VerifyError {
+    fn prov_suffix(prov: &Option<NodeId>) -> String {
+        match prov {
+            Some(n) => format!(" (graph node #{n})"),
+            None => String::new(),
+        }
+    }
+}
+
+impl fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            VerifyError::OperandRange { instr, op, detail, prov } => {
+                let p = Self::prov_suffix(prov);
+                write!(f, "instr #{instr} {op}{p}: operand out of range: {detail}")
+            }
+            VerifyError::UseBeforeDef { instr, op, slot, prov } => {
+                let p = Self::prov_suffix(prov);
+                write!(f, "instr #{instr} {op}{p}: reads arena slot {slot} before any write")
+            }
+            VerifyError::OutAliasesArg { instr, op, slot, prov } => {
+                let p = Self::prov_suffix(prov);
+                write!(f, "instr #{instr} {op}{p}: output slot {slot} aliases an operand")
+            }
+            VerifyError::Shape { instr, op, detail, prov } => {
+                let p = Self::prov_suffix(prov);
+                write!(f, "instr #{instr} {op}{p}: shape rule violated: {detail}")
+            }
+            VerifyError::Unordered { earlier, later, slot, kind, prov } => {
+                let p = Self::prov_suffix(prov);
+                write!(
+                    f,
+                    "instrs #{earlier} -> #{later}{p}: {kind} conflict on arena slot {slot} \
+                     with no ordering path in the schedule"
+                )
+            }
+            VerifyError::Schedule { detail } => {
+                write!(f, "stored schedule disagrees with the instruction list: {detail}")
+            }
+            VerifyError::Output { index, detail } => write!(f, "program output #{index}: {detail}"),
+            VerifyError::Update { detail } => {
+                write!(f, "optimizer/all-reduce placement: {detail}")
+            }
+            VerifyError::Provenance { detail } => write!(f, "provenance table: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for VerifyError {}
+
+fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+/// Shape of one operand at position `i` in the replay, or the liveness
+/// error reading it would trip.
+fn operand_shape(
+    p: &Program,
+    writer: &[Option<usize>],
+    i: usize,
+    op: &str,
+    prov: Option<NodeId>,
+    a: Operand,
+) -> Result<Vec<usize>, VerifyError> {
+    let range = |detail: String| VerifyError::OperandRange {
+        instr: i,
+        op: op.to_string(),
+        detail,
+        prov,
+    };
+    match a {
+        Operand::Buf(b) => {
+            if b >= p.n_slots {
+                return Err(range(format!("arena slot {b} >= n_slots {}", p.n_slots)));
+            }
+            match writer[b] {
+                Some(w) => Ok(p.instrs[w].shape.clone()),
+                None => {
+                    Err(VerifyError::UseBeforeDef { instr: i, op: op.to_string(), slot: b, prov })
+                }
+            }
+        }
+        Operand::In(k) => {
+            if k >= p.input_shapes.len() {
+                return Err(range(format!("input {k} >= {} inputs", p.input_shapes.len())));
+            }
+            Ok(p.input_shapes[k].clone())
+        }
+        Operand::Const(c) => {
+            if c >= p.consts.len() {
+                return Err(range(format!("const {c} >= {} consts", p.consts.len())));
+            }
+            Ok(p.consts[c].shape().to_vec())
+        }
+        Operand::State(s) => {
+            if s >= p.states.len() {
+                return Err(range(format!("state {s} >= {} states", p.states.len())));
+            }
+            Ok(p.states[s].shape.clone())
+        }
+    }
+}
+
+/// Matmul shape rule shared by the bare and fused opcodes.  Returns an
+/// error detail string on violation.
+fn matmul_rule(nt: bool, a: &[usize], b: &[usize], out: &[usize]) -> Option<String> {
+    if a.len() != 2 || b.len() != 2 {
+        return Some(format!("matmul operands must be 2-D, got {a:?} x {b:?}"));
+    }
+    let (contract_ok, want) =
+        if nt { (a[1] == b[1], [a[0], b[0]]) } else { (a[1] == b[0], [a[0], b[1]]) };
+    if !contract_ok {
+        return Some(format!("contraction mismatch: {a:?} x {b:?} (nt={nt})"));
+    }
+    if out != want {
+        return Some(format!("out shape {out:?} != {want:?} from {a:?} x {b:?} (nt={nt})"));
+    }
+    None
+}
+
+/// Per-opcode shape rules -- the same constraints the [`Graph`]
+/// constructors assert, re-proven against the lowered operand shapes.
+///
+/// [`Graph`]: super::graph::Graph
+fn check_shapes(
+    i: usize,
+    instr: &Instr,
+    args: &[Vec<usize>],
+    prov: Option<NodeId>,
+) -> Result<(), VerifyError> {
+    let op = instr.op.name();
+    let out = &instr.shape;
+    let fail = |detail: String| {
+        Err(VerifyError::Shape { instr: i, op: op.to_string(), detail, prov })
+    };
+    let arity = |want: usize| -> Result<(), VerifyError> {
+        if args.len() != want {
+            return Err(VerifyError::Shape {
+                instr: i,
+                op: op.to_string(),
+                detail: format!("{} args, {want} expected", args.len()),
+                prov,
+            });
+        }
+        Ok(())
+    };
+    let elementwise = |k: usize| -> Result<(), VerifyError> {
+        if args[k] != *out {
+            return Err(VerifyError::Shape {
+                instr: i,
+                op: op.to_string(),
+                detail: format!("arg {k} shape {:?} != out shape {out:?}", args[k]),
+                prov,
+            });
+        }
+        Ok(())
+    };
+    match &instr.op {
+        OpCode::Add | OpCode::Sub | OpCode::Mul => {
+            arity(2)?;
+            elementwise(0)?;
+            elementwise(1)?;
+        }
+        OpCode::ScaleBy => {
+            arity(2)?;
+            if numel(&args[0]) != 1 {
+                return fail(format!("scalar arg shape {:?} has numel != 1", args[0]));
+            }
+            elementwise(1)?;
+        }
+        OpCode::Scale(_)
+        | OpCode::Tanh
+        | OpCode::Neg
+        | OpCode::Square
+        | OpCode::Sin
+        | OpCode::Cos => {
+            arity(1)?;
+            elementwise(0)?;
+        }
+        OpCode::Reshape => {
+            arity(1)?;
+            if numel(&args[0]) != numel(out) {
+                return fail(format!("reshape {:?} -> {out:?} changes numel", args[0]));
+            }
+        }
+        OpCode::Broadcast => {
+            arity(1)?;
+            if numel(&args[0]) != 1 {
+                return fail(format!("broadcast arg shape {:?} has numel != 1", args[0]));
+            }
+        }
+        OpCode::SumAll => {
+            arity(1)?;
+            if numel(out) != 1 {
+                return fail(format!("out shape {out:?} has numel != 1"));
+            }
+        }
+        OpCode::SumAxis(axis) => {
+            arity(1)?;
+            let a = &args[0];
+            if a.len() != 2 || *axis >= 2 {
+                return fail(format!("needs a 2-D arg and axis < 2, got {a:?} axis {axis}"));
+            }
+            let want = if *axis == 1 { vec![a[0], 1] } else { vec![1, a[1]] };
+            if *out != want {
+                return fail(format!("out shape {out:?} != {want:?} from {a:?} axis {axis}"));
+            }
+        }
+        OpCode::MatMul => {
+            arity(2)?;
+            if let Some(d) = matmul_rule(false, &args[0], &args[1], out) {
+                return fail(d);
+            }
+        }
+        OpCode::MatMulNT => {
+            arity(2)?;
+            if let Some(d) = matmul_rule(true, &args[0], &args[1], out) {
+                return fail(d);
+            }
+        }
+        OpCode::Transpose => {
+            arity(1)?;
+            let a = &args[0];
+            if a.len() != 2 {
+                return fail(format!("transpose arg must be 2-D, got {a:?}"));
+            }
+            if *out != [a[1], a[0]] {
+                return fail(format!("out shape {out:?} != transpose of {a:?}"));
+            }
+        }
+        OpCode::Fused(kernel) => {
+            arity(kernel.exts.len())?;
+            for (k, (a, kind)) in args.iter().zip(&kernel.exts).enumerate() {
+                match kind {
+                    ExtKind::Elem => elementwise(k)?,
+                    ExtKind::Scalar => {
+                        if numel(a) != 1 {
+                            return fail(format!("scalar ext {k} shape {a:?} has numel != 1"));
+                        }
+                    }
+                }
+            }
+        }
+        OpCode::MatMulFused(me) => {
+            arity(2 + me.epi.exts.len())?;
+            if let Some(d) = matmul_rule(me.nt, &args[0], &args[1], out) {
+                return fail(d);
+            }
+            for (k, (a, kind)) in args[2..].iter().zip(&me.epi.exts).enumerate() {
+                match kind {
+                    ExtKind::Elem => elementwise(2 + k)?,
+                    ExtKind::Scalar => {
+                        if numel(a) != 1 {
+                            return fail(format!(
+                                "scalar epilogue ext {k} shape {a:?} has numel != 1"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        OpCode::GradAllReduce(spec) => {
+            let lanes = spec.local_lanes.len();
+            if args.len() != lanes && args.len() != lanes + 1 {
+                return fail(format!(
+                    "{} args for {lanes} local lanes (+ at most 1 chain arg)",
+                    args.len()
+                ));
+            }
+            for k in 0..lanes {
+                elementwise(k)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Verify every static invariant of `p`.  See the module docs for the
+/// full list; returns the first violation found, in replay order.
+pub fn verify_program(p: &Program) -> Result<(), VerifyError> {
+    let n = p.instrs.len();
+
+    // ---- alignment of the side tables -------------------------------
+    if p.prov.len() != n {
+        return Err(VerifyError::Provenance {
+            detail: format!("{} entries for {n} instructions", p.prov.len()),
+        });
+    }
+    if p.output_shapes.len() != p.outputs.len() {
+        return Err(VerifyError::Output {
+            index: 0,
+            detail: format!(
+                "{} output shapes for {} outputs",
+                p.output_shapes.len(),
+                p.outputs.len()
+            ),
+        });
+    }
+    if p.input_shapes.len() != p.inputs.len() {
+        return Err(VerifyError::Output {
+            index: 0,
+            detail: format!(
+                "{} input shapes for {} inputs",
+                p.input_shapes.len(),
+                p.inputs.len()
+            ),
+        });
+    }
+
+    // ---- pass 1: liveness, operand ranges, aliasing, shapes ----------
+    // `writer[b]` = instruction currently defining arena slot `b`.
+    let mut writer: Vec<Option<usize>> = vec![None; p.n_slots];
+    for (i, instr) in p.instrs.iter().enumerate() {
+        let op = instr.op.name();
+        let prov = p.prov.get(i).copied();
+        let mut arg_shapes: Vec<Vec<usize>> = Vec::with_capacity(instr.args.len());
+        for &a in &instr.args {
+            arg_shapes.push(operand_shape(p, &writer, i, op, prov, a)?);
+        }
+        if instr.out >= p.n_slots {
+            return Err(VerifyError::OperandRange {
+                instr: i,
+                op: op.to_string(),
+                detail: format!("out slot {} >= n_slots {}", instr.out, p.n_slots),
+                prov,
+            });
+        }
+        let aliased = instr.args.iter().any(|a| matches!(*a, Operand::Buf(b) if b == instr.out));
+        if aliased {
+            return Err(VerifyError::OutAliasesArg {
+                instr: i,
+                op: op.to_string(),
+                slot: instr.out,
+                prov,
+            });
+        }
+        check_shapes(i, instr, &arg_shapes, prov)?;
+        writer[instr.out] = Some(i);
+    }
+
+    // ---- program outputs --------------------------------------------
+    for (k, o) in p.outputs.iter().enumerate() {
+        let err = |detail: String| Err(VerifyError::Output { index: k, detail });
+        match *o {
+            Operand::Buf(b) => {
+                if b >= p.n_slots {
+                    return err(format!("arena slot {b} >= n_slots {}", p.n_slots));
+                }
+                if writer[b].is_none() {
+                    return err(format!("reads arena slot {b} no instruction writes"));
+                }
+            }
+            Operand::In(idx) => {
+                if idx >= p.inputs.len() {
+                    return err(format!("input {idx} >= {} inputs", p.inputs.len()));
+                }
+            }
+            Operand::Const(c) => {
+                if c >= p.consts.len() {
+                    return err(format!("const {c} >= {} consts", p.consts.len()));
+                }
+            }
+            Operand::State(s) => {
+                if s >= p.states.len() {
+                    return err(format!("state {s} >= {} states", p.states.len()));
+                }
+            }
+        }
+    }
+
+    // ---- pass 2: schedule self-consistency --------------------------
+    let s = &p.schedule;
+    if s.n_preds.len() != n || s.succ_offsets.len() != n + 1 {
+        return Err(VerifyError::Schedule {
+            detail: format!(
+                "{} pred counts / {} offset entries for {n} instructions",
+                s.n_preds.len(),
+                s.succ_offsets.len()
+            ),
+        });
+    }
+    if s.succ_offsets.first().copied().unwrap_or(0) != 0
+        || *s.succ_offsets.last().unwrap() as usize != s.succs.len()
+    {
+        return Err(VerifyError::Schedule {
+            detail: format!(
+                "offset table [{:?}..{:?}] does not span the {}-edge successor list",
+                s.succ_offsets.first(),
+                s.succ_offsets.last(),
+                s.succs.len()
+            ),
+        });
+    }
+    let mut pred_count = vec![0u32; n];
+    for u in 0..n {
+        let (lo, hi) = (s.succ_offsets[u] as usize, s.succ_offsets[u + 1] as usize);
+        if hi < lo || hi > s.succs.len() {
+            return Err(VerifyError::Schedule {
+                detail: format!("offset table not monotone at instr #{u} ({lo}..{hi})"),
+            });
+        }
+        for &v in &s.succs[lo..hi] {
+            let v = v as usize;
+            if v <= u || v >= n {
+                return Err(VerifyError::Schedule {
+                    detail: format!("edge #{u} -> #{v} is not a forward edge within 0..{n}"),
+                });
+            }
+            pred_count[v] += 1;
+        }
+    }
+    for (v, (&have, &want)) in s.n_preds.iter().zip(&pred_count).enumerate() {
+        if have != want {
+            return Err(VerifyError::Schedule {
+                detail: format!(
+                    "instr #{v} claims {have} predecessors but the edge set has {want} \
+                     (a dropped or duplicated edge would deadlock or race the graph executor)"
+                ),
+            });
+        }
+    }
+
+    // ---- pass 3: hazard completeness --------------------------------
+    // Ancestor bitsets over the stored DAG: `anc[v]` = every instruction
+    // with an edge path to `v`.  Edges all point forward (proven above),
+    // so one ascending sweep propagates transitively.
+    let words = n.div_ceil(64);
+    let mut anc: Vec<u64> = vec![0; n * words];
+    let mut scratch: Vec<u64> = vec![0; words];
+    for u in 0..n {
+        scratch.copy_from_slice(&anc[u * words..(u + 1) * words]);
+        let (lo, hi) = (s.succ_offsets[u] as usize, s.succ_offsets[u + 1] as usize);
+        for &v in &s.succs[lo..hi] {
+            let row = &mut anc[v as usize * words..(v as usize + 1) * words];
+            for (w, &bits) in scratch.iter().enumerate() {
+                row[w] |= bits;
+            }
+            row[u / 64] |= 1u64 << (u % 64);
+        }
+    }
+    let has_path =
+        |u: usize, v: usize| -> bool { (anc[v * words + u / 64] >> (u % 64)) & 1 == 1 };
+
+    // Recompute the *required* orderings from the instruction stream --
+    // the same forward sweep `passes::schedule` runs -- and demand an
+    // edge path in the stored schedule for each.
+    let mut last_writer: Vec<Option<usize>> = vec![None; p.n_slots];
+    let mut readers: Vec<Vec<usize>> = vec![Vec::new(); p.n_slots];
+    for (i, instr) in p.instrs.iter().enumerate() {
+        let prov = p.prov.get(i).copied();
+        for &a in &instr.args {
+            if let Operand::Buf(b) = a {
+                let w = last_writer[b].expect("pass 1 proved def-before-use");
+                if !has_path(w, i) {
+                    return Err(VerifyError::Unordered {
+                        earlier: w,
+                        later: i,
+                        slot: b,
+                        kind: "read-after-write",
+                        prov,
+                    });
+                }
+                if !readers[b].contains(&i) {
+                    readers[b].push(i);
+                }
+            }
+        }
+        let out = instr.out;
+        if let Some(w) = last_writer[out] {
+            if !has_path(w, i) {
+                return Err(VerifyError::Unordered {
+                    earlier: w,
+                    later: i,
+                    slot: out,
+                    kind: "write-after-write",
+                    prov,
+                });
+            }
+        }
+        for &r in &readers[out] {
+            if r != i && !has_path(r, i) {
+                return Err(VerifyError::Unordered {
+                    earlier: r,
+                    later: i,
+                    slot: out,
+                    kind: "write-after-read",
+                    prov,
+                });
+            }
+        }
+        readers[out].clear();
+        last_writer[out] = Some(i);
+    }
+
+    // ---- pass 4: optimizer update placement -------------------------
+    let n_states = p.states.len();
+    // exclusivity: each state slot is owned by at most one update
+    let mut owned = vec![false; n_states];
+    for (ui, up) in p.updates.iter().enumerate() {
+        let fail = |detail: String| Err(VerifyError::Update { detail });
+        if up.weight >= n_states {
+            return fail(format!("update #{ui}: weight slot {} >= {n_states} states", up.weight));
+        }
+        if p.states[up.weight].kind != StateKind::Weight {
+            return fail(format!(
+                "update #{ui}: state slot {} is {:?}, not a weight",
+                up.weight, p.states[up.weight].kind
+            ));
+        }
+        let wshape = p.states[up.weight].shape.clone();
+        let gshape = match operand_shape(p, &writer, n, "update", None, up.grad) {
+            Ok(sh) => sh,
+            Err(e) => return fail(format!("update #{ui}: gradient operand invalid: {e}")),
+        };
+        if gshape != wshape {
+            return fail(format!(
+                "update #{ui}: gradient shape {gshape:?} != weight shape {wshape:?}"
+            ));
+        }
+        let mut touched = vec![up.weight];
+        match (up.rule, up.moments) {
+            (UpdateRule::Sgd { .. }, None) => {}
+            (UpdateRule::Sgd { .. }, Some(_)) => {
+                return fail(format!("update #{ui}: SGD carries Adam moment slots"));
+            }
+            (UpdateRule::Adam { .. }, None) => {
+                return fail(format!("update #{ui}: Adam without moment slots"));
+            }
+            (UpdateRule::Adam { .. }, Some((m, v))) => {
+                if m >= n_states || v >= n_states {
+                    return fail(format!(
+                        "update #{ui}: moment slots ({m}, {v}) >= {n_states} states"
+                    ));
+                }
+                if !(up.weight < m && v == m + 1) {
+                    return fail(format!(
+                        "update #{ui}: moment slots (m={m}, v={v}) break the split-borrow \
+                         order the executor relies on (weight {} < m, v == m + 1)",
+                        up.weight
+                    ));
+                }
+                if p.states[m].kind != StateKind::AdamM || p.states[v].kind != StateKind::AdamV {
+                    return fail(format!(
+                        "update #{ui}: moment slots ({m}, {v}) have kinds ({:?}, {:?})",
+                        p.states[m].kind, p.states[v].kind
+                    ));
+                }
+                if p.states[m].shape != wshape || p.states[v].shape != wshape {
+                    return fail(format!(
+                        "update #{ui}: moment shapes differ from weight shape {wshape:?}"
+                    ));
+                }
+                touched.push(m);
+                touched.push(v);
+            }
+        }
+        for t in touched {
+            if owned[t] {
+                return fail(format!("update #{ui}: state slot {t} owned by two updates"));
+            }
+            owned[t] = true;
+        }
+    }
+
+    // ---- pass 5: gradient all-reduce placement ----------------------
+    let mut reduces: Vec<(usize, &super::program::GradReduceSpec)> = Vec::new();
+    for (i, instr) in p.instrs.iter().enumerate() {
+        if let OpCode::GradAllReduce(spec) = &instr.op {
+            reduces.push((i, spec));
+        }
+    }
+    if let Some(&(_, first)) = reduces.first() {
+        for &(i, spec) in &reduces {
+            let fail = |detail: String| Err(VerifyError::Update { detail });
+            if spec.weight >= n_states || p.states[spec.weight].kind != StateKind::Weight {
+                return fail(format!(
+                    "reduce at instr #{i}: weight slot {} is not a weight state", spec.weight
+                ));
+            }
+            if spec.n_lanes != first.n_lanes || spec.local_lanes != first.local_lanes {
+                return fail(format!(
+                    "reduce at instr #{i}: lane topology ({}, {:?}) differs from ({}, {:?})",
+                    spec.n_lanes, spec.local_lanes, first.n_lanes, first.local_lanes
+                ));
+            }
+            let ascending = spec.local_lanes.windows(2).all(|w| w[0] < w[1]);
+            if spec.local_lanes.is_empty()
+                || !ascending
+                || *spec.local_lanes.last().unwrap() >= spec.n_lanes
+            {
+                return fail(format!(
+                    "reduce at instr #{i}: local lanes {:?} must ascend within 0..{}",
+                    spec.local_lanes, spec.n_lanes
+                ));
+            }
+        }
+        for pair in reduces.windows(2) {
+            let ((i0, s0), (i1, s1)) = (pair[0], pair[1]);
+            if s1.weight <= s0.weight {
+                return Err(VerifyError::Update {
+                    detail: format!(
+                        "reduces at instrs #{i0}, #{i1} walk weights {} then {}: replicas \
+                         must hit reduces in ascending weight order or barrier generations \
+                         pair the wrong gradients",
+                        s0.weight, s1.weight
+                    ),
+                });
+            }
+            if !has_path(i0, i1) {
+                return Err(VerifyError::Update {
+                    detail: format!(
+                        "consecutive reduces #{i0} -> #{i1} have no ordering path: the \
+                         graph executor could reorder their barrier generations"
+                    ),
+                });
+            }
+        }
+    }
+
+    Ok(())
+}
+
+impl Program {
+    /// Run the static verifier over this program.  See [`verify_program`].
+    pub fn verify(&self) -> Result<(), VerifyError> {
+        verify_program(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::graph::{Graph, NodeId};
+    use super::super::passes;
+    use super::super::program::{
+        Instr, OpCode, Operand, PassConfig, Program, ProgramStats, UpdateRule,
+    };
+    use super::*;
+
+    const ADAM: UpdateRule = UpdateRule::Adam { lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8 };
+    const SGD: UpdateRule = UpdateRule::Sgd { lr: 1e-3 };
+
+    /// A small training-step-shaped graph: two weights, a data input, a
+    /// scalar loss, and the weight gradients as trailing outputs.
+    fn step_graph() -> (Graph, Vec<NodeId>, Vec<NodeId>) {
+        let mut g = Graph::new();
+        let w0 = g.input(&[3, 2]);
+        let w1 = g.input(&[1, 3]);
+        let x = g.input(&[2, 4]);
+        let h = g.matmul(w0, x);
+        let a = g.tanh(h);
+        let y = g.matmul(w1, a);
+        let sq = g.square(y);
+        let loss = g.sum_all(sq);
+        let grads = g.grad(loss, &[w0, w1]);
+        (g, vec![w0, w1, x], vec![loss, grads[0], grads[1]])
+    }
+
+    fn training_program(rule: UpdateRule) -> Program {
+        let (g, ids, outs) = step_graph();
+        Program::compile(&g, &outs).attach_optimizer(&[ids[0], ids[1]], rule)
+    }
+
+    #[test]
+    fn compiled_programs_verify_clean() {
+        let (g, ids, outs) = step_graph();
+        for config in [PassConfig::default(), PassConfig::NONE] {
+            let p = Program::compile_with(&g, &outs, config);
+            p.verify().expect("plain compiled program verifies");
+        }
+        training_program(SGD).verify().expect("SGD training program verifies");
+        training_program(ADAM).verify().expect("Adam training program verifies");
+        let p = Program::compile_inference(&g, &outs[..1], &[ids[0], ids[1]]);
+        p.verify().expect("inference program verifies");
+    }
+
+    /// Wrap hand-written instructions over one `[2]`-shaped input in a
+    /// minimal Program: schedule computed, provenance aligned (node #i
+    /// for instr #i), single arena output.
+    fn program_from(instrs: Vec<Instr>, n_slots: usize, output: BufId) -> Program {
+        let schedule = passes::schedule(&instrs, n_slots);
+        let prov = (0..instrs.len()).collect();
+        Program {
+            instrs,
+            n_slots,
+            inputs: vec![0],
+            input_shapes: vec![vec![2]],
+            consts: vec![],
+            outputs: vec![Operand::Buf(output)],
+            output_shapes: vec![vec![2]],
+            states: vec![],
+            updates: vec![],
+            prov,
+            schedule,
+            stats: ProgramStats::default(),
+        }
+    }
+
+    /// The 4-instruction slot-reuse pattern from the scheduler tests:
+    /// slot 0 is rewritten by instr 2 while instrs 1 and 3 still consume
+    /// the old and new values, so the WAW edge 0->2 and WAR edge 1->2 are
+    /// the only orderings keeping the arena race-free.
+    fn hand_program() -> Program {
+        let instrs = vec![
+            Instr { op: OpCode::Tanh, args: vec![Operand::In(0)], out: 0, shape: vec![2] },
+            Instr { op: OpCode::Tanh, args: vec![Operand::Buf(0)], out: 1, shape: vec![2] },
+            Instr { op: OpCode::Neg, args: vec![Operand::In(0)], out: 0, shape: vec![2] },
+            Instr {
+                op: OpCode::Add,
+                args: vec![Operand::Buf(0), Operand::Buf(1)],
+                out: 2,
+                shape: vec![2],
+            },
+        ];
+        program_from(instrs, 3, 2)
+    }
+
+    /// Remove the directed edge `u -> v` from the stored schedule,
+    /// keeping the CSR and pred counts mutually consistent (modelling a
+    /// scheduler that silently failed to emit one hazard edge).
+    fn drop_edge(p: &mut Program, u: usize, v: usize) {
+        let s = &mut p.schedule;
+        let (lo, hi) = (s.succ_offsets[u] as usize, s.succ_offsets[u + 1] as usize);
+        let pos = s.succs[lo..hi]
+            .iter()
+            .position(|&x| x as usize == v)
+            .expect("edge present before mutation")
+            + lo;
+        s.succs.remove(pos);
+        for off in s.succ_offsets[u + 1..].iter_mut() {
+            *off -= 1;
+        }
+        s.n_preds[v] -= 1;
+    }
+
+    #[test]
+    fn mutation_dropped_hazard_edge_is_caught() {
+        let mut p = hand_program();
+        p.verify().expect("unmutated hand program verifies");
+        // WAR edge 1 -> 2 (instr 2 rewrites slot 0 while instr 1's read
+        // of the old value is unordered without it)
+        drop_edge(&mut p, 1, 2);
+        match p.verify() {
+            Err(VerifyError::Unordered { earlier: 1, later: 2, slot: 0, kind, .. }) => {
+                assert_eq!(kind, "write-after-read");
+            }
+            other => panic!("expected WAR Unordered, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mutation_dropped_waw_edge_is_caught() {
+        // in `hand_program` the WAW edge 0 -> 2 is shadowed by the
+        // transitive path 0 -> 1 -> 2, so dropping it leaves a *valid*
+        // schedule (the verifier accepts paths, not just direct edges);
+        // this program makes the WAW edge the only ordering
+        let instrs = vec![
+            Instr { op: OpCode::Tanh, args: vec![Operand::In(0)], out: 0, shape: vec![2] },
+            Instr { op: OpCode::Neg, args: vec![Operand::In(0)], out: 0, shape: vec![2] },
+            Instr { op: OpCode::Tanh, args: vec![Operand::Buf(0)], out: 1, shape: vec![2] },
+        ];
+        let mut p = program_from(instrs, 2, 1);
+        p.verify().expect("unmutated WAW program verifies");
+        drop_edge(&mut p, 0, 1);
+        match p.verify() {
+            Err(VerifyError::Unordered { earlier: 0, later: 1, slot: 0, kind, .. }) => {
+                assert_eq!(kind, "write-after-write");
+            }
+            other => panic!("expected WAW Unordered, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mutation_dropped_true_edge_is_caught() {
+        let mut p = hand_program();
+        // RAW edge 0 -> 1: without it the graph executor could run
+        // instr 1 before its operand exists
+        drop_edge(&mut p, 0, 1);
+        match p.verify() {
+            Err(VerifyError::Unordered { earlier: 0, later: 1, slot: 0, kind, .. }) => {
+                assert_eq!(kind, "read-after-write");
+            }
+            other => panic!("expected RAW Unordered, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mutation_half_dropped_edge_is_caught_as_schedule_corruption() {
+        let mut p = hand_program();
+        // remove the edge from the CSR but leave the pred count: the
+        // executor's countdown would deadlock waiting for a retire signal
+        // that never comes
+        let s = &mut p.schedule;
+        let lo = s.succ_offsets[1] as usize;
+        s.succs.remove(lo);
+        for off in s.succ_offsets[2..].iter_mut() {
+            *off -= 1;
+        }
+        match p.verify() {
+            Err(VerifyError::Schedule { .. }) => {}
+            other => panic!("expected Schedule corruption, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mutation_premature_slot_reuse_is_caught() {
+        // model the liveness pass handing out slot 0 while instr 0's
+        // value is still live for instr 2: the corrupted interval
+        // orphans instr 1's definition, so instr 2's second operand
+        // becomes a read of a slot no instruction writes
+        let instrs = vec![
+            Instr { op: OpCode::Tanh, args: vec![Operand::In(0)], out: 0, shape: vec![2] },
+            Instr { op: OpCode::Neg, args: vec![Operand::In(0)], out: 1, shape: vec![2] },
+            Instr {
+                op: OpCode::Add,
+                args: vec![Operand::Buf(0), Operand::Buf(1)],
+                out: 2,
+                shape: vec![2],
+            },
+        ];
+        let mut p = program_from(instrs, 3, 2);
+        p.verify().expect("unmutated program verifies");
+        p.instrs[1].out = 0; // slot 0 reused while still live
+        match p.verify() {
+            Err(VerifyError::UseBeforeDef { instr: 2, slot: 1, .. }) => {}
+            other => panic!("expected UseBeforeDef, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mutation_dropped_edges_in_real_step_program_are_caught() {
+        // on a real compiled+attached training step: cut every ordering
+        // edge out of the producer of the first arena read, so no path
+        // can order the consumer after it
+        let mut p = training_program(SGD);
+        let (r, b) = p
+            .instrs
+            .iter()
+            .enumerate()
+            .find_map(|(i, ins)| {
+                ins.args.iter().find_map(|a| match a {
+                    Operand::Buf(b) => Some((i, *b)),
+                    _ => None,
+                })
+            })
+            .expect("step program reads arena slots");
+        let u = (0..r).rev().find(|&w| p.instrs[w].out == b).expect("slot written before read");
+        let s = &mut p.schedule;
+        let (lo, hi) = (s.succ_offsets[u] as usize, s.succ_offsets[u + 1] as usize);
+        assert!(hi > lo, "producer has outgoing edges");
+        let removed: Vec<u32> = s.succs.drain(lo..hi).collect();
+        for off in s.succ_offsets[u + 1..].iter_mut() {
+            *off -= (hi - lo) as u32;
+        }
+        for &v in &removed {
+            s.n_preds[v as usize] -= 1;
+        }
+        match p.verify() {
+            Err(VerifyError::Unordered { earlier, later, slot, kind, .. }) => {
+                assert_eq!((earlier, later, slot), (u, r, b));
+                assert_eq!(kind, "read-after-write");
+            }
+            other => panic!("expected Unordered, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mutation_shape_mismatch_is_caught() {
+        let (g, _, outs) = step_graph();
+        let mut p = Program::compile_with(&g, &outs, PassConfig::NONE);
+        let k = p
+            .instrs
+            .iter()
+            .position(|i| matches!(i.op, OpCode::Tanh))
+            .expect("step program has a tanh");
+        p.instrs[k].shape.push(7);
+        match p.verify() {
+            Err(VerifyError::Shape { instr, .. }) => assert_eq!(instr, k),
+            other => panic!("expected Shape, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mutation_misplaced_update_is_caught() {
+        let mut p = training_program(SGD);
+        p.updates[0].weight = p.states.len() + 5;
+        match p.verify() {
+            Err(VerifyError::Update { .. }) => {}
+            other => panic!("expected Update, got {other:?}"),
+        }
+
+        let mut p = training_program(ADAM);
+        let (m, v) = p.updates[0].moments.expect("adam moments");
+        p.updates[0].moments = Some((v, m)); // swapped: breaks split-borrow order
+        match p.verify() {
+            Err(VerifyError::Update { detail }) => {
+                assert!(detail.contains("split-borrow"), "detail: {detail}");
+            }
+            other => panic!("expected Update, got {other:?}"),
+        }
+
+        let mut p = training_program(ADAM);
+        p.updates[0].moments = None; // Adam stripped of its moments
+        match p.verify() {
+            Err(VerifyError::Update { .. }) => {}
+            other => panic!("expected Update, got {other:?}"),
+        }
+
+        // two updates claiming the same weight slot
+        let mut p = training_program(SGD);
+        p.updates[1].weight = p.updates[0].weight;
+        match p.verify() {
+            Err(VerifyError::Update { detail }) => {
+                assert!(detail.contains("owned by two"), "detail: {detail}");
+            }
+            other => panic!("expected Update, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mutation_reduce_order_swap_is_caught() {
+        let (g, ids, outs) = step_graph();
+        let mut p = Program::compile(&g, &outs)
+            .attach_optimizer_replicated(&[ids[0], ids[1]], SGD, 1, &[0]);
+        p.verify().expect("replicated program verifies");
+        let reduce_idxs: Vec<usize> = p
+            .instrs
+            .iter()
+            .enumerate()
+            .filter(|(_, i)| matches!(i.op, OpCode::GradAllReduce(_)))
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(reduce_idxs.len(), 2, "one reduce per weight");
+        for &i in &reduce_idxs {
+            if let OpCode::GradAllReduce(spec) = &mut p.instrs[i].op {
+                spec.weight = 1 - spec.weight; // swap weight targets
+            }
+        }
+        match p.verify() {
+            Err(VerifyError::Update { detail }) => {
+                assert!(detail.contains("ascending weight order"), "detail: {detail}");
+            }
+            other => panic!("expected Update, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mutation_corrupt_provenance_is_caught() {
+        let mut p = hand_program();
+        p.prov.pop();
+        match p.verify() {
+            Err(VerifyError::Provenance { .. }) => {}
+            other => panic!("expected Provenance, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn verify_errors_render_with_context() {
+        let mut p = hand_program();
+        drop_edge(&mut p, 1, 2);
+        let msg = p.verify().unwrap_err().to_string();
+        assert!(msg.contains("#1 -> #2"), "msg: {msg}");
+        assert!(msg.contains("slot 0"), "msg: {msg}");
+        assert!(msg.contains("graph node #2"), "msg: {msg}");
+    }
+}

@@ -35,6 +35,27 @@ pub enum TrainError {
     },
     /// A checkpoint could not be loaded, validated, or applied.
     Checkpoint { reason: String },
+    /// A replica (or the serve dispatcher) failed to make progress within
+    /// the stall deadline (`ZCS_STALL_MS`): the watchdog converted what
+    /// would have been a silent hang into this error, carrying the
+    /// stalling party's state dump.
+    Stalled {
+        /// 1-based training step that was being executed (0 when the
+        /// stall is outside a training step, e.g. in serving)
+        step: u64,
+        /// watchdog state dump (who stalled, parties arrived, deadline)
+        what: String,
+    },
+    /// The dynamic sanitizer (`ZCS_SANITIZE=full`) tripped on something
+    /// that is not a non-finite value -- e.g. an unordered slot access
+    /// the schedule should have made impossible.  Always a bug in the
+    /// compiler/executor, never in the physics; not retried.
+    Sanitizer {
+        /// 1-based training step at which the trip was observed
+        step: u64,
+        /// the trip report ([`crate::autodiff::SanitizeTrip`] rendering)
+        what: String,
+    },
 }
 
 impl fmt::Display for TrainError {
@@ -47,6 +68,12 @@ impl fmt::Display for TrainError {
                 write!(f, "worker panicked at step {step}: {what}")
             }
             TrainError::Checkpoint { reason } => write!(f, "checkpoint error: {reason}"),
+            TrainError::Stalled { step, what } => {
+                write!(f, "stalled at step {step}: {what}")
+            }
+            TrainError::Sanitizer { step, what } => {
+                write!(f, "sanitizer trip at step {step}: {what}")
+            }
         }
     }
 }
@@ -76,6 +103,12 @@ mod tests {
         assert!(s.contains("loss_pde") && s.contains("step 7"), "{s}");
         let e = TrainError::WorkerPanic { step: 3, what: "boom".into() };
         assert!(e.to_string().contains("boom"));
+        let e = TrainError::Stalled { step: 5, what: "1 of 2 parties".into() };
+        let s = e.to_string();
+        assert!(s.contains("stalled") && s.contains("step 5") && s.contains("parties"), "{s}");
+        let e = TrainError::Sanitizer { step: 9, what: "unordered write/write".into() };
+        let s = e.to_string();
+        assert!(s.contains("sanitizer") && s.contains("write/write"), "{s}");
     }
 
     #[test]

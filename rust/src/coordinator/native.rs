@@ -64,7 +64,7 @@ use crate::sampler::{FunctionBank, GpSampler1d};
 use crate::solvers::{BurgersSolver, KirchhoffSolver, ReactionDiffusionSolver};
 use crate::tensor::simd::{SimdLevel, SimdMode};
 use crate::tensor::Tensor;
-use crate::util::env::{env_fault, FaultCell, FaultKind};
+use crate::util::env::{env_fault, FaultCell, FaultKind, SanitizeMode};
 use anyhow::{anyhow, ensure, Context, Result};
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -182,6 +182,15 @@ pub struct NativeRunConfig {
     /// deterministic fault injector (tests pass a local cell here;
     /// `None` falls back to the process-wide `ZCS_FAULT` cell)
     pub fault: Option<Arc<FaultCell>>,
+    /// correctness layer: `Off` (default) pays nothing, `Static` verifies
+    /// every compiled Program, `Full` additionally arms the executor's
+    /// runtime tripwires (shadow-arena race stamps, per-instruction
+    /// NaN/Inf scan) and the stall watchdogs.  Defaults to `ZCS_SANITIZE`
+    pub sanitize: SanitizeMode,
+    /// stall watchdog deadline in milliseconds, used when `sanitize` is
+    /// `Full` (replica barrier + step completion).  Defaults to
+    /// `ZCS_STALL_MS` (30000)
+    pub stall_ms: u64,
 }
 
 impl Default for NativeRunConfig {
@@ -213,6 +222,8 @@ impl Default for NativeRunConfig {
             checkpoint_path: None,
             resume_from: None,
             fault: None,
+            sanitize: crate::util::env::env_sanitize(),
+            stall_ms: crate::util::env::env_stall_ms(),
         }
     }
 }
@@ -396,6 +407,15 @@ impl SingleEngine {
         if config.resident {
             program = program.attach_optimizer(&built.weight_ids, config.optimizer.rule(config.lr));
         }
+        if config.sanitize.verify() {
+            // debug builds and ZCS_SANITIZE already verified at compile;
+            // this catches a config-level opt-in (e.g. `--sanitize`) in
+            // release builds and surfaces the report as a typed Result
+            // instead of a panic
+            program
+                .verify()
+                .map_err(|e| anyhow!("step program failed verification: {e}"))?;
+        }
         let compile_time = t0.elapsed();
 
         let weights = init_problem_weights(&built, config.seed);
@@ -433,6 +453,7 @@ impl SingleEngine {
         };
         let mut exec =
             Executor::with_threads(threads).with_sched(config.schedule).with_simd(config.simd);
+        exec.set_sanitize(config.sanitize.dynamic());
         if config.profile {
             exec.enable_profiling();
         }
@@ -1349,6 +1370,23 @@ impl StepEngine<'_> {
             }
         };
         self.feed_scratch.clear();
+        if let Some(trip) = self.exec.take_trip() {
+            // the dynamic sanitizer fired: a non-finite output surfaces as
+            // the same NonFinite variant the loss guard raises (so NaN
+            // rollback keeps working) but with instruction-level
+            // provenance; a race is an executor bug, never physics
+            return Err(match trip {
+                crate::autodiff::SanitizeTrip::NonFinite { .. } => TrainError::NonFinite {
+                    step: step_no,
+                    output: trip.to_string(),
+                    value: f64::NAN,
+                },
+                crate::autodiff::SanitizeTrip::Race { .. } => {
+                    TrainError::Sanitizer { step: step_no, what: trip.to_string() }
+                }
+            }
+            .into());
+        }
         for (name, v) in
             ["loss", "loss_pde", "loss_bc"].into_iter().zip([loss, loss_pde, loss_bc])
         {

@@ -183,7 +183,15 @@ impl ResidentModel {
         for (node, col) in self.coords.iter().zip(&columns) {
             shared.insert(*node, col);
         }
-        self.exec.run_inference(&self.program, self.p, sensors, &shared)
+        let rows = self.exec.run_inference(&self.program, self.p, sensors, &shared);
+        if let Some(trip) = self.exec.take_trip() {
+            // under ZCS_SANITIZE=full the executor's tripwires are armed;
+            // surface a trip as a panic so the serve worker's existing
+            // isolation turns it into one bounded retry on a fresh
+            // executor, then a typed EvalFailed carrying this report
+            panic!("{trip}");
+        }
+        rows
     }
 }
 

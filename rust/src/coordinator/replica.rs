@@ -33,7 +33,8 @@
 //! [`lane_count`]: crate::pde::residual::lane_count
 
 use crate::autodiff::{
-    Executor, NodeId, ProfileReport, Program, ReplicaComm, SchedMode, BARRIER_POISON_MSG,
+    Executor, NodeId, ProfileReport, Program, ReplicaComm, SanitizeTrip, SchedMode,
+    BARRIER_POISON_MSG, BARRIER_STALL_MSG,
 };
 use crate::coordinator::batch::PdeBatch;
 use crate::coordinator::error::{panic_text, TrainError};
@@ -93,6 +94,10 @@ struct ReplicaEngine {
     fault: Option<Arc<FaultCell>>,
     /// resident steps this engine has run (the injected fault's clock)
     local_step: u64,
+    /// how long an injected [`FaultKind::Stall`] parks this replica:
+    /// twice the watchdog deadline (so an armed watchdog always fires
+    /// first), capped so the sleep stays bounded with the watchdog off
+    stall_sleep: Duration,
 }
 
 // SAFETY: the only non-`Send` fields are raw-pointer scratch buffers --
@@ -133,6 +138,12 @@ impl ReplicaEngine {
         if let Some(cell) = &self.fault {
             if cell.should_fire(FaultKind::Panic, self.local_step) {
                 panic!("zcs injected fault: replica worker panic at step {}", self.local_step);
+            }
+            if cell.should_fire(FaultKind::Stall, self.local_step) {
+                // park past an armed watchdog's deadline; bounded even
+                // with the watchdog off, so a mis-configured run hangs
+                // for one sleep, not forever
+                std::thread::sleep(self.stall_sleep);
             }
         }
         self.feed_refs(&[]);
@@ -271,6 +282,10 @@ pub struct ReplicaSet {
     lane_losses: Vec<[f64; 3]>,
     coord_dim: usize,
     compile_time: Duration,
+    /// `Some(deadline)` when the dynamic sanitizer armed the step
+    /// watchdogs: the lead's wait for replica parking times out after
+    /// this and poisons the barrier so a stuck replica unwinds
+    stall: Option<Duration>,
 }
 
 impl ReplicaSet {
@@ -322,12 +337,23 @@ impl ReplicaSet {
                     &local_lanes,
                 );
             }
+            if config.sanitize.verify() {
+                program.verify().map_err(|e| {
+                    anyhow!("replica {r} step program failed verification: {e}")
+                })?;
+            }
             // every replica draws the identical init (same seed, same
             // shapes), so their resident weight copies never diverge
             let weights = init_weights(&built.graph, &built.weight_ids, config.seed);
             n_weights = built.weight_ids.len();
             if comm.is_none() && n_replicas > 1 {
-                comm = Some(Arc::new(ReplicaComm::new(n_weights, n_lanes, n_replicas)));
+                let stall = config
+                    .sanitize
+                    .dynamic()
+                    .then(|| Duration::from_millis(config.stall_ms.max(1)));
+                comm = Some(Arc::new(
+                    ReplicaComm::new(n_weights, n_lanes, n_replicas).with_stall(stall),
+                ));
             }
 
             let mut src_of: HashMap<NodeId, LaneFeedSrc> = HashMap::new();
@@ -359,6 +385,7 @@ impl ReplicaSet {
             let mut exec = Executor::with_threads(per_replica_threads)
                 .with_sched(config.schedule)
                 .with_simd(config.simd);
+            exec.set_sanitize(config.sanitize.dynamic());
             if config.profile {
                 exec.enable_profiling();
             }
@@ -401,6 +428,9 @@ impl ReplicaSet {
                 // multi-replica set exercises the helper-thread unwind
                 fault: if r + 1 == n_replicas { config.fault.clone() } else { None },
                 local_step: 0,
+                stall_sleep: Duration::from_millis(
+                    config.stall_ms.saturating_mul(2).clamp(1, 60_000),
+                ),
             });
         }
         let compile_time = t0.elapsed();
@@ -461,7 +491,47 @@ impl ReplicaSet {
             lane_losses: vec![[0.0; 3]; n_lanes],
             coord_dim,
             compile_time,
+            stall: config
+                .sanitize
+                .dynamic()
+                .then(|| Duration::from_millis(config.stall_ms.max(1))),
         })
+    }
+
+    /// Drain the first sanitizer trip across every replica executor (the
+    /// lead first, then the parked drivers in replica order).
+    fn take_trip(&mut self) -> Option<SanitizeTrip> {
+        if let Some(t) = self.lead.exec.take_trip() {
+            return Some(t);
+        }
+        for slot in &self.others {
+            let mut st = slot.state.lock().unwrap();
+            if let Some(engine) = st.engine.as_mut() {
+                if let Some(t) = engine.exec.take_trip() {
+                    return Some(t);
+                }
+            }
+        }
+        None
+    }
+
+    /// Map a drained sanitizer trip to its typed error: non-finite trips
+    /// surface as the same [`TrainError::NonFinite`] the loss guard
+    /// raises (so NaN rollback keeps working) with instruction-level
+    /// provenance in the output name; races are executor bugs and get
+    /// their own [`TrainError::Sanitizer`] variant.
+    fn trip_error(trip: SanitizeTrip, step_no: u64) -> anyhow::Error {
+        match trip {
+            SanitizeTrip::NonFinite { .. } => TrainError::NonFinite {
+                step: step_no,
+                output: trip.to_string(),
+                value: f64::NAN,
+            }
+            .into(),
+            SanitizeTrip::Race { .. } => {
+                TrainError::Sanitizer { step: step_no, what: trip.to_string() }.into()
+            }
+        }
     }
 
     /// One optimizer step on one (unsharded) batch; returns
@@ -517,7 +587,22 @@ impl ReplicaSet {
         for slot in &self.others {
             let mut st = slot.state.lock().unwrap();
             while !st.done {
-                st = slot.cv.wait(st).unwrap();
+                match self.stall {
+                    None => st = slot.cv.wait(st).unwrap(),
+                    Some(d) => {
+                        // step-completion watchdog: a replica that fails
+                        // to park within the deadline gets its barrier
+                        // poisoned, converting a stuck all-reduce into
+                        // an unwind-and-park we can keep waiting for
+                        let (guard, timeout) = slot.cv.wait_timeout(st, d).unwrap();
+                        st = guard;
+                        if timeout.timed_out() && !st.done {
+                            if let Some(comm) = &self.comm {
+                                comm.poison();
+                            }
+                        }
+                    }
+                }
             }
             if let Some(what) = st.panicked.take() {
                 panics.push(what);
@@ -533,7 +618,17 @@ impl ReplicaSet {
                 .find(|p| !p.contains(BARRIER_POISON_MSG))
                 .unwrap_or(&panics[0])
                 .clone();
+            if what.contains(BARRIER_STALL_MSG) {
+                // the watchdog converted a hang into a panic: surface it
+                // as the typed stall, not a generic worker panic
+                return Err(TrainError::Stalled { step: step_no, what }.into());
+            }
             return Err(TrainError::WorkerPanic { step: step_no, what }.into());
+        }
+        if self.stall.is_some() {
+            if let Some(trip) = self.take_trip() {
+                return Err(Self::trip_error(trip, step_no));
+            }
         }
         self.fold_losses(step_no)
     }
@@ -569,6 +664,11 @@ impl ReplicaSet {
                 }
             }
         };
+        if self.stall.is_some() {
+            if let Some(trip) = self.lead.exec.take_trip() {
+                return Err(Self::trip_error(trip, step_no));
+            }
+        }
         let kl = self.lead.local_lanes.len();
         for (k, &lane) in self.lead.local_lanes.iter().enumerate() {
             let ls = &outs[3 * k..3 * k + 3];

@@ -41,6 +41,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "fields" => cmd_fields(rest),
         "serve" => cmd_serve(rest),
         "query" => cmd_query(rest),
+        "env" => cmd_env(rest),
         "help" | "--help" | "-h" => {
             print!(
                 "zcs -- Zero Coordinate Shift reproduction (rust + jax + pallas)\n\n\
@@ -58,13 +59,56 @@ fn dispatch(args: &[String]) -> Result<()> {
                  \x20 serve    serve trained checkpoints over TCP through\n\
                  \x20          inference-only programs (deadlines, admission\n\
                  \x20          control, graceful drain)\n\
-                 \x20 query    query a running `zcs serve` instance\n\n\
+                 \x20 query    query a running `zcs serve` instance\n\
+                 \x20 env      print every ZCS_* environment knob with its\n\
+                 \x20          effective value, default, and source\n\n\
                  run `zcs <command> --help` for options\n"
             );
             Ok(())
         }
         other => bail!("unknown command {other:?}; try `zcs help`"),
     }
+}
+
+/// Resolve a `--sanitize` flag: `auto` defers to the `ZCS_SANITIZE`
+/// environment knob; anything else overrides it for the whole process
+/// (exported back into the environment *before* the first
+/// `env_sanitize()` read, so executors, verifiers, and the serve layer
+/// all agree on one mode).
+fn parse_sanitize_flag(flag: &str) -> Result<zcs::util::env::SanitizeMode> {
+    use zcs::util::env::{env_sanitize, SanitizeMode};
+    Ok(match flag {
+        "auto" => env_sanitize(),
+        other => {
+            let mode = SanitizeMode::parse(other).map_err(|e| anyhow!(e))?;
+            std::env::set_var("ZCS_SANITIZE", mode.name());
+            mode
+        }
+    })
+}
+
+/// `zcs env`: every `ZCS_*` knob with its parsed value, default and
+/// source -- what a run launched from this shell would actually do.
+fn cmd_env(args: &[String]) -> Result<()> {
+    let opts = Opts::new("zcs env", "print every ZCS_* environment knob")
+        .switch("help", "show usage");
+    let p = opts.parse(args)?;
+    if p.switch("help") {
+        print!("{}", opts.usage());
+        return Ok(());
+    }
+    let mut table = Table::new(&["knob", "value", "default", "source", "meaning"]);
+    for k in zcs::util::env::knob_reports() {
+        table.row(&[
+            k.name.to_string(),
+            k.value,
+            k.default.to_string(),
+            k.source,
+            k.help.to_string(),
+        ]);
+    }
+    table.print();
+    Ok(())
 }
 
 fn cmd_ntrain(args: &[String]) -> Result<()> {
@@ -141,6 +185,13 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
             "record wall time per opcode and scheduler wavefront, printing a top-k \
              kernel table and worker occupancy (ZCS_PROFILE=1 also enables this)",
         )
+        .opt(
+            "sanitize",
+            "auto",
+            "off | static | full correctness layer (auto = ZCS_SANITIZE env, else off): \
+             static verifies compiled Programs, full adds the slot/NaN sanitizer and \
+             stall watchdogs (see ZCS_STALL_MS)",
+        )
         .switch(
             "feed-weights",
             "feed weights per step and update host-side instead of keeping them \
@@ -194,6 +245,7 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
         "auto" => zcs::tensor::simd::SimdMode::from_env(),
         other => zcs::tensor::simd::SimdMode::parse(other).map_err(|e| anyhow!(e))?,
     };
+    let sanitize = parse_sanitize_flag(p.get("sanitize"))?;
     let env_profile = zcs::util::env::knob("ZCS_PROFILE", false, zcs::util::env::parse_switch);
     let profile = p.switch("profile") || env_profile;
     let ckpt_path = Some(p.get("checkpoint")).filter(|s| !s.is_empty()).map(String::from);
@@ -223,6 +275,7 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
         checkpoint_every: p.get_usize("checkpoint-every")?,
         checkpoint_path: ckpt_path.clone(),
         resume_from: resume_from.clone(),
+        sanitize,
         ..NativeRunConfig::default()
     };
     println!(
@@ -236,6 +289,9 @@ fn cmd_ntrain(args: &[String]) -> Result<()> {
         config.lr,
         config.steps
     );
+    if config.sanitize != zcs::util::env::SanitizeMode::Off {
+        println!("sanitize: {} (stall watchdog {} ms)", config.sanitize.name(), config.stall_ms);
+    }
     let mut trainer = NativeTrainer::new(config)?;
     if let Some(path) = &resume_from {
         println!("resumed from checkpoint {path}");
@@ -766,6 +822,13 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("read-timeout-s", "30", "reclaim connections idle this long; 0 = never")
         .opt("max-points", "65536", "per-request evaluation point cap (bad-request above it)")
         .opt("shutdown-file", "", "drain and exit when this file appears (SIGTERM stand-in)")
+        .opt(
+            "sanitize",
+            "auto",
+            "off | static | full correctness layer (auto = ZCS_SANITIZE env, else off): \
+             static verifies inference Programs at load, full adds the slot/NaN \
+             sanitizer and the request stall watchdog (see ZCS_STALL_MS)",
+        )
         .switch("stdin-close", "also drain when stdin reaches EOF (supervised pipelines)")
         .switch("help", "show usage");
     let p = opts.parse(args)?;
@@ -773,6 +836,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         print!("{}", opts.usage());
         return Ok(());
     }
+    // resolve before any model loads or executor builds read the knob
+    let sanitize = parse_sanitize_flag(p.get("sanitize"))?;
     let spec = p.get("model");
     if spec.is_empty() {
         bail!("--model id=path/to.ckpt is required (comma-separate several)");
@@ -818,6 +883,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         p.get("max-batch"),
         p.get("workers")
     );
+    if sanitize != zcs::util::env::SanitizeMode::Off {
+        println!("sanitize: {}", sanitize.name());
+    }
     if p.switch("stdin-close") {
         let trigger = handle.trigger();
         std::thread::spawn(move || {

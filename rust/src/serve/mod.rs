@@ -85,6 +85,11 @@ pub struct ServeConfig {
     pub fault: Option<Arc<FaultCell>>,
     /// how long an injected `slow:K` fault stalls an evaluation
     pub slow_stall: Duration,
+    /// request stall watchdog: when set, a request whose answer does not
+    /// arrive within its own deadline *plus* this grace gets a typed
+    /// `EvalFailed` instead of blocking its connection forever.  Armed
+    /// by default under `ZCS_SANITIZE=full` with `ZCS_STALL_MS`
+    pub stall: Option<Duration>,
 }
 
 impl Default for ServeConfig {
@@ -102,6 +107,9 @@ impl Default for ServeConfig {
             max_points: 1 << 16,
             fault: None,
             slow_stall: Duration::from_millis(300),
+            stall: crate::util::env::env_sanitize()
+                .dynamic()
+                .then(|| Duration::from_millis(crate::util::env::env_stall_ms())),
         }
     }
 }
@@ -302,6 +310,8 @@ struct ServerCtx {
     fault: Option<Arc<FaultCell>>,
     threads: usize,
     slow_stall: Duration,
+    /// request stall watchdog grace (see [`ServeConfig::stall`])
+    stall: Option<Duration>,
 }
 
 /// A running server.  Drop the handle without `join` and the server
@@ -364,6 +374,7 @@ pub fn serve(registry: Arc<Registry>, cfg: ServeConfig) -> Result<ServerHandle> 
         fault: cfg.fault.clone(),
         threads: cfg.threads,
         slow_stall: cfg.slow_stall,
+        stall: cfg.stall.filter(|d| !d.is_zero()),
     });
     let join = thread::Builder::new()
         .name("zcs-serve".to_string())
@@ -568,9 +579,32 @@ fn handle_request(ctx: &ServerCtx, req: EvalRequest) -> (EvalResponse, bool) {
         return (EvalResponse::failure(Status::Overloaded, msg), false);
     }
     ctx.counters.admitted.fetch_add(1, Ordering::AcqRel);
-    match rx.recv() {
-        Ok(resp) => (resp, true),
-        Err(_) => {
+    let reply = match ctx.stall {
+        None => rx.recv().ok(),
+        Some(grace) => {
+            // stall watchdog: if neither the dispatcher nor a worker
+            // answers within the request's own deadline plus this grace,
+            // something in the pipeline is wedged -- answer typed instead
+            // of blocking this connection forever
+            let budget = Duration::from_millis(req.deadline_ms).saturating_add(grace);
+            match rx.recv_timeout(budget) {
+                Ok(resp) => Some(resp),
+                Err(mpsc::RecvTimeoutError::Disconnected) => None,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    ctx.counters.failed.fetch_add(1, Ordering::AcqRel);
+                    let msg = format!(
+                        "server stalled: no response within the {}ms deadline plus \
+                         {grace:?} watchdog grace",
+                        req.deadline_ms
+                    );
+                    return (EvalResponse::failure(Status::EvalFailed, msg), true);
+                }
+            }
+        }
+    };
+    match reply {
+        Some(resp) => (resp, true),
+        None => {
             let msg = "request dropped during shutdown".to_string();
             (EvalResponse::failure(Status::EvalFailed, msg), true)
         }

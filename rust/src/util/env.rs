@@ -1,7 +1,8 @@
 //! One home for `ZCS_*` environment knobs.
 //!
 //! Every knob (`ZCS_THREADS`, `ZCS_SCHED`, `ZCS_SIMD`, `ZCS_PROFILE`,
-//! `ZCS_REPLICAS`, `ZCS_FAULT`) resolves through [`knob`], which gives
+//! `ZCS_REPLICAS`, `ZCS_FAULT`, `ZCS_SANITIZE`, `ZCS_STALL_MS`) resolves
+//! through [`knob`], which gives
 //! them all the warn-on-typo fallback `ZCS_SIMD` pioneered: an unset
 //! variable yields the default silently, an unparseable value warns once
 //! on stderr and *then* yields the default -- a typo can never silently
@@ -10,19 +11,29 @@
 //!
 //! [`parse_knob`] is the pure core (no process environment touched), so
 //! the policy is unit-testable without mutating env vars from a threaded
-//! test binary.
+//! test binary.  [`knob_reports`] renders every knob's effective value,
+//! default and source for the `zcs env` subcommand.
 //!
 //! `ZCS_FAULT` is the deterministic fault injector behind the
 //! crash-safety layer: a comma-separated list of `kind:K` specs.
 //! Training faults -- `panic:K` makes the stepping engine panic at step
-//! `K`, `nan:K` poisons a gradient buffer with NaN at step `K`, and
-//! `torn-ckpt:K` truncates the checkpoint written at step `K` mid-file.
+//! `K`, `nan:K` poisons a gradient buffer with NaN at step `K`,
+//! `torn-ckpt:K` truncates the checkpoint written at step `K` mid-file,
+//! and `stall:K` freezes one replica driver inside step `K` long enough
+//! to trip the all-reduce stall watchdog.
 //! Serving faults -- `eval-panic:K` panics the `K`th serve eval attempt,
 //! `slow:K` stalls it, and `conn-drop:K` drops the `K`th accepted
 //! connection.  Each spec in a [`FaultCell`] fires **exactly once**
 //! (process-wide for the environment cell), so the recovery path runs
 //! under fault and the rest of the process proceeds normally -- which is
 //! what lets CI run the whole test suite with injection enabled.
+//!
+//! `ZCS_SANITIZE` selects the correctness layer ([`SanitizeMode`]):
+//! `off` (zero overhead), `static` (post-compile [Program verification]
+//! in release builds too), or `full` (static checks plus the executor's
+//! runtime race/NaN tripwires and stall watchdogs).
+//!
+//! [Program verification]: crate::autodiff::verify
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, OnceLock};
@@ -76,6 +87,91 @@ pub fn default_replicas() -> usize {
     knob("ZCS_REPLICAS", 1, parse_count)
 }
 
+/// How much of the correctness layer is active (`ZCS_SANITIZE`).
+///
+/// The variants are ordered: `Static` includes everything `Off` skips,
+/// `Full` includes everything `Static` does, so call sites gate with
+/// `mode >= SanitizeMode::Static`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SanitizeMode {
+    /// no checks beyond what debug assertions already do -- the
+    /// executor is bit- and allocation-identical to a build without the
+    /// sanitizer (pinned by `rust/tests/resident_step.rs`)
+    Off,
+    /// run the [static Program verifier] over every compiled program,
+    /// release builds included (debug builds always verify)
+    ///
+    /// [static Program verifier]: crate::autodiff::verify
+    Static,
+    /// static checks plus the runtime sanitizer: the shadow-arena race
+    /// tripwire, the per-instruction non-finite tripwire, and the
+    /// barrier/dispatcher stall watchdogs ([`env_stall_ms`])
+    Full,
+}
+
+impl SanitizeMode {
+    /// Case-insensitive parse with a choice-listing error.
+    pub fn parse(name: &str) -> Result<SanitizeMode, String> {
+        match name.to_ascii_lowercase().as_str() {
+            "off" => Ok(SanitizeMode::Off),
+            "static" => Ok(SanitizeMode::Static),
+            "full" => Ok(SanitizeMode::Full),
+            other => {
+                Err(format!("unknown sanitize mode {other:?}; choices: off, static, full"))
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SanitizeMode::Off => "off",
+            SanitizeMode::Static => "static",
+            SanitizeMode::Full => "full",
+        }
+    }
+
+    /// The environment default: `ZCS_SANITIZE` (off | static | full),
+    /// else off.  An unparseable value warns on stderr and falls back to
+    /// off.
+    pub fn from_env() -> SanitizeMode {
+        knob("ZCS_SANITIZE", SanitizeMode::Off, SanitizeMode::parse)
+    }
+
+    /// Static verification requested (at or above [`SanitizeMode::Static`]).
+    pub fn verify(self) -> bool {
+        self >= SanitizeMode::Static
+    }
+
+    /// Runtime tripwires and watchdogs requested.
+    pub fn dynamic(self) -> bool {
+        self >= SanitizeMode::Full
+    }
+}
+
+/// The process-wide `ZCS_SANITIZE` mode, parsed once.
+pub fn env_sanitize() -> SanitizeMode {
+    static MODE: OnceLock<SanitizeMode> = OnceLock::new();
+    *MODE.get_or_init(SanitizeMode::from_env)
+}
+
+/// Parse a positive millisecond count.
+pub fn parse_ms(v: &str) -> Result<u64, String> {
+    v.parse::<u64>()
+        .ok()
+        .filter(|&n| n >= 1)
+        .ok_or_else(|| format!("{v:?} is not a positive millisecond count"))
+}
+
+/// The watchdog stall deadline in milliseconds (`ZCS_STALL_MS`, default
+/// 30000): how long the replica all-reduce barrier or the serve
+/// dispatcher may sit without progress under [`SanitizeMode::Full`]
+/// before the hang is converted into a typed error with a per-thread
+/// state dump.  Parsed once per process.
+pub fn env_stall_ms() -> u64 {
+    static MS: OnceLock<u64> = OnceLock::new();
+    *MS.get_or_init(|| knob("ZCS_STALL_MS", 30_000, parse_ms))
+}
+
 /// What a [`FaultSpec`] injects.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FaultKind {
@@ -86,6 +182,10 @@ pub enum FaultKind {
     /// truncate the next checkpoint write mid-file (after the CRC is
     /// appended, so the torn file must fail to load)
     TornCkpt,
+    /// freeze one replica driver inside its step long enough to trip the
+    /// all-reduce stall watchdog (finite even with the watchdog off: the
+    /// sleep is bounded, so the step is merely slow)
+    Stall,
     /// panic inside a serve worker's eval attempt (1-based attempt count)
     EvalPanic,
     /// stall a serve eval attempt, backing up the admission queue
@@ -102,7 +202,23 @@ pub struct FaultSpec {
     pub step: u64,
 }
 
-const FAULT_CHOICES: &str = "panic, nan, torn-ckpt, eval-panic, slow, conn-drop";
+const FAULT_CHOICES: &str = "panic, nan, torn-ckpt, stall, eval-panic, slow, conn-drop";
+
+impl FaultKind {
+    /// The `ZCS_FAULT` spelling of this kind (the inverse of
+    /// [`parse_fault_spec`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Panic => "panic",
+            FaultKind::NanGrad => "nan",
+            FaultKind::TornCkpt => "torn-ckpt",
+            FaultKind::Stall => "stall",
+            FaultKind::EvalPanic => "eval-panic",
+            FaultKind::Slow => "slow",
+            FaultKind::ConnDrop => "conn-drop",
+        }
+    }
+}
 
 /// Parse one `kind:K` fault spec.
 pub fn parse_fault_spec(v: &str) -> Result<FaultSpec, String> {
@@ -113,6 +229,7 @@ pub fn parse_fault_spec(v: &str) -> Result<FaultSpec, String> {
         "panic" => FaultKind::Panic,
         "nan" => FaultKind::NanGrad,
         "torn-ckpt" => FaultKind::TornCkpt,
+        "stall" => FaultKind::Stall,
         "eval-panic" => FaultKind::EvalPanic,
         "slow" => FaultKind::Slow,
         "conn-drop" => FaultKind::ConnDrop,
@@ -214,6 +331,137 @@ pub fn env_fault() -> Option<Arc<FaultCell>> {
     .clone()
 }
 
+/// One row of the `zcs env` table: a knob's effective value and where it
+/// came from.
+#[derive(Clone, Debug)]
+pub struct KnobReport {
+    pub name: &'static str,
+    /// the parsed, effective value (after warn-on-typo fallback)
+    pub value: String,
+    /// the built-in default, rendered the same way
+    pub default: &'static str,
+    /// `default`, `env "raw"`, or `env "raw" (invalid, default used)`
+    pub source: String,
+    pub help: &'static str,
+}
+
+/// Render one knob row: read the variable, parse it with the knob's own
+/// parser, and report the effective value plus its source.  Mirrors
+/// [`parse_knob`]'s fallback exactly (without re-warning).
+fn report_knob<T>(
+    name: &'static str,
+    default: T,
+    default_label: &'static str,
+    help: &'static str,
+    parse: impl Fn(&str) -> Result<T, String>,
+    render: impl Fn(&T) -> String,
+) -> KnobReport {
+    let raw = std::env::var(name).ok();
+    let (value, source) = match raw.as_deref() {
+        None => (render(&default), "default".to_string()),
+        Some(r) => match parse(r.trim()) {
+            Ok(v) => (render(&v), format!("env {r:?}")),
+            Err(_) => (render(&default), format!("env {r:?} (invalid, default used)")),
+        },
+    };
+    KnobReport { name, value, default: default_label, source, help }
+}
+
+/// Every `ZCS_*` knob with its parsed value, default and source -- the
+/// table behind the `zcs env` subcommand.  Each row resolves through the
+/// same parser the consuming subsystem uses, so what this prints is what
+/// a run would actually do.
+pub fn knob_reports() -> Vec<KnobReport> {
+    use crate::autodiff::exec::SchedMode;
+    use crate::tensor::simd::SimdMode;
+
+    let render_fault = |specs: &Vec<FaultSpec>| -> String {
+        if specs.is_empty() {
+            "none".to_string()
+        } else {
+            specs
+                .iter()
+                .map(|s| format!("{}:{}", s.kind.name(), s.step))
+                .collect::<Vec<_>>()
+                .join(",")
+        }
+    };
+    vec![
+        report_knob(
+            "ZCS_THREADS",
+            1usize,
+            "1",
+            "kernel threads per executor pool",
+            parse_count,
+            |v| v.to_string(),
+        ),
+        report_knob(
+            "ZCS_SCHED",
+            SchedMode::Graph,
+            "graph",
+            "instruction schedule: serial | graph",
+            SchedMode::parse,
+            |v| v.name().to_string(),
+        ),
+        report_knob(
+            "ZCS_SIMD",
+            SimdMode::Auto,
+            "auto",
+            "kernel lane width: off | 4 | 8 | auto",
+            SimdMode::parse,
+            |v| v.name().to_string(),
+        ),
+        report_knob(
+            "ZCS_REPLICAS",
+            1usize,
+            "1",
+            "data-parallel replica executors (clamped to the lane count)",
+            parse_count,
+            |v| v.to_string(),
+        ),
+        report_knob(
+            "ZCS_PROFILE",
+            false,
+            "off",
+            "per-opcode kernel profiling",
+            parse_switch,
+            |v| if *v { "on" } else { "off" }.to_string(),
+        ),
+        report_knob(
+            "ZCS_FAULT",
+            Vec::new(),
+            "none",
+            "deterministic fault injection: comma-separated kind:step specs",
+            parse_fault,
+            render_fault,
+        ),
+        report_knob(
+            "ZCS_SANITIZE",
+            SanitizeMode::Off,
+            "off",
+            "correctness layer: off | static | full",
+            SanitizeMode::parse,
+            |v| v.name().to_string(),
+        ),
+        report_knob(
+            "ZCS_STALL_MS",
+            30_000u64,
+            "30000",
+            "watchdog stall deadline (ms) under sanitize=full",
+            parse_ms,
+            |v| v.to_string(),
+        ),
+        report_knob(
+            "ZCS_BENCH_QUICK",
+            false,
+            "off",
+            "CI smoke preset for cargo bench (any value = on)",
+            |_| Ok(true),
+            |v| if *v { "on" } else { "off" }.to_string(),
+        ),
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -311,6 +559,73 @@ mod tests {
         assert!(!cell.should_fire(FaultKind::Panic, 2), "one shot only");
         assert!(cell.begin_recovery(FaultKind::Panic));
         assert!(!cell.begin_recovery(FaultKind::Panic), "one recovery only");
+    }
+
+    #[test]
+    fn sanitize_modes_parse_and_order() {
+        assert_eq!(SanitizeMode::parse("off"), Ok(SanitizeMode::Off));
+        assert_eq!(SanitizeMode::parse("Static"), Ok(SanitizeMode::Static));
+        assert_eq!(SanitizeMode::parse("FULL"), Ok(SanitizeMode::Full));
+        assert!(SanitizeMode::parse("fullish").is_err());
+        // Off < Static < Full is what every gate relies on
+        assert!(!SanitizeMode::Off.verify() && !SanitizeMode::Off.dynamic());
+        assert!(SanitizeMode::Static.verify() && !SanitizeMode::Static.dynamic());
+        assert!(SanitizeMode::Full.verify() && SanitizeMode::Full.dynamic());
+        // warn-on-typo fallback applies like every other knob
+        let parse = SanitizeMode::parse;
+        let off = SanitizeMode::Off;
+        assert_eq!(parse_knob("ZCS_TEST", Some("typo"), off, parse), SanitizeMode::Off);
+        assert_eq!(parse_knob("ZCS_TEST", Some("full"), off, parse), SanitizeMode::Full);
+    }
+
+    #[test]
+    fn stall_deadline_and_stall_fault_parse() {
+        assert_eq!(parse_ms("250"), Ok(250));
+        assert!(parse_ms("0").is_err());
+        assert!(parse_ms("fast").is_err());
+        assert_eq!(
+            parse_fault("stall:3"),
+            Ok(vec![FaultSpec { kind: FaultKind::Stall, step: 3 }])
+        );
+        assert_eq!(FaultKind::Stall.name(), "stall");
+    }
+
+    #[test]
+    fn fault_kind_names_roundtrip_through_the_parser() {
+        for kind in [
+            FaultKind::Panic,
+            FaultKind::NanGrad,
+            FaultKind::TornCkpt,
+            FaultKind::Stall,
+            FaultKind::EvalPanic,
+            FaultKind::Slow,
+            FaultKind::ConnDrop,
+        ] {
+            let spec = parse_fault_spec(&format!("{}:7", kind.name())).unwrap();
+            assert_eq!(spec, FaultSpec { kind, step: 7 });
+        }
+    }
+
+    #[test]
+    fn knob_reports_cover_every_documented_knob() {
+        let rows = knob_reports();
+        let names: Vec<&str> = rows.iter().map(|r| r.name).collect();
+        for expect in [
+            "ZCS_THREADS",
+            "ZCS_SCHED",
+            "ZCS_SIMD",
+            "ZCS_REPLICAS",
+            "ZCS_PROFILE",
+            "ZCS_FAULT",
+            "ZCS_SANITIZE",
+            "ZCS_STALL_MS",
+            "ZCS_BENCH_QUICK",
+        ] {
+            assert!(names.contains(&expect), "missing knob row {expect}");
+        }
+        for row in &rows {
+            assert!(!row.value.is_empty() && !row.source.is_empty(), "{}", row.name);
+        }
     }
 
     #[test]

@@ -919,6 +919,59 @@ mod tests {
     }
 
     #[test]
+    fn run_graph_drains_a_panic_while_the_help_list_is_occupied() {
+        // a node panics while another node's nested row-split job still
+        // has tasks live on the help list: the panic must reach the
+        // submitter, the nested fork-join must complete first (its erased
+        // borrow dies before unwinding), and the same pool must keep
+        // scheduling both modes afterwards
+        for threads in [2usize, 4] {
+            let pool = Pool::new(threads);
+            let (n_preds, succs, succ_offsets, priority) = spec_from_edges(2, &[]);
+            let spec = GraphSpec {
+                n_preds: &n_preds,
+                succs: &succs,
+                succ_offsets: &succ_offsets,
+                priority: &priority,
+            };
+            let published = AtomicBool::new(false);
+            let release = AtomicBool::new(false);
+            let finished = AtomicUsize::new(0);
+            let outcome = catch_unwind(AssertUnwindSafe(|| {
+                pool.run_graph(&spec, &|i, _| {
+                    if i == 0 {
+                        // a "heavy kernel": its row blocks sit on the help
+                        // list until node 1 releases them
+                        pool.run(8, &|_| {
+                            published.store(true, Ordering::Release);
+                            while !release.load(Ordering::Acquire) {
+                                std::thread::yield_now();
+                            }
+                            finished.fetch_add(1, Ordering::Relaxed);
+                        });
+                    } else {
+                        while !published.load(Ordering::Acquire) {
+                            std::thread::yield_now();
+                        }
+                        release.store(true, Ordering::Release);
+                        panic!("boom with help tasks in flight");
+                    }
+                });
+            }));
+            assert!(outcome.is_err(), "{threads} threads: panic should reach the submitter");
+            assert_eq!(finished.load(Ordering::Relaxed), 8, "{threads} threads: nested drained");
+            // the help list is clean: nested fork-join still works
+            let sum = AtomicUsize::new(0);
+            pool.run_graph(&spec, &|_, _| {
+                pool.run(4, &|t| {
+                    sum.fetch_add(t + 1, Ordering::Relaxed);
+                });
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), 20, "{threads} threads");
+        }
+    }
+
+    #[test]
     fn run_graph_empty_graph_is_a_noop() {
         let pool = Pool::new(2);
         let spec = GraphSpec { n_preds: &[], succs: &[], succ_offsets: &[0], priority: &[] };

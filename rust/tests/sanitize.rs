@@ -1,0 +1,161 @@
+//! Integration tests of the two-mode correctness layer
+//! (`ZCS_SANITIZE=off|static|full`):
+//!
+//! * the static Program verifier accepts every program the repo actually
+//!   compiles -- each problem x strategy, with and without an attached
+//!   optimizer, plus the inference-only variant -- and the trainer path
+//!   under `sanitize=static` constructs cleanly at every replica count;
+//! * `sanitize=full` (shadow-arena race tripwires + per-instruction NaN
+//!   tripwire + stall watchdogs) is bit-invisible on clean runs: the
+//!   loss curve and final weights match an `off` run exactly;
+//! * an injected replica stall (`ZCS_FAULT=stall:K`) is converted by the
+//!   all-reduce barrier watchdog into a typed [`TrainError::Stalled`]
+//!   instead of hanging the run.
+
+use std::sync::Arc;
+use zcs::autodiff::{Program, Strategy};
+use zcs::coordinator::error::TrainError;
+use zcs::coordinator::native::{NativeRunConfig, NativeTrainer, Optimizer};
+use zcs::pde::residual::{build_forward, build_training_problem, residual_for, BlockSizes, NetDims};
+use zcs::pde::ProblemKind;
+use zcs::tensor::Tensor;
+use zcs::util::env::{parse_fault, FaultCell, SanitizeMode};
+use zcs::util::propkit::assert_tensors_bits_eq;
+
+const NATIVE_PROBLEMS: [ProblemKind; 4] = [
+    ProblemKind::Antiderivative,
+    ProblemKind::ReactionDiffusion,
+    ProblemKind::Burgers,
+    ProblemKind::Kirchhoff,
+];
+
+fn q_for(kind: ProblemKind) -> usize {
+    if kind == ProblemKind::Kirchhoff {
+        9
+    } else {
+        5
+    }
+}
+
+fn config(kind: ProblemKind, strat: Strategy, replicas: usize, steps: usize) -> NativeRunConfig {
+    NativeRunConfig {
+        problem: kind,
+        strategy: strat,
+        m: 5,
+        n: 6,
+        n_bc: 4,
+        q: q_for(kind),
+        hidden: 8,
+        k: 4,
+        steps,
+        lr: NativeRunConfig::default_lr(kind) * 0.5,
+        seed: 17,
+        bank_size: 8,
+        bank_grid: 32,
+        log_every: 1,
+        threads: 1,
+        resident: true,
+        replicas,
+        ..NativeRunConfig::default()
+    }
+}
+
+/// Every program shape the repo compiles passes the static verifier:
+/// the bare step program, the resident-optimizer variants (both
+/// optimizers), and the inference-only program, per problem x strategy.
+#[test]
+fn the_verifier_accepts_every_compiled_program_shape() {
+    for kind in NATIVE_PROBLEMS {
+        for strategy in Strategy::ALL {
+            let (q, hidden, k) = (q_for(kind), 8usize, 4usize);
+            let sizes = BlockSizes { n_in: 6, n_bc: 4 };
+            let lr = NativeRunConfig::default_lr(kind);
+            let built = build_training_problem(kind, strategy, 3, q, hidden, k, sizes).unwrap();
+            let bare = Program::compile(&built.graph, &built.outputs);
+            bare.verify().unwrap_or_else(|e| panic!("{kind:?}/{strategy:?} bare: {e}"));
+            for optimizer in [Optimizer::Sgd, Optimizer::Adam] {
+                let b = build_training_problem(kind, strategy, 3, q, hidden, k, sizes).unwrap();
+                let program = Program::compile(&b.graph, &b.outputs)
+                    .attach_optimizer(&b.weight_ids, optimizer.rule(lr));
+                let label = format!("{kind:?}/{strategy:?}/{optimizer:?}");
+                program.verify().unwrap_or_else(|e| panic!("{label}: {e}"));
+            }
+            let coord_dim = residual_for(kind).expect("native problem").coord_dim();
+            let dims = NetDims { q, hidden, k, coord_dim };
+            let fg = build_forward(3, dims, 5);
+            let inference = Program::compile_inference(&fg.graph, &[fg.u], &fg.weight_ids);
+            inference.verify().unwrap_or_else(|e| panic!("{kind:?}/{strategy:?} inference: {e}"));
+        }
+    }
+}
+
+/// `sanitize=static` on the trainer path: construction verifies the
+/// step program (and, replicated, every lane-blocked replica program)
+/// for each problem x strategy x optimizer x replica count.
+#[test]
+fn static_mode_verifies_every_trainer_program_at_every_replica_count() {
+    for kind in NATIVE_PROBLEMS {
+        for strategy in Strategy::ALL {
+            for optimizer in [Optimizer::Sgd, Optimizer::Adam] {
+                for replicas in [1usize, 2, 4] {
+                    let mut cfg = config(kind, strategy, replicas, 1);
+                    cfg.optimizer = optimizer;
+                    cfg.sanitize = SanitizeMode::Static;
+                    let label = format!("{kind:?}/{strategy:?}/{optimizer:?} x{replicas}");
+                    let trainer =
+                        NativeTrainer::new(cfg).unwrap_or_else(|e| panic!("{label}: {e}"));
+                    assert_eq!(trainer.replicas(), replicas.min(4), "{label}");
+                }
+            }
+        }
+    }
+}
+
+fn trajectory(cfg: NativeRunConfig) -> (Vec<(f64, f64, f64)>, Vec<Tensor>) {
+    let mut trainer = NativeTrainer::new(cfg).unwrap();
+    let report = trainer.run().unwrap();
+    let curve = report.curve.iter().map(|p| (p.loss, p.loss_pde, p.loss_bc)).collect();
+    (curve, trainer.weights().to_vec())
+}
+
+/// The full dynamic sanitizer is bit-invisible and quiet on clean runs,
+/// single- and multi-replica, threaded graph schedule included.
+#[test]
+fn full_sanitize_runs_bit_match_off_runs() {
+    for replicas in [1usize, 2] {
+        let mut off = config(ProblemKind::ReactionDiffusion, Strategy::Zcs, replicas, 3);
+        off.threads = 2 * replicas;
+        off.sanitize = SanitizeMode::Off;
+        let mut full = off.clone();
+        full.sanitize = SanitizeMode::Full;
+        let (curve_off, weights_off) = trajectory(off);
+        let (curve_full, weights_full) = trajectory(full);
+        assert_eq!(curve_off, curve_full, "x{replicas}: sanitizer changed the loss curve");
+        assert_tensors_bits_eq(
+            &weights_full,
+            &weights_off,
+            &format!("x{replicas} final weights under sanitize=full"),
+        );
+    }
+}
+
+/// An injected replica stall must not hang the run: the all-reduce
+/// barrier watchdog (armed under `sanitize=full`) converts it into a
+/// typed [`TrainError::Stalled`] naming the stalled step.
+#[test]
+fn an_injected_replica_stall_becomes_a_typed_error_instead_of_a_hang() {
+    let mut cfg = config(ProblemKind::Antiderivative, Strategy::Zcs, 2, 3);
+    cfg.sanitize = SanitizeMode::Full;
+    cfg.stall_ms = 150;
+    cfg.fault = Some(Arc::new(FaultCell::multi(parse_fault("stall:1").unwrap())));
+    let mut trainer = NativeTrainer::new(cfg).unwrap();
+    let err = trainer.run().expect_err("the stalled barrier must surface as an error");
+    match err.downcast_ref::<TrainError>() {
+        Some(TrainError::Stalled { step, what }) => {
+            assert_eq!(*step, 1, "{what}");
+            assert!(what.contains("stalled"), "{what}");
+            assert!(what.contains("parties"), "watchdog dump names the arrivals: {what}");
+        }
+        other => panic!("expected TrainError::Stalled, got {other:?} ({err:#})"),
+    }
+}

@@ -237,6 +237,12 @@ fn tmp(name: &str) -> String {
 }
 
 fn write_rd_checkpoint(path: &str) {
+    write_rd_checkpoint_seeded(path, 11);
+}
+
+/// Same reaction-diffusion checkpoint shape, different weights: two
+/// seeds give two model generations with bit-distinguishable outputs.
+fn write_rd_checkpoint_seeded(path: &str, seed: u64) {
     let meta = CheckpointMeta {
         problem: "reaction_diffusion".into(),
         strategy: "zcs".into(),
@@ -256,7 +262,7 @@ fn write_rd_checkpoint(path: &str) {
         simd: "off".into(),
     };
     let (q, h, k) = (5, 8, 4);
-    let mut rng = Pcg64::new(11, 7);
+    let mut rng = Pcg64::new(seed, 7);
     let mut w = |shape: &[usize]| {
         let n: usize = shape.iter().product();
         Tensor::new(shape, rng.normals(n))
@@ -523,6 +529,77 @@ fn idle_connections_are_reclaimed_by_the_read_timeout() {
     handle.shutdown();
     let report = handle.join();
     assert_eq!(report.served, 1, "{report:?}");
+}
+
+/// Hot-reloading a model while queries are in flight must neither drop
+/// a request nor blend generations inside one coalesced batch: every
+/// response bit-matches exactly one generation's output, requests
+/// issued after the reload returns get the new weights, and the old
+/// generation keeps answering until its in-flight work drains.
+#[test]
+fn hot_reload_under_concurrent_queries_never_mixes_generations_or_drops_requests() {
+    let path_a = tmp("reload_a.ckpt");
+    let path_b = tmp("reload_b.ckpt");
+    write_rd_checkpoint_seeded(&path_a, 11);
+    write_rd_checkpoint_seeded(&path_b, 400);
+    let reg = Arc::new(Registry::new());
+    let gen_a = reg.load("op", &path_a).unwrap().generation;
+    // coalescing wide open so concurrent queries really do batch
+    let cfg = ServeConfig {
+        workers: 2,
+        max_batch: 4,
+        linger: Duration::from_millis(2),
+        ..ServeConfig::default()
+    };
+    let handle = serve(Arc::clone(&reg), cfg).unwrap();
+    let addr = handle.addr();
+    let bits = |vs: &[f64]| vs.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+
+    // reference outputs of each generation, taken with no concurrency
+    let mut probe = Client::connect(&addr).unwrap();
+    let before = probe.eval(&query(5_000)).unwrap();
+    assert_eq!(before.status, Status::Ok, "{}", before.error);
+    let expect_a = bits(&before.values);
+
+    // clients hammer the server while the registry swaps the model
+    let clients: Vec<_> = (0..4)
+        .map(|_| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                (0..20).map(|_| c.eval(&query(5_000)).unwrap()).collect::<Vec<_>>()
+            })
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(30));
+    let gen_b = reg.load("op", &path_b).unwrap().generation;
+    assert!(gen_b > gen_a, "reload must bump the generation ({gen_a} -> {gen_b})");
+
+    // a query issued after the reload returned must see the new weights
+    let after = probe.eval(&query(5_000)).unwrap();
+    assert_eq!(after.status, Status::Ok, "{}", after.error);
+    let expect_b = bits(&after.values);
+    assert_ne!(expect_a, expect_b, "the two checkpoints must be distinguishable");
+
+    let mut n_a = 0usize;
+    let mut n_b = 0usize;
+    for worker in clients {
+        for resp in worker.join().unwrap() {
+            assert_eq!(resp.status, Status::Ok, "no request may be dropped: {}", resp.error);
+            let got = bits(&resp.values);
+            if got == expect_a {
+                n_a += 1;
+            } else if got == expect_b {
+                n_b += 1;
+            } else {
+                panic!("response matches neither generation: a batch mixed models");
+            }
+        }
+    }
+    assert_eq!(n_a + n_b, 80, "every concurrent request answered from exactly one generation");
+    handle.shutdown();
+    let report = handle.join();
+    assert_eq!(report.served, 82, "{report:?}");
+    assert_eq!(report.shed + report.failed + report.bad_requests, 0, "{report:?}");
 }
 
 #[test]
